@@ -1,0 +1,131 @@
+//! END-TO-END DRIVER: the full SecFormer pipeline on a real (synthetic-GLUE)
+//! workload, proving all layers compose:
+//!
+//!   JAX teacher fine-tune → 2Quad distillation (python/compile/train.py)
+//!     → .swts checkpoint → Rust secure 3-party inference (this binary)
+//!     → PJRT plaintext artifact as the accuracy oracle
+//!     → serving metrics (latency / throughput / comm) + task accuracy.
+//!
+//!     make artifacts && (cd python && python -m compile.train --steps 300 --out ../artifacts)
+//!     cargo run --release --example e2e_glue_pipeline
+//!
+//! Falls back to random weights (structure-only demo) if the distilled
+//! checkpoint is missing. Results are recorded in EXPERIMENTS.md.
+
+use secformer::coordinator::{BatcherConfig, Coordinator, EngineKind};
+use secformer::core::rng::Xoshiro;
+use secformer::nn::config::{Framework, ModelConfig};
+use secformer::nn::model::ModelInput;
+use secformer::nn::weights::{load_swts, random_weights, WeightMap};
+use secformer::runtime::artifact::ArtifactManifest;
+
+/// qnli_syn generator (mirrors python/compile/tasks.py): label = "does the
+/// query token (position 0) appear in the rest of the sequence?".
+fn gen_qnli(n: usize, seq: usize, vocab: usize, rng: &mut Xoshiro) -> Vec<(Vec<u32>, u32)> {
+    (0..n)
+        .map(|i| {
+            let mut toks: Vec<u32> =
+                (0..seq).map(|_| 1 + (rng.next_u64() % (vocab as u64 - 1)) as u32).collect();
+            let q = toks[0];
+            let label = (i % 2) as u32;
+            if label == 1 {
+                let pos = 1 + (rng.next_u64() as usize) % (seq - 1);
+                toks[pos] = q;
+            } else {
+                for t in toks[1..].iter_mut() {
+                    if *t == q {
+                        *t = if q as usize + 1 < vocab { q + 1 } else { 1 };
+                    }
+                }
+            }
+            (toks, label)
+        })
+        .collect()
+}
+
+fn main() {
+    let ckpt = "artifacts/weights/secformer_tiny_qnli.swts";
+    let (weights, trained): (WeightMap, bool) = match load_swts(ckpt) {
+        Ok(w) => {
+            println!("loaded distilled checkpoint {ckpt} ({} tensors)", w.len());
+            (w, true)
+        }
+        Err(_) => {
+            println!("checkpoint {ckpt} missing — run the training pipeline first;");
+            println!("continuing with random weights (structural demo only)\n");
+            (random_weights(&ModelConfig::tiny(16, Framework::SecFormer), 5), false)
+        }
+    };
+
+    // Shape config from the checkpoint convention (tiny_base, seq 16, vocab 32).
+    let mut cfg = ModelConfig::tiny(16, Framework::SecFormer);
+    cfg.vocab = weights["embed.word"].1[0];
+    cfg.hidden = weights["embed.word"].1[1];
+
+    let plaintext = ArtifactManifest::load("artifacts")
+        .ok()
+        .and_then(|m| m.get("secformer_tiny_tokens").ok().cloned())
+        .map(|meta| (meta, weights.clone()));
+    let has_plain = plaintext.is_some();
+
+    let coord = Coordinator::start(
+        cfg.clone(),
+        weights,
+        plaintext,
+        BatcherConfig::default(),
+    )
+    .expect("coordinator");
+
+    // The evaluation workload.
+    let mut rng = Xoshiro::seed_from(0xE2E);
+    let n_eval = 40;
+    let examples = gen_qnli(n_eval, cfg.seq, cfg.vocab, &mut rng);
+
+    let mut secure_correct = 0usize;
+    let mut plain_correct = 0usize;
+    let mut agree = 0usize;
+    let mut comm_total = 0u64;
+    let t0 = std::time::Instant::now();
+    for (toks, label) in &examples {
+        let rs = coord.infer_blocking(ModelInput::Tokens(toks.clone()), EngineKind::Secure);
+        let pred_s = (rs.logits[1] > rs.logits[0]) as u32;
+        comm_total += rs.comm_bytes;
+        if pred_s == *label {
+            secure_correct += 1;
+        }
+        if has_plain {
+            let rp =
+                coord.infer_blocking(ModelInput::Tokens(toks.clone()), EngineKind::Plaintext);
+            let pred_p = (rp.logits[1] > rp.logits[0]) as u32;
+            if pred_p == *label {
+                plain_correct += 1;
+            }
+            if pred_p == pred_s {
+                agree += 1;
+            }
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    println!("\n=== end-to-end results (qnli_syn, {n_eval} examples) ===");
+    println!(
+        "secure accuracy      : {:.1}%{}",
+        100.0 * secure_correct as f64 / n_eval as f64,
+        if trained { "" } else { "  (untrained weights — chance level expected)" }
+    );
+    if has_plain {
+        println!("plaintext accuracy   : {:.1}%", 100.0 * plain_correct as f64 / n_eval as f64);
+        println!("secure≡plaintext     : {:.1}% prediction agreement", 100.0 * agree as f64 / n_eval as f64);
+    }
+    println!("online comm / query  : {}", secformer::bench::fmt_bytes(comm_total as f64 / n_eval as f64));
+    let s = coord.metrics_secure.summary();
+    println!(
+        "secure latency       : mean {:.3}s  p95 {:.3}s  ({:.2} req/s sustained)",
+        s.mean_s, s.p95_s, n_eval as f64 / elapsed
+    );
+    if has_plain {
+        let p = coord.metrics_plain.summary();
+        println!("plaintext latency    : mean {:.4}s  p95 {:.4}s", p.mean_s, p.p95_s);
+    }
+    coord.shutdown();
+}

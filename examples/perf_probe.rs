@@ -1,0 +1,30 @@
+//! Perf probe (§Perf): micro-throughput of the two L3 hot primitives.
+use secformer::core::rng::Prf;
+use std::time::Instant;
+
+fn main() {
+    // PRF scalar vs batched fill
+    let n = 20_000_000usize;
+    let mut p = Prf::from_label("bench-scalar");
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for _ in 0..n { acc ^= p.next_u64(); }
+    let scalar = n as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    let mut p = Prf::from_label("bench-batch");
+    let t0 = Instant::now();
+    let v = p.next_vec(n);
+    for x in &v { acc ^= *x; }
+    let batch = n as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    println!("PRF scalar: {scalar:.1} M u64/s | batched fill: {batch:.1} M u64/s ({acc})");
+
+    // ring matmul
+    let m = 256; let k = 512; let nn = 512;
+    let a: Vec<u64> = (0..m*k).map(|i| i as u64).collect();
+    let b: Vec<u64> = (0..k*nn).map(|i| i as u64).collect();
+    let mut c = vec![0u64; m*nn];
+    let t0 = Instant::now();
+    let reps = 20;
+    for _ in 0..reps { c.iter_mut().for_each(|v| *v = 0); secformer::core::tensor::matmul_ring(&a, &b, &mut c, m, k, nn); }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("matmul_ring: {:.2} Gop/s (c[0]={})", (reps*m*k*nn) as f64 / dt / 1e9, c[0]);
+}

@@ -1,0 +1,122 @@
+"""AOT compile path: lower the L2 model (with L1 Pallas kernels inlined) to
+HLO *text* artifacts for the Rust PJRT runtime.
+
+HLO text — NOT `lowered.compile()` / serialized protos — is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids that the
+`xla` crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+(See /opt/xla-example/README.md.)
+
+Artifacts (written to ../artifacts by default):
+  secformer_tiny_hidden.hlo.txt  — params…, hidden (seq×hidden) → logits
+  secformer_tiny_tokens.hlo.txt  — params…, tokens (seq,) i32 → logits
+  plain_tiny_hidden.hlo.txt      — exact-op baseline, hidden entry
+  plain_tiny_tokens.hlo.txt      — exact-op baseline, tokens entry
+  kernels_smoke.hlo.txt          — the three Pallas kernels chained (smoke)
+  manifest.txt                   — `key = value` lines describing each
+
+Weights are *arguments* (not constants), passed by Rust in sorted-name
+order, so one artifact serves any checkpoint of the same shape.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import fourier_gelu, goldschmidt_layernorm, quad2_softmax
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_specs(cfg: M.ModelConfig):
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return {
+        k: jax.ShapeDtypeStruct(v.shape, jnp.float32) for k, v in params.items()
+    }
+
+
+def lower_model(cfg: M.ModelConfig, entry: str):
+    specs = param_specs(cfg)
+    if entry == "hidden":
+        # The encoder-only entry never touches the embedding tables; drop
+        # them from the signature (jax would DCE the arguments anyway,
+        # which would desynchronize the Rust caller's buffer count).
+        specs = {k: v for k, v in specs.items() if not k.startswith("embed.")}
+        x_spec = jax.ShapeDtypeStruct((cfg.seq, cfg.hidden), jnp.float32)
+        fn = lambda params, x: (M.forward_hidden(params, x, cfg),)
+    elif entry == "tokens":
+        x_spec = jax.ShapeDtypeStruct((cfg.seq,), jnp.int32)
+        fn = lambda params, x: (M.forward_tokens(params, x, cfg),)
+    else:
+        raise ValueError(entry)
+    return jax.jit(fn).lower(specs, x_spec)
+
+
+def lower_kernels_smoke(cfg: M.ModelConfig):
+    s, d = cfg.seq, cfg.hidden
+
+    def fn(x, g, b):
+        a = fourier_gelu(x)
+        a = quad2_softmax(a)
+        a = goldschmidt_layernorm(a, g, b)
+        return (a,)
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((s, d), jnp.float32),
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--seq", type=int, default=16)
+    args = ap.parse_args()
+    outdir = args.out
+    if outdir.endswith(".txt"):  # legacy single-file invocation
+        outdir = os.path.dirname(outdir) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    base = M.tiny_base(seq=args.seq)
+    manifest = []
+    jobs = []
+    for framework in ("secformer", "plain"):
+        cfg = M.framework_config(base, framework, use_kernels=(framework == "secformer"))
+        for entry in ("hidden", "tokens"):
+            name = f"{framework}_tiny_{entry}"
+            jobs.append((name, lower_model(cfg, entry), cfg, entry))
+    jobs.append(("kernels_smoke", lower_kernels_smoke(base), base, "smoke"))
+
+    for name, lowered, cfg, entry in jobs:
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        nparams = len(param_specs(cfg))
+        if entry == "hidden":
+            nparams -= 4  # embed.{word,pos,ln_g,ln_b} dropped
+        manifest.append(
+            f"name={name} file={name}.hlo.txt entry={entry} seq={cfg.seq} "
+            f"hidden={cfg.hidden} layers={cfg.layers} heads={cfg.heads} "
+            f"intermediate={cfg.intermediate} vocab={cfg.vocab} "
+            f"num_labels={cfg.num_labels} params={nparams}"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {outdir}/manifest.txt ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

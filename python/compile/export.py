@@ -1,0 +1,44 @@
+"""Export JAX params to the `.swts` binary read by `rust/src/nn/weights.rs`.
+
+Format: magic "SWTS", u32 version=1, u32 tensor count, then per tensor
+(sorted by name): u16 name_len, name, u8 ndim, u32 dims..., f32 LE data.
+"""
+
+import struct
+
+import numpy as np
+
+
+def save_swts(path: str, params: dict) -> None:
+    with open(path, "wb") as f:
+        f.write(b"SWTS")
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<I", len(params)))
+        for name in sorted(params):
+            arr = np.asarray(params[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes(order="C"))
+
+
+def load_swts(path: str) -> dict:
+    """Reader (round-trip testing)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"SWTS", "bad magic"
+        (ver,) = struct.unpack("<I", f.read(4))
+        assert ver == 1
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            (ndim,) = struct.unpack("<B", f.read(1))
+            shape = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            n = int(np.prod(shape)) if shape else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(shape)
+            out[name] = data
+    return out

@@ -1,0 +1,108 @@
+"""Figures 4 & 10: Fourier-series fits of erf.
+
+* Fig 4 — the 7-term period-20 fit of erf and the induced GeLU fit.
+* Fig 10 — the same 7-term fit for periods {10, 20, 30, 40}, showing why
+  the paper picks period 20.
+
+Prints fit-error tables (max / mean abs error on [-10, 10]) and, for each
+period, the numerically integrated coefficients (Eq. 7) — the period-20 row
+must reproduce the paper's β vector.
+"""
+
+import numpy as np
+from scipy import integrate  # noqa: F401  (guarded import below)
+
+
+def erf_np(x):
+    from math import erf
+
+    return np.vectorize(erf)(x)
+
+
+def fourier_coeffs(period: float, terms: int = 7, grid: int = 200001):
+    """β_k = (2/period) ∫_{-p/2}^{p/2} erf(x) sin(2πkx/period) dx (Eq. 7)."""
+    half = period / 2.0
+    x = np.linspace(-half, half, grid)
+    fx = erf_np(x)
+    betas = []
+    for k in range(1, terms + 1):
+        s = np.sin(2 * np.pi * k * x / period)
+        betas.append(2.0 / period * np.trapezoid(fx * s, x))
+    return np.array(betas)
+
+
+def fourier_eval(x, betas, period):
+    k = np.arange(1, len(betas) + 1)
+    return np.sum(betas[None, :] * np.sin(2 * np.pi * k[None, :] * x[:, None] / period), axis=1)
+
+
+def gelu_np(x):
+    return 0.5 * x * (1.0 + erf_np(x / np.sqrt(2.0)))
+
+
+def fig10_table(periods=(10, 20, 30, 40), lo=-10.0, hi=10.0, n=4001):
+    x = np.linspace(lo, hi, n)
+    target = erf_np(x)
+    rows = []
+    for p in periods:
+        betas = fourier_coeffs(float(p))
+        # Inside the principal period only (the segmented protocol clamps
+        # outside ±1.7 anyway).
+        mask = np.abs(x) <= p / 2
+        fit = fourier_eval(x[mask], betas, float(p))
+        err = np.abs(fit - target[mask])
+        # Error inside the Fourier segment (|x| ≤ 1.7) — what Π_GeLU uses.
+        core = np.abs(x[mask]) <= 1.7
+        rows.append(
+            dict(
+                period=p,
+                betas=betas,
+                max_err=float(err.max()),
+                mean_err=float(err.mean()),
+                core_max_err=float(err[core].max()),
+            )
+        )
+    return rows
+
+
+def fig4_table(lo=-8.0, hi=8.0, n=3201):
+    """erf + GeLU fit quality for the paper's period-20 construction."""
+    x = np.linspace(lo, hi, n)
+    betas = fourier_coeffs(20.0)
+    u = x / np.sqrt(2.0)
+    f = fourier_eval(u, betas, 20.0)
+    erf_fit = np.where(u < -1.7, -1.0, np.where(u > 1.7, 1.0, f))
+    gelu_fit = 0.5 * x * (1.0 + erf_fit)
+    return dict(
+        betas=betas,
+        erf_max_err=float(np.abs(erf_fit - erf_np(u)).max()),
+        gelu_max_err=float(np.abs(gelu_fit - gelu_np(x)).max()),
+        gelu_mean_err=float(np.abs(gelu_fit - gelu_np(x)).mean()),
+    )
+
+
+PAPER_BETA = np.array(
+    [1.25772, -0.0299154, 0.382155, -0.0519123, 0.196033, -0.0624557, 0.118029]
+)
+
+
+def main():
+    print("=== Fig 4: period-20 segmented Fourier fit ===")
+    r = fig4_table()
+    print("betas:", np.round(r["betas"], 6))
+    print("paper:", PAPER_BETA)
+    print(
+        f"erf max|err|={r['erf_max_err']:.4f}  GeLU max|err|={r['gelu_max_err']:.4f} "
+        f"mean|err|={r['gelu_mean_err']:.5f}"
+    )
+    print("\n=== Fig 10: period sweep ===")
+    print(f"{'period':>7} {'max|err|':>10} {'mean|err|':>10} {'core max|err|':>14}")
+    for row in fig10_table():
+        print(
+            f"{row['period']:>7} {row['max_err']:>10.5f} {row['mean_err']:>10.6f} "
+            f"{row['core_max_err']:>14.6f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

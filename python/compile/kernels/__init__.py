@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (interpret=True) and their jnp oracles."""
+
+from . import ref  # noqa: F401
+from .fourier_gelu import fourier_gelu  # noqa: F401
+from .goldschmidt_layernorm import goldschmidt_layernorm  # noqa: F401
+from .quad2_softmax import quad2_softmax  # noqa: F401

@@ -1,0 +1,64 @@
+"""Pallas kernel: segmented Fourier GeLU (Π_GeLU's plaintext map).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): this is a pure VPU
+elementwise map — no MXU. The BlockSpec tiles the flattened (rows, hidden)
+plane so each grid step streams one row-block HBM→VMEM, evaluates all seven
+sine harmonics in registers, and writes back one block. VMEM footprint per
+grid step = in-block + out-block = 2·TILE_R·hidden·4 bytes.
+
+interpret=True everywhere in this image (CPU PJRT cannot execute Mosaic
+custom-calls); the lowered HLO is what `rust/src/runtime` loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE_R = 8  # row-block per grid step
+
+
+_BETA = [1.25772, -0.0299154, 0.382155, -0.0519123, 0.196033, -0.0624557, 0.118029]
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    u = x * (2.0 ** -0.5)
+    # 7-term Fourier series of erf, period 20 (Eq. 6): evaluated as an
+    # unrolled sum so everything stays in VMEM registers.
+    f = jnp.zeros_like(u)
+    for k in range(1, 8):
+        f = f + _BETA[k - 1] * jnp.sin(k * jnp.pi * u / 10.0)
+    erf = jnp.where(u < -ref.ERF_CUT, -1.0, jnp.where(u > ref.ERF_CUT, 1.0, f))
+    o_ref[...] = 0.5 * x * (1.0 + erf)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fourier_gelu(x):
+    """Apply the Fourier GeLU kernel over the last axis of ``x``.
+
+    Works on any shape; internally flattened to (rows, cols) and tiled.
+    """
+    shape = x.shape
+    cols = shape[-1]
+    rows = x.size // cols
+    x2 = x.reshape(rows, cols)
+    # Pad rows to the tile.
+    pad = (-rows) % TILE_R
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, cols), x2.dtype)], axis=0)
+    grid = (x2.shape[0] // TILE_R,)
+    out = pl.pallas_call(
+        _gelu_kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_R, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_R, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x2)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)

@@ -1,0 +1,66 @@
+"""Pallas kernel: LayerNorm with the deflated Goldschmidt rsqrt
+(Π_LayerNorm's plaintext map, Algorithm 2).
+
+TPU adaptation: the Goldschmidt iteration state (p, q — two scalars per
+row) lives in VMEM registers across all t=11 steps instead of
+materializing eleven intermediate tensors; γ/β ride along as a second
+block input. One HBM read + one write per element.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE_R = 8
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eta, iters):
+    x = x_ref[...]
+    n = x.shape[-1]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mean
+    ssq = jnp.sum(jnp.square(xc), axis=-1, keepdims=True) + 1e-3
+    # Deflated Goldschmidt rsqrt, unrolled: q0 = Σ/η ∈ (0, 2.99).
+    q = ssq / eta
+    p = jnp.ones_like(q)
+    for _ in range(iters):
+        m = (3.0 - q) / 2.0
+        p = p * m
+        q = q * m * m
+    rinv = p / jnp.sqrt(eta) * jnp.sqrt(float(n))
+    o_ref[...] = g_ref[...] * (xc * rinv) + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "iters"))
+def goldschmidt_layernorm(x, gamma, beta, eta=ref.ETA_LAYERNORM, iters=ref.RSQRT_GOLD_ITERS):
+    """LayerNorm over the last axis with SecFormer's Goldschmidt rsqrt."""
+    shape = x.shape
+    cols = shape[-1]
+    rows = x.size // cols
+    x2 = x.reshape(rows, cols)
+    pad = (-rows) % TILE_R
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.ones((pad, cols), x2.dtype)], axis=0)
+    g2 = jnp.broadcast_to(gamma, (1, cols))
+    b2 = jnp.broadcast_to(beta, (1, cols))
+    grid = (x2.shape[0] // TILE_R,)
+    kernel = functools.partial(_ln_kernel, eta=float(eta), iters=int(iters))
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_R, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, cols), lambda i: (0, 0)),
+            pl.BlockSpec((1, cols), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_R, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x2, g2, b2)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)

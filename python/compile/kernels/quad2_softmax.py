@@ -1,0 +1,50 @@
+"""Pallas kernel: 2Quad attention normalization (Π_2Quad's plaintext map).
+
+TPU adaptation: a fused square-and-row-reduce. Each grid step owns a block
+of score rows; the (x+c)² map, the row reduction, and the normalization all
+happen in one VMEM residency — one HBM read + one HBM write per element,
+versus three round trips for the unfused jnp composition. The row sum is
+a VPU cross-lane reduction; no MXU involvement.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE_R = 8
+
+
+def _quad2_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    p = jnp.square(x + ref.QUAD2_SHIFT)
+    s = jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = p / s
+
+
+@functools.partial(jax.jit, static_argnames=())
+def quad2_softmax(x):
+    """2Quad over the last axis of ``x`` (any leading shape)."""
+    shape = x.shape
+    cols = shape[-1]
+    rows = x.size // cols
+    x2 = x.reshape(rows, cols)
+    pad = (-rows) % TILE_R
+    if pad:
+        # Pad rows with ones — their row sums are finite so no NaNs leak.
+        x2 = jnp.concatenate([x2, jnp.ones((pad, cols), x2.dtype)], axis=0)
+    grid = (x2.shape[0] // TILE_R,)
+    out = pl.pallas_call(
+        _quad2_kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_R, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_R, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x2)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the Pallas kernels (the L1 correctness contract).
+
+These are the *semantic definitions* of SecFormer's SMPC-friendly operators:
+
+* ``fourier_gelu_ref``   — GeLU via the segmented 7-term Fourier erf (Eq. 5-7)
+* ``quad2_softmax_ref``  — the 2Quad normalization (Eq. 4)
+* ``goldschmidt_layernorm_ref`` — LayerNorm whose rsqrt is the deflated
+  Goldschmidt iteration of Algorithm 2
+
+The Rust SMPC protocols compute exactly these maps over secret shares; the
+Pallas kernels compute them in plaintext for the PJRT reference path. Both
+sides are tested against these oracles.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.special
+
+# Paper constants (Section 3.2, Appendix G).
+FOURIER_BETA = jnp.array(
+    [1.25772, -0.0299154, 0.382155, -0.0519123, 0.196033, -0.0624557, 0.118029],
+    dtype=jnp.float32,
+)
+FOURIER_K = jnp.arange(1, 8, dtype=jnp.float32)
+ERF_CUT = 1.7
+QUAD2_SHIFT = 5.0
+ETA_LAYERNORM = 2000.0
+RSQRT_GOLD_ITERS = 11
+
+
+def fourier_erf_ref(u):
+    """Segmented Fourier approximation of erf (Eq. 5-6)."""
+    f = jnp.sum(
+        FOURIER_BETA * jnp.sin(FOURIER_K * jnp.pi * u[..., None] / 10.0), axis=-1
+    )
+    return jnp.where(u < -ERF_CUT, -1.0, jnp.where(u > ERF_CUT, 1.0, f))
+
+
+def fourier_gelu_ref(x):
+    """GeLU(x) = x/2 · (1 + erf(x/√2)) with the Fourier erf."""
+    return 0.5 * x * (1.0 + fourier_erf_ref(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def exact_gelu_ref(x):
+    return 0.5 * x * (1.0 + jax.scipy.special.erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def quad2_softmax_ref(x):
+    """2Quad(x)[i] = (x_i+c)² / Σ_h (x_h+c)² over the last axis (Eq. 4)."""
+    p = jnp.square(x + QUAD2_SHIFT)
+    return p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+def goldschmidt_rsqrt_ref(v, eta=ETA_LAYERNORM, iters=RSQRT_GOLD_ITERS):
+    """Deflated Goldschmidt inverse square root (Algorithm 2, steps 3-8)."""
+    q = v / eta
+    p = jnp.ones_like(q)
+    for _ in range(iters):
+        m = (3.0 - q) / 2.0
+        p = p * m
+        q = q * m * m
+    return p / jnp.sqrt(eta)
+
+
+def goldschmidt_layernorm_ref(x, gamma, beta, eta=ETA_LAYERNORM):
+    """LayerNorm with the Goldschmidt rsqrt over Σ(x−x̄)² (Algorithm 2)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mean
+    ssq = jnp.sum(jnp.square(xc), axis=-1, keepdims=True) + 1e-3
+    rinv = goldschmidt_rsqrt_ref(ssq, eta=eta) * jnp.sqrt(
+        jnp.asarray(x.shape[-1], dtype=x.dtype)
+    )
+    return gamma * (xc * rinv) + beta
+
+
+def exact_layernorm_ref(x, gamma, beta):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    n = x.shape[-1]
+    return gamma * (x - mean) / jnp.sqrt(var + 1e-3 / n) + beta

@@ -1,0 +1,137 @@
+"""Synthetic GLUE-analog tasks (build-time only).
+
+The paper's Table 2 evaluates on GLUE (QNLI, CoLA, STS-B, MRPC, RTE) with
+fine-tuned BERT checkpoints — compute/data we substitute (DESIGN.md
+"Environment substitutions") with five synthetic sequence-classification
+tasks that exercise the same mechanisms attention approximations degrade:
+
+* ``qnli_syn``  — query/passage membership: does token[0] reappear?
+* ``cola_syn``  — "acceptability": do token parities alternate throughout?
+* ``stsb_syn``  — graded similarity of two halves (thresholded count).
+* ``mrpc_syn``  — paraphrase: is the 2nd half a copy of the 1st (±noise)?
+* ``rte_syn``   — entailment-ish: does the premise half contain *all*
+  tokens of the (short) hypothesis?
+
+Each returns int32 token sequences of length `seq` over `vocab` symbols and
+binary labels, balanced by construction.
+"""
+
+import numpy as np
+
+TASKS = ("qnli_syn", "cola_syn", "stsb_syn", "mrpc_syn", "rte_syn")
+
+# Paper metric analogs (Table 2 caption).
+METRIC = {
+    "qnli_syn": "acc",
+    "cola_syn": "matthews",
+    "stsb_syn": "acc",
+    "mrpc_syn": "f1",
+    "rte_syn": "acc",
+}
+
+
+def gen_batch(task: str, batch: int, seq: int, vocab: int, rng: np.random.Generator):
+    x = rng.integers(1, vocab, size=(batch, seq), dtype=np.int64)
+    y = np.zeros(batch, dtype=np.int64)
+    half = seq // 2
+    if task == "qnli_syn":
+        pos = rng.integers(0, 2, batch)
+        for i in range(batch):
+            q = x[i, 0]
+            rest = x[i, 1:]
+            if pos[i]:  # force presence
+                rest[rng.integers(0, seq - 1)] = q
+                y[i] = 1
+            else:
+                rest[rest == q] = (q % (vocab - 1)) + 1
+                y[i] = 0
+    elif task == "cola_syn":
+        pos = rng.integers(0, 2, batch)
+        for i in range(batch):
+            if pos[i]:
+                # enforce alternating parity
+                for j in range(seq):
+                    want = j % 2
+                    if x[i, j] % 2 != want:
+                        x[i, j] = x[i, j] - 1 if x[i, j] > 1 else x[i, j] + 1
+                        if x[i, j] % 2 != want:
+                            x[i, j] = min(vocab - 1, x[i, j] + 2)
+                y[i] = 1
+            else:
+                # guarantee at least one violation
+                j = rng.integers(0, seq)
+                want = 1 - (j % 2)
+                if x[i, j] % 2 != want:
+                    x[i, j] = x[i, j] + 1 if x[i, j] + 1 < vocab else x[i, j] - 1
+                y[i] = 0
+    elif task == "stsb_syn":
+        for i in range(batch):
+            a, b = x[i, :half], x[i, half:]
+            overlap = len(set(a.tolist()) & set(b.tolist()))
+            y[i] = int(overlap >= max(2, half // 4))
+    elif task == "mrpc_syn":
+        pos = rng.integers(0, 2, batch)
+        for i in range(batch):
+            if pos[i]:
+                x[i, half:] = x[i, :half]
+                # one-token paraphrase noise
+                j = rng.integers(half, seq)
+                x[i, j] = rng.integers(1, vocab)
+                y[i] = 1
+            else:
+                y[i] = 0
+        # reject accidental copies in negatives
+        for i in range(batch):
+            if pos[i] == 0 and np.sum(x[i, half:] == x[i, :half]) > half // 2:
+                x[i, half:] = rng.integers(1, vocab, half)
+    elif task == "rte_syn":
+        hyp = 3  # hypothesis length
+        pos = rng.integers(0, 2, batch)
+        for i in range(batch):
+            premise = x[i, : seq - hyp]
+            if pos[i]:
+                idx = rng.choice(seq - hyp, hyp, replace=False)
+                x[i, seq - hyp :] = premise[idx]
+                y[i] = 1
+            else:
+                # ensure at least one hypothesis token is absent
+                missing = 0
+                for t in range(1, vocab):
+                    if t not in premise:
+                        missing = t
+                        break
+                if missing == 0:
+                    premise[0] = 1
+                    missing = 2 if 2 not in premise else missing
+                x[i, seq - 1] = missing if missing else vocab - 1
+                y[i] = 0
+    else:
+        raise ValueError(task)
+    return x.astype(np.int32), y.astype(np.int32)
+
+
+def metric_score(task: str, preds: np.ndarray, labels: np.ndarray) -> float:
+    """Score with the task's Table 2 metric analog (scaled to 0-100)."""
+    preds = np.asarray(preds)
+    labels = np.asarray(labels)
+    kind = METRIC[task]
+    if kind == "acc":
+        return 100.0 * float((preds == labels).mean())
+    if kind == "f1":
+        tp = float(((preds == 1) & (labels == 1)).sum())
+        fp = float(((preds == 1) & (labels == 0)).sum())
+        fn = float(((preds == 0) & (labels == 1)).sum())
+        if tp == 0:
+            return 0.0
+        p, r = tp / (tp + fp), tp / (tp + fn)
+        return 100.0 * 2 * p * r / (p + r)
+    if kind == "matthews":
+        tp = float(((preds == 1) & (labels == 1)).sum())
+        tn = float(((preds == 0) & (labels == 0)).sum())
+        fp = float(((preds == 1) & (labels == 0)).sum())
+        fn = float(((preds == 0) & (labels == 1)).sum())
+        denom = ((tp + fp) * (tp + fn) * (tn + fp) * (tn + fn)) ** 0.5
+        if denom == 0:
+            return 0.0
+        return 100.0 * (tp * tn - fp * fn) / denom
+    raise ValueError(kind)

@@ -1,0 +1,225 @@
+"""Table 2 pipeline: fine-tune teachers, fine-tune approximate students
+(w/o distillation), and distill teachers into students — for both model
+sizes and both approximation frameworks (MPCFormer = Quad+2Quad,
+SecFormer = exact-GeLU+2Quad).
+
+Mirrors MPCFormer's recipe (Section 3.1 / Appendix G): the fine-tuned
+Transformer is the teacher; the approximated Transformer is the student;
+distillation matches hidden states (embedding + transformer layers) and
+logits on the task data.
+
+Build-time only. Outputs `table2_results.json` + printed table; exports
+`.swts` checkpoints for the Rust serving path.
+
+Usage:  python -m compile.train [--steps N] [--quick] [--out DIR]
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import tasks
+from .export import save_swts
+
+SIZES = {"tiny_base": M.tiny_base, "tiny_large": M.tiny_large}
+STUDENTS = ("mpcformer", "secformer")
+SEQ = 16
+VOCAB = 32
+BATCH = 64
+
+
+# ------------------------------------------------------------------ optim
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, clip=1.0):
+    # Global-norm clipping — the deeper (post-LN) stacks need it to train.
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads)) + 1e-12
+    )
+    scale = jnp.minimum(1.0, clip / gnorm)
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    params = jax.tree.map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), params, mh, vh)
+    return params, {"m": m, "v": v, "t": t}
+
+
+# ------------------------------------------------------------------ losses
+
+
+def ce_loss(params, x, y, cfg):
+    logits = M.forward_tokens_batch(params, x, cfg)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+
+def distill_loss(params, x, y, teacher_logits, cfg, alpha=0.5):
+    logits = M.forward_tokens_batch(params, x, cfg)
+    mse = jnp.mean(jnp.square(logits - teacher_logits))
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+    return alpha * mse + (1 - alpha) * ce
+
+
+# ------------------------------------------------------------------ train
+
+
+def evaluate(params, cfg, task, rng, n=512):
+    x, y = tasks.gen_batch(task, n, cfg.seq, cfg.vocab, rng)
+    logits = M.forward_tokens_batch(params, jnp.asarray(x), cfg)
+    preds = np.asarray(jnp.argmax(logits, axis=-1))
+    return tasks.metric_score(task, preds, y)
+
+
+def train_model(cfg, task, steps, seed, init=None, teacher=None, teacher_cfg=None, lr=2e-3):
+    """Fine-tune (teacher/student-w/o) or distill (teacher given)."""
+    rng = np.random.default_rng(seed)
+    params = init if init is not None else M.init_params(cfg, jax.random.PRNGKey(seed))
+    params = jax.tree.map(jnp.asarray, params)
+    state = adam_init(params)
+
+    if teacher is None:
+        grad_fn = jax.jit(
+            jax.value_and_grad(functools.partial(ce_loss, cfg=cfg))
+        )
+    else:
+        t_fwd = jax.jit(
+            lambda x: M.forward_tokens_batch(teacher, x, teacher_cfg)
+        )
+        grad_fn = jax.jit(
+            jax.value_and_grad(functools.partial(distill_loss, cfg=cfg))
+        )
+
+    warmup = max(1, steps // 10)
+    for step in range(steps):
+        x, y = tasks.gen_batch(task, BATCH, cfg.seq, cfg.vocab, rng)
+        x, y = jnp.asarray(x), jnp.asarray(y)
+        if teacher is None:
+            _, grads = grad_fn(params, x, y)
+        else:
+            tl = t_fwd(x)
+            _, grads = grad_fn(params, x, y, tl)
+        # Linear warmup stabilizes the deeper post-LN stacks.
+        cur_lr = lr * min(1.0, (step + 1) / warmup)
+        params, state = adam_step(params, grads, state, lr=cur_lr)
+    return params
+
+
+def run_table2(steps=300, out_dir=".", export_weights=True, seed=0, sizes=None):
+    """Produce the Table 2 analog. Returns the nested results dict."""
+    results = {}
+    t_start = time.time()
+    selected = {k: v for k, v in SIZES.items() if sizes is None or k in sizes}
+    for size_name, size_fn in selected.items():
+        base = size_fn(seq=SEQ, vocab=VOCAB)
+        results[size_name] = {}
+        for task in tasks.TASKS:
+            row = {}
+            eval_rng = np.random.default_rng(10_000 + seed)
+            teacher_cfg = M.framework_config(base, "plain")
+            teacher = train_model(teacher_cfg, task, steps, seed=seed + 1)
+            row["plain"] = evaluate(teacher, teacher_cfg, task, eval_rng)
+            # PUMA runs the unmodified model with exact protocols.
+            row["puma"] = row["plain"]
+            for student in STUDENTS:
+                s_cfg = M.framework_config(base, student)
+                # w/o distillation: fine-tune the redesigned model directly.
+                p_wo = train_model(s_cfg, task, steps, seed=seed + 2)
+                row[f"{student}_wo"] = evaluate(p_wo, s_cfg, task,
+                                                np.random.default_rng(10_000 + seed))
+                # with distillation: init from teacher, distill on task data.
+                p_kd = train_model(
+                    s_cfg,
+                    task,
+                    steps,
+                    seed=seed + 3,
+                    init=teacher,
+                    teacher=teacher,
+                    teacher_cfg=teacher_cfg,
+                    lr=1e-3,
+                )
+                row[student] = evaluate(p_kd, s_cfg, task,
+                                        np.random.default_rng(10_000 + seed))
+                if (
+                    export_weights
+                    and student == "secformer"
+                    and size_name == "tiny_base"
+                    and task == "qnli_syn"
+                ):
+                    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+                    save_swts(
+                        os.path.join(out_dir, "weights", "secformer_tiny_qnli.swts"),
+                        p_kd,
+                    )
+                    save_swts(
+                        os.path.join(out_dir, "weights", "teacher_tiny_qnli.swts"),
+                        teacher,
+                    )
+            results[size_name][task] = row
+            print(
+                f"[{time.time()-t_start:7.1f}s] {size_name}/{task}: "
+                + " ".join(f"{k}={v:.1f}" for k, v in row.items())
+            )
+    return results
+
+
+def print_table2(results):
+    methods = [
+        ("Plain-text", "plain"),
+        ("PUMA", "puma"),
+        ("MPCFormer_w/o", "mpcformer_wo"),
+        ("MPCFormer", "mpcformer"),
+        ("SecFormer_w/o", "secformer_wo"),
+        ("SecFormer", "secformer"),
+    ]
+    for size, rows in results.items():
+        print(f"\n=== Table 2 analog — {size} (synthetic GLUE) ===")
+        header = f"{'Method':<16}" + "".join(f"{t:>10}" for t in tasks.TASKS) + f"{'Avg':>8}"
+        print(header)
+        for label, key in methods:
+            vals = [rows[t][key] for t in tasks.TASKS]
+            avg = sum(vals) / len(vals)
+            print(f"{label:<16}" + "".join(f"{v:>10.1f}" for v in vals) + f"{avg:>8.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--quick", action="store_true", help="tiny run for CI")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default=None, help="comma list: tiny_base,tiny_large")
+    args = ap.parse_args()
+    steps = 30 if args.quick else args.steps
+    sizes = args.sizes.split(",") if args.sizes else None
+    results = run_table2(steps=steps, out_dir=args.out, sizes=sizes)
+    print_table2(results)
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, "table2_results.json")
+    # Merge with earlier partial runs so per-size reruns accumulate.
+    if os.path.exists(path) and sizes:
+        with open(path) as f:
+            old = json.load(f)
+        old.update(results)
+        results = old
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"\nwrote {path}")
+
+
+if __name__ == "__main__":
+    main()

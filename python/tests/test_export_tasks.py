@@ -1,0 +1,81 @@
+"""Exporter round-trip + synthetic task generators."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tasks
+from compile.export import load_swts, save_swts
+
+
+def test_swts_roundtrip(tmp_path):
+    params = {
+        "cls.w": np.random.default_rng(0).normal(size=(8, 2)).astype(np.float32),
+        "cls.b": np.zeros(2, dtype=np.float32),
+        "layer0.wq": np.random.default_rng(1).normal(size=(8, 8)).astype(np.float32),
+    }
+    path = str(tmp_path / "t.swts")
+    save_swts(path, params)
+    back = load_swts(path)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_allclose(back[k], params[k], atol=1e-6)
+
+
+def test_swts_header_is_rust_compatible(tmp_path):
+    path = str(tmp_path / "h.swts")
+    save_swts(path, {"a": np.ones(3, dtype=np.float32)})
+    raw = open(path, "rb").read()
+    assert raw[:4] == b"SWTS"
+    assert int.from_bytes(raw[4:8], "little") == 1
+    assert int.from_bytes(raw[8:12], "little") == 1
+
+
+@pytest.mark.parametrize("task", tasks.TASKS)
+def test_tasks_are_learnable_format(task):
+    rng = np.random.default_rng(42)
+    x, y = tasks.gen_batch(task, 256, 16, 32, rng)
+    assert x.shape == (256, 16) and y.shape == (256,)
+    assert x.dtype == np.int32 and set(np.unique(y)) <= {0, 1}
+    # Roughly balanced labels (within generous bounds).
+    frac = y.mean()
+    assert 0.15 < frac < 0.85, f"{task}: label fraction {frac}"
+    # Tokens stay in-vocab (0 reserved).
+    assert x.min() >= 1 and x.max() < 32
+
+
+@pytest.mark.parametrize("task", tasks.TASKS)
+def test_task_labels_verifiable(task):
+    """Spot-check the label semantics on a few samples."""
+    rng = np.random.default_rng(7)
+    x, y = tasks.gen_batch(task, 64, 16, 32, rng)
+    for i in range(16):
+        seq, label = x[i], y[i]
+        if task == "qnli_syn":
+            assert (seq[0] in seq[1:]) == bool(label)
+        elif task == "mrpc_syn":
+            same = int(np.sum(seq[8:] == seq[:8]))
+            if label:
+                assert same >= 7
+            else:
+                assert same <= 4
+        elif task == "rte_syn":
+            if label:
+                assert all(t in seq[:13] for t in seq[13:])
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), batch=st.integers(4, 64))
+def test_metric_score_bounds(seed, batch):
+    rng = np.random.default_rng(seed)
+    preds = rng.integers(0, 2, batch)
+    labels = rng.integers(0, 2, batch)
+    for task in tasks.TASKS:
+        s = tasks.metric_score(task, preds, labels)
+        assert -100.0 <= s <= 100.0
+
+
+def test_metric_perfect_prediction():
+    labels = np.array([0, 1, 0, 1, 1, 0])
+    for task in tasks.TASKS:
+        assert tasks.metric_score(task, labels, labels) == 100.0

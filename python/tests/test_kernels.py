@@ -1,0 +1,162 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (the CORE
+correctness signal of the compile path), including hypothesis sweeps over
+shapes and value ranges."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fourier_gelu,
+    goldschmidt_layernorm,
+    quad2_softmax,
+    ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, lo=-3.0, hi=3.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+# ------------------------------------------------------------ fourier gelu
+
+
+class TestFourierGelu:
+    def test_matches_oracle_basic(self):
+        x = _rand((16, 64))
+        np.testing.assert_allclose(fourier_gelu(x), ref.fourier_gelu_ref(x), atol=1e-5)
+
+    def test_matches_exact_gelu_within_paper_tolerance(self):
+        # Table 4: SecFormer GeLU error mean ~3e-3 on [-10, 10].
+        x = _rand((64, 32), lo=-10, hi=10, seed=1)
+        err = np.abs(np.asarray(fourier_gelu(x)) - np.asarray(ref.exact_gelu_ref(x)))
+        assert err.mean() < 0.01
+        assert err.max() < 0.05
+
+    def test_saturation_regions(self):
+        x = jnp.asarray([[-50.0, -10.0, 10.0, 50.0] * 16], dtype=jnp.float32)
+        y = np.asarray(fourier_gelu(x))
+        expect = np.asarray(ref.exact_gelu_ref(x))
+        np.testing.assert_allclose(y, expect, atol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(1, 33),
+        cols=st.integers(1, 96),
+        lo=st.floats(-20, -0.1),
+        hi=st.floats(0.1, 20),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes_and_ranges(self, rows, cols, lo, hi, seed):
+        x = _rand((rows, cols), lo=lo, hi=hi, seed=seed)
+        np.testing.assert_allclose(
+            fourier_gelu(x), ref.fourier_gelu_ref(x), atol=1e-4, rtol=1e-4
+        )
+
+    def test_3d_shape(self):
+        x = _rand((4, 8, 16))
+        np.testing.assert_allclose(fourier_gelu(x), ref.fourier_gelu_ref(x), atol=1e-5)
+
+
+# ------------------------------------------------------------ 2quad
+
+
+class TestQuad2Softmax:
+    def test_matches_oracle(self):
+        x = _rand((8, 24), seed=3)
+        np.testing.assert_allclose(quad2_softmax(x), ref.quad2_softmax_ref(x), atol=1e-6)
+
+    def test_rows_sum_to_one(self):
+        x = _rand((9, 17), seed=4)
+        s = np.asarray(quad2_softmax(x)).sum(axis=-1)
+        np.testing.assert_allclose(s, 1.0, atol=1e-5)
+
+    def test_outputs_nonnegative(self):
+        x = _rand((5, 11), lo=-8, hi=8, seed=5)
+        assert np.asarray(quad2_softmax(x)).min() >= 0.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(1, 20),
+        cols=st.integers(2, 64),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis(self, rows, cols, seed):
+        x = _rand((rows, cols), seed=seed)
+        got = np.asarray(quad2_softmax(x))
+        np.testing.assert_allclose(got, ref.quad2_softmax_ref(x), atol=1e-5)
+        np.testing.assert_allclose(got.sum(-1), 1.0, atol=1e-4)
+
+    def test_attention_shaped(self):
+        # (heads, seq, seq) exactly as the model applies it.
+        x = _rand((4, 16, 16), seed=6)
+        np.testing.assert_allclose(quad2_softmax(x), ref.quad2_softmax_ref(x), atol=1e-6)
+
+
+# ------------------------------------------------------------ layernorm
+
+
+class TestGoldschmidtLayerNorm:
+    def test_matches_oracle(self):
+        x = _rand((12, 64), lo=-2, hi=2, seed=7)
+        g = jnp.asarray(np.random.default_rng(8).uniform(0.5, 1.5, 64).astype(np.float32))
+        b = jnp.asarray(np.random.default_rng(9).uniform(-0.5, 0.5, 64).astype(np.float32))
+        np.testing.assert_allclose(
+            goldschmidt_layernorm(x, g, b),
+            ref.goldschmidt_layernorm_ref(x, g, b),
+            atol=1e-5,
+        )
+
+    def test_matches_exact_layernorm(self):
+        # Goldschmidt converges to exact LN inside the deflation basin.
+        x = _rand((6, 128), lo=-2, hi=2, seed=10)
+        g, b = jnp.ones(128), jnp.zeros(128)
+        got = np.asarray(goldschmidt_layernorm(x, g, b))
+        expect = np.asarray(ref.exact_layernorm_ref(x, g, b))
+        np.testing.assert_allclose(got, expect, atol=5e-3)
+
+    def test_output_standardized(self):
+        x = _rand((4, 96), lo=-4, hi=4, seed=11)
+        got = np.asarray(goldschmidt_layernorm(x, jnp.ones(96), jnp.zeros(96)))
+        np.testing.assert_allclose(got.mean(-1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(got.std(-1), 1.0, atol=1e-2)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        rows=st.integers(1, 16),
+        cols=st.integers(8, 128),
+        scale=st.floats(0.2, 3.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis(self, rows, cols, scale, seed):
+        x = _rand((rows, cols), lo=-scale, hi=scale, seed=seed)
+        g, b = jnp.ones(cols), jnp.zeros(cols)
+        np.testing.assert_allclose(
+            goldschmidt_layernorm(x, g, b),
+            ref.goldschmidt_layernorm_ref(x, g, b),
+            atol=1e-4,
+        )
+
+
+# ------------------------------------------------------------ constants
+
+
+def test_paper_beta_constants():
+    """ref.FOURIER_BETA must be the paper's Eq. 7 coefficients."""
+    expect = [1.25772, -0.0299154, 0.382155, -0.0519123, 0.196033, -0.0624557, 0.118029]
+    np.testing.assert_allclose(np.asarray(ref.FOURIER_BETA), expect, atol=1e-6)
+
+
+def test_goldschmidt_rsqrt_range():
+    v = jnp.asarray(np.linspace(2.0, 4000.0, 64).astype(np.float32))
+    got = np.asarray(ref.goldschmidt_rsqrt_ref(v))
+    np.testing.assert_allclose(got, 1.0 / np.sqrt(np.asarray(v)), rtol=2e-2)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,11 @@
+//! Fig 1(a) regenerator: runtime breakdown of CrypTen-based BERT_BASE PPI
+//! (Softmax+GeLU ≈ 77% in the paper) + Appendix D.2 round/volume table.
+
+fn main() {
+    let seq: usize = std::env::var("SECFORMER_SEQ")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    secformer::bench::harness::rounds_table();
+    secformer::bench::harness::fig1_breakdown(seq);
+}

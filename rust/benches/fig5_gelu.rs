@@ -1,0 +1,9 @@
+//! Fig 5 regenerator: Π_GeLU time & communication vs PUMA (and CrypTen).
+
+fn main() {
+    let iters: usize = std::env::var("SECFORMER_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    secformer::bench::harness::fig5_gelu(&[1024, 4096, 16384], iters);
+}

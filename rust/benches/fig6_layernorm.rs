@@ -1,0 +1,9 @@
+//! Fig 6 regenerator: Π_LayerNorm vs CrypTen's sqrt→reciprocal LayerNorm.
+
+fn main() {
+    let iters: usize = std::env::var("SECFORMER_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    secformer::bench::harness::fig6_layernorm(&[256, 768, 1024], 64, iters);
+}

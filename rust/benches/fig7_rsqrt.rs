@@ -1,0 +1,10 @@
+//! Fig 7 regenerator: deflated Goldschmidt inverse square root vs CrypTen's
+//! sqrt→reciprocal chain.
+
+fn main() {
+    let iters: usize = std::env::var("SECFORMER_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    secformer::bench::harness::fig7_rsqrt(&[1024, 4096, 16384], iters);
+}

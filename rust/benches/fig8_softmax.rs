@@ -1,0 +1,9 @@
+//! Fig 8 regenerator: Π_2Quad vs MPCFormer's 2Quad and the exact softmax.
+
+fn main() {
+    let iters: usize = std::env::var("SECFORMER_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    secformer::bench::harness::fig8_softmax(&[64, 128, 256], 32, iters);
+}

@@ -1,0 +1,10 @@
+//! Fig 9 regenerator: deflated Goldschmidt division vs CrypTen's generic
+//! signed-Newton Π_Div.
+
+fn main() {
+    let iters: usize = std::env::var("SECFORMER_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    secformer::bench::harness::fig9_div(&[1024, 4096, 16384], iters);
+}

@@ -1,0 +1,21 @@
+//! Table 3 regenerator: per-component time & communication of one secure
+//! inference, BERT_BASE + BERT_LARGE × {CrypTen, PUMA, MPCFormer,
+//! SecFormer}.
+//!
+//! `cargo bench --bench table3_inference` runs a scaled sequence length
+//! (default 32; the paper uses 512 — single-core budget). Override with
+//! SECFORMER_SEQ=128 (or 512 for paper scale) and SECFORMER_BASE_ONLY=1.
+//! Communication volumes are exact at any scale and additionally projected
+//! to seq=512 analytically.
+
+use secformer::bench::harness::table3;
+use secformer::nn::config::Framework;
+
+fn main() {
+    let seq: usize = std::env::var("SECFORMER_SEQ")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    let base_only = std::env::var("SECFORMER_BASE_ONLY").is_ok();
+    table3(seq, &Framework::ALL, !base_only);
+}

@@ -1,0 +1,11 @@
+//! Table 4 regenerator: privacy-preserving GeLU accuracy on
+//! [-1,1] / [-5,5] / [-10,10] × {CrypTen, PUMA, SecFormer}, through the
+//! real fixed-point protocols.
+
+fn main() {
+    let points: usize = std::env::var("SECFORMER_POINTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000);
+    secformer::bench::harness::table4(points);
+}

@@ -1,0 +1,194 @@
+//! Ablation studies over SecFormer's design choices (DESIGN.md §Perf /
+//! "extension" deliverable):
+//!
+//! * Fourier term count (paper: 7 terms, Appendix F) — accuracy vs comm.
+//! * Goldschmidt iteration counts (paper: t=11 rsqrt / t=13 div).
+//! * Deflation constant η (paper: 2000 / 5000) — convergence basin.
+
+use crate::core::rng::Xoshiro;
+use crate::proto::gelu::{erf_f64, gelu_exact};
+use crate::proto::harness::run_pair_collect_stats;
+use crate::proto::{goldschmidt, prim, trig};
+
+/// Numerically integrate the Fourier sine coefficients of erf for a given
+/// period (Eq. 7) — matches `python/compile/fit_figures.py`.
+pub fn fourier_coeffs(terms: usize, period: f64) -> Vec<f64> {
+    let half = period / 2.0;
+    let n = 20001;
+    let dx = period / (n - 1) as f64;
+    (1..=terms)
+        .map(|k| {
+            let mut acc = 0.0;
+            for i in 0..n {
+                let x = -half + i as f64 * dx;
+                let w = if i == 0 || i == n - 1 { 0.5 } else { 1.0 };
+                acc += w * erf_f64(x) * (2.0 * std::f64::consts::PI * k as f64 * x / period).sin();
+            }
+            2.0 / period * acc * dx
+        })
+        .collect()
+}
+
+/// A term-count-parameterized Π_GeLU (the 7-term production path lives in
+/// `proto::gelu`; this variant exists for the ablation).
+pub fn gelu_secformer_terms(
+    ctx: &mut crate::proto::ctx::PartyCtx,
+    x: &[u64],
+    betas: &[f64],
+) -> Vec<u64> {
+    use crate::proto::bits::lt_consts_batched;
+    use crate::proto::prim::{add, add_public, mul, mul_raw, sub, trunc};
+    let n = x.len();
+    let u = prim::mul_public(ctx, x, std::f64::consts::FRAC_1_SQRT_2);
+    let cs = lt_consts_batched(ctx, &u, &[-1.7, 1.7]);
+    let (c0, c1) = (&cs[0], &cs[1]);
+    let z1 = sub(c1, c0);
+    let z2: Vec<u64> = c1
+        .iter()
+        .map(|&b| if ctx.id == 0 { 1u64.wrapping_sub(b) } else { b.wrapping_neg() })
+        .collect();
+    let saturated: Vec<u64> =
+        sub(&z2, c0).iter().map(|&b| b.wrapping_shl(16)).collect();
+    let mut angles = Vec::with_capacity(betas.len() * n);
+    for k in 1..=betas.len() as u32 {
+        let m = trig::angle_multiplier(k, 20.0);
+        angles.extend(u.iter().map(|&v| v.wrapping_mul(m)));
+    }
+    let sins = trig::sin_turns(ctx, &angles);
+    let mut f = vec![0u64; n];
+    for (k, &beta) in betas.iter().enumerate() {
+        let e = crate::core::fixed::encode(beta);
+        for i in 0..n {
+            f[i] = f[i].wrapping_add(sins[k * n + i].wrapping_mul(e));
+        }
+    }
+    let f = trunc(ctx, &f, 16);
+    let sel = mul_raw(ctx, &z1, &f);
+    let erf = add(&saturated, &sel);
+    let one_plus = add_public(ctx, &erf, 1.0);
+    let half_x = trunc(ctx, x, 1);
+    mul(ctx, &half_x, &one_plus)
+}
+
+/// Fourier-term-count ablation: error vs communication.
+pub fn ablation_fourier_terms(points: usize) -> Vec<(usize, f64, u64)> {
+    println!("\n=== Ablation — Π_GeLU Fourier term count (paper: 7) ===");
+    println!("{:>6} {:>14} {:>14}", "terms", "mean |err|", "bytes/party");
+    let mut rng = Xoshiro::seed_from(0xAB1);
+    let x: Vec<f64> = (0..points).map(|_| rng.uniform(-10.0, 10.0)).collect();
+    let mut out = Vec::new();
+    for terms in [1usize, 3, 5, 7, 9, 11] {
+        let betas = fourier_coeffs(terms, 20.0);
+        let betas2 = betas.clone();
+        let (got, stats) = run_pair_collect_stats(&x, &x, move |ctx, xs, _| {
+            gelu_secformer_terms(ctx, xs, &betas2)
+        });
+        let err: f64 = x
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (got[i] - gelu_exact(v)).abs())
+            .sum::<f64>()
+            / points as f64;
+        println!("{:>6} {:>14.5} {:>14}", terms, err, stats.total_bytes());
+        out.push((terms, err, stats.total_bytes()));
+    }
+    out
+}
+
+/// Goldschmidt iteration-count ablation for rsqrt (paper: t=11) and
+/// division (paper: t=13).
+pub fn ablation_goldschmidt_iters(points: usize) -> Vec<(usize, f64, f64)> {
+    println!("\n=== Ablation — Goldschmidt iterations (paper: rsqrt t=11, div t=13) ===");
+    println!("{:>4} {:>16} {:>16}", "t", "rsqrt mean rel", "div mean rel");
+    let mut rng = Xoshiro::seed_from(0xAB2);
+    let v: Vec<f64> = (0..points).map(|_| rng.uniform(5.0, 4000.0)).collect();
+    let xq: Vec<f64> = (0..points).map(|_| rng.uniform(10.0, 5000.0)).collect();
+    // Numerator ∝ denominator so the quotient is O(1) — otherwise the
+    // metric measures output quantization (2^-16), not convergence.
+    let num: Vec<f64> = xq.iter().map(|&q| 0.7 * q).collect();
+    let mut out = Vec::new();
+    for t in [5usize, 7, 9, 11, 13, 15] {
+        let (got_r, _) = run_pair_collect_stats(&v, &v, move |ctx, xs, _| {
+            goldschmidt::rsqrt_goldschmidt(ctx, xs, 2000.0, t)
+        });
+        let err_r: f64 = v
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| ((got_r[i] - 1.0 / x.sqrt()) * x.sqrt()).abs())
+            .sum::<f64>()
+            / points as f64;
+        let (got_d, _) = run_pair_collect_stats(&num, &xq, move |ctx, xs, qs| {
+            goldschmidt::div_goldschmidt(ctx, xs, qs, 5000.0, t)
+        });
+        let err_d: f64 = (0..points)
+            .map(|i| (got_d[i] - 0.7).abs() / 0.7)
+            .sum::<f64>()
+            / points as f64;
+        println!("{:>4} {:>16.6} {:>16.6}", t, err_r, err_d);
+        out.push((t, err_r, err_d));
+    }
+    out
+}
+
+/// Deflation-constant ablation: η too small diverges, η too large loses
+/// precision / convergence speed; the paper's values sit in the basin.
+pub fn ablation_eta(points: usize) -> Vec<(f64, f64)> {
+    println!("\n=== Ablation — deflation constant η for rsqrt (paper: 2000) ===");
+    println!("{:>8} {:>16}", "eta", "mean rel err");
+    let mut rng = Xoshiro::seed_from(0xAB3);
+    let v: Vec<f64> = (0..points).map(|_| rng.uniform(50.0, 3000.0)).collect();
+    let mut out = Vec::new();
+    for eta in [200.0f64, 1000.0, 2000.0, 4000.0, 16000.0] {
+        let (got, _) = run_pair_collect_stats(&v, &v, move |ctx, xs, _| {
+            goldschmidt::rsqrt_goldschmidt(ctx, xs, eta, 11)
+        });
+        let err: f64 = v
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| ((got[i] - 1.0 / x.sqrt()) * x.sqrt()).abs())
+            .sum::<f64>()
+            / points as f64;
+        println!("{:>8} {:>16.6}", eta, err);
+        out.push((eta, err));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fourier_coeffs_match_paper_at_7_terms() {
+        let betas = fourier_coeffs(7, 20.0);
+        let paper = crate::proto::gelu::FOURIER_BETA;
+        for i in 0..7 {
+            assert!(
+                (betas[i] - paper[i]).abs() < 1e-3,
+                "β_{i}: {} vs {}",
+                betas[i],
+                paper[i]
+            );
+        }
+    }
+
+    #[test]
+    fn more_terms_less_error() {
+        let r = ablation_fourier_terms(200);
+        let err_of = |t: usize| r.iter().find(|x| x.0 == t).unwrap().1;
+        assert!(err_of(7) < err_of(3));
+        assert!(err_of(3) < err_of(1));
+        // comm grows with terms
+        let comm_of = |t: usize| r.iter().find(|x| x.0 == t).unwrap().2;
+        assert!(comm_of(11) > comm_of(3));
+    }
+
+    #[test]
+    fn goldschmidt_converges_by_paper_iters() {
+        let r = ablation_goldschmidt_iters(100);
+        let at = |t: usize| r.iter().find(|x| x.0 == t).unwrap();
+        assert!(at(11).1 < 0.02, "rsqrt rel err at t=11: {}", at(11).1);
+        assert!(at(13).2 < 0.02, "div rel err at t=13: {}", at(13).2);
+        assert!(at(5).1 > at(11).1);
+    }
+}

@@ -1,0 +1,574 @@
+//! Regenerators for every table and figure of the paper's evaluation.
+//!
+//! Each function prints the same rows/series the paper reports and returns
+//! the numbers for programmatic checks. Wall-clock is measured on this
+//! machine; communication (rounds/bytes) is counted exactly and projected
+//! onto the paper's 10 GB/s LAN via [`NetModel::paper_lan`], and the
+//! analytic cost model projects scaled runs to the paper's full shapes.
+
+use crate::bench::{bench, fmt_bytes, fmt_s};
+use crate::core::rng::Xoshiro;
+use crate::engine::{OfflineMode, SecureModel};
+use crate::net::stats::{NetModel, StatsSnapshot};
+use crate::nn::config::{Framework, ModelConfig};
+use crate::nn::model::ModelInput;
+use crate::nn::weights::random_weights;
+use crate::proto::harness::run_pair_collect_stats;
+use crate::proto::{approx, cost, gelu, goldschmidt, layernorm, softmax};
+
+fn uniform_vec(n: usize, lo: f64, hi: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Xoshiro::seed_from(seed);
+    (0..n).map(|_| rng.uniform(lo, hi)).collect()
+}
+
+/// One protocol measurement: wall time, comm, rounds, simulated LAN time.
+#[derive(Clone, Debug)]
+pub struct ProtoMeasurement {
+    pub label: String,
+    pub elems: usize,
+    pub wall_s: f64,
+    pub bytes_total: u64,
+    pub rounds: u64,
+    pub lan_s: f64,
+}
+
+impl ProtoMeasurement {
+    fn print(&self) {
+        println!(
+            "  {:<34} n={:<7} wall {:>10}  comm {:>10}  rounds {:>4}  LAN-total {:>10}",
+            self.label,
+            self.elems,
+            fmt_s(self.wall_s),
+            fmt_bytes(self.bytes_total as f64),
+            self.rounds,
+            fmt_s(self.lan_s),
+        );
+    }
+}
+
+/// Measure one two-party protocol closure.
+pub fn measure_protocol<F>(label: &str, x: &[f64], y: &[f64], iters: usize, f: F) -> ProtoMeasurement
+where
+    F: Fn(&mut crate::proto::ctx::PartyCtx, &[u64], &[u64]) -> Vec<u64> + Send + Sync,
+{
+    let lan = NetModel::paper_lan();
+    let mut last: Option<StatsSnapshot> = None;
+    let r = bench(label, 1, iters, || {
+        let (_, stats) = run_pair_collect_stats(x, y, &f);
+        last = Some(stats);
+    });
+    let stats = last.unwrap();
+    let bytes_total = stats.total_bytes() * 2; // both parties
+    let rounds = stats.total_rounds();
+    ProtoMeasurement {
+        label: label.to_string(),
+        elems: x.len(),
+        wall_s: r.mean_s,
+        bytes_total,
+        rounds,
+        lan_s: r.mean_s + lan.simulated_seconds(rounds, bytes_total),
+    }
+}
+
+// =====================================================================
+// Table 3 / Fig 1a — end-to-end secure inference breakdown
+// =====================================================================
+
+#[derive(Clone, Debug)]
+pub struct Table3Row {
+    pub model: String,
+    pub framework: Framework,
+    pub seq: usize,
+    /// (seconds, GB) per category [GeLU, Softmax, LayerNorm, Others].
+    pub per_cat: Vec<(String, f64, f64)>,
+    pub total_s: f64,
+    pub total_gb: f64,
+    pub lan_total_s: f64,
+}
+
+/// Run one secure inference at the given shape and collect the breakdown.
+pub fn run_breakdown(mut cfg: ModelConfig, seed: u64) -> Table3Row {
+    let w = random_weights(&cfg, seed);
+    let mut rng = Xoshiro::seed_from(seed + 1);
+    let hidden: Vec<f64> = (0..cfg.seq * cfg.hidden).map(|_| rng.normal() * 0.7).collect();
+    cfg = cfg.with_adaptive_etas();
+    let mut model = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+    let res = model.infer(&ModelInput::Hidden(hidden));
+    let per_cat = res.breakdown();
+    Table3Row {
+        model: format!("{}L/h{}", cfg.layers, cfg.hidden),
+        framework: cfg.framework,
+        seq: cfg.seq,
+        total_s: per_cat.iter().map(|r| r.1).sum(),
+        total_gb: per_cat.iter().map(|r| r.2).sum(),
+        lan_total_s: res.simulated_lan_seconds,
+        per_cat,
+    }
+}
+
+/// Table 3: per-component time/comm for BERT_BASE and BERT_LARGE across
+/// all four frameworks. `seq` scales the workload (paper: 512).
+pub fn table3(seq: usize, frameworks: &[Framework], large_too: bool) -> Vec<Table3Row> {
+    let mut rows = Vec::new();
+    let mut models: Vec<(&str, Box<dyn Fn(Framework) -> ModelConfig>)> = vec![(
+        "BERT_BASE",
+        Box::new(move |f| ModelConfig::bert_base(seq, f)),
+    )];
+    if large_too {
+        models.push(("BERT_LARGE", Box::new(move |f| ModelConfig::bert_large(seq, f))));
+    }
+    for (mname, mk) in &models {
+        println!("\n=== Table 3 — {mname} (seq={seq}; paper uses 512) ===");
+        println!(
+            "{:<11} {:>14} {:>14} {:>14} {:>14} {:>11} {:>10} {:>10}",
+            "Method", "GeLU s/GB", "Softmax s/GB", "LayerNorm s/GB", "Others s/GB",
+            "Total s", "Comm GB", "LAN s"
+        );
+        for &fw in frameworks {
+            let row = run_breakdown(mk(fw), 0x7AB1E3);
+            let cell = |c: usize| {
+                format!("{:.2}/{:.2}", row.per_cat[c].1, row.per_cat[c].2)
+            };
+            println!(
+                "{:<11} {:>14} {:>14} {:>14} {:>14} {:>11.2} {:>10.3} {:>10.2}",
+                fw.name(),
+                cell(0),
+                cell(1),
+                cell(2),
+                cell(3),
+                row.total_s,
+                row.total_gb,
+                row.lan_total_s,
+            );
+            rows.push(row);
+        }
+        // Analytic projection of the nonlinear-op comm at the paper scale.
+        println!("\n  analytic nonlinear-op comm at paper scale (seq=512):");
+        for &fw in frameworks {
+            let cfg = mk(fw);
+            let p = project_nonlinear_comm(&cfg, 512);
+            println!(
+                "    {:<11} GeLU {:>9}  Softmax {:>9}  LayerNorm {:>9}",
+                fw.name(),
+                fmt_bytes(p.0),
+                fmt_bytes(p.1),
+                fmt_bytes(p.2)
+            );
+        }
+    }
+    rows
+}
+
+/// (gelu_bytes, softmax_bytes, layernorm_bytes) at an arbitrary seq from
+/// the verified cost model.
+pub fn project_nonlinear_comm(cfg: &ModelConfig, seq: usize) -> (f64, f64, f64) {
+    let l = cfg.layers as f64;
+    let gelu_elems = l * seq as f64 * cfg.intermediate as f64;
+    let softmax_elems = l * cfg.heads as f64 * (seq * seq) as f64;
+    let ln_elems = 2.0 * l * (seq * cfg.hidden) as f64;
+    let (g, s, n) = match cfg.framework {
+        Framework::Crypten => (
+            cost::gelu_crypten(),
+            cost::softmax_exact(seq as u64),
+            cost::layernorm_crypten(cfg.hidden as u64),
+        ),
+        Framework::Puma => (
+            cost::gelu_puma(),
+            cost::softmax_exact(seq as u64),
+            cost::layernorm_crypten(cfg.hidden as u64),
+        ),
+        Framework::MpcFormer => (
+            cost::gelu_quad(),
+            cost::softmax_2quad_mpcformer(seq as u64),
+            cost::layernorm_crypten(cfg.hidden as u64),
+        ),
+        Framework::SecFormer => (
+            cost::gelu_secformer(),
+            cost::softmax_2quad_secformer(seq as u64),
+            cost::layernorm_secformer(cfg.hidden as u64),
+        ),
+    };
+    (
+        g.bits * gelu_elems / 8.0,
+        s.bits * softmax_elems / 8.0,
+        n.bits * ln_elems / 8.0,
+    )
+}
+
+/// Fig 1(a): runtime-share breakdown of the CrypTen-based PPI.
+pub fn fig1_breakdown(seq: usize) -> Vec<(String, f64)> {
+    let row = run_breakdown(ModelConfig::bert_base(seq, Framework::Crypten), 0xF161);
+    let total: f64 = row.total_s.max(1e-12);
+    println!("\n=== Fig 1a — BERT_BASE runtime breakdown, CrypTen PPI (seq={seq}) ===");
+    let mut shares = Vec::new();
+    for (name, secs, _gb) in &row.per_cat {
+        let share = 100.0 * secs / total;
+        println!("  {:<10} {:>8}  {:>5.1}%", name, fmt_s(*secs), share);
+        shares.push((name.clone(), share));
+    }
+    let sg = shares[0].1 + shares[1].1;
+    println!("  Softmax+GeLU share: {sg:.1}% (paper: 77.03%)");
+    shares
+}
+
+// =====================================================================
+// Table 4 — GeLU protocol accuracy
+// =====================================================================
+
+#[derive(Clone, Debug)]
+pub struct Table4Cell {
+    pub method: &'static str,
+    pub interval: (f64, f64),
+    pub err_mean: f64,
+    pub err_var: f64,
+}
+
+pub fn table4(points: usize) -> Vec<Table4Cell> {
+    let intervals = [(-1.0, 1.0), (-5.0, 5.0), (-10.0, 10.0)];
+    let methods: [(&'static str, fn(&mut crate::proto::ctx::PartyCtx, &[u64]) -> Vec<u64>); 3] = [
+        ("CrypTen", gelu::gelu_crypten),
+        ("PUMA", gelu::gelu_puma),
+        ("SecFormer", gelu::gelu_secformer),
+    ];
+    let mut cells = Vec::new();
+    println!("\n=== Table 4 — privacy-preserving GeLU accuracy ===");
+    println!("{:<12} {:>16} {:>16} {:>16}", "Method", "[-1,1]", "[-5,5]", "[-10,10]");
+    for (mname, f) in methods {
+        let mut line = format!("{mname:<12}");
+        for (lo, hi) in intervals {
+            let x = uniform_vec(points, lo, hi, 0x7AB4 + lo.abs() as u64);
+            let (got, _) = run_pair_collect_stats(&x, &x, |ctx, xs, _| f(ctx, xs));
+            let errs: Vec<f64> = x
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (got[i] - gelu::gelu_exact(v)).abs())
+                .collect();
+            let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+            let var = errs.iter().map(|e| (e - mean) * (e - mean)).sum::<f64>()
+                / errs.len() as f64;
+            line += &format!(" {mean:>9.4}±{:>6.0e}", var);
+            cells.push(Table4Cell { method: mname, interval: (lo, hi), err_mean: mean, err_var: var });
+        }
+        println!("{line}");
+    }
+    println!("(paper: SecFormer/PUMA ≈1e-3–5e-3 everywhere; CrypTen explodes beyond [-1,1])");
+    cells
+}
+
+// =====================================================================
+// Figs 5–9 — protocol micro-benchmarks
+// =====================================================================
+
+pub fn fig5_gelu(sizes: &[usize], iters: usize) -> Vec<ProtoMeasurement> {
+    println!("\n=== Fig 5 — Π_GeLU time & communication ===");
+    let mut out = Vec::new();
+    for &n in sizes {
+        let x = uniform_vec(n, -4.0, 4.0, 5);
+        let s = measure_protocol("SecFormer Π_GeLU", &x, &x, iters, |c, a, _| {
+            gelu::gelu_secformer(c, a)
+        });
+        let p = measure_protocol("PUMA GeLU", &x, &x, iters, |c, a, _| gelu::gelu_puma(c, a));
+        let c = measure_protocol("CrypTen GeLU", &x, &x, iters, |c2, a, _| {
+            gelu::gelu_crypten(c2, a)
+        });
+        s.print();
+        p.print();
+        c.print();
+        println!(
+            "  → PUMA/SecFormer: comm ×{:.2}, LAN time ×{:.2} (paper: ≈1.6×)",
+            p.bytes_total as f64 / s.bytes_total as f64,
+            p.lan_s / s.lan_s
+        );
+        out.extend([s, p, c]);
+    }
+    out
+}
+
+pub fn fig6_layernorm(hiddens: &[usize], rows: usize, iters: usize) -> Vec<ProtoMeasurement> {
+    println!("\n=== Fig 6 — Π_LayerNorm time & communication (rows={rows}) ===");
+    let mut out = Vec::new();
+    for &h in hiddens {
+        let x = uniform_vec(rows * h, -2.0, 2.0, 6);
+        let g = vec![1.0; h];
+        let s = measure_protocol(
+            &format!("SecFormer Π_LayerNorm h={h}"),
+            &x,
+            &x,
+            iters,
+            move |c, a, _| {
+                let gam = crate::proto::prim::const_share(c, &vec![1.0; h]);
+                let bet = crate::proto::prim::const_share(c, &vec![0.0; h]);
+                layernorm::layernorm_secformer(c, a, &gam, &bet, rows, h)
+            },
+        );
+        let p = measure_protocol(
+            &format!("CrypTen LayerNorm h={h}"),
+            &x,
+            &x,
+            iters,
+            move |c, a, _| {
+                let gam = crate::proto::prim::const_share(c, &vec![1.0; h]);
+                let bet = crate::proto::prim::const_share(c, &vec![0.0; h]);
+                layernorm::layernorm_crypten(c, a, &gam, &bet, rows, h)
+            },
+        );
+        s.print();
+        p.print();
+        println!(
+            "  → CrypTen/SecFormer: comm ×{:.2}, LAN time ×{:.2} (paper: up to 4.5× time)",
+            p.bytes_total as f64 / s.bytes_total as f64,
+            p.lan_s / s.lan_s
+        );
+        let _ = g;
+        out.extend([s, p]);
+    }
+    out
+}
+
+pub fn fig7_rsqrt(sizes: &[usize], iters: usize) -> Vec<ProtoMeasurement> {
+    println!("\n=== Fig 7 — privacy-preserving inverse square root ===");
+    let mut out = Vec::new();
+    for &n in sizes {
+        let x = uniform_vec(n, 5.0, 3000.0, 7);
+        let s = measure_protocol("SecFormer Goldschmidt rsqrt", &x, &x, iters, |c, a, _| {
+            goldschmidt::rsqrt_goldschmidt(c, a, goldschmidt::ETA_LAYERNORM, goldschmidt::RSQRT_GOLD_ITERS)
+        });
+        // CrypTen composes sqrt → reciprocal (valid on O(1) inputs).
+        let x_small = uniform_vec(n, 0.5, 20.0, 8);
+        let p = measure_protocol("CrypTen sqrt→reciprocal", &x_small, &x_small, iters, |c, a, _| {
+            approx::rsqrt_crypten_composed(c, a)
+        });
+        s.print();
+        p.print();
+        println!(
+            "  → CrypTen/SecFormer: comm ×{:.2}, LAN time ×{:.2} (paper: 4.2× time, 2.5× comm)",
+            p.bytes_total as f64 / s.bytes_total as f64,
+            p.lan_s / s.lan_s
+        );
+        out.extend([s, p]);
+    }
+    out
+}
+
+pub fn fig8_softmax(widths: &[usize], rows: usize, iters: usize) -> Vec<ProtoMeasurement> {
+    println!("\n=== Fig 8 — Π_2Quad vs baselines (rows={rows}) ===");
+    let mut out = Vec::new();
+    for &n in widths {
+        let x = uniform_vec(rows * n, -3.0, 3.0, 9);
+        let s = measure_protocol(
+            &format!("SecFormer Π_2Quad n={n}"),
+            &x,
+            &x,
+            iters,
+            move |c, a, _| softmax::softmax_2quad_secformer(c, a, rows, n),
+        );
+        let m = measure_protocol(
+            &format!("MPCFormer 2Quad n={n}"),
+            &x,
+            &x,
+            iters,
+            move |c, a, _| softmax::softmax_2quad_mpcformer(c, a, rows, n),
+        );
+        let e = measure_protocol(
+            &format!("PUMA/CrypTen exact n={n}"),
+            &x,
+            &x,
+            iters,
+            move |c, a, _| softmax::softmax_exact(c, a, rows, n),
+        );
+        s.print();
+        m.print();
+        e.print();
+        println!(
+            "  → MPCFormer/SecFormer LAN ×{:.2} (paper 1.26–2.09×); exact/SecFormer comm ×{:.1} (paper 30–36×)",
+            m.lan_s / s.lan_s,
+            e.bytes_total as f64 / s.bytes_total as f64
+        );
+        out.extend([s, m, e]);
+    }
+    out
+}
+
+pub fn fig9_div(sizes: &[usize], iters: usize) -> Vec<ProtoMeasurement> {
+    println!("\n=== Fig 9 — privacy-preserving division ===");
+    let mut out = Vec::new();
+    for &n in sizes {
+        let x = uniform_vec(n, -10.0, 10.0, 10);
+        let q = uniform_vec(n, 10.0, 5000.0, 11);
+        let s = measure_protocol("SecFormer Goldschmidt div", &x, &q, iters, |c, a, b| {
+            goldschmidt::div_goldschmidt(c, a, b, goldschmidt::ETA_SOFTMAX, goldschmidt::DIV_GOLD_ITERS)
+        });
+        let q_small = uniform_vec(n, 0.5, 40.0, 12);
+        let p = measure_protocol("CrypTen Π_Div (signed Newton)", &x, &q_small, iters, |c, a, b| {
+            let r = approx::reciprocal_newton_signed(c, b, approx::RECIP_ITERS);
+            crate::proto::prim::mul(c, a, &r)
+        });
+        s.print();
+        p.print();
+        println!(
+            "  → CrypTen/SecFormer: comm ×{:.2}, LAN time ×{:.2} (paper: 3.2× time, 1.6× comm)",
+            p.bytes_total as f64 / s.bytes_total as f64,
+            p.lan_s / s.lan_s
+        );
+        out.extend([s, p]);
+    }
+    out
+}
+
+/// Appendix D.2 verification: measured rounds/volume per protocol against
+/// the paper's accounting.
+pub fn rounds_table() {
+    println!("\n=== Appendix D.2 — measured rounds & per-element volume ===");
+    println!(
+        "{:<28} {:>8} {:>12} {:>14} {:>16}",
+        "Protocol", "rounds", "paper rounds", "bits/elem", "paper bits/elem"
+    );
+    let entries: Vec<(&str, Box<dyn Fn() -> (u64, f64)>, u64, f64)> = vec![
+        (
+            "Π_Mul",
+            Box::new(|| {
+                let x = vec![1.0f64; 64];
+                let (_, s) = run_pair_collect_stats(&x, &x, |c, a, b| crate::proto::prim::mul(c, a, b));
+                (s.total_rounds(), s.total_bytes() as f64 * 16.0 / 64.0)
+            }),
+            1,
+            256.0,
+        ),
+        (
+            "Π_Square",
+            Box::new(|| {
+                let x = vec![1.0f64; 64];
+                let (_, s) = run_pair_collect_stats(&x, &x, |c, a, _| crate::proto::prim::square(c, a));
+                (s.total_rounds(), s.total_bytes() as f64 * 16.0 / 64.0)
+            }),
+            1,
+            128.0,
+        ),
+        (
+            "Π_Sin",
+            Box::new(|| {
+                let x = vec![1.0f64; 64];
+                let (_, s) = run_pair_collect_stats(&x, &x, |c, a, _| {
+                    crate::proto::trig::sin_of(c, a, 1, 20.0)
+                });
+                (s.total_rounds(), s.total_bytes() as f64 * 16.0 / 64.0)
+            }),
+            1,
+            42.0,
+        ),
+        (
+            "Π_LT",
+            Box::new(|| {
+                let x = vec![1.0f64; 64];
+                let (_, s) = run_pair_collect_stats(&x, &x, |c, a, _| {
+                    crate::proto::bits::lt_const(c, a, 0.0)
+                });
+                (s.total_rounds(), s.total_bytes() as f64 * 16.0 / 64.0)
+            }),
+            7,
+            3456.0,
+        ),
+        (
+            "Π_Exp",
+            Box::new(|| {
+                let x = vec![1.0f64; 64];
+                let (_, s) = run_pair_collect_stats(&x, &x, |c, a, _| approx::exp(c, a));
+                (s.total_rounds(), s.total_bytes() as f64 * 16.0 / 64.0)
+            }),
+            8,
+            1024.0,
+        ),
+        (
+            "Π_GeLU (SecFormer)",
+            Box::new(|| {
+                let x = vec![1.0f64; 64];
+                let (_, s) = run_pair_collect_stats(&x, &x, |c, a, _| gelu::gelu_secformer(c, a));
+                (s.total_rounds(), s.total_bytes() as f64 * 16.0 / 64.0)
+            }),
+            16, // 2 log L + 4 with the paper's log-round LT accounting
+            7210.0,
+        ),
+        (
+            "rsqrt (Goldschmidt t=11)",
+            Box::new(|| {
+                let x = vec![100.0f64; 64];
+                let (_, s) = run_pair_collect_stats(&x, &x, |c, a, _| {
+                    goldschmidt::rsqrt_goldschmidt(c, a, 2000.0, 11)
+                });
+                (s.total_rounds(), s.total_bytes() as f64 * 16.0 / 64.0)
+            }),
+            22,
+            7040.0,
+        ),
+        (
+            "div (Goldschmidt t=13)",
+            Box::new(|| {
+                let x = vec![1.0f64; 64];
+                let q = vec![100.0f64; 64];
+                let (_, s) = run_pair_collect_stats(&x, &q, |c, a, b| {
+                    goldschmidt::div_goldschmidt(c, a, b, 5000.0, 13)
+                });
+                (s.total_rounds(), s.total_bytes() as f64 * 16.0 / 64.0)
+            }),
+            13,
+            6656.0,
+        ),
+    ];
+    for (name, f, paper_rounds, paper_bits) in entries {
+        let (rounds, bits) = f();
+        println!(
+            "{:<28} {:>8} {:>12} {:>14.0} {:>16.0}",
+            name, rounds, paper_rounds, bits, paper_bits
+        );
+    }
+    println!("(deltas documented in EXPERIMENTS.md: Π_Sin ships full words; Π_LT counts its B2A round)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_shape_holds_at_small_n() {
+        let cells = table4(200);
+        let get = |m: &str, hi: f64| {
+            cells
+                .iter()
+                .find(|c| c.method == m && c.interval.1 == hi)
+                .unwrap()
+                .err_mean
+        };
+        // SecFormer & PUMA stay small everywhere; CrypTen explodes at ±5/±10.
+        assert!(get("SecFormer", 1.0) < 0.02);
+        assert!(get("SecFormer", 10.0) < 0.02);
+        assert!(get("PUMA", 10.0) < 0.05);
+        assert!(get("CrypTen", 1.0) < 0.05);
+        assert!(get("CrypTen", 5.0) > 1.0);
+    }
+
+    #[test]
+    fn fig5_secformer_cheaper_than_puma() {
+        let m = fig5_gelu(&[256], 1);
+        let sec = &m[0];
+        let puma = &m[1];
+        assert!(puma.bytes_total > sec.bytes_total);
+        let ratio = puma.bytes_total as f64 / sec.bytes_total as f64;
+        assert!(ratio > 1.2 && ratio < 2.5, "comm ratio {ratio}");
+    }
+
+    #[test]
+    fn fig8_exact_softmax_far_more_comm() {
+        let m = fig8_softmax(&[64], 4, 1);
+        let sec = &m[0];
+        let exact = &m[2];
+        let ratio = exact.bytes_total as f64 / sec.bytes_total as f64;
+        assert!(ratio > 8.0, "comm ratio {ratio} (paper: 30–36× at seq 512)");
+    }
+
+    #[test]
+    fn tiny_breakdown_runs() {
+        let row = run_breakdown(ModelConfig::tiny(8, Framework::SecFormer), 1);
+        assert!(row.total_gb > 0.0);
+        assert_eq!(row.per_cat.len(), 4);
+    }
+}

@@ -1,0 +1,103 @@
+//! Benchmark substrate (criterion is unavailable in the offline image):
+//! a small timing harness plus one regenerator per paper table/figure.
+//! `cargo bench` targets (rust/benches/*.rs, harness = false) and the CLI
+//! (`secformer bench …`) both call into [`harness`].
+
+pub mod ablations;
+pub mod harness;
+
+pub use harness as tables;
+
+use std::time::Instant;
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>4} iters  mean {:>12}  min {:>12}  max {:>12}",
+            self.name,
+            self.iters,
+            fmt_s(self.mean_s),
+            fmt_s(self.min_s),
+            fmt_s(self.max_s)
+        )
+    }
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+pub fn fmt_bytes(b: f64) -> String {
+    if b < 1e3 {
+        format!("{b:.0} B")
+    } else if b < 1e6 {
+        format!("{:.2} KB", b / 1e3)
+    } else if b < 1e9 {
+        format!("{:.2} MB", b / 1e6)
+    } else {
+        format!("{:.3} GB", b / 1e9)
+    }
+}
+
+/// Run `f` `iters` times (after `warmup` runs) and report stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let sum: f64 = times.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: sum / iters as f64,
+        min_s: times.iter().cloned().fold(f64::MAX, f64::min),
+        max_s: times.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let r = bench("spin", 1, 3, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 3);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s);
+    }
+
+    #[test]
+    fn formatting() {
+        assert!(fmt_s(2.5e-9).contains("ns"));
+        assert!(fmt_s(2.5e-5).contains("µs"));
+        assert!(fmt_s(2.5e-2).contains("ms"));
+        assert!(fmt_s(2.5).contains(" s"));
+        assert_eq!(fmt_bytes(500.0), "500 B");
+        assert!(fmt_bytes(2.5e9).contains("GB"));
+    }
+}

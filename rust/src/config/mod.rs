@@ -1,0 +1,174 @@
+//! Minimal TOML-subset configuration parser (the offline environment has no
+//! serde/toml crates). Supports `[section]` headers, `key = value` with
+//! string/float/int/bool values, `#` comments.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key` → value (top-level keys have no prefix).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            // Strip comments, but not a '#' inside an open quoted string
+            // (even quote count before the '#' ⇒ we're outside a string).
+            let line = match raw
+                .char_indices()
+                .find(|(i, c)| *c == '#' && raw[..*i].matches('"').count() % 2 == 0)
+            {
+                Some((i, _)) => &raw[..i],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, Self::parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(Config { values })
+    }
+
+    fn parse_value(v: &str, lineno: usize) -> Result<Value> {
+        if v.starts_with('"') {
+            if !v.ends_with('"') || v.len() < 2 {
+                bail!("line {lineno}: unterminated string");
+            }
+            return Ok(Value::Str(v[1..v.len() - 1].to_string()));
+        }
+        match v {
+            "true" => return Ok(Value::Bool(true)),
+            "false" => return Ok(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = v.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = v.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        bail!("line {lineno}: cannot parse value '{v}'")
+    }
+
+    pub fn load(path: &str) -> Result<Config> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read config {path}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.values.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.values.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.values
+            .get(key)
+            .and_then(|v| v.as_i64())
+            .map(|v| v as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.values.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = Config::parse(
+            r#"
+# comment
+top = 1
+
+[model]
+framework = "secformer"   # inline comment
+layers = 12
+eta = 2000.5
+adaptive = true
+
+[net]
+bandwidth_gbps = 10
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.usize_or("top", 0), 1);
+        assert_eq!(cfg.str_or("model.framework", "x"), "secformer");
+        assert_eq!(cfg.usize_or("model.layers", 0), 12);
+        assert!((cfg.f64_or("model.eta", 0.0) - 2000.5).abs() < 1e-9);
+        assert!(cfg.bool_or("model.adaptive", false));
+        assert_eq!(cfg.f64_or("net.bandwidth_gbps", 0.0), 10.0);
+        assert_eq!(cfg.str_or("missing.key", "default"), "default");
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("k = \"open").is_err());
+        assert!(Config::parse("k = 1.2.3").is_err());
+    }
+}

@@ -1,0 +1,277 @@
+//! Request queue + dynamic batcher + engine workers.
+//!
+//! Requests are enqueued by any thread; a worker drains up to
+//! `max_batch` requests (waiting at most `max_wait` for stragglers — the
+//! classic dynamic-batching policy) and runs them on its engine. The
+//! secure engine executes batch items sequentially (one SMPC session per
+//! example); the batch boundary still amortizes engine setup and gives the
+//! scheduler a unit for fairness.
+
+use crate::coordinator::metrics::Metrics;
+use crate::engine::{OfflineMode, SecureModel};
+use crate::nn::config::ModelConfig;
+use crate::nn::model::ModelInput;
+use crate::nn::weights::WeightMap;
+use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::executor::PlaintextModel;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which execution engine a request targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// 3-party SMPC inference (privacy-preserving).
+    Secure,
+    /// PJRT plaintext inference (the paper's baseline timing).
+    Plaintext,
+}
+
+#[derive(Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub input: ModelInput,
+    pub engine: EngineKind,
+    pub submitted: Instant,
+    pub reply_to: Sender<InferenceReply>,
+}
+
+#[derive(Clone, Debug)]
+pub struct InferenceReply {
+    pub id: u64,
+    pub logits: Vec<f64>,
+    pub latency_s: f64,
+    pub engine: EngineKind,
+    /// Online communication for secure requests (bytes, both parties).
+    pub comm_bytes: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<InferenceRequest>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// The coordinator: owns the queue and the worker thread.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    next_id: AtomicU64,
+    pub metrics_secure: Arc<Metrics>,
+    pub metrics_plain: Arc<Metrics>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Build with a secure engine and (optionally) a plaintext PJRT engine.
+    pub fn start(
+        cfg: ModelConfig,
+        weights: WeightMap,
+        plaintext: Option<(ArtifactMeta, WeightMap)>,
+        batcher: BatcherConfig,
+    ) -> anyhow::Result<Self> {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let metrics_secure = Arc::new(Metrics::new());
+        let metrics_plain = Arc::new(Metrics::new());
+
+        let w_shared = shared.clone();
+        let w_ms = metrics_secure.clone();
+        let w_mp = metrics_plain.clone();
+        let worker = std::thread::spawn(move || {
+            let mut secure = SecureModel::new(cfg, &weights, OfflineMode::Seeded);
+            let mut plain = plaintext.map(|(meta, w)| {
+                let client = xla::PjRtClient::cpu().expect("pjrt cpu client");
+                PlaintextModel::load(&client, &meta, &w).expect("load artifact")
+            });
+            loop {
+                let batch = {
+                    let mut q = w_shared.queue.lock().unwrap();
+                    while q.is_empty() && !w_shared.shutdown.load(Ordering::Relaxed) {
+                        let (guard, _timeout) =
+                            w_shared.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                        q = guard;
+                    }
+                    if q.is_empty() && w_shared.shutdown.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    // Dynamic batching: give stragglers `max_wait` to join.
+                    let deadline = Instant::now() + batcher.max_wait;
+                    while q.len() < batcher.max_batch && Instant::now() < deadline {
+                        let (guard, _) = w_shared
+                            .cv
+                            .wait_timeout(q, deadline - Instant::now())
+                            .unwrap();
+                        q = guard;
+                    }
+                    let take = q.len().min(batcher.max_batch);
+                    q.drain(..take).collect::<Vec<_>>()
+                };
+                for req in batch {
+                    let t0 = Instant::now();
+                    let (logits, comm) = match req.engine {
+                        EngineKind::Secure => {
+                            let r = secure.infer(&req.input);
+                            (r.logits, r.stats.total_bytes() * 2)
+                        }
+                        EngineKind::Plaintext => {
+                            let p = plain.as_mut().expect("no plaintext engine configured");
+                            let logits = match &req.input {
+                                ModelInput::Tokens(toks) => {
+                                    let t: Vec<i32> =
+                                        toks.iter().map(|&v| v as i32).collect();
+                                    p.infer_tokens(&t)
+                                        .expect("plaintext inference")
+                                        .iter()
+                                        .map(|&v| v as f64)
+                                        .collect()
+                                }
+                                ModelInput::Hidden(h) => {
+                                    let hf: Vec<f32> = h.iter().map(|&v| v as f32).collect();
+                                    p.infer_hidden(&hf)
+                                        .expect("plaintext inference")
+                                        .iter()
+                                        .map(|&v| v as f64)
+                                        .collect()
+                                }
+                            };
+                            (logits, 0)
+                        }
+                    };
+                    let latency = req.submitted.elapsed().as_secs_f64();
+                    let _ = t0;
+                    match req.engine {
+                        EngineKind::Secure => w_ms.observe(latency),
+                        EngineKind::Plaintext => w_mp.observe(latency),
+                    }
+                    let _ = req.reply_to.send(InferenceReply {
+                        id: req.id,
+                        logits,
+                        latency_s: latency,
+                        engine: req.engine,
+                        comm_bytes: comm,
+                    });
+                }
+            }
+        });
+
+        Ok(Coordinator {
+            shared,
+            next_id: AtomicU64::new(1),
+            metrics_secure,
+            metrics_plain,
+            worker: Some(worker),
+        })
+    }
+
+    /// Enqueue a request; the reply arrives on the provided channel.
+    pub fn submit(
+        &self,
+        input: ModelInput,
+        engine: EngineKind,
+        reply_to: Sender<InferenceReply>,
+    ) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = InferenceRequest { id, input, engine, submitted: Instant::now(), reply_to };
+        self.shared.queue.lock().unwrap().push_back(req);
+        self.shared.cv.notify_all();
+        id
+    }
+
+    /// Convenience: synchronous round trip.
+    pub fn infer_blocking(&self, input: ModelInput, engine: EngineKind) -> InferenceReply {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(input, engine, tx);
+        rx.recv().expect("worker died")
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config::Framework;
+    use crate::nn::weights::random_weights;
+
+    fn tiny_coordinator() -> (Coordinator, ModelConfig) {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let w = random_weights(&cfg, 11);
+        let c = Coordinator::start(cfg.clone(), w, None, BatcherConfig::default()).unwrap();
+        (c, cfg)
+    }
+
+    #[test]
+    fn secure_request_roundtrip() {
+        let (c, cfg) = tiny_coordinator();
+        let toks: Vec<u32> = (0..cfg.seq as u32).collect();
+        let reply = c.infer_blocking(ModelInput::Tokens(toks), EngineKind::Secure);
+        assert_eq!(reply.logits.len(), cfg.num_labels);
+        assert!(reply.comm_bytes > 0);
+        assert!(reply.latency_s > 0.0);
+        assert_eq!(c.metrics_secure.summary().count, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn batched_requests_all_answered() {
+        let (c, cfg) = tiny_coordinator();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let n = 6;
+        for i in 0..n {
+            let toks: Vec<u32> =
+                (0..cfg.seq as u32).map(|j| (i + j) % cfg.vocab as u32).collect();
+            c.submit(ModelInput::Tokens(toks), EngineKind::Secure, tx.clone());
+        }
+        let mut got = std::collections::HashSet::new();
+        for _ in 0..n {
+            let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            got.insert(r.id);
+        }
+        assert_eq!(got.len(), n as usize);
+        assert_eq!(c.metrics_secure.summary().count, n as usize);
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_clean_with_empty_queue() {
+        let (c, _) = tiny_coordinator();
+        c.shutdown();
+    }
+}

@@ -1,0 +1,80 @@
+//! Serving metrics: latency percentiles + throughput.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Metrics {
+    latencies_s: Mutex<Vec<f64>>,
+    started: Instant,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSummary {
+    pub count: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub max_s: f64,
+    pub throughput_rps: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { latencies_s: Mutex::new(Vec::new()), started: Instant::now() }
+    }
+
+    pub fn observe(&self, latency_s: f64) {
+        self.latencies_s.lock().unwrap().push(latency_s);
+    }
+
+    pub fn summary(&self) -> MetricsSummary {
+        let mut v = self.latencies_s.lock().unwrap().clone();
+        if v.is_empty() {
+            return MetricsSummary::default();
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let count = v.len();
+        let pct = |p: f64| v[((count as f64 * p) as usize).min(count - 1)];
+        MetricsSummary {
+            count,
+            mean_s: v.iter().sum::<f64>() / count as f64,
+            p50_s: pct(0.50),
+            p95_s: pct(0.95),
+            max_s: *v.last().unwrap(),
+            throughput_rps: count as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_math() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe(i as f64 / 100.0);
+        }
+        let s = m.summary();
+        assert_eq!(s.count, 100);
+        assert!((s.mean_s - 0.505).abs() < 1e-9);
+        assert!((s.p50_s - 0.51).abs() < 1e-9);
+        assert!((s.p95_s - 0.96).abs() < 1e-9);
+        assert!((s.max_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = Metrics::new().summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean_s, 0.0);
+    }
+}

@@ -1,0 +1,177 @@
+//! A minimal TCP front end for the coordinator (std::net — the offline
+//! image has no async runtime; one thread per connection is plenty for a
+//! reference server).
+//!
+//! Line protocol, one request per line:
+//!   `secure <tok> <tok> …`   → `ok <id> <logit> <logit> … latency=<s> comm=<bytes>`
+//!   `plain  <tok> <tok> …`   → same, via the PJRT artifact
+//!   `stats`                  → one line of serving metrics
+//!   `quit`                   → closes the connection
+
+use crate::coordinator::batcher::{Coordinator, EngineKind};
+use crate::nn::model::ModelInput;
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+pub struct TcpServer {
+    pub coordinator: Arc<Coordinator>,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl TcpServer {
+    /// Serve forever (one thread per connection).
+    pub fn serve(&self, addr: &str) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        eprintln!("secformer coordinator listening on {addr}");
+        for stream in listener.incoming() {
+            let stream = stream?;
+            let coord = self.coordinator.clone();
+            let (seq, vocab) = (self.seq, self.vocab);
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, &coord, seq, vocab);
+            });
+        }
+        Ok(())
+    }
+}
+
+pub fn handle_conn(
+    stream: TcpStream,
+    coord: &Coordinator,
+    seq: usize,
+    vocab: usize,
+) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let reply = handle_line(&line, coord, seq, vocab);
+        match reply {
+            Some(text) => writeln!(writer, "{text}")?,
+            None => break,
+        }
+    }
+    eprintln!("connection {peer} closed");
+    Ok(())
+}
+
+/// Parse + dispatch one protocol line. `None` = close connection.
+pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) -> Option<String> {
+    let mut parts = line.split_whitespace();
+    let cmd = parts.next().unwrap_or("");
+    match cmd {
+        "quit" => None,
+        "" => Some(String::new()),
+        "stats" => {
+            let s = coord.metrics_secure.summary();
+            let p = coord.metrics_plain.summary();
+            Some(format!(
+                "secure: n={} mean={:.3}s p95={:.3}s rps={:.2} | plain: n={} mean={:.4}s p95={:.4}s",
+                s.count, s.mean_s, s.p95_s, s.throughput_rps, p.count, p.mean_s, p.p95_s
+            ))
+        }
+        "secure" | "plain" => {
+            let toks: Result<Vec<u32>, _> = parts.map(|t| t.parse::<u32>()).collect();
+            let toks = match toks {
+                Ok(t) => t,
+                Err(e) => return Some(format!("err bad token: {e}")),
+            };
+            if toks.len() != seq {
+                return Some(format!("err expected {seq} tokens, got {}", toks.len()));
+            }
+            if let Some(&bad) = toks.iter().find(|&&t| t as usize >= vocab) {
+                return Some(format!("err token {bad} out of vocab {vocab}"));
+            }
+            let engine = if cmd == "secure" { EngineKind::Secure } else { EngineKind::Plaintext };
+            let r = coord.infer_blocking(ModelInput::Tokens(toks), engine);
+            let logits = r
+                .logits
+                .iter()
+                .map(|v| format!("{v:.6}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            Some(format!(
+                "ok {} {} latency={:.4}s comm={}",
+                r.id, logits, r.latency_s, r.comm_bytes
+            ))
+        }
+        other => Some(format!("err unknown command '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::nn::config::{Framework, ModelConfig};
+    use crate::nn::weights::random_weights;
+
+    fn coord() -> (Coordinator, ModelConfig) {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let w = random_weights(&cfg, 13);
+        (
+            Coordinator::start(cfg.clone(), w, None, BatcherConfig::default()).unwrap(),
+            cfg,
+        )
+    }
+
+    #[test]
+    fn protocol_secure_request() {
+        let (c, cfg) = coord();
+        let line = format!(
+            "secure {}",
+            (0..cfg.seq).map(|i| i.to_string()).collect::<Vec<_>>().join(" ")
+        );
+        let reply = handle_line(&line, &c, cfg.seq, cfg.vocab).unwrap();
+        assert!(reply.starts_with("ok "), "{reply}");
+        assert!(reply.contains("comm="));
+        c.shutdown();
+    }
+
+    #[test]
+    fn protocol_validation() {
+        let (c, cfg) = coord();
+        assert!(handle_line("secure 1 2", &c, cfg.seq, cfg.vocab)
+            .unwrap()
+            .starts_with("err expected"));
+        assert!(handle_line("secure 1 2 3 4 5 6 7 999", &c, cfg.seq, cfg.vocab)
+            .unwrap()
+            .starts_with("err token"));
+        assert!(handle_line("bogus", &c, cfg.seq, cfg.vocab)
+            .unwrap()
+            .starts_with("err unknown"));
+        assert!(handle_line("quit", &c, cfg.seq, cfg.vocab).is_none());
+        let stats = handle_line("stats", &c, cfg.seq, cfg.vocab).unwrap();
+        assert!(stats.contains("secure:"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        let (c, cfg) = coord();
+        let coord = Arc::new(c);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let c2 = coord.clone();
+        let (seq, vocab) = (cfg.seq, cfg.vocab);
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let _ = handle_conn(stream, &c2, seq, vocab);
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        let line = format!(
+            "secure {}\n",
+            (0..cfg.seq).map(|i| i.to_string()).collect::<Vec<_>>().join(" ")
+        );
+        client.write_all(line.as_bytes()).unwrap();
+        let mut reader = BufReader::new(client.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("ok "), "{reply}");
+        client.write_all(b"quit\n").unwrap();
+    }
+}

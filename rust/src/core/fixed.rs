@@ -1,0 +1,108 @@
+//! Fixed-point encoding of reals into the ring Z_2^64.
+//!
+//! A real `v` is encoded as `round(v * 2^FRAC_BITS)` interpreted as a two's
+//! complement `i64`, then bit-cast to `u64`. This matches CrypTen's encoder
+//! (`crypten.mpc` uses L = 2^64, 16-bit precision), which the paper builds on.
+
+/// Number of fractional bits (CrypTen default: 16).
+pub const FRAC_BITS: u32 = 16;
+/// 2^FRAC_BITS as f64.
+pub const SCALE: f64 = (1u64 << FRAC_BITS) as f64;
+
+/// Encode a real into the ring.
+#[inline]
+pub fn encode(v: f64) -> u64 {
+    ((v * SCALE).round() as i64) as u64
+}
+
+/// Decode a ring element back to a real (interpreting it as signed).
+#[inline]
+pub fn decode(x: u64) -> f64 {
+    (x as i64) as f64 / SCALE
+}
+
+/// Encode a slice of reals.
+pub fn encode_vec(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|&x| encode(x)).collect()
+}
+
+/// Decode a slice of ring elements.
+pub fn decode_vec(x: &[u64]) -> Vec<f64> {
+    x.iter().map(|&v| decode(v)).collect()
+}
+
+/// Encode at an arbitrary scale (used for double-scale intermediates).
+#[inline]
+pub fn encode_scaled(v: f64, frac_bits: u32) -> u64 {
+    ((v * (1u64 << frac_bits) as f64).round() as i64) as u64
+}
+
+/// SecureML-style local truncation of a *public* ring value by `f` bits.
+///
+/// For secret shares the two parties use [`trunc_share`] instead.
+#[inline]
+pub fn trunc_public(x: u64, f: u32) -> u64 {
+    (((x as i64) >> f) as i64) as u64
+}
+
+/// SecureML local truncation of one additive share by `f` bits.
+///
+/// Party 0 computes `floor(s0 / 2^f)`; party 1 computes
+/// `-floor(-s1 / 2^f)` (all mod 2^64). The reconstructed value equals
+/// `x / 2^f` up to ±1 LSB with overwhelming probability provided
+/// `|x| << 2^62` — the standard probabilistic truncation used by CrypTen.
+#[inline]
+pub fn trunc_share(share: u64, party: u8, f: u32) -> u64 {
+    if party == 0 {
+        share >> f
+    } else {
+        (share.wrapping_neg() >> f).wrapping_neg()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        for &v in &[0.0, 1.0, -1.0, 3.14159, -2.71828, 1e3, -1e3, 1.5e-4] {
+            let e = encode(v);
+            assert!((decode(e) - v).abs() < 1.0 / SCALE, "v={v}");
+        }
+    }
+
+    #[test]
+    fn negative_encoding_is_twos_complement() {
+        let e = encode(-1.0);
+        assert_eq!(e, (-(1i64 << FRAC_BITS)) as u64);
+        assert_eq!(decode(e), -1.0);
+    }
+
+    #[test]
+    fn trunc_share_reconstructs() {
+        // x = a*b at double scale; shares split randomly; local trunc must
+        // reconstruct x/2^16 within 1 LSB.
+        let mut rng = crate::core::rng::Xoshiro::seed_from(7);
+        for _ in 0..1000 {
+            let v = (rng.next_u64() % 2_000_000) as f64 / 1000.0 - 1000.0;
+            let x = ((v * SCALE * SCALE) as i64) as u64; // double-scale value
+            let s0 = rng.next_u64();
+            let s1 = x.wrapping_sub(s0);
+            let t0 = trunc_share(s0, 0, FRAC_BITS);
+            let t1 = trunc_share(s1, 1, FRAC_BITS);
+            let rec = decode(t0.wrapping_add(t1));
+            assert!(
+                (rec - v).abs() < 2.0 / SCALE + 1e-9,
+                "v={v} rec={rec}"
+            );
+        }
+    }
+
+    #[test]
+    fn trunc_public_signed() {
+        assert_eq!(trunc_public(encode(2.0).wrapping_mul(1), 1), encode(1.0));
+        let m = (encode(-4.0) as i64) as u64;
+        assert_eq!(decode(trunc_public(m, 2)), -1.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Core substrate: the Z_2^64 ring, fixed-point encoding, tensors and RNG.
+//!
+//! Everything the SMPC layer computes lives in the ring of integers modulo
+//! 2^64 ("the ring"), represented as `u64` with wrapping arithmetic. Real
+//! numbers are embedded with a fixed-point encoding (16 fractional bits, the
+//! CrypTen default).
+
+pub mod fixed;
+pub mod rng;
+pub mod tensor;
+
+pub use fixed::{decode, decode_vec, encode, encode_vec, FRAC_BITS, SCALE};
+pub use rng::{Prf, Xoshiro};
+pub use tensor::RingTensor;

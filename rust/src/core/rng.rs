@@ -1,0 +1,235 @@
+//! Randomness substrate.
+//!
+//! Two generators:
+//! * [`Xoshiro`] — xoshiro256++, a fast statistical PRNG used for test
+//!   inputs and workload generation.
+//! * [`Prf`] — an AES-128-CTR pseudorandom function used for *correlated
+//!   randomness*: the dealer `T` shares a PRF key with each computing
+//!   server, so `S0` can derive its Beaver shares locally while `T` derives
+//!   the same stream and only ships corrections to `S1` (the classic
+//!   dealer-PRF optimization; see DESIGN.md "Protocol fidelity notes").
+
+use aes::cipher::{generic_array::GenericArray, BlockEncrypt, KeyInit};
+use aes::Aes128;
+use sha2::{Digest, Sha256};
+
+/// A deterministic stream of ring elements. Implemented by the
+/// cryptographic [`Prf`] (dealer mode) and the statistical [`Xoshiro`]
+/// (benchmark/TFP mode — CrypTen's trusted-first-party provider likewise
+/// uses a non-cryptographic generator).
+pub trait RandStream: Send {
+    fn stream_fill(&mut self, out: &mut [u64]);
+
+    fn stream_vec(&mut self, n: usize) -> Vec<u64> {
+        let mut v = vec![0u64; n];
+        self.stream_fill(&mut v);
+        v
+    }
+}
+
+/// xoshiro256++ — public-domain PRNG (Blackman & Vigna).
+#[derive(Clone, Debug)]
+pub struct Xoshiro {
+    s: [u64; 4],
+}
+
+impl Xoshiro {
+    /// Seed from a single u64 via splitmix64 expansion.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Xoshiro { s: [next(), next(), next(), next()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn fill_u64(&mut self, out: &mut [u64]) {
+        for v in out.iter_mut() {
+            *v = self.next_u64();
+        }
+    }
+}
+
+impl RandStream for Xoshiro {
+    fn stream_fill(&mut self, out: &mut [u64]) {
+        self.fill_u64(out);
+    }
+}
+
+impl RandStream for Prf {
+    fn stream_fill(&mut self, out: &mut [u64]) {
+        self.fill(out);
+    }
+}
+
+/// AES-128-CTR pseudorandom function with a monotone counter.
+///
+/// Deterministic: two holders of the same key (e.g. `S0` and `T`) that
+/// consume the stream in the same order derive identical values — the
+/// synchronization invariant the dealer relies on.
+pub struct Prf {
+    cipher: Aes128,
+    counter: u128,
+    /// Buffered block (two u64 lanes per AES block).
+    buf: [u64; 2],
+    buf_len: usize,
+}
+
+impl Prf {
+    /// Derive a PRF from an arbitrary label (SHA-256 → AES key).
+    pub fn from_label(label: &str) -> Self {
+        let digest = Sha256::digest(label.as_bytes());
+        let mut key = [0u8; 16];
+        key.copy_from_slice(&digest[..16]);
+        Self::from_key(key)
+    }
+
+    pub fn from_key(key: [u8; 16]) -> Self {
+        Prf {
+            cipher: Aes128::new(GenericArray::from_slice(&key)),
+            counter: 0,
+            buf: [0; 2],
+            buf_len: 0,
+        }
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        let mut block = GenericArray::clone_from_slice(&self.counter.to_le_bytes());
+        self.counter += 1;
+        self.cipher.encrypt_block(&mut block);
+        self.buf[0] = u64::from_le_bytes(block[0..8].try_into().unwrap());
+        self.buf[1] = u64::from_le_bytes(block[8..16].try_into().unwrap());
+        self.buf_len = 2;
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        if self.buf_len == 0 {
+            self.refill();
+        }
+        self.buf_len -= 1;
+        self.buf[self.buf_len]
+    }
+
+    pub fn next_vec(&mut self, n: usize) -> Vec<u64> {
+        let mut v = vec![0u64; n];
+        self.fill(&mut v);
+        v
+    }
+
+    /// Bulk generation: encrypts counter blocks in batches of 8 (gives the
+    /// backend AES-NI pipelining room) — ~6× the one-block-at-a-time rate.
+    /// The hot path of the offline phase (§Perf in EXPERIMENTS.md).
+    pub fn fill(&mut self, out: &mut [u64]) {
+        const BATCH: usize = 8;
+        let mut i = 0;
+        // Drain any buffered lanes first to keep the stream identical to
+        // the scalar path.
+        while i < out.len() && self.buf_len > 0 {
+            self.buf_len -= 1;
+            out[i] = self.buf[self.buf_len];
+            i += 1;
+        }
+        let mut blocks = [aes::Block::default(); BATCH];
+        while i + 2 * BATCH <= out.len() {
+            for b in blocks.iter_mut() {
+                b.copy_from_slice(&self.counter.to_le_bytes());
+                self.counter += 1;
+            }
+            self.cipher.encrypt_blocks(&mut blocks);
+            for b in &blocks {
+                out[i] = u64::from_le_bytes(b[8..16].try_into().unwrap());
+                out[i + 1] = u64::from_le_bytes(b[0..8].try_into().unwrap());
+                i += 2;
+            }
+        }
+        while i < out.len() {
+            out[i] = self.next_u64();
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xoshiro_is_deterministic_and_varied() {
+        let mut a = Xoshiro::seed_from(1);
+        let mut b = Xoshiro::seed_from(1);
+        let va: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_eq!(va, vb);
+        let distinct: std::collections::HashSet<_> = va.iter().collect();
+        assert!(distinct.len() > 12);
+    }
+
+    #[test]
+    fn xoshiro_uniform_range() {
+        let mut r = Xoshiro::seed_from(9);
+        for _ in 0..1000 {
+            let v = r.uniform(-3.0, 5.0);
+            assert!((-3.0..5.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn prf_same_label_same_stream() {
+        let mut a = Prf::from_label("pair:S0T");
+        let mut b = Prf::from_label("pair:S0T");
+        assert_eq!(a.next_vec(32), b.next_vec(32));
+        let mut c = Prf::from_label("pair:S1T");
+        assert_ne!(a.next_vec(8), c.next_vec(8));
+    }
+
+    #[test]
+    fn prf_stream_is_balanced() {
+        // Crude sanity: bit balance of the AES-CTR stream.
+        let mut p = Prf::from_label("balance");
+        let ones: u32 = p.next_vec(1024).iter().map(|v| v.count_ones()).sum();
+        let total = 1024 * 64;
+        let frac = ones as f64 / total as f64;
+        assert!((frac - 0.5).abs() < 0.02, "bit fraction {frac}");
+    }
+}

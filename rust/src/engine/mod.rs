@@ -1,0 +1,292 @@
+//! The SMPC engine (Fig 2): wires the two computing servers `S0`, `S1` and
+//! the assistant server `T` together and runs secure inferences end to end.
+//!
+//! Parties run as OS threads connected by instrumented channel transports.
+//! The offline phase runs in `dealer` mode (T serves corrections, traffic
+//! tracked separately) or `seeded` mode (CrypTen-TFP analog — both parties
+//! derive correlated randomness locally; identical online behaviour, used
+//! by benchmarks).
+
+use crate::core::fixed::encode_vec;
+use crate::core::rng::Xoshiro;
+use crate::net::stats::{NetModel, StatsSnapshot};
+use crate::net::transport::channel_pair;
+use crate::nn::config::ModelConfig;
+use crate::nn::model::{bert_forward, InputShare, ModelInput};
+use crate::nn::weights::{share_weights, ShareMap, WeightMap};
+use crate::proto::ctx::PartyCtx;
+use crate::sharing::dealer::{DealerServer, Party0Provider, Party1Provider};
+use crate::sharing::provider::FastSeededProvider;
+use crate::sharing::share;
+use std::time::Instant;
+
+/// How correlated randomness is provisioned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OfflineMode {
+    /// Full 3-server topology: T deals corrections to S1 at runtime.
+    Dealer,
+    /// Both parties derive locally from shared seeds (benchmark mode).
+    Seeded,
+}
+
+/// Result of one secure inference.
+#[derive(Clone, Debug)]
+pub struct InferenceResult {
+    /// Reconstructed, decoded logits.
+    pub logits: Vec<f64>,
+    /// Party-0 online stats (rounds/bytes/nanos per category).
+    pub stats: StatsSnapshot,
+    /// End-to-end wall-clock (compute + in-process channel time).
+    pub wall_seconds: f64,
+    /// Simulated wall-clock on the paper's LAN (counted rounds/bytes
+    /// through the network model) plus measured compute.
+    pub simulated_lan_seconds: f64,
+}
+
+impl InferenceResult {
+    /// Per-category (GeLU, Softmax, LayerNorm, Others) breakdown rows:
+    /// (name, seconds, comm GB) — the Table 3 row format.
+    pub fn breakdown(&self) -> Vec<(String, f64, f64)> {
+        use crate::net::stats::OpCategory;
+        OpCategory::ALL
+            .iter()
+            .map(|&c| {
+                let i = c as usize;
+                (
+                    c.name().to_string(),
+                    self.stats.nanos[i] as f64 * 1e-9,
+                    // Both parties send symmetric volumes; report total.
+                    self.stats.bytes[i] as f64 * 2.0 / 1e9,
+                )
+            })
+            .collect()
+    }
+
+    pub fn total_comm_gb(&self) -> f64 {
+        self.stats.total_bytes() as f64 * 2.0 / 1e9
+    }
+}
+
+/// A ready-to-serve secure model: plaintext weights shared once at
+/// construction (step ① of Fig 2), then any number of inferences.
+pub struct SecureModel {
+    pub cfg: ModelConfig,
+    shares0: ShareMap,
+    shares1: ShareMap,
+    pub offline: OfflineMode,
+    session_counter: u64,
+    session_label: String,
+}
+
+impl SecureModel {
+    pub fn new(cfg: ModelConfig, weights: &WeightMap, offline: OfflineMode) -> Self {
+        let mut rng = Xoshiro::seed_from(0x5EC0);
+        let (shares0, shares1) = share_weights(weights, &mut rng);
+        SecureModel {
+            cfg,
+            shares0,
+            shares1,
+            offline,
+            session_counter: 0,
+            session_label: format!("secformer-{:x}", std::process::id()),
+        }
+    }
+
+    /// Run one secure inference (steps ②–⑤ of Fig 2).
+    pub fn infer(&mut self, input: &ModelInput) -> InferenceResult {
+        self.session_counter += 1;
+        let session = format!("{}-{}", self.session_label, self.session_counter);
+        let cfg = self.cfg.clone();
+
+        // Client side: validate, encode + share the input.
+        if let ModelInput::Hidden(h) = input {
+            assert_eq!(
+                h.len(),
+                cfg.seq * cfg.hidden,
+                "hidden input must be seq×hidden"
+            );
+        }
+        let mut rng = Xoshiro::seed_from(0xC11E & self.session_counter);
+        let (in0, in1) = match input {
+            ModelInput::Hidden(h) => {
+                let (a, b) = share(&encode_vec(h), &mut rng);
+                (InputShare::Hidden(a), InputShare::Hidden(b))
+            }
+            ModelInput::Tokens(toks) => {
+                assert_eq!(toks.len(), cfg.seq);
+                let mut onehot = vec![0.0f64; cfg.seq * cfg.vocab];
+                for (i, &t) in toks.iter().enumerate() {
+                    onehot[i * cfg.vocab + t as usize] = 1.0;
+                }
+                let (a, b) = share(&encode_vec(&onehot), &mut rng);
+                (InputShare::OneHot(a), InputShare::OneHot(b))
+            }
+        };
+
+        let (peer0, peer1) = channel_pair();
+        let t0 = Instant::now();
+
+        let (out0, out1, stats) = std::thread::scope(|scope| {
+            // Assistant server T (dealer mode only).
+            let (dealer_link, dealer_handle) = match self.offline {
+                OfflineMode::Dealer => {
+                    let (s1_end, t_end) = channel_pair();
+                    let sess = session.clone();
+                    let h = scope.spawn(move || {
+                        let mut d = DealerServer::new(&sess, Box::new(t_end));
+                        d.run();
+                    });
+                    (Some(s1_end), Some(h))
+                }
+                OfflineMode::Seeded => (None, None),
+            };
+
+            let w0 = &self.shares0;
+            let w1 = &self.shares1;
+            let cfg0 = cfg.clone();
+            let cfg1 = cfg.clone();
+            let sess0 = session.clone();
+            let sess1 = session.clone();
+            let offline = self.offline;
+
+            let h0 = scope.spawn(move || {
+                let prov: Box<dyn crate::sharing::provider::Provider> = match offline {
+                    OfflineMode::Dealer => Box::new(Party0Provider::new(&sess0)),
+                    OfflineMode::Seeded => Box::new(FastSeededProvider::new_fast(&sess0, 0)),
+                };
+                let mut ctx = PartyCtx::new(0, Box::new(peer0), prov, 0xAA);
+                let stats = ctx.stats.clone();
+                let out = bert_forward(&mut ctx, &cfg0, w0, &in0);
+                (out, stats.snapshot())
+            });
+            let h1 = scope.spawn(move || {
+                let stats_handle = crate::net::stats::CommStats::new_handle();
+                let prov: Box<dyn crate::sharing::provider::Provider> = match offline {
+                    OfflineMode::Dealer => Box::new(Party1Provider::new(
+                        &sess1,
+                        Box::new(dealer_link.expect("dealer link")),
+                        Some(stats_handle.clone()),
+                    )),
+                    OfflineMode::Seeded => Box::new(FastSeededProvider::new_fast(&sess1, 1)),
+                };
+                let mut ctx = PartyCtx::new(1, Box::new(peer1), prov, 0xBB);
+                ctx.stats = stats_handle;
+                let stats = ctx.stats.clone();
+                let out = bert_forward(&mut ctx, &cfg1, w1, &in1);
+                // Dropping ctx (and with it Party1Provider) shuts down T.
+                drop(ctx);
+                (out, stats.snapshot())
+            });
+            let (o0, s0) = h0.join().expect("party 0 panicked");
+            let (o1, s1) = h1.join().expect("party 1 panicked");
+            if let Some(h) = dealer_handle {
+                h.join().expect("dealer panicked");
+            }
+            // Online stats are symmetric (party 0's view); the offline
+            // phase runs on the S1↔T link only.
+            let mut merged = s0;
+            merged.offline_bytes = s1.offline_bytes;
+            (o0, o1, merged)
+        });
+
+        let wall = t0.elapsed().as_secs_f64();
+        let rec = crate::sharing::reconstruct(&out0, &out1);
+        let logits = crate::core::fixed::decode_vec(&rec);
+        let lan = NetModel::paper_lan();
+        let compute_s: f64 = stats.nanos.iter().sum::<u64>() as f64 * 1e-9;
+        let simulated =
+            compute_s + lan.simulated_seconds(stats.total_rounds(), stats.total_bytes() * 2);
+        InferenceResult { logits, stats, wall_seconds: wall, simulated_lan_seconds: simulated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config::Framework;
+    use crate::nn::model::ref_forward;
+    use crate::nn::weights::random_weights;
+
+    fn hidden_input(cfg: &ModelConfig, seed: u64) -> ModelInput {
+        let mut rng = Xoshiro::seed_from(seed);
+        ModelInput::Hidden(
+            (0..cfg.seq * cfg.hidden).map(|_| rng.normal() * 0.5).collect(),
+        )
+    }
+
+    #[test]
+    fn secure_secformer_matches_plaintext_reference() {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let w = random_weights(&cfg, 3);
+        let input = hidden_input(&cfg, 4);
+        let mut model = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+        let got = model.infer(&input);
+        let expect = ref_forward(&cfg, &w, &input);
+        assert_eq!(got.logits.len(), cfg.num_labels);
+        for i in 0..cfg.num_labels {
+            assert!(
+                (got.logits[i] - expect[i]).abs() < 0.15,
+                "logit {i}: secure={} ref={}",
+                got.logits[i],
+                expect[i]
+            );
+        }
+        // Breakdown must be populated for all four categories.
+        assert!(got.stats.bytes.iter().all(|&b| b > 0), "{:?}", got.stats);
+    }
+
+    #[test]
+    fn secure_mpcformer_matches_plaintext_reference() {
+        let cfg = ModelConfig::tiny(8, Framework::MpcFormer);
+        let w = random_weights(&cfg, 5);
+        let input = hidden_input(&cfg, 6);
+        let mut model = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+        let got = model.infer(&input);
+        let expect = ref_forward(&cfg, &w, &input);
+        for i in 0..cfg.num_labels {
+            assert!(
+                (got.logits[i] - expect[i]).abs() < 0.15,
+                "logit {i}: secure={} ref={}",
+                got.logits[i],
+                expect[i]
+            );
+        }
+    }
+
+    #[test]
+    fn dealer_mode_agrees_with_seeded_mode() {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let w = random_weights(&cfg, 7);
+        let input = hidden_input(&cfg, 8);
+        let mut seeded = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+        let mut dealer = SecureModel::new(cfg.clone(), &w, OfflineMode::Dealer);
+        let a = seeded.infer(&input);
+        let b = dealer.infer(&input);
+        for i in 0..cfg.num_labels {
+            assert!((a.logits[i] - b.logits[i]).abs() < 0.05);
+        }
+        // Online volume identical; dealer adds only offline bytes.
+        assert_eq!(a.stats.total_bytes(), b.stats.total_bytes());
+        assert_eq!(a.stats.offline_bytes, 0);
+        assert!(b.stats.offline_bytes > 0);
+    }
+
+    #[test]
+    fn token_input_embeds_securely() {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let w = random_weights(&cfg, 9);
+        let toks: Vec<u32> = (0..cfg.seq as u32).map(|i| i % cfg.vocab as u32).collect();
+        let input = ModelInput::Tokens(toks);
+        let mut model = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+        let got = model.infer(&input);
+        let expect = ref_forward(&cfg, &w, &input);
+        for i in 0..cfg.num_labels {
+            assert!(
+                (got.logits[i] - expect[i]).abs() < 0.2,
+                "logit {i}: secure={} ref={}",
+                got.logits[i],
+                expect[i]
+            );
+        }
+    }
+}

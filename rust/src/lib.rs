@@ -1,0 +1,29 @@
+//! # SecFormer
+//!
+//! A reproduction of *"SecFormer: Fast and Accurate Privacy-Preserving
+//! Inference for Transformer Models via SMPC"* (ACL 2024 Findings) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Rust (this crate)** — the complete SMPC engine (2-of-2 additive
+//!   sharing over Z_2^64), every protocol from the paper plus the CrypTen /
+//!   PUMA / MPCFormer baselines, a secure BERT encoder running over shares,
+//!   and a serving coordinator.
+//! * **JAX/Pallas (python/)** — build-time definition of the SMPC-friendly
+//!   model and its compute kernels, AOT-lowered to HLO text artifacts.
+//! * **PJRT runtime** — loads those artifacts for the plaintext reference
+//!   path; Python is never on the request path.
+//!
+//! Start at [`proto`] for the paper's protocols, [`nn`] for the secure
+//! model, [`engine`] for the 3-party execution fabric, and [`coordinator`]
+//! for serving.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod engine;
+pub mod net;
+pub mod nn;
+pub mod proto;
+pub mod runtime;
+pub mod sharing;

@@ -1,0 +1,319 @@
+//! `secformer` — CLI for the SecFormer privacy-preserving inference stack.
+//!
+//! Subcommands:
+//!   selftest                 end-to-end check: secure engine vs plaintext
+//!                            reference vs PJRT artifact
+//!   infer [opts]             run one inference (secure and/or plaintext)
+//!   serve [opts]             TCP serving coordinator (line protocol)
+//!   bench <target> [opts]    regenerate a paper table/figure
+//!                            targets: table3 table4 fig1 fig5 fig6 fig7
+//!                                     fig8 fig9 rounds all
+//!
+//! Common options:
+//!   --framework <crypten|puma|mpcformer|secformer>   (default secformer)
+//!   --seq <n>            sequence length for bench shapes (default 32)
+//!   --paper              paper scale (seq=512) for bench table3
+//!   --weights <file>     .swts checkpoint (default: random weights)
+//!   --artifacts <dir>    artifact directory (default: artifacts)
+//!   --config <file>      TOML-subset config file (overrides defaults)
+//!   --port <p>           serve port (default 7878)
+//!   --secure/--plain     engine selection for `infer`
+//!   --tokens "1,2,3"     token input for `infer`
+
+use anyhow::{bail, Context, Result};
+use secformer::bench::harness as bh;
+use secformer::config::Config;
+use secformer::coordinator::{BatcherConfig, Coordinator};
+use secformer::engine::{OfflineMode, SecureModel};
+use secformer::nn::config::{Framework, ModelConfig};
+use secformer::nn::model::{ref_forward, ModelInput};
+use secformer::nn::weights::{load_swts, random_weights, WeightMap};
+use secformer::runtime::artifact::ArtifactManifest;
+use std::collections::BTreeMap;
+
+struct Args {
+    cmd: String,
+    sub: Option<String>,
+    flags: BTreeMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd = String::new();
+    let mut sub = None;
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(stripped.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert(stripped.to_string(), "true".to_string());
+            }
+        } else if cmd.is_empty() {
+            cmd = a.clone();
+        } else if sub.is_none() {
+            sub = Some(a.clone());
+        }
+        i += 1;
+    }
+    Args { cmd, sub, flags }
+}
+
+impl Args {
+    fn flag(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+    fn has(&self, k: &str) -> bool {
+        self.flags.contains_key(k)
+    }
+    fn usize_or(&self, k: &str, d: usize) -> usize {
+        self.flag(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    match args.flag("config") {
+        Some(path) => Config::load(path),
+        None => Ok(Config::default()),
+    }
+}
+
+fn framework_of(args: &Args, cfg: &Config) -> Framework {
+    let name = args
+        .flag("framework")
+        .unwrap_or_else(|| cfg.str_or("model.framework", "secformer"));
+    Framework::parse(name).unwrap_or(Framework::SecFormer)
+}
+
+fn load_weights(args: &Args, cfg: &ModelConfig) -> Result<WeightMap> {
+    match args.flag("weights") {
+        Some(path) => load_swts(path),
+        None => Ok(random_weights(cfg, 0xC0DE)),
+    }
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    println!("secformer selftest");
+    // 1. secure engine vs plaintext reference
+    let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    let w = random_weights(&cfg, 42);
+    let mut rng = secformer::core::rng::Xoshiro::seed_from(7);
+    let hidden: Vec<f64> = (0..cfg.seq * cfg.hidden).map(|_| rng.normal() * 0.5).collect();
+    let input = ModelInput::Hidden(hidden);
+    let mut secure = SecureModel::new(cfg.clone(), &w, OfflineMode::Dealer);
+    let got = secure.infer(&input);
+    let expect = ref_forward(&cfg, &w, &input);
+    let maxerr = got
+        .logits
+        .iter()
+        .zip(&expect)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "  [1/2] secure (3-party, dealer) vs plaintext ref: max |Δlogit| = {maxerr:.4} {}",
+        if maxerr < 0.2 { "OK" } else { "FAIL" }
+    );
+    if maxerr >= 0.2 {
+        bail!("secure engine disagrees with reference");
+    }
+    // 2. PJRT artifact vs plaintext reference
+    let dir = args.flag("artifacts").unwrap_or("artifacts");
+    match ArtifactManifest::load(dir) {
+        Ok(man) => {
+            let meta = man.get("secformer_tiny_hidden")?;
+            let mut acfg = ModelConfig::tiny(meta.seq, Framework::SecFormer);
+            acfg.vocab = meta.vocab;
+            let aw = random_weights(&acfg, 43);
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+            let mut pm =
+                secformer::runtime::executor::PlaintextModel::load(&client, meta, &aw)?;
+            let mut rng = secformer::core::rng::Xoshiro::seed_from(9);
+            let hidden: Vec<f64> =
+                (0..meta.seq * meta.hidden).map(|_| rng.normal() * 0.5).collect();
+            let hf: Vec<f32> = hidden.iter().map(|&v| v as f32).collect();
+            let got = pm.infer_hidden(&hf)?;
+            let expect = ref_forward(&acfg, &aw, &ModelInput::Hidden(hidden));
+            let maxerr = got
+                .iter()
+                .zip(&expect)
+                .map(|(a, b)| (*a as f64 - b).abs())
+                .fold(0.0f64, f64::max);
+            println!(
+                "  [2/2] PJRT artifact vs plaintext ref:            max |Δlogit| = {maxerr:.4} {}",
+                if maxerr < 0.1 { "OK" } else { "FAIL" }
+            );
+            if maxerr >= 0.1 {
+                bail!("artifact disagrees with reference");
+            }
+        }
+        Err(e) => println!("  [2/2] skipped (no artifacts: {e})"),
+    }
+    println!("selftest passed");
+    Ok(())
+}
+
+fn cmd_infer(args: &Args, cfg_file: &Config) -> Result<()> {
+    let fw = framework_of(args, cfg_file);
+    let seq = args.usize_or("seq", 16);
+    let mut cfg = ModelConfig::tiny(seq, fw);
+    cfg.vocab = args.usize_or("vocab", cfg.vocab);
+    let weights = load_weights(args, &cfg)?;
+    let tokens: Vec<u32> = match args.flag("tokens") {
+        Some(t) => t
+            .split(',')
+            .map(|s| s.trim().parse::<u32>().context("bad token"))
+            .collect::<Result<_>>()?,
+        None => (0..seq as u32).map(|i| i % cfg.vocab as u32).collect(),
+    };
+    if tokens.len() != seq {
+        bail!("need exactly {seq} tokens");
+    }
+    let input = ModelInput::Tokens(tokens);
+
+    if !args.has("plain") {
+        let mode = if args.has("seeded") { OfflineMode::Seeded } else { OfflineMode::Dealer };
+        let mut secure = SecureModel::new(cfg.clone(), &weights, mode);
+        let r = secure.infer(&input);
+        println!("secure  logits: {:?}", r.logits);
+        println!(
+            "        wall {:.3}s | online comm {} | rounds {} | simulated LAN {:.3}s",
+            r.wall_seconds,
+            secformer::bench::fmt_bytes(r.total_comm_gb() * 1e9),
+            r.stats.total_rounds(),
+            r.simulated_lan_seconds
+        );
+        for (name, secs, gb) in r.breakdown() {
+            println!("        {name:<10} {secs:>8.3}s  {gb:>9.4} GB");
+        }
+    }
+    if !args.has("secure") {
+        let dir = args.flag("artifacts").unwrap_or("artifacts");
+        let man = ArtifactManifest::load(dir)?;
+        let meta = man.get(args.flag("artifact").unwrap_or("secformer_tiny_tokens"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut pm = secformer::runtime::executor::PlaintextModel::load(&client, meta, &weights)?;
+        let toks: Vec<i32> = match &input {
+            ModelInput::Tokens(t) => t.iter().map(|&v| v as i32).collect(),
+            _ => unreachable!(),
+        };
+        let t0 = std::time::Instant::now();
+        let logits = pm.infer_tokens(&toks)?;
+        println!("plain   logits: {logits:?}  ({:.1} ms via PJRT)", t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
+    let fw = framework_of(args, cfg_file);
+    let seq = args.usize_or("seq", 16);
+    let mut cfg = ModelConfig::tiny(seq, fw);
+    cfg.vocab = args.usize_or("vocab", cfg.vocab);
+    let weights = load_weights(args, &cfg)?;
+    let plaintext = match args.flag("artifacts") {
+        Some(dir) => {
+            let man = ArtifactManifest::load(dir)?;
+            let meta = man.get("secformer_tiny_tokens")?.clone();
+            Some((meta, weights.clone()))
+        }
+        None => None,
+    };
+    let batcher = BatcherConfig {
+        max_batch: args.usize_or("max-batch", 8),
+        max_wait: std::time::Duration::from_millis(args.usize_or("max-wait-ms", 5) as u64),
+    };
+    let coordinator =
+        std::sync::Arc::new(Coordinator::start(cfg.clone(), weights, plaintext, batcher)?);
+    let server = secformer::coordinator::server::TcpServer {
+        coordinator,
+        seq: cfg.seq,
+        vocab: cfg.vocab,
+    };
+    let port = args.usize_or("port", 7878);
+    server.serve(&format!("127.0.0.1:{port}"))
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let target = args.sub.clone().unwrap_or_else(|| "all".to_string());
+    let seq = args.usize_or("seq", if args.has("paper") { 512 } else { 32 });
+    let iters = args.usize_or("iters", 3);
+    let fws = Framework::ALL;
+    match target.as_str() {
+        "table3" => {
+            bh::table3(seq, &fws, !args.has("base-only"));
+        }
+        "table4" => {
+            bh::table4(args.usize_or("points", 2000));
+        }
+        "fig1" => {
+            bh::fig1_breakdown(seq);
+        }
+        "fig5" => {
+            bh::fig5_gelu(&[1024, 4096, 16384], iters);
+        }
+        "fig6" => {
+            bh::fig6_layernorm(&[256, 768, 1024], 64, iters);
+        }
+        "fig7" => {
+            bh::fig7_rsqrt(&[1024, 4096, 16384], iters);
+        }
+        "fig8" => {
+            bh::fig8_softmax(&[64, 128, 256], 32, iters);
+        }
+        "fig9" => {
+            bh::fig9_div(&[1024, 4096, 16384], iters);
+        }
+        "rounds" => bh::rounds_table(),
+        "ablations" => {
+            secformer::bench::ablations::ablation_fourier_terms(args.usize_or("points", 1000));
+            secformer::bench::ablations::ablation_goldschmidt_iters(args.usize_or("points", 1000));
+            secformer::bench::ablations::ablation_eta(args.usize_or("points", 1000));
+        }
+        "all" => {
+            bh::rounds_table();
+            bh::table4(1000);
+            bh::fig5_gelu(&[2048], iters);
+            bh::fig6_layernorm(&[768], 32, iters);
+            bh::fig7_rsqrt(&[2048], iters);
+            bh::fig8_softmax(&[128], 16, iters);
+            bh::fig9_div(&[2048], iters);
+            bh::fig1_breakdown(seq.min(64));
+            bh::table3(seq.min(64), &fws, !args.has("base-only"));
+        }
+        other => bail!("unknown bench target '{other}'"),
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let cfg_file = load_config(&args)?;
+    match args.cmd.as_str() {
+        "selftest" => cmd_selftest(&args),
+        "infer" => cmd_infer(&args, &cfg_file),
+        "serve" => cmd_serve(&args, &cfg_file),
+        "bench" => cmd_bench(&args),
+        "" | "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' — try `secformer help`"),
+    }
+}
+
+const HELP: &str = "\
+secformer — privacy-preserving Transformer inference (SecFormer, ACL 2024)
+
+USAGE:
+  secformer selftest [--artifacts DIR]
+  secformer infer  [--framework F] [--weights W.swts] [--tokens \"1,2,…\"]
+                   [--secure|--plain] [--artifacts DIR] [--seeded]
+  secformer serve  [--port 7878] [--weights W.swts] [--artifacts DIR]
+                   [--max-batch 8] [--max-wait-ms 5]
+  secformer bench  <table3|table4|fig1|fig5|fig6|fig7|fig8|fig9|rounds|ablations|all>
+                   [--seq N] [--paper] [--iters K] [--base-only]
+";

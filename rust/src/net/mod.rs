@@ -1,0 +1,14 @@
+//! Party-to-party transport with exact communication accounting.
+//!
+//! The paper's testbed is three V100 servers on a 10 GB/s LAN; SMPC cost is
+//! dominated by *communication rounds* and *communication volume*, both of
+//! which are machine-independent and counted exactly here. The in-process
+//! [`ChannelTransport`] wires party threads through `mpsc` channels; the
+//! [`NetModel`] converts counted rounds/bytes into simulated wall-clock for
+//! any latency/bandwidth setting (see DESIGN.md "Environment substitutions").
+
+pub mod stats;
+pub mod transport;
+
+pub use stats::{CommStats, NetModel, OpCategory, StatsHandle};
+pub use transport::{channel_pair, ChannelTransport, Transport};

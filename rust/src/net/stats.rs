@@ -1,0 +1,269 @@
+//! Communication and timing statistics, broken down by operator category.
+//!
+//! Table 3 and Fig 1(a) of the paper report per-component (GeLU / Softmax /
+//! LayerNorm / Others) time and communication volume; every protocol call in
+//! this codebase runs under a category set on the [`StatsHandle`] so those
+//! tables can be regenerated exactly.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+
+/// Operator categories used by the paper's breakdowns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum OpCategory {
+    Gelu = 0,
+    Softmax = 1,
+    LayerNorm = 2,
+    Others = 3,
+}
+
+impl OpCategory {
+    pub const ALL: [OpCategory; 4] =
+        [OpCategory::Gelu, OpCategory::Softmax, OpCategory::LayerNorm, OpCategory::Others];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpCategory::Gelu => "GeLU",
+            OpCategory::Softmax => "Softmax",
+            OpCategory::LayerNorm => "LayerNorm",
+            OpCategory::Others => "Others",
+        }
+    }
+}
+
+#[derive(Default)]
+struct CatCounters {
+    rounds: AtomicU64,
+    bytes: AtomicU64,
+    /// Online wall-clock nanoseconds attributed to this category.
+    nanos: AtomicU64,
+}
+
+/// Per-party communication statistics.
+///
+/// `rounds` counts *protocol communication rounds* (one synchronized
+/// exchange); `bytes` counts payload bytes this party sent (online phase).
+/// Offline (dealer) traffic is tracked separately and never mixed into the
+/// online numbers, matching how the paper accounts its protocols.
+#[derive(Default)]
+pub struct CommStats {
+    cats: [CatCounters; 4],
+    current: AtomicU8,
+    offline_bytes: AtomicU64,
+    offline_msgs: AtomicU64,
+}
+
+/// Shared handle to a party's stats.
+pub type StatsHandle = Arc<CommStats>;
+
+impl CommStats {
+    pub fn new_handle() -> StatsHandle {
+        Arc::new(CommStats::default())
+    }
+
+    pub fn set_category(&self, cat: OpCategory) {
+        self.current.store(cat as u8, Ordering::Relaxed);
+    }
+
+    pub fn current_category(&self) -> OpCategory {
+        match self.current.load(Ordering::Relaxed) {
+            0 => OpCategory::Gelu,
+            1 => OpCategory::Softmax,
+            2 => OpCategory::LayerNorm,
+            _ => OpCategory::Others,
+        }
+    }
+
+    #[inline]
+    fn cur(&self) -> &CatCounters {
+        &self.cats[self.current.load(Ordering::Relaxed) as usize]
+    }
+
+    #[inline]
+    pub fn record_round(&self, bytes_sent: u64) {
+        let c = self.cur();
+        c.rounds.fetch_add(1, Ordering::Relaxed);
+        c.bytes.fetch_add(bytes_sent, Ordering::Relaxed);
+    }
+
+    /// Record extra bytes in the current round (parallel sub-messages that
+    /// share a round, e.g. the two ANDs of a Kogge–Stone level).
+    #[inline]
+    pub fn record_bytes(&self, bytes_sent: u64) {
+        self.cur().bytes.fetch_add(bytes_sent, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_nanos(&self, nanos: u64) {
+        self.cur().nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_offline(&self, bytes: u64) {
+        self.offline_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.offline_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn rounds(&self, cat: OpCategory) -> u64 {
+        self.cats[cat as usize].rounds.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes(&self, cat: OpCategory) -> u64 {
+        self.cats[cat as usize].bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn nanos(&self, cat: OpCategory) -> u64 {
+        self.cats[cat as usize].nanos.load(Ordering::Relaxed)
+    }
+
+    pub fn total_rounds(&self) -> u64 {
+        OpCategory::ALL.iter().map(|&c| self.rounds(c)).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        OpCategory::ALL.iter().map(|&c| self.bytes(c)).sum()
+    }
+
+    pub fn offline_bytes(&self) -> u64 {
+        self.offline_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        for c in &self.cats {
+            c.rounds.store(0, Ordering::Relaxed);
+            c.bytes.store(0, Ordering::Relaxed);
+            c.nanos.store(0, Ordering::Relaxed);
+        }
+        self.offline_bytes.store(0, Ordering::Relaxed);
+        self.offline_msgs.store(0, Ordering::Relaxed);
+    }
+
+    /// Snapshot all counters (rounds, bytes, nanos) per category.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let mut s = StatsSnapshot::default();
+        for (i, c) in OpCategory::ALL.iter().enumerate() {
+            s.rounds[i] = self.rounds(*c);
+            s.bytes[i] = self.bytes(*c);
+            s.nanos[i] = self.nanos(*c);
+        }
+        s.offline_bytes = self.offline_bytes();
+        s
+    }
+}
+
+/// A point-in-time copy of the per-category counters.
+#[derive(Default, Clone, Debug)]
+pub struct StatsSnapshot {
+    pub rounds: [u64; 4],
+    pub bytes: [u64; 4],
+    pub nanos: [u64; 4],
+    pub offline_bytes: u64,
+}
+
+impl StatsSnapshot {
+    pub fn delta(&self, earlier: &StatsSnapshot) -> StatsSnapshot {
+        let mut d = StatsSnapshot::default();
+        for i in 0..4 {
+            d.rounds[i] = self.rounds[i] - earlier.rounds[i];
+            d.bytes[i] = self.bytes[i] - earlier.bytes[i];
+            d.nanos[i] = self.nanos[i] - earlier.nanos[i];
+        }
+        d.offline_bytes = self.offline_bytes - earlier.offline_bytes;
+        d
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    pub fn total_rounds(&self) -> u64 {
+        self.rounds.iter().sum()
+    }
+}
+
+/// Analytic network model: converts counted rounds and bytes into simulated
+/// wall-clock time for a given link.
+///
+/// `simulated = rounds * rtt + bytes / bandwidth`. The paper's setting is a
+/// 10 GB/s LAN between three servers; `NetModel::paper_lan()` reproduces it.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// One-way message latency in seconds (applied once per round).
+    pub rtt_s: f64,
+    /// Link bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl NetModel {
+    /// The paper's experimental link: 10 GB/s, sub-millisecond LAN latency.
+    pub fn paper_lan() -> Self {
+        NetModel { rtt_s: 0.2e-3, bandwidth_bps: 10e9 }
+    }
+
+    /// A WAN-ish link for sensitivity studies.
+    pub fn wan() -> Self {
+        NetModel { rtt_s: 40e-3, bandwidth_bps: 40e6 }
+    }
+
+    pub fn simulated_seconds(&self, rounds: u64, bytes: u64) -> f64 {
+        rounds as f64 * self.rtt_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn category_accounting() {
+        let s = CommStats::new_handle();
+        s.set_category(OpCategory::Gelu);
+        s.record_round(100);
+        s.record_round(50);
+        s.set_category(OpCategory::Softmax);
+        s.record_round(7);
+        assert_eq!(s.rounds(OpCategory::Gelu), 2);
+        assert_eq!(s.bytes(OpCategory::Gelu), 150);
+        assert_eq!(s.rounds(OpCategory::Softmax), 1);
+        assert_eq!(s.total_bytes(), 157);
+        assert_eq!(s.total_rounds(), 3);
+    }
+
+    #[test]
+    fn offline_is_separate() {
+        let s = CommStats::new_handle();
+        s.set_category(OpCategory::Others);
+        s.record_offline(1000);
+        assert_eq!(s.total_bytes(), 0);
+        assert_eq!(s.offline_bytes(), 1000);
+    }
+
+    #[test]
+    fn snapshot_delta() {
+        let s = CommStats::new_handle();
+        s.set_category(OpCategory::LayerNorm);
+        s.record_round(10);
+        let snap1 = s.snapshot();
+        s.record_round(30);
+        let d = s.snapshot().delta(&snap1);
+        assert_eq!(d.rounds[OpCategory::LayerNorm as usize], 1);
+        assert_eq!(d.bytes[OpCategory::LayerNorm as usize], 30);
+    }
+
+    #[test]
+    fn net_model_math() {
+        let m = NetModel { rtt_s: 0.001, bandwidth_bps: 1e9 };
+        let t = m.simulated_seconds(100, 1_000_000_000);
+        assert!((t - (0.1 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let s = CommStats::new_handle();
+        s.record_round(5);
+        s.reset();
+        assert_eq!(s.total_bytes(), 0);
+        assert_eq!(s.total_rounds(), 0);
+    }
+}

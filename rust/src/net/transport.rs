@@ -1,0 +1,103 @@
+//! Message transports between parties.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// A reliable, ordered, bidirectional message pipe to one peer.
+///
+/// Messages are `Vec<u64>` ring-element buffers — the only payload SMPC
+/// protocols exchange (boolean shares are bit-packed into u64 words).
+pub trait Transport: Send {
+    fn send(&self, data: Vec<u64>);
+    fn recv(&self) -> Vec<u64>;
+}
+
+/// In-process transport over std mpsc channels.
+pub struct ChannelTransport {
+    tx: Sender<Vec<u64>>,
+    rx: Receiver<Vec<u64>>,
+}
+
+impl Transport for ChannelTransport {
+    fn send(&self, data: Vec<u64>) {
+        // A hung-up receiver means the peer already finished (e.g. a
+        // shutdown notice racing its exit) — dropping the message is safe;
+        // a peer that died mid-protocol is caught by the matching recv.
+        let _ = self.tx.send(data);
+    }
+
+    fn recv(&self) -> Vec<u64> {
+        self.rx.recv().expect("peer disconnected")
+    }
+}
+
+/// Create a connected pair of transports (one endpoint per party).
+pub fn channel_pair() -> (ChannelTransport, ChannelTransport) {
+    let (tx_a, rx_b) = channel();
+    let (tx_b, rx_a) = channel();
+    (
+        ChannelTransport { tx: tx_a, rx: rx_a },
+        ChannelTransport { tx: tx_b, rx: rx_b },
+    )
+}
+
+/// A loopback transport that echoes back what was sent — used by unit tests
+/// of round accounting where a real peer is unnecessary.
+pub struct LoopbackTransport {
+    queue: std::sync::Mutex<std::collections::VecDeque<Vec<u64>>>,
+}
+
+impl LoopbackTransport {
+    pub fn new() -> Self {
+        LoopbackTransport { queue: std::sync::Mutex::new(Default::default()) }
+    }
+}
+
+impl Default for LoopbackTransport {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transport for LoopbackTransport {
+    fn send(&self, data: Vec<u64>) {
+        self.queue.lock().unwrap().push_back(data);
+    }
+    fn recv(&self) -> Vec<u64> {
+        self.queue.lock().unwrap().pop_front().expect("loopback empty")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_pair_roundtrip() {
+        let (a, b) = channel_pair();
+        a.send(vec![1, 2, 3]);
+        assert_eq!(b.recv(), vec![1, 2, 3]);
+        b.send(vec![9]);
+        assert_eq!(a.recv(), vec![9]);
+    }
+
+    #[test]
+    fn channel_pair_cross_thread() {
+        let (a, b) = channel_pair();
+        let h = std::thread::spawn(move || {
+            let got = b.recv();
+            b.send(got.iter().map(|v| v + 1).collect());
+        });
+        a.send(vec![10, 20]);
+        assert_eq!(a.recv(), vec![11, 21]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn loopback_fifo() {
+        let t = LoopbackTransport::new();
+        t.send(vec![1]);
+        t.send(vec![2]);
+        assert_eq!(t.recv(), vec![1]);
+        assert_eq!(t.recv(), vec![2]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Model + framework configuration.
+
+/// Which PPI framework's protocol suite to run (Table 2/3 row labels).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Framework {
+    /// CrypTen: exact softmax (max+exp+Newton recip), Taylor GeLU,
+    /// sqrt→reciprocal LayerNorm.
+    Crypten,
+    /// PUMA: exact softmax, segmented-polynomial GeLU, CrypTen LayerNorm.
+    Puma,
+    /// MPCFormer: Quad GeLU, 2Quad softmax with Newton reciprocal.
+    MpcFormer,
+    /// SecFormer: exact GeLU via Π_GeLU (Fourier), Π_2Quad softmax,
+    /// Goldschmidt Π_LayerNorm.
+    SecFormer,
+}
+
+impl Framework {
+    pub const ALL: [Framework; 4] = [
+        Framework::Crypten,
+        Framework::Puma,
+        Framework::MpcFormer,
+        Framework::SecFormer,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Framework::Crypten => "CrypTen",
+            Framework::Puma => "PUMA",
+            Framework::MpcFormer => "MPCFormer",
+            Framework::SecFormer => "SecFormer",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Framework> {
+        match s.to_ascii_lowercase().as_str() {
+            "crypten" => Some(Framework::Crypten),
+            "puma" => Some(Framework::Puma),
+            "mpcformer" => Some(Framework::MpcFormer),
+            "secformer" => Some(Framework::SecFormer),
+            _ => None,
+        }
+    }
+}
+
+/// BERT encoder hyperparameters + protocol constants.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub intermediate: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub num_labels: usize,
+    pub framework: Framework,
+    /// Decoder-style causal attention mask (the paper's §6 future-work
+    /// extension to GPT-family models; masking is public structure).
+    pub causal: bool,
+    /// LayerNorm deflation constant (Appendix G: 2000).
+    pub eta_layernorm: f64,
+    /// Softmax deflation constant (Appendix G: 5000). Must satisfy
+    /// `Σ(x+c)²/η ∈ (0, 1.999)` — see [`ModelConfig::with_adaptive_etas`].
+    pub eta_softmax: f64,
+    /// Goldschmidt iteration counts (Algorithms 2–3).
+    pub rsqrt_iters: usize,
+    pub div_iters: usize,
+}
+
+impl ModelConfig {
+    /// BERT_BASE shape (Appendix G): 12 layers, 768 hidden, 12 heads.
+    pub fn bert_base(seq: usize, framework: Framework) -> Self {
+        ModelConfig {
+            layers: 12,
+            hidden: 768,
+            heads: 12,
+            intermediate: 3072,
+            seq,
+            vocab: 30522,
+            num_labels: 2,
+            framework,
+            causal: false,
+            eta_layernorm: 2000.0,
+            eta_softmax: 5000.0,
+            rsqrt_iters: crate::proto::goldschmidt::RSQRT_GOLD_ITERS,
+            div_iters: crate::proto::goldschmidt::DIV_GOLD_ITERS,
+        }
+        .with_adaptive_etas()
+    }
+
+    /// BERT_LARGE shape: 24 layers, 1024 hidden, 16 heads.
+    pub fn bert_large(seq: usize, framework: Framework) -> Self {
+        ModelConfig {
+            layers: 24,
+            hidden: 1024,
+            heads: 16,
+            intermediate: 4096,
+            seq,
+            vocab: 30522,
+            num_labels: 2,
+            framework,
+            causal: false,
+            eta_layernorm: 2000.0,
+            eta_softmax: 5000.0,
+            rsqrt_iters: crate::proto::goldschmidt::RSQRT_GOLD_ITERS,
+            div_iters: crate::proto::goldschmidt::DIV_GOLD_ITERS,
+        }
+        .with_adaptive_etas()
+    }
+
+    /// A small config for tests and the tiny distilled models.
+    pub fn tiny(seq: usize, framework: Framework) -> Self {
+        ModelConfig {
+            layers: 2,
+            hidden: 64,
+            heads: 4,
+            intermediate: 128,
+            seq,
+            vocab: 64,
+            num_labels: 2,
+            framework,
+            causal: false,
+            eta_layernorm: 2000.0,
+            eta_softmax: 5000.0,
+            rsqrt_iters: crate::proto::goldschmidt::RSQRT_GOLD_ITERS,
+            div_iters: crate::proto::goldschmidt::DIV_GOLD_ITERS,
+        }
+        .with_adaptive_etas()
+    }
+
+    /// Scale the deflation constants to the sequence length / hidden size
+    /// so the deflated operands stay inside the Goldschmidt convergence
+    /// basins. The paper's η = 5000 is calibrated for its 512-token BERT
+    /// runs with centered scores; for other widths we keep the same margin:
+    /// `E[Σ(x+c)²] ≈ seq·(c²+1)` and `Σ(x−x̄)² ≈ hidden·σ²`.
+    pub fn with_adaptive_etas(mut self) -> Self {
+        let c = crate::proto::softmax::QUAD2_SHIFT;
+        let expected_q = self.seq as f64 * (c * c + 2.0);
+        self.eta_softmax = self.eta_softmax.max(expected_q * 1.5);
+        let expected_ssq = self.hidden as f64 * 4.0;
+        self.eta_layernorm = self.eta_layernorm.max(expected_ssq * 1.0);
+        self
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let c = ModelConfig::bert_base(512, Framework::SecFormer);
+        assert_eq!(c.head_dim(), 64);
+        assert_eq!(c.intermediate, 3072);
+        let l = ModelConfig::bert_large(512, Framework::Puma);
+        assert_eq!(l.head_dim(), 64);
+    }
+
+    #[test]
+    fn adaptive_eta_keeps_convergence_basin() {
+        // q/η must be < 1.999 for expected attention-score magnitudes.
+        for seq in [64usize, 128, 256, 512] {
+            let c = ModelConfig::bert_base(seq, Framework::SecFormer);
+            let q = seq as f64 * (crate::proto::softmax::QUAD2_SHIFT.powi(2) + 2.0);
+            assert!(q / c.eta_softmax < 1.999, "seq={seq}");
+        }
+    }
+
+    #[test]
+    fn framework_parse_roundtrip() {
+        for f in Framework::ALL {
+            assert_eq!(Framework::parse(f.name()), Some(f));
+        }
+        assert_eq!(Framework::parse("nope"), None);
+    }
+}

@@ -1,0 +1,12 @@
+//! Secure neural network layer: BERT-family encoders running over secret
+//! shares, parameterized by the *framework* (CrypTen / PUMA / MPCFormer /
+//! SecFormer) which selects the GeLU, Softmax and LayerNorm protocols —
+//! exactly the axes of the paper's Tables 2–3.
+
+pub mod config;
+pub mod model;
+pub mod weights;
+
+pub use config::{Framework, ModelConfig};
+pub use model::{bert_forward, ModelInput};
+pub use weights::{ShareMap, WeightMap};

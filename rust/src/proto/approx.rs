@@ -1,0 +1,245 @@
+//! CrypTen's nonlinear protocol stack (Appendix E.2): `Π_Exp` via repeated
+//! squaring, Newton–Raphson reciprocal and inverse square root. These are
+//! the baselines SecFormer's Goldschmidt protocols replace.
+
+use crate::core::fixed::FRAC_BITS;
+use crate::proto::ctx::PartyCtx;
+use crate::proto::prim::{
+    add_public, mul, mul_public, square, sub_from_public, trunc,
+};
+
+/// Default iteration count for `Π_Exp` (CrypTen: n = 8).
+pub const EXP_ITERS: u32 = 8;
+/// Default Newton iterations for the reciprocal (CrypTen: 10).
+pub const RECIP_ITERS: usize = 10;
+/// Default Newton iterations for the inverse square root (CrypTen: 3).
+pub const RSQRT_ITERS: usize = 3;
+
+/// `Π_Exp`: e^x ≈ (1 + x/2^n)^(2^n) — n squarings, n rounds (Eq. 9).
+pub fn exp(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
+    // x / 2^n (local truncation), + 1
+    let scaled = trunc(ctx, x, EXP_ITERS);
+    let mut y = add_public(ctx, &scaled, 1.0);
+    for _ in 0..EXP_ITERS {
+        y = square(ctx, &y);
+    }
+    y
+}
+
+/// `Π_Div`-style reciprocal by Newton–Raphson (Eq. 10–11):
+/// `y_{n+1} = y_n (2 − x y_n)`, `y_0 = 3 e^{1/2 − x} + 0.003`.
+pub fn reciprocal_newton(ctx: &mut PartyCtx, x: &[u64], iters: usize) -> Vec<u64> {
+    // y0 = 3·exp(0.5 − x) + 0.003
+    let half_minus_x = sub_from_public(ctx, 0.5, x);
+    let e = exp(ctx, &half_minus_x);
+    let three_e = mul_public(ctx, &e, 3.0);
+    let mut y = add_public(ctx, &three_e, 0.003);
+    for _ in 0..iters {
+        let xy = mul(ctx, x, &y);
+        let r = sub_from_public(ctx, 2.0, &xy);
+        y = mul(ctx, &y, &r);
+    }
+    y
+}
+
+/// `Π_Div([x], [q])`: x / q via the Newton reciprocal.
+pub fn div_newton(ctx: &mut PartyCtx, x: &[u64], q: &[u64], iters: usize) -> Vec<u64> {
+    let r = reciprocal_newton(ctx, q, iters);
+    mul(ctx, x, &r)
+}
+
+/// CrypTen's *generic* reciprocal (Table 1's `Π_Div`, 10368 bits): handles
+/// signed inputs by computing `sign(x)·recip(|x|)` — one `Π_LT` plus two
+/// raw multiplies on top of the positive-only Newton chain. SecFormer's
+/// deflated Goldschmidt division skips all of this because 2Quad/LayerNorm
+/// denominators are positive by construction.
+pub fn reciprocal_newton_signed(ctx: &mut PartyCtx, x: &[u64], iters: usize) -> Vec<u64> {
+    let neg = crate::proto::bits::ltz(ctx, x); // integer-scale bit
+    // sign = 1 − 2·neg (integer scale); |x| = sign · x
+    let sign: Vec<u64> = neg
+        .iter()
+        .map(|&b| {
+            let minus2b = b.wrapping_mul(2).wrapping_neg();
+            if ctx.id == 0 {
+                minus2b.wrapping_add(1)
+            } else {
+                minus2b
+            }
+        })
+        .collect();
+    let absx = crate::proto::prim::mul_raw(ctx, &sign, x);
+    let r = reciprocal_newton(ctx, &absx, iters);
+    crate::proto::prim::mul_raw(ctx, &sign, &r)
+}
+
+/// `Π_rSqrt` by Newton–Raphson (Eq. 12–13). We use CrypTen's *actual*
+/// initial value `y_0 = 2.2·e^{−(x/2+0.2)} + 0.198046875 − x/1024` (the
+/// paper's Eq. 13 transcribes it without the 2.2 factor and the −x/1024
+/// wide-range correction, which does not converge; see EXPERIMENTS.md).
+pub fn rsqrt_newton(ctx: &mut PartyCtx, x: &[u64], iters: usize) -> Vec<u64> {
+    // y0
+    let half_x = trunc(ctx, x, 1);
+    let shifted = add_public(ctx, &half_x, 0.2);
+    let neg = mul_public(ctx, &shifted, -1.0);
+    let e = exp(ctx, &neg);
+    let scaled = mul_public(ctx, &e, 2.2);
+    let corr = trunc(ctx, x, 10); // x/1024
+    let scaled = crate::proto::prim::sub(&scaled, &corr);
+    let mut y = add_public(ctx, &scaled, 0.198046875);
+    for _ in 0..iters {
+        let y2 = square(ctx, &y);
+        let xy2 = mul(ctx, x, &y2);
+        let t = sub_from_public(ctx, 3.0, &xy2);
+        let ty = mul(ctx, &y, &t);
+        y = trunc(ctx, &ty, 1); // divide by 2
+    }
+    y
+}
+
+/// `Π_Sqrt`: √x = x · rsqrt(x).
+pub fn sqrt_newton(ctx: &mut PartyCtx, x: &[u64], iters: usize) -> Vec<u64> {
+    let r = rsqrt_newton(ctx, x, iters);
+    mul(ctx, x, &r)
+}
+
+/// CrypTen's inverse square root as actually composed by its LayerNorm:
+/// `1/√x = reciprocal(sqrt(x))` — the expensive sequential `Π_rSqrt` +
+/// `Π_Div` chain the paper's Fig 6/7 baselines measure.
+pub fn rsqrt_crypten_composed(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
+    let s = sqrt_newton(ctx, x, RSQRT_ITERS);
+    reciprocal_newton(ctx, &s, RECIP_ITERS)
+}
+
+/// `ReLU(x) = x·(1 − (x<0))` — needs one `Π_LT` plus one raw multiply.
+pub fn relu(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
+    let neg_bit = crate::proto::bits::ltz(ctx, x);
+    // pos = 1 - neg (integer scale)
+    let pos: Vec<u64> = neg_bit
+        .iter()
+        .map(|&b| {
+            if ctx.id == 0 {
+                1u64.wrapping_sub(b)
+            } else {
+                b.wrapping_neg()
+            }
+        })
+        .collect();
+    crate::proto::prim::mul_raw(ctx, x, &pos)
+}
+
+/// Make sure outputs stay at fixed scale after a bit-weighted sum.
+#[allow(dead_code)]
+fn _scale_note() {
+    let _ = FRAC_BITS;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::harness::{run_pair_collect_stats, run_pair_with_inputs};
+
+    #[test]
+    fn exp_small_range() {
+        // CrypTen's repeated-squaring exp has analytic relative error
+        // ≈ x²/2^(n+1) for n=8 iterations — tolerate exactly that.
+        let x: Vec<f64> = vec![-4.0, -2.0, -1.0, -0.5, 0.0, 0.5, 1.0, 2.0, 4.0];
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| exp(ctx, xs));
+        for i in 0..x.len() {
+            let expect = x[i].exp();
+            let rel = x[i] * x[i] / 2f64.powi(EXP_ITERS as i32 + 1) * 1.5 + 0.01;
+            assert!(
+                (got[i] - expect).abs() < expect * rel + 0.02,
+                "x={} got={} expect={}",
+                x[i],
+                got[i],
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn exp_costs_eight_rounds() {
+        let x = vec![1.0f64; 4];
+        let (_, stats) = run_pair_collect_stats(&x, &x, |ctx, xs, _| exp(ctx, xs));
+        assert_eq!(stats.total_rounds(), EXP_ITERS as u64); // Table 1: 8
+    }
+
+    #[test]
+    fn reciprocal_converges() {
+        let x = vec![0.1, 0.5, 1.0, 3.0, 10.0, 50.0];
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| {
+            reciprocal_newton(ctx, xs, RECIP_ITERS)
+        });
+        for i in 0..x.len() {
+            let expect = 1.0 / x[i];
+            assert!(
+                (got[i] - expect).abs() < 0.01 * expect.max(0.1),
+                "x={} got={} expect={}",
+                x[i],
+                got[i],
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn rsqrt_converges() {
+        // CrypTen's documented valid domain is roughly [0.1, 200].
+        let x = vec![0.3, 0.5, 1.0, 2.0, 5.0, 20.0, 100.0];
+        let got =
+            run_pair_with_inputs(&x, &x, |ctx, xs, _| rsqrt_newton(ctx, xs, RSQRT_ITERS));
+        for i in 0..x.len() {
+            let expect = 1.0 / x[i].sqrt();
+            let tol = (expect * 0.05).max(0.02);
+            assert!(
+                (got[i] - expect).abs() < tol,
+                "x={} got={} expect={}",
+                x[i],
+                got[i],
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn sqrt_composes() {
+        let x = vec![0.25, 1.0, 4.0, 9.0];
+        let got =
+            run_pair_with_inputs(&x, &x, |ctx, xs, _| sqrt_newton(ctx, xs, RSQRT_ITERS));
+        for i in 0..x.len() {
+            assert!(
+                (got[i] - x[i].sqrt()).abs() < 0.08 * x[i].sqrt().max(0.5),
+                "x={} got={}",
+                x[i],
+                got[i]
+            );
+        }
+    }
+
+    #[test]
+    fn rsqrt_composed_matches() {
+        let x = vec![0.5, 1.0, 3.0, 10.0, 50.0];
+        let got =
+            run_pair_with_inputs(&x, &x, |ctx, xs, _| rsqrt_crypten_composed(ctx, xs));
+        for i in 0..x.len() {
+            let expect = 1.0 / x[i].sqrt();
+            assert!(
+                (got[i] - expect).abs() < expect * 0.08 + 0.02,
+                "x={} got={} expect={}",
+                x[i],
+                got[i],
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn relu_matches() {
+        let x = vec![-3.0, -0.5, 0.0, 0.5, 3.0];
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| relu(ctx, xs));
+        let expect = [0.0, 0.0, 0.0, 0.5, 3.0];
+        for i in 0..x.len() {
+            assert!((got[i] - expect[i]).abs() < 1e-2, "x={}", x[i]);
+        }
+    }
+}

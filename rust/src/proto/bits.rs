@@ -1,0 +1,232 @@
+//! `Π_LT` — privacy-preserving comparison (Appendix E.2).
+//!
+//! Pipeline: arithmetic→boolean conversion (each party reshares its
+//! arithmetic share bitwise, then the two 64-bit addends are summed with a
+//! Kogge–Stone parallel-prefix adder over boolean shares), sign-bit
+//! extraction (local shift), and a single-bit B2A conversion.
+//!
+//! Boolean shares are bit-packed: one u64 word per element, XOR-shared.
+//! Rounds: 1 (resharing) + 1 (initial AND) + 6 (log2 64 prefix levels)
+//! + 1 (B2A open) = 9; per-element online volume ≈ 3.6 kbit — Table 1's
+//! `Π_LT` entry (7 rounds / 3456 bits) counts the prefix levels only, the
+//! delta is documented in EXPERIMENTS.md.
+
+use crate::core::fixed::encode;
+use crate::proto::ctx::PartyCtx;
+use crate::proto::prim::sub;
+
+/// Bitwise AND of two boolean-shared word vectors (1 round).
+pub fn and_bool(ctx: &mut PartyCtx, x: &[u64], y: &[u64]) -> Vec<u64> {
+    let n = x.len();
+    let t = ctx.prov.and_triple(n);
+    let d: Vec<u64> = (0..n).map(|i| x[i] ^ t.a[i]).collect();
+    let e: Vec<u64> = (0..n).map(|i| y[i] ^ t.b[i]).collect();
+    let opened = ctx.exchange_many(&[&d, &e]);
+    let d_open: Vec<u64> = (0..n).map(|i| d[i] ^ opened[0][i]).collect();
+    let e_open: Vec<u64> = (0..n).map(|i| e[i] ^ opened[1][i]).collect();
+    (0..n)
+        .map(|i| {
+            let mut z = t.c[i] ^ (d_open[i] & t.b[i]) ^ (e_open[i] & t.a[i]);
+            if ctx.id == 1 {
+                z ^= d_open[i] & e_open[i];
+            }
+            z
+        })
+        .collect()
+}
+
+/// Two batched boolean ANDs sharing one round — the Kogge–Stone level step.
+pub fn and_bool2(
+    ctx: &mut PartyCtx,
+    x1: &[u64],
+    y1: &[u64],
+    x2: &[u64],
+    y2: &[u64],
+) -> (Vec<u64>, Vec<u64>) {
+    let n = x1.len();
+    let x: Vec<u64> = x1.iter().chain(x2.iter()).copied().collect();
+    let y: Vec<u64> = y1.iter().chain(y2.iter()).copied().collect();
+    let z = and_bool(ctx, &x, &y);
+    (z[..n].to_vec(), z[n..].to_vec())
+}
+
+/// Arithmetic→boolean conversion: returns boolean shares of the *values*
+/// (one u64 word per element).
+pub fn a2b(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
+    let n = x.len();
+    // Reshare own arithmetic share bitwise (1 round): each party masks its
+    // share with private randomness and ships the masked word.
+    let r: Vec<u64> = (0..n).map(|_| ctx.rng.next_u64()).collect();
+    let masked: Vec<u64> = (0..n).map(|i| x[i] ^ r[i]).collect();
+    let peer_masked = ctx.exchange(&masked);
+    // Boolean sharing of addend contributed by party 0 (call it X) and by
+    // party 1 (call it Y):
+    //   X: party0 holds r, party1 holds x0^r (received)
+    //   Y: party0 holds x1^r' (received), party1 holds r'
+    let (xs, ys): (Vec<u64>, Vec<u64>) = if ctx.id == 0 {
+        (r, peer_masked)
+    } else {
+        (peer_masked, r)
+    };
+    kogge_stone_add(ctx, &xs, &ys)
+}
+
+/// Kogge–Stone addition of two boolean-shared u64 vectors: returns boolean
+/// shares of `(X + Y) mod 2^64`. 7 rounds (1 AND + 6 prefix levels).
+pub fn kogge_stone_add(ctx: &mut PartyCtx, x: &[u64], y: &[u64]) -> Vec<u64> {
+    let n = x.len();
+    let p0: Vec<u64> = (0..n).map(|i| x[i] ^ y[i]).collect(); // propagate
+    let mut g = and_bool(ctx, x, y); // generate
+    let mut p = p0.clone();
+    for shift in [1u32, 2, 4, 8, 16, 32] {
+        let g_shift: Vec<u64> = g.iter().map(|&v| v << shift).collect();
+        let p_shift: Vec<u64> = p.iter().map(|&v| v << shift).collect();
+        let (pg, pp) = and_bool2(ctx, &p, &g_shift, &p, &p_shift);
+        for i in 0..n {
+            g[i] ^= pg[i];
+            p[i] = pp[i];
+        }
+    }
+    // sum bit i = p0_i ^ carry_in_i, carry_in = g << 1
+    (0..n).map(|i| p0[i] ^ (g[i] << 1)).collect()
+}
+
+/// Boolean→arithmetic conversion of a single bit per element (bit in LSB).
+/// 1 round. Output is an arithmetic share at *integer* scale (0 or 1).
+pub fn b2a_bit(ctx: &mut PartyCtx, bits: &[u64]) -> Vec<u64> {
+    let n = bits.len();
+    let pair = ctx.prov.bit_pair(n);
+    let v_shared: Vec<u64> = (0..n).map(|i| (bits[i] ^ pair.boolean[i]) & 1).collect();
+    let v = ctx.open_bool(&v_shared);
+    // b = β ⊕ v = β + v − 2βv  →  share_j = β_j(1−2v) + j·v
+    (0..n)
+        .map(|i| {
+            let vi = v[i] & 1;
+            let mut s = if vi == 1 {
+                pair.arith[i].wrapping_neg()
+            } else {
+                pair.arith[i]
+            };
+            if ctx.id == 0 && vi == 1 {
+                s = s.wrapping_add(1);
+            }
+            s
+        })
+        .collect()
+}
+
+/// `(x < 0)` — sign-bit extraction. Output arithmetic shares of {0,1} at
+/// integer scale.
+pub fn ltz(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
+    let sum_bool = a2b(ctx, x);
+    let sign: Vec<u64> = sum_bool.iter().map(|&w| w >> 63).collect();
+    b2a_bit(ctx, &sign)
+}
+
+/// `Π_LT([x], c)` — compare each element with a public real constant.
+pub fn lt_const(ctx: &mut PartyCtx, x: &[u64], c: f64) -> Vec<u64> {
+    let e = encode(c);
+    let shifted: Vec<u64> = if ctx.id == 0 {
+        x.iter().map(|&v| v.wrapping_sub(e)).collect()
+    } else {
+        x.to_vec()
+    };
+    ltz(ctx, &shifted)
+}
+
+/// Batched `Π_LT` against several constants at once: all comparisons share
+/// the same rounds (used by Π_GeLU's two thresholds).
+pub fn lt_consts_batched(ctx: &mut PartyCtx, x: &[u64], cs: &[f64]) -> Vec<Vec<u64>> {
+    let n = x.len();
+    let mut all = Vec::with_capacity(n * cs.len());
+    for &c in cs {
+        let e = encode(c);
+        if ctx.id == 0 {
+            all.extend(x.iter().map(|&v| v.wrapping_sub(e)));
+        } else {
+            all.extend_from_slice(x);
+        }
+    }
+    let bits = ltz(ctx, &all);
+    cs.iter()
+        .enumerate()
+        .map(|(i, _)| bits[i * n..(i + 1) * n].to_vec())
+        .collect()
+}
+
+/// `[x < y]` for shared x, y.
+pub fn lt(ctx: &mut PartyCtx, x: &[u64], y: &[u64]) -> Vec<u64> {
+    ltz(ctx, &sub(x, y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::harness::{run_pair_collect_stats, run_pair_raw_out};
+
+    #[test]
+    fn ltz_signs() {
+        let x = vec![-5.0, -0.001, 0.0, 0.001, 3.0, -1000.0, 1000.0];
+        let got = run_pair_raw_out(&x, &x, |ctx, xs, _| ltz(ctx, xs));
+        let expect = [1u64, 1, 0, 0, 0, 1, 0];
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn lt_const_thresholds() {
+        let x = vec![-2.0, -1.7001, -1.7, 0.0, 1.6999, 1.7, 2.5];
+        let got = run_pair_raw_out(&x, &x, |ctx, xs, _| lt_const(ctx, xs, 1.7));
+        assert_eq!(got, vec![1, 1, 1, 1, 1, 0, 0]);
+        let got = run_pair_raw_out(&x, &x, |ctx, xs, _| lt_const(ctx, xs, -1.7));
+        assert_eq!(got, vec![1, 1, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn lt_shared_pairs() {
+        let x = vec![1.0, -3.0, 2.0, 7.5];
+        let y = vec![2.0, -4.0, 2.0, 100.0];
+        let got = run_pair_raw_out(&x, &y, |ctx, xs, ys| lt(ctx, xs, ys));
+        assert_eq!(got, vec![1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn batched_lt_matches_individual() {
+        let x = vec![-2.0, -1.0, 0.0, 1.0, 2.0];
+        let got = run_pair_raw_out(&x, &x, |ctx, xs, _| {
+            let r = lt_consts_batched(ctx, xs, &[-1.7, 1.7]);
+            let mut out = r[0].clone();
+            out.extend(&r[1]);
+            out
+        });
+        assert_eq!(&got[..5], &[1, 0, 0, 0, 0]); // x < -1.7
+        assert_eq!(&got[5..], &[1, 1, 1, 1, 0]); // x < 1.7
+    }
+
+    #[test]
+    fn kogge_stone_adds() {
+        // a2b implicitly exercises the adder; also verify on random values
+        // at many magnitudes through ltz correctness.
+        let mut rng = crate::core::rng::Xoshiro::seed_from(77);
+        let x: Vec<f64> = (0..64).map(|_| rng.uniform(-1e4, 1e4)).collect();
+        let got = run_pair_raw_out(&x, &x, |ctx, xs, _| ltz(ctx, xs));
+        for i in 0..64 {
+            assert_eq!(got[i], (x[i] < 0.0) as u64, "x={}", x[i]);
+        }
+    }
+
+    #[test]
+    fn lt_round_count_and_volume() {
+        // 1 reshare + 1 AND + 6 KS levels + 1 B2A open = 9 rounds.
+        let x = vec![1.0f64; 16];
+        let (_, stats) = run_pair_collect_stats(&x, &x, |ctx, xs, _| {
+            let z = lt_const(ctx, xs, 0.5);
+            z
+        });
+        assert_eq!(stats.total_rounds(), 9);
+        // Per-element bits sent by one party:
+        // 64 (reshare) + 128 (AND open) + 6*256 (KS levels) + 64 (B2A) = 1792
+        // → both parties: 3584 bits ≈ Table 1's 3456.
+        let bits_per_elem = stats.total_bytes() * 8 / 16;
+        assert_eq!(bits_per_elem, 1792);
+    }
+}

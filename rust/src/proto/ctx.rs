@@ -1,0 +1,78 @@
+//! Per-party protocol execution context.
+
+use crate::core::rng::Xoshiro;
+use crate::net::stats::{CommStats, StatsHandle};
+use crate::net::transport::Transport;
+use crate::sharing::provider::Provider;
+
+/// Everything one computing server (`S0` or `S1`) needs to run protocols:
+/// its identity, the link to the peer, the correlated-randomness provider,
+/// private local randomness, and the stats sink.
+pub struct PartyCtx {
+    pub id: u8,
+    pub peer: Box<dyn Transport>,
+    pub prov: Box<dyn Provider>,
+    pub rng: Xoshiro,
+    pub stats: StatsHandle,
+}
+
+impl PartyCtx {
+    pub fn new(
+        id: u8,
+        peer: Box<dyn Transport>,
+        prov: Box<dyn Provider>,
+        rng_seed: u64,
+    ) -> Self {
+        PartyCtx {
+            id,
+            peer,
+            prov,
+            rng: Xoshiro::seed_from(rng_seed ^ (0xC0FFEE << id)),
+            stats: CommStats::new_handle(),
+        }
+    }
+
+    /// One synchronized round: send `data`, receive the peer's buffer.
+    ///
+    /// Every online communication in the codebase funnels through here (or
+    /// [`Self::exchange_many`]) so round/byte accounting is exact.
+    pub fn exchange(&mut self, data: &[u64]) -> Vec<u64> {
+        self.peer.send(data.to_vec());
+        let r = self.peer.recv();
+        self.stats.record_round(data.len() as u64 * 8);
+        r
+    }
+
+    /// Exchange several buffers in a *single* round (parallel messages, as
+    /// in Appendix D.2's "in parallel" costings). Buffers are concatenated
+    /// on the wire and split on arrival.
+    pub fn exchange_many(&mut self, bufs: &[&[u64]]) -> Vec<Vec<u64>> {
+        let total: usize = bufs.iter().map(|b| b.len()).sum();
+        let mut msg = Vec::with_capacity(total);
+        for b in bufs {
+            msg.extend_from_slice(b);
+        }
+        self.peer.send(msg);
+        let r = self.peer.recv();
+        self.stats.record_round(total as u64 * 8);
+        let mut out = Vec::with_capacity(bufs.len());
+        let mut off = 0;
+        for b in bufs {
+            out.push(r[off..off + b.len()].to_vec());
+            off += b.len();
+        }
+        out
+    }
+
+    /// `Rec`: open an additively shared vector (1 round).
+    pub fn open(&mut self, share: &[u64]) -> Vec<u64> {
+        let peer = self.exchange(share);
+        share.iter().zip(&peer).map(|(&a, &b)| a.wrapping_add(b)).collect()
+    }
+
+    /// Open a boolean-shared vector (1 round).
+    pub fn open_bool(&mut self, share: &[u64]) -> Vec<u64> {
+        let peer = self.exchange(share);
+        share.iter().zip(&peer).map(|(&a, &b)| a ^ b).collect()
+    }
+}

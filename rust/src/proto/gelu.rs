@@ -1,0 +1,328 @@
+//! Privacy-preserving GeLU: SecFormer's `Π_GeLU` (Algorithm 1) and the three
+//! baselines it is evaluated against (PUMA, MPCFormer's Quad, CrypTen).
+
+use crate::core::fixed::{encode_scaled, trunc_share, FRAC_BITS};
+use crate::proto::bits::lt_consts_batched;
+use crate::proto::ctx::PartyCtx;
+use crate::proto::prim::{add, add_public, mul, mul_and_square, mul_public, mul_raw, sub, trunc};
+use crate::proto::trig::{angle_multiplier, sin_turns};
+
+/// 7-term Fourier coefficients of erf on [-10, 10] with period 20 (Eq. 7).
+pub const FOURIER_BETA: [f64; 7] = [
+    1.25772, -0.0299154, 0.382155, -0.0519123, 0.196033, -0.0624557, 0.118029,
+];
+
+/// Segmentation threshold for erf (Eq. 5): saturate outside ±1.7.
+pub const ERF_CUT: f64 = 1.7;
+
+/// Weighted sum of shares with public real coefficients plus a public
+/// constant, evaluated at double scale with a single truncation.
+fn poly_combine(ctx: &PartyCtx, terms: &[(&[u64], f64)], constant: f64) -> Vec<u64> {
+    let n = terms[0].0.len();
+    let mut acc = vec![0u64; n];
+    for (share, coef) in terms {
+        let e = crate::core::fixed::encode(*coef);
+        for i in 0..n {
+            acc[i] = acc[i].wrapping_add(share[i].wrapping_mul(e));
+        }
+    }
+    if ctx.id == 0 && constant != 0.0 {
+        let c = encode_scaled(constant, 2 * FRAC_BITS);
+        for v in acc.iter_mut() {
+            *v = v.wrapping_add(c);
+        }
+    }
+    acc.iter().map(|&v| trunc_share(v, ctx.id, FRAC_BITS)).collect()
+}
+
+/// Shift integer-scale bit shares up to fixed-point scale.
+fn bits_to_fixed(bits: &[u64]) -> Vec<u64> {
+    bits.iter().map(|&b| b.wrapping_shl(FRAC_BITS)).collect()
+}
+
+/// The shared erf core of `Π_GeLU`: `erf(u)` for fixed-point shares of `u`,
+/// via segmentation (Eq. 5) + 7-term Fourier series (Eq. 6).
+///
+/// Both threshold comparisons batch into one `Π_LT` execution and all seven
+/// sine harmonics batch into one `Π_Sin` round.
+pub fn erf_secformer(ctx: &mut PartyCtx, u: &[u64]) -> Vec<u64> {
+    let n = u.len();
+    // z0 = (u < -1.7), c1 = (u < 1.7) — one batched comparison.
+    let cs = lt_consts_batched(ctx, u, &[-ERF_CUT, ERF_CUT]);
+    let (c0, c1) = (&cs[0], &cs[1]);
+    let z1 = sub(c1, c0); // indicator of the Fourier segment
+    // z2 − z0 at fixed scale: +1 region minus −1 region.
+    let z2: Vec<u64> = c1
+        .iter()
+        .map(|&b| {
+            if ctx.id == 0 {
+                1u64.wrapping_sub(b)
+            } else {
+                b.wrapping_neg()
+            }
+        })
+        .collect();
+    let saturated = bits_to_fixed(&sub(&z2, c0));
+    // f(u) = Σ β_k sin(kπu/10): all harmonics in one Π_Sin call.
+    let mut angles = Vec::with_capacity(7 * n);
+    for k in 1..=7u32 {
+        let m = angle_multiplier(k, 20.0);
+        angles.extend(u.iter().map(|&v| v.wrapping_mul(m)));
+    }
+    let sins = sin_turns(ctx, &angles);
+    let mut f_terms: Vec<(&[u64], f64)> = Vec::with_capacity(7);
+    for k in 0..7 {
+        f_terms.push((&sins[k * n..(k + 1) * n], FOURIER_BETA[k]));
+    }
+    let f = poly_combine(ctx, &f_terms, 0.0);
+    // erf = saturated + z1 · f  (z1 integer-scale ⇒ raw multiply)
+    let sel = mul_raw(ctx, &z1, &f);
+    add(&saturated, &sel)
+}
+
+/// `Π_GeLU` (Algorithm 1): GeLU(x) = x/2 · (1 + erf(x/√2)).
+pub fn gelu_secformer(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
+    let u = mul_public(ctx, x, std::f64::consts::FRAC_1_SQRT_2);
+    let erf = erf_secformer(ctx, &u);
+    let one_plus = add_public(ctx, &erf, 1.0);
+    let half_x = trunc(ctx, x, 1);
+    mul(ctx, &half_x, &one_plus)
+}
+
+// ---- PUMA baseline (Dong et al. 2023): segmented polynomial fit ----
+
+/// PUMA's four-segment polynomial GeLU:
+/// x < −4 → 0;  −4 ≤ x < −1.95 → P3(x);  −1.95 ≤ x ≤ 3 → P6(x);  x > 3 → x.
+pub fn gelu_puma(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
+    const A: [f64; 4] = [
+        -0.5054031199708174,
+        -0.42226581151983866,
+        -0.11807612951181953,
+        -0.011034134030615728,
+    ];
+    const B0: f64 = 0.008526321541038084;
+    const B1: f64 = 0.5;
+    const B2: f64 = 0.3603292692789629;
+    const B4: f64 = -0.037688200365904236;
+    const B6: f64 = 0.0018067462606141187;
+
+    let n = x.len();
+    let cs = lt_consts_batched(ctx, x, &[-4.0, -1.95, 3.0]);
+    let (ca, cb, cc) = (&cs[0], &cs[1], &cs[2]);
+    let z1 = sub(cb, ca); // P3 segment
+    let z2 = sub(cc, cb); // P6 segment
+    let z3: Vec<u64> = cc
+        .iter()
+        .map(|&b| {
+            if ctx.id == 0 {
+                1u64.wrapping_sub(b)
+            } else {
+                b.wrapping_neg()
+            }
+        })
+        .collect(); // identity segment
+
+    let x2 = crate::proto::prim::square(ctx, x);
+    let (x3, x4) = mul_and_square(ctx, x, &x2);
+    let x6 = mul(ctx, &x2, &x4);
+
+    let p3 = poly_combine(ctx, &[(x, A[1]), (&x2, A[2]), (&x3, A[3])], 0.0);
+    let p3 = add_public(ctx, &p3, A[0]);
+    let p6 = poly_combine(ctx, &[(x, B1), (&x2, B2), (&x4, B4), (&x6, B6)], 0.0);
+    let p6 = add_public(ctx, &p6, B0);
+
+    // One batched raw multiply for all three selections.
+    let sel_bits: Vec<u64> =
+        z1.iter().chain(z2.iter()).chain(z3.iter()).copied().collect();
+    let sel_vals: Vec<u64> = p3.iter().chain(p6.iter()).chain(x.iter()).copied().collect();
+    let sel = mul_raw(ctx, &sel_bits, &sel_vals);
+    let mut y = vec![0u64; n];
+    for i in 0..n {
+        y[i] = sel[i].wrapping_add(sel[n + i]).wrapping_add(sel[2 * n + i]);
+    }
+    y
+}
+
+// ---- MPCFormer baseline (Li et al. 2023a): Quad ----
+
+/// MPCFormer's Quad replacement: 0.125·x² + 0.25·x + 0.5. One round.
+pub fn gelu_quad(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
+    let x2 = crate::proto::prim::square(ctx, x);
+    let p = poly_combine(ctx, &[(x, 0.25), (&x2, 0.125)], 0.0);
+    add_public(ctx, &p, 0.5)
+}
+
+// ---- CrypTen baseline: local Taylor expansion of erf ----
+
+/// CrypTen's GeLU: erf by 5-term Taylor series — accurate only on a small
+/// interval and divergent outside it (reproduced in Table 4).
+pub fn gelu_crypten(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
+    let u = mul_public(ctx, x, std::f64::consts::FRAC_1_SQRT_2);
+    let u2 = crate::proto::prim::square(ctx, &u);
+    let u3 = mul(ctx, &u, &u2);
+    let u5 = mul(ctx, &u3, &u2);
+    let u7 = mul(ctx, &u5, &u2);
+    let u9 = mul(ctx, &u7, &u2);
+    let c = 2.0 / std::f64::consts::PI.sqrt();
+    let erf = poly_combine(
+        ctx,
+        &[
+            (&u, c),
+            (&u3, -c / 3.0),
+            (&u5, c / 10.0),
+            (&u7, -c / 42.0),
+            (&u9, c / 216.0),
+        ],
+        0.0,
+    );
+    let one_plus = add_public(ctx, &erf, 1.0);
+    let half_x = trunc(ctx, x, 1);
+    mul(ctx, &half_x, &one_plus)
+}
+
+/// Reference (plaintext) GeLU for tests and accuracy tables.
+pub fn gelu_exact(x: f64) -> f64 {
+    0.5 * x * (1.0 + erf_f64(x / std::f64::consts::SQRT_2))
+}
+
+/// Plaintext segmented-Fourier erf (Eq. 5–6) — the exact map `Π_GeLU`
+/// evaluates over shares and the Pallas kernel evaluates in f32. Used by
+/// the plaintext reference forward so all three layers share semantics.
+pub fn erf_fourier_plain(u: f64) -> f64 {
+    if u < -ERF_CUT {
+        return -1.0;
+    }
+    if u > ERF_CUT {
+        return 1.0;
+    }
+    let mut f = 0.0;
+    for (k, beta) in FOURIER_BETA.iter().enumerate() {
+        f += beta * ((k + 1) as f64 * std::f64::consts::PI * u / 10.0).sin();
+    }
+    f
+}
+
+/// Plaintext Fourier GeLU.
+pub fn gelu_fourier_plain(x: f64) -> f64 {
+    0.5 * x * (1.0 + erf_fourier_plain(x / std::f64::consts::SQRT_2))
+}
+
+/// High-accuracy erf (Abramowitz–Stegun 7.1.26-style rational approx is not
+/// enough for the accuracy table; use the complementary series).
+pub fn erf_f64(x: f64) -> f64 {
+    // Numerically solid erf via the incomplete gamma continued fraction is
+    // overkill; a 17-term Taylor + asymptotic switch keeps |err| < 1e-12 on
+    // the ranges used here.
+    let ax = x.abs();
+    if ax < 3.0 {
+        // Taylor series of erf around 0.
+        let mut term = x;
+        let mut sum = x;
+        let x2 = x * x;
+        for n in 1..60 {
+            term *= -x2 / n as f64;
+            let add = term / (2 * n + 1) as f64;
+            sum += add;
+            if add.abs() < 1e-17 {
+                break;
+            }
+        }
+        sum * 2.0 / std::f64::consts::PI.sqrt()
+    } else {
+        // erfc asymptotic expansion.
+        let sign = x.signum();
+        let z = ax;
+        let mut t = 1.0;
+        let mut s = 1.0;
+        let z2 = 2.0 * z * z;
+        for k in 1..12 {
+            t *= -((2 * k - 1) as f64) / z2;
+            s += t;
+        }
+        let erfc = (-z * z).exp() / (z * std::f64::consts::PI.sqrt()) * s;
+        sign * (1.0 - erfc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::harness::run_pair_with_inputs;
+
+    fn grid(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+        (0..n).map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64).collect()
+    }
+
+    #[test]
+    fn erf_f64_reference_sane() {
+        assert!((erf_f64(0.0)).abs() < 1e-12);
+        assert!((erf_f64(1.0) - 0.8427007929497149).abs() < 1e-10);
+        assert!((erf_f64(2.0) - 0.9953222650189527).abs() < 1e-10);
+        assert!((erf_f64(-1.5) + 0.9661051464753107).abs() < 1e-10);
+        assert!((erf_f64(5.0) - 0.9999999999984626).abs() < 1e-10);
+    }
+
+    #[test]
+    fn secformer_gelu_accurate_across_wide_range() {
+        let x = grid(-8.0, 8.0, 65);
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| gelu_secformer(ctx, xs));
+        let mut worst = 0.0f64;
+        for i in 0..x.len() {
+            let err = (got[i] - gelu_exact(x[i])).abs();
+            worst = worst.max(err);
+        }
+        // Table 4: SecFormer error mean ~1e-3..5e-3; worst-case near the
+        // segment boundary is ~2e-2.
+        assert!(worst < 0.05, "worst abs error {worst}");
+    }
+
+    #[test]
+    fn secformer_gelu_mean_error_matches_table4_scale() {
+        let mut rng = crate::core::rng::Xoshiro::seed_from(42);
+        let x: Vec<f64> = (0..512).map(|_| rng.uniform(-10.0, 10.0)).collect();
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| gelu_secformer(ctx, xs));
+        let mean_err: f64 = x
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (got[i] - gelu_exact(v)).abs())
+            .sum::<f64>()
+            / x.len() as f64;
+        assert!(mean_err < 0.01, "mean err {mean_err} (paper: 0.003)");
+    }
+
+    #[test]
+    fn puma_gelu_accurate() {
+        let x = grid(-8.0, 8.0, 65);
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| gelu_puma(ctx, xs));
+        let mut worst = 0.0f64;
+        for i in 0..x.len() {
+            worst = worst.max((got[i] - gelu_exact(x[i])).abs());
+        }
+        assert!(worst < 0.05, "worst abs error {worst}");
+    }
+
+    #[test]
+    fn quad_is_the_mpcformer_polynomial() {
+        let x = vec![-2.0, 0.0, 1.0, 3.0];
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| gelu_quad(ctx, xs));
+        for i in 0..x.len() {
+            let expect = 0.125 * x[i] * x[i] + 0.25 * x[i] + 0.5;
+            assert!((got[i] - expect).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn crypten_gelu_good_small_bad_large() {
+        // Inside [-1, 1]: fine.
+        let x = grid(-1.0, 1.0, 17);
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| gelu_crypten(ctx, xs));
+        for i in 0..x.len() {
+            assert!((got[i] - gelu_exact(x[i])).abs() < 0.02, "x={}", x[i]);
+        }
+        // At |x| ≈ 5 the Taylor series has diverged (Table 4's 3e4 errors).
+        let x = vec![5.0, -5.0];
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| gelu_crypten(ctx, xs));
+        let err = (got[0] - gelu_exact(5.0)).abs() + (got[1] - gelu_exact(-5.0)).abs();
+        assert!(err > 1.0, "expected Taylor divergence, err={err}");
+    }
+}

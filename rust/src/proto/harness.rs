@@ -1,0 +1,83 @@
+//! Test harness: run a two-party protocol program (SPMD) over real channel
+//! transports with seeded providers, and reconstruct the result.
+
+use crate::core::fixed::{decode_vec, encode_vec};
+use crate::net::stats::StatsSnapshot;
+use crate::net::transport::channel_pair;
+use crate::proto::ctx::PartyCtx;
+use crate::sharing::provider::FastSeededProvider;
+use crate::sharing::share;
+
+static SESSION_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+fn fresh_session() -> String {
+    let n = SESSION_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    format!("testsession-{n}")
+}
+
+/// Build a connected pair of contexts with seeded providers.
+pub fn ctx_pair() -> (PartyCtx, PartyCtx) {
+    let session = fresh_session();
+    let (t0, t1) = channel_pair();
+    let c0 = PartyCtx::new(
+        0,
+        Box::new(t0),
+        Box::new(FastSeededProvider::new_fast(&session, 0)),
+        11,
+    );
+    let c1 = PartyCtx::new(
+        1,
+        Box::new(t1),
+        Box::new(FastSeededProvider::new_fast(&session, 1)),
+        22,
+    );
+    (c0, c1)
+}
+
+/// Share the two real-valued inputs, run `f` as both parties on two threads,
+/// reconstruct and decode the result.
+pub fn run_pair_with_inputs<F>(x: &[f64], y: &[f64], f: F) -> Vec<f64>
+where
+    F: Fn(&mut PartyCtx, &[u64], &[u64]) -> Vec<u64> + Send + Sync,
+{
+    let (out, _) = run_pair_collect_stats(x, y, f);
+    out
+}
+
+/// Same as [`run_pair_with_inputs`] but also returns party 0's stats
+/// snapshot (both parties are symmetric for rounds; bytes are per party).
+pub fn run_pair_collect_stats<F>(x: &[f64], y: &[f64], f: F) -> (Vec<f64>, StatsSnapshot)
+where
+    F: Fn(&mut PartyCtx, &[u64], &[u64]) -> Vec<u64> + Send + Sync,
+{
+    let mut rng = crate::core::rng::Xoshiro::seed_from(0xDEAD);
+    let (x0, x1) = share(&encode_vec(x), &mut rng);
+    let (y0, y1) = share(&encode_vec(y), &mut rng);
+    let (mut c0, mut c1) = ctx_pair();
+    let stats0 = c0.stats.clone();
+    let (s0, s1) = std::thread::scope(|scope| {
+        let h0 = scope.spawn(|| f(&mut c0, &x0, &y0));
+        let h1 = scope.spawn(|| f(&mut c1, &x1, &y1));
+        (h0.join().expect("party 0 panicked"), h1.join().expect("party 1 panicked"))
+    });
+    let rec = crate::sharing::reconstruct(&s0, &s1);
+    (decode_vec(&rec), stats0.snapshot())
+}
+
+/// Run a protocol whose output is at *integer* scale (e.g. comparison bits):
+/// reconstruct without fixed-point decoding.
+pub fn run_pair_raw_out<F>(x: &[f64], y: &[f64], f: F) -> Vec<u64>
+where
+    F: Fn(&mut PartyCtx, &[u64], &[u64]) -> Vec<u64> + Send + Sync,
+{
+    let mut rng = crate::core::rng::Xoshiro::seed_from(0xBEEF);
+    let (x0, x1) = share(&encode_vec(x), &mut rng);
+    let (y0, y1) = share(&encode_vec(y), &mut rng);
+    let (mut c0, mut c1) = ctx_pair();
+    let (s0, s1) = std::thread::scope(|scope| {
+        let h0 = scope.spawn(|| f(&mut c0, &x0, &y0));
+        let h1 = scope.spawn(|| f(&mut c1, &x1, &y1));
+        (h0.join().expect("party 0 panicked"), h1.join().expect("party 1 panicked"))
+    });
+    crate::sharing::reconstruct(&s0, &s1)
+}

@@ -1,0 +1,202 @@
+//! Privacy-preserving LayerNorm (Eq. 3).
+//!
+//! * [`layernorm_secformer`] — `Π_LayerNorm` (Algorithm 2): Goldschmidt
+//!   inverse square root with η-deflation over the *sum* of squared
+//!   deviations (Σ, not σ²; that is why η = 2000 centres the hidden-size
+//!   768 regime — see DESIGN.md "Protocol fidelity notes").
+//! * [`layernorm_crypten`] — the CrypTen baseline: Newton rsqrt (with its
+//!   exponential initial value) over the mean variance.
+//!
+//! γ and β are *shares* (model weights are private), broadcast per row.
+
+use crate::proto::approx::rsqrt_crypten_composed;
+use crate::proto::ctx::PartyCtx;
+use crate::proto::goldschmidt::{rsqrt_goldschmidt, ETA_LAYERNORM, RSQRT_GOLD_ITERS};
+use crate::proto::prim::{add, add_public, mul, mul_public, square};
+
+fn mean_center(
+    ctx: &mut PartyCtx,
+    x: &[u64],
+    rows: usize,
+    n: usize,
+) -> (Vec<u64>, Vec<u64>) {
+    // mean = Σx/n per row (public 1/n multiply), xc = x − mean
+    let sums: Vec<u64> = (0..rows)
+        .map(|r| {
+            x[r * n..(r + 1) * n]
+                .iter()
+                .fold(0u64, |acc, &v| acc.wrapping_add(v))
+        })
+        .collect();
+    let mean = mul_public(ctx, &sums, 1.0 / n as f64);
+    let mut xc = Vec::with_capacity(rows * n);
+    for r in 0..rows {
+        let m = mean[r];
+        xc.extend(x[r * n..(r + 1) * n].iter().map(|&v| v.wrapping_sub(m)));
+    }
+    (xc, mean)
+}
+
+fn bcast(rowv: &[u64], rows: usize, n: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(rows * n);
+    for r in 0..rows {
+        out.extend(std::iter::repeat(rowv[r]).take(n));
+    }
+    out
+}
+
+fn tile_cols(colv: &[u64], rows: usize, n: usize) -> Vec<u64> {
+    assert_eq!(colv.len(), n);
+    let mut out = Vec::with_capacity(rows * n);
+    for _ in 0..rows {
+        out.extend_from_slice(colv);
+    }
+    out
+}
+
+/// Apply γ (scale) and β (shift) column parameters, both shared.
+fn affine(
+    ctx: &mut PartyCtx,
+    norm: &[u64],
+    gamma: &[u64],
+    beta: &[u64],
+    rows: usize,
+    n: usize,
+) -> Vec<u64> {
+    let g = tile_cols(gamma, rows, n);
+    let b = tile_cols(beta, rows, n);
+    let scaled = mul(ctx, norm, &g);
+    add(&scaled, &b)
+}
+
+/// `Π_LayerNorm` (Algorithm 2): Goldschmidt rsqrt of Σ(x−x̄)² with
+/// deflation; normalization factor √n folded into the public un-deflation
+/// constant.
+pub fn layernorm_secformer(
+    ctx: &mut PartyCtx,
+    x: &[u64],
+    gamma: &[u64],
+    beta: &[u64],
+    rows: usize,
+    n: usize,
+) -> Vec<u64> {
+    let (xc, _mean) = mean_center(ctx, x, rows, n);
+    let sq = square(ctx, &xc);
+    let ssq: Vec<u64> = (0..rows)
+        .map(|r| {
+            sq[r * n..(r + 1) * n]
+                .iter()
+                .fold(0u64, |acc, &v| acc.wrapping_add(v))
+        })
+        .collect();
+    let ssq = add_public(ctx, &ssq, 1e-3); // ε
+    // 1/√Σ via deflated Goldschmidt; (x−x̄)/σ = (x−x̄)·√n·(1/√Σ)
+    let rinv = rsqrt_goldschmidt(ctx, &ssq, ETA_LAYERNORM, RSQRT_GOLD_ITERS);
+    let rinv = mul_public(ctx, &rinv, (n as f64).sqrt());
+    let norm = mul(ctx, &xc, &bcast(&rinv, rows, n));
+    affine(ctx, &norm, gamma, beta, rows, n)
+}
+
+/// CrypTen baseline: mean variance, then the sequential `Π_rSqrt`+`Π_Div`
+/// chain (sqrt followed by Newton reciprocal) — the expensive path the
+/// paper's Fig 6 measures against.
+pub fn layernorm_crypten(
+    ctx: &mut PartyCtx,
+    x: &[u64],
+    gamma: &[u64],
+    beta: &[u64],
+    rows: usize,
+    n: usize,
+) -> Vec<u64> {
+    let (xc, _mean) = mean_center(ctx, x, rows, n);
+    let sq = square(ctx, &xc);
+    let ssq: Vec<u64> = (0..rows)
+        .map(|r| {
+            sq[r * n..(r + 1) * n]
+                .iter()
+                .fold(0u64, |acc, &v| acc.wrapping_add(v))
+        })
+        .collect();
+    let var = mul_public(ctx, &ssq, 1.0 / n as f64);
+    let var = add_public(ctx, &var, 1e-3);
+    let rinv = rsqrt_crypten_composed(ctx, &var);
+    let norm = mul(ctx, &xc, &bcast(&rinv, rows, n));
+    affine(ctx, &norm, gamma, beta, rows, n)
+}
+
+/// Plaintext reference.
+pub fn layernorm_ref(x: &[f64], gamma: &[f64], beta: &[f64]) -> Vec<f64> {
+    let n = x.len() as f64;
+    let mean = x.iter().sum::<f64>() / n;
+    let var = x.iter().map(|&v| (v - mean) * (v - mean)).sum::<f64>() / n;
+    x.iter()
+        .enumerate()
+        .map(|(i, &v)| gamma[i] * (v - mean) / (var + 1e-3 / n).sqrt() + beta[i])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::fixed::{decode_vec, encode_vec};
+    use crate::proto::harness::ctx_pair;
+    use crate::sharing::{reconstruct, share};
+
+    fn run_layernorm<F>(x: &[f64], gamma: &[f64], beta: &[f64], rows: usize, n: usize, f: F) -> Vec<f64>
+    where
+        F: Fn(&mut crate::proto::ctx::PartyCtx, &[u64], &[u64], &[u64], usize, usize) -> Vec<u64>
+            + Send
+            + Sync,
+    {
+        let mut rng = crate::core::rng::Xoshiro::seed_from(91);
+        let (x0, x1) = share(&encode_vec(x), &mut rng);
+        let (g0, g1) = share(&encode_vec(gamma), &mut rng);
+        let (b0, b1) = share(&encode_vec(beta), &mut rng);
+        let (mut c0, mut c1) = ctx_pair();
+        let (s0, s1) = std::thread::scope(|s| {
+            let h0 = s.spawn(|| f(&mut c0, &x0, &g0, &b0, rows, n));
+            let h1 = s.spawn(|| f(&mut c1, &x1, &g1, &b1, rows, n));
+            (h0.join().unwrap(), h1.join().unwrap())
+        });
+        decode_vec(&reconstruct(&s0, &s1))
+    }
+
+    fn check(rows: usize, n: usize, spread: f64, tol: f64, secformer: bool) {
+        let mut rng = crate::core::rng::Xoshiro::seed_from(5 + n as u64);
+        let x: Vec<f64> = (0..rows * n).map(|_| rng.normal() * spread).collect();
+        let gamma: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 1.5)).collect();
+        let beta: Vec<f64> = (0..n).map(|_| rng.uniform(-0.5, 0.5)).collect();
+        let got = if secformer {
+            run_layernorm(&x, &gamma, &beta, rows, n, layernorm_secformer)
+        } else {
+            run_layernorm(&x, &gamma, &beta, rows, n, layernorm_crypten)
+        };
+        for r in 0..rows {
+            let expect = layernorm_ref(&x[r * n..(r + 1) * n], &gamma, &beta);
+            for i in 0..n {
+                assert!(
+                    (got[r * n + i] - expect[i]).abs() < tol,
+                    "r={r} i={i} got={} expect={}",
+                    got[r * n + i],
+                    expect[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn secformer_layernorm_matches_reference() {
+        // Σ ∈ [2, 5980] region for η = 2000: n=64, unit-ish variance.
+        check(4, 64, 1.0, 0.05, true);
+    }
+
+    #[test]
+    fn secformer_layernorm_larger_hidden() {
+        check(2, 256, 1.0, 0.05, true);
+    }
+
+    #[test]
+    fn crypten_layernorm_matches_reference() {
+        check(4, 64, 1.0, 0.08, false);
+    }
+}

@@ -1,0 +1,80 @@
+//! Privacy-preserving maximum by tree reduction (Knott et al. 2021).
+//!
+//! `log2(n)` levels; each level runs one batched `Π_LT` and one batched raw
+//! multiply across all surviving pairs of all rows — this is the dominant
+//! cost of the exact softmax (Section 2.2: "the biggest obstacle").
+
+use crate::proto::bits::lt;
+use crate::proto::ctx::PartyCtx;
+use crate::proto::prim::{mul_raw, sub};
+
+/// Row-wise maximum of an (rows × n) shared matrix → (rows,) shares.
+pub fn max_tree(ctx: &mut PartyCtx, x: &[u64], rows: usize, n: usize) -> Vec<u64> {
+    assert_eq!(x.len(), rows * n);
+    // Work on a compacting copy: `width` live columns per row.
+    let mut cur = x.to_vec();
+    let mut width = n;
+    while width > 1 {
+        let half = width / 2;
+        let odd = width % 2;
+        // Gather pairs (a, b) across all rows.
+        let mut a = Vec::with_capacity(rows * half);
+        let mut b = Vec::with_capacity(rows * half);
+        for r in 0..rows {
+            let row = &cur[r * width..(r + 1) * width];
+            a.extend_from_slice(&row[..half]);
+            b.extend_from_slice(&row[half..2 * half]);
+        }
+        // bit = (a < b); max = a + bit·(b − a)
+        let bit = lt(ctx, &a, &b);
+        let diff = sub(&b, &a);
+        let sel = mul_raw(ctx, &bit, &diff);
+        let mut next = Vec::with_capacity(rows * (half + odd));
+        for r in 0..rows {
+            for i in 0..half {
+                next.push(a[r * half + i].wrapping_add(sel[r * half + i]));
+            }
+            if odd == 1 {
+                next.push(cur[r * width + width - 1]);
+            }
+        }
+        cur = next;
+        width = half + odd;
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::harness::run_pair_with_inputs;
+
+    #[test]
+    fn max_of_rows() {
+        // 3 rows × 8 cols
+        let mut rng = crate::core::rng::Xoshiro::seed_from(21);
+        let x: Vec<f64> = (0..24).map(|_| rng.uniform(-50.0, 50.0)).collect();
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| max_tree(ctx, xs, 3, 8));
+        for r in 0..3 {
+            let expect = x[r * 8..(r + 1) * 8].iter().cloned().fold(f64::MIN, f64::max);
+            assert!((got[r] - expect).abs() < 1e-2, "row {r}");
+        }
+    }
+
+    #[test]
+    fn max_odd_width() {
+        let x = vec![3.0, -1.0, 7.0, 2.0, 5.0, 1.0, 9.0, 0.0, 4.0, 8.0];
+        // 2 rows × 5 cols
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| max_tree(ctx, xs, 2, 5));
+        assert!((got[0] - 7.0).abs() < 1e-2);
+        assert!((got[1] - 9.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn max_single_column_is_identity() {
+        let x = vec![-4.5, 2.25];
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| max_tree(ctx, xs, 2, 1));
+        assert!((got[0] + 4.5).abs() < 1e-3);
+        assert!((got[1] - 2.25).abs() < 1e-3);
+    }
+}

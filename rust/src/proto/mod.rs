@@ -1,0 +1,36 @@
+//! SMPC protocols.
+//!
+//! Layout mirrors the paper:
+//! * [`ctx`] — per-party execution context (peer link, dealer, stats).
+//! * [`prim`] — Table 1 linear primitives: `Π_Add`, `Π_Mul`, `Π_Square`,
+//!   `Π_MatMul`, truncation, public-constant ops.
+//! * [`bits`] — `Π_LT` via A2B conversion + Kogge–Stone adder + B2A
+//!   (Appendix E.2).
+//! * [`trig`] — `Π_Sin` of Zheng et al. (2023b), Algorithm 4.
+//! * [`approx`] — CrypTen's nonlinear stack (Appendix E.2): `Π_Exp` by
+//!   repeated squaring, Newton reciprocal / rsqrt.
+//! * [`goldschmidt`] — SecFormer's deflated Goldschmidt rsqrt & division
+//!   (Algorithms 2–3).
+//! * [`gelu`] — `Π_GeLU` (Algorithm 1) + PUMA / MPCFormer / CrypTen
+//!   baselines.
+//! * [`softmax`] — `Π_2Quad` (Algorithm 3) + exact softmax + baselines.
+//! * [`layernorm`] — `Π_LayerNorm` (Algorithm 2) + CrypTen baseline.
+//! * [`max`] — tree-reduction maximum (used by the exact softmax).
+//! * [`cost`] — analytic round/volume model (Table 1, Appendix D.2) used to
+//!   project measured runs to the paper's full scale.
+
+pub mod approx;
+pub mod bits;
+pub mod cost;
+pub mod ctx;
+pub mod gelu;
+pub mod goldschmidt;
+pub mod layernorm;
+pub mod max;
+pub mod prim;
+pub mod softmax;
+pub mod trig;
+
+pub mod harness;
+
+pub use ctx::PartyCtx;

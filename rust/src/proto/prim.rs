@@ -1,0 +1,346 @@
+//! Linear SMPC primitives (Table 1): `Π_Add`, `Π_Mul`, `Π_Square`,
+//! `Π_MatMul`, truncation and public-constant arithmetic.
+//!
+//! Conventions:
+//! * `_raw` variants operate in pure ring semantics (no truncation); they
+//!   are used when one operand is an integer-scale value (e.g. a comparison
+//!   bit).
+//! * Un-suffixed variants are fixed-point: they truncate the double-scale
+//!   product back to `FRAC_BITS` with SecureML local truncation.
+
+use crate::core::fixed::{self, encode, FRAC_BITS};
+use crate::proto::ctx::PartyCtx;
+
+// ---------- local (zero-communication) helpers ----------
+
+/// `Π_Add` on shares: purely local.
+pub fn add(x: &[u64], y: &[u64]) -> Vec<u64> {
+    x.iter().zip(y).map(|(&a, &b)| a.wrapping_add(b)).collect()
+}
+
+pub fn sub(x: &[u64], y: &[u64]) -> Vec<u64> {
+    x.iter().zip(y).map(|(&a, &b)| a.wrapping_sub(b)).collect()
+}
+
+pub fn neg(x: &[u64]) -> Vec<u64> {
+    x.iter().map(|&a| a.wrapping_neg()).collect()
+}
+
+/// Add a public real constant: only party 0 offsets its share.
+pub fn add_public(ctx: &PartyCtx, x: &[u64], c: f64) -> Vec<u64> {
+    let e = encode(c);
+    if ctx.id == 0 {
+        x.iter().map(|&a| a.wrapping_add(e)).collect()
+    } else {
+        x.to_vec()
+    }
+}
+
+/// `c - x` for a public real constant.
+pub fn sub_from_public(ctx: &PartyCtx, c: f64, x: &[u64]) -> Vec<u64> {
+    let e = encode(c);
+    if ctx.id == 0 {
+        x.iter().map(|&a| e.wrapping_sub(a)).collect()
+    } else {
+        x.iter().map(|&a| a.wrapping_neg()).collect()
+    }
+}
+
+/// Multiply by a public real constant (fixed-point: scale then truncate).
+pub fn mul_public(ctx: &PartyCtx, x: &[u64], c: f64) -> Vec<u64> {
+    let e = encode(c);
+    x.iter()
+        .map(|&a| fixed::trunc_share(a.wrapping_mul(e), ctx.id, FRAC_BITS))
+        .collect()
+}
+
+/// Multiply by a public *ring* constant (no truncation).
+pub fn scale_ring(x: &[u64], c: u64) -> Vec<u64> {
+    x.iter().map(|&a| a.wrapping_mul(c)).collect()
+}
+
+/// Truncate shares by `f` bits (SecureML local truncation).
+pub fn trunc(ctx: &PartyCtx, x: &[u64], f: u32) -> Vec<u64> {
+    x.iter().map(|&a| fixed::trunc_share(a, ctx.id, f)).collect()
+}
+
+/// Share of the public constant vector `c` (party 0 holds it, party 1 zero).
+pub fn const_share(ctx: &PartyCtx, c: &[f64]) -> Vec<u64> {
+    if ctx.id == 0 {
+        c.iter().map(|&v| encode(v)).collect()
+    } else {
+        vec![0u64; c.len()]
+    }
+}
+
+// ---------- Beaver-triple protocols ----------
+
+/// `Π_Mul`, ring semantics: `z = x * y` elementwise, 1 round.
+pub fn mul_raw(ctx: &mut PartyCtx, x: &[u64], y: &[u64]) -> Vec<u64> {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let t = ctx.prov.mul_triple(n);
+    let d = sub(x, &t.a);
+    let e = sub(y, &t.b);
+    let opened = ctx.exchange_many(&[&d, &e]);
+    let d_open = add(&d, &opened[0]);
+    let e_open = add(&e, &opened[1]);
+    let j = ctx.id as u64;
+    (0..n)
+        .map(|i| {
+            let mut z = t.c[i]
+                .wrapping_add(t.a[i].wrapping_mul(e_open[i]))
+                .wrapping_add(t.b[i].wrapping_mul(d_open[i]));
+            if j == 1 {
+                z = z.wrapping_add(d_open[i].wrapping_mul(e_open[i]));
+            }
+            z
+        })
+        .collect()
+}
+
+/// `Π_Mul`, fixed-point: multiply then truncate.
+pub fn mul(ctx: &mut PartyCtx, x: &[u64], y: &[u64]) -> Vec<u64> {
+    let z = mul_raw(ctx, x, y);
+    trunc(ctx, &z, FRAC_BITS)
+}
+
+/// `Π_Square`, ring semantics, 1 round (half the open volume of `Π_Mul`).
+pub fn square_raw(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
+    let n = x.len();
+    let t = ctx.prov.square_pair(n);
+    let d = sub(x, &t.a);
+    let opened = ctx.exchange(&d);
+    let d_open = add(&d, &opened);
+    let j = ctx.id as u64;
+    (0..n)
+        .map(|i| {
+            let mut z = t.c[i].wrapping_add(
+                t.a[i].wrapping_mul(d_open[i]).wrapping_mul(2),
+            );
+            if j == 1 {
+                z = z.wrapping_add(d_open[i].wrapping_mul(d_open[i]));
+            }
+            z
+        })
+        .collect()
+}
+
+/// `Π_Square`, fixed-point.
+pub fn square(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
+    let z = square_raw(ctx, x);
+    trunc(ctx, &z, FRAC_BITS)
+}
+
+/// Batched `{p·m, m²}` in a single round — the inner step of the
+/// Goldschmidt rsqrt iteration (Appendix D.2: "one call to Π_Square and two
+/// calls to Π_Mul in parallel per iteration").
+pub fn mul_and_square(
+    ctx: &mut PartyCtx,
+    p: &[u64],
+    m: &[u64],
+) -> (Vec<u64>, Vec<u64>) {
+    let n = p.len();
+    assert_eq!(m.len(), n);
+    let tm = ctx.prov.mul_triple(n);
+    let ts = ctx.prov.square_pair(n);
+    let d_mul = sub(p, &tm.a);
+    let e_mul = sub(m, &tm.b);
+    let d_sq = sub(m, &ts.a);
+    let opened = ctx.exchange_many(&[&d_mul, &e_mul, &d_sq]);
+    let d = add(&d_mul, &opened[0]);
+    let e = add(&e_mul, &opened[1]);
+    let ds = add(&d_sq, &opened[2]);
+    let j = ctx.id as u64;
+    let pm: Vec<u64> = (0..n)
+        .map(|i| {
+            let mut z = tm.c[i]
+                .wrapping_add(tm.a[i].wrapping_mul(e[i]))
+                .wrapping_add(tm.b[i].wrapping_mul(d[i]));
+            if j == 1 {
+                z = z.wrapping_add(d[i].wrapping_mul(e[i]));
+            }
+            fixed::trunc_share(z, ctx.id, FRAC_BITS)
+        })
+        .collect();
+    let mm: Vec<u64> = (0..n)
+        .map(|i| {
+            let mut z =
+                ts.c[i].wrapping_add(ts.a[i].wrapping_mul(ds[i]).wrapping_mul(2));
+            if j == 1 {
+                z = z.wrapping_add(ds[i].wrapping_mul(ds[i]));
+            }
+            fixed::trunc_share(z, ctx.id, FRAC_BITS)
+        })
+        .collect();
+    (pm, mm)
+}
+
+/// Two independent fixed-point multiplies sharing one round — the inner
+/// step of the Goldschmidt division iteration.
+pub fn mul2(
+    ctx: &mut PartyCtx,
+    x1: &[u64],
+    y1: &[u64],
+    x2: &[u64],
+    y2: &[u64],
+) -> (Vec<u64>, Vec<u64>) {
+    let (n1, n2) = (x1.len(), x2.len());
+    let t = ctx.prov.mul_triple(n1 + n2);
+    let x: Vec<u64> = x1.iter().chain(x2.iter()).copied().collect();
+    let y: Vec<u64> = y1.iter().chain(y2.iter()).copied().collect();
+    let d = sub(&x, &t.a);
+    let e = sub(&y, &t.b);
+    let opened = ctx.exchange_many(&[&d, &e]);
+    let d_open = add(&d, &opened[0]);
+    let e_open = add(&e, &opened[1]);
+    let j = ctx.id as u64;
+    let z: Vec<u64> = (0..n1 + n2)
+        .map(|i| {
+            let mut v = t.c[i]
+                .wrapping_add(t.a[i].wrapping_mul(e_open[i]))
+                .wrapping_add(t.b[i].wrapping_mul(d_open[i]));
+            if j == 1 {
+                v = v.wrapping_add(d_open[i].wrapping_mul(e_open[i]));
+            }
+            fixed::trunc_share(v, ctx.id, FRAC_BITS)
+        })
+        .collect();
+    (z[..n1].to_vec(), z[n1..].to_vec())
+}
+
+/// `Π_MatMul`, ring semantics: `Z (m×n) = X (m×k) · Y (k×n)`, 1 round.
+pub fn matmul_raw(
+    ctx: &mut PartyCtx,
+    x: &[u64],
+    y: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<u64> {
+    use crate::core::tensor::matmul_ring;
+    assert_eq!(x.len(), m * k);
+    assert_eq!(y.len(), k * n);
+    let t = ctx.prov.matmul_triple(m, k, n);
+    let d = sub(x, &t.a);
+    let e = sub(y, &t.b);
+    let opened = ctx.exchange_many(&[&d, &e]);
+    let d_open = add(&d, &opened[0]);
+    let e_open = add(&e, &opened[1]);
+    // Z_j = C_j + A_j·E + D·B_j (+ D·E for party 1)
+    let mut z = t.c.clone();
+    let mut tmp = vec![0u64; m * n];
+    matmul_ring(&t.a, &e_open, &mut tmp, m, k, n);
+    for (zi, ti) in z.iter_mut().zip(&tmp) {
+        *zi = zi.wrapping_add(*ti);
+    }
+    tmp.iter_mut().for_each(|v| *v = 0);
+    matmul_ring(&d_open, &t.b, &mut tmp, m, k, n);
+    for (zi, ti) in z.iter_mut().zip(&tmp) {
+        *zi = zi.wrapping_add(*ti);
+    }
+    if ctx.id == 1 {
+        tmp.iter_mut().for_each(|v| *v = 0);
+        matmul_ring(&d_open, &e_open, &mut tmp, m, k, n);
+        for (zi, ti) in z.iter_mut().zip(&tmp) {
+            *zi = zi.wrapping_add(*ti);
+        }
+    }
+    z
+}
+
+/// `Π_MatMul`, fixed-point.
+pub fn matmul(
+    ctx: &mut PartyCtx,
+    x: &[u64],
+    y: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<u64> {
+    let z = matmul_raw(ctx, x, y, m, k, n);
+    trunc(ctx, &z, FRAC_BITS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::fixed::{decode_vec, encode_vec};
+    use crate::proto::harness::run_pair_with_inputs;
+
+    #[test]
+    fn mul_fixed_point() {
+        let x = vec![1.5, -2.0, 3.25, 0.0, 100.0];
+        let y = vec![2.0, 2.0, -1.0, 5.0, 0.01];
+        let got = run_pair_with_inputs(&x, &y, |ctx, xs, ys| mul(ctx, xs, ys));
+        for i in 0..x.len() {
+            assert!((got[i] - x[i] * y[i]).abs() < 1e-2, "i={i} got={}", got[i]);
+        }
+    }
+
+    #[test]
+    fn square_fixed_point() {
+        let x = vec![1.5, -2.0, 7.0, 0.125];
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| square(ctx, xs));
+        for i in 0..x.len() {
+            assert!((got[i] - x[i] * x[i]).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn mul_and_square_matches() {
+        let p = vec![1.0, 2.0, -0.5];
+        let m = vec![1.25, 0.5, 3.0];
+        let got = run_pair_with_inputs(&p, &m, |ctx, ps, ms| {
+            let (pm, mm) = mul_and_square(ctx, ps, ms);
+            let mut out = pm;
+            out.extend(mm);
+            out
+        });
+        for i in 0..3 {
+            assert!((got[i] - p[i] * m[i]).abs() < 1e-2);
+            assert!((got[3 + i] - m[i] * m[i]).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn matmul_fixed_point() {
+        // X (2×3) · Y (3×2)
+        let x = vec![1.0, 2.0, 3.0, -1.0, 0.5, 2.0];
+        let y = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let got = run_pair_with_inputs(&x, &y, |ctx, xs, ys| matmul(ctx, xs, ys, 2, 3, 2));
+        let expect = [4.0, 5.0, 1.0, 2.5];
+        for i in 0..4 {
+            assert!((got[i] - expect[i]).abs() < 1e-2, "i={i} got={}", got[i]);
+        }
+    }
+
+    #[test]
+    fn public_constant_ops() {
+        let x = vec![1.0, -2.0];
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| {
+            let a = add_public(ctx, xs, 3.0);
+            let b = sub_from_public(ctx, 10.0, &a);
+            mul_public(ctx, &b, 0.5)
+        });
+        // 0.5 * (10 - (x + 3))
+        assert!((got[0] - 3.0).abs() < 1e-3);
+        assert!((got[1] - 4.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn mul_round_and_volume_accounting() {
+        // Π_Mul must cost exactly 1 round and 2n elements (=128n bits sent
+        // per party), matching Table 1's 256-bit total for n=1.
+        let x = vec![1.0f64; 10];
+        let (outs, stats) = crate::proto::harness::run_pair_collect_stats(
+            &x,
+            &x,
+            |ctx, xs, ys| mul(ctx, xs, ys),
+        );
+        let _ = outs;
+        assert_eq!(stats.total_rounds(), 1);
+        assert_eq!(stats.total_bytes(), 2 * 10 * 8);
+        let _ = decode_vec(&encode_vec(&x)); // silence unused import
+    }
+}

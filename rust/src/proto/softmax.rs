@@ -1,0 +1,191 @@
+//! Privacy-preserving softmax family.
+//!
+//! * [`softmax_exact`] — the CrypTen/PUMA path: max-stabilized exponentials
+//!   plus a Newton reciprocal (Eq. 1) — the 77%-of-runtime bottleneck of
+//!   Fig 1(a).
+//! * [`softmax_2quad_secformer`] — `Π_2Quad` (Algorithm 3): MPCFormer's
+//!   2Quad normalization with SecFormer's deflated Goldschmidt division.
+//! * [`softmax_2quad_mpcformer`] — 2Quad with CrypTen's Newton division
+//!   (what MPCFormer actually executes).
+//! * [`softmax_2relu`] — the 2ReLU variant MPCFormer uses for BERT_LARGE.
+
+use crate::proto::approx::{reciprocal_newton, relu, RECIP_ITERS};
+use crate::proto::ctx::PartyCtx;
+use crate::proto::goldschmidt::{div_goldschmidt_rows, DIV_GOLD_ITERS, ETA_SOFTMAX};
+use crate::proto::max::max_tree;
+use crate::proto::prim::{add_public, mul, square};
+
+/// Default shift constant `c` in 2Quad's `(x + c)²` (MPCFormer).
+pub const QUAD2_SHIFT: f64 = 5.0;
+
+/// Broadcast a (rows,) vector across row-major (rows × n) data.
+fn bcast(rowv: &[u64], rows: usize, n: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(rows * n);
+    for r in 0..rows {
+        out.extend(std::iter::repeat(rowv[r]).take(n));
+    }
+    out
+}
+
+fn sum_rows(x: &[u64], rows: usize, n: usize) -> Vec<u64> {
+    (0..rows)
+        .map(|r| {
+            x[r * n..(r + 1) * n]
+                .iter()
+                .fold(0u64, |acc, &v| acc.wrapping_add(v))
+        })
+        .collect()
+}
+
+/// Exact softmax (Eq. 1): τ = max(x); e^{x−τ} / Σ e^{x−τ}.
+pub fn softmax_exact(ctx: &mut PartyCtx, x: &[u64], rows: usize, n: usize) -> Vec<u64> {
+    let tau = max_tree(ctx, x, rows, n);
+    let tau_b = bcast(&tau, rows, n);
+    let shifted: Vec<u64> =
+        x.iter().zip(&tau_b).map(|(&a, &b)| a.wrapping_sub(b)).collect();
+    let e = crate::proto::approx::exp(ctx, &shifted);
+    let s = sum_rows(&e, rows, n);
+    let r = reciprocal_newton(ctx, &s, RECIP_ITERS);
+    mul(ctx, &e, &bcast(&r, rows, n))
+}
+
+/// Shared 2Quad front end: `p = (x+c)²`, `q = Σ p` per row.
+fn quad2_front(
+    ctx: &mut PartyCtx,
+    x: &[u64],
+    rows: usize,
+    n: usize,
+) -> (Vec<u64>, Vec<u64>) {
+    let u = add_public(ctx, x, QUAD2_SHIFT);
+    let p = square(ctx, &u);
+    let q = sum_rows(&p, rows, n);
+    (p, q)
+}
+
+/// `Π_2Quad` (Algorithm 3): 2Quad with deflated Goldschmidt division.
+pub fn softmax_2quad_secformer(
+    ctx: &mut PartyCtx,
+    x: &[u64],
+    rows: usize,
+    n: usize,
+) -> Vec<u64> {
+    let (p, q) = quad2_front(ctx, x, rows, n);
+    div_goldschmidt_rows(ctx, &p, &q, rows, n, ETA_SOFTMAX, DIV_GOLD_ITERS)
+}
+
+/// MPCFormer's 2Quad: same quadratic front end, CrypTen Newton reciprocal
+/// for the normalization.
+pub fn softmax_2quad_mpcformer(
+    ctx: &mut PartyCtx,
+    x: &[u64],
+    rows: usize,
+    n: usize,
+) -> Vec<u64> {
+    let (p, q) = quad2_front(ctx, x, rows, n);
+    let r = reciprocal_newton(ctx, &q, RECIP_ITERS);
+    mul(ctx, &p, &bcast(&r, rows, n))
+}
+
+/// MPCFormer's 2ReLU (used for BERT_LARGE): ReLU(x)/Σ ReLU(x).
+pub fn softmax_2relu(ctx: &mut PartyCtx, x: &[u64], rows: usize, n: usize) -> Vec<u64> {
+    let r = relu(ctx, x);
+    // Σ may be zero if everything is negative; add a small epsilon.
+    let s = sum_rows(&r, rows, n);
+    let s = add_public(ctx, &s, 1e-2);
+    let inv = reciprocal_newton(ctx, &s, RECIP_ITERS);
+    mul(ctx, &r, &bcast(&inv, rows, n))
+}
+
+/// Plaintext references for tests / accuracy tables.
+pub fn softmax_ref(x: &[f64]) -> Vec<f64> {
+    let m = x.iter().cloned().fold(f64::MIN, f64::max);
+    let e: Vec<f64> = x.iter().map(|&v| (v - m).exp()).collect();
+    let s: f64 = e.iter().sum();
+    e.iter().map(|&v| v / s).collect()
+}
+
+pub fn quad2_ref(x: &[f64], c: f64) -> Vec<f64> {
+    let p: Vec<f64> = x.iter().map(|&v| (v + c) * (v + c)).collect();
+    let s: f64 = p.iter().sum();
+    p.iter().map(|&v| v / s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::harness::run_pair_with_inputs;
+
+    #[test]
+    fn exact_softmax_matches_reference() {
+        // 2 rows × 8; values in the attention-score range.
+        let mut rng = crate::core::rng::Xoshiro::seed_from(31);
+        let x: Vec<f64> = (0..16).map(|_| rng.uniform(-4.0, 4.0)).collect();
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| softmax_exact(ctx, xs, 2, 8));
+        for r in 0..2 {
+            let expect = softmax_ref(&x[r * 8..(r + 1) * 8]);
+            let mut sum = 0.0;
+            for i in 0..8 {
+                assert!(
+                    (got[r * 8 + i] - expect[i]).abs() < 0.02,
+                    "r={r} i={i} got={} expect={}",
+                    got[r * 8 + i],
+                    expect[i]
+                );
+                sum += got[r * 8 + i];
+            }
+            assert!((sum - 1.0).abs() < 0.05, "row sum {sum}");
+        }
+    }
+
+    #[test]
+    fn secformer_2quad_matches_reference() {
+        let mut rng = crate::core::rng::Xoshiro::seed_from(33);
+        let x: Vec<f64> = (0..24).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| {
+            softmax_2quad_secformer(ctx, xs, 3, 8)
+        });
+        for r in 0..3 {
+            let expect = quad2_ref(&x[r * 8..(r + 1) * 8], QUAD2_SHIFT);
+            let mut sum = 0.0;
+            for i in 0..8 {
+                assert!(
+                    (got[r * 8 + i] - expect[i]).abs() < 5e-3,
+                    "r={r} i={i} got={} expect={}",
+                    got[r * 8 + i],
+                    expect[i]
+                );
+                sum += got[r * 8 + i];
+            }
+            assert!((sum - 1.0).abs() < 0.02, "row sum {sum}");
+        }
+    }
+
+    #[test]
+    fn mpcformer_2quad_agrees_with_secformer_numerically() {
+        let mut rng = crate::core::rng::Xoshiro::seed_from(35);
+        let x: Vec<f64> = (0..16).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let a = run_pair_with_inputs(&x, &x, |ctx, xs, _| {
+            softmax_2quad_secformer(ctx, xs, 2, 8)
+        });
+        let b = run_pair_with_inputs(&x, &x, |ctx, xs, _| {
+            softmax_2quad_mpcformer(ctx, xs, 2, 8)
+        });
+        for i in 0..16 {
+            assert!((a[i] - b[i]).abs() < 0.01, "i={i} {} vs {}", a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn relu2_normalizes_nonnegative() {
+        let x = vec![1.0, -2.0, 3.0, 0.5, -1.0, 2.5, 0.0, 1.0];
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| softmax_2relu(ctx, xs, 1, 8));
+        let sum: f64 = got.iter().sum();
+        assert!((sum - 1.0).abs() < 0.05, "sum {sum}");
+        for (i, &v) in got.iter().enumerate() {
+            assert!(v > -0.01, "i={i} v={v}");
+            if x[i] <= 0.0 {
+                assert!(v.abs() < 0.01, "i={i} v={v}");
+            }
+        }
+    }
+}

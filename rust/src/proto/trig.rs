@@ -1,0 +1,107 @@
+//! `Π_Sin` — privacy-preserving sine (Zheng et al. 2023b, Algorithm 4).
+//!
+//! The angle is encoded as a *ring-wrapped turn*: a real angle θ (in turns,
+//! i.e. fractions of one period) maps to `round(θ · 2^64) mod 2^64`, so the
+//! additive mask `t` wraps at exactly one period and the opened δ = θ − t
+//! is uniformly distributed — leaking nothing about θ. One round of
+//! communication:
+//!
+//!   sin(θ) = sin(δ)·cos(t) + cos(δ)·sin(t)
+//!
+//! with `(t, [sin t], [cos t])` dealt offline and `sin δ, cos δ` public.
+
+use crate::core::fixed::{self, encode, FRAC_BITS};
+use crate::proto::ctx::PartyCtx;
+
+/// Ring-angle multiplier for `sin(2π · k x / period)` on a fixed-point
+/// share of `x`: `angle = x_ring · mult(k, period)` wraps at the period.
+///
+/// `x_ring = x·2^16`, so `mult = k·2^48/period` gives
+/// `angle = x·k/period · 2^64` — the turn encoding.
+pub fn angle_multiplier(k: u32, period: f64) -> u64 {
+    ((k as f64) * 2f64.powi(48) / period).round() as u64
+}
+
+/// `Π_Sin` on ring-angle shares: returns fixed-point shares of `sin(2πθ)`
+/// where θ is the shared angle in turns. 1 round.
+pub fn sin_turns(ctx: &mut PartyCtx, angle: &[u64]) -> Vec<u64> {
+    let n = angle.len();
+    let tup = ctx.prov.sin_tuple(n);
+    // δ = θ − t, opened (uniform ⇒ safe).
+    let delta_sh: Vec<u64> =
+        (0..n).map(|i| angle[i].wrapping_sub(tup.t[i])).collect();
+    let delta = ctx.open(&delta_sh);
+    (0..n)
+        .map(|i| {
+            let d = delta[i] as f64 / 2f64.powi(64) * std::f64::consts::TAU;
+            let p = encode(d.sin()); // public
+            let q = encode(d.cos()); // public
+            // sin(θ) = sinδ·cos t + cosδ·sin t ; each product double-scale
+            let v = p
+                .wrapping_mul(tup.cos_t[i])
+                .wrapping_add(q.wrapping_mul(tup.sin_t[i]));
+            fixed::trunc_share(v, ctx.id, FRAC_BITS)
+        })
+        .collect()
+}
+
+/// Convenience: `sin(2π·k·x/period)` for fixed-point shares of x.
+pub fn sin_of(ctx: &mut PartyCtx, x: &[u64], k: u32, period: f64) -> Vec<u64> {
+    let m = angle_multiplier(k, period);
+    let angle: Vec<u64> = x.iter().map(|&v| v.wrapping_mul(m)).collect();
+    sin_turns(ctx, &angle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::harness::{run_pair_collect_stats, run_pair_with_inputs};
+
+    #[test]
+    fn sin_matches_reference() {
+        let x: Vec<f64> = (-20..=20).map(|i| i as f64 * 0.43).collect();
+        // sin(πx/10) = sin(2π · x/20)
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| sin_of(ctx, xs, 1, 20.0));
+        for i in 0..x.len() {
+            let expect = (std::f64::consts::PI * x[i] / 10.0).sin();
+            assert!(
+                (got[i] - expect).abs() < 5e-3,
+                "x={} got={} expect={}",
+                x[i],
+                got[i],
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn sin_harmonics() {
+        let x = vec![0.7, -3.3, 9.9];
+        for k in 1..=7u32 {
+            let got =
+                run_pair_with_inputs(&x, &x, |ctx, xs, _| sin_of(ctx, xs, k, 20.0));
+            for i in 0..x.len() {
+                let expect = (std::f64::consts::PI * k as f64 * x[i] / 10.0).sin();
+                assert!((got[i] - expect).abs() < 5e-3, "k={k} x={}", x[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn sin_wraps_outside_principal_period() {
+        // Periodicity must hold by construction of the ring encoding.
+        let x = vec![3.0, 3.0 + 20.0, 3.0 - 40.0];
+        let got = run_pair_with_inputs(&x, &x, |ctx, xs, _| sin_of(ctx, xs, 1, 20.0));
+        assert!((got[0] - got[1]).abs() < 1e-2);
+        assert!((got[0] - got[2]).abs() < 1e-2);
+    }
+
+    #[test]
+    fn sin_costs_one_round() {
+        let x = vec![1.0f64; 8];
+        let (_, stats) =
+            run_pair_collect_stats(&x, &x, |ctx, xs, _| sin_of(ctx, xs, 1, 20.0));
+        assert_eq!(stats.total_rounds(), 1);
+        assert_eq!(stats.total_bytes(), 8 * 8); // one u64 per element
+    }
+}

@@ -1,0 +1,119 @@
+//! Artifact manifest: the `manifest.txt` written by `aot.py` — one line per
+//! artifact, `key=value` pairs separated by spaces.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// "hidden" (seq×hidden f32 input), "tokens" (seq i32), or "smoke".
+    pub entry: String,
+    pub seq: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub intermediate: usize,
+    pub vocab: usize,
+    pub num_labels: usize,
+    /// Number of parameter tensors the executable expects before the input.
+    pub params: usize,
+}
+
+/// All artifacts in a directory.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &str) -> Result<Self> {
+        let dir = PathBuf::from(dir);
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("read {}/manifest.txt — run `make artifacts`", dir.display()))?;
+        Self::parse(&text, &dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut artifacts = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kv = BTreeMap::new();
+            for tok in line.split_whitespace() {
+                let Some((k, v)) = tok.split_once('=') else {
+                    bail!("manifest line {}: bad token '{tok}'", lineno + 1);
+                };
+                kv.insert(k.to_string(), v.to_string());
+            }
+            let get = |k: &str| -> Result<String> {
+                kv.get(k)
+                    .cloned()
+                    .with_context(|| format!("manifest line {}: missing '{k}'", lineno + 1))
+            };
+            let geti = |k: &str| -> Result<usize> {
+                Ok(get(k)?.parse::<usize>().with_context(|| format!("bad int for {k}"))?)
+            };
+            let meta = ArtifactMeta {
+                name: get("name")?,
+                file: dir.join(get("file")?),
+                entry: get("entry")?,
+                seq: geti("seq")?,
+                hidden: geti("hidden")?,
+                layers: geti("layers")?,
+                heads: geti("heads")?,
+                intermediate: geti("intermediate")?,
+                vocab: geti("vocab")?,
+                num_labels: geti("num_labels")?,
+                params: geti("params")?,
+            };
+            artifacts.insert(meta.name.clone(), meta);
+        }
+        Ok(ArtifactManifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest ({:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+name=a file=a.hlo.txt entry=hidden seq=16 hidden=64 layers=2 heads=4 intermediate=128 vocab=32 num_labels=2 params=38
+# comment
+
+name=b file=b.hlo.txt entry=tokens seq=16 hidden=64 layers=2 heads=4 intermediate=128 vocab=32 num_labels=2 params=38
+";
+
+    #[test]
+    fn parse_manifest() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("a").unwrap();
+        assert_eq!(a.seq, 16);
+        assert_eq!(a.entry, "hidden");
+        assert_eq!(a.file, Path::new("/tmp/x/a.hlo.txt"));
+        assert!(m.get("zzz").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(ArtifactManifest::parse("name=a no-equals-token", Path::new(".")).is_err());
+        assert!(ArtifactManifest::parse("name=a file=f.hlo.txt", Path::new(".")).is_err());
+    }
+}

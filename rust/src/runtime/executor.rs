@@ -1,0 +1,206 @@
+//! The plaintext model executor: PJRT CPU client + compiled artifact +
+//! `.swts` weights = a servable plaintext BERT, Python-free.
+
+use crate::nn::weights::WeightMap;
+use crate::runtime::artifact::ArtifactMeta;
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// A compiled artifact bound to a checkpoint, ready to execute.
+pub struct PlaintextModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Parameter literals in sorted-name order (the jax pytree order).
+    param_literals: Vec<xla::Literal>,
+    pub meta: ArtifactMeta,
+    /// Cumulative executions (telemetry).
+    pub executions: u64,
+    /// Compile time, for the serving logs.
+    pub compile_seconds: f64,
+}
+
+impl PlaintextModel {
+    /// Load HLO text, compile on the CPU PJRT client, encode the weights.
+    pub fn load(client: &xla::PjRtClient, meta: &ArtifactMeta, weights: &WeightMap) -> Result<Self> {
+        let t0 = Instant::now();
+        let path = meta
+            .file
+            .to_str()
+            .context("artifact path not utf-8")?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).with_context(|| format!("compile {path}"))?;
+
+        // The "hidden" entry is lowered without the embedding tables.
+        let skip_embed = meta.entry == "hidden";
+        let selected: Vec<(&String, &(Vec<f64>, Vec<usize>))> = weights
+            .iter()
+            .filter(|(name, _)| !(skip_embed && name.starts_with("embed.")))
+            .collect();
+        if selected.len() != meta.params {
+            bail!(
+                "checkpoint supplies {} tensors, artifact expects {}",
+                selected.len(),
+                meta.params
+            );
+        }
+        // BTreeMap iterates in sorted order == jax dict pytree flattening.
+        let mut param_literals = Vec::with_capacity(selected.len());
+        for (name, (data, shape)) in selected {
+            let f32s: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&f32s)
+                .reshape(&dims)
+                .with_context(|| format!("reshape weight {name} to {dims:?}"))?;
+            param_literals.push(lit);
+        }
+        Ok(PlaintextModel {
+            exe,
+            param_literals,
+            meta: meta.clone(),
+            executions: 0,
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn run(&mut self, input: xla::Literal) -> Result<Vec<f32>> {
+        let mut args: Vec<&xla::Literal> = self.param_literals.iter().collect();
+        args.push(&input);
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        self.executions += 1;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute the `hidden` entry: (seq × hidden) f32 → logits.
+    pub fn infer_hidden(&mut self, hidden: &[f32]) -> Result<Vec<f32>> {
+        if self.meta.entry != "hidden" {
+            bail!("artifact {} has entry '{}'", self.meta.name, self.meta.entry);
+        }
+        let expect = self.meta.seq * self.meta.hidden;
+        if hidden.len() != expect {
+            bail!("input len {} != seq*hidden {}", hidden.len(), expect);
+        }
+        let lit = xla::Literal::vec1(hidden)
+            .reshape(&[self.meta.seq as i64, self.meta.hidden as i64])?;
+        self.run(lit)
+    }
+
+    /// Execute the `tokens` entry: (seq,) i32 token ids → logits.
+    pub fn infer_tokens(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        if self.meta.entry != "tokens" {
+            bail!("artifact {} has entry '{}'", self.meta.name, self.meta.entry);
+        }
+        if tokens.len() != self.meta.seq {
+            bail!("input len {} != seq {}", tokens.len(), self.meta.seq);
+        }
+        for &t in tokens {
+            if t < 0 || t as usize >= self.meta.vocab {
+                bail!("token id {t} out of vocab {}", self.meta.vocab);
+            }
+        }
+        let lit = xla::Literal::vec1(tokens);
+        self.run(lit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config::{Framework, ModelConfig};
+    use crate::nn::model::{ref_forward, ModelInput};
+    use crate::runtime::artifact::ArtifactManifest;
+
+    fn artifacts_dir() -> Option<ArtifactManifest> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        ArtifactManifest::load(dir).ok()
+    }
+
+    fn tiny_cfg(meta: &ArtifactMeta, fw: Framework) -> ModelConfig {
+        let mut cfg = ModelConfig::tiny(meta.seq, fw);
+        cfg.layers = meta.layers;
+        cfg.hidden = meta.hidden;
+        cfg.heads = meta.heads;
+        cfg.intermediate = meta.intermediate;
+        cfg.vocab = meta.vocab;
+        cfg.num_labels = meta.num_labels;
+        cfg
+    }
+
+    /// The python-exported weights and the rust random weights share the
+    /// naming convention, so random weights drive the artifact directly.
+    #[test]
+    fn pjrt_artifact_matches_rust_reference_forward() {
+        let Some(man) = artifacts_dir() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        let meta = man.get("secformer_tiny_hidden").unwrap();
+        let cfg = tiny_cfg(meta, Framework::SecFormer);
+        let w = crate::nn::weights::random_weights(&cfg, 77);
+        let client = xla::PjRtClient::cpu().unwrap();
+        let mut model = PlaintextModel::load(&client, meta, &w).unwrap();
+
+        let mut rng = crate::core::rng::Xoshiro::seed_from(5);
+        let hidden: Vec<f64> =
+            (0..cfg.seq * cfg.hidden).map(|_| rng.normal() * 0.5).collect();
+        let hidden_f32: Vec<f32> = hidden.iter().map(|&v| v as f32).collect();
+        let got = model.infer_hidden(&hidden_f32).unwrap();
+        let expect = ref_forward(&cfg, &w, &ModelInput::Hidden(hidden));
+        assert_eq!(got.len(), cfg.num_labels);
+        for i in 0..cfg.num_labels {
+            assert!(
+                (got[i] as f64 - expect[i]).abs() < 0.05,
+                "logit {i}: pjrt={} ref={}",
+                got[i],
+                expect[i]
+            );
+        }
+    }
+
+    #[test]
+    fn pjrt_tokens_entry_works() {
+        let Some(man) = artifacts_dir() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        let meta = man.get("secformer_tiny_tokens").unwrap();
+        let cfg = tiny_cfg(meta, Framework::SecFormer);
+        let w = crate::nn::weights::random_weights(&cfg, 78);
+        let client = xla::PjRtClient::cpu().unwrap();
+        let mut model = PlaintextModel::load(&client, meta, &w).unwrap();
+        let toks: Vec<i32> = (0..cfg.seq as i32).map(|i| i % cfg.vocab as i32).collect();
+        let got = model.infer_tokens(&toks).unwrap();
+        let expect = ref_forward(
+            &cfg,
+            &w,
+            &ModelInput::Tokens(toks.iter().map(|&t| t as u32).collect()),
+        );
+        for i in 0..cfg.num_labels {
+            assert!(
+                (got[i] as f64 - expect[i]).abs() < 0.05,
+                "logit {i}: pjrt={} ref={}",
+                got[i],
+                expect[i]
+            );
+        }
+    }
+
+    #[test]
+    fn input_validation_errors() {
+        let Some(man) = artifacts_dir() else {
+            eprintln!("artifacts not built; skipping");
+            return;
+        };
+        let meta = man.get("secformer_tiny_tokens").unwrap();
+        let cfg = tiny_cfg(meta, Framework::SecFormer);
+        let w = crate::nn::weights::random_weights(&cfg, 79);
+        let client = xla::PjRtClient::cpu().unwrap();
+        let mut model = PlaintextModel::load(&client, meta, &w).unwrap();
+        assert!(model.infer_tokens(&[0, 1]).is_err()); // wrong length
+        let bad: Vec<i32> = vec![9999; cfg.seq];
+        assert!(model.infer_tokens(&bad).is_err()); // out of vocab
+        assert!(model.infer_hidden(&[0.0; 4]).is_err()); // wrong entry
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client — the
+//! *plaintext* inference path of the coordinator, and the accuracy oracle
+//! the secure path is integration-tested against.
+//!
+//! Interchange is HLO **text** (see /opt/xla-example/README.md): jax ≥ 0.5
+//! serializes HloModuleProto with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactManifest, ArtifactMeta};
+pub use executor::PlaintextModel;

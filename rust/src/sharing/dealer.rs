@@ -1,0 +1,287 @@
+//! The assistant server `T` (Fig 2 of the paper) as a request/response
+//! dealer, plus the per-party provider endpoints.
+//!
+//! Offline traffic model (DESIGN.md "Protocol fidelity notes"):
+//! * `S0` derives its correlated randomness from the `S0–T` PRF key — zero
+//!   bytes on the wire ([`Party0Provider`]).
+//! * `S1` sends `T` a tiny request descriptor and receives corrections
+//!   ([`Party1Provider`]); those bytes are tracked as *offline* and never
+//!   mixed into the online round/volume accounting (the paper, like
+//!   CrypTen, reports the online phase).
+
+use crate::core::rng::Prf;
+use crate::net::stats::StatsHandle;
+use crate::net::transport::Transport;
+use crate::sharing::provider::{
+    BitPair, CrGen, MatmulTriple, MulTriple, Provider, SinTuple, SquarePair,
+};
+
+// Request opcodes on the S1→T wire.
+const OP_MUL: u64 = 1;
+const OP_SQUARE: u64 = 2;
+const OP_MATMUL: u64 = 3;
+const OP_AND: u64 = 4;
+const OP_BITPAIR: u64 = 5;
+const OP_SIN: u64 = 6;
+const OP_SHUTDOWN: u64 = 99;
+
+/// `S0`'s provider: replays the dealer's `prf0` stream locally.
+///
+/// Must consume `prf0` in exactly the order [`CrGen`] does — the
+/// implementations below mirror `CrGen` line for line.
+pub struct Party0Provider {
+    prf0: Prf,
+}
+
+impl Party0Provider {
+    pub fn new(session: &str) -> Self {
+        Party0Provider { prf0: Prf::from_label(&format!("{session}/pair:S0-T")) }
+    }
+}
+
+impl Provider for Party0Provider {
+    fn mul_triple(&mut self, n: usize) -> MulTriple {
+        MulTriple {
+            a: self.prf0.next_vec(n),
+            b: self.prf0.next_vec(n),
+            c: self.prf0.next_vec(n),
+        }
+    }
+    fn square_pair(&mut self, n: usize) -> SquarePair {
+        SquarePair { a: self.prf0.next_vec(n), c: self.prf0.next_vec(n) }
+    }
+    fn matmul_triple(&mut self, m: usize, k: usize, n: usize) -> MatmulTriple {
+        MatmulTriple {
+            a: self.prf0.next_vec(m * k),
+            b: self.prf0.next_vec(k * n),
+            c: self.prf0.next_vec(m * n),
+            m,
+            k,
+            n,
+        }
+    }
+    fn and_triple(&mut self, words: usize) -> MulTriple {
+        MulTriple {
+            a: self.prf0.next_vec(words),
+            b: self.prf0.next_vec(words),
+            c: self.prf0.next_vec(words),
+        }
+    }
+    fn bit_pair(&mut self, n: usize) -> BitPair {
+        let arith = self.prf0.next_vec(n);
+        let boolean: Vec<u64> = self.prf0.next_vec(n).iter().map(|v| v & 1).collect();
+        BitPair { arith, boolean }
+    }
+    fn sin_tuple(&mut self, n: usize) -> SinTuple {
+        SinTuple {
+            t: self.prf0.next_vec(n),
+            sin_t: self.prf0.next_vec(n),
+            cos_t: self.prf0.next_vec(n),
+        }
+    }
+}
+
+/// `S1`'s provider: derives its free components from `prf1` and pulls
+/// corrections from `T` over `to_dealer`.
+pub struct Party1Provider {
+    prf1: Prf,
+    to_dealer: Box<dyn Transport>,
+    stats: Option<StatsHandle>,
+}
+
+impl Party1Provider {
+    pub fn new(session: &str, to_dealer: Box<dyn Transport>, stats: Option<StatsHandle>) -> Self {
+        Party1Provider {
+            prf1: Prf::from_label(&format!("{session}/pair:S1-T")),
+            to_dealer,
+            stats,
+        }
+    }
+
+    fn request(&mut self, req: Vec<u64>, expect: usize) -> Vec<u64> {
+        let req_bytes = req.len() as u64 * 8;
+        self.to_dealer.send(req);
+        let resp = self.to_dealer.recv();
+        assert_eq!(resp.len(), expect, "dealer correction size mismatch");
+        if let Some(s) = &self.stats {
+            s.record_offline(req_bytes + resp.len() as u64 * 8);
+        }
+        resp
+    }
+}
+
+impl Drop for Party1Provider {
+    /// Closing the provider shuts the dealer down so its thread can join.
+    fn drop(&mut self) {
+        self.to_dealer.send(DealerServer::shutdown_request());
+    }
+}
+
+impl Provider for Party1Provider {
+    fn mul_triple(&mut self, n: usize) -> MulTriple {
+        let a = self.prf1.next_vec(n);
+        let b = self.prf1.next_vec(n);
+        let c = self.request(vec![OP_MUL, n as u64], n);
+        MulTriple { a, b, c }
+    }
+    fn square_pair(&mut self, n: usize) -> SquarePair {
+        let a = self.prf1.next_vec(n);
+        let c = self.request(vec![OP_SQUARE, n as u64], n);
+        SquarePair { a, c }
+    }
+    fn matmul_triple(&mut self, m: usize, k: usize, n: usize) -> MatmulTriple {
+        let a = self.prf1.next_vec(m * k);
+        let b = self.prf1.next_vec(k * n);
+        let c = self.request(vec![OP_MATMUL, m as u64, k as u64, n as u64], m * n);
+        MatmulTriple { a, b, c, m, k, n }
+    }
+    fn and_triple(&mut self, words: usize) -> MulTriple {
+        let a = self.prf1.next_vec(words);
+        let b = self.prf1.next_vec(words);
+        let c = self.request(vec![OP_AND, words as u64], words);
+        MulTriple { a, b, c }
+    }
+    fn bit_pair(&mut self, n: usize) -> BitPair {
+        let resp = self.request(vec![OP_BITPAIR, n as u64], 2 * n);
+        BitPair { arith: resp[..n].to_vec(), boolean: resp[n..].to_vec() }
+    }
+    fn sin_tuple(&mut self, n: usize) -> SinTuple {
+        let t = self.prf1.next_vec(n);
+        let resp = self.request(vec![OP_SIN, n as u64], 2 * n);
+        SinTuple { t, sin_t: resp[..n].to_vec(), cos_t: resp[n..].to_vec() }
+    }
+}
+
+/// The assistant server `T`: serves `S1`'s correction requests until
+/// shutdown. Runs the canonical [`CrGen`] so its `prf0`/`prf1` streams stay
+/// in lock-step with both computing parties.
+pub struct DealerServer {
+    gen: CrGen,
+    to_s1: Box<dyn Transport>,
+    /// Total correction elements served (telemetry).
+    pub served: u64,
+}
+
+impl DealerServer {
+    pub fn new(session: &str, to_s1: Box<dyn Transport>) -> Self {
+        DealerServer { gen: CrGen::from_session(session), to_s1, served: 0 }
+    }
+
+    /// Issue a shutdown request (called by the engine from S1's side once
+    /// inference completes).
+    pub fn shutdown_request() -> Vec<u64> {
+        vec![OP_SHUTDOWN]
+    }
+
+    /// Serve until shutdown.
+    pub fn run(&mut self) {
+        loop {
+            let req = self.to_s1.recv();
+            let resp = match req[0] {
+                OP_MUL => self.gen.mul_triple(req[1] as usize).1.c,
+                OP_SQUARE => self.gen.square_pair(req[1] as usize).1.c,
+                OP_MATMUL => {
+                    self.gen
+                        .matmul_triple(req[1] as usize, req[2] as usize, req[3] as usize)
+                        .1
+                        .c
+                }
+                OP_AND => self.gen.and_triple(req[1] as usize).1.c,
+                OP_BITPAIR => {
+                    let p = self.gen.bit_pair(req[1] as usize).1;
+                    let mut out = p.arith;
+                    out.extend(p.boolean);
+                    out
+                }
+                OP_SIN => {
+                    let p = self.gen.sin_tuple(req[1] as usize).1;
+                    let mut out = p.sin_t;
+                    out.extend(p.cos_t);
+                    out
+                }
+                OP_SHUTDOWN => return,
+                op => panic!("dealer: unknown opcode {op}"),
+            };
+            self.served += resp.len() as u64;
+            self.to_s1.send(resp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::channel_pair;
+    use crate::sharing::reconstruct;
+
+    /// Wire S0 (local PRF), S1 (dealer client) and T together and check the
+    /// correlations reconstruct, i.e. the dealer path is bit-identical to
+    /// the seeded path.
+    #[test]
+    fn dealer_path_matches_correlations() {
+        let (s1_end, t_end) = channel_pair();
+        let dealer = std::thread::spawn(move || {
+            let mut d = DealerServer::new("dtest", Box::new(t_end));
+            d.run();
+        });
+        let mut p0 = Party0Provider::new("dtest");
+        let mut p1 = Party1Provider::new("dtest", Box::new(s1_end), None);
+
+        let t0 = p0.mul_triple(16);
+        let t1 = p1.mul_triple(16);
+        let a = reconstruct(&t0.a, &t1.a);
+        let b = reconstruct(&t0.b, &t1.b);
+        let c = reconstruct(&t0.c, &t1.c);
+        for i in 0..16 {
+            assert_eq!(c[i], a[i].wrapping_mul(b[i]));
+        }
+
+        let m0 = p0.matmul_triple(2, 3, 2);
+        let m1 = p1.matmul_triple(2, 3, 2);
+        let a = reconstruct(&m0.a, &m1.a);
+        let b = reconstruct(&m0.b, &m1.b);
+        let c = reconstruct(&m0.c, &m1.c);
+        let mut expect = vec![0u64; 4];
+        crate::core::tensor::matmul_ring(&a, &b, &mut expect, 2, 3, 2);
+        assert_eq!(c, expect);
+
+        let s0 = p0.sin_tuple(8);
+        let s1p = p1.sin_tuple(8);
+        for i in 0..8 {
+            let t = s0.t[i].wrapping_add(s1p.t[i]);
+            let st = crate::core::fixed::decode(s0.sin_t[i].wrapping_add(s1p.sin_t[i]));
+            assert!(
+                (st - crate::sharing::provider::sin_of_ring_angle(t)).abs() < 1e-4
+            );
+        }
+
+        // Interleaving order matters: issue one more mul after the sin.
+        let u0 = p0.mul_triple(4);
+        let u1 = p1.mul_triple(4);
+        let a = reconstruct(&u0.a, &u1.a);
+        let b = reconstruct(&u0.b, &u1.b);
+        let c = reconstruct(&u0.c, &u1.c);
+        for i in 0..4 {
+            assert_eq!(c[i], a[i].wrapping_mul(b[i]));
+        }
+
+        drop(p1); // sends the shutdown notice
+        dealer.join().unwrap();
+    }
+
+    #[test]
+    fn dealer_offline_bytes_tracked() {
+        let (s1_end, t_end) = channel_pair();
+        let dealer = std::thread::spawn(move || {
+            let mut d = DealerServer::new("dtest2", Box::new(t_end));
+            d.run();
+        });
+        let stats = crate::net::stats::CommStats::new_handle();
+        let mut p1 = Party1Provider::new("dtest2", Box::new(s1_end), Some(stats.clone()));
+        let _ = p1.mul_triple(100);
+        assert!(stats.offline_bytes() >= 800);
+        assert_eq!(stats.total_bytes(), 0, "offline must not count online");
+        drop(p1);
+        dealer.join().unwrap();
+    }
+}

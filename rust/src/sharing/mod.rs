@@ -1,0 +1,79 @@
+//! 2-out-of-2 secret sharing and correlated randomness (Appendix A / E).
+//!
+//! * Arithmetic shares: `x = (x0 + x1) mod 2^64`.
+//! * Boolean shares: `x = x0 ^ x1`, bit-packed into u64 words.
+//! * Correlated randomness (Beaver triples, square pairs, matmul triples,
+//!   AND triples, bit pairs, sine tuples) is produced by the assistant
+//!   server `T` under the dealer-PRF model: `S0` derives its bundle from a
+//!   PRF key shared with `T` (zero offline bytes to `S0`); `T` ships only
+//!   the corrections `S1` needs.
+
+pub mod dealer;
+pub mod provider;
+
+pub use dealer::{DealerServer, Party0Provider, Party1Provider};
+pub use provider::{
+    BitPair, CrGen, MatmulTriple, MulTriple, Provider, SeededProvider, SinTuple, SquarePair,
+};
+
+use crate::core::rng::Xoshiro;
+
+/// Split a vector of ring elements into two additive shares (`Shr`).
+pub fn share(values: &[u64], rng: &mut Xoshiro) -> (Vec<u64>, Vec<u64>) {
+    let s0: Vec<u64> = (0..values.len()).map(|_| rng.next_u64()).collect();
+    let s1: Vec<u64> = values.iter().zip(&s0).map(|(&v, &r)| v.wrapping_sub(r)).collect();
+    (s0, s1)
+}
+
+/// Reconstruct from two additive shares (`Rec`).
+pub fn reconstruct(s0: &[u64], s1: &[u64]) -> Vec<u64> {
+    s0.iter().zip(s1).map(|(&a, &b)| a.wrapping_add(b)).collect()
+}
+
+/// Split into boolean (XOR) shares.
+pub fn share_bool(values: &[u64], rng: &mut Xoshiro) -> (Vec<u64>, Vec<u64>) {
+    let s0: Vec<u64> = (0..values.len()).map(|_| rng.next_u64()).collect();
+    let s1: Vec<u64> = values.iter().zip(&s0).map(|(&v, &r)| v ^ r).collect();
+    (s0, s1)
+}
+
+/// Reconstruct from boolean shares.
+pub fn reconstruct_bool(s0: &[u64], s1: &[u64]) -> Vec<u64> {
+    s0.iter().zip(s1).map(|(&a, &b)| a ^ b).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_share_roundtrip() {
+        let mut rng = Xoshiro::seed_from(3);
+        let vals: Vec<u64> = (0..100).map(|i| i * 31 + 7).collect();
+        let (s0, s1) = share(&vals, &mut rng);
+        assert_eq!(reconstruct(&s0, &s1), vals);
+        // shares individually look nothing like the values
+        assert_ne!(s0, vals);
+        assert_ne!(s1, vals);
+    }
+
+    #[test]
+    fn boolean_share_roundtrip() {
+        let mut rng = Xoshiro::seed_from(4);
+        let vals: Vec<u64> = (0..64).map(|i| 1u64 << i).collect();
+        let (s0, s1) = share_bool(&vals, &mut rng);
+        assert_eq!(reconstruct_bool(&s0, &s1), vals);
+    }
+
+    #[test]
+    fn shares_are_uniformlike() {
+        // The first share is raw PRNG output; the second must be too
+        // (statistically), since it's value minus uniform.
+        let mut rng = Xoshiro::seed_from(5);
+        let vals = vec![42u64; 4096];
+        let (_, s1) = share(&vals, &mut rng);
+        let ones: u32 = s1.iter().map(|v| v.count_ones()).sum();
+        let frac = ones as f64 / (4096.0 * 64.0);
+        assert!((frac - 0.5).abs() < 0.02);
+    }
+}

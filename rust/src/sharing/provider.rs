@@ -1,0 +1,393 @@
+//! Correlated-randomness generation and the `Provider` interface.
+//!
+//! All randomness a protocol consumes in its offline phase is described by a
+//! small set of bundle types. [`CrGen`] is the canonical generator: it
+//! derives party 0's bundle from `prf0`, party 1's "free" components from
+//! `prf1`, secret values from `prfT`, and computes the corrections that make
+//! the correlation hold. Both the trusted dealer and the insecure-but-
+//! perf-identical [`SeededProvider`] (CrypTen's TFP analog, used by
+//! benchmarks) are thin wrappers over it.
+
+use crate::core::rng::{Prf, RandStream, Xoshiro};
+use crate::core::tensor::matmul_ring;
+
+/// Beaver multiplication triple shares: `c = a * b` (elementwise, ring).
+#[derive(Clone, Debug)]
+pub struct MulTriple {
+    pub a: Vec<u64>,
+    pub b: Vec<u64>,
+    pub c: Vec<u64>,
+}
+
+/// Square pair shares: `c = a * a` (elementwise, ring).
+#[derive(Clone, Debug)]
+pub struct SquarePair {
+    pub a: Vec<u64>,
+    pub c: Vec<u64>,
+}
+
+/// Matrix Beaver triple shares: `C (m×n) = A (m×k) · B (k×n)` in the ring.
+#[derive(Clone, Debug)]
+pub struct MatmulTriple {
+    pub a: Vec<u64>,
+    pub b: Vec<u64>,
+    pub c: Vec<u64>,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// A random bit `β` shared both arithmetically (`[β]`, scale 1) and boolean
+/// (`⟨β⟩` in the LSB of a word) — consumed by B2A.
+#[derive(Clone, Debug)]
+pub struct BitPair {
+    pub arith: Vec<u64>,
+    pub boolean: Vec<u64>,
+}
+
+/// Sine tuple of Zheng et al. (2023b), Algorithm 4: a uniformly random angle
+/// `t` (ring-wrapped turns: `t/2^64` of a full period) shared additively,
+/// plus fixed-point shares of `sin(t)` and `cos(t)`.
+#[derive(Clone, Debug)]
+pub struct SinTuple {
+    pub t: Vec<u64>,
+    pub sin_t: Vec<u64>,
+    pub cos_t: Vec<u64>,
+}
+
+/// The offline interface protocols pull correlated randomness from.
+///
+/// Implementations must be *deterministically synchronized*: the two
+/// computing parties execute the same protocol program (SPMD) and therefore
+/// issue identical request sequences.
+pub trait Provider: Send {
+    fn mul_triple(&mut self, n: usize) -> MulTriple;
+    fn square_pair(&mut self, n: usize) -> SquarePair;
+    fn matmul_triple(&mut self, m: usize, k: usize, n: usize) -> MatmulTriple;
+    /// Bitwise AND triple over packed u64 words: `c = a & b`.
+    fn and_triple(&mut self, words: usize) -> MulTriple;
+    fn bit_pair(&mut self, n: usize) -> BitPair;
+    fn sin_tuple(&mut self, n: usize) -> SinTuple;
+}
+
+/// Angle encoding helper: value of `sin` at ring-angle `t` (t/2^64 turns).
+#[inline]
+pub fn sin_of_ring_angle(t: u64) -> f64 {
+    (t as f64 / 2f64.powi(64) * std::f64::consts::TAU).sin()
+}
+
+#[inline]
+pub fn cos_of_ring_angle(t: u64) -> f64 {
+    (t as f64 / 2f64.powi(64) * std::f64::consts::TAU).cos()
+}
+
+/// Canonical generator producing *both* parties' bundles.
+///
+/// Stream discipline (the dealer-mode synchronization invariant):
+/// * `prf0` — consumed in exactly the order `Party0Provider` consumes it.
+/// * `prf1` — consumed in exactly the order `Party1Provider` consumes it
+///   (the parties' "free" components only).
+/// * `prft` — dealer-private secrets (e.g. the bit of a bit-pair); never
+///   consumed by a computing party.
+pub struct CrGenT<S: RandStream> {
+    pub prf0: S,
+    pub prf1: S,
+    pub prft: S,
+}
+
+/// Cryptographic generator (dealer mode).
+pub type CrGen = CrGenT<Prf>;
+/// Statistical generator (benchmark/TFP mode) — ~10× faster offline phase,
+/// identical online behaviour.
+pub type FastCrGen = CrGenT<Xoshiro>;
+
+impl CrGenT<Prf> {
+    /// Build from a session label; all participants deriving from the same
+    /// label agree on the streams.
+    pub fn from_session(session: &str) -> Self {
+        CrGenT {
+            prf0: Prf::from_label(&format!("{session}/pair:S0-T")),
+            prf1: Prf::from_label(&format!("{session}/pair:S1-T")),
+            prft: Prf::from_label(&format!("{session}/T-private")),
+        }
+    }
+}
+
+impl CrGenT<Xoshiro> {
+    pub fn from_session_fast(session: &str) -> Self {
+        let seed = |suffix: &str| {
+            use sha2::{Digest, Sha256};
+            let d = Sha256::digest(format!("{session}/{suffix}").as_bytes());
+            u64::from_le_bytes(d[..8].try_into().unwrap())
+        };
+        CrGenT {
+            prf0: Xoshiro::seed_from(seed("pair:S0-T")),
+            prf1: Xoshiro::seed_from(seed("pair:S1-T")),
+            prft: Xoshiro::seed_from(seed("T-private")),
+        }
+    }
+}
+
+impl<S: RandStream> CrGenT<S> {
+
+    /// (party0 bundle, party1 bundle). Party 1's `c` is the correction the
+    /// dealer must transmit; its `a`,`b` come free from `prf1`.
+    pub fn mul_triple(&mut self, n: usize) -> (MulTriple, MulTriple) {
+        let a0 = self.prf0.stream_vec(n);
+        let b0 = self.prf0.stream_vec(n);
+        let c0 = self.prf0.stream_vec(n);
+        let a1 = self.prf1.stream_vec(n);
+        let b1 = self.prf1.stream_vec(n);
+        let c1: Vec<u64> = (0..n)
+            .map(|i| {
+                let a = a0[i].wrapping_add(a1[i]);
+                let b = b0[i].wrapping_add(b1[i]);
+                a.wrapping_mul(b).wrapping_sub(c0[i])
+            })
+            .collect();
+        (
+            MulTriple { a: a0, b: b0, c: c0 },
+            MulTriple { a: a1, b: b1, c: c1 },
+        )
+    }
+
+    pub fn square_pair(&mut self, n: usize) -> (SquarePair, SquarePair) {
+        let a0 = self.prf0.stream_vec(n);
+        let c0 = self.prf0.stream_vec(n);
+        let a1 = self.prf1.stream_vec(n);
+        let c1: Vec<u64> = (0..n)
+            .map(|i| {
+                let a = a0[i].wrapping_add(a1[i]);
+                a.wrapping_mul(a).wrapping_sub(c0[i])
+            })
+            .collect();
+        (SquarePair { a: a0, c: c0 }, SquarePair { a: a1, c: c1 })
+    }
+
+    pub fn matmul_triple(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> (MatmulTriple, MatmulTriple) {
+        let a0 = self.prf0.stream_vec(m * k);
+        let b0 = self.prf0.stream_vec(k * n);
+        let c0 = self.prf0.stream_vec(m * n);
+        let a1 = self.prf1.stream_vec(m * k);
+        let b1 = self.prf1.stream_vec(k * n);
+        let a: Vec<u64> = a0.iter().zip(&a1).map(|(&x, &y)| x.wrapping_add(y)).collect();
+        let b: Vec<u64> = b0.iter().zip(&b1).map(|(&x, &y)| x.wrapping_add(y)).collect();
+        let mut c = vec![0u64; m * n];
+        matmul_ring(&a, &b, &mut c, m, k, n);
+        let c1: Vec<u64> = c.iter().zip(&c0).map(|(&x, &y)| x.wrapping_sub(y)).collect();
+        (
+            MatmulTriple { a: a0, b: b0, c: c0, m, k, n },
+            MatmulTriple { a: a1, b: b1, c: c1, m, k, n },
+        )
+    }
+
+    pub fn and_triple(&mut self, words: usize) -> (MulTriple, MulTriple) {
+        let a0 = self.prf0.stream_vec(words);
+        let b0 = self.prf0.stream_vec(words);
+        let c0 = self.prf0.stream_vec(words);
+        let a1 = self.prf1.stream_vec(words);
+        let b1 = self.prf1.stream_vec(words);
+        let c1: Vec<u64> = (0..words)
+            .map(|i| ((a0[i] ^ a1[i]) & (b0[i] ^ b1[i])) ^ c0[i])
+            .collect();
+        (
+            MulTriple { a: a0, b: b0, c: c0 },
+            MulTriple { a: a1, b: b1, c: c1 },
+        )
+    }
+
+    pub fn bit_pair(&mut self, n: usize) -> (BitPair, BitPair) {
+        let arith0 = self.prf0.stream_vec(n);
+        let bool0: Vec<u64> = self.prf0.stream_vec(n).iter().map(|v| v & 1).collect();
+        // The secret bit comes from the dealer-private stream so neither
+        // computing party's PRF counter moves (dealer-mode sync invariant).
+        let beta: Vec<u64> = self.prft.stream_vec(n).iter().map(|v| v & 1).collect();
+        let arith1: Vec<u64> =
+            (0..n).map(|i| beta[i].wrapping_sub(arith0[i])).collect();
+        let bool1: Vec<u64> = (0..n).map(|i| beta[i] ^ bool0[i]).collect();
+        (
+            BitPair { arith: arith0, boolean: bool0 },
+            BitPair { arith: arith1, boolean: bool1 },
+        )
+    }
+
+    pub fn sin_tuple(&mut self, n: usize) -> (SinTuple, SinTuple) {
+        let t0 = self.prf0.stream_vec(n);
+        let s0 = self.prf0.stream_vec(n);
+        let c0 = self.prf0.stream_vec(n);
+        let t1 = self.prf1.stream_vec(n);
+        let mut s1 = Vec::with_capacity(n);
+        let mut c1 = Vec::with_capacity(n);
+        for i in 0..n {
+            let t = t0[i].wrapping_add(t1[i]);
+            let st = crate::core::fixed::encode(sin_of_ring_angle(t));
+            let ct = crate::core::fixed::encode(cos_of_ring_angle(t));
+            s1.push(st.wrapping_sub(s0[i]));
+            c1.push(ct.wrapping_sub(c0[i]));
+        }
+        (
+            SinTuple { t: t0, sin_t: s0, cos_t: c0 },
+            SinTuple { t: t1, sin_t: s1, cos_t: c1 },
+        )
+    }
+}
+
+/// Both computing parties hold the full generator (CrypTen's "trusted first
+/// party" analog): zero offline traffic, online behaviour identical to the
+/// dealer. Used for benchmarking; NOT a secure deployment mode.
+pub struct SeededProviderT<S: RandStream> {
+    gen: CrGenT<S>,
+    party: u8,
+}
+
+/// AES-PRF-backed seeded provider.
+pub type SeededProvider = SeededProviderT<Prf>;
+/// Xoshiro-backed seeded provider (CrypTen-TFP analog; benchmark default).
+pub type FastSeededProvider = SeededProviderT<Xoshiro>;
+
+impl SeededProviderT<Prf> {
+    pub fn new(session: &str, party: u8) -> Self {
+        SeededProviderT { gen: CrGen::from_session(session), party }
+    }
+}
+
+impl SeededProviderT<Xoshiro> {
+    pub fn new_fast(session: &str, party: u8) -> Self {
+        SeededProviderT { gen: FastCrGen::from_session_fast(session), party }
+    }
+}
+
+impl<S: RandStream> SeededProviderT<S> {
+
+    #[inline]
+    fn pick<T>(&self, pair: (T, T)) -> T {
+        if self.party == 0 {
+            pair.0
+        } else {
+            pair.1
+        }
+    }
+}
+
+impl<S: RandStream> Provider for SeededProviderT<S> {
+    fn mul_triple(&mut self, n: usize) -> MulTriple {
+        let pair = self.gen.mul_triple(n);
+        self.pick(pair)
+    }
+    fn square_pair(&mut self, n: usize) -> SquarePair {
+        let pair = self.gen.square_pair(n);
+        self.pick(pair)
+    }
+    fn matmul_triple(&mut self, m: usize, k: usize, n: usize) -> MatmulTriple {
+        let pair = self.gen.matmul_triple(m, k, n);
+        self.pick(pair)
+    }
+    fn and_triple(&mut self, words: usize) -> MulTriple {
+        let pair = self.gen.and_triple(words);
+        self.pick(pair)
+    }
+    fn bit_pair(&mut self, n: usize) -> BitPair {
+        let pair = self.gen.bit_pair(n);
+        self.pick(pair)
+    }
+    fn sin_tuple(&mut self, n: usize) -> SinTuple {
+        let pair = self.gen.sin_tuple(n);
+        self.pick(pair)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sharing::reconstruct;
+
+    fn gen() -> CrGen {
+        CrGen::from_session("test")
+    }
+
+    #[test]
+    fn mul_triple_correlation() {
+        let (t0, t1) = gen().mul_triple(64);
+        let a = reconstruct(&t0.a, &t1.a);
+        let b = reconstruct(&t0.b, &t1.b);
+        let c = reconstruct(&t0.c, &t1.c);
+        for i in 0..64 {
+            assert_eq!(c[i], a[i].wrapping_mul(b[i]));
+        }
+    }
+
+    #[test]
+    fn square_pair_correlation() {
+        let (t0, t1) = gen().square_pair(64);
+        let a = reconstruct(&t0.a, &t1.a);
+        let c = reconstruct(&t0.c, &t1.c);
+        for i in 0..64 {
+            assert_eq!(c[i], a[i].wrapping_mul(a[i]));
+        }
+    }
+
+    #[test]
+    fn matmul_triple_correlation() {
+        let (t0, t1) = gen().matmul_triple(3, 4, 5);
+        let a = reconstruct(&t0.a, &t1.a);
+        let b = reconstruct(&t0.b, &t1.b);
+        let c = reconstruct(&t0.c, &t1.c);
+        let mut expect = vec![0u64; 15];
+        matmul_ring(&a, &b, &mut expect, 3, 4, 5);
+        assert_eq!(c, expect);
+    }
+
+    #[test]
+    fn and_triple_correlation() {
+        let (t0, t1) = gen().and_triple(32);
+        for i in 0..32 {
+            let a = t0.a[i] ^ t1.a[i];
+            let b = t0.b[i] ^ t1.b[i];
+            let c = t0.c[i] ^ t1.c[i];
+            assert_eq!(c, a & b);
+        }
+    }
+
+    #[test]
+    fn bit_pair_consistency() {
+        let (p0, p1) = gen().bit_pair(128);
+        for i in 0..128 {
+            let arith = p0.arith[i].wrapping_add(p1.arith[i]);
+            let boolean = p0.boolean[i] ^ p1.boolean[i];
+            assert!(arith == 0 || arith == 1, "arith bit {arith}");
+            assert_eq!(arith, boolean & 1);
+        }
+    }
+
+    #[test]
+    fn sin_tuple_correlation() {
+        let (p0, p1) = gen().sin_tuple(64);
+        for i in 0..64 {
+            let t = p0.t[i].wrapping_add(p1.t[i]);
+            let st = crate::core::fixed::decode(p0.sin_t[i].wrapping_add(p1.sin_t[i]));
+            let ct = crate::core::fixed::decode(p0.cos_t[i].wrapping_add(p1.cos_t[i]));
+            assert!((st - sin_of_ring_angle(t)).abs() < 1e-4);
+            assert!((ct - cos_of_ring_angle(t)).abs() < 1e-4);
+            assert!((st * st + ct * ct - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn seeded_providers_agree() {
+        let mut p0 = SeededProvider::new("s", 0);
+        let mut p1 = SeededProvider::new("s", 1);
+        let t0 = p0.mul_triple(8);
+        let t1 = p1.mul_triple(8);
+        let a = reconstruct(&t0.a, &t1.a);
+        let b = reconstruct(&t0.b, &t1.b);
+        let c = reconstruct(&t0.c, &t1.c);
+        for i in 0..8 {
+            assert_eq!(c[i], a[i].wrapping_mul(b[i]));
+        }
+    }
+}

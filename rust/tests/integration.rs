@@ -1,0 +1,199 @@
+//! Integration tests over the public API: full secure inferences across
+//! all four frameworks, the serving coordinator, artifact execution, and
+//! cross-layer consistency (cost model ↔ measured engine stats).
+
+use secformer::coordinator::{BatcherConfig, Coordinator, EngineKind};
+use secformer::core::rng::Xoshiro;
+use secformer::engine::{OfflineMode, SecureModel};
+use secformer::net::stats::OpCategory;
+use secformer::nn::config::{Framework, ModelConfig};
+use secformer::nn::model::{ref_forward, ModelInput};
+use secformer::nn::weights::{load_swts, random_weights, save_swts};
+
+fn hidden_input(cfg: &ModelConfig, seed: u64) -> ModelInput {
+    let mut rng = Xoshiro::seed_from(seed);
+    ModelInput::Hidden((0..cfg.seq * cfg.hidden).map(|_| rng.normal() * 0.5).collect())
+}
+
+#[test]
+fn all_frameworks_run_and_secformer_matches_reference_best() {
+    // Every framework must complete a secure inference; the approximation
+    // frameworks whose reference semantics we mirror must agree with it.
+    for fw in Framework::ALL {
+        let cfg = ModelConfig::tiny(8, fw);
+        let w = random_weights(&cfg, 21);
+        let input = hidden_input(&cfg, 22);
+        let mut m = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+        let got = m.infer(&input);
+        assert_eq!(got.logits.len(), cfg.num_labels, "{fw:?}");
+        assert!(got.logits.iter().all(|v| v.is_finite()), "{fw:?}");
+        if matches!(fw, Framework::SecFormer | Framework::MpcFormer) {
+            let expect = ref_forward(&cfg, &w, &input);
+            for i in 0..cfg.num_labels {
+                assert!(
+                    (got.logits[i] - expect[i]).abs() < 0.2,
+                    "{fw:?} logit {i}: {} vs {}",
+                    got.logits[i],
+                    expect[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn secformer_cheaper_than_exact_frameworks_in_engine_stats() {
+    // Table 3's shape, at tiny scale, from the real engine counters:
+    // softmax comm: SecFormer ≪ CrypTen/PUMA; gelu comm: SecFormer < PUMA.
+    let mut by_fw = std::collections::HashMap::new();
+    for fw in Framework::ALL {
+        let cfg = ModelConfig::tiny(16, fw);
+        let w = random_weights(&cfg, 31);
+        let input = hidden_input(&cfg, 32);
+        let mut m = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+        let r = m.infer(&input);
+        by_fw.insert(fw, r.stats);
+    }
+    let sm = |f: Framework| by_fw[&f].bytes[OpCategory::Softmax as usize];
+    let ge = |f: Framework| by_fw[&f].bytes[OpCategory::Gelu as usize];
+    let ln = |f: Framework| by_fw[&f].bytes[OpCategory::LayerNorm as usize];
+    assert!(sm(Framework::SecFormer) * 5 < sm(Framework::Puma));
+    assert!(sm(Framework::SecFormer) * 5 < sm(Framework::Crypten));
+    assert!(ge(Framework::SecFormer) < ge(Framework::Puma));
+    assert!(ge(Framework::MpcFormer) * 10 < ge(Framework::SecFormer));
+    assert!(ln(Framework::SecFormer) < ln(Framework::Crypten));
+    // Totals: at tiny scale linear ops ("Others") weigh more than at BERT
+    // scale, so assert the ordering only; the 3.57× factor is checked at
+    // bench scale (EXPERIMENTS.md Table 3).
+    // (CrypTen's total is omitted here: its cheap-but-wrong Taylor GeLU
+    // makes it comm-light at tiny seq; the crossover to the paper's
+    // ordering happens as seq² softmax terms grow — see Table 3 bench.)
+    // At tiny shapes Π_GeLU dominates SecFormer's bill (the paper's 41%-
+    // of-time observation, amplified); the SecFormer≈1.05×MPCFormer total
+    // emerges at BERT shapes where linear layers weigh in (Table 3 bench).
+    let tot = |f: Framework| by_fw[&f].total_bytes();
+    assert!(tot(Framework::SecFormer) < tot(Framework::Puma));
+    assert!(tot(Framework::SecFormer) < tot(Framework::MpcFormer) * 8);
+}
+
+#[test]
+fn engine_gelu_comm_matches_cost_model_exactly() {
+    // The analytic model must agree with the engine's live counters.
+    let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    let w = random_weights(&cfg, 41);
+    let input = hidden_input(&cfg, 42);
+    let mut m = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+    let r = m.infer(&input);
+    let gelu_elems = (cfg.layers * cfg.seq * cfg.intermediate) as f64;
+    let predicted_bits = secformer::proto::cost::gelu_secformer().bits * gelu_elems;
+    let measured_bits = (r.stats.bytes[OpCategory::Gelu as usize] * 8 * 2) as f64;
+    let rel = (measured_bits - predicted_bits).abs() / predicted_bits;
+    assert!(rel < 0.02, "measured {measured_bits} vs predicted {predicted_bits}");
+}
+
+#[test]
+fn coordinator_mixed_engines_and_metrics() {
+    let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    let w = random_weights(&cfg, 51);
+    let coord = Coordinator::start(cfg.clone(), w, None, BatcherConfig::default()).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    for i in 0..4u32 {
+        let toks: Vec<u32> = (0..cfg.seq as u32).map(|j| (i + j) % cfg.vocab as u32).collect();
+        coord.submit(ModelInput::Tokens(toks), EngineKind::Secure, tx.clone());
+    }
+    let mut ids = std::collections::BTreeSet::new();
+    for _ in 0..4 {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert!(r.comm_bytes > 0);
+        ids.insert(r.id);
+    }
+    assert_eq!(ids.len(), 4);
+    let s = coord.metrics_secure.summary();
+    assert_eq!(s.count, 4);
+    assert!(s.p95_s >= s.p50_s);
+    coord.shutdown();
+}
+
+#[test]
+fn swts_roundtrip_through_engine() {
+    // save → load → secure inference gives the same logits as the original.
+    let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    let w = random_weights(&cfg, 61);
+    let path = "/tmp/secformer_integration.swts";
+    save_swts(path, &w).unwrap();
+    let w2 = load_swts(path).unwrap();
+    let input = hidden_input(&cfg, 62);
+    let a = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded).infer(&input);
+    let b = SecureModel::new(cfg.clone(), &w2, OfflineMode::Seeded).infer(&input);
+    for i in 0..cfg.num_labels {
+        // f32 quantization of the .swts format only.
+        assert!((a.logits[i] - b.logits[i]).abs() < 0.01);
+    }
+}
+
+#[test]
+fn failure_injection_bad_weights_file() {
+    std::fs::write("/tmp/secformer_bad.swts", b"not a weights file").unwrap();
+    assert!(load_swts("/tmp/secformer_bad.swts").is_err());
+    assert!(load_swts("/tmp/definitely_missing_12345.swts").is_err());
+}
+
+#[test]
+#[should_panic(expected = "hidden input must be seq×hidden")]
+fn failure_injection_wrong_input_shape() {
+    let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    let w = random_weights(&cfg, 71);
+    let mut m = SecureModel::new(cfg, &w, OfflineMode::Seeded);
+    // 3 values instead of seq×hidden.
+    let _ = m.infer(&ModelInput::Hidden(vec![0.0, 1.0, 2.0]));
+}
+
+#[test]
+fn deterministic_comm_accounting() {
+    // Communication is a pure function of the model shape — two runs (and
+    // both offline modes) must count identical online volumes.
+    let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    let w = random_weights(&cfg, 81);
+    let input = hidden_input(&cfg, 82);
+    let a = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded).infer(&input);
+    let b = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded).infer(&input);
+    let c = SecureModel::new(cfg.clone(), &w, OfflineMode::Dealer).infer(&input);
+    assert_eq!(a.stats.total_bytes(), b.stats.total_bytes());
+    assert_eq!(a.stats.total_rounds(), b.stats.total_rounds());
+    assert_eq!(a.stats.total_bytes(), c.stats.total_bytes());
+    assert_eq!(a.stats.total_rounds(), c.stats.total_rounds());
+}
+
+#[test]
+fn causal_extension_matches_reference_and_masks_future() {
+    // §6 future-work extension: decoder-style causal attention.
+    let mut cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    cfg.causal = true;
+    let w = random_weights(&cfg, 91);
+    let input = hidden_input(&cfg, 92);
+    let mut m = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+    let got = m.infer(&input);
+    let expect = ref_forward(&cfg, &w, &input);
+    for i in 0..cfg.num_labels {
+        assert!(
+            (got.logits[i] - expect[i]).abs() < 0.2,
+            "causal logit {i}: {} vs {}",
+            got.logits[i],
+            expect[i]
+        );
+    }
+    // Masking invariance: the [CLS] (position 0) representation — and the
+    // classifier logits read from it — must be independent of every later
+    // token when attention is causal (plaintext check).
+    if let ModelInput::Hidden(h) = &input {
+        let mut h2 = h.clone();
+        for v in h2[cfg.hidden..].iter_mut() {
+            *v += 0.37; // perturb everything except position 0
+        }
+        let a = ref_forward(&cfg, &w, &ModelInput::Hidden(h.clone()));
+        let b = ref_forward(&cfg, &w, &ModelInput::Hidden(h2));
+        for i in 0..cfg.num_labels {
+            assert!((a[i] - b[i]).abs() < 1e-9, "future tokens leaked into CLS");
+        }
+    }
+}

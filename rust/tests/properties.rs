@@ -1,0 +1,150 @@
+//! Property-based tests (hand-rolled randomized trials — proptest is not in
+//! the offline crate set; the Python side uses hypothesis for the same
+//! role). Each test sweeps random shapes/values and asserts an invariant.
+
+use secformer::core::fixed::{decode, encode, encode_vec};
+use secformer::core::rng::Xoshiro;
+use secformer::proto::harness::{run_pair_raw_out, run_pair_with_inputs};
+use secformer::proto::{bits, gelu, prim, softmax};
+use secformer::sharing::{reconstruct, share};
+
+#[test]
+fn prop_share_reconstruct_roundtrip() {
+    let mut rng = Xoshiro::seed_from(1);
+    for trial in 0..50 {
+        let n = 1 + (rng.next_u64() % 200) as usize;
+        let vals: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let (s0, s1) = share(&vals, &mut rng);
+        assert_eq!(reconstruct(&s0, &s1), vals, "trial {trial}");
+    }
+}
+
+#[test]
+fn prop_fixed_point_encoding_additive_homomorphism() {
+    let mut rng = Xoshiro::seed_from(2);
+    for _ in 0..200 {
+        let a = rng.uniform(-1e5, 1e5);
+        let b = rng.uniform(-1e5, 1e5);
+        let sum = decode(encode(a).wrapping_add(encode(b)));
+        assert!((sum - (a + b)).abs() < 2.0 / 65536.0 + 1e-9, "a={a} b={b}");
+    }
+}
+
+#[test]
+fn prop_secure_mul_random_shapes_and_magnitudes() {
+    let mut rng = Xoshiro::seed_from(3);
+    for trial in 0..8 {
+        let n = 1 + (rng.next_u64() % 64) as usize;
+        let mag = 10f64.powi((trial % 4) as i32);
+        let x: Vec<f64> = (0..n).map(|_| rng.uniform(-mag, mag)).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.uniform(-mag, mag)).collect();
+        let got = run_pair_with_inputs(&x, &y, |c, a, b| prim::mul(c, a, b));
+        for i in 0..n {
+            let expect = x[i] * y[i];
+            let tol = expect.abs() * 1e-4 + mag * 3.0 / 65536.0 + 1e-4;
+            assert!((got[i] - expect).abs() < tol, "n={n} mag={mag} i={i}");
+        }
+    }
+}
+
+#[test]
+fn prop_secure_matmul_matches_f64() {
+    let mut rng = Xoshiro::seed_from(4);
+    for _ in 0..5 {
+        let (m, k, n) = (
+            1 + (rng.next_u64() % 6) as usize,
+            1 + (rng.next_u64() % 6) as usize,
+            1 + (rng.next_u64() % 6) as usize,
+        );
+        let x: Vec<f64> = (0..m * k).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let y: Vec<f64> = (0..k * n).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let got = run_pair_with_inputs(&x, &y, |c, a, b| prim::matmul(c, a, b, m, k, n));
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += x[i * k + p] * y[p * n + j];
+                }
+                assert!(
+                    (got[i * n + j] - acc).abs() < 1e-2,
+                    "({m},{k},{n}) @ ({i},{j})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_comparison_total_order_consistency() {
+    // lt(x,y) and lt(y,x) can't both be 1, and x<y ⇔ ¬(y≤x).
+    let mut rng = Xoshiro::seed_from(5);
+    let n = 64;
+    let x: Vec<f64> = (0..n).map(|_| rng.uniform(-100.0, 100.0)).collect();
+    let y: Vec<f64> = (0..n).map(|_| rng.uniform(-100.0, 100.0)).collect();
+    let a = run_pair_raw_out(&x, &y, |c, xs, ys| bits::lt(c, xs, ys));
+    let b = run_pair_raw_out(&y, &x, |c, ys, xs| bits::lt(c, ys, xs));
+    for i in 0..n {
+        assert!(a[i] <= 1 && b[i] <= 1);
+        assert!(!(a[i] == 1 && b[i] == 1), "both lt true at {i}");
+        assert_eq!(a[i] == 1, x[i] < y[i], "x={} y={}", x[i], y[i]);
+    }
+}
+
+#[test]
+fn prop_2quad_is_a_distribution() {
+    // Rows sum to 1 and entries are nonnegative for any input.
+    let mut rng = Xoshiro::seed_from(6);
+    for _ in 0..4 {
+        let rows = 1 + (rng.next_u64() % 4) as usize;
+        let n = 2 + (rng.next_u64() % 16) as usize;
+        let x: Vec<f64> = (0..rows * n).map(|_| rng.uniform(-4.0, 4.0)).collect();
+        let got = run_pair_with_inputs(&x, &x, |c, a, _| {
+            softmax::softmax_2quad_secformer(c, a, rows, n)
+        });
+        for r in 0..rows {
+            let row = &got[r * n..(r + 1) * n];
+            let sum: f64 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 0.03, "row {r} sums to {sum}");
+            assert!(row.iter().all(|&v| v > -0.01), "negative prob in row {r}");
+        }
+    }
+}
+
+#[test]
+fn prop_gelu_secformer_bounded_error_everywhere() {
+    // |Π_GeLU(x) − GeLU(x)| stays below the paper's worst case across the
+    // whole fixed-point-safe domain, including far outside the segment.
+    let mut rng = Xoshiro::seed_from(7);
+    let x: Vec<f64> = (0..256).map(|_| rng.uniform(-30.0, 30.0)).collect();
+    let got = run_pair_with_inputs(&x, &x, |c, a, _| gelu::gelu_secformer(c, a));
+    for i in 0..x.len() {
+        let err = (got[i] - gelu::gelu_exact(x[i])).abs();
+        assert!(err < 0.05, "x={} err={err}", x[i]);
+    }
+}
+
+#[test]
+fn prop_trunc_error_bounded() {
+    // SecureML local truncation: ±1 LSB w.h.p. over random shares.
+    let mut rng = Xoshiro::seed_from(8);
+    for _ in 0..500 {
+        let v = rng.uniform(-1e4, 1e4);
+        let double_scale = ((v * 65536.0 * 65536.0) as i64) as u64;
+        let (s0, s1) = share(&[double_scale], &mut rng);
+        let t0 = secformer::core::fixed::trunc_share(s0[0], 0, 16);
+        let t1 = secformer::core::fixed::trunc_share(s1[0], 1, 16);
+        let rec = decode(t0.wrapping_add(t1));
+        assert!((rec - v).abs() < 3.0 / 65536.0 + 1e-9, "v={v} rec={rec}");
+    }
+}
+
+#[test]
+fn prop_boolean_and_arithmetic_shares_consistent() {
+    // encode_vec → share → reconstruct is exact for representable values.
+    let mut rng = Xoshiro::seed_from(9);
+    let vals: Vec<f64> = (0..100).map(|_| (rng.next_u64() % 1000) as f64 / 16.0).collect();
+    let enc = encode_vec(&vals);
+    let (s0, s1) = share(&enc, &mut rng);
+    let rec = reconstruct(&s0, &s1);
+    assert_eq!(rec, enc);
+}
