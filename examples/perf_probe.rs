@@ -1,30 +1,144 @@
-//! Perf probe (§Perf): micro-throughput of the two L3 hot primitives.
-use secformer::core::rng::Prf;
+//! Perf probe (PERF.md): micro-throughput of the two hot local primitives,
+//! plus the round-fused-attention before/after comparison, emitted as
+//! `BENCH_attention.json` so future PRs have a perf trajectory to compare
+//! against.
+use secformer::core::rng::{Prf, Xoshiro};
+use secformer::engine::{InferenceResult, OfflineMode, SecureModel};
+use secformer::net::stats::NetModel;
+use secformer::nn::config::{Framework, ModelConfig};
+use secformer::nn::model::ModelInput;
+use secformer::nn::weights::random_weights;
 use std::time::Instant;
 
-fn main() {
+fn prf_and_matmul_probes() {
     // PRF scalar vs batched fill
     let n = 20_000_000usize;
     let mut p = Prf::from_label("bench-scalar");
     let t0 = Instant::now();
     let mut acc = 0u64;
-    for _ in 0..n { acc ^= p.next_u64(); }
+    for _ in 0..n {
+        acc ^= p.next_u64();
+    }
     let scalar = n as f64 / t0.elapsed().as_secs_f64() / 1e6;
     let mut p = Prf::from_label("bench-batch");
     let t0 = Instant::now();
     let v = p.next_vec(n);
-    for x in &v { acc ^= *x; }
+    for x in &v {
+        acc ^= *x;
+    }
     let batch = n as f64 / t0.elapsed().as_secs_f64() / 1e6;
     println!("PRF scalar: {scalar:.1} M u64/s | batched fill: {batch:.1} M u64/s ({acc})");
 
-    // ring matmul
-    let m = 256; let k = 512; let nn = 512;
-    let a: Vec<u64> = (0..m*k).map(|i| i as u64).collect();
-    let b: Vec<u64> = (0..k*nn).map(|i| i as u64).collect();
-    let mut c = vec![0u64; m*nn];
+    // ring matmul (row-sharded threaded kernel above the size threshold)
+    let m = 256;
+    let k = 512;
+    let nn = 512;
+    let a: Vec<u64> = (0..m * k).map(|i| i as u64).collect();
+    let b: Vec<u64> = (0..k * nn).map(|i| i as u64).collect();
+    let mut c = vec![0u64; m * nn];
     let t0 = Instant::now();
     let reps = 20;
-    for _ in 0..reps { c.iter_mut().for_each(|v| *v = 0); secformer::core::tensor::matmul_ring(&a, &b, &mut c, m, k, nn); }
+    for _ in 0..reps {
+        c.iter_mut().for_each(|v| *v = 0);
+        secformer::core::tensor::matmul_ring(&a, &b, &mut c, m, k, nn);
+    }
     let dt = t0.elapsed().as_secs_f64();
-    println!("matmul_ring: {:.2} Gop/s (c[0]={})", (reps*m*k*nn) as f64 / dt / 1e9, c[0]);
+    println!("matmul_ring: {:.2} Gop/s (c[0]={})", (reps * m * k * nn) as f64 / dt / 1e9, c[0]);
+}
+
+/// One fused/unfused measurement for the JSON record.
+struct AttnMeasurement {
+    config: String,
+    fused: bool,
+    layers: usize,
+    heads: usize,
+    rounds: u64,
+    rounds_per_layer: f64,
+    bytes_total: u64,
+    wall_seconds: f64,
+    simulated_lan_seconds: f64,
+}
+
+fn measure(config: &str, cfg: &ModelConfig, seed: u64) -> AttnMeasurement {
+    let w = random_weights(cfg, seed);
+    let mut rng = Xoshiro::seed_from(seed + 1);
+    let hidden: Vec<f64> = (0..cfg.seq * cfg.hidden).map(|_| rng.normal() * 0.5).collect();
+    let mut model = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+    let r: InferenceResult = model.infer(&ModelInput::Hidden(hidden));
+    AttnMeasurement {
+        config: config.to_string(),
+        fused: cfg.fused_attention,
+        layers: cfg.layers,
+        heads: cfg.heads,
+        rounds: r.stats.total_rounds(),
+        rounds_per_layer: r.stats.rounds_per_layer(cfg.layers),
+        bytes_total: r.stats.total_bytes() * 2,
+        wall_seconds: r.wall_seconds,
+        simulated_lan_seconds: r.simulated_lan_seconds,
+    }
+}
+
+fn json_entry(m: &AttnMeasurement) -> String {
+    format!(
+        "    {{\"config\": \"{}\", \"fused\": {}, \"layers\": {}, \"heads\": {}, \
+         \"rounds\": {}, \"rounds_per_layer\": {:.1}, \"bytes_total\": {}, \
+         \"wall_seconds\": {:.6}, \"simulated_lan_seconds\": {:.6}}}",
+        m.config,
+        m.fused,
+        m.layers,
+        m.heads,
+        m.rounds,
+        m.rounds_per_layer,
+        m.bytes_total,
+        m.wall_seconds,
+        m.simulated_lan_seconds
+    )
+}
+
+fn main() {
+    prf_and_matmul_probes();
+
+    // Round-fused attention, before/after. `bert_tiny` is the test shape;
+    // `bert_base_scaled` keeps BERT-base's 12 layers × 12 heads at reduced
+    // widths so the probe stays single-machine-friendly (communication
+    // rounds — the fusion target — are width-independent).
+    let seq: usize = std::env::var("SECFORMER_SEQ")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+    let mut shapes: Vec<(&'static str, ModelConfig)> = Vec::new();
+    shapes.push(("bert_tiny", ModelConfig::tiny(seq, Framework::SecFormer)));
+    let mut base = ModelConfig::tiny(seq, Framework::SecFormer);
+    base.layers = 12;
+    base.heads = 12;
+    base.hidden = 96;
+    base.intermediate = 192;
+    shapes.push(("bert_base_scaled", base));
+
+    let lan = NetModel::paper_lan();
+    let mut entries = Vec::new();
+    println!("\n=== Round-fused attention: before/after ===");
+    for (name, cfg) in &shapes {
+        let fused = measure(name, cfg, 0xA77);
+        let mut uncfg = cfg.clone();
+        uncfg.fused_attention = false;
+        let unfused = measure(name, &uncfg, 0xA77);
+        let net = |m: &AttnMeasurement| lan.simulated_seconds(m.rounds, m.bytes_total);
+        println!(
+            "  {name:<18} rounds/layer {:>6.1} → {:>5.1}  LAN net {:.3}s → {:.3}s  ({:.2}× )",
+            unfused.rounds_per_layer,
+            fused.rounds_per_layer,
+            net(&unfused),
+            net(&fused),
+            net(&unfused) / net(&fused),
+        );
+        entries.push(json_entry(&unfused));
+        entries.push(json_entry(&fused));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"attention_round_fusion\",\n  \"seq\": {seq},\n  \"runs\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    std::fs::write("BENCH_attention.json", &json).expect("write BENCH_attention.json");
+    println!("wrote BENCH_attention.json ({} runs)", entries.len());
 }

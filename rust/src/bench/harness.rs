@@ -84,6 +84,11 @@ pub struct Table3Row {
     pub total_s: f64,
     pub total_gb: f64,
     pub lan_total_s: f64,
+    /// Total online communication rounds of the inference.
+    pub total_rounds: u64,
+    /// Rounds per encoder layer — head-count-independent on the fused
+    /// attention path (the tentpole invariant; PERF.md §Round fusion).
+    pub rounds_per_layer: f64,
 }
 
 /// Run one secure inference at the given shape and collect the breakdown.
@@ -102,6 +107,8 @@ pub fn run_breakdown(mut cfg: ModelConfig, seed: u64) -> Table3Row {
         total_s: per_cat.iter().map(|r| r.1).sum(),
         total_gb: per_cat.iter().map(|r| r.2).sum(),
         lan_total_s: res.simulated_lan_seconds,
+        total_rounds: res.stats.total_rounds(),
+        rounds_per_layer: res.stats.rounds_per_layer(cfg.layers),
         per_cat,
     }
 }
@@ -120,9 +127,9 @@ pub fn table3(seq: usize, frameworks: &[Framework], large_too: bool) -> Vec<Tabl
     for (mname, mk) in &models {
         println!("\n=== Table 3 — {mname} (seq={seq}; paper uses 512) ===");
         println!(
-            "{:<11} {:>14} {:>14} {:>14} {:>14} {:>11} {:>10} {:>10}",
+            "{:<11} {:>14} {:>14} {:>14} {:>14} {:>11} {:>10} {:>10} {:>9}",
             "Method", "GeLU s/GB", "Softmax s/GB", "LayerNorm s/GB", "Others s/GB",
-            "Total s", "Comm GB", "LAN s"
+            "Total s", "Comm GB", "LAN s", "rnd/layer"
         );
         for &fw in frameworks {
             let row = run_breakdown(mk(fw), 0x7AB1E3);
@@ -130,7 +137,7 @@ pub fn table3(seq: usize, frameworks: &[Framework], large_too: bool) -> Vec<Tabl
                 format!("{:.2}/{:.2}", row.per_cat[c].1, row.per_cat[c].2)
             };
             println!(
-                "{:<11} {:>14} {:>14} {:>14} {:>14} {:>11.2} {:>10.3} {:>10.2}",
+                "{:<11} {:>14} {:>14} {:>14} {:>14} {:>11.2} {:>10.3} {:>10.2} {:>9.1}",
                 fw.name(),
                 cell(0),
                 cell(1),
@@ -139,6 +146,7 @@ pub fn table3(seq: usize, frameworks: &[Framework], large_too: bool) -> Vec<Tabl
                 row.total_s,
                 row.total_gb,
                 row.lan_total_s,
+                row.rounds_per_layer,
             );
             rows.push(row);
         }

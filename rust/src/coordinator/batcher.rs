@@ -14,6 +14,7 @@ use crate::nn::model::ModelInput;
 use crate::nn::weights::WeightMap;
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::executor::PlaintextModel;
+use crate::runtime::xla_shim as xla;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
@@ -95,10 +96,23 @@ impl Coordinator {
         let w_ms = metrics_secure.clone();
         let w_mp = metrics_plain.clone();
         let worker = std::thread::spawn(move || {
+            let num_labels = cfg.num_labels;
             let mut secure = SecureModel::new(cfg, &weights, OfflineMode::Seeded);
-            let mut plain = plaintext.map(|(meta, w)| {
-                let client = xla::PjRtClient::cpu().expect("pjrt cpu client");
-                PlaintextModel::load(&client, &meta, &w).expect("load artifact")
+            // Degrade rather than panic when the PJRT runtime is absent
+            // (e.g. the xla_shim build): plaintext requests get a NaN reply
+            // instead of wedging every client on a dead worker.
+            let mut plain = plaintext.and_then(|(meta, w)| match xla::PjRtClient::cpu() {
+                Ok(client) => match PlaintextModel::load(&client, &meta, &w) {
+                    Ok(m) => Some(m),
+                    Err(e) => {
+                        eprintln!("coordinator: plaintext engine disabled: {e}");
+                        None
+                    }
+                },
+                Err(e) => {
+                    eprintln!("coordinator: plaintext engine disabled: {e}");
+                    None
+                }
             });
             loop {
                 let batch = {
@@ -131,7 +145,16 @@ impl Coordinator {
                             (r.logits, r.stats.total_bytes() * 2)
                         }
                         EngineKind::Plaintext => {
-                            let p = plain.as_mut().expect("no plaintext engine configured");
+                            let Some(p) = plain.as_mut() else {
+                                let _ = req.reply_to.send(InferenceReply {
+                                    id: req.id,
+                                    logits: vec![f64::NAN; num_labels],
+                                    latency_s: req.submitted.elapsed().as_secs_f64(),
+                                    engine: req.engine,
+                                    comm_bytes: 0,
+                                });
+                                continue;
+                            };
                             let logits = match &req.input {
                                 ModelInput::Tokens(toks) => {
                                     let t: Vec<i32> =

@@ -159,7 +159,7 @@ impl Prf {
 
     /// Bulk generation: encrypts counter blocks in batches of 8 (gives the
     /// backend AES-NI pipelining room) — ~6× the one-block-at-a-time rate.
-    /// The hot path of the offline phase (§Perf in EXPERIMENTS.md).
+    /// The hot path of the offline phase (PERF.md §Offline phase).
     pub fn fill(&mut self, out: &mut [u64]) {
         const BATCH: usize = 8;
         let mut i = 0;

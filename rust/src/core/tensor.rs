@@ -139,9 +139,9 @@ impl RingTensor {
 
     /// Ring matmul: self is (m, k), rhs is (k, n) → (m, n), all wrapping.
     ///
-    /// Blocked over the inner dimension for cache friendliness; this is the
-    /// single hottest local computation in the secure inference path (see
-    /// EXPERIMENTS.md §Perf).
+    /// Blocked over the inner dimension for cache friendliness and row-
+    /// sharded across threads for large shapes; this is the single hottest
+    /// local computation in the secure inference path (see PERF.md).
     pub fn matmul(&self, rhs: &RingTensor) -> RingTensor {
         let (m, k) = (self.shape[0], self.shape[1]);
         let (k2, n) = (rhs.shape[0], rhs.shape[1]);
@@ -215,13 +215,53 @@ impl RingTensor {
     }
 }
 
-/// Blocked wrapping matmul kernel: C (m×n) = A (m×k) · B (k×n) mod 2^64.
+/// Work threshold (multiply-accumulate ops) above which [`matmul_ring`]
+/// shards rows across threads. Below it, thread spawn/join overhead beats
+/// the parallel win (PERF.md §Matmul kernel).
+const MATMUL_PAR_THRESHOLD_OPS: usize = 1 << 20;
+
+/// Cap on worker threads per matmul. Party threads run concurrently (each
+/// engine inference already holds 2–3 OS threads), so each local matmul
+/// takes at most this many cores rather than oversubscribing the host.
+const MATMUL_MAX_THREADS: usize = 8;
+
+/// Wrapping matmul: C (m×n) = A (m×k) · B (k×n) mod 2^64.
 ///
-/// i-k-j loop order, k blocked for cache residency of the B panel and
-/// unrolled 4-wide so the inner j-loop carries four independent
-/// multiply-accumulate chains (ILP) over contiguous memory. §Perf:
-/// 0.50 → ~1.7 Gop/s single-core versus the naive i-k-j loop.
+/// Dispatches to the blocked single-thread kernel below, or — when the
+/// product has ≥ 2^20 multiply-accumulates — shards the rows of A/C across
+/// `std::thread::scope` workers (each party's triple-masked matmuls are
+/// embarrassingly parallel; no extra deps needed). Kernel design and
+/// measured rates: PERF.md §Matmul kernel.
 pub fn matmul_ring(a: &[u64], b: &[u64], c: &mut [u64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let ops = m.saturating_mul(k).saturating_mul(n);
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(MATMUL_MAX_THREADS)
+        .min(m);
+    if ops < MATMUL_PAR_THRESHOLD_OPS || workers <= 1 {
+        matmul_ring_serial(a, b, c, m, k, n);
+        return;
+    }
+    let chunk_rows = (m + workers - 1) / workers;
+    std::thread::scope(|scope| {
+        for (ci, c_chunk) in c.chunks_mut(chunk_rows * n).enumerate() {
+            let rows = c_chunk.len() / n;
+            let a_chunk = &a[ci * chunk_rows * k..ci * chunk_rows * k + rows * k];
+            scope.spawn(move || matmul_ring_serial(a_chunk, b, c_chunk, rows, k, n));
+        }
+    });
+}
+
+/// Blocked single-thread kernel: i-k-j loop order, k blocked for cache
+/// residency of the B panel and unrolled 4-wide so the inner j-loop carries
+/// four independent multiply-accumulate chains (ILP) over contiguous
+/// memory. PERF.md §Matmul kernel: 0.50 → ~1.7 Gop/s single-core versus
+/// the naive i-k-j loop.
+fn matmul_ring_serial(a: &[u64], b: &[u64], c: &mut [u64], m: usize, k: usize, n: usize) {
     const KB: usize = 128;
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -299,6 +339,25 @@ mod tests {
         let v = ((c.data[0] as i64) >> FRAC_BITS) as u64;
         let got = crate::core::fixed::decode(v);
         assert!((got - 2.0).abs() < 1e-3, "got {got}"); // 1.5*2 + (-2)*0.5 = 2
+    }
+
+    #[test]
+    fn parallel_matmul_matches_serial_kernel() {
+        // 128×128×128 = 2^21 ops — above the sharding threshold, so the
+        // public entry point takes the threaded path; results must be
+        // bit-identical to the serial kernel (and chunk edges must be
+        // handled when m doesn't divide evenly by the worker count).
+        for m in [128usize, 127, 3] {
+            let (k, n) = (128usize, 128usize);
+            let mut rng = crate::core::rng::Xoshiro::seed_from(m as u64);
+            let a: Vec<u64> = (0..m * k).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..k * n).map(|_| rng.next_u64()).collect();
+            let mut par = vec![0u64; m * n];
+            let mut ser = vec![0u64; m * n];
+            matmul_ring(&a, &b, &mut par, m, k, n);
+            matmul_ring_serial(&a, &b, &mut ser, m, k, n);
+            assert_eq!(par, ser, "m={m}");
+        }
     }
 
     #[test]

@@ -92,13 +92,13 @@ impl SecureModel {
         }
     }
 
-    /// Run one secure inference (steps ②–⑤ of Fig 2).
-    pub fn infer(&mut self, input: &ModelInput) -> InferenceResult {
+    /// Client side of step ②: validate, encode and secret-share the input
+    /// for a *fresh* session (advances the session counter, so every
+    /// inference masks the input with fresh randomness). Public so tests
+    /// can assert the freshness invariant directly.
+    pub fn share_input(&mut self, input: &ModelInput) -> (InputShare, InputShare) {
         self.session_counter += 1;
-        let session = format!("{}-{}", self.session_label, self.session_counter);
-        let cfg = self.cfg.clone();
-
-        // Client side: validate, encode + share the input.
+        let cfg = &self.cfg;
         if let ModelInput::Hidden(h) = input {
             assert_eq!(
                 h.len(),
@@ -106,8 +106,11 @@ impl SecureModel {
                 "hidden input must be seq×hidden"
             );
         }
-        let mut rng = Xoshiro::seed_from(0xC11E & self.session_counter);
-        let (in0, in1) = match input {
+        // XOR, not AND: `0xC11E & counter` collapsed most counters onto a
+        // handful of seeds (1 → 0, 2 and 3 → 2, …), reusing input-share
+        // masks across inferences — see `session_input_masks_are_fresh`.
+        let mut rng = Xoshiro::seed_from(0xC11E ^ self.session_counter);
+        match input {
             ModelInput::Hidden(h) => {
                 let (a, b) = share(&encode_vec(h), &mut rng);
                 (InputShare::Hidden(a), InputShare::Hidden(b))
@@ -121,7 +124,14 @@ impl SecureModel {
                 let (a, b) = share(&encode_vec(&onehot), &mut rng);
                 (InputShare::OneHot(a), InputShare::OneHot(b))
             }
-        };
+        }
+    }
+
+    /// Run one secure inference (steps ②–⑤ of Fig 2).
+    pub fn infer(&mut self, input: &ModelInput) -> InferenceResult {
+        let (in0, in1) = self.share_input(input);
+        let session = format!("{}-{}", self.session_label, self.session_counter);
+        let cfg = self.cfg.clone();
 
         let (peer0, peer1) = channel_pair();
         let t0 = Instant::now();
@@ -250,6 +260,33 @@ mod tests {
                 got.logits[i],
                 expect[i]
             );
+        }
+    }
+
+    #[test]
+    fn session_input_masks_are_fresh() {
+        // Regression for the `0xC11E & session_counter` seed bug: bitwise
+        // AND collapsed counters onto a handful of seeds (1 → 0, 2 and
+        // 3 → both 2), so consecutive inferences reused input-share masks.
+        // With XOR every session must produce distinct shares of the SAME
+        // plaintext input.
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let w = random_weights(&cfg, 13);
+        let input = hidden_input(&cfg, 14);
+        let mut model = SecureModel::new(cfg, &w, OfflineMode::Seeded);
+        let mut seen: Vec<Vec<u64>> = Vec::new();
+        for session in 0..4 {
+            let (s0, _s1) = model.share_input(&input);
+            let InputShare::Hidden(mask) = s0 else {
+                panic!("hidden input must yield hidden shares");
+            };
+            for (prev, old) in seen.iter().enumerate() {
+                assert_ne!(
+                    old, &mask,
+                    "input-share mask reused between sessions {prev} and {session}"
+                );
+            }
+            seen.push(mask);
         }
     }
 

@@ -29,6 +29,7 @@ use secformer::nn::config::{Framework, ModelConfig};
 use secformer::nn::model::{ref_forward, ModelInput};
 use secformer::nn::weights::{load_swts, random_weights, WeightMap};
 use secformer::runtime::artifact::ArtifactManifest;
+use secformer::runtime::xla_shim as xla;
 use std::collections::BTreeMap;
 
 struct Args {

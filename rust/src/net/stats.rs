@@ -180,6 +180,13 @@ impl StatsSnapshot {
     pub fn total_rounds(&self) -> u64 {
         self.rounds.iter().sum()
     }
+
+    /// Online rounds per encoder layer — the round-fused attention path
+    /// makes this independent of the head count (PERF.md §Round fusion),
+    /// so benchmarks report it alongside totals.
+    pub fn rounds_per_layer(&self, layers: usize) -> f64 {
+        self.total_rounds() as f64 / layers.max(1) as f64
+    }
 }
 
 /// Analytic network model: converts counted rounds and bytes into simulated

@@ -65,6 +65,13 @@ pub struct ModelConfig {
     /// Goldschmidt iteration counts (Algorithms 2–3).
     pub rsqrt_iters: usize,
     pub div_iters: usize,
+    /// Round-fused attention (PERF.md §Round fusion): fuse the Q/K/V
+    /// projections into one wide matmul, batch all heads' score and
+    /// context matmuls into single `Π_MatMul` rounds, and run every
+    /// head's softmax as one row-batched call — making online rounds per
+    /// encoder layer independent of `heads`. The unfused per-head loop is
+    /// kept (set `false`) as the before/after baseline.
+    pub fused_attention: bool,
 }
 
 impl ModelConfig {
@@ -84,6 +91,7 @@ impl ModelConfig {
             eta_softmax: 5000.0,
             rsqrt_iters: crate::proto::goldschmidt::RSQRT_GOLD_ITERS,
             div_iters: crate::proto::goldschmidt::DIV_GOLD_ITERS,
+            fused_attention: true,
         }
         .with_adaptive_etas()
     }
@@ -104,6 +112,7 @@ impl ModelConfig {
             eta_softmax: 5000.0,
             rsqrt_iters: crate::proto::goldschmidt::RSQRT_GOLD_ITERS,
             div_iters: crate::proto::goldschmidt::DIV_GOLD_ITERS,
+            fused_attention: true,
         }
         .with_adaptive_etas()
     }
@@ -124,6 +133,7 @@ impl ModelConfig {
             eta_softmax: 5000.0,
             rsqrt_iters: crate::proto::goldschmidt::RSQRT_GOLD_ITERS,
             div_iters: crate::proto::goldschmidt::DIV_GOLD_ITERS,
+            fused_attention: true,
         }
         .with_adaptive_etas()
     }

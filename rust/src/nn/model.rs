@@ -172,7 +172,138 @@ fn apply_layernorm(
 
 /// Multi-head self-attention block (everything except softmax counted as
 /// "Others", the softmax under its own category — Table 3's convention).
+///
+/// Dispatches on `cfg.fused_attention` between the round-fused path (the
+/// default; online rounds independent of `cfg.heads`) and the historical
+/// per-head loop kept as the before/after baseline (PERF.md §Round
+/// fusion).
 fn attention(
+    ctx: &mut PartyCtx,
+    cfg: &ModelConfig,
+    w: &ShareMap,
+    layer: usize,
+    h: &[u64],
+) -> Vec<u64> {
+    if cfg.fused_attention {
+        attention_fused(ctx, cfg, w, layer, h)
+    } else {
+        attention_unfused(ctx, cfg, w, layer, h)
+    }
+}
+
+/// Round-fused attention: one Π_MatMul round for the concatenated Q/K/V
+/// projection panels, one `matmul_many` round for every head's score
+/// matmul, one row-batched softmax over all `heads × seq` rows, and one
+/// `matmul_many` round for every head's context matmul. With `S` = softmax
+/// rounds (15 for Π_2Quad at `div_iters = 13`), per-layer online attention
+/// rounds drop from `4 + heads·(S + 2)` to `4 + S` — head-count-
+/// independent (PERF.md §Round fusion).
+fn attention_fused(
+    ctx: &mut PartyCtx,
+    cfg: &ModelConfig,
+    w: &ShareMap,
+    layer: usize,
+    h: &[u64],
+) -> Vec<u64> {
+    let (s, d, nh, dh) = (cfg.seq, cfg.hidden, cfg.heads, cfg.head_dim());
+    let p = format!("layer{layer}");
+
+    // --- Q/K/V in one round: (s×d) · (d×3d) with concatenated panels.
+    // Sharing one mask opening for the common left operand also saves
+    // 2·s·d opened elements per layer versus three separate Π_MatMul.
+    let wq = get(w, &format!("{p}.wq"));
+    let wk = get(w, &format!("{p}.wk"));
+    let wv = get(w, &format!("{p}.wv"));
+    let mut wqkv = Vec::with_capacity(d * 3 * d);
+    for r in 0..d {
+        wqkv.extend_from_slice(&wq[r * d..(r + 1) * d]);
+        wqkv.extend_from_slice(&wk[r * d..(r + 1) * d]);
+        wqkv.extend_from_slice(&wv[r * d..(r + 1) * d]);
+    }
+    let bq = get(w, &format!("{p}.bq"));
+    let bk = get(w, &format!("{p}.bk"));
+    let bv = get(w, &format!("{p}.bv"));
+    let qkv = with_cat(ctx, OpCategory::Others, |ctx| {
+        let mut y = prim::matmul(ctx, h, &wqkv, s, d, 3 * d);
+        for r in 0..s {
+            let row = &mut y[r * 3 * d..(r + 1) * 3 * d];
+            for c in 0..d {
+                row[c] = row[c].wrapping_add(bq[c]);
+                row[d + c] = row[d + c].wrapping_add(bk[c]);
+                row[2 * d + c] = row[2 * d + c].wrapping_add(bv[c]);
+            }
+        }
+        y
+    });
+    let q = slice_cols(&qkv, s, 3 * d, 0, d);
+    let k = slice_cols(&qkv, s, 3 * d, d, 2 * d);
+    let v = slice_cols(&qkv, s, 3 * d, 2 * d, 3 * d);
+
+    // Per-head operand views (local slicing/transposition only).
+    let mut qhs = Vec::with_capacity(nh);
+    let mut kts = Vec::with_capacity(nh);
+    let mut vhs = Vec::with_capacity(nh);
+    for head in 0..nh {
+        let (c0, c1) = (head * dh, (head + 1) * dh);
+        qhs.push(slice_cols(&q, s, d, c0, c1));
+        kts.push(transpose(&slice_cols(&k, s, d, c0, c1), s, dh));
+        vhs.push(slice_cols(&v, s, d, c0, c1));
+    }
+
+    // --- All heads' score matmuls share ONE communication round; the
+    // result is laid out head-major as (heads·s) × s rows.
+    let scale = 1.0 / (dh as f64).sqrt();
+    let mut scores_all = with_cat(ctx, OpCategory::Others, |ctx| {
+        let specs: Vec<prim::MatMulSpec> = (0..nh)
+            .map(|i| prim::MatMulSpec { x: &qhs[i], y: &kts[i], m: s, k: dh, n: s })
+            .collect();
+        let per_head = prim::matmul_many(ctx, &specs);
+        prim::mul_public(ctx, &per_head.concat(), scale)
+    });
+    if cfg.causal {
+        for head in 0..nh {
+            apply_causal_mask(ctx, cfg, &mut scores_all[head * s * s..(head + 1) * s * s], s);
+        }
+    }
+
+    // --- One softmax for every head: the protocols are row-oriented, so
+    // the head loop collapses into the rows dimension (heads·s rows of s).
+    let attnw = with_cat(ctx, OpCategory::Softmax, |ctx| {
+        apply_softmax(ctx, cfg, &scores_all, nh * s, s)
+    });
+
+    // --- All context matmuls share ONE round.
+    let ctxs = with_cat(ctx, OpCategory::Others, |ctx| {
+        let specs: Vec<prim::MatMulSpec> = (0..nh)
+            .map(|i| prim::MatMulSpec {
+                x: &attnw[i * s * s..(i + 1) * s * s],
+                y: &vhs[i],
+                m: s,
+                k: s,
+                n: dh,
+            })
+            .collect();
+        prim::matmul_many(ctx, &specs)
+    });
+    let mut ctx_all = vec![0u64; s * d];
+    for (head, ctxh) in ctxs.iter().enumerate() {
+        put_cols(&mut ctx_all, ctxh, s, d, head * dh, (head + 1) * dh);
+    }
+    linear(
+        ctx,
+        &ctx_all,
+        get(w, &format!("{p}.wo")),
+        get(w, &format!("{p}.bo")),
+        s,
+        d,
+        d,
+    )
+}
+
+/// Pre-fusion baseline: one Π_MatMul + softmax + Π_MatMul *per head*, so
+/// online rounds per layer scale with `cfg.heads`. Kept for the
+/// before/after benchmarks and the fusion regression tests.
+fn attention_unfused(
     ctx: &mut PartyCtx,
     cfg: &ModelConfig,
     w: &ShareMap,
@@ -296,7 +427,7 @@ pub fn bert_forward(
         h = encoder_layer(ctx, cfg, w, layer, &h);
     }
     // Classifier on the [CLS] position (tanh-free head by model design —
-    // see DESIGN.md).
+    // see PERF.md "Model head" note).
     let cls = &h[..d];
     linear(ctx, cls, get(w, "cls.w"), get(w, "cls.b"), 1, d, cfg.num_labels)
 }

@@ -210,6 +210,10 @@ pub fn mul2(
 }
 
 /// `Π_MatMul`, ring semantics: `Z (m×n) = X (m×k) · Y (k×n)`, 1 round.
+///
+/// A one-element [`matmul_many_raw`] batch: identical round count (one
+/// `exchange_many` of `[d, e]`), byte volume, and provider stream
+/// consumption, so the Beaver reconstruction lives in exactly one place.
 pub fn matmul_raw(
     ctx: &mut PartyCtx,
     x: &[u64],
@@ -218,35 +222,9 @@ pub fn matmul_raw(
     k: usize,
     n: usize,
 ) -> Vec<u64> {
-    use crate::core::tensor::matmul_ring;
-    assert_eq!(x.len(), m * k);
-    assert_eq!(y.len(), k * n);
-    let t = ctx.prov.matmul_triple(m, k, n);
-    let d = sub(x, &t.a);
-    let e = sub(y, &t.b);
-    let opened = ctx.exchange_many(&[&d, &e]);
-    let d_open = add(&d, &opened[0]);
-    let e_open = add(&e, &opened[1]);
-    // Z_j = C_j + A_j·E + D·B_j (+ D·E for party 1)
-    let mut z = t.c.clone();
-    let mut tmp = vec![0u64; m * n];
-    matmul_ring(&t.a, &e_open, &mut tmp, m, k, n);
-    for (zi, ti) in z.iter_mut().zip(&tmp) {
-        *zi = zi.wrapping_add(*ti);
-    }
-    tmp.iter_mut().for_each(|v| *v = 0);
-    matmul_ring(&d_open, &t.b, &mut tmp, m, k, n);
-    for (zi, ti) in z.iter_mut().zip(&tmp) {
-        *zi = zi.wrapping_add(*ti);
-    }
-    if ctx.id == 1 {
-        tmp.iter_mut().for_each(|v| *v = 0);
-        matmul_ring(&d_open, &e_open, &mut tmp, m, k, n);
-        for (zi, ti) in z.iter_mut().zip(&tmp) {
-            *zi = zi.wrapping_add(*ti);
-        }
-    }
-    z
+    matmul_many_raw(ctx, &[MatMulSpec { x, y, m, k, n }])
+        .pop()
+        .expect("single-spec batch yields one result")
 }
 
 /// `Π_MatMul`, fixed-point.
@@ -260,6 +238,75 @@ pub fn matmul(
 ) -> Vec<u64> {
     let z = matmul_raw(ctx, x, y, m, k, n);
     trunc(ctx, &z, FRAC_BITS)
+}
+
+/// One operand pair of a batched `Π_MatMul` (see [`matmul_many`]).
+pub struct MatMulSpec<'a> {
+    pub x: &'a [u64],
+    pub y: &'a [u64],
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// Block-batched `Π_MatMul`, ring semantics: a list of independent
+/// `(m, k, n)` matmuls whose D/E masks are all opened in ONE
+/// `exchange_many` round. Byte volume is identical to issuing the matmuls
+/// one by one (`Σ mᵢkᵢ + kᵢnᵢ` elements per party); the round count drops
+/// from `specs.len()` to 1 — the primitive behind the head-fused attention
+/// path (PERF.md §Round fusion).
+pub fn matmul_many_raw(ctx: &mut PartyCtx, specs: &[MatMulSpec]) -> Vec<Vec<u64>> {
+    use crate::core::tensor::matmul_ring;
+    if specs.is_empty() {
+        return Vec::new();
+    }
+    let shapes: Vec<(usize, usize, usize)> =
+        specs.iter().map(|s| (s.m, s.k, s.n)).collect();
+    let triples = ctx.prov.matmul_triples(&shapes);
+    // Interleaved [d0, e0, d1, e1, …] masked operands, one buffer each.
+    let mut masked: Vec<Vec<u64>> = Vec::with_capacity(2 * specs.len());
+    for (s, t) in specs.iter().zip(&triples) {
+        assert_eq!(s.x.len(), s.m * s.k);
+        assert_eq!(s.y.len(), s.k * s.n);
+        masked.push(sub(s.x, &t.a));
+        masked.push(sub(s.y, &t.b));
+    }
+    let bufs: Vec<&[u64]> = masked.iter().map(|b| b.as_slice()).collect();
+    let opened = ctx.exchange_many(&bufs);
+    let mut out = Vec::with_capacity(specs.len());
+    for (i, (s, t)) in specs.iter().zip(&triples).enumerate() {
+        let d_open = add(&masked[2 * i], &opened[2 * i]);
+        let e_open = add(&masked[2 * i + 1], &opened[2 * i + 1]);
+        // Z_j = C_j + A_j·E + D·B_j (+ D·E for party 1)
+        let mut z = t.c.clone();
+        let mut tmp = vec![0u64; s.m * s.n];
+        matmul_ring(&t.a, &e_open, &mut tmp, s.m, s.k, s.n);
+        for (zi, ti) in z.iter_mut().zip(&tmp) {
+            *zi = zi.wrapping_add(*ti);
+        }
+        tmp.iter_mut().for_each(|v| *v = 0);
+        matmul_ring(&d_open, &t.b, &mut tmp, s.m, s.k, s.n);
+        for (zi, ti) in z.iter_mut().zip(&tmp) {
+            *zi = zi.wrapping_add(*ti);
+        }
+        if ctx.id == 1 {
+            tmp.iter_mut().for_each(|v| *v = 0);
+            matmul_ring(&d_open, &e_open, &mut tmp, s.m, s.k, s.n);
+            for (zi, ti) in z.iter_mut().zip(&tmp) {
+                *zi = zi.wrapping_add(*ti);
+            }
+        }
+        out.push(z);
+    }
+    out
+}
+
+/// Block-batched `Π_MatMul`, fixed-point.
+pub fn matmul_many(ctx: &mut PartyCtx, specs: &[MatMulSpec]) -> Vec<Vec<u64>> {
+    matmul_many_raw(ctx, specs)
+        .into_iter()
+        .map(|z| trunc(ctx, &z, FRAC_BITS))
+        .collect()
 }
 
 #[cfg(test)]
@@ -313,6 +360,66 @@ mod tests {
         for i in 0..4 {
             assert!((got[i] - expect[i]).abs() < 1e-2, "i={i} got={}", got[i]);
         }
+    }
+
+    #[test]
+    fn matmul_many_matches_sequential_matmuls() {
+        // Two independent matmuls: (2×3)·(3×2) and (1×2)·(2×4), batched.
+        // Inputs are packed into one vector and sliced inside the closure.
+        let x = vec![1.0, 2.0, 3.0, -1.0, 0.5, 2.0, /* second */ 2.0, -1.0];
+        let y = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0, /* second */ 0.5, 1.0, 0.0, 2.0, 1.0, 0.0, 1.0, -1.0];
+        let got = run_pair_with_inputs(&x, &y, |ctx, xs, ys| {
+            let specs = [
+                MatMulSpec { x: &xs[..6], y: &ys[..6], m: 2, k: 3, n: 2 },
+                MatMulSpec { x: &xs[6..], y: &ys[6..], m: 1, k: 2, n: 4 },
+            ];
+            let mut z = matmul_many(ctx, &specs);
+            let second = z.pop().unwrap();
+            let mut out = z.pop().unwrap();
+            out.extend(second);
+            out
+        });
+        let expect = [
+            4.0, 5.0, 1.0, 2.5, // first product
+            0.0, 2.0, -1.0, 5.0, // [2,-1]·[[0.5,1,0,2],[1,0,1,-1]]
+        ];
+        for i in 0..expect.len() {
+            assert!((got[i] - expect[i]).abs() < 1e-2, "i={i} got={}", got[i]);
+        }
+    }
+
+    #[test]
+    fn matmul_many_is_one_round_with_unchanged_volume() {
+        // The batch must cost exactly 1 round and the same byte volume as
+        // the equivalent sequence of Π_MatMul calls: Σ (mᵢkᵢ + kᵢnᵢ).
+        let x = vec![1.0f64; 6 + 2];
+        let y = vec![1.0f64; 6 + 8];
+        let run = |batched: bool| {
+            let (_, stats) = crate::proto::harness::run_pair_collect_stats(
+                &x,
+                &y,
+                move |ctx, xs, ys| {
+                    if batched {
+                        let specs = [
+                            MatMulSpec { x: &xs[..6], y: &ys[..6], m: 2, k: 3, n: 2 },
+                            MatMulSpec { x: &xs[6..], y: &ys[6..], m: 1, k: 2, n: 4 },
+                        ];
+                        matmul_many(ctx, &specs).concat()
+                    } else {
+                        let mut out = matmul(ctx, &xs[..6], &ys[..6], 2, 3, 2);
+                        out.extend(matmul(ctx, &xs[6..], &ys[6..], 1, 2, 4));
+                        out
+                    }
+                },
+            );
+            (stats.total_rounds(), stats.total_bytes())
+        };
+        let (batched_rounds, batched_bytes) = run(true);
+        let (seq_rounds, seq_bytes) = run(false);
+        assert_eq!(batched_rounds, 1);
+        assert_eq!(seq_rounds, 2);
+        assert_eq!(batched_bytes, seq_bytes, "fusion must not change volume");
+        assert_eq!(batched_bytes, ((6 + 6) + (2 + 8)) * 8);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 pub mod artifact;
 pub mod executor;
+pub mod xla_shim;
 
 pub use artifact::{ArtifactManifest, ArtifactMeta};
 pub use executor::PlaintextModel;

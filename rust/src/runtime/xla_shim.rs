@@ -1,0 +1,102 @@
+//! API-compatible stand-in for the `xla_extension` bindings.
+//!
+//! The offline crate set this repo builds against does not include the XLA
+//! PJRT bindings, so the plaintext-artifact executor compiles against this
+//! shim instead: every constructor returns a descriptive error at runtime,
+//! while the types keep the exact call-site shapes of the real crate. The
+//! secure (SMPC) inference path never touches PJRT and is unaffected; the
+//! CLI / coordinator degrade to "artifact execution unavailable" errors.
+//!
+//! To switch back to the real bindings, replace the `use … xla_shim as xla`
+//! aliases in `runtime/executor.rs`, `coordinator/batcher.rs` and `main.rs`
+//! with the external crate.
+
+use std::fmt;
+
+/// Error produced by every shim entry point.
+#[derive(Debug, Clone)]
+pub struct XlaUnavailable;
+
+const MSG: &str =
+    "PJRT/xla_extension is not available in this build; plaintext artifact \
+     execution is disabled (secure inference is unaffected)";
+
+impl fmt::Display for XlaUnavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(MSG)
+    }
+}
+
+impl std::error::Error for XlaUnavailable {}
+
+fn unavailable<T>() -> Result<T, XlaUnavailable> {
+    Err(XlaUnavailable)
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaUnavailable> {
+        unavailable()
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, XlaUnavailable> {
+        unavailable()
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaUnavailable> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaUnavailable> {
+        unavailable()
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaUnavailable> {
+        unavailable()
+    }
+}
+
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaUnavailable> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, XlaUnavailable> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaUnavailable> {
+        unavailable()
+    }
+}

@@ -23,6 +23,11 @@ const OP_MATMUL: u64 = 3;
 const OP_AND: u64 = 4;
 const OP_BITPAIR: u64 = 5;
 const OP_SIN: u64 = 6;
+/// Batched matmul triples: `[op, count, m0, k0, n0, m1, k1, n1, …]` →
+/// concatenated corrections, one descriptor round trip for the whole
+/// bundle (the offline counterpart of `prim::matmul_many`'s single
+/// online round).
+const OP_MATMUL_BATCH: u64 = 7;
 const OP_SHUTDOWN: u64 = 99;
 
 /// `S0`'s provider: replays the dealer's `prf0` stream locally.
@@ -135,6 +140,34 @@ impl Provider for Party1Provider {
         let c = self.request(vec![OP_MATMUL, m as u64, k as u64, n as u64], m * n);
         MatmulTriple { a, b, c, m, k, n }
     }
+    fn matmul_triples(&mut self, shapes: &[(usize, usize, usize)]) -> Vec<MatmulTriple> {
+        // One descriptor → all corrections. The free (a, b) components are
+        // drawn per shape *in order*, matching the dealer's CrGen stream
+        // consumption exactly (bundle ≡ sequential triples).
+        let mut req = Vec::with_capacity(2 + 3 * shapes.len());
+        req.push(OP_MATMUL_BATCH);
+        req.push(shapes.len() as u64);
+        let mut total_c = 0usize;
+        for &(m, k, n) in shapes {
+            req.extend_from_slice(&[m as u64, k as u64, n as u64]);
+            total_c += m * n;
+        }
+        let mut frees = Vec::with_capacity(shapes.len());
+        for &(m, k, n) in shapes {
+            let a = self.prf1.next_vec(m * k);
+            let b = self.prf1.next_vec(k * n);
+            frees.push((a, b));
+        }
+        let resp = self.request(req, total_c);
+        let mut out = Vec::with_capacity(shapes.len());
+        let mut off = 0usize;
+        for (&(m, k, n), (a, b)) in shapes.iter().zip(frees) {
+            let c = resp[off..off + m * n].to_vec();
+            off += m * n;
+            out.push(MatmulTriple { a, b, c, m, k, n });
+        }
+        out
+    }
     fn and_triple(&mut self, words: usize) -> MulTriple {
         let a = self.prf1.next_vec(words);
         let b = self.prf1.next_vec(words);
@@ -185,6 +218,22 @@ impl DealerServer {
                         .matmul_triple(req[1] as usize, req[2] as usize, req[3] as usize)
                         .1
                         .c
+                }
+                OP_MATMUL_BATCH => {
+                    let count = req[1] as usize;
+                    let shapes: Vec<(usize, usize, usize)> = (0..count)
+                        .map(|i| {
+                            (
+                                req[2 + 3 * i] as usize,
+                                req[3 + 3 * i] as usize,
+                                req[4 + 3 * i] as usize,
+                            )
+                        })
+                        .collect();
+                    // Same generator path the bundle tests pin down, so the
+                    // stream-order invariant lives in exactly one place.
+                    let (_, p1) = self.gen.matmul_triples(&shapes);
+                    p1.into_iter().flat_map(|t| t.c).collect()
                 }
                 OP_AND => self.gen.and_triple(req[1] as usize).1.c,
                 OP_BITPAIR => {
@@ -266,6 +315,47 @@ mod tests {
         }
 
         drop(p1); // sends the shutdown notice
+        dealer.join().unwrap();
+    }
+
+    #[test]
+    fn dealer_batched_matmul_bundle_matches_and_stays_in_sync() {
+        // S0 uses the trait default (sequential local derivation), S1 the
+        // single-descriptor batched request; the two must reconstruct to
+        // valid matmul triples, and the PRF streams must stay aligned for
+        // whatever comes next.
+        let (s1_end, t_end) = channel_pair();
+        let dealer = std::thread::spawn(move || {
+            let mut d = DealerServer::new("dbatch", Box::new(t_end));
+            d.run();
+        });
+        let mut p0 = Party0Provider::new("dbatch");
+        let mut p1 = Party1Provider::new("dbatch", Box::new(s1_end), None);
+
+        let shapes = [(2usize, 3usize, 2usize), (4, 1, 5), (3, 3, 3)];
+        let b0 = p0.matmul_triples(&shapes);
+        let b1 = p1.matmul_triples(&shapes);
+        assert_eq!(b0.len(), shapes.len());
+        for (t0, t1) in b0.iter().zip(&b1) {
+            let a = reconstruct(&t0.a, &t1.a);
+            let b = reconstruct(&t0.b, &t1.b);
+            let c = reconstruct(&t0.c, &t1.c);
+            let mut expect = vec![0u64; t0.m * t0.n];
+            crate::core::tensor::matmul_ring(&a, &b, &mut expect, t0.m, t0.k, t0.n);
+            assert_eq!(c, expect);
+        }
+
+        // Stream discipline: a plain triple after the bundle still works.
+        let u0 = p0.mul_triple(8);
+        let u1 = p1.mul_triple(8);
+        let a = reconstruct(&u0.a, &u1.a);
+        let b = reconstruct(&u0.b, &u1.b);
+        let c = reconstruct(&u0.c, &u1.c);
+        for i in 0..8 {
+            assert_eq!(c[i], a[i].wrapping_mul(b[i]));
+        }
+
+        drop(p1);
         dealer.join().unwrap();
     }
 

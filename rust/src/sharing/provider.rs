@@ -64,6 +64,17 @@ pub trait Provider: Send {
     fn mul_triple(&mut self, n: usize) -> MulTriple;
     fn square_pair(&mut self, n: usize) -> SquarePair;
     fn matmul_triple(&mut self, m: usize, k: usize, n: usize) -> MatmulTriple;
+    /// Block-batched matmul triples: one bundle for a list of independent
+    /// `(m, k, n)` shapes, consumed by `Π_MatMul`'s batched variant
+    /// (`prim::matmul_many`). The bundle MUST be stream-equivalent to
+    /// issuing [`Provider::matmul_triple`] once per shape in order — that
+    /// is the dealer-mode synchronization invariant — which the default
+    /// implementation guarantees by construction. Implementations may
+    /// override it to fetch all corrections in a single offline message
+    /// (see `Party1Provider`).
+    fn matmul_triples(&mut self, shapes: &[(usize, usize, usize)]) -> Vec<MatmulTriple> {
+        shapes.iter().map(|&(m, k, n)| self.matmul_triple(m, k, n)).collect()
+    }
     /// Bitwise AND triple over packed u64 words: `c = a & b`.
     fn and_triple(&mut self, words: usize) -> MulTriple;
     fn bit_pair(&mut self, n: usize) -> BitPair;
@@ -184,6 +195,24 @@ impl<S: RandStream> CrGenT<S> {
             MatmulTriple { a: a0, b: b0, c: c0, m, k, n },
             MatmulTriple { a: a1, b: b1, c: c1, m, k, n },
         )
+    }
+
+    /// Batched matmul-triple bundle: generated from the same PRF streams,
+    /// in shape order, so it is bit-identical to sequential
+    /// [`CrGenT::matmul_triple`] calls (the stream discipline both
+    /// computing parties rely on).
+    pub fn matmul_triples(
+        &mut self,
+        shapes: &[(usize, usize, usize)],
+    ) -> (Vec<MatmulTriple>, Vec<MatmulTriple>) {
+        let mut p0 = Vec::with_capacity(shapes.len());
+        let mut p1 = Vec::with_capacity(shapes.len());
+        for &(m, k, n) in shapes {
+            let (t0, t1) = self.matmul_triple(m, k, n);
+            p0.push(t0);
+            p1.push(t1);
+        }
+        (p0, p1)
     }
 
     pub fn and_triple(&mut self, words: usize) -> (MulTriple, MulTriple) {
@@ -340,6 +369,60 @@ mod tests {
         let mut expect = vec![0u64; 15];
         matmul_ring(&a, &b, &mut expect, 3, 4, 5);
         assert_eq!(c, expect);
+    }
+
+    #[test]
+    fn matmul_triples_bundle_matches_sequential() {
+        // Bundle generation must be stream-identical to issuing the
+        // triples one at a time (the dealer-mode sync invariant).
+        let shapes = [(2usize, 3usize, 4usize), (5, 1, 2), (3, 3, 3)];
+        let (b0, b1) = gen().matmul_triples(&shapes);
+        let mut g = gen();
+        for (i, &(m, k, n)) in shapes.iter().enumerate() {
+            let (s0, s1) = g.matmul_triple(m, k, n);
+            assert_eq!(b0[i].a, s0.a);
+            assert_eq!(b0[i].c, s0.c);
+            assert_eq!(b1[i].b, s1.b);
+            assert_eq!(b1[i].c, s1.c);
+        }
+        // And the correlation itself holds for every bundle entry.
+        for (t0, t1) in b0.iter().zip(&b1) {
+            let a = reconstruct(&t0.a, &t1.a);
+            let b = reconstruct(&t0.b, &t1.b);
+            let c = reconstruct(&t0.c, &t1.c);
+            let mut expect = vec![0u64; t0.m * t0.n];
+            matmul_ring(&a, &b, &mut expect, t0.m, t0.k, t0.n);
+            assert_eq!(c, expect);
+        }
+    }
+
+    #[test]
+    fn seeded_provider_batched_matches_trait_default() {
+        // The seeded provider inherits the trait's default (sequential)
+        // implementation; a bundle must therefore interleave cleanly with
+        // later requests on both parties.
+        let mut p0 = SeededProvider::new("batch", 0);
+        let mut p1 = SeededProvider::new("batch", 1);
+        let shapes = [(2usize, 2usize, 2usize), (1, 4, 3)];
+        let b0 = p0.matmul_triples(&shapes);
+        let b1 = p1.matmul_triples(&shapes);
+        for (t0, t1) in b0.iter().zip(&b1) {
+            let a = reconstruct(&t0.a, &t1.a);
+            let b = reconstruct(&t0.b, &t1.b);
+            let c = reconstruct(&t0.c, &t1.c);
+            let mut expect = vec![0u64; t0.m * t0.n];
+            matmul_ring(&a, &b, &mut expect, t0.m, t0.k, t0.n);
+            assert_eq!(c, expect);
+        }
+        // Stream stays in sync after the bundle.
+        let t0 = p0.mul_triple(4);
+        let t1 = p1.mul_triple(4);
+        let a = reconstruct(&t0.a, &t1.a);
+        let b = reconstruct(&t0.b, &t1.b);
+        let c = reconstruct(&t0.c, &t1.c);
+        for i in 0..4 {
+            assert_eq!(c[i], a[i].wrapping_mul(b[i]));
+        }
     }
 
     #[test]

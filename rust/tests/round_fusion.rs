@@ -1,0 +1,139 @@
+//! Regression tests for the round-fused attention path (the tentpole
+//! invariant of the batched protocol layer):
+//!
+//! 1. online rounds per encoder layer are independent of `cfg.heads`;
+//! 2. fusion batches rounds without inflating byte volume (the only volume
+//!    change is the *saving* from the shared Q/K/V mask opening);
+//! 3. the fused network bill beats the unfused baseline by ≥ 2× on a
+//!    BERT-base-style head count;
+//! 4. fused and unfused paths both still match the plaintext reference.
+
+use secformer::core::rng::Xoshiro;
+use secformer::engine::{InferenceResult, OfflineMode, SecureModel};
+use secformer::net::stats::{NetModel, OpCategory};
+use secformer::nn::config::{Framework, ModelConfig};
+use secformer::nn::model::{ref_forward, ModelInput};
+use secformer::nn::weights::random_weights;
+
+fn hidden_input(cfg: &ModelConfig, seed: u64) -> ModelInput {
+    let mut rng = Xoshiro::seed_from(seed);
+    ModelInput::Hidden((0..cfg.seq * cfg.hidden).map(|_| rng.normal() * 0.5).collect())
+}
+
+fn run(cfg: &ModelConfig, seed: u64) -> InferenceResult {
+    let w = random_weights(cfg, seed);
+    let input = hidden_input(cfg, seed + 1);
+    SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded).infer(&input)
+}
+
+#[test]
+fn rounds_per_layer_independent_of_heads() {
+    // Same model shape, different head splits: with fused attention the
+    // per-head protocol work shares rounds, so the total online round
+    // count must be identical at heads = 2 and heads = 4.
+    for fw in [Framework::SecFormer, Framework::Crypten] {
+        let mut c2 = ModelConfig::tiny(8, fw);
+        c2.heads = 2;
+        let c4 = ModelConfig::tiny(8, fw); // tiny default: 4 heads
+        assert_eq!(c4.heads, 4);
+        let r2 = run(&c2, 0xF00);
+        let r4 = run(&c4, 0xF00);
+        assert_eq!(
+            r2.stats.total_rounds(),
+            r4.stats.total_rounds(),
+            "{fw:?}: rounds must not depend on head count"
+        );
+        assert_eq!(
+            r2.stats.rounds_per_layer(c2.layers),
+            r4.stats.rounds_per_layer(c4.layers),
+        );
+    }
+}
+
+#[test]
+fn fusion_batches_rounds_without_inflating_volume() {
+    let fused_cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    let mut unfused_cfg = fused_cfg.clone();
+    unfused_cfg.fused_attention = false;
+    let fused = run(&fused_cfg, 0xFA5);
+    let unfused = run(&unfused_cfg, 0xFA5);
+
+    // Round fusion is the whole point: strictly fewer rounds per layer.
+    assert!(
+        fused.stats.total_rounds() < unfused.stats.total_rounds(),
+        "fused {} vs unfused {}",
+        fused.stats.total_rounds(),
+        unfused.stats.total_rounds()
+    );
+
+    // Batching opens the same masked operands in fewer exchanges, so the
+    // per-category nonlinear volumes are untouched…
+    for cat in [OpCategory::Softmax, OpCategory::Gelu, OpCategory::LayerNorm] {
+        assert_eq!(
+            fused.stats.bytes[cat as usize],
+            unfused.stats.bytes[cat as usize],
+            "{cat:?} volume must be unchanged by fusion"
+        );
+    }
+    // …and the only total-volume change is the *saving* from opening the
+    // shared Q/K/V left-operand mask once instead of three times:
+    // 2·seq·hidden ring elements (8 bytes each) per encoder layer.
+    let qkv_mask_saving =
+        (fused_cfg.layers * 2 * fused_cfg.seq * fused_cfg.hidden * 8) as u64;
+    assert_eq!(
+        unfused.stats.total_bytes(),
+        fused.stats.total_bytes() + qkv_mask_saving,
+        "fusion must not add a single byte beyond the QKV mask sharing"
+    );
+}
+
+#[test]
+fn fused_network_bill_at_least_2x_cheaper_at_bert_base_head_count() {
+    // BERT-base's head count (12) at scaled-down widths: the unfused path
+    // pays per-head score/softmax/context rounds, the fused path a
+    // head-independent constant, so the simulated-LAN network bill (the
+    // rounds·rtt + bytes/bandwidth term that dominates the paper's
+    // wall-clock) must improve by ≥ 2×.
+    let mut fused_cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    fused_cfg.hidden = 48;
+    fused_cfg.intermediate = 96;
+    fused_cfg.heads = 12;
+    let mut unfused_cfg = fused_cfg.clone();
+    unfused_cfg.fused_attention = false;
+    let fused = run(&fused_cfg, 0xBA5E);
+    let unfused = run(&unfused_cfg, 0xBA5E);
+    let lan = NetModel::paper_lan();
+    let fused_net =
+        lan.simulated_seconds(fused.stats.total_rounds(), fused.stats.total_bytes() * 2);
+    let unfused_net = lan
+        .simulated_seconds(unfused.stats.total_rounds(), unfused.stats.total_bytes() * 2);
+    assert!(
+        unfused_net >= 2.0 * fused_net,
+        "LAN bill: fused {fused_net:.4}s vs unfused {unfused_net:.4}s"
+    );
+}
+
+#[test]
+fn fused_and_unfused_paths_match_reference() {
+    // Fusion is a re-scheduling of the same protocol operations; both
+    // paths must agree with the plaintext reference (and hence with each
+    // other) within the engine's standing tolerance.
+    let fused_cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    let mut unfused_cfg = fused_cfg.clone();
+    unfused_cfg.fused_attention = false;
+    let w = random_weights(&fused_cfg, 0xACC);
+    let input = hidden_input(&fused_cfg, 0xACD);
+    let expect = ref_forward(&fused_cfg, &w, &input);
+    for cfg in [&fused_cfg, &unfused_cfg] {
+        let got = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded).infer(&input);
+        for i in 0..cfg.num_labels {
+            assert!(
+                (got.logits[i] - expect[i]).abs() < 0.15,
+                "fused={} logit {i}: secure={} ref={}",
+                cfg.fused_attention,
+                got.logits[i],
+                expect[i]
+            );
+        }
+    }
+}
