@@ -1,13 +1,15 @@
-//! Secure serving: the coordinator under a batched request load, secure
-//! SMPC engine vs plaintext PJRT engine behind one API — the paper's
-//! "71 s PPI vs <1 s plaintext" contrast (Fig 1a) as a serving experiment.
+//! Secure serving: the coordinator under a batched request load — the
+//! paper's "71 s PPI vs <1 s plaintext" contrast (Fig 1a) as a serving
+//! experiment, now with the offline/online split made real: a demand
+//! planner + pregenerated tuple pool feed concurrent secure workers with
+//! zero dealer round-trips online.
 //!
 //!     cargo run --release --example secure_serving
 //!
-//! Requires artifacts (`make artifacts`); falls back to secure-only if the
-//! artifact directory is missing.
+//! Requires artifacts (`make artifacts`) for the plaintext PJRT rows;
+//! falls back to secure-only if the artifact directory is missing.
 
-use secformer::coordinator::{BatcherConfig, Coordinator, EngineKind};
+use secformer::coordinator::{BatcherConfig, Coordinator, EngineKind, ServingConfig};
 use secformer::nn::config::{Framework, ModelConfig};
 use secformer::nn::model::ModelInput;
 use secformer::nn::weights::random_weights;
@@ -26,13 +28,24 @@ fn main() {
         eprintln!("(artifacts missing — run `make artifacts`; serving secure engine only)");
     }
 
-    let coord = Coordinator::start(
+    // Two concurrent secure workers over a warm pool: the planner
+    // dry-runs the model once, then background producers keep session
+    // bundles ready so the online phase never touches the dealer.
+    let serving = ServingConfig::pooled(2, 8);
+    let coord = Coordinator::start_with(
         cfg.clone(),
         weights,
         plaintext,
         BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(2) },
+        serving,
     )
     .expect("coordinator");
+    if let Some(ps) = coord.pool_snapshot() {
+        println!(
+            "pool warmed: {} bundles ready ({} offline bytes pregenerated)",
+            ps.depth, ps.offline_bytes
+        );
+    }
 
     // A burst of client requests.
     let n_requests = 12;
@@ -58,10 +71,16 @@ fn main() {
         );
     }
 
-    let s = coord.metrics_secure.summary();
+    let s = coord.secure_summary();
     println!(
-        "\nsecure engine : {} reqs | mean {:.3}s p95 {:.3}s | {:.2} req/s",
-        s.count, s.mean_s, s.p95_s, s.throughput_rps
+        "\nsecure engine : {} reqs | mean {:.3}s p95 {:.3}s | {:.2} req/s | offline {} | pool depth {} hit-rate {:.2}",
+        s.count,
+        s.mean_s,
+        s.p95_s,
+        s.throughput_rps,
+        secformer::bench::fmt_bytes(s.offline_bytes as f64),
+        s.pool_depth,
+        s.pool_hit_rate
     );
     if has_plain {
         let p = coord.metrics_plain.summary();

@@ -532,6 +532,161 @@ pub fn rounds_table() {
     println!("(deltas documented in EXPERIMENTS.md: Π_Sin ships full words; Π_LT counts its B2A round)");
 }
 
+// =====================================================================
+// Serving throughput — sequential baseline vs warm-pool concurrent
+// =====================================================================
+
+/// One serving configuration's measured throughput.
+#[derive(Clone, Debug)]
+pub struct ServingMeasurement {
+    pub label: String,
+    pub workers: usize,
+    pub requests: usize,
+    pub wall_s: f64,
+    pub rps: f64,
+    pub mean_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub offline_bytes: u64,
+    pub pool_hit_rate: f64,
+}
+
+fn run_serving_load(
+    label: &str,
+    cfg: &ModelConfig,
+    weights: &crate::nn::weights::WeightMap,
+    serving: crate::coordinator::ServingConfig,
+    concurrency: usize,
+    requests: usize,
+) -> ServingMeasurement {
+    use crate::coordinator::{BatcherConfig, Coordinator, EngineKind};
+    let coord = Coordinator::start_with(
+        cfg.clone(),
+        weights.clone(),
+        None,
+        BatcherConfig::default(),
+        serving,
+    )
+    .expect("coordinator");
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..concurrency {
+            let coord = &coord;
+            let per_client = requests / concurrency
+                + usize::from(c < requests % concurrency);
+            let seq = cfg.seq;
+            let vocab = cfg.vocab;
+            scope.spawn(move || {
+                for r in 0..per_client {
+                    let toks: Vec<u32> = (0..seq as u32)
+                        .map(|j| (j + (c + r) as u32) % vocab as u32)
+                        .collect();
+                    let reply =
+                        coord.infer_blocking(ModelInput::Tokens(toks), EngineKind::Secure);
+                    assert_eq!(reply.logits.len(), 2);
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let s = coord.secure_summary();
+    let m = ServingMeasurement {
+        label: label.to_string(),
+        workers: serving.secure_workers,
+        requests,
+        wall_s,
+        rps: requests as f64 / wall_s.max(1e-9),
+        mean_latency_s: s.mean_s,
+        p95_latency_s: s.p95_s,
+        offline_bytes: s.offline_bytes,
+        pool_hit_rate: s.pool_hit_rate,
+    };
+    coord.shutdown();
+    m
+}
+
+/// Secure serving throughput: the sequential PR-1 baseline (one seeded
+/// worker) vs concurrent workers drawing from a warm tuple pool, both
+/// under `concurrency` blocking clients. Prints the comparison and writes
+/// `BENCH_serving.json` for the perf trajectory.
+pub fn serving_bench(
+    seq: usize,
+    concurrency: usize,
+    requests: usize,
+    workers: usize,
+) -> (ServingMeasurement, ServingMeasurement) {
+    use crate::coordinator::ServingConfig;
+    let cfg = ModelConfig::tiny(seq, Framework::SecFormer);
+    let weights = random_weights(&cfg, 0x5E21);
+    println!("\n=== Secure serving: sequential baseline vs warm pool ===");
+    println!("  seq {seq}, {concurrency} clients × {requests} requests total");
+
+    let baseline = run_serving_load(
+        "baseline_seeded_1worker",
+        &cfg,
+        &weights,
+        ServingConfig::default(),
+        concurrency,
+        requests,
+    );
+    // Warm pool: every session bundle pregenerated before the clock
+    // starts, and production bounded at the request count so the
+    // producers have exited before the measurement — the window is pure
+    // online phase.
+    let mut pooled_cfg = ServingConfig::pooled(workers, requests.max(1));
+    pooled_cfg.pool_producers = 2;
+    pooled_cfg.warm_bundles = requests.max(1);
+    pooled_cfg.pool_max_bundles = Some(requests.max(1) as u64);
+    let pooled = run_serving_load(
+        "pooled_warm",
+        &cfg,
+        &weights,
+        pooled_cfg,
+        concurrency,
+        requests,
+    );
+
+    let speedup = pooled.rps / baseline.rps.max(1e-9);
+    for m in [&baseline, &pooled] {
+        println!(
+            "  {:<26} workers {:<2} wall {:>9}  {:>6.2} req/s  mean {:>9}  p95 {:>9}  pool_hit {:.2}",
+            m.label,
+            m.workers,
+            fmt_s(m.wall_s),
+            m.rps,
+            fmt_s(m.mean_latency_s),
+            fmt_s(m.p95_latency_s),
+            m.pool_hit_rate,
+        );
+    }
+    println!("  warm-pool speedup: {speedup:.2}×");
+
+    let json_of = |m: &ServingMeasurement| {
+        format!(
+            "    {{\"label\": \"{}\", \"workers\": {}, \"requests\": {}, \
+             \"wall_seconds\": {:.6}, \"rps\": {:.4}, \"mean_latency_s\": {:.6}, \
+             \"p95_latency_s\": {:.6}, \"offline_bytes\": {}, \"pool_hit_rate\": {:.4}}}",
+            m.label,
+            m.workers,
+            m.requests,
+            m.wall_s,
+            m.rps,
+            m.mean_latency_s,
+            m.p95_latency_s,
+            m.offline_bytes,
+            m.pool_hit_rate,
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"secure_serving_throughput\",\n  \"seq\": {seq},\n  \
+         \"concurrency\": {concurrency},\n  \"speedup\": {speedup:.4},\n  \"runs\": [\n{},\n{}\n  ]\n}}\n",
+        json_of(&baseline),
+        json_of(&pooled),
+    );
+    std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
+    println!("  wrote BENCH_serving.json");
+    (baseline, pooled)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,22 +1,57 @@
-//! Serving metrics: latency percentiles + throughput.
+//! Serving metrics: latency percentiles + throughput + offline/pool
+//! gauges.
+//!
+//! Latency storage is a fixed-size recent-window ring (a long-running
+//! server must not grow a `Vec` forever): percentiles, mean and max are
+//! computed over the most recent [`WINDOW`] observations, while `count`
+//! and `throughput_rps` cover the server's whole lifetime.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+/// Recent-window size for percentile math. 4096 samples ≈ minutes of
+/// secure traffic; fixed memory forever.
+pub const WINDOW: usize = 4096;
+
+#[derive(Debug, Default)]
+struct LatencyWindow {
+    /// Ring buffer of the most recent latencies (seconds).
+    recent: Vec<f64>,
+    /// Next write slot once the ring is full.
+    next: usize,
+    /// All-time observation count.
+    total: u64,
+}
+
 #[derive(Debug)]
 pub struct Metrics {
-    latencies_s: Mutex<Vec<f64>>,
+    window: Mutex<LatencyWindow>,
+    /// Offline correlated-randomness bytes consumed by this engine's
+    /// requests (dealer corrections or pooled bundles).
+    offline_bytes: AtomicU64,
     started: Instant,
 }
 
 #[derive(Clone, Debug, Default)]
 pub struct MetricsSummary {
+    /// All-time request count.
     pub count: usize,
+    /// Mean/percentiles/max over the recent window (≤ [`WINDOW`] samples).
     pub mean_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
     pub max_s: f64,
+    /// All-time requests per second.
     pub throughput_rps: f64,
+    /// Offline correlated-randomness bytes drawn, all time (dealer
+    /// corrections, or pooled bundles — a pooled session that diverges
+    /// from its plan still spends its bundle, like any one-time pad).
+    pub offline_bytes: u64,
+    /// Ready bundles in the tuple pool (0 when serving unpooled).
+    pub pool_depth: usize,
+    /// Pool hit-rate in [0, 1] (1.0 when serving unpooled).
+    pub pool_hit_rate: f64,
 }
 
 impl Default for Metrics {
@@ -27,28 +62,55 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Self {
-        Metrics { latencies_s: Mutex::new(Vec::new()), started: Instant::now() }
+        Metrics {
+            window: Mutex::new(LatencyWindow::default()),
+            offline_bytes: AtomicU64::new(0),
+            started: Instant::now(),
+        }
     }
 
     pub fn observe(&self, latency_s: f64) {
-        self.latencies_s.lock().unwrap().push(latency_s);
+        let mut w = self.window.lock().unwrap();
+        if w.recent.len() < WINDOW {
+            w.recent.push(latency_s);
+        } else {
+            let slot = w.next;
+            w.recent[slot] = latency_s;
+            w.next = (slot + 1) % WINDOW;
+        }
+        w.total += 1;
+    }
+
+    /// Account offline bytes consumed by one finished request.
+    pub fn add_offline_bytes(&self, bytes: u64) {
+        self.offline_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
     pub fn summary(&self) -> MetricsSummary {
-        let mut v = self.latencies_s.lock().unwrap().clone();
+        let (mut v, total) = {
+            let w = self.window.lock().unwrap();
+            (w.recent.clone(), w.total)
+        };
         if v.is_empty() {
-            return MetricsSummary::default();
+            return MetricsSummary {
+                pool_hit_rate: 1.0,
+                offline_bytes: self.offline_bytes.load(Ordering::Relaxed),
+                ..MetricsSummary::default()
+            };
         }
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let count = v.len();
-        let pct = |p: f64| v[((count as f64 * p) as usize).min(count - 1)];
+        let n = v.len();
+        let pct = |p: f64| v[((n as f64 * p) as usize).min(n - 1)];
         MetricsSummary {
-            count,
-            mean_s: v.iter().sum::<f64>() / count as f64,
+            count: total as usize,
+            mean_s: v.iter().sum::<f64>() / n as f64,
             p50_s: pct(0.50),
             p95_s: pct(0.95),
             max_s: *v.last().unwrap(),
-            throughput_rps: count as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
+            throughput_rps: total as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
+            offline_bytes: self.offline_bytes.load(Ordering::Relaxed),
+            pool_depth: 0,
+            pool_hit_rate: 1.0,
         }
     }
 }
@@ -76,5 +138,33 @@ mod tests {
         let s = Metrics::new().summary();
         assert_eq!(s.count, 0);
         assert_eq!(s.mean_s, 0.0);
+        assert_eq!(s.pool_hit_rate, 1.0);
+    }
+
+    #[test]
+    fn window_is_bounded_and_percentiles_track_recent() {
+        let m = Metrics::new();
+        // 2× WINDOW observations: first half at 1.0 s, second half at
+        // 10.0 s. The window must hold only the recent (10 s) samples.
+        for _ in 0..WINDOW {
+            m.observe(1.0);
+        }
+        for _ in 0..WINDOW {
+            m.observe(10.0);
+        }
+        let s = m.summary();
+        assert_eq!(s.count, 2 * WINDOW, "count is all-time");
+        assert!((s.p50_s - 10.0).abs() < 1e-9, "percentiles are windowed");
+        assert!((s.mean_s - 10.0).abs() < 1e-9);
+        // Storage stays fixed.
+        assert!(m.window.lock().unwrap().recent.len() == WINDOW);
+    }
+
+    #[test]
+    fn offline_bytes_accumulate() {
+        let m = Metrics::new();
+        m.add_offline_bytes(100);
+        m.add_offline_bytes(50);
+        assert_eq!(m.summary().offline_bytes, 150);
     }
 }

@@ -1,11 +1,14 @@
-//! The serving coordinator: request queue, dynamic batcher, dual-engine
-//! dispatch (secure SMPC / plaintext PJRT) and metrics — the MaaS front of
-//! Fig 2, with the paper's "71 s PPI vs <1 s plaintext" contrast observable
-//! from one API.
+//! The serving coordinator: per-engine request queues, dynamic batcher,
+//! concurrent secure workers over a shared correlated-randomness pool,
+//! dual-engine dispatch (secure SMPC / plaintext PJRT) and metrics — the
+//! MaaS front of Fig 2, with the paper's "71 s PPI vs <1 s plaintext"
+//! contrast observable from one API.
 
 pub mod batcher;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::{BatcherConfig, Coordinator, EngineKind, InferenceReply, InferenceRequest};
+pub use batcher::{
+    BatcherConfig, Coordinator, EngineKind, InferenceReply, InferenceRequest, ServingConfig,
+};
 pub use metrics::{Metrics, MetricsSummary};

@@ -67,11 +67,21 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
         "quit" => None,
         "" => Some(String::new()),
         "stats" => {
-            let s = coord.metrics_secure.summary();
+            let s = coord.secure_summary();
             let p = coord.metrics_plain.summary();
             Some(format!(
-                "secure: n={} mean={:.3}s p95={:.3}s rps={:.2} | plain: n={} mean={:.4}s p95={:.4}s",
-                s.count, s.mean_s, s.p95_s, s.throughput_rps, p.count, p.mean_s, p.p95_s
+                "secure: n={} mean={:.3}s p95={:.3}s rps={:.2} offline_bytes={} \
+                 pool_depth={} pool_hit={:.2} | plain: n={} mean={:.4}s p95={:.4}s",
+                s.count,
+                s.mean_s,
+                s.p95_s,
+                s.throughput_rps,
+                s.offline_bytes,
+                s.pool_depth,
+                s.pool_hit_rate,
+                p.count,
+                p.mean_s,
+                p.p95_s
             ))
         }
         "secure" | "plain" => {
@@ -147,6 +157,32 @@ mod tests {
         assert!(handle_line("quit", &c, cfg.seq, cfg.vocab).is_none());
         let stats = handle_line("stats", &c, cfg.seq, cfg.vocab).unwrap();
         assert!(stats.contains("secure:"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn stats_line_surfaces_pool_gauges() {
+        use crate::coordinator::batcher::ServingConfig;
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let w = random_weights(&cfg, 19);
+        let c = Coordinator::start_with(
+            cfg.clone(),
+            w,
+            None,
+            BatcherConfig::default(),
+            ServingConfig::pooled(1, 2),
+        )
+        .unwrap();
+        let line = format!(
+            "secure {}",
+            (0..cfg.seq).map(|i| i.to_string()).collect::<Vec<_>>().join(" ")
+        );
+        let reply = handle_line(&line, &c, cfg.seq, cfg.vocab).unwrap();
+        assert!(reply.starts_with("ok "), "{reply}");
+        let stats = handle_line("stats", &c, cfg.seq, cfg.vocab).unwrap();
+        assert!(stats.contains("offline_bytes="), "{stats}");
+        assert!(stats.contains("pool_depth="), "{stats}");
+        assert!(stats.contains("pool_hit="), "{stats}");
         c.shutdown();
     }
 

@@ -27,6 +27,14 @@ pub trait RandStream: Send {
     }
 }
 
+/// Canonical label→seed derivation (SHA-256, first 8 LE bytes): every
+/// place that seeds a statistical RNG from a session/label string goes
+/// through here so the mapping exists exactly once.
+pub fn seed_from_label(label: &str) -> u64 {
+    let d = Sha256::digest(label.as_bytes());
+    u64::from_le_bytes(d[..8].try_into().unwrap())
+}
+
 /// xoshiro256++ — public-domain PRNG (Blackman & Vigna).
 #[derive(Clone, Debug)]
 pub struct Xoshiro {

@@ -14,10 +14,13 @@ use crate::net::transport::channel_pair;
 use crate::nn::config::ModelConfig;
 use crate::nn::model::{bert_forward, InputShare, ModelInput};
 use crate::nn::weights::{share_weights, ShareMap, WeightMap};
+use crate::offline::pool::TuplePool;
+use crate::offline::provider::PooledProvider;
 use crate::proto::ctx::PartyCtx;
 use crate::sharing::dealer::{DealerServer, Party0Provider, Party1Provider};
 use crate::sharing::provider::FastSeededProvider;
 use crate::sharing::share;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// How correlated randomness is provisioned.
@@ -27,6 +30,10 @@ pub enum OfflineMode {
     Dealer,
     /// Both parties derive locally from shared seeds (benchmark mode).
     Seeded,
+    /// Both parties pop a pregenerated session bundle from a
+    /// [`TuplePool`]: zero dealer round-trips during the online phase
+    /// (construct via [`SecureModel::new_pooled`]).
+    Pooled,
 }
 
 /// Result of one secure inference.
@@ -71,17 +78,62 @@ impl InferenceResult {
 /// construction (step ① of Fig 2), then any number of inferences.
 pub struct SecureModel {
     pub cfg: ModelConfig,
-    shares0: ShareMap,
-    shares1: ShareMap,
+    /// Weight shares behind `Arc` so concurrent serving workers can hold
+    /// one copy instead of re-sharing per worker
+    /// ([`SecureModel::from_shared`]).
+    shares0: Arc<ShareMap>,
+    shares1: Arc<ShareMap>,
     pub offline: OfflineMode,
     session_counter: u64,
     session_label: String,
+    /// Pregenerated-bundle source ([`OfflineMode::Pooled`] only).
+    pool: Option<Arc<TuplePool>>,
 }
 
 impl SecureModel {
     pub fn new(cfg: ModelConfig, weights: &WeightMap, offline: OfflineMode) -> Self {
+        assert!(
+            offline != OfflineMode::Pooled,
+            "pooled mode needs a TuplePool — use SecureModel::new_pooled"
+        );
+        Self::build(cfg, weights, offline, None)
+    }
+
+    /// A model whose per-party providers pop pregenerated bundles from
+    /// `pool` — zero S1↔T round-trips online. The pool keeps producing in
+    /// the background; stopping it makes subsequent inferences fall back
+    /// to seeded generation (never wrong results, only slower).
+    pub fn new_pooled(cfg: ModelConfig, weights: &WeightMap, pool: Arc<TuplePool>) -> Self {
+        Self::build(cfg, weights, OfflineMode::Pooled, Some(pool))
+    }
+
+    fn build(
+        cfg: ModelConfig,
+        weights: &WeightMap,
+        offline: OfflineMode,
+        pool: Option<Arc<TuplePool>>,
+    ) -> Self {
         let mut rng = Xoshiro::seed_from(0x5EC0);
         let (shares0, shares1) = share_weights(weights, &mut rng);
+        Self::from_shared(cfg, Arc::new(shares0), Arc::new(shares1), offline, pool)
+    }
+
+    /// Build from pre-shared weight maps. Serving workers use this to
+    /// hold ONE copy of the (large) share maps across all models instead
+    /// of re-running `share_weights` per worker. `pool` must be `Some`
+    /// exactly for [`OfflineMode::Pooled`].
+    pub fn from_shared(
+        cfg: ModelConfig,
+        shares0: Arc<ShareMap>,
+        shares1: Arc<ShareMap>,
+        offline: OfflineMode,
+        pool: Option<Arc<TuplePool>>,
+    ) -> Self {
+        assert_eq!(
+            offline == OfflineMode::Pooled,
+            pool.is_some(),
+            "a TuplePool is required iff offline mode is Pooled"
+        );
         SecureModel {
             cfg,
             shares0,
@@ -89,7 +141,21 @@ impl SecureModel {
             offline,
             session_counter: 0,
             session_label: format!("secformer-{:x}", std::process::id()),
+            pool,
         }
+    }
+
+    /// Override the session label. Dealer sessions and pool bundles derive
+    /// their PRF streams from `{label}-{counter}`, so aligning a pooled
+    /// model's label with a pool's session prefix (and a dealer model's
+    /// label) makes the two modes bit-identical — the parity the
+    /// integration tests assert.
+    pub fn set_session_label(&mut self, label: &str) {
+        self.session_label = label.to_string();
+    }
+
+    pub fn session_label(&self) -> &str {
+        &self.session_label
     }
 
     /// Client side of step ②: validate, encode and secret-share the input
@@ -109,7 +175,13 @@ impl SecureModel {
         // XOR, not AND: `0xC11E & counter` collapsed most counters onto a
         // handful of seeds (1 → 0, 2 and 3 → 2, …), reusing input-share
         // masks across inferences — see `session_input_masks_are_fresh`.
-        let mut rng = Xoshiro::seed_from(0xC11E ^ self.session_counter);
+        // The label seed keeps masks distinct across models with different
+        // labels (concurrent serving workers) at equal counters.
+        let mut rng = Xoshiro::seed_from(
+            0xC11E
+                ^ self.session_counter
+                ^ crate::core::rng::seed_from_label(&self.session_label),
+        );
         match input {
             ModelInput::Hidden(h) => {
                 let (a, b) = share(&encode_vec(h), &mut rng);
@@ -133,6 +205,23 @@ impl SecureModel {
         let session = format!("{}-{}", self.session_label, self.session_counter);
         let cfg = self.cfg.clone();
 
+        // Pooled mode: draw the session's pregenerated bundle before the
+        // online clock starts. A cold pool blocks here until a producer
+        // catches up; `None` (pool stopped) degrades to synchronized
+        // seeded generation inside the party threads — never wrong
+        // results, only no prefetch win.
+        let (bundle0, bundle1, bundle_session, bundle_words) = match self.offline {
+            OfflineMode::Pooled => {
+                let pool = self.pool.as_ref().expect("pooled model without pool");
+                match pool.pop_bundle() {
+                    Some(b) => (Some(b.p0), Some(b.p1), b.session, b.words_per_party),
+                    None => (None, None, String::new(), 0),
+                }
+            }
+            _ => (None, None, String::new(), 0),
+        };
+        let pool_handle = self.pool.clone();
+
         let (peer0, peer1) = channel_pair();
         let t0 = Instant::now();
 
@@ -148,21 +237,28 @@ impl SecureModel {
                     });
                     (Some(s1_end), Some(h))
                 }
-                OfflineMode::Seeded => (None, None),
+                OfflineMode::Seeded | OfflineMode::Pooled => (None, None),
             };
 
-            let w0 = &self.shares0;
-            let w1 = &self.shares1;
+            let w0: &ShareMap = &self.shares0;
+            let w1: &ShareMap = &self.shares1;
             let cfg0 = cfg.clone();
             let cfg1 = cfg.clone();
             let sess0 = session.clone();
             let sess1 = session.clone();
             let offline = self.offline;
+            // Both parties must agree on the fallback stream label.
+            let fb0 = format!("{bundle_session}/fallback");
+            let fb1 = fb0.clone();
 
             let h0 = scope.spawn(move || {
                 let prov: Box<dyn crate::sharing::provider::Provider> = match offline {
                     OfflineMode::Dealer => Box::new(Party0Provider::new(&sess0)),
                     OfflineMode::Seeded => Box::new(FastSeededProvider::new_fast(&sess0, 0)),
+                    OfflineMode::Pooled => match bundle0 {
+                        Some(tuples) => Box::new(PooledProvider::new(tuples, 0, &fb0)),
+                        None => Box::new(FastSeededProvider::new_fast(&sess0, 0)),
+                    },
                 };
                 let mut ctx = PartyCtx::new(0, Box::new(peer0), prov, 0xAA);
                 let stats = ctx.stats.clone();
@@ -178,6 +274,25 @@ impl SecureModel {
                         Some(stats_handle.clone()),
                     )),
                     OfflineMode::Seeded => Box::new(FastSeededProvider::new_fast(&sess1, 1)),
+                    OfflineMode::Pooled => match bundle1 {
+                        Some(tuples) => {
+                            // Account the pregenerated correlated
+                            // randomness this session *draws* (per
+                            // party), with zero dealer messages. A
+                            // session that diverges from the plan still
+                            // spends its bundle — the discarded tuples
+                            // are charged, like any one-time pad.
+                            stats_handle.record_offline_prefetched(bundle_words * 8);
+                            let mut p = PooledProvider::new(tuples, 1, &fb1);
+                            // Miss accounting on in-session divergence is
+                            // attached to one party only (no double count).
+                            if let Some(pl) = pool_handle {
+                                p = p.with_pool(pl);
+                            }
+                            Box::new(p)
+                        }
+                        None => Box::new(FastSeededProvider::new_fast(&sess1, 1)),
+                    },
                 };
                 let mut ctx = PartyCtx::new(1, Box::new(peer1), prov, 0xBB);
                 ctx.stats = stats_handle;
@@ -193,9 +308,10 @@ impl SecureModel {
                 h.join().expect("dealer panicked");
             }
             // Online stats are symmetric (party 0's view); the offline
-            // phase runs on the S1↔T link only.
+            // phase runs on the S1↔T link (or the prefetched bundle) only.
             let mut merged = s0;
             merged.offline_bytes = s1.offline_bytes;
+            merged.offline_msgs = s1.offline_msgs;
             (o0, o1, merged)
         });
 

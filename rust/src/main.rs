@@ -7,7 +7,7 @@
 //!   serve [opts]             TCP serving coordinator (line protocol)
 //!   bench <target> [opts]    regenerate a paper table/figure
 //!                            targets: table3 table4 fig1 fig5 fig6 fig7
-//!                                     fig8 fig9 rounds all
+//!                                     fig8 fig9 rounds serving all
 //!
 //! Common options:
 //!   --framework <crypten|puma|mpcformer|secformer>   (default secformer)
@@ -23,7 +23,7 @@
 use anyhow::{bail, Context, Result};
 use secformer::bench::harness as bh;
 use secformer::config::Config;
-use secformer::coordinator::{BatcherConfig, Coordinator};
+use secformer::coordinator::{BatcherConfig, Coordinator, ServingConfig};
 use secformer::engine::{OfflineMode, SecureModel};
 use secformer::nn::config::{Framework, ModelConfig};
 use secformer::nn::model::{ref_forward, ModelInput};
@@ -227,8 +227,32 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
         max_batch: args.usize_or("max-batch", 8),
         max_wait: std::time::Duration::from_millis(args.usize_or("max-wait-ms", 5) as u64),
     };
-    let coordinator =
-        std::sync::Arc::new(Coordinator::start(cfg.clone(), weights, plaintext, batcher)?);
+    // `--pool <depth>` switches the secure workers to the pregenerated
+    // correlated-randomness pool (OfflineMode::Pooled); `--workers` sets
+    // the number of concurrent secure workers either way.
+    let serving = match args.flag("pool") {
+        Some(depth) => {
+            let depth: usize = depth.parse().context("--pool takes a bundle depth")?;
+            let mut s = ServingConfig::pooled(args.usize_or("workers", 2), depth.max(1));
+            s.pool_producers = args.usize_or("pool-producers", 1).max(1);
+            // `--pool-prf`: dealer-grade AES-PRF bundle generation
+            // (bit-identical to OfflineMode::Dealer) instead of the fast
+            // statistical generator.
+            s.pool_fast = !args.has("pool-prf");
+            s
+        }
+        None => ServingConfig {
+            secure_workers: args.usize_or("workers", 1).max(1),
+            ..ServingConfig::default()
+        },
+    };
+    let coordinator = std::sync::Arc::new(Coordinator::start_with(
+        cfg.clone(),
+        weights,
+        plaintext,
+        batcher,
+        serving,
+    )?);
     let server = secformer::coordinator::server::TcpServer {
         coordinator,
         seq: cfg.seq,
@@ -269,6 +293,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
             bh::fig9_div(&[1024, 4096, 16384], iters);
         }
         "rounds" => bh::rounds_table(),
+        "serving" => {
+            bh::serving_bench(
+                args.usize_or("seq", 8),
+                args.usize_or("concurrency", 4),
+                args.usize_or("requests", 24),
+                args.usize_or("workers", 4),
+            );
+        }
         "ablations" => {
             secformer::bench::ablations::ablation_fourier_terms(args.usize_or("points", 1000));
             secformer::bench::ablations::ablation_goldschmidt_iters(args.usize_or("points", 1000));
@@ -315,6 +347,14 @@ USAGE:
                    [--secure|--plain] [--artifacts DIR] [--seeded]
   secformer serve  [--port 7878] [--weights W.swts] [--artifacts DIR]
                    [--max-batch 8] [--max-wait-ms 5]
-  secformer bench  <table3|table4|fig1|fig5|fig6|fig7|fig8|fig9|rounds|ablations|all>
+                   [--workers N] [--pool DEPTH] [--pool-producers P] [--pool-prf]
+  secformer bench  <table3|table4|fig1|fig5|fig6|fig7|fig8|fig9|rounds|serving|ablations|all>
                    [--seq N] [--paper] [--iters K] [--base-only]
+                   [--concurrency C] [--requests R] [--workers N]
+
+`serve --pool DEPTH` switches the secure workers to OfflineMode::Pooled: a
+demand planner dry-runs the model at startup, background producers keep
+DEPTH pregenerated session bundles ready, and every inference runs with
+zero dealer round-trips online. `bench serving` measures the sequential
+baseline vs the warm pool and writes BENCH_serving.json.
 ";

@@ -105,6 +105,15 @@ impl CommStats {
         self.offline_msgs.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record *pregenerated* offline bytes (a pooled session bundle)
+    /// without counting a dealer message — `offline_msgs` stays the count
+    /// of synchronous S1↔T round-trips, which a pooled online phase must
+    /// keep at zero.
+    #[inline]
+    pub fn record_offline_prefetched(&self, bytes: u64) {
+        self.offline_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     pub fn rounds(&self, cat: OpCategory) -> u64 {
         self.cats[cat as usize].rounds.load(Ordering::Relaxed)
     }
@@ -129,6 +138,11 @@ impl CommStats {
         self.offline_bytes.load(Ordering::Relaxed)
     }
 
+    /// Synchronous dealer (S1↔T) request/response round-trips.
+    pub fn offline_msgs(&self) -> u64 {
+        self.offline_msgs.load(Ordering::Relaxed)
+    }
+
     pub fn reset(&self) {
         for c in &self.cats {
             c.rounds.store(0, Ordering::Relaxed);
@@ -148,6 +162,7 @@ impl CommStats {
             s.nanos[i] = self.nanos(*c);
         }
         s.offline_bytes = self.offline_bytes();
+        s.offline_msgs = self.offline_msgs();
         s
     }
 }
@@ -159,6 +174,9 @@ pub struct StatsSnapshot {
     pub bytes: [u64; 4],
     pub nanos: [u64; 4],
     pub offline_bytes: u64,
+    /// Synchronous dealer round-trips (zero in seeded AND pooled modes —
+    /// the pooled-mode invariant tests assert on this).
+    pub offline_msgs: u64,
 }
 
 impl StatsSnapshot {
@@ -170,6 +188,7 @@ impl StatsSnapshot {
             d.nanos[i] = self.nanos[i] - earlier.nanos[i];
         }
         d.offline_bytes = self.offline_bytes - earlier.offline_bytes;
+        d.offline_msgs = self.offline_msgs - earlier.offline_msgs;
         d
     }
 
@@ -244,6 +263,21 @@ mod tests {
         s.record_offline(1000);
         assert_eq!(s.total_bytes(), 0);
         assert_eq!(s.offline_bytes(), 1000);
+    }
+
+    #[test]
+    fn prefetched_offline_has_no_msgs() {
+        // Pooled sessions account bytes without dealer round-trips; the
+        // msg counter is the "zero online dealer interaction" invariant.
+        let s = CommStats::new_handle();
+        s.record_offline_prefetched(500);
+        assert_eq!(s.offline_bytes(), 500);
+        assert_eq!(s.offline_msgs(), 0);
+        s.record_offline(100);
+        assert_eq!(s.offline_msgs(), 1);
+        let snap = s.snapshot();
+        assert_eq!(snap.offline_bytes, 600);
+        assert_eq!(snap.offline_msgs, 1);
     }
 
     #[test]

@@ -1,0 +1,28 @@
+//! The offline precomputation subsystem: plan → pregenerate → pool →
+//! consume.
+//!
+//! SecFormer (like PUMA and MPCFormer) reports *online*-phase costs,
+//! assuming correlated randomness exists before the query arrives. This
+//! module makes that assumption real:
+//!
+//! * [`planner`] — dry-runs the model once through a recording
+//!   [`crate::sharing::provider::Provider`] and emits the exact
+//!   per-(op, shape) tuple demand of one inference ([`TupleManifest`]).
+//! * [`pool`] — background producers run the dealer pipeline ahead of
+//!   demand, materializing per-session [`SessionBundle`]s in a bounded
+//!   [`TuplePool`].
+//! * [`provider`] — [`PooledProvider`] serves a party's protocol requests
+//!   straight from a popped bundle: zero dealer round-trips online, with
+//!   a synchronized seeded fallback if demand ever diverges from plan.
+//!
+//! The engine consumes this via `OfflineMode::Pooled`
+//! (`engine/mod.rs`), and the serving coordinator warms a pool at
+//! startup so concurrent secure workers each draw a ready bundle.
+
+pub mod planner;
+pub mod pool;
+pub mod provider;
+
+pub use planner::{plan_demand, PlanInput, RecordingProvider, TupleManifest, TupleReq};
+pub use pool::{generate_bundle, PoolConfig, PoolSnapshot, SessionBundle, Tuple, TuplePool};
+pub use provider::{PooledProvider, PoolTelemetry};

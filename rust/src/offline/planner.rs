@@ -1,0 +1,299 @@
+//! Demand planner: dry-run one secure inference through a recording
+//! [`Provider`] and emit the *exact* per-(op, shape) tuple manifest the
+//! online phase will consume, in consumption order.
+//!
+//! Because every protocol in this codebase is data-oblivious (SMPC
+//! requires it), the demand sequence is a pure function of the model
+//! configuration and the input *kind* (pre-embedded hidden states vs
+//! token ids) — never of the input values. One dry-run therefore plans
+//! every future inference of the same shape, and a manifest generated
+//! once at startup can back an arbitrarily deep bundle pool.
+
+use crate::core::fixed::encode_vec;
+use crate::core::rng::Xoshiro;
+use crate::net::transport::channel_pair;
+use crate::nn::config::ModelConfig;
+use crate::nn::model::{bert_forward, InputShare};
+use crate::nn::weights::{random_weights, share_weights};
+use crate::proto::ctx::PartyCtx;
+use crate::sharing::provider::{
+    BitPair, FastSeededProvider, MatmulTriple, MulTriple, Provider, SinTuple, SquarePair,
+};
+use crate::sharing::share;
+use std::sync::{Arc, Mutex};
+
+/// One correlated-randomness request, as issued by the protocol layer.
+///
+/// Batched matmul triples are recorded as a single [`TupleReq::MatmulBatch`]
+/// because `Π_MatMul` always goes through `Provider::matmul_triples` (a
+/// single-element batch for the unbatched call) — the request stream seen
+/// by the dealer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TupleReq {
+    /// Beaver multiplication triples, elementwise length `n`.
+    Mul(usize),
+    /// Square pairs, elementwise length `n`.
+    Square(usize),
+    /// A bundle of matmul triples with the given `(m, k, n)` shapes.
+    MatmulBatch(Vec<(usize, usize, usize)>),
+    /// Bitwise AND triples over `words` packed u64 words.
+    And(usize),
+    /// Arithmetic/boolean shared random bits.
+    Bit(usize),
+    /// Sine tuples (Zheng et al. Algorithm 4).
+    Sin(usize),
+}
+
+impl TupleReq {
+    /// Short operator label (manifest summaries / diagnostics).
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            TupleReq::Mul(_) => "mul",
+            TupleReq::Square(_) => "square",
+            TupleReq::MatmulBatch(_) => "matmul_batch",
+            TupleReq::And(_) => "and",
+            TupleReq::Bit(_) => "bit",
+            TupleReq::Sin(_) => "sin",
+        }
+    }
+
+    /// Ring elements of correlated randomness *one party* stores for this
+    /// request (both parties' bundles are the same size).
+    pub fn words(&self) -> u64 {
+        match self {
+            TupleReq::Mul(n) => 3 * *n as u64,
+            TupleReq::Square(n) => 2 * *n as u64,
+            TupleReq::MatmulBatch(shapes) => shapes
+                .iter()
+                .map(|&(m, k, n)| (m * k + k * n + m * n) as u64)
+                .sum(),
+            TupleReq::And(w) => 3 * *w as u64,
+            TupleReq::Bit(n) => 2 * *n as u64,
+            TupleReq::Sin(n) => 3 * *n as u64,
+        }
+    }
+}
+
+/// Which input path to plan for. The demand differs: token inputs prepend
+/// the secure one-hot embedding matmul and the embedding LayerNorm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanInput {
+    Hidden,
+    Tokens,
+}
+
+/// The exact offline demand of ONE secure inference: every tuple request
+/// the protocol layer issues, in order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TupleManifest {
+    pub input: PlanInput,
+    pub fused: bool,
+    pub reqs: Vec<TupleReq>,
+}
+
+impl TupleManifest {
+    /// Ring elements one party stores for a full session bundle.
+    pub fn words_per_party(&self) -> u64 {
+        self.reqs.iter().map(|r| r.words()).sum()
+    }
+
+    /// Aggregated `(op, count, words)` rows for logs and docs.
+    pub fn summary(&self) -> Vec<(String, usize, u64)> {
+        let mut rows: Vec<(String, usize, u64)> = Vec::new();
+        for r in &self.reqs {
+            let name = r.op_name().to_string();
+            match rows.iter_mut().find(|(n, _, _)| *n == name) {
+                Some(row) => {
+                    row.1 += 1;
+                    row.2 += r.words();
+                }
+                None => rows.push((name, 1, r.words())),
+            }
+        }
+        rows
+    }
+}
+
+/// A [`Provider`] wrapper that logs every request it forwards. The log is
+/// shared (`Arc<Mutex<…>>`) so the planner can recover it after the party
+/// thread that consumed the provider has exited.
+pub struct RecordingProvider {
+    inner: Box<dyn Provider>,
+    log: Arc<Mutex<Vec<TupleReq>>>,
+}
+
+impl RecordingProvider {
+    pub fn new(inner: Box<dyn Provider>, log: Arc<Mutex<Vec<TupleReq>>>) -> Self {
+        RecordingProvider { inner, log }
+    }
+
+    fn record(&self, req: TupleReq) {
+        self.log.lock().unwrap().push(req);
+    }
+}
+
+impl Provider for RecordingProvider {
+    fn mul_triple(&mut self, n: usize) -> MulTriple {
+        self.record(TupleReq::Mul(n));
+        self.inner.mul_triple(n)
+    }
+    fn square_pair(&mut self, n: usize) -> SquarePair {
+        self.record(TupleReq::Square(n));
+        self.inner.square_pair(n)
+    }
+    fn matmul_triple(&mut self, m: usize, k: usize, n: usize) -> MatmulTriple {
+        // Canonical form: a one-element batch (stream-identical for the
+        // generator, and the protocol layer only ever calls the batch).
+        self.record(TupleReq::MatmulBatch(vec![(m, k, n)]));
+        self.inner.matmul_triple(m, k, n)
+    }
+    fn matmul_triples(&mut self, shapes: &[(usize, usize, usize)]) -> Vec<MatmulTriple> {
+        self.record(TupleReq::MatmulBatch(shapes.to_vec()));
+        self.inner.matmul_triples(shapes)
+    }
+    fn and_triple(&mut self, words: usize) -> MulTriple {
+        self.record(TupleReq::And(words));
+        self.inner.and_triple(words)
+    }
+    fn bit_pair(&mut self, n: usize) -> BitPair {
+        self.record(TupleReq::Bit(n));
+        self.inner.bit_pair(n)
+    }
+    fn sin_tuple(&mut self, n: usize) -> SinTuple {
+        self.record(TupleReq::Sin(n));
+        self.inner.sin_tuple(n)
+    }
+}
+
+/// Build the input shares the dry-run feeds the model. Values are
+/// irrelevant (protocols are data-oblivious); shapes are everything.
+fn plan_input_shares(
+    cfg: &ModelConfig,
+    input: PlanInput,
+    rng: &mut Xoshiro,
+) -> (InputShare, InputShare) {
+    match input {
+        PlanInput::Hidden => {
+            let h = vec![0.0f64; cfg.seq * cfg.hidden];
+            let (a, b) = share(&encode_vec(&h), rng);
+            (InputShare::Hidden(a), InputShare::Hidden(b))
+        }
+        PlanInput::Tokens => {
+            let mut onehot = vec![0.0f64; cfg.seq * cfg.vocab];
+            for i in 0..cfg.seq {
+                onehot[i * cfg.vocab] = 1.0;
+            }
+            let (a, b) = share(&encode_vec(&onehot), rng);
+            (InputShare::OneHot(a), InputShare::OneHot(b))
+        }
+    }
+}
+
+/// Dry-run one secure inference of `cfg` (both parties, in-process) with
+/// recording providers and return the exact tuple demand.
+///
+/// Cost: one full inference at `cfg`'s shape — paid once at startup, then
+/// amortized over every pooled session the manifest backs.
+pub fn plan_demand(cfg: &ModelConfig, input: PlanInput) -> TupleManifest {
+    let weights = random_weights(cfg, 0x0FF1);
+    let mut rng = Xoshiro::seed_from(0x0FF1 ^ 0x9E37);
+    let (w0, w1) = share_weights(&weights, &mut rng);
+    let (in0, in1) = plan_input_shares(cfg, input, &mut rng);
+
+    let (peer0, peer1) = channel_pair();
+    let log0 = Arc::new(Mutex::new(Vec::new()));
+    let log1 = Arc::new(Mutex::new(Vec::new()));
+    let cfg0 = cfg.clone();
+    let cfg1 = cfg.clone();
+    let l0 = log0.clone();
+    let l1 = log1.clone();
+    std::thread::scope(|scope| {
+        let w0 = &w0;
+        let w1 = &w1;
+        let h0 = scope.spawn(move || {
+            let seeded = Box::new(FastSeededProvider::new_fast("offline-plan", 0));
+            let prov = Box::new(RecordingProvider::new(seeded, l0));
+            let mut ctx = PartyCtx::new(0, Box::new(peer0), prov, 0xAA);
+            let _ = bert_forward(&mut ctx, &cfg0, w0, &in0);
+        });
+        let h1 = scope.spawn(move || {
+            let seeded = Box::new(FastSeededProvider::new_fast("offline-plan", 1));
+            let prov = Box::new(RecordingProvider::new(seeded, l1));
+            let mut ctx = PartyCtx::new(1, Box::new(peer1), prov, 0xBB);
+            let _ = bert_forward(&mut ctx, &cfg1, w1, &in1);
+        });
+        h0.join().expect("planner party 0 panicked");
+        h1.join().expect("planner party 1 panicked");
+    });
+
+    let reqs = std::mem::take(&mut *log0.lock().unwrap());
+    let reqs1 = std::mem::take(&mut *log1.lock().unwrap());
+    // SPMD invariant: both parties must have issued the identical request
+    // stream — a divergence here would corrupt every pooled session.
+    assert_eq!(reqs, reqs1, "planner: party demand streams diverged");
+    TupleManifest { input, fused: cfg.fused_attention, reqs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config::Framework;
+
+    #[test]
+    fn demand_is_deterministic_and_nonempty() {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let a = plan_demand(&cfg, PlanInput::Hidden);
+        let b = plan_demand(&cfg, PlanInput::Hidden);
+        assert_eq!(a, b);
+        assert!(!a.reqs.is_empty());
+        assert!(a.words_per_party() > 0);
+    }
+
+    #[test]
+    fn token_plan_prepends_embedding_demand() {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let hidden = plan_demand(&cfg, PlanInput::Hidden);
+        let tokens = plan_demand(&cfg, PlanInput::Tokens);
+        // The encoder stack demand is identical; the token path adds the
+        // one-hot embedding matmul + embedding LayerNorm in front.
+        assert!(tokens.reqs.len() > hidden.reqs.len());
+        let tail = &tokens.reqs[tokens.reqs.len() - hidden.reqs.len()..];
+        assert_eq!(tail, &hidden.reqs[..]);
+        assert_eq!(
+            tokens.reqs[0],
+            TupleReq::MatmulBatch(vec![(cfg.seq, cfg.vocab, cfg.hidden)]),
+            "token plan must start with the embedding matmul"
+        );
+    }
+
+    #[test]
+    fn fused_and_unfused_plans_differ() {
+        let fused = ModelConfig::tiny(8, Framework::SecFormer);
+        let mut unfused = fused.clone();
+        unfused.fused_attention = false;
+        let pf = plan_demand(&fused, PlanInput::Hidden);
+        let pu = plan_demand(&unfused, PlanInput::Hidden);
+        assert!(pf.fused && !pu.fused);
+        assert_ne!(pf.reqs, pu.reqs);
+        // Fused attention batches all heads' score matmuls into one
+        // request, so it issues strictly fewer matmul bundles.
+        let batches = |m: &TupleManifest| {
+            m.reqs
+                .iter()
+                .filter(|r| matches!(r, TupleReq::MatmulBatch(_)))
+                .count()
+        };
+        assert!(batches(&pf) < batches(&pu));
+    }
+
+    #[test]
+    fn summary_accounts_every_request() {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let m = plan_demand(&cfg, PlanInput::Hidden);
+        let rows = m.summary();
+        let total: usize = rows.iter().map(|(_, c, _)| *c).sum();
+        let words: u64 = rows.iter().map(|(_, _, w)| *w).sum();
+        assert_eq!(total, m.reqs.len());
+        assert_eq!(words, m.words_per_party());
+    }
+}

@@ -1,0 +1,295 @@
+//! [`PooledProvider`]: the online-phase [`Provider`] that consumes a
+//! pregenerated [`SessionBundle`] half — zero S1↔T round-trips online.
+//!
+//! Every pop is shape-checked against the request. If the session's demand
+//! ever diverges from the planned manifest (wrong op, wrong shape, or the
+//! bundle runs dry), the provider permanently switches to a local
+//! [`FastSeededProvider`] derived from the bundle's fallback label. Both
+//! parties execute the same SPMD program, so they hit the divergence at
+//! the same request and fall back to the *same* seeded stream — results
+//! stay correct, only the prefetch win is lost (and the event is counted
+//! as a pool miss).
+
+use crate::offline::pool::{Tuple, TuplePool};
+use crate::sharing::provider::{
+    BitPair, FastSeededProvider, MatmulTriple, MulTriple, Provider, SinTuple, SquarePair,
+};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared consumption counters — lets a caller observe, after the party
+/// thread has finished, whether a session drained its bundle exactly
+/// (`leftover == 0 && fallbacks == 0`), the planner-exactness invariant.
+#[derive(Debug, Default)]
+pub struct PoolTelemetry {
+    /// Requests served straight from the bundle.
+    pub pool_served: AtomicU64,
+    /// Requests served by the seeded fallback.
+    pub fallbacks: AtomicU64,
+    /// Tuples still unconsumed when the provider was dropped.
+    pub leftover: AtomicU64,
+    /// Set when the provider switched to the fallback.
+    pub fell_back: AtomicBool,
+}
+
+/// One party's pooled provider for one session.
+pub struct PooledProvider {
+    tuples: VecDeque<Tuple>,
+    party: u8,
+    fallback_label: String,
+    fallback: Option<FastSeededProvider>,
+    /// Pool to notify (miss accounting) on first fallback, if any.
+    pool: Option<Arc<TuplePool>>,
+    telemetry: Option<Arc<PoolTelemetry>>,
+}
+
+impl PooledProvider {
+    /// Build from one party's bundle half. `fallback_label` must be agreed
+    /// between the parties (both derive it from the bundle session), so a
+    /// synchronized fallback still yields valid correlations.
+    pub fn new(tuples: Vec<Tuple>, party: u8, fallback_label: &str) -> Self {
+        PooledProvider {
+            tuples: VecDeque::from(tuples),
+            party,
+            fallback_label: fallback_label.to_string(),
+            fallback: None,
+            pool: None,
+            telemetry: None,
+        }
+    }
+
+    /// Attach a pool handle for miss accounting on fallback.
+    pub fn with_pool(mut self, pool: Arc<TuplePool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Attach shared consumption counters.
+    pub fn with_telemetry(mut self, telemetry: Arc<PoolTelemetry>) -> Self {
+        self.telemetry = Some(telemetry);
+        self
+    }
+
+    /// Pop the next pregenerated tuple, unless already in fallback mode.
+    fn pop(&mut self) -> Option<Tuple> {
+        if self.fallback.is_some() {
+            None
+        } else {
+            self.tuples.pop_front()
+        }
+    }
+
+    fn served(&self) {
+        if let Some(t) = &self.telemetry {
+            t.pool_served.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Switch permanently to the seeded fallback (remaining bundle tuples
+    /// are discarded — the streams have diverged from the plan).
+    fn fall_back(&mut self) -> &mut FastSeededProvider {
+        if self.fallback.is_none() {
+            self.tuples.clear();
+            if let Some(p) = &self.pool {
+                p.note_fallback();
+            }
+            if let Some(t) = &self.telemetry {
+                t.fell_back.store(true, Ordering::Relaxed);
+            }
+            self.fallback =
+                Some(FastSeededProvider::new_fast(&self.fallback_label, self.party));
+        }
+        if let Some(t) = &self.telemetry {
+            t.fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+        self.fallback.as_mut().expect("fallback just installed")
+    }
+}
+
+impl Drop for PooledProvider {
+    fn drop(&mut self) {
+        if let Some(t) = &self.telemetry {
+            t.leftover.store(self.tuples.len() as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Provider for PooledProvider {
+    fn mul_triple(&mut self, n: usize) -> MulTriple {
+        match self.pop() {
+            Some(Tuple::Mul(t)) if t.a.len() == n => {
+                self.served();
+                t
+            }
+            _ => self.fall_back().mul_triple(n),
+        }
+    }
+
+    fn square_pair(&mut self, n: usize) -> SquarePair {
+        match self.pop() {
+            Some(Tuple::Square(t)) if t.a.len() == n => {
+                self.served();
+                t
+            }
+            _ => self.fall_back().square_pair(n),
+        }
+    }
+
+    fn matmul_triple(&mut self, m: usize, k: usize, n: usize) -> MatmulTriple {
+        // The protocol layer always batches (a single Π_MatMul is a
+        // one-element batch), so route through the batch path.
+        self.matmul_triples(&[(m, k, n)])
+            .pop()
+            .expect("one-shape batch yields one triple")
+    }
+
+    fn matmul_triples(&mut self, shapes: &[(usize, usize, usize)]) -> Vec<MatmulTriple> {
+        match self.pop() {
+            Some(Tuple::MatmulBatch(ts))
+                if ts.len() == shapes.len()
+                    && ts
+                        .iter()
+                        .zip(shapes)
+                        .all(|(t, &(m, k, n))| t.m == m && t.k == k && t.n == n) =>
+            {
+                self.served();
+                ts
+            }
+            _ => self.fall_back().matmul_triples(shapes),
+        }
+    }
+
+    fn and_triple(&mut self, words: usize) -> MulTriple {
+        match self.pop() {
+            Some(Tuple::And(t)) if t.a.len() == words => {
+                self.served();
+                t
+            }
+            _ => self.fall_back().and_triple(words),
+        }
+    }
+
+    fn bit_pair(&mut self, n: usize) -> BitPair {
+        match self.pop() {
+            Some(Tuple::Bit(t)) if t.arith.len() == n => {
+                self.served();
+                t
+            }
+            _ => self.fall_back().bit_pair(n),
+        }
+    }
+
+    fn sin_tuple(&mut self, n: usize) -> SinTuple {
+        match self.pop() {
+            Some(Tuple::Sin(t)) if t.t.len() == n => {
+                self.served();
+                t
+            }
+            _ => self.fall_back().sin_tuple(n),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::planner::{TupleManifest, TupleReq, PlanInput};
+    use crate::offline::pool::generate_bundle;
+    use crate::sharing::provider::CrGen;
+    use crate::sharing::reconstruct;
+
+    fn mini_manifest() -> TupleManifest {
+        TupleManifest {
+            input: PlanInput::Hidden,
+            fused: true,
+            reqs: vec![
+                TupleReq::Mul(8),
+                TupleReq::MatmulBatch(vec![(2, 3, 4), (1, 2, 2)]),
+                TupleReq::Square(5),
+            ],
+        }
+    }
+
+    #[test]
+    fn pooled_pair_reconstructs_valid_correlations() {
+        let manifest = mini_manifest();
+        let (b0, b1) = generate_bundle(&mut CrGen::from_session("pp"), &manifest);
+        let mut p0 = PooledProvider::new(b0, 0, "pp/fb");
+        let mut p1 = PooledProvider::new(b1, 1, "pp/fb");
+        let t0 = p0.mul_triple(8);
+        let t1 = p1.mul_triple(8);
+        let a = reconstruct(&t0.a, &t1.a);
+        let b = reconstruct(&t0.b, &t1.b);
+        let c = reconstruct(&t0.c, &t1.c);
+        for i in 0..8 {
+            assert_eq!(c[i], a[i].wrapping_mul(b[i]));
+        }
+        let m0 = p0.matmul_triples(&[(2, 3, 4), (1, 2, 2)]);
+        let m1 = p1.matmul_triples(&[(2, 3, 4), (1, 2, 2)]);
+        assert_eq!(m0.len(), 2);
+        assert_eq!(m1.len(), 2);
+        let s0 = p0.square_pair(5);
+        let s1 = p1.square_pair(5);
+        let a = reconstruct(&s0.a, &s1.a);
+        let c = reconstruct(&s0.c, &s1.c);
+        for i in 0..5 {
+            assert_eq!(c[i], a[i].wrapping_mul(a[i]));
+        }
+    }
+
+    #[test]
+    fn mismatch_falls_back_synchronized_and_counts() {
+        let manifest = mini_manifest();
+        let (b0, b1) = generate_bundle(&mut CrGen::from_session("fb"), &manifest);
+        let tel0 = Arc::new(PoolTelemetry::default());
+        let tel1 = Arc::new(PoolTelemetry::default());
+        let mut p0 = PooledProvider::new(b0, 0, "fb/fb").with_telemetry(tel0.clone());
+        let mut p1 = PooledProvider::new(b1, 1, "fb/fb").with_telemetry(tel1.clone());
+        // First request diverges from the plan (wrong length) on both
+        // parties: both must fall back to the same seeded stream.
+        let t0 = p0.mul_triple(9);
+        let t1 = p1.mul_triple(9);
+        let a = reconstruct(&t0.a, &t1.a);
+        let b = reconstruct(&t0.b, &t1.b);
+        let c = reconstruct(&t0.c, &t1.c);
+        for i in 0..9 {
+            assert_eq!(c[i], a[i].wrapping_mul(b[i]));
+        }
+        // Still correct after the switch, and fully accounted.
+        let u0 = p0.sin_tuple(4);
+        let u1 = p1.sin_tuple(4);
+        assert_eq!(u0.t.len(), 4);
+        assert_eq!(u1.t.len(), 4);
+        drop(p0);
+        drop(p1);
+        assert!(tel0.fell_back.load(Ordering::Relaxed));
+        assert_eq!(tel0.pool_served.load(Ordering::Relaxed), 0);
+        assert_eq!(tel0.fallbacks.load(Ordering::Relaxed), 2);
+        assert_eq!(tel0.leftover.load(Ordering::Relaxed), 0, "divergent bundle is discarded");
+        assert!(tel1.fell_back.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn exhaustion_falls_back_instead_of_panicking() {
+        let manifest = TupleManifest {
+            input: PlanInput::Hidden,
+            fused: true,
+            reqs: vec![TupleReq::Mul(4)],
+        };
+        let (b0, b1) = generate_bundle(&mut CrGen::from_session("ex"), &manifest);
+        let mut p0 = PooledProvider::new(b0, 0, "ex/fb");
+        let mut p1 = PooledProvider::new(b1, 1, "ex/fb");
+        let _ = p0.mul_triple(4);
+        let _ = p1.mul_triple(4);
+        // Bundle drained; further demand must be served by the fallback.
+        let t0 = p0.mul_triple(4);
+        let t1 = p1.mul_triple(4);
+        let a = reconstruct(&t0.a, &t1.a);
+        let b = reconstruct(&t0.b, &t1.b);
+        let c = reconstruct(&t0.c, &t1.c);
+        for i in 0..4 {
+            assert_eq!(c[i], a[i].wrapping_mul(b[i]));
+        }
+    }
+}

@@ -127,9 +127,7 @@ impl CrGenT<Prf> {
 impl CrGenT<Xoshiro> {
     pub fn from_session_fast(session: &str) -> Self {
         let seed = |suffix: &str| {
-            use sha2::{Digest, Sha256};
-            let d = Sha256::digest(format!("{session}/{suffix}").as_bytes());
-            u64::from_le_bytes(d[..8].try_into().unwrap())
+            crate::core::rng::seed_from_label(&format!("{session}/{suffix}"))
         };
         CrGenT {
             prf0: Xoshiro::seed_from(seed("pair:S0-T")),

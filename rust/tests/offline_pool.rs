@@ -1,0 +1,264 @@
+//! Integration tests for the offline precomputation subsystem:
+//!
+//! 1. the planner's manifest is *exact* — a real inference consumes a
+//!    pregenerated bundle completely, with every (op, shape) matching,
+//!    for both `fused_attention` paths and both input kinds;
+//! 2. `OfflineMode::Pooled` is bit-identical to `OfflineMode::Dealer`
+//!    with ZERO synchronous dealer round-trips online;
+//! 3. a shallow pool blocks-then-resumes under sustained demand, and a
+//!    stopped or mismatched pool falls back to seeded generation —
+//!    results are never wrong.
+
+use secformer::core::fixed::encode_vec;
+use secformer::core::rng::Xoshiro;
+use secformer::engine::{OfflineMode, SecureModel};
+use secformer::net::transport::channel_pair;
+use secformer::nn::config::{Framework, ModelConfig};
+use secformer::nn::model::{bert_forward, ref_forward, InputShare, ModelInput};
+use secformer::nn::weights::{random_weights, share_weights};
+use secformer::offline::planner::{plan_demand, PlanInput};
+use secformer::offline::pool::{generate_bundle, PoolConfig, TuplePool};
+use secformer::offline::provider::{PooledProvider, PoolTelemetry};
+use secformer::proto::ctx::PartyCtx;
+use secformer::sharing::provider::CrGen;
+use secformer::sharing::{reconstruct, share};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn hidden_input(cfg: &ModelConfig, seed: u64) -> ModelInput {
+    let mut rng = Xoshiro::seed_from(seed);
+    ModelInput::Hidden((0..cfg.seq * cfg.hidden).map(|_| rng.normal() * 0.5).collect())
+}
+
+fn token_input(cfg: &ModelConfig) -> ModelInput {
+    ModelInput::Tokens((0..cfg.seq as u32).map(|i| i % cfg.vocab as u32).collect())
+}
+
+/// Share a model input the way the engine does (values arbitrary).
+fn share_model_input(
+    cfg: &ModelConfig,
+    input: &ModelInput,
+    rng: &mut Xoshiro,
+) -> (InputShare, InputShare) {
+    match input {
+        ModelInput::Hidden(h) => {
+            let (a, b) = share(&encode_vec(h), rng);
+            (InputShare::Hidden(a), InputShare::Hidden(b))
+        }
+        ModelInput::Tokens(toks) => {
+            let mut onehot = vec![0.0f64; cfg.seq * cfg.vocab];
+            for (i, &t) in toks.iter().enumerate() {
+                onehot[i * cfg.vocab + t as usize] = 1.0;
+            }
+            let (a, b) = share(&encode_vec(&onehot), rng);
+            (InputShare::OneHot(a), InputShare::OneHot(b))
+        }
+    }
+}
+
+/// Run one inference where each party consumes a pregenerated bundle half
+/// through a telemetry-instrumented `PooledProvider`. Returns the decoded
+/// logits and both parties' telemetry.
+fn run_pooled_manual(
+    cfg: &ModelConfig,
+    input: &ModelInput,
+    session: &str,
+) -> (Vec<f64>, Arc<PoolTelemetry>, Arc<PoolTelemetry>) {
+    let kind = match input {
+        ModelInput::Hidden(_) => PlanInput::Hidden,
+        ModelInput::Tokens(_) => PlanInput::Tokens,
+    };
+    let manifest = plan_demand(cfg, kind);
+    let (b0, b1) = generate_bundle(&mut CrGen::from_session(session), &manifest);
+
+    let weights = random_weights(cfg, 0xBEEF);
+    let mut rng = Xoshiro::seed_from(0xBEEF ^ 7);
+    let (w0, w1) = share_weights(&weights, &mut rng);
+    let (in0, in1) = share_model_input(cfg, input, &mut rng);
+
+    let tel0 = Arc::new(PoolTelemetry::default());
+    let tel1 = Arc::new(PoolTelemetry::default());
+    let (peer0, peer1) = channel_pair();
+    let fb = format!("{session}/fallback");
+    let (out0, out1) = std::thread::scope(|scope| {
+        let cfg0 = cfg.clone();
+        let cfg1 = cfg.clone();
+        let (fb0, fb1) = (fb.clone(), fb.clone());
+        let (t0, t1) = (tel0.clone(), tel1.clone());
+        let w0 = &w0;
+        let w1 = &w1;
+        let h0 = scope.spawn(move || {
+            let prov = Box::new(PooledProvider::new(b0, 0, &fb0).with_telemetry(t0));
+            let mut ctx = PartyCtx::new(0, Box::new(peer0), prov, 0xAA);
+            bert_forward(&mut ctx, &cfg0, w0, &in0)
+        });
+        let h1 = scope.spawn(move || {
+            let prov = Box::new(PooledProvider::new(b1, 1, &fb1).with_telemetry(t1));
+            let mut ctx = PartyCtx::new(1, Box::new(peer1), prov, 0xBB);
+            bert_forward(&mut ctx, &cfg1, w1, &in1)
+        });
+        (h0.join().expect("party 0"), h1.join().expect("party 1"))
+    });
+    let logits = secformer::core::fixed::decode_vec(&reconstruct(&out0, &out1));
+
+    // The reference forward needs the same weights/input.
+    let expect = ref_forward(cfg, &weights, input);
+    assert_eq!(logits.len(), expect.len());
+    for i in 0..logits.len() {
+        assert!(
+            (logits[i] - expect[i]).abs() < 0.2,
+            "logit {i}: pooled={} ref={}",
+            logits[i],
+            expect[i]
+        );
+    }
+    (logits, tel0, tel1)
+}
+
+#[test]
+fn planned_manifest_is_consumed_exactly_fused_and_unfused() {
+    // Every (op, shape) pop is checked inside PooledProvider; a full
+    // drain with zero fallbacks therefore proves planned == consumed.
+    for fused in [true, false] {
+        let mut cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        cfg.fused_attention = fused;
+        let manifest = plan_demand(&cfg, PlanInput::Hidden);
+        let input = hidden_input(&cfg, 0x11);
+        let (_, tel0, tel1) = run_pooled_manual(&cfg, &input, "exact-h");
+        for (who, tel) in [("p0", &tel0), ("p1", &tel1)] {
+            assert!(
+                !tel.fell_back.load(Ordering::Relaxed),
+                "fused={fused} {who}: demand diverged from plan"
+            );
+            assert_eq!(
+                tel.pool_served.load(Ordering::Relaxed),
+                manifest.reqs.len() as u64,
+                "fused={fused} {who}: served-request count"
+            );
+            assert_eq!(
+                tel.leftover.load(Ordering::Relaxed),
+                0,
+                "fused={fused} {who}: bundle must drain completely"
+            );
+        }
+    }
+}
+
+#[test]
+fn planned_manifest_is_consumed_exactly_for_token_inputs() {
+    let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    let manifest = plan_demand(&cfg, PlanInput::Tokens);
+    let input = token_input(&cfg);
+    let (_, tel0, tel1) = run_pooled_manual(&cfg, &input, "exact-t");
+    for tel in [&tel0, &tel1] {
+        assert!(!tel.fell_back.load(Ordering::Relaxed));
+        assert_eq!(tel.pool_served.load(Ordering::Relaxed), manifest.reqs.len() as u64);
+        assert_eq!(tel.leftover.load(Ordering::Relaxed), 0);
+    }
+}
+
+#[test]
+fn pooled_is_bit_identical_to_dealer_with_zero_dealer_roundtrips() {
+    let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    let w = random_weights(&cfg, 7);
+    let input = hidden_input(&cfg, 8);
+
+    let mut dealer = SecureModel::new(cfg.clone(), &w, OfflineMode::Dealer);
+    dealer.set_session_label("parity");
+    // AES-PRF pool (fast=false) with the dealer model's label as prefix:
+    // bundle n replays exactly the dealer streams of session n.
+    let manifest = plan_demand(&cfg, PlanInput::Hidden);
+    let pool = TuplePool::start(
+        manifest,
+        "parity",
+        PoolConfig { target_depth: 2, producers: 1, fast: false, ..PoolConfig::default() },
+    );
+    let mut pooled = SecureModel::new_pooled(cfg.clone(), &w, pool.clone());
+    pooled.set_session_label("parity");
+
+    let a = dealer.infer(&input);
+    let b = pooled.infer(&input);
+    assert_eq!(a.logits, b.logits, "pooled must be bit-identical to dealer");
+    // Same online phase, different offline transport.
+    assert_eq!(a.stats.total_rounds(), b.stats.total_rounds());
+    assert_eq!(a.stats.total_bytes(), b.stats.total_bytes());
+    assert!(a.stats.offline_msgs > 0, "dealer mode round-trips to T");
+    assert_eq!(b.stats.offline_msgs, 0, "pooled mode must never consult T online");
+    assert!(b.stats.offline_bytes > 0, "pooled offline bytes are accounted");
+    // And a second session stays aligned (bundle 2 vs dealer session 2).
+    let a2 = dealer.infer(&input);
+    let b2 = pooled.infer(&input);
+    assert_eq!(a2.logits, b2.logits);
+    pool.stop();
+}
+
+#[test]
+fn shallow_pool_blocks_then_resumes_never_wrong() {
+    let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    let w = random_weights(&cfg, 21);
+    let input = hidden_input(&cfg, 22);
+    let expect = ref_forward(&cfg, &w, &input);
+    let manifest = plan_demand(&cfg, PlanInput::Hidden);
+    // Depth-1 pool: back-to-back inferences must wait for the producer to
+    // regenerate between sessions — and always answer correctly.
+    let pool = TuplePool::start(
+        manifest,
+        "shallow",
+        PoolConfig { target_depth: 1, producers: 1, ..PoolConfig::default() },
+    );
+    let mut model = SecureModel::new_pooled(cfg.clone(), &w, pool.clone());
+    for round in 0..3 {
+        let r = model.infer(&input);
+        assert_eq!(r.stats.offline_msgs, 0, "round {round}");
+        for i in 0..cfg.num_labels {
+            assert!(
+                (r.logits[i] - expect[i]).abs() < 0.2,
+                "round {round} logit {i}: {} vs {}",
+                r.logits[i],
+                expect[i]
+            );
+        }
+    }
+    let snap = pool.snapshot();
+    assert_eq!(snap.consumed, 3);
+    pool.stop();
+
+    // Stopped pool: pop_bundle yields None and the engine falls back to
+    // synchronized seeded generation — still correct, still dealer-free.
+    let r = model.infer(&input);
+    assert_eq!(r.stats.offline_msgs, 0);
+    for i in 0..cfg.num_labels {
+        assert!((r.logits[i] - expect[i]).abs() < 0.2, "post-stop logit {i}");
+    }
+}
+
+#[test]
+fn mismatched_bundle_falls_back_never_wrong() {
+    let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    let w = random_weights(&cfg, 31);
+    // Pool planned for token inputs, but the request carries hidden
+    // states: the very first pop mismatches and the session must complete
+    // on the synchronized seeded fallback.
+    let manifest = plan_demand(&cfg, PlanInput::Tokens);
+    let pool = TuplePool::start(
+        manifest,
+        "mismatch",
+        PoolConfig { target_depth: 1, producers: 1, ..PoolConfig::default() },
+    );
+    let mut model = SecureModel::new_pooled(cfg.clone(), &w, pool.clone());
+    let input = hidden_input(&cfg, 32);
+    let expect = ref_forward(&cfg, &w, &input);
+    let r = model.infer(&input);
+    for i in 0..cfg.num_labels {
+        assert!(
+            (r.logits[i] - expect[i]).abs() < 0.2,
+            "logit {i}: {} vs {}",
+            r.logits[i],
+            expect[i]
+        );
+    }
+    assert_eq!(r.stats.offline_msgs, 0);
+    let snap = pool.snapshot();
+    assert!(snap.misses >= 1, "in-session fallback must count as a pool miss");
+    pool.stop();
+}
