@@ -559,6 +559,7 @@ fn run_serving_load(
     requests: usize,
 ) -> ServingMeasurement {
     use crate::coordinator::{BatcherConfig, Coordinator, EngineKind};
+    let workers = serving.secure_workers;
     let coord = Coordinator::start_with(
         cfg.clone(),
         weights.clone(),
@@ -591,7 +592,7 @@ fn run_serving_load(
     let s = coord.secure_summary();
     let m = ServingMeasurement {
         label: label.to_string(),
-        workers: serving.secure_workers,
+        workers,
         requests,
         wall_s,
         rps: requests as f64 / wall_s.max(1e-9),
@@ -636,6 +637,8 @@ pub fn serving_bench(
     pooled_cfg.pool_producers = 2;
     pooled_cfg.warm_bundles = requests.max(1);
     pooled_cfg.pool_max_bundles = Some(requests.max(1) as u64);
+    // All-token load: skip the hidden-kind plan/pool.
+    pooled_cfg.plan_hidden = false;
     let pooled = run_serving_load(
         "pooled_warm",
         &cfg,
@@ -685,6 +688,156 @@ pub fn serving_bench(
     std::fs::write("BENCH_serving.json", &json).expect("write BENCH_serving.json");
     println!("  wrote BENCH_serving.json");
     (baseline, pooled)
+}
+
+// =====================================================================
+// Distribution — in-process pool vs remote dealer vs spool cold start
+// =====================================================================
+
+/// Secure serving throughput under the three offline-distribution
+/// topologies, same token load each time:
+///
+/// 1. `inprocess_warm`  — PR 2 path: per-kind pools generated in-process,
+///    fully warmed before the clock starts;
+/// 2. `remote_warm`     — bundles pulled from a `dealer-serve` process
+///    over the TCP wire protocol (served on a loopback ephemeral port),
+///    prefetched warm;
+/// 3. `spool_cold_start`— coordinator restart: bundles recovered from a
+///    pre-populated disk spool, with in-process generation bounded to
+///    zero — the wall-clock includes `Coordinator::start_with` (plan +
+///    spool recovery), i.e. the cold-start cost the spool amortizes.
+///
+/// Prints the comparison and writes `BENCH_distribution.json`.
+pub fn distribution_bench(
+    seq: usize,
+    concurrency: usize,
+    requests: usize,
+    workers: usize,
+) -> Vec<ServingMeasurement> {
+    use crate::coordinator::ServingConfig;
+    use crate::offline::pool::PoolConfig;
+    use crate::offline::remote::spawn_dealer;
+    use crate::offline::source::{BundleSource, PoolSet};
+    use crate::offline::spool::{SpoolConfig, SpooledSource};
+
+    let cfg = ModelConfig::tiny(seq, Framework::SecFormer);
+    let weights = random_weights(&cfg, 0xD157);
+    let n = requests.max(1);
+    println!("\n=== Offline distribution: in-process vs remote dealer vs spool cold start ===");
+    println!("  seq {seq}, {concurrency} clients × {n} requests per scenario");
+
+    let base_cfg = || {
+        let mut s = ServingConfig::pooled(workers, n);
+        s.warm_bundles = n;
+        s.pool_max_bundles = Some(n as u64);
+        s.plan_hidden = false; // all-token load
+        s
+    };
+
+    // 1. In-process warm pool (the PR 2 baseline).
+    let inproc = run_serving_load("inprocess_warm", &cfg, &weights, base_cfg(), concurrency, n);
+
+    // 2. Remote dealer over TCP: the dealer runs the same bounded pools
+    //    and streams bundles to the coordinator's RemotePool.
+    let dealer_pools = PoolSet::start(
+        &cfg,
+        "bench-dealer",
+        PoolConfig {
+            target_depth: n,
+            producers: 2,
+            max_bundles: Some(n as u64),
+            ..PoolConfig::default()
+        },
+        false,
+    );
+    let addr = spawn_dealer(dealer_pools.clone()).expect("spawn dealer");
+    let mut remote_cfg = base_cfg();
+    remote_cfg.dealer_addr = Some(addr.to_string());
+    let remote = run_serving_load("remote_warm", &cfg, &weights, remote_cfg, concurrency, n);
+    dealer_pools.stop();
+
+    // 3. Spool cold start: pre-populate a spool, then "restart" — the
+    //    coordinator's pools are production-bounded to ZERO bundles, so
+    //    every request is served from disk.
+    let spool_dir = std::env::temp_dir().join(format!(
+        "secformer-bench-spool-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&spool_dir);
+    {
+        let feeder = PoolSet::start(
+            &cfg,
+            "bench-dealer", // same prefix → same bundles as scenario 2
+            PoolConfig {
+                target_depth: n,
+                producers: 2,
+                max_bundles: Some(n as u64),
+                ..PoolConfig::default()
+            },
+            false,
+        );
+        let spool = SpooledSource::open(
+            &spool_dir,
+            Some(feeder as std::sync::Arc<dyn BundleSource>),
+            SpoolConfig { depth: n },
+        )
+        .expect("populate spool");
+        spool.wait_spooled(n);
+        spool.stop();
+    }
+    let mut cold_cfg = base_cfg();
+    cold_cfg.spool_dir = Some(spool_dir.to_string_lossy().into_owned());
+    cold_cfg.pool_max_bundles = Some(0); // regeneration forbidden
+    cold_cfg.warm_bundles = 0; // nothing to warm — disk is the source
+    let t_start = std::time::Instant::now();
+    let mut cold = run_serving_load("spool_cold_start", &cfg, &weights, cold_cfg, concurrency, n);
+    cold.wall_s = t_start.elapsed().as_secs_f64(); // include startup/recovery
+    cold.rps = n as f64 / cold.wall_s.max(1e-9);
+    let _ = std::fs::remove_dir_all(&spool_dir);
+
+    for m in [&inproc, &remote, &cold] {
+        println!(
+            "  {:<18} workers {:<2} wall {:>9}  {:>6.2} req/s  mean {:>9}  p95 {:>9}  pool_hit {:.2}",
+            m.label,
+            m.workers,
+            fmt_s(m.wall_s),
+            m.rps,
+            fmt_s(m.mean_latency_s),
+            fmt_s(m.p95_latency_s),
+            m.pool_hit_rate,
+        );
+    }
+    println!(
+        "  remote/in-process rps ratio: {:.2}  (wire overhead is off the online path)",
+        remote.rps / inproc.rps.max(1e-9)
+    );
+
+    let json_of = |m: &ServingMeasurement| {
+        format!(
+            "    {{\"label\": \"{}\", \"workers\": {}, \"requests\": {}, \
+             \"wall_seconds\": {:.6}, \"rps\": {:.4}, \"mean_latency_s\": {:.6}, \
+             \"p95_latency_s\": {:.6}, \"offline_bytes\": {}, \"pool_hit_rate\": {:.4}}}",
+            m.label,
+            m.workers,
+            m.requests,
+            m.wall_s,
+            m.rps,
+            m.mean_latency_s,
+            m.p95_latency_s,
+            m.offline_bytes,
+            m.pool_hit_rate,
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"offline_distribution\",\n  \"seq\": {seq},\n  \
+         \"concurrency\": {concurrency},\n  \"runs\": [\n{},\n{},\n{}\n  ]\n}}\n",
+        json_of(&inproc),
+        json_of(&remote),
+        json_of(&cold),
+    );
+    std::fs::write("BENCH_distribution.json", &json).expect("write BENCH_distribution.json");
+    println!("  wrote BENCH_distribution.json");
+    vec![inproc, remote, cold]
 }
 
 #[cfg(test)]

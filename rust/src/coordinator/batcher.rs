@@ -6,9 +6,10 @@
 //! runs them on its own `SecureModel`; with `ServingConfig::secure_workers
 //! > 1`, concurrent secure requests genuinely run in parallel. In
 //! [`OfflineMode::Pooled`] every worker draws pregenerated session
-//! bundles from one shared [`TuplePool`] warmed at startup, so the online
-//! phase never waits on the dealer. A dedicated worker owns the plaintext
-//! PJRT engine.
+//! bundles from one shared [`BundleSource`] warmed at startup — per-kind
+//! in-process pools, a remote dealer's prefetch queue, or a disk spool —
+//! so the online phase never waits on the dealer. A dedicated worker owns
+//! the plaintext PJRT engine.
 
 use crate::coordinator::metrics::{Metrics, MetricsSummary};
 use crate::core::rng::Xoshiro;
@@ -16,8 +17,11 @@ use crate::engine::{OfflineMode, SecureModel};
 use crate::nn::config::ModelConfig;
 use crate::nn::model::ModelInput;
 use crate::nn::weights::{share_weights, WeightMap};
-use crate::offline::planner::{plan_demand, PlanInput};
-use crate::offline::pool::{PoolConfig, PoolSnapshot, TuplePool};
+use crate::offline::planner::PlanInput;
+use crate::offline::pool::{PoolConfig, PoolSnapshot};
+use crate::offline::remote::{RemotePool, RemotePoolConfig};
+use crate::offline::source::{BundleSource, PoolSet};
+use crate::offline::spool::{SpoolConfig, SpooledSource};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::executor::PlaintextModel;
 use crate::runtime::xla_shim as xla;
@@ -67,8 +71,10 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Secure-engine provisioning: worker count and offline mode.
-#[derive(Clone, Copy, Debug)]
+/// Secure-engine provisioning: worker count, offline mode and (in
+/// pooled mode) where bundles come from — in-process producers, a
+/// remote `dealer-serve` process, and/or a disk spool.
+#[derive(Clone, Debug)]
 pub struct ServingConfig {
     /// Concurrent secure workers (each owns a `SecureModel`).
     pub secure_workers: usize,
@@ -93,6 +99,31 @@ pub struct ServingConfig {
     /// benchmark bounds production at its request count so no offline
     /// generation competes for CPU inside the measured window.
     pub pool_max_bundles: Option<u64>,
+    /// Pooled mode: also plan (and pool for) hidden-state inputs, so
+    /// mixed token/hidden request streams are all served from
+    /// plan-exact bundles. Costs one extra dry-run at startup.
+    pub plan_hidden: bool,
+    /// Pooled mode: let the EWMA request arrival rate drive the
+    /// producer target depth (`serve --adaptive`; see
+    /// `PoolConfig::adaptive`).
+    pub adaptive_depth: bool,
+    /// Pooled mode: prefetch bundles from a standalone `dealer-serve`
+    /// process at this address instead of generating in-process
+    /// (`serve --dealer-addr`).
+    pub dealer_addr: Option<String>,
+    /// Pooled mode: persist bundles to (and warm-start from) an
+    /// append-only spool in this directory (`serve --spool-dir`).
+    pub spool_dir: Option<String>,
+    /// Override the per-process session namespace — FOR TESTS AND
+    /// REPRODUCIBILITY ONLY. Two coordinators given the same namespace,
+    /// weights and request stream produce bit-identical logits, which is
+    /// how the distribution tests pin remote serving to the in-process
+    /// pool. Session labels (and with them input-mask seeds and tuple
+    /// streams) derive from the namespace + a per-model counter, so
+    /// REUSING a namespace across coordinator lives replays the same
+    /// randomness for different inputs — one-time-pad reuse. Deployments
+    /// must leave this unset (the default namespace is per-process).
+    pub session_namespace: Option<String>,
 }
 
 impl Default for ServingConfig {
@@ -105,6 +136,11 @@ impl Default for ServingConfig {
             warm_bundles: 0,
             pool_fast: true,
             pool_max_bundles: None,
+            plan_hidden: false,
+            adaptive_depth: false,
+            dealer_addr: None,
+            spool_dir: None,
+            session_namespace: None,
         }
     }
 }
@@ -117,10 +153,9 @@ impl ServingConfig {
             secure_workers: workers.max(1),
             offline: OfflineMode::Pooled,
             pool_depth: depth.max(1),
-            pool_producers: 1,
             warm_bundles: workers.min(depth).max(1),
-            pool_fast: true,
-            pool_max_bundles: None,
+            plan_hidden: true,
+            ..ServingConfig::default()
         }
     }
 }
@@ -278,7 +313,7 @@ pub struct Coordinator {
     next_id: AtomicU64,
     pub metrics_secure: Arc<Metrics>,
     pub metrics_plain: Arc<Metrics>,
-    pool: Option<Arc<TuplePool>>,
+    pool: Option<Arc<dyn BundleSource>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -315,30 +350,59 @@ impl Coordinator {
         // Per-coordinator nonce: two coordinators in one process (test
         // binaries, embedded uses) must never share session labels — a
         // shared label at equal session counters would reuse input-mask
-        // and tuple streams across *different* inputs.
+        // and tuple streams across *different* inputs. A deployment (or
+        // test) that WANTS two coordinators session-aligned overrides
+        // the namespace explicitly.
         static COORD_NONCE: AtomicU64 = AtomicU64::new(0);
         let nonce = COORD_NONCE.fetch_add(1, Ordering::Relaxed);
-        let instance = format!("{:x}-{nonce}", std::process::id());
+        let instance = serving
+            .session_namespace
+            .clone()
+            .unwrap_or_else(|| format!("{:x}-{nonce}", std::process::id()));
 
-        // Pooled mode: plan the demand once (the TCP serving path takes
-        // token inputs; hidden-state requests still work — they fall back
-        // to seeded generation inside the session), then produce ahead.
-        let pool = match serving.offline {
+        // Pooled mode: assemble the bundle source — per-kind in-process
+        // pools by default, a remote dealer's prefetch queue with
+        // `dealer_addr`, optionally wrapped in a disk spool — and warm
+        // it before accepting traffic.
+        let pool: Option<Arc<dyn BundleSource>> = match serving.offline {
             OfflineMode::Pooled => {
-                let manifest = plan_demand(&cfg, PlanInput::Tokens);
                 let prefix = format!("coord-pool-{instance}");
-                let pool = TuplePool::start(
-                    manifest,
-                    &prefix,
-                    PoolConfig {
-                        target_depth: serving.pool_depth.max(1),
-                        producers: serving.pool_producers.max(1),
-                        fast: serving.pool_fast,
-                        max_bundles: serving.pool_max_bundles,
-                    },
-                );
-                pool.warm(serving.warm_bundles);
-                Some(pool)
+                let base: Arc<dyn BundleSource> = match &serving.dealer_addr {
+                    Some(addr) => {
+                        let mut kinds = vec![PlanInput::Tokens];
+                        if serving.plan_hidden {
+                            kinds.push(PlanInput::Hidden);
+                        }
+                        RemotePool::connect(
+                            addr,
+                            &cfg,
+                            RemotePoolConfig { depth: serving.pool_depth.max(1), kinds },
+                        )?
+                    }
+                    None => PoolSet::start(
+                        &cfg,
+                        &prefix,
+                        PoolConfig {
+                            target_depth: serving.pool_depth.max(1),
+                            producers: serving.pool_producers.max(1),
+                            fast: serving.pool_fast,
+                            max_bundles: serving.pool_max_bundles,
+                            adaptive: serving.adaptive_depth,
+                            ..PoolConfig::default()
+                        },
+                        serving.plan_hidden,
+                    ),
+                };
+                let source: Arc<dyn BundleSource> = match &serving.spool_dir {
+                    Some(dir) => SpooledSource::open(
+                        std::path::Path::new(dir),
+                        Some(base),
+                        SpoolConfig { depth: serving.pool_depth.max(1) },
+                    )?,
+                    None => base,
+                };
+                source.warm(serving.warm_bundles);
+                Some(source)
             }
             _ => None,
         };
@@ -420,6 +484,16 @@ impl Coordinator {
         engine: EngineKind,
         reply_to: Sender<InferenceReply>,
     ) -> u64 {
+        if engine == EngineKind::Secure {
+            if let Some(src) = &self.pool {
+                // Arrival-rate signal for adaptive pool depth.
+                let kind = match &input {
+                    ModelInput::Hidden(_) => PlanInput::Hidden,
+                    ModelInput::Tokens(_) => PlanInput::Tokens,
+                };
+                src.note_arrival(kind);
+            }
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = InferenceRequest { id, input, engine, submitted: Instant::now(), reply_to };
         {
@@ -563,6 +637,42 @@ mod tests {
         let ps = c.pool_snapshot().expect("pooled coordinator has a pool");
         assert_eq!(ps.consumed, n as u64);
         assert!(ps.produced >= ps.consumed);
+        c.shutdown();
+    }
+
+    #[test]
+    fn mixed_kind_streams_keep_full_hit_rate() {
+        // Regression for the PR 2 manifest-cache gap: hidden-state
+        // requests used to fall back to seeded generation mid-session
+        // because only token demand was planned. With per-kind pools,
+        // a mixed stream must stay at hit-rate 1.0 with zero misses.
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let w = random_weights(&cfg, 29);
+        let mut serving = ServingConfig::pooled(1, 4);
+        serving.warm_bundles = 3; // per kind — every pop below is pre-warmed
+        let c = Coordinator::start_with(
+            cfg.clone(),
+            w,
+            None,
+            BatcherConfig::default(),
+            serving,
+        )
+        .unwrap();
+        let toks: Vec<u32> = (0..cfg.seq as u32).collect();
+        let mut rng = Xoshiro::seed_from(99);
+        let hidden: Vec<f64> =
+            (0..cfg.seq * cfg.hidden).map(|_| rng.normal() * 0.5).collect();
+        for _ in 0..3 {
+            let a = c.infer_blocking(ModelInput::Tokens(toks.clone()), EngineKind::Secure);
+            assert!(a.logits.iter().all(|v| v.is_finite()));
+            let b = c.infer_blocking(ModelInput::Hidden(hidden.clone()), EngineKind::Secure);
+            assert!(b.logits.iter().all(|v| v.is_finite()));
+        }
+        let ps = c.pool_snapshot().expect("pooled coordinator has a source");
+        assert_eq!(ps.misses, 0, "mixed kinds must not miss or fall back: {ps:?}");
+        assert_eq!(ps.consumed, 6);
+        let hit = c.secure_summary().pool_hit_rate;
+        assert!((hit - 1.0).abs() < 1e-9, "hit rate {hit}");
         c.shutdown();
     }
 

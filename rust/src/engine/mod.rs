@@ -14,8 +14,9 @@ use crate::net::transport::channel_pair;
 use crate::nn::config::ModelConfig;
 use crate::nn::model::{bert_forward, InputShare, ModelInput};
 use crate::nn::weights::{share_weights, ShareMap, WeightMap};
-use crate::offline::pool::TuplePool;
+use crate::offline::planner::PlanInput;
 use crate::offline::provider::PooledProvider;
+use crate::offline::source::BundleSource;
 use crate::proto::ctx::PartyCtx;
 use crate::sharing::dealer::{DealerServer, Party0Provider, Party1Provider};
 use crate::sharing::provider::FastSeededProvider;
@@ -31,8 +32,9 @@ pub enum OfflineMode {
     /// Both parties derive locally from shared seeds (benchmark mode).
     Seeded,
     /// Both parties pop a pregenerated session bundle from a
-    /// [`TuplePool`]: zero dealer round-trips during the online phase
-    /// (construct via [`SecureModel::new_pooled`]).
+    /// [`BundleSource`] (an in-process pool, a remote dealer's
+    /// prefetch queue, or a disk spool): zero dealer round-trips during
+    /// the online phase (construct via [`SecureModel::new_pooled`]).
     Pooled,
 }
 
@@ -87,7 +89,7 @@ pub struct SecureModel {
     session_counter: u64,
     session_label: String,
     /// Pregenerated-bundle source ([`OfflineMode::Pooled`] only).
-    pool: Option<Arc<TuplePool>>,
+    pool: Option<Arc<dyn BundleSource>>,
 }
 
 impl SecureModel {
@@ -100,10 +102,18 @@ impl SecureModel {
     }
 
     /// A model whose per-party providers pop pregenerated bundles from
-    /// `pool` — zero S1↔T round-trips online. The pool keeps producing in
-    /// the background; stopping it makes subsequent inferences fall back
-    /// to seeded generation (never wrong results, only slower).
-    pub fn new_pooled(cfg: ModelConfig, weights: &WeightMap, pool: Arc<TuplePool>) -> Self {
+    /// `pool` — zero S1↔T round-trips online. Any [`BundleSource`] works:
+    /// an in-process [`crate::offline::pool::TuplePool`], a per-kind
+    /// [`crate::offline::source::PoolSet`], a
+    /// [`crate::offline::remote::RemotePool`] fed by a `dealer-serve`
+    /// process, or a [`crate::offline::spool::SpooledSource`]. Stopping
+    /// the source makes subsequent inferences fall back to seeded
+    /// generation (never wrong results, only slower).
+    pub fn new_pooled(
+        cfg: ModelConfig,
+        weights: &WeightMap,
+        pool: Arc<dyn BundleSource>,
+    ) -> Self {
         Self::build(cfg, weights, OfflineMode::Pooled, Some(pool))
     }
 
@@ -111,7 +121,7 @@ impl SecureModel {
         cfg: ModelConfig,
         weights: &WeightMap,
         offline: OfflineMode,
-        pool: Option<Arc<TuplePool>>,
+        pool: Option<Arc<dyn BundleSource>>,
     ) -> Self {
         let mut rng = Xoshiro::seed_from(0x5EC0);
         let (shares0, shares1) = share_weights(weights, &mut rng);
@@ -127,7 +137,7 @@ impl SecureModel {
         shares0: Arc<ShareMap>,
         shares1: Arc<ShareMap>,
         offline: OfflineMode,
-        pool: Option<Arc<TuplePool>>,
+        pool: Option<Arc<dyn BundleSource>>,
     ) -> Self {
         assert_eq!(
             offline == OfflineMode::Pooled,
@@ -205,15 +215,21 @@ impl SecureModel {
         let session = format!("{}-{}", self.session_label, self.session_counter);
         let cfg = self.cfg.clone();
 
-        // Pooled mode: draw the session's pregenerated bundle before the
-        // online clock starts. A cold pool blocks here until a producer
-        // catches up; `None` (pool stopped) degrades to synchronized
+        // Pooled mode: draw the session's pregenerated bundle — routed
+        // by input kind so a token bundle never reaches a hidden-state
+        // session — before the online clock starts. A cold source blocks
+        // here until a producer (or remote prefetch) catches up; `None`
+        // (stopped/exhausted/unplanned kind) degrades to synchronized
         // seeded generation inside the party threads — never wrong
         // results, only no prefetch win.
+        let kind = match input {
+            ModelInput::Hidden(_) => PlanInput::Hidden,
+            ModelInput::Tokens(_) => PlanInput::Tokens,
+        };
         let (bundle0, bundle1, bundle_session, bundle_words) = match self.offline {
             OfflineMode::Pooled => {
                 let pool = self.pool.as_ref().expect("pooled model without pool");
-                match pool.pop_bundle() {
+                match pool.pop(kind) {
                     Some(b) => (Some(b.p0), Some(b.p1), b.session, b.words_per_party),
                     None => (None, None, String::new(), 0),
                 }

@@ -5,9 +5,13 @@
 //!                            reference vs PJRT artifact
 //!   infer [opts]             run one inference (secure and/or plaintext)
 //!   serve [opts]             TCP serving coordinator (line protocol)
+//!   dealer-serve [opts]      standalone correlated-randomness dealer:
+//!                            plans tuple demand, pregenerates session
+//!                            bundles and streams them to coordinators
 //!   bench <target> [opts]    regenerate a paper table/figure
 //!                            targets: table3 table4 fig1 fig5 fig6 fig7
-//!                                     fig8 fig9 rounds serving all
+//!                                     fig8 fig9 rounds serving
+//!                                     distribution all
 //!
 //! Common options:
 //!   --framework <crypten|puma|mpcformer|secformer>   (default secformer)
@@ -227,24 +231,56 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
         max_batch: args.usize_or("max-batch", 8),
         max_wait: std::time::Duration::from_millis(args.usize_or("max-wait-ms", 5) as u64),
     };
-    // `--pool <depth>` switches the secure workers to the pregenerated
-    // correlated-randomness pool (OfflineMode::Pooled); `--workers` sets
-    // the number of concurrent secure workers either way.
-    let serving = match args.flag("pool") {
-        Some(depth) => {
-            let depth: usize = depth.parse().context("--pool takes a bundle depth")?;
-            let mut s = ServingConfig::pooled(args.usize_or("workers", 2), depth.max(1));
-            s.pool_producers = args.usize_or("pool-producers", 1).max(1);
-            // `--pool-prf`: dealer-grade AES-PRF bundle generation
-            // (bit-identical to OfflineMode::Dealer) instead of the fast
-            // statistical generator.
-            s.pool_fast = !args.has("pool-prf");
-            s
+    // `--pool <depth>` (or `--dealer-addr`/`--spool-dir`) switches the
+    // secure workers to the pregenerated correlated-randomness pool
+    // (OfflineMode::Pooled); `--workers` sets the number of concurrent
+    // secure workers either way.
+    let pooled = args.has("pool") || args.has("dealer-addr") || args.has("spool-dir");
+    let serving = if pooled {
+        let depth: usize = match args.flag("pool") {
+            Some(d) => d.parse().context("--pool takes a bundle depth")?,
+            None => 4,
+        };
+        let mut s = ServingConfig::pooled(args.usize_or("workers", 2), depth.max(1));
+        s.pool_producers = args.usize_or("pool-producers", 1).max(1);
+        // `--pool-prf`: dealer-grade AES-PRF bundle generation
+        // (bit-identical to OfflineMode::Dealer) instead of the fast
+        // statistical generator.
+        s.pool_fast = !args.has("pool-prf");
+        // `--plan tokens` skips the hidden-kind plan/pool (token-only
+        // deployments); the default plans both kinds.
+        s.plan_hidden = args.flag("plan").map(|p| p != "tokens").unwrap_or(true);
+        // `--adaptive`: EWMA request-arrival rate drives producer depth.
+        s.adaptive_depth = args.has("adaptive");
+        // `--dealer-addr host:port`: prefetch bundles from a standalone
+        // `dealer-serve` process instead of generating in-process. The
+        // local-generation knobs then have no effect — generation policy
+        // lives on the dealer — so say so instead of silently ignoring.
+        s.dealer_addr = args.flag("dealer-addr").map(String::from);
+        if s.dealer_addr.is_some() {
+            for flag in ["pool-prf", "adaptive", "pool-producers"] {
+                if args.has(flag) {
+                    eprintln!(
+                        "serve: --{flag} has no effect with --dealer-addr \
+                         (set it on dealer-serve instead)"
+                    );
+                }
+            }
         }
-        None => ServingConfig {
+        // `--spool-dir DIR`: persist bundles to an append-only spool and
+        // warm-start from it after a restart.
+        s.spool_dir = args.flag("spool-dir").map(String::from);
+        // `--namespace NS`: session-align this coordinator with another
+        // — tests/reproducibility ONLY. Reusing a namespace across
+        // coordinator lives replays session randomness for different
+        // inputs (pad reuse); deployments leave it unset.
+        s.session_namespace = args.flag("namespace").map(String::from);
+        s
+    } else {
+        ServingConfig {
             secure_workers: args.usize_or("workers", 1).max(1),
             ..ServingConfig::default()
-        },
+        }
     };
     let coordinator = std::sync::Arc::new(Coordinator::start_with(
         cfg.clone(),
@@ -260,6 +296,61 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
     };
     let port = args.usize_or("port", 7878);
     server.serve(&format!("127.0.0.1:{port}"))
+}
+
+/// `dealer-serve` — the standalone offline phase: plan the model's tuple
+/// demand, keep per-kind session bundles pregenerated, and stream them
+/// to coordinators over the framed TCP protocol. The model flags
+/// (`--seq`, `--framework`, `--vocab`) MUST match the coordinators'
+/// — the handshake rejects any manifest mismatch.
+fn cmd_dealer_serve(args: &Args, cfg_file: &Config) -> Result<()> {
+    use secformer::offline::pool::PoolConfig;
+    use secformer::offline::remote::serve_dealer;
+    use secformer::offline::source::PoolSet;
+    let fw = framework_of(args, cfg_file);
+    let seq = args.usize_or("seq", 16);
+    let mut cfg = ModelConfig::tiny(seq, fw);
+    cfg.vocab = args.usize_or("vocab", cfg.vocab);
+    let depth = args.usize_or("depth", 8).max(1);
+    let pool_cfg = PoolConfig {
+        target_depth: depth,
+        producers: args.usize_or("producers", 2).max(1),
+        // `--prf`: dealer-grade AES-PRF streams (bit-identical to
+        // OfflineMode::Dealer) instead of the fast generator.
+        fast: !args.has("prf"),
+        max_bundles: args.flag("max-bundles").and_then(|v| v.parse().ok()),
+        // `--adaptive`: size the pools to the coordinators' pull rate.
+        adaptive: args.has("adaptive"),
+        max_depth: args.usize_or("max-depth", 64).max(depth),
+    };
+    // `--prefix`: the session-label prefix bundles are generated under.
+    // Bundle contents are a pure function of `{prefix}-{seq}` and seq
+    // restarts at 1 in every dealer process, so the DEFAULT prefix is
+    // per-process: a restarted dealer must never regenerate (and
+    // re-serve) the bundles a previous life already handed out — that
+    // would reuse one-time-pad material. Pass an explicit `--prefix`
+    // only for reproducibility/parity setups (`serve --namespace`, see
+    // ARCHITECTURE.md), and never reuse one across dealer lives.
+    let prefix = args
+        .flag("prefix")
+        .map(String::from)
+        .unwrap_or_else(|| format!("dealer-{:x}", std::process::id()));
+    let plan_hidden = args.flag("plan").map(|p| p != "tokens").unwrap_or(true);
+    let pools = PoolSet::start(&cfg, &prefix, pool_cfg, plan_hidden);
+    for kind in [
+        secformer::offline::planner::PlanInput::Tokens,
+        secformer::offline::planner::PlanInput::Hidden,
+    ] {
+        if let Some(m) = pools.manifest_for(kind) {
+            eprintln!(
+                "dealer: planned {kind:?}: {} requests, {} ring words/party per bundle",
+                m.reqs.len(),
+                m.words_per_party()
+            );
+        }
+    }
+    let bind = args.flag("bind").unwrap_or("127.0.0.1:7979");
+    serve_dealer(bind, pools)
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -301,6 +392,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 args.usize_or("workers", 4),
             );
         }
+        "distribution" => {
+            bh::distribution_bench(
+                args.usize_or("seq", 8),
+                args.usize_or("concurrency", 4),
+                args.usize_or("requests", 16),
+                args.usize_or("workers", 2),
+            );
+        }
         "ablations" => {
             secformer::bench::ablations::ablation_fourier_terms(args.usize_or("points", 1000));
             secformer::bench::ablations::ablation_goldschmidt_iters(args.usize_or("points", 1000));
@@ -329,6 +428,7 @@ fn main() -> Result<()> {
         "selftest" => cmd_selftest(&args),
         "infer" => cmd_infer(&args, &cfg_file),
         "serve" => cmd_serve(&args, &cfg_file),
+        "dealer-serve" => cmd_dealer_serve(&args, &cfg_file),
         "bench" => cmd_bench(&args),
         "" | "help" | "--help" => {
             println!("{}", HELP);
@@ -348,13 +448,31 @@ USAGE:
   secformer serve  [--port 7878] [--weights W.swts] [--artifacts DIR]
                    [--max-batch 8] [--max-wait-ms 5]
                    [--workers N] [--pool DEPTH] [--pool-producers P] [--pool-prf]
-  secformer bench  <table3|table4|fig1|fig5|fig6|fig7|fig8|fig9|rounds|serving|ablations|all>
+                   [--plan tokens|both] [--adaptive]
+                   [--dealer-addr HOST:PORT] [--spool-dir DIR] [--namespace NS]
+  secformer dealer-serve [--bind 127.0.0.1:7979] [--seq N] [--framework F]
+                   [--vocab V] [--depth 8] [--producers 2] [--prf]
+                   [--plan tokens|both] [--adaptive] [--max-depth 64]
+                   [--max-bundles N] [--prefix PFX]
+  secformer bench  <table3|table4|fig1|fig5|fig6|fig7|fig8|fig9|rounds|serving|
+                    distribution|ablations|all>
                    [--seq N] [--paper] [--iters K] [--base-only]
                    [--concurrency C] [--requests R] [--workers N]
 
 `serve --pool DEPTH` switches the secure workers to OfflineMode::Pooled: a
 demand planner dry-runs the model at startup, background producers keep
-DEPTH pregenerated session bundles ready, and every inference runs with
-zero dealer round-trips online. `bench serving` measures the sequential
-baseline vs the warm pool and writes BENCH_serving.json.
+DEPTH pregenerated session bundles ready per input kind, and every
+inference runs with zero dealer round-trips online.
+
+`dealer-serve` moves that offline phase to its own machine: it streams
+serialized session bundles to any number of coordinators started with
+`serve --dealer-addr` (model flags must match — the handshake verifies
+manifest fingerprints). `serve --spool-dir DIR` additionally persists
+bundles to an append-only spool so a restarted coordinator warm-starts
+from disk. See README.md for the full flag reference and ARCHITECTURE.md
+for the wire format.
+
+`bench serving` writes BENCH_serving.json; `bench distribution` compares
+in-process vs remote-dealer vs spool-cold-start and writes
+BENCH_distribution.json.
 ";

@@ -6,9 +6,12 @@
 //! [`ChannelTransport`] wires party threads through `mpsc` channels; the
 //! [`NetModel`] converts counted rounds/bytes into simulated wall-clock for
 //! any latency/bandwidth setting (see DESIGN.md "Environment substitutions").
+//! [`TcpTransport`] carries the same message discipline over a real socket
+//! for cross-machine deployments.
+#![warn(missing_docs)]
 
 pub mod stats;
 pub mod transport;
 
 pub use stats::{CommStats, NetModel, OpCategory, StatsHandle};
-pub use transport::{channel_pair, ChannelTransport, Transport};
+pub use transport::{channel_pair, ChannelTransport, TcpTransport, Transport};

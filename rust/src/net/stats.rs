@@ -12,16 +12,22 @@ use std::sync::Arc;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 #[repr(u8)]
 pub enum OpCategory {
+    /// GeLU activation protocols.
     Gelu = 0,
+    /// Softmax protocols (including their divisions).
     Softmax = 1,
+    /// LayerNorm protocols (including rsqrt).
     LayerNorm = 2,
+    /// Everything else (matmuls, embeddings, glue).
     Others = 3,
 }
 
 impl OpCategory {
+    /// Every category, in breakdown-table order.
     pub const ALL: [OpCategory; 4] =
         [OpCategory::Gelu, OpCategory::Softmax, OpCategory::LayerNorm, OpCategory::Others];
 
+    /// Display name used by the paper's tables.
     pub fn name(self) -> &'static str {
         match self {
             OpCategory::Gelu => "GeLU",
@@ -58,14 +64,17 @@ pub struct CommStats {
 pub type StatsHandle = Arc<CommStats>;
 
 impl CommStats {
+    /// A fresh, zeroed, shareable counter set.
     pub fn new_handle() -> StatsHandle {
         Arc::new(CommStats::default())
     }
 
+    /// Attribute subsequent rounds/bytes/nanos to `cat`.
     pub fn set_category(&self, cat: OpCategory) {
         self.current.store(cat as u8, Ordering::Relaxed);
     }
 
+    /// The category currently receiving attribution.
     pub fn current_category(&self) -> OpCategory {
         match self.current.load(Ordering::Relaxed) {
             0 => OpCategory::Gelu,
@@ -80,6 +89,7 @@ impl CommStats {
         &self.cats[self.current.load(Ordering::Relaxed) as usize]
     }
 
+    /// Count one synchronized exchange and the bytes this party sent in it.
     #[inline]
     pub fn record_round(&self, bytes_sent: u64) {
         let c = self.cur();
@@ -94,11 +104,13 @@ impl CommStats {
         self.cur().bytes.fetch_add(bytes_sent, Ordering::Relaxed);
     }
 
+    /// Attribute measured wall-clock nanoseconds to the current category.
     #[inline]
     pub fn record_nanos(&self, nanos: u64) {
         self.cur().nanos.fetch_add(nanos, Ordering::Relaxed);
     }
 
+    /// Count one synchronous dealer (S1↔T) message of `bytes` payload.
     #[inline]
     pub fn record_offline(&self, bytes: u64) {
         self.offline_bytes.fetch_add(bytes, Ordering::Relaxed);
@@ -114,26 +126,33 @@ impl CommStats {
         self.offline_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// Rounds recorded under `cat`.
     pub fn rounds(&self, cat: OpCategory) -> u64 {
         self.cats[cat as usize].rounds.load(Ordering::Relaxed)
     }
 
+    /// Online bytes this party sent under `cat`.
     pub fn bytes(&self, cat: OpCategory) -> u64 {
         self.cats[cat as usize].bytes.load(Ordering::Relaxed)
     }
 
+    /// Wall-clock nanoseconds attributed to `cat`.
     pub fn nanos(&self, cat: OpCategory) -> u64 {
         self.cats[cat as usize].nanos.load(Ordering::Relaxed)
     }
 
+    /// Online rounds across all categories.
     pub fn total_rounds(&self) -> u64 {
         OpCategory::ALL.iter().map(|&c| self.rounds(c)).sum()
     }
 
+    /// Online bytes (this party) across all categories.
     pub fn total_bytes(&self) -> u64 {
         OpCategory::ALL.iter().map(|&c| self.bytes(c)).sum()
     }
 
+    /// Offline correlated-randomness bytes (dealer corrections or
+    /// prefetched bundles).
     pub fn offline_bytes(&self) -> u64 {
         self.offline_bytes.load(Ordering::Relaxed)
     }
@@ -143,6 +162,7 @@ impl CommStats {
         self.offline_msgs.load(Ordering::Relaxed)
     }
 
+    /// Zero every counter (benchmark warm-up hygiene).
     pub fn reset(&self) {
         for c in &self.cats {
             c.rounds.store(0, Ordering::Relaxed);
@@ -170,9 +190,13 @@ impl CommStats {
 /// A point-in-time copy of the per-category counters.
 #[derive(Default, Clone, Debug)]
 pub struct StatsSnapshot {
+    /// Rounds per category (indexed by `OpCategory as usize`).
     pub rounds: [u64; 4],
+    /// Online bytes sent per category (this party).
     pub bytes: [u64; 4],
+    /// Wall-clock nanoseconds per category.
     pub nanos: [u64; 4],
+    /// Offline correlated-randomness bytes consumed.
     pub offline_bytes: u64,
     /// Synchronous dealer round-trips (zero in seeded AND pooled modes —
     /// the pooled-mode invariant tests assert on this).
@@ -180,6 +204,7 @@ pub struct StatsSnapshot {
 }
 
 impl StatsSnapshot {
+    /// Counter-wise difference (`self - earlier`).
     pub fn delta(&self, earlier: &StatsSnapshot) -> StatsSnapshot {
         let mut d = StatsSnapshot::default();
         for i in 0..4 {
@@ -192,10 +217,12 @@ impl StatsSnapshot {
         d
     }
 
+    /// Online bytes (this party) across all categories.
     pub fn total_bytes(&self) -> u64 {
         self.bytes.iter().sum()
     }
 
+    /// Online rounds across all categories.
     pub fn total_rounds(&self) -> u64 {
         self.rounds.iter().sum()
     }
@@ -232,6 +259,7 @@ impl NetModel {
         NetModel { rtt_s: 40e-3, bandwidth_bps: 40e6 }
     }
 
+    /// Network time for `rounds` exchanges moving `bytes` total payload.
     pub fn simulated_seconds(&self, rounds: u64, bytes: u64) -> f64 {
         rounds as f64 * self.rtt_s + bytes as f64 / self.bandwidth_bps
     }

@@ -1,28 +1,49 @@
 //! The offline precomputation subsystem: plan → pregenerate → pool →
-//! consume.
+//! distribute → consume.
 //!
 //! SecFormer (like PUMA and MPCFormer) reports *online*-phase costs,
 //! assuming correlated randomness exists before the query arrives. This
-//! module makes that assumption real:
+//! module makes that assumption real — and deployable across machines:
 //!
 //! * [`planner`] — dry-runs the model once through a recording
 //!   [`crate::sharing::provider::Provider`] and emits the exact
 //!   per-(op, shape) tuple demand of one inference ([`TupleManifest`]).
 //! * [`pool`] — background producers run the dealer pipeline ahead of
 //!   demand, materializing per-session [`SessionBundle`]s in a bounded
-//!   [`TuplePool`].
-//! * [`provider`] — [`PooledProvider`] serves a party's protocol requests
-//!   straight from a popped bundle: zero dealer round-trips online, with
-//!   a synchronized seeded fallback if demand ever diverges from plan.
+//!   [`TuplePool`] (optionally sized adaptively from the request
+//!   arrival rate).
+//! * [`source`] — the [`BundleSource`] abstraction the engine consumes,
+//!   and [`PoolSet`], one pool per input kind so mixed hidden/token
+//!   request streams stay plan-exact.
+//! * [`wire`] — framed, versioned, checksummed bundle serialization
+//!   shared by the TCP protocol and the disk spool.
+//! * [`remote`] — the standalone `dealer-serve` service and the
+//!   [`RemotePool`] client that prefetches its bundles over TCP.
+//! * [`spool`] — an append-only disk spool so a restarted coordinator
+//!   warm-starts from persisted bundles instead of regenerating.
+//! * [`provider`] — [`PooledProvider`] serves a party's protocol
+//!   requests straight from a popped bundle: zero dealer round-trips
+//!   online, with a synchronized seeded fallback if demand ever
+//!   diverges from plan.
 //!
-//! The engine consumes this via `OfflineMode::Pooled`
-//! (`engine/mod.rs`), and the serving coordinator warms a pool at
-//! startup so concurrent secure workers each draw a ready bundle.
+//! The engine consumes this via `OfflineMode::Pooled` (`engine/mod.rs`),
+//! and the serving coordinator warms a source at startup so concurrent
+//! secure workers each draw a ready bundle — locally generated, pulled
+//! from a dealer machine, or recovered from disk.
+#![warn(missing_docs)]
 
 pub mod planner;
 pub mod pool;
 pub mod provider;
+pub mod remote;
+pub mod source;
+pub mod spool;
+pub mod wire;
 
 pub use planner::{plan_demand, PlanInput, RecordingProvider, TupleManifest, TupleReq};
 pub use pool::{generate_bundle, PoolConfig, PoolSnapshot, SessionBundle, Tuple, TuplePool};
 pub use provider::{PooledProvider, PoolTelemetry};
+pub use remote::{serve_dealer, spawn_dealer, RemotePool, RemotePoolConfig};
+pub use source::{BundleSource, PoolSet};
+pub use spool::{SpoolConfig, SpooledSource};
+pub use wire::{manifest_fingerprint, WIRE_VERSION};

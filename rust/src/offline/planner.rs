@@ -78,7 +78,10 @@ impl TupleReq {
 /// the secure one-hot embedding matmul and the embedding LayerNorm.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlanInput {
+    /// Pre-embedded hidden states (`seq × hidden`).
     Hidden,
+    /// Token ids — plans the secure one-hot embedding matmul and the
+    /// embedding LayerNorm in front of the encoder stack.
     Tokens,
 }
 
@@ -86,8 +89,12 @@ pub enum PlanInput {
 /// the protocol layer issues, in order.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TupleManifest {
+    /// The input kind this demand was planned for.
     pub input: PlanInput,
+    /// Whether the plan used the fused attention path
+    /// (`ModelConfig::fused_attention`) — the demand streams differ.
     pub fused: bool,
+    /// Every tuple request of one inference, in consumption order.
     pub reqs: Vec<TupleReq>,
 }
 
@@ -123,6 +130,7 @@ pub struct RecordingProvider {
 }
 
 impl RecordingProvider {
+    /// Wrap `inner`, appending every forwarded request to `log`.
     pub fn new(inner: Box<dyn Provider>, log: Arc<Mutex<Vec<TupleReq>>>) -> Self {
         RecordingProvider { inner, log }
     }

@@ -1,5 +1,6 @@
 //! [`PooledProvider`]: the online-phase [`Provider`] that consumes a
-//! pregenerated [`SessionBundle`] half — zero S1↔T round-trips online.
+//! pregenerated [`crate::offline::pool::SessionBundle`] half — zero
+//! S1↔T round-trips online.
 //!
 //! Every pop is shape-checked against the request. If the session's demand
 //! ever diverges from the planned manifest (wrong op, wrong shape, or the
@@ -10,7 +11,8 @@
 //! stay correct, only the prefetch win is lost (and the event is counted
 //! as a pool miss).
 
-use crate::offline::pool::{Tuple, TuplePool};
+use crate::offline::pool::Tuple;
+use crate::offline::source::BundleSource;
 use crate::sharing::provider::{
     BitPair, FastSeededProvider, MatmulTriple, MulTriple, Provider, SinTuple, SquarePair,
 };
@@ -39,8 +41,8 @@ pub struct PooledProvider {
     party: u8,
     fallback_label: String,
     fallback: Option<FastSeededProvider>,
-    /// Pool to notify (miss accounting) on first fallback, if any.
-    pool: Option<Arc<TuplePool>>,
+    /// Bundle source to notify (miss accounting) on first fallback.
+    pool: Option<Arc<dyn BundleSource>>,
     telemetry: Option<Arc<PoolTelemetry>>,
 }
 
@@ -59,8 +61,8 @@ impl PooledProvider {
         }
     }
 
-    /// Attach a pool handle for miss accounting on fallback.
-    pub fn with_pool(mut self, pool: Arc<TuplePool>) -> Self {
+    /// Attach a bundle-source handle for miss accounting on fallback.
+    pub fn with_pool(mut self, pool: Arc<dyn BundleSource>) -> Self {
         self.pool = Some(pool);
         self
     }

@@ -1,0 +1,551 @@
+//! Cross-machine bundle distribution: the standalone dealer service
+//! (`secformer dealer-serve`) and the [`RemotePool`] client that
+//! prefetches its bundles into a coordinator.
+//!
+//! Topology (the PUMA-style deployment the paper assumes):
+//!
+//! ```text
+//!   dealer machine                        coordinator machine(s)
+//!   ┌──────────────────────┐   TCP       ┌──────────────────────┐
+//!   │ planner → PoolSet    │  frames     │ RemotePool (client)  │
+//!   │  (per-kind TuplePool)│ ──────────▶ │  per-kind prefetch   │
+//!   │ dealer-serve accept  │ ◀────────── │  queues → engine     │
+//!   └──────────────────────┘  PULLs      └──────────────────────┘
+//! ```
+//!
+//! Protocol (frames from [`crate::offline::wire`]): the client opens
+//! with `HELLO` carrying a [`manifest_fingerprint`] per input kind it
+//! intends to pull; the dealer verifies each against its own plans and
+//! answers `HELLO_OK` (or `ERR` + close on any mismatch — a client must
+//! never consume bundles planned for a different model). After the
+//! handshake the client keeps a fixed credit of outstanding `PULL`s per
+//! kind: one issued for the initial depth, then one replacement per
+//! consumed bundle, so the dealer's send rate is consumer-clocked and
+//! the socket applies natural backpressure. Every `PULL` is answered by
+//! exactly `count` `BUNDLE` frames (or `ERR` when the dealer's pools
+//! are exhausted/stopped).
+//!
+//! Loss of the dealer mid-session is non-fatal: the client marks itself
+//! dead, drains its local queues, and further pops return `None` — the
+//! engine then falls back to synchronized seeded generation (correct
+//! results, no prefetch win), the same degradation contract as every
+//! other [`BundleSource`].
+
+use crate::nn::config::ModelConfig;
+use crate::offline::planner::{plan_demand, PlanInput};
+use crate::offline::pool::{PoolSnapshot, SessionBundle};
+use crate::offline::source::{BundleSource, PoolSet};
+use crate::offline::wire::{
+    decode_bundle, decode_kind, encode_bundle, encode_kind, manifest_fingerprint, msg,
+    read_frame, write_frame,
+};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+// ---------------------------------------------------------------------
+// Dealer side
+// ---------------------------------------------------------------------
+
+/// Serve bundles from `pools` to any number of coordinators, forever
+/// (one thread per connection). This is the body of
+/// `secformer dealer-serve`.
+pub fn serve_dealer(bind: &str, pools: Arc<PoolSet>) -> Result<()> {
+    let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
+    eprintln!("secformer dealer listening on {bind}");
+    dealer_accept_loop(listener, pools);
+    Ok(())
+}
+
+/// Accept loop over an already-bound listener. Exposed so tests and the
+/// distribution benchmark can serve on an ephemeral port; returns only
+/// if the listener errors.
+pub fn dealer_accept_loop(listener: TcpListener, pools: Arc<PoolSet>) {
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let pools = pools.clone();
+                std::thread::spawn(move || {
+                    let peer = s.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+                    if let Err(e) = handle_dealer_conn(s, &pools) {
+                        eprintln!("dealer: connection {peer}: {e}");
+                    }
+                });
+            }
+            Err(e) => {
+                eprintln!("dealer: accept failed: {e}");
+                return;
+            }
+        }
+    }
+}
+
+/// Spawn the accept loop on a background thread; returns the bound
+/// address. The thread runs until the process exits (or the listener
+/// errors) — callers that want a bounded lifetime bound the pools
+/// instead (`PoolConfig::max_bundles`), after which every further pull
+/// is answered with `ERR`.
+pub fn spawn_dealer(pools: Arc<PoolSet>) -> Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("dealer-accept".to_string())
+        .spawn(move || dealer_accept_loop(listener, pools))
+        .expect("spawn dealer accept loop");
+    Ok(addr)
+}
+
+fn send_err(stream: &mut TcpStream, why: &str) {
+    let _ = write_frame(stream, msg::ERR, why.as_bytes());
+}
+
+fn handle_dealer_conn(mut stream: TcpStream, pools: &PoolSet) -> Result<()> {
+    stream.set_nodelay(true)?;
+    // Handshake: HELLO carries (kind, fingerprint) pairs.
+    let (ty, payload) = read_frame(&mut stream).map_err(|e| anyhow!("handshake: {e}"))?;
+    if ty != msg::HELLO {
+        send_err(&mut stream, "expected HELLO");
+        bail!("client opened with message type {ty}");
+    }
+    if payload.is_empty() {
+        send_err(&mut stream, "empty HELLO");
+        bail!("empty HELLO");
+    }
+    let n = payload[0] as usize;
+    if payload.len() != 1 + n * 33 {
+        send_err(&mut stream, "malformed HELLO");
+        bail!("malformed HELLO ({} bytes for {n} kinds)", payload.len());
+    }
+    // Only kinds whose fingerprints were verified here may be pulled
+    // later — the handshake guarantee is per kind.
+    let mut verified: Vec<PlanInput> = Vec::with_capacity(n);
+    for i in 0..n {
+        let off = 1 + i * 33;
+        let kind = match decode_kind(payload[off]) {
+            Ok(k) => k,
+            Err(e) => {
+                send_err(&mut stream, "unknown input kind");
+                return Err(e);
+            }
+        };
+        let theirs = &payload[off + 1..off + 33];
+        match pools.manifest_for(kind) {
+            Some(m) if manifest_fingerprint(m)[..] == *theirs => verified.push(kind),
+            Some(_) => {
+                send_err(&mut stream, &format!("manifest mismatch for {kind:?}"));
+                bail!("client manifest mismatch for {kind:?}");
+            }
+            None => {
+                send_err(&mut stream, &format!("kind {kind:?} not planned on this dealer"));
+                bail!("client requested unplanned kind {kind:?}");
+            }
+        }
+    }
+    write_frame(&mut stream, msg::HELLO_OK, b"secformer-dealer/1")?;
+
+    // Credit loop: every PULL is answered by exactly `count` bundles.
+    loop {
+        let (ty, payload) = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // client went away
+        };
+        match ty {
+            msg::PULL => {
+                if payload.len() != 5 {
+                    send_err(&mut stream, "malformed PULL");
+                    bail!("malformed PULL");
+                }
+                let kind = decode_kind(payload[0])?;
+                if !verified.contains(&kind) {
+                    send_err(&mut stream, &format!("kind {kind:?} not in handshake"));
+                    bail!("client pulled unverified kind {kind:?}");
+                }
+                let count = u32::from_le_bytes(payload[1..5].try_into().unwrap());
+                for _ in 0..count {
+                    // Arrival signal first so adaptive pools size to the
+                    // pull rate, then a (possibly blocking) pop.
+                    pools.note_arrival(kind);
+                    match pools.pop(kind) {
+                        Some(b) => write_frame(&mut stream, msg::BUNDLE, &encode_bundle(&b))?,
+                        None => {
+                            send_err(&mut stream, "pool exhausted");
+                            return Ok(());
+                        }
+                    }
+                }
+            }
+            msg::ERR => return Ok(()), // client-side goodbye
+            other => {
+                send_err(&mut stream, "unexpected message");
+                bail!("unexpected message type {other} after handshake");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client side
+// ---------------------------------------------------------------------
+
+/// Client prefetch sizing.
+#[derive(Clone, Debug)]
+pub struct RemotePoolConfig {
+    /// Bundles to keep prefetched locally, per input kind (also the
+    /// standing PULL credit).
+    pub depth: usize,
+    /// Input kinds to handshake for and prefetch.
+    pub kinds: Vec<PlanInput>,
+}
+
+impl Default for RemotePoolConfig {
+    fn default() -> Self {
+        RemotePoolConfig { depth: 4, kinds: vec![PlanInput::Tokens, PlanInput::Hidden] }
+    }
+}
+
+struct RemoteState {
+    hidden: VecDeque<SessionBundle>,
+    tokens: VecDeque<SessionBundle>,
+    /// The dealer link failed or was closed; queues drain, then pops
+    /// return `None`.
+    dead: bool,
+}
+
+impl RemoteState {
+    fn queue(&mut self, kind: PlanInput) -> &mut VecDeque<SessionBundle> {
+        match kind {
+            PlanInput::Hidden => &mut self.hidden,
+            PlanInput::Tokens => &mut self.tokens,
+        }
+    }
+}
+
+struct RemoteShared {
+    state: Mutex<RemoteState>,
+    cv: Condvar,
+    /// Write half for PULL frames (reads run on the prefetch thread).
+    writer: Mutex<TcpStream>,
+    stopping: AtomicBool,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    consumed: AtomicU64,
+    received: AtomicU64,
+    offline_bytes: AtomicU64,
+}
+
+impl RemoteShared {
+    fn mark_dead(&self) {
+        self.state.lock().unwrap().dead = true;
+        self.cv.notify_all();
+    }
+
+    fn send_pull(&self, kind: PlanInput, count: u32) {
+        let mut payload = [0u8; 5];
+        payload[0] = encode_kind(kind);
+        payload[1..5].copy_from_slice(&count.to_le_bytes());
+        let mut w = self.writer.lock().unwrap();
+        if write_frame(&mut *w, msg::PULL, &payload).is_err() {
+            drop(w);
+            self.mark_dead();
+        }
+    }
+}
+
+/// A [`BundleSource`] fed by a remote `dealer-serve` process: bundles
+/// are prefetched over TCP into per-kind local queues ahead of demand,
+/// so the online phase runs with zero dealer round-trips exactly as the
+/// in-process pool does.
+pub struct RemotePool {
+    shared: Arc<RemoteShared>,
+    cfg: RemotePoolConfig,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl RemotePool {
+    /// Connect to a dealer, verify manifests for every kind in
+    /// `rcfg.kinds` (planned locally from `cfg` — planning is
+    /// deterministic, so client and dealer agree iff their model
+    /// configurations agree), and start prefetching `rcfg.depth`
+    /// bundles per kind.
+    pub fn connect(
+        addr: &str,
+        cfg: &ModelConfig,
+        rcfg: RemotePoolConfig,
+    ) -> Result<Arc<RemotePool>> {
+        let mut stream =
+            TcpStream::connect(addr).with_context(|| format!("connect to dealer {addr}"))?;
+        stream.set_nodelay(true)?;
+
+        let mut hello = vec![rcfg.kinds.len() as u8];
+        for &kind in &rcfg.kinds {
+            hello.push(encode_kind(kind));
+            hello.extend_from_slice(&manifest_fingerprint(&plan_demand(cfg, kind)));
+        }
+        write_frame(&mut stream, msg::HELLO, &hello)?;
+        match read_frame(&mut stream).map_err(|e| anyhow!("dealer handshake: {e}"))? {
+            (t, _) if t == msg::HELLO_OK => {}
+            (t, p) if t == msg::ERR => {
+                bail!("dealer rejected handshake: {}", String::from_utf8_lossy(&p))
+            }
+            (t, _) => bail!("unexpected handshake reply type {t}"),
+        }
+
+        let reader_stream = stream.try_clone()?;
+        let shared = Arc::new(RemoteShared {
+            state: Mutex::new(RemoteState {
+                hidden: VecDeque::new(),
+                tokens: VecDeque::new(),
+                dead: false,
+            }),
+            cv: Condvar::new(),
+            writer: Mutex::new(stream),
+            stopping: AtomicBool::new(false),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            consumed: AtomicU64::new(0),
+            received: AtomicU64::new(0),
+            offline_bytes: AtomicU64::new(0),
+        });
+
+        // Standing credit: depth outstanding PULLs per kind; one
+        // replacement is issued per consumed bundle in `pop`.
+        for &kind in &rcfg.kinds {
+            shared.send_pull(kind, rcfg.depth.max(1) as u32);
+        }
+
+        let sh = shared.clone();
+        let reader = std::thread::Builder::new()
+            .name("remote-pool-reader".to_string())
+            .spawn(move || reader_loop(sh, reader_stream))
+            .expect("spawn remote pool reader");
+
+        Ok(Arc::new(RemotePool { shared, cfg: rcfg, reader: Mutex::new(Some(reader)) }))
+    }
+
+    /// Bundles currently prefetched locally (both kinds).
+    pub fn local_depth(&self) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        st.hidden.len() + st.tokens.len()
+    }
+}
+
+fn reader_loop(shared: Arc<RemoteShared>, mut stream: TcpStream) {
+    loop {
+        if shared.stopping.load(Ordering::Relaxed) {
+            return;
+        }
+        match read_frame(&mut stream) {
+            Ok((t, payload)) if t == msg::BUNDLE => match decode_bundle(&payload) {
+                Ok(b) => {
+                    shared.received.fetch_add(1, Ordering::Relaxed);
+                    shared
+                        .offline_bytes
+                        .fetch_add(b.words_per_party * 8, Ordering::Relaxed);
+                    let mut st = shared.state.lock().unwrap();
+                    st.queue(b.input).push_back(b);
+                    drop(st);
+                    shared.cv.notify_all();
+                }
+                Err(e) => {
+                    eprintln!("remote pool: undecodable bundle ({e}); degrading");
+                    shared.mark_dead();
+                    return;
+                }
+            },
+            Ok((t, payload)) if t == msg::ERR => {
+                eprintln!(
+                    "remote pool: dealer error: {}; degrading to seeded fallback",
+                    String::from_utf8_lossy(&payload)
+                );
+                shared.mark_dead();
+                return;
+            }
+            Ok((t, _)) => {
+                eprintln!("remote pool: unexpected frame type {t}; degrading");
+                shared.mark_dead();
+                return;
+            }
+            Err(_) => {
+                // Disconnect (or local shutdown during stop()).
+                shared.mark_dead();
+                return;
+            }
+        }
+    }
+}
+
+impl BundleSource for RemotePool {
+    fn pop(&self, kind: PlanInput) -> Option<SessionBundle> {
+        if !self.cfg.kinds.contains(&kind) {
+            self.shared.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        if st.queue(kind).front().is_some() {
+            self.shared.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.shared.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        loop {
+            if let Some(b) = st.queue(kind).pop_front() {
+                drop(st);
+                self.shared.consumed.fetch_add(1, Ordering::Relaxed);
+                // Replace the spent credit so the dealer tops us back up.
+                self.shared.send_pull(kind, 1);
+                return Some(b);
+            }
+            if st.dead || self.shared.stopping.load(Ordering::Relaxed) {
+                return None;
+            }
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+
+    fn try_pop(&self, kind: PlanInput) -> Option<SessionBundle> {
+        let mut st = self.shared.state.lock().unwrap();
+        let b = st.queue(kind).pop_front()?;
+        drop(st);
+        // Internal transfer: replace the credit but leave consumer
+        // accounting (consumed/hits) to the stage that hands it out.
+        self.shared.send_pull(kind, 1);
+        Some(b)
+    }
+
+    fn note_fallback(&self) {
+        self.shared.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> PoolSnapshot {
+        PoolSnapshot {
+            depth: self.local_depth(),
+            produced: self.shared.received.load(Ordering::Relaxed),
+            consumed: self.shared.consumed.load(Ordering::Relaxed),
+            hits: self.shared.hits.load(Ordering::Relaxed),
+            misses: self.shared.misses.load(Ordering::Relaxed),
+            offline_bytes: self.shared.offline_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    fn warm(&self, n: usize) {
+        // Block until `n` bundles (clamped to the prefetch credit) have
+        // landed locally, counting both kinds — startup smoothing only.
+        let want = n.min(self.cfg.depth.max(1));
+        let mut st = self.shared.state.lock().unwrap();
+        while st.tokens.len() + st.hidden.len() < want {
+            if st.dead || self.shared.stopping.load(Ordering::Relaxed) {
+                return;
+            }
+            let (guard, _) = self
+                .shared
+                .cv
+                .wait_timeout(st, std::time::Duration::from_millis(50))
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    fn stop(&self) {
+        self.shared.stopping.store(true, Ordering::Relaxed);
+        // Unblock the reader (and tell the dealer we are done).
+        {
+            let w = self.shared.writer.lock().unwrap();
+            let _ = write_frame(&mut &*w, msg::ERR, b"client closing");
+            let _ = w.shutdown(Shutdown::Both);
+        }
+        self.shared.mark_dead();
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RemotePool {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config::Framework;
+    use crate::offline::pool::PoolConfig;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::tiny(8, Framework::SecFormer)
+    }
+
+    fn start_dealer(prefix: &str, max: u64) -> (std::net::SocketAddr, Arc<PoolSet>) {
+        let pools = PoolSet::start(
+            &tiny(),
+            prefix,
+            PoolConfig {
+                target_depth: max as usize,
+                producers: 1,
+                max_bundles: Some(max),
+                ..PoolConfig::default()
+            },
+            true,
+        );
+        let addr = spawn_dealer(pools.clone()).expect("spawn dealer");
+        (addr, pools)
+    }
+
+    #[test]
+    fn remote_pool_prefetches_and_matches_dealer_generation() {
+        let (addr, dealer_pools) = start_dealer("rp-t", 3);
+        let pool = RemotePool::connect(
+            &addr.to_string(),
+            &tiny(),
+            RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens] },
+        )
+        .expect("connect");
+        let b1 = pool.pop(PlanInput::Tokens).expect("bundle 1");
+        let b2 = pool.pop(PlanInput::Tokens).expect("bundle 2");
+        assert_eq!((b1.seq, b2.seq), (1, 2), "in-order delivery");
+        assert_eq!(b1.session, "rp-t-1");
+        assert_eq!(b1.input, PlanInput::Tokens);
+        // Received over TCP == generated by the dealer-side pool streams.
+        let manifest = crate::offline::planner::plan_demand(&tiny(), PlanInput::Tokens);
+        let (p0, p1) = crate::offline::pool::generate_bundle(
+            &mut crate::sharing::provider::FastCrGen::from_session_fast("rp-t-1"),
+            &manifest,
+        );
+        assert_eq!(b1.p0, p0);
+        assert_eq!(b1.p1, p1);
+        let s = pool.snapshot();
+        assert!(s.offline_bytes > 0);
+        pool.stop();
+        dealer_pools.stop();
+    }
+
+    #[test]
+    fn exhausted_dealer_degrades_to_none() {
+        let (addr, dealer_pools) = start_dealer("rp-x", 1);
+        let pool = RemotePool::connect(
+            &addr.to_string(),
+            &tiny(),
+            RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens] },
+        )
+        .expect("connect");
+        assert!(pool.pop(PlanInput::Tokens).is_some());
+        // The dealer's bounded pool is spent: the ERR it answers the
+        // outstanding credit with must surface as `None`, not a hang.
+        assert!(pool.pop(PlanInput::Tokens).is_none());
+        pool.stop();
+        dealer_pools.stop();
+    }
+
+    #[test]
+    fn mismatched_model_is_rejected_at_handshake() {
+        let (addr, dealer_pools) = start_dealer("rp-m", 2);
+        let mut other = tiny();
+        other.fused_attention = false; // different plan → different print
+        let err = RemotePool::connect(&addr.to_string(), &other, RemotePoolConfig::default())
+            .expect_err("handshake must fail");
+        assert!(err.to_string().contains("rejected"), "{err}");
+        dealer_pools.stop();
+    }
+}

@@ -1,0 +1,225 @@
+//! [`BundleSource`] — the engine-facing abstraction over *where* session
+//! bundles come from — and [`PoolSet`], the per-input-kind pool cache.
+//!
+//! PR 2 wired the engine directly to one in-process [`TuplePool`]. The
+//! distribution subsystem generalizes that to a trait with four
+//! implementations:
+//!
+//! * [`TuplePool`] — in-process background producers (the PR 2 path);
+//! * [`PoolSet`] — one pool per [`PlanInput`] kind, so mixed
+//!   hidden/token request streams are all served from plan-exact bundles
+//!   instead of falling back to seeded generation mid-session;
+//! * [`crate::offline::remote::RemotePool`] — bundles prefetched from a
+//!   standalone `dealer-serve` process over TCP;
+//! * [`crate::offline::spool::SpooledSource`] — a disk-backed spool
+//!   layered over any of the above, so a restarted coordinator
+//!   warm-starts from persisted bundles.
+//!
+//! Every implementation must degrade the same way: a `pop` that returns
+//! `None` sends the session to synchronized seeded generation (results
+//! stay correct; only the prefetch win is lost).
+
+use crate::offline::planner::PlanInput;
+use crate::offline::pool::{PoolConfig, PoolSnapshot, SessionBundle, TuplePool};
+use crate::nn::config::ModelConfig;
+use std::sync::Arc;
+
+/// A supplier of pregenerated per-session tuple bundles.
+///
+/// Object-safe so the engine and coordinator can hold
+/// `Arc<dyn BundleSource>` and swap in-process, remote and spooled
+/// provisioning without code changes.
+pub trait BundleSource: Send + Sync {
+    /// Pop the next bundle for `kind`, blocking until one is available.
+    /// `None` means this source cannot serve the kind (stopped, exhausted
+    /// or never planned) — the caller falls back to seeded generation.
+    fn pop(&self, kind: PlanInput) -> Option<SessionBundle>;
+
+    /// Non-blocking pop used by internal pipeline stages (the spooler).
+    /// Does NOT touch hit/miss/consumed accounting: transfers between
+    /// stages are not consumer-visible events — the stage that finally
+    /// hands the bundle to a consumer reports it.
+    fn try_pop(&self, kind: PlanInput) -> Option<SessionBundle>;
+
+    /// Signal that a request of `kind` arrived (drives adaptive depth).
+    fn note_arrival(&self, _kind: PlanInput) {}
+
+    /// Record an in-session fallback (demand diverged from plan) as a
+    /// pool miss.
+    fn note_fallback(&self);
+
+    /// Point-in-time telemetry, aggregated across the source's pools.
+    fn snapshot(&self) -> PoolSnapshot;
+
+    /// Block until at least `n` bundles are ready per planned kind
+    /// (clamped to each pool's depth/production bounds).
+    fn warm(&self, _n: usize) {}
+
+    /// Stop background production/prefetch and unblock waiting
+    /// consumers (which then receive `None`). Idempotent.
+    fn stop(&self);
+}
+
+/// One [`TuplePool`] per input kind, planned eagerly at startup.
+///
+/// This closes the PR 2 manifest-cache gap: a coordinator that planned
+/// only token demand served hidden-state requests by mid-session seeded
+/// fallback. With a `PoolSet`, each kind's manifest is planned once and
+/// pops route by kind, so mixed-kind request streams keep a 1.0 hit
+/// rate (asserted by `tests/distribution.rs`).
+///
+/// The token pool keeps the bare `prefix` as its session prefix — token
+/// streams are therefore bundle-for-bundle identical to the PR 2
+/// single-pool path; the hidden pool derives sessions from
+/// `{prefix}/hidden`.
+pub struct PoolSet {
+    tokens: Arc<TuplePool>,
+    hidden: Option<Arc<TuplePool>>,
+}
+
+impl PoolSet {
+    /// Plan demand for `cfg` and start one pool per kind (hidden only
+    /// when `plan_hidden`; a `PoolSet` without a hidden pool answers
+    /// hidden pops with `None` → seeded fallback, exactly the PR 2
+    /// behaviour).
+    pub fn start(
+        cfg: &ModelConfig,
+        prefix: &str,
+        pool_cfg: PoolConfig,
+        plan_hidden: bool,
+    ) -> Arc<PoolSet> {
+        let tokens = TuplePool::start(
+            crate::offline::planner::plan_demand(cfg, PlanInput::Tokens),
+            prefix,
+            pool_cfg,
+        );
+        let hidden = plan_hidden.then(|| {
+            TuplePool::start(
+                crate::offline::planner::plan_demand(cfg, PlanInput::Hidden),
+                &format!("{prefix}/hidden"),
+                pool_cfg,
+            )
+        });
+        Arc::new(PoolSet { tokens, hidden })
+    }
+
+    /// The pool backing `kind`, if planned.
+    pub fn pool(&self, kind: PlanInput) -> Option<&Arc<TuplePool>> {
+        match kind {
+            PlanInput::Tokens => Some(&self.tokens),
+            PlanInput::Hidden => self.hidden.as_ref(),
+        }
+    }
+
+    /// The manifest bundles of `kind` satisfy, if planned.
+    pub fn manifest_for(
+        &self,
+        kind: PlanInput,
+    ) -> Option<&crate::offline::planner::TupleManifest> {
+        self.pool(kind).map(|p| p.manifest())
+    }
+}
+
+impl BundleSource for PoolSet {
+    fn pop(&self, kind: PlanInput) -> Option<SessionBundle> {
+        match self.pool(kind) {
+            Some(p) => BundleSource::pop(p.as_ref(), kind),
+            None => {
+                // Unplanned kind: count the degraded session where the
+                // token pool's consumers will see it.
+                self.tokens.note_fallback();
+                None
+            }
+        }
+    }
+
+    fn try_pop(&self, kind: PlanInput) -> Option<SessionBundle> {
+        self.pool(kind).and_then(|p| p.try_pop_bundle(kind))
+    }
+
+    fn note_arrival(&self, kind: PlanInput) {
+        if let Some(p) = self.pool(kind) {
+            p.note_arrival();
+        }
+    }
+
+    fn note_fallback(&self) {
+        self.tokens.note_fallback();
+    }
+
+    fn snapshot(&self) -> PoolSnapshot {
+        let mut s = self.tokens.snapshot();
+        if let Some(h) = &self.hidden {
+            let hs = h.snapshot();
+            s.depth += hs.depth;
+            s.produced += hs.produced;
+            s.consumed += hs.consumed;
+            s.hits += hs.hits;
+            s.misses += hs.misses;
+            s.offline_bytes += hs.offline_bytes;
+        }
+        s
+    }
+
+    fn warm(&self, n: usize) {
+        self.tokens.warm(n);
+        if let Some(h) = &self.hidden {
+            h.warm(n);
+        }
+    }
+
+    fn stop(&self) {
+        self.tokens.stop();
+        if let Some(h) = &self.hidden {
+            h.stop();
+        }
+    }
+}
+
+impl Drop for PoolSet {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config::Framework;
+
+    #[test]
+    fn pool_set_routes_by_kind_and_merges_telemetry() {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let set = PoolSet::start(
+            &cfg,
+            "ps-t",
+            PoolConfig { target_depth: 1, producers: 1, ..PoolConfig::default() },
+            true,
+        );
+        set.warm(1);
+        let t = set.pop(PlanInput::Tokens).expect("token bundle");
+        assert_eq!(t.input, PlanInput::Tokens);
+        assert_eq!(t.session, "ps-t-1", "token pool keeps the bare prefix");
+        let h = set.pop(PlanInput::Hidden).expect("hidden bundle");
+        assert_eq!(h.input, PlanInput::Hidden);
+        assert_eq!(h.session, "ps-t/hidden-1");
+        let s = set.snapshot();
+        assert_eq!(s.consumed, 2);
+        assert_eq!(s.misses, 0, "matched kinds must not count misses");
+        set.stop();
+    }
+
+    #[test]
+    fn pool_set_without_hidden_plan_degrades_to_none() {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let set = PoolSet::start(
+            &cfg,
+            "ps-nh",
+            PoolConfig { target_depth: 1, producers: 1, ..PoolConfig::default() },
+            false,
+        );
+        assert!(set.pop(PlanInput::Hidden).is_none());
+        assert!(set.snapshot().misses >= 1, "unplanned kind counts as a miss");
+        set.stop();
+    }
+}

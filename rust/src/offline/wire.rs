@@ -1,0 +1,529 @@
+//! Bundle wire format: framed, versioned, checksummed serialization of
+//! [`SessionBundle`]s and the dealer handshake/control messages.
+//!
+//! One format serves both distribution surfaces:
+//!
+//! * the `dealer-serve` TCP protocol ([`crate::offline::remote`]), and
+//! * the append-only disk spool ([`crate::offline::spool`]).
+//!
+//! ## Frame layout
+//!
+//! Every message is one frame (all integers little-endian):
+//!
+//! ```text
+//! ┌──────────┬───────────┬────────┬──────────┬───────────┬─────────┬───────────────┐
+//! │ magic u32│ version u16│ type u8│ flags u8 │ len u64   │ payload │ checksum u64  │
+//! │ "SBW1"   │ WIRE_VERSION│ msg::*│ 0        │ ≤ 1 GiB   │ len B   │ fnv1a64(pl)   │
+//! └──────────┴───────────┴────────┴──────────┴───────────┴─────────┴───────────────┘
+//! ```
+//!
+//! A reader rejects a frame whose magic, version or length is wrong
+//! ([`FrameError::Corrupt`]) and distinguishes a frame cut off mid-write
+//! ([`FrameError::Truncated`], the normal crash tail of a spool file)
+//! from a clean end of stream ([`FrameError::Eof`]). The checksum guards
+//! payload integrity — transport security (TLS/authenticated channels to
+//! the dealer) is deployment-level and out of scope here.
+//!
+//! ## Shape-check rules
+//!
+//! Deserialization validates *structure* (lengths, tags, UTF-8); it does
+//! NOT re-derive tuple correlations. Semantic safety comes from two
+//! later checks: the handshake compares [`manifest_fingerprint`]s so a
+//! dealer never feeds bundles from a different model plan, and every
+//! in-session pop is shape-checked by
+//! [`crate::offline::provider::PooledProvider`] with synchronized seeded
+//! fallback on any divergence.
+
+use crate::offline::planner::{PlanInput, TupleManifest, TupleReq};
+use crate::offline::pool::{SessionBundle, Tuple};
+use crate::sharing::provider::{BitPair, MatmulTriple, MulTriple, SinTuple, SquarePair};
+use anyhow::{bail, Result};
+use sha2::{Digest, Sha256};
+use std::io::{Read, Write};
+
+/// Wire protocol version; bumped on any incompatible layout change.
+pub const WIRE_VERSION: u16 = 1;
+/// Frame magic: `b"SBW1"` little-endian.
+pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"SBW1");
+/// Upper bound on a frame payload; larger lengths are treated as
+/// corruption (a bundle at BERT-large scale is far below this).
+pub const MAX_FRAME_LEN: u64 = 1 << 30;
+
+/// Message-type tags carried in the frame header.
+pub mod msg {
+    /// Client → dealer: protocol hello + per-kind manifest fingerprints.
+    pub const HELLO: u8 = 1;
+    /// Dealer → client: handshake accepted (payload: dealer info string).
+    pub const HELLO_OK: u8 = 2;
+    /// Client → dealer: request `count` bundles of `kind`.
+    pub const PULL: u8 = 3;
+    /// Dealer → client: one serialized session bundle.
+    pub const BUNDLE: u8 = 4;
+    /// Either direction: fatal error (payload: UTF-8 message), then close.
+    pub const ERR: u8 = 5;
+    /// Spool only: tombstone marking a bundle (by session label) consumed.
+    pub const CONSUMED: u8 = 6;
+}
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Clean end of stream exactly on a frame boundary.
+    Eof,
+    /// The stream ended inside a frame — the normal tail of a spool file
+    /// whose writer was killed mid-append.
+    Truncated,
+    /// Structurally invalid data: bad magic/version, oversized length or
+    /// checksum mismatch. A spool treats this as file-level poison.
+    Corrupt(String),
+    /// An underlying I/O error other than end-of-stream.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Eof => write!(f, "end of stream"),
+            FrameError::Truncated => write!(f, "frame truncated mid-write"),
+            FrameError::Corrupt(m) => write!(f, "corrupt frame: {m}"),
+            FrameError::Io(e) => write!(f, "frame i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// FNV-1a 64-bit — the frame payload checksum. Dependency-free and
+/// plenty for crash/corruption detection (not an integrity MAC).
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Write one frame (header + payload + checksum) as a single `write_all`.
+pub fn write_frame<W: Write>(w: &mut W, msg_type: u8, payload: &[u8]) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(24 + payload.len());
+    buf.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    buf.push(msg_type);
+    buf.push(0); // flags (reserved)
+    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    w.write_all(&buf)
+}
+
+/// Read exactly `buf.len()` bytes. Distinguishes "no bytes at all"
+/// (`Eof`, but only when `at_start`) from a mid-frame cut (`Truncated`).
+fn read_exact_or(r: &mut impl Read, buf: &mut [u8], at_start: bool) -> std::result::Result<(), FrameError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(if at_start && got == 0 {
+                    FrameError::Eof
+                } else {
+                    FrameError::Truncated
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read and validate one frame; returns `(msg_type, payload)`.
+pub fn read_frame<R: Read>(r: &mut R) -> std::result::Result<(u8, Vec<u8>), FrameError> {
+    let mut header = [0u8; 16];
+    read_exact_or(r, &mut header, true)?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        return Err(FrameError::Corrupt(format!("bad magic {magic:#x}")));
+    }
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    if version != WIRE_VERSION {
+        return Err(FrameError::Corrupt(format!("unsupported version {version}")));
+    }
+    let msg_type = header[6];
+    let len = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    if len > MAX_FRAME_LEN {
+        return Err(FrameError::Corrupt(format!("frame length {len} exceeds cap")));
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_exact_or(r, &mut payload, false)?;
+    let mut ck = [0u8; 8];
+    read_exact_or(r, &mut ck, false)?;
+    if u64::from_le_bytes(ck) != fnv1a64(&payload) {
+        return Err(FrameError::Corrupt("checksum mismatch".to_string()));
+    }
+    Ok((msg_type, payload))
+}
+
+// ---------------------------------------------------------------------
+// Payload encoding primitives
+// ---------------------------------------------------------------------
+
+fn put_u64s(buf: &mut Vec<u8>, v: &[u64]) {
+    buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("payload underrun at byte {} (+{n})", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.u64()?;
+        if n > MAX_FRAME_LEN / 8 {
+            bail!("vector length {n} exceeds frame cap");
+        }
+        let raw = self.take(n as usize * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes after payload", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+fn kind_tag(kind: PlanInput) -> u8 {
+    match kind {
+        PlanInput::Hidden => 0,
+        PlanInput::Tokens => 1,
+    }
+}
+
+fn kind_of(tag: u8) -> Result<PlanInput> {
+    match tag {
+        0 => Ok(PlanInput::Hidden),
+        1 => Ok(PlanInput::Tokens),
+        t => bail!("unknown input-kind tag {t}"),
+    }
+}
+
+/// Encode a [`PlanInput`] as its on-wire tag (also used by handshakes).
+pub fn encode_kind(kind: PlanInput) -> u8 {
+    kind_tag(kind)
+}
+
+/// Decode an on-wire input-kind tag.
+pub fn decode_kind(tag: u8) -> Result<PlanInput> {
+    kind_of(tag)
+}
+
+const TAG_MUL: u8 = 1;
+const TAG_SQUARE: u8 = 2;
+const TAG_MATMUL: u8 = 3;
+const TAG_AND: u8 = 4;
+const TAG_BIT: u8 = 5;
+const TAG_SIN: u8 = 6;
+
+fn put_tuple(buf: &mut Vec<u8>, t: &Tuple) {
+    match t {
+        Tuple::Mul(m) => {
+            buf.push(TAG_MUL);
+            put_u64s(buf, &m.a);
+            put_u64s(buf, &m.b);
+            put_u64s(buf, &m.c);
+        }
+        Tuple::Square(s) => {
+            buf.push(TAG_SQUARE);
+            put_u64s(buf, &s.a);
+            put_u64s(buf, &s.c);
+        }
+        Tuple::MatmulBatch(ts) => {
+            buf.push(TAG_MATMUL);
+            buf.extend_from_slice(&(ts.len() as u32).to_le_bytes());
+            for t in ts {
+                buf.extend_from_slice(&(t.m as u32).to_le_bytes());
+                buf.extend_from_slice(&(t.k as u32).to_le_bytes());
+                buf.extend_from_slice(&(t.n as u32).to_le_bytes());
+                put_u64s(buf, &t.a);
+                put_u64s(buf, &t.b);
+                put_u64s(buf, &t.c);
+            }
+        }
+        Tuple::And(m) => {
+            buf.push(TAG_AND);
+            put_u64s(buf, &m.a);
+            put_u64s(buf, &m.b);
+            put_u64s(buf, &m.c);
+        }
+        Tuple::Bit(b) => {
+            buf.push(TAG_BIT);
+            put_u64s(buf, &b.arith);
+            put_u64s(buf, &b.boolean);
+        }
+        Tuple::Sin(s) => {
+            buf.push(TAG_SIN);
+            put_u64s(buf, &s.t);
+            put_u64s(buf, &s.sin_t);
+            put_u64s(buf, &s.cos_t);
+        }
+    }
+}
+
+fn get_tuple(c: &mut Cursor<'_>) -> Result<Tuple> {
+    Ok(match c.u8()? {
+        TAG_MUL => Tuple::Mul(MulTriple { a: c.u64s()?, b: c.u64s()?, c: c.u64s()? }),
+        TAG_SQUARE => Tuple::Square(SquarePair { a: c.u64s()?, c: c.u64s()? }),
+        TAG_MATMUL => {
+            let count = c.u32()? as usize;
+            let mut ts = Vec::with_capacity(count.min(4096));
+            for _ in 0..count {
+                let m = c.u32()? as usize;
+                let k = c.u32()? as usize;
+                let n = c.u32()? as usize;
+                let a = c.u64s()?;
+                let b = c.u64s()?;
+                let cc = c.u64s()?;
+                if a.len() != m * k || b.len() != k * n || cc.len() != m * n {
+                    bail!("matmul triple dims disagree with vector lengths");
+                }
+                ts.push(MatmulTriple { a, b, c: cc, m, k, n });
+            }
+            Tuple::MatmulBatch(ts)
+        }
+        TAG_AND => Tuple::And(MulTriple { a: c.u64s()?, b: c.u64s()?, c: c.u64s()? }),
+        TAG_BIT => Tuple::Bit(BitPair { arith: c.u64s()?, boolean: c.u64s()? }),
+        TAG_SIN => Tuple::Sin(SinTuple { t: c.u64s()?, sin_t: c.u64s()?, cos_t: c.u64s()? }),
+        t => bail!("unknown tuple tag {t}"),
+    })
+}
+
+/// Serialize a [`SessionBundle`] into a `msg::BUNDLE` payload.
+pub fn encode_bundle(b: &SessionBundle) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + b.words_per_party as usize * 16);
+    buf.extend_from_slice(&b.seq.to_le_bytes());
+    buf.push(kind_tag(b.input));
+    put_str(&mut buf, &b.session);
+    buf.extend_from_slice(&b.words_per_party.to_le_bytes());
+    for half in [&b.p0, &b.p1] {
+        buf.extend_from_slice(&(half.len() as u32).to_le_bytes());
+        for t in half {
+            put_tuple(&mut buf, t);
+        }
+    }
+    buf
+}
+
+/// Deserialize a `msg::BUNDLE` payload. Rejects trailing bytes, bad
+/// tags, undersized vectors and matmul shape/length disagreements.
+pub fn decode_bundle(payload: &[u8]) -> Result<SessionBundle> {
+    let mut c = Cursor::new(payload);
+    let seq = c.u64()?;
+    let input = kind_of(c.u8()?)?;
+    let session = c.string()?;
+    let words_per_party = c.u64()?;
+    let mut halves: [Vec<Tuple>; 2] = [Vec::new(), Vec::new()];
+    for half in &mut halves {
+        let count = c.u32()? as usize;
+        half.reserve(count.min(65536));
+        for _ in 0..count {
+            half.push(get_tuple(&mut c)?);
+        }
+    }
+    c.done()?;
+    let [p0, p1] = halves;
+    Ok(SessionBundle { seq, input, session, p0, p1, words_per_party })
+}
+
+/// Canonical byte encoding of a manifest (for fingerprinting).
+fn encode_manifest(m: &TupleManifest) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + m.reqs.len() * 8);
+    buf.push(kind_tag(m.input));
+    buf.push(m.fused as u8);
+    buf.extend_from_slice(&(m.reqs.len() as u32).to_le_bytes());
+    for r in &m.reqs {
+        match r {
+            TupleReq::Mul(n) => {
+                buf.push(TAG_MUL);
+                buf.extend_from_slice(&(*n as u64).to_le_bytes());
+            }
+            TupleReq::Square(n) => {
+                buf.push(TAG_SQUARE);
+                buf.extend_from_slice(&(*n as u64).to_le_bytes());
+            }
+            TupleReq::MatmulBatch(shapes) => {
+                buf.push(TAG_MATMUL);
+                buf.extend_from_slice(&(shapes.len() as u32).to_le_bytes());
+                for &(m, k, n) in shapes {
+                    buf.extend_from_slice(&(m as u32).to_le_bytes());
+                    buf.extend_from_slice(&(k as u32).to_le_bytes());
+                    buf.extend_from_slice(&(n as u32).to_le_bytes());
+                }
+            }
+            TupleReq::And(w) => {
+                buf.push(TAG_AND);
+                buf.extend_from_slice(&(*w as u64).to_le_bytes());
+            }
+            TupleReq::Bit(n) => {
+                buf.push(TAG_BIT);
+                buf.extend_from_slice(&(*n as u64).to_le_bytes());
+            }
+            TupleReq::Sin(n) => {
+                buf.push(TAG_SIN);
+                buf.extend_from_slice(&(*n as u64).to_le_bytes());
+            }
+        }
+    }
+    buf
+}
+
+/// SHA-256 over the canonical manifest encoding. The dealer handshake
+/// compares fingerprints so a client never consumes bundles planned for
+/// a different model configuration, input kind or attention path.
+pub fn manifest_fingerprint(m: &TupleManifest) -> [u8; 32] {
+    let d = Sha256::digest(&encode_manifest(m));
+    let mut out = [0u8; 32];
+    out.copy_from_slice(&d);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config::{Framework, ModelConfig};
+    use crate::offline::planner::plan_demand;
+    use crate::offline::pool::generate_bundle;
+    use crate::sharing::provider::CrGen;
+
+    fn sample_bundle(session: &str) -> SessionBundle {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let manifest = plan_demand(&cfg, PlanInput::Hidden);
+        let (p0, p1) = generate_bundle(&mut CrGen::from_session(session), &manifest);
+        SessionBundle {
+            seq: 7,
+            input: manifest.input,
+            session: session.to_string(),
+            words_per_party: manifest.words_per_party(),
+            p0,
+            p1,
+        }
+    }
+
+    #[test]
+    fn bundle_roundtrip_is_bit_exact() {
+        let b = sample_bundle("wire-rt");
+        let decoded = decode_bundle(&encode_bundle(&b)).expect("decode");
+        assert_eq!(decoded, b);
+    }
+
+    #[test]
+    fn frame_roundtrip_over_a_byte_stream() {
+        let b = sample_bundle("wire-frame");
+        let mut stream = Vec::new();
+        write_frame(&mut stream, msg::BUNDLE, &encode_bundle(&b)).unwrap();
+        write_frame(&mut stream, msg::ERR, b"done").unwrap();
+        let mut r = &stream[..];
+        let (t1, p1) = read_frame(&mut r).expect("frame 1");
+        assert_eq!(t1, msg::BUNDLE);
+        assert_eq!(decode_bundle(&p1).unwrap(), b);
+        let (t2, p2) = read_frame(&mut r).expect("frame 2");
+        assert_eq!((t2, p2.as_slice()), (msg::ERR, &b"done"[..]));
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Eof)));
+    }
+
+    #[test]
+    fn truncated_and_corrupt_frames_are_distinguished() {
+        let b = sample_bundle("wire-bad");
+        let mut stream = Vec::new();
+        write_frame(&mut stream, msg::BUNDLE, &encode_bundle(&b)).unwrap();
+
+        // Any strict prefix (even header-only) reads as Truncated.
+        for cut in [stream.len() - 1, stream.len() / 2, 10] {
+            let mut r = &stream[..cut];
+            assert!(
+                matches!(read_frame(&mut r), Err(FrameError::Truncated)),
+                "cut at {cut}"
+            );
+        }
+        // A flipped payload byte fails the checksum → Corrupt.
+        let mut flipped = stream.clone();
+        flipped[40] ^= 0x5A;
+        assert!(matches!(read_frame(&mut &flipped[..]), Err(FrameError::Corrupt(_))));
+        // A wrong magic is Corrupt too.
+        let mut bad_magic = stream.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(matches!(read_frame(&mut &bad_magic[..]), Err(FrameError::Corrupt(_))));
+    }
+
+    #[test]
+    fn property_random_truncations_never_panic() {
+        // Fuzz-lite: decode_bundle on every prefix must error, not panic.
+        let payload = encode_bundle(&sample_bundle("wire-fuzz"));
+        for cut in 0..payload.len().min(256) {
+            assert!(decode_bundle(&payload[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        // And trailing garbage is rejected as well.
+        let mut padded = payload.clone();
+        padded.push(0);
+        assert!(decode_bundle(&padded).is_err());
+    }
+
+    #[test]
+    fn fingerprints_separate_kinds_and_paths() {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let mut unfused = cfg.clone();
+        unfused.fused_attention = false;
+        let a = manifest_fingerprint(&plan_demand(&cfg, PlanInput::Hidden));
+        let b = manifest_fingerprint(&plan_demand(&cfg, PlanInput::Tokens));
+        let c = manifest_fingerprint(&plan_demand(&unfused, PlanInput::Hidden));
+        let a2 = manifest_fingerprint(&plan_demand(&cfg, PlanInput::Hidden));
+        assert_eq!(a, a2, "fingerprint must be deterministic");
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -12,7 +12,7 @@ use crate::core::rng::{Prf, RandStream, Xoshiro};
 use crate::core::tensor::matmul_ring;
 
 /// Beaver multiplication triple shares: `c = a * b` (elementwise, ring).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MulTriple {
     pub a: Vec<u64>,
     pub b: Vec<u64>,
@@ -20,14 +20,14 @@ pub struct MulTriple {
 }
 
 /// Square pair shares: `c = a * a` (elementwise, ring).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SquarePair {
     pub a: Vec<u64>,
     pub c: Vec<u64>,
 }
 
 /// Matrix Beaver triple shares: `C (m×n) = A (m×k) · B (k×n)` in the ring.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MatmulTriple {
     pub a: Vec<u64>,
     pub b: Vec<u64>,
@@ -39,7 +39,7 @@ pub struct MatmulTriple {
 
 /// A random bit `β` shared both arithmetically (`[β]`, scale 1) and boolean
 /// (`⟨β⟩` in the LSB of a word) — consumed by B2A.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct BitPair {
     pub arith: Vec<u64>,
     pub boolean: Vec<u64>,
@@ -48,7 +48,7 @@ pub struct BitPair {
 /// Sine tuple of Zheng et al. (2023b), Algorithm 4: a uniformly random angle
 /// `t` (ring-wrapped turns: `t/2^64` of a full period) shared additively,
 /// plus fixed-point shares of `sin(t)` and `cos(t)`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SinTuple {
     pub t: Vec<u64>,
     pub sin_t: Vec<u64>,

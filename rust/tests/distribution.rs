@@ -1,0 +1,256 @@
+//! Integration tests for the offline distribution subsystem
+//! (dealer-serve + RemotePool + disk spool), pinning the PR's
+//! acceptance criteria:
+//!
+//! 1. serving against a standalone dealer over TCP is **bit-identical**
+//!    to in-process `OfflineMode::Pooled`, with zero online dealer
+//!    round-trips;
+//! 2. a coordinator restarted over a populated spool directory reaches
+//!    pool hit-rate 1.0 **without regenerating** a single bundle;
+//! 3. the degradation contract survives distribution: losing the dealer
+//!    never produces wrong results.
+
+use secformer::coordinator::{BatcherConfig, Coordinator, EngineKind, ServingConfig};
+use secformer::engine::SecureModel;
+use secformer::nn::config::{Framework, ModelConfig};
+use secformer::nn::model::{ref_forward, ModelInput};
+use secformer::nn::weights::random_weights;
+use secformer::offline::planner::{plan_demand, PlanInput};
+use secformer::offline::pool::{PoolConfig, TuplePool};
+use secformer::offline::remote::{spawn_dealer, RemotePool, RemotePoolConfig};
+use secformer::offline::source::{BundleSource, PoolSet};
+use secformer::offline::spool::{SpoolConfig, SpooledSource};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tiny() -> ModelConfig {
+    ModelConfig::tiny(8, Framework::SecFormer)
+}
+
+fn tokens(cfg: &ModelConfig, shift: u32) -> Vec<u32> {
+    (0..cfg.seq as u32).map(|i| (i + shift) % cfg.vocab as u32).collect()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "secformer-dist-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Acceptance: `serve --dealer-addr` against a `dealer-serve` process is
+/// bit-identical to in-process `OfflineMode::Pooled` — same namespace,
+/// same weights, same requests ⇒ exactly equal logits.
+#[test]
+fn remote_coordinator_bit_identical_to_inprocess_pooled() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 41);
+    let n = 2;
+
+    let mut local_cfg = ServingConfig::pooled(1, 4);
+    local_cfg.plan_hidden = false;
+    local_cfg.session_namespace = Some("dist-par".to_string());
+    let local = Coordinator::start_with(
+        cfg.clone(),
+        w.clone(),
+        None,
+        BatcherConfig::default(),
+        local_cfg,
+    )
+    .unwrap();
+
+    // The dealer generates under the SAME pool prefix the in-process
+    // coordinator derives from its namespace, so bundle n carries the
+    // same session label — that is the whole alignment contract.
+    let dealer_pools = PoolSet::start(
+        &cfg,
+        "coord-pool-dist-par",
+        PoolConfig { target_depth: 8, producers: 1, ..PoolConfig::default() },
+        false,
+    );
+    let addr = spawn_dealer(dealer_pools.clone()).expect("spawn dealer");
+    let mut remote_cfg = ServingConfig::pooled(1, 4);
+    remote_cfg.plan_hidden = false;
+    remote_cfg.session_namespace = Some("dist-par".to_string());
+    remote_cfg.dealer_addr = Some(addr.to_string());
+    let remote = Coordinator::start_with(
+        cfg.clone(),
+        w.clone(),
+        None,
+        BatcherConfig::default(),
+        remote_cfg,
+    )
+    .unwrap();
+
+    for i in 0..n {
+        let input = ModelInput::Tokens(tokens(&cfg, i));
+        let a = local.infer_blocking(input.clone(), EngineKind::Secure);
+        let b = remote.infer_blocking(input, EngineKind::Secure);
+        assert_eq!(
+            a.logits, b.logits,
+            "request {i}: remote dealer must be bit-identical to in-process pool"
+        );
+    }
+    let ps = remote.pool_snapshot().expect("remote coordinator has a source");
+    assert_eq!(ps.consumed, n as u64);
+    local.shutdown();
+    remote.shutdown();
+    dealer_pools.stop();
+}
+
+/// Engine-level parity: a RemotePool-backed model matches a local
+/// TuplePool-backed model bit-for-bit AND keeps `offline_msgs == 0` —
+/// zero synchronous dealer round-trips during the online phase.
+#[test]
+fn remote_engine_runs_with_zero_online_dealer_roundtrips() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 43);
+    let input = ModelInput::Tokens(tokens(&cfg, 3));
+
+    let dealer_pools = PoolSet::start(
+        &cfg,
+        "dist-eng",
+        PoolConfig { target_depth: 4, producers: 1, ..PoolConfig::default() },
+        false,
+    );
+    let addr = spawn_dealer(dealer_pools.clone()).expect("spawn dealer");
+    let remote_pool = RemotePool::connect(
+        &addr.to_string(),
+        &cfg,
+        RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens] },
+    )
+    .expect("connect");
+
+    let local_pool = TuplePool::start(
+        plan_demand(&cfg, PlanInput::Tokens),
+        "dist-eng",
+        PoolConfig { target_depth: 4, producers: 1, ..PoolConfig::default() },
+    );
+
+    let mut remote_model = SecureModel::new_pooled(cfg.clone(), &w, remote_pool.clone());
+    remote_model.set_session_label("dist-eng-m");
+    let mut local_model = SecureModel::new_pooled(cfg.clone(), &w, local_pool.clone());
+    local_model.set_session_label("dist-eng-m");
+
+    let r = remote_model.infer(&input);
+    let l = local_model.infer(&input);
+    assert_eq!(r.logits, l.logits, "remote bundles must replay local streams");
+    assert_eq!(r.stats.offline_msgs, 0, "online phase must never consult a dealer");
+    assert!(r.stats.offline_bytes > 0, "prefetched bundle bytes are accounted");
+    assert_eq!(r.stats.total_bytes(), l.stats.total_bytes());
+
+    remote_pool.stop();
+    local_pool.stop();
+    dealer_pools.stop();
+}
+
+/// Acceptance: a coordinator restarted with a populated `--spool-dir`
+/// reaches pool hit-rate 1.0 without regenerating bundles.
+#[test]
+fn spooled_coordinator_restart_full_hit_rate_without_regeneration() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 47);
+    let n: usize = 3;
+    let dir = temp_dir("restart");
+
+    // "First life": populate the spool (bounded generation, all
+    // persisted), then shut everything down — the simulated crash point.
+    {
+        let feeder = PoolSet::start(
+            &cfg,
+            "dist-spool",
+            PoolConfig {
+                target_depth: n,
+                producers: 1,
+                max_bundles: Some(n as u64),
+                ..PoolConfig::default()
+            },
+            false,
+        );
+        let spool = SpooledSource::open(
+            &dir,
+            Some(feeder as Arc<dyn BundleSource>),
+            SpoolConfig { depth: n },
+        )
+        .expect("populate spool");
+        spool.wait_spooled(n);
+        spool.stop();
+    }
+
+    // "Second life": a fresh coordinator over the same directory, with
+    // in-process production bounded to ZERO — disk is the only source.
+    let mut serving = ServingConfig::pooled(1, n);
+    serving.plan_hidden = false;
+    serving.warm_bundles = 0;
+    serving.pool_max_bundles = Some(0);
+    serving.spool_dir = Some(dir.to_string_lossy().into_owned());
+    let coord =
+        Coordinator::start_with(cfg.clone(), w.clone(), None, BatcherConfig::default(), serving)
+            .unwrap();
+    for i in 0..n {
+        let reply = coord
+            .infer_blocking(ModelInput::Tokens(tokens(&cfg, i as u32)), EngineKind::Secure);
+        assert!(reply.logits.iter().all(|v| v.is_finite()));
+        assert_eq!(reply.logits.len(), cfg.num_labels);
+    }
+    let ps = coord.pool_snapshot().expect("spooled coordinator has a source");
+    assert_eq!(ps.produced, 0, "restart must not regenerate a single bundle");
+    assert_eq!(ps.hits, n as u64);
+    assert_eq!(ps.misses, 0);
+    let s = coord.secure_summary();
+    assert!(
+        (s.pool_hit_rate - 1.0).abs() < 1e-9,
+        "hit rate {} after warm restart",
+        s.pool_hit_rate
+    );
+    assert!(s.offline_bytes > 0, "spooled bundles are accounted as offline bytes");
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Degradation: when the dealer's pools are exhausted mid-stream the
+/// coordinator keeps answering — correctly — on the seeded fallback.
+#[test]
+fn dealer_loss_degrades_but_stays_correct() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 53);
+    // The dealer can hand out exactly ONE bundle, then errors out.
+    let dealer_pools = PoolSet::start(
+        &cfg,
+        "dist-loss",
+        PoolConfig {
+            target_depth: 2,
+            producers: 1,
+            max_bundles: Some(1),
+            ..PoolConfig::default()
+        },
+        false,
+    );
+    let addr = spawn_dealer(dealer_pools.clone()).expect("spawn dealer");
+    let remote_pool = RemotePool::connect(
+        &addr.to_string(),
+        &cfg,
+        RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens] },
+    )
+    .expect("connect");
+    let mut model = SecureModel::new_pooled(cfg.clone(), &w, remote_pool.clone());
+
+    let input = ModelInput::Tokens(tokens(&cfg, 5));
+    let expect = ref_forward(&cfg, &w, &input);
+    for round in 0..3 {
+        let r = model.infer(&input);
+        assert_eq!(r.stats.offline_msgs, 0, "round {round}");
+        for i in 0..cfg.num_labels {
+            assert!(
+                (r.logits[i] - expect[i]).abs() < 0.2,
+                "round {round} logit {i}: {} vs {}",
+                r.logits[i],
+                expect[i]
+            );
+        }
+    }
+    remote_pool.stop();
+    dealer_pools.stop();
+}
