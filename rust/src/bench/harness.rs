@@ -779,7 +779,7 @@ pub fn distribution_bench(
         let spool = SpooledSource::open(
             &spool_dir,
             Some(feeder as std::sync::Arc<dyn BundleSource>),
-            SpoolConfig { depth: n },
+            SpoolConfig { depth: n, ..SpoolConfig::default() },
         )
         .expect("populate spool");
         spool.wait_spooled(n);
@@ -838,6 +838,132 @@ pub fn distribution_bench(
     std::fs::write("BENCH_distribution.json", &json).expect("write BENCH_distribution.json");
     println!("  wrote BENCH_distribution.json");
     vec![inproc, remote, cold]
+}
+
+// =====================================================================
+// Two-party runtime — in-process threads vs real-socket party split
+// =====================================================================
+
+/// One two-party topology measurement: measured wall-clock plus the
+/// rounds/bytes-derived projections onto the paper's LAN and a WAN.
+#[derive(Clone, Debug)]
+pub struct TwoPartyMeasurement {
+    pub label: String,
+    /// Mean wall-clock per inference (after one warm-up).
+    pub mean_wall_s: f64,
+    /// Online protocol rounds (topology-invariant).
+    pub rounds: u64,
+    /// Online bytes, both parties (topology-invariant).
+    pub online_bytes: u64,
+    /// Measured compute + simulated network on the paper's LAN.
+    pub lan_s: f64,
+    /// Measured compute + simulated network on a WAN link.
+    pub wan_s: f64,
+}
+
+/// The two-party deployment comparison: the in-process thread engine vs
+/// the SAME inference driven against a `party-serve` host over a real
+/// localhost TCP socket, plus simulated-latency projections (LAN/WAN)
+/// from the counted rounds/bytes. Rounds and volume are asserted
+/// topology-invariant; wall-clock shows what the socket costs. Writes
+/// `BENCH_two_party.json`.
+pub fn two_party_bench(seq: usize, iters: usize) -> Vec<TwoPartyMeasurement> {
+    use crate::nn::weights::share_weights;
+    use crate::party::runtime::{spawn_party_host, PartyHostConfig};
+
+    let cfg = ModelConfig::tiny(seq, Framework::SecFormer);
+    let weights = random_weights(&cfg, 0x2BA7);
+    let iters = iters.max(1);
+    let toks: Vec<u32> = (0..cfg.seq as u32).map(|i| i % cfg.vocab as u32).collect();
+    let input = ModelInput::Tokens(toks);
+    println!("\n=== Two-party runtime: in-process vs localhost TCP vs simulated links ===");
+    println!("  seq {seq}, {iters} inferences per topology (seeded offline mode)");
+
+    let measure = |label: &str, model: &mut SecureModel| -> TwoPartyMeasurement {
+        let _ = model.infer(&input); // warm-up: sockets, threads, page faults
+        let t0 = std::time::Instant::now();
+        let mut last = None;
+        for _ in 0..iters {
+            last = Some(model.infer(&input));
+        }
+        let wall = t0.elapsed().as_secs_f64() / iters as f64;
+        let r = last.expect("at least one iteration");
+        let rounds = r.stats.total_rounds();
+        let bytes = r.stats.total_bytes() * 2;
+        let compute_s: f64 = r.stats.nanos.iter().sum::<u64>() as f64 * 1e-9;
+        TwoPartyMeasurement {
+            label: label.to_string(),
+            mean_wall_s: wall,
+            rounds,
+            online_bytes: bytes,
+            lan_s: compute_s + NetModel::paper_lan().simulated_seconds(rounds, bytes),
+            wan_s: compute_s + NetModel::wan().simulated_seconds(rounds, bytes),
+        }
+    };
+
+    // 1. In-process threads — the simulator baseline.
+    let mut local = SecureModel::new(cfg.clone(), &weights, OfflineMode::Seeded);
+    local.set_session_label("bench-2p");
+    let inproc = measure("in_process", &mut local);
+
+    // 2. The same sessions against a party-serve host over localhost
+    //    TCP (one multiplexed connection). Equal weights + sharing seed
+    //    give matching fingerprints; equal session labels give a
+    //    bit-identical protocol transcript.
+    let mut wrng = Xoshiro::seed_from(0x5EC0);
+    let (_w0, w1) = share_weights(&weights, &mut wrng);
+    let addr = spawn_party_host(
+        cfg.clone(),
+        std::sync::Arc::new(w1),
+        None,
+        PartyHostConfig::default(),
+    )
+    .expect("spawn party host");
+    let mut remote = SecureModel::new(cfg.clone(), &weights, OfflineMode::Seeded);
+    remote.set_session_label("bench-2p");
+    remote
+        .connect_remote_peer(&addr.to_string(), None)
+        .expect("connect to party host");
+    let tcp = measure("remote_tcp_localhost", &mut remote);
+
+    assert_eq!(inproc.rounds, tcp.rounds, "rounds must not depend on topology");
+    assert_eq!(
+        inproc.online_bytes, tcp.online_bytes,
+        "online volume must not depend on topology"
+    );
+
+    for m in [&inproc, &tcp] {
+        println!(
+            "  {:<22} wall/inf {:>10}  rounds {:>5}  comm {:>10}  sim-LAN {:>9}  sim-WAN {:>9}",
+            m.label,
+            fmt_s(m.mean_wall_s),
+            m.rounds,
+            fmt_bytes(m.online_bytes as f64),
+            fmt_s(m.lan_s),
+            fmt_s(m.wan_s),
+        );
+    }
+    println!(
+        "  tcp/in-process wall ratio: {:.2}×  (socket + framing overhead on the online path)",
+        tcp.mean_wall_s / inproc.mean_wall_s.max(1e-9)
+    );
+
+    let json_of = |m: &TwoPartyMeasurement| {
+        format!(
+            "    {{\"label\": \"{}\", \"mean_wall_s\": {:.6}, \"rounds\": {}, \
+             \"online_bytes\": {}, \"simulated_lan_s\": {:.6}, \"simulated_wan_s\": {:.6}}}",
+            m.label, m.mean_wall_s, m.rounds, m.online_bytes, m.lan_s, m.wan_s,
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"two_party_runtime\",\n  \"seq\": {seq},\n  \"iters\": {iters},\n  \
+         \"runs\": [\n{},\n{}\n  ]\n}}\n",
+        json_of(&inproc),
+        json_of(&tcp),
+    );
+    std::fs::write("BENCH_two_party.json", &json).expect("write BENCH_two_party.json");
+    println!("  wrote BENCH_two_party.json");
+    vec![inproc, tcp]
 }
 
 #[cfg(test)]

@@ -13,7 +13,8 @@
 
 use crate::coordinator::metrics::{Metrics, MetricsSummary};
 use crate::core::rng::Xoshiro;
-use crate::engine::{OfflineMode, SecureModel};
+use crate::engine::{OfflineMode, PeerRuntime, SecureModel};
+use crate::party::runtime::RemoteParty;
 use crate::nn::config::ModelConfig;
 use crate::nn::model::ModelInput;
 use crate::nn::weights::{share_weights, WeightMap};
@@ -114,6 +115,19 @@ pub struct ServingConfig {
     /// Pooled mode: persist bundles to (and warm-start from) an
     /// append-only spool in this directory (`serve --spool-dir`).
     pub spool_dir: Option<String>,
+    /// Spool file size cap in bytes (`serve --spool-max-bytes`): when
+    /// the file would grow past this, the spooler compacts (rewrites
+    /// live records) and, if still over, pauses persisting.
+    pub spool_max_bytes: Option<u64>,
+    /// Pre-shared key for the dealer link (`serve --dealer-psk`),
+    /// required when `dealer-serve` runs with `--psk`.
+    pub dealer_psk: Option<String>,
+    /// Run party S1 in a remote `party-serve` process at this address
+    /// (`serve --peer-addr`) instead of as in-process threads. All
+    /// secure workers share one multiplexed connection.
+    pub peer_addr: Option<String>,
+    /// Pre-shared key for the party link (`serve --peer-psk`).
+    pub peer_psk: Option<String>,
     /// Override the per-process session namespace — FOR TESTS AND
     /// REPRODUCIBILITY ONLY. Two coordinators given the same namespace,
     /// weights and request stream produce bit-identical logits, which is
@@ -140,6 +154,10 @@ impl Default for ServingConfig {
             adaptive_depth: false,
             dealer_addr: None,
             spool_dir: None,
+            spool_max_bytes: None,
+            dealer_psk: None,
+            peer_addr: None,
+            peer_psk: None,
             session_namespace: None,
         }
     }
@@ -376,7 +394,11 @@ impl Coordinator {
                         RemotePool::connect(
                             addr,
                             &cfg,
-                            RemotePoolConfig { depth: serving.pool_depth.max(1), kinds },
+                            RemotePoolConfig {
+                                depth: serving.pool_depth.max(1),
+                                kinds,
+                                psk: serving.dealer_psk.clone(),
+                            },
                         )?
                     }
                     None => PoolSet::start(
@@ -397,7 +419,11 @@ impl Coordinator {
                     Some(dir) => SpooledSource::open(
                         std::path::Path::new(dir),
                         Some(base),
-                        SpoolConfig { depth: serving.pool_depth.max(1) },
+                        SpoolConfig {
+                            depth: serving.pool_depth.max(1),
+                            max_bytes: serving.spool_max_bytes,
+                            ..SpoolConfig::default()
+                        },
                     )?,
                     None => base,
                 };
@@ -416,6 +442,25 @@ impl Coordinator {
             (Arc::new(a), Arc::new(b))
         };
 
+        // Distributed deployment: dial the remote party once; every
+        // secure worker multiplexes its sessions over this connection.
+        // A failed dial must stop the already-running pool producers
+        // before propagating (same no-leak rule as worker spawns below).
+        let remote_peer = match &serving.peer_addr {
+            Some(addr) => {
+                match RemoteParty::connect(addr, &cfg, &ws1, serving.peer_psk.as_deref()) {
+                    Ok(rp) => Some(rp),
+                    Err(e) => {
+                        if let Some(p) = &pool {
+                            p.stop();
+                        }
+                        return Err(e);
+                    }
+                }
+            }
+            None => None,
+        };
+
         // Any spawn failure must not leak already-running workers: signal
         // shutdown, join what was spawned and stop the pool before
         // propagating the error.
@@ -430,6 +475,9 @@ impl Coordinator {
                 pool.clone(),
             );
             model.set_session_label(&format!("coord-{instance}-w{i}"));
+            if let Some(rp) = &remote_peer {
+                model.set_peer_runtime(PeerRuntime::Remote(rp.clone()));
+            }
             let sh = shared.clone();
             let ms = metrics_secure.clone();
             let peers = serving.secure_workers.max(1);

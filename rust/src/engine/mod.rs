@@ -15,8 +15,13 @@ use crate::nn::config::ModelConfig;
 use crate::nn::model::{bert_forward, InputShare, ModelInput};
 use crate::nn::weights::{share_weights, ShareMap, WeightMap};
 use crate::offline::planner::PlanInput;
+use crate::offline::pool::Tuple;
 use crate::offline::provider::PooledProvider;
 use crate::offline::source::BundleSource;
+use crate::party::runtime::RemoteParty;
+use crate::party::wire::{
+    SessionStart, INPUT_HIDDEN, INPUT_ONEHOT, MODE_DEALER, MODE_POOLED, MODE_SEEDED,
+};
 use crate::proto::ctx::PartyCtx;
 use crate::sharing::dealer::{DealerServer, Party0Provider, Party1Provider};
 use crate::sharing::provider::FastSeededProvider;
@@ -36,6 +41,19 @@ pub enum OfflineMode {
     /// prefetch queue, or a disk spool): zero dealer round-trips during
     /// the online phase (construct via [`SecureModel::new_pooled`]).
     Pooled,
+}
+
+/// Where computing party S1 runs. The engine's `run_inference` path is
+/// deployment-agnostic: the same input sharing, provisioning and
+/// reconstruction code drives either peer runtime.
+#[derive(Clone)]
+pub enum PeerRuntime {
+    /// S1 runs as a scoped thread in this process, connected over
+    /// in-memory channels (the simulator topology; default).
+    InProcess,
+    /// S1 runs in a separate `party-serve` process, reached over a
+    /// multiplexed TCP session link (see [`crate::party`]).
+    Remote(Arc<RemoteParty>),
 }
 
 /// Result of one secure inference.
@@ -90,6 +108,8 @@ pub struct SecureModel {
     session_label: String,
     /// Pregenerated-bundle source ([`OfflineMode::Pooled`] only).
     pool: Option<Arc<dyn BundleSource>>,
+    /// Where party S1 executes (thread or remote `party-serve`).
+    peer: PeerRuntime,
 }
 
 impl SecureModel {
@@ -152,7 +172,25 @@ impl SecureModel {
             session_counter: 0,
             session_label: format!("secformer-{:x}", std::process::id()),
             pool,
+            peer: PeerRuntime::InProcess,
         }
+    }
+
+    /// Select where party S1 executes. Pass
+    /// [`PeerRuntime::Remote`] with a shared [`RemoteParty`] to drive a
+    /// `party-serve` process (several models may share one connection —
+    /// sessions multiplex).
+    pub fn set_peer_runtime(&mut self, peer: PeerRuntime) {
+        self.peer = peer;
+    }
+
+    /// Convenience for single-model use: dial `addr`, run the PSK +
+    /// fingerprint handshake against this model's configuration and S1
+    /// weight shares, and switch the peer runtime to the connection.
+    pub fn connect_remote_peer(&mut self, addr: &str, psk: Option<&str>) -> anyhow::Result<()> {
+        let rp = RemoteParty::connect(addr, &self.cfg, &self.shares1, psk)?;
+        self.peer = PeerRuntime::Remote(rp);
+        Ok(())
     }
 
     /// Override the session label. Dealer sessions and pool bundles derive
@@ -213,14 +251,13 @@ impl SecureModel {
     pub fn infer(&mut self, input: &ModelInput) -> InferenceResult {
         let (in0, in1) = self.share_input(input);
         let session = format!("{}-{}", self.session_label, self.session_counter);
-        let cfg = self.cfg.clone();
 
         // Pooled mode: draw the session's pregenerated bundle — routed
         // by input kind so a token bundle never reaches a hidden-state
         // session — before the online clock starts. A cold source blocks
         // here until a producer (or remote prefetch) catches up; `None`
         // (stopped/exhausted/unplanned kind) degrades to synchronized
-        // seeded generation inside the party threads — never wrong
+        // seeded generation inside the party halves — never wrong
         // results, only no prefetch win.
         let kind = match input {
             ModelInput::Hidden(_) => PlanInput::Hidden,
@@ -236,12 +273,55 @@ impl SecureModel {
             }
             _ => (None, None, String::new(), 0),
         };
-        let pool_handle = self.pool.clone();
 
-        let (peer0, peer1) = channel_pair();
         let t0 = Instant::now();
+        // The deployment-agnostic dispatch: identical sharing and
+        // provisioning above, identical reconstruction below — only the
+        // transport to (and location of) S1 differs.
+        let (out0, out1, stats) = match &self.peer {
+            PeerRuntime::InProcess => self.run_in_process(
+                in0,
+                in1,
+                &session,
+                bundle0,
+                bundle1,
+                &bundle_session,
+                bundle_words,
+            ),
+            PeerRuntime::Remote(rp) => {
+                let rp = rp.clone();
+                self.run_remote(&rp, in0, in1, &session, bundle0, &bundle_session)
+            }
+        };
 
-        let (out0, out1, stats) = std::thread::scope(|scope| {
+        let wall = t0.elapsed().as_secs_f64();
+        let rec = crate::sharing::reconstruct(&out0, &out1);
+        let logits = crate::core::fixed::decode_vec(&rec);
+        let lan = NetModel::paper_lan();
+        let compute_s: f64 = stats.nanos.iter().sum::<u64>() as f64 * 1e-9;
+        let simulated =
+            compute_s + lan.simulated_seconds(stats.total_rounds(), stats.total_bytes() * 2);
+        InferenceResult { logits, stats, wall_seconds: wall, simulated_lan_seconds: simulated }
+    }
+
+    /// The simulator topology: both parties as scoped threads over
+    /// in-memory channels (plus a dealer thread in dealer mode).
+    fn run_in_process(
+        &self,
+        in0: InputShare,
+        in1: InputShare,
+        session: &str,
+        bundle0: Option<Vec<Tuple>>,
+        bundle1: Option<Vec<Tuple>>,
+        bundle_session: &str,
+        bundle_words: u64,
+    ) -> (Vec<u64>, Vec<u64>, StatsSnapshot) {
+        let cfg = self.cfg.clone();
+        let pool_handle = self.pool.clone();
+        let session = session.to_string();
+        let (peer0, peer1) = channel_pair();
+
+        std::thread::scope(|scope| {
             // Assistant server T (dealer mode only).
             let (dealer_link, dealer_handle) = match self.offline {
                 OfflineMode::Dealer => {
@@ -329,16 +409,86 @@ impl SecureModel {
             merged.offline_bytes = s1.offline_bytes;
             merged.offline_msgs = s1.offline_msgs;
             (o0, o1, merged)
-        });
+        })
+    }
 
-        let wall = t0.elapsed().as_secs_f64();
-        let rec = crate::sharing::reconstruct(&out0, &out1);
-        let logits = crate::core::fixed::decode_vec(&rec);
-        let lan = NetModel::paper_lan();
-        let compute_s: f64 = stats.nanos.iter().sum::<u64>() as f64 * 1e-9;
-        let simulated =
-            compute_s + lan.simulated_seconds(stats.total_rounds(), stats.total_bytes() * 2);
-        InferenceResult { logits, stats, wall_seconds: wall, simulated_lan_seconds: simulated }
+    /// The distributed topology: S0 executes on the calling thread
+    /// against a remote `party-serve` process hosting S1. The input
+    /// share ships in the session start; the pooled/fallback decision
+    /// is settled by the start/ack exchange (the pooled path is taken
+    /// only when BOTH sides hold the same bundle — otherwise both fall
+    /// back to the synchronized seeded stream, exactly like an
+    /// in-process pool miss).
+    ///
+    /// Failure model mirrors the in-process engine: losing the peer
+    /// mid-inference panics the calling thread (the in-process path
+    /// panics on a party-thread failure the same way) — an SMPC run
+    /// cannot continue without its counterpart. Session-level retry on
+    /// a re-dialed link is a tracked follow-up (ROADMAP).
+    fn run_remote(
+        &self,
+        rp: &RemoteParty,
+        in0: InputShare,
+        in1: InputShare,
+        session: &str,
+        bundle0: Option<Vec<Tuple>>,
+        bundle_session: &str,
+    ) -> (Vec<u64>, Vec<u64>, StatsSnapshot) {
+        let (input_kind, input) = match in1 {
+            InputShare::Hidden(v) => (INPUT_HIDDEN, v),
+            InputShare::OneHot(v) => (INPUT_ONEHOT, v),
+        };
+        let mode = match self.offline {
+            OfflineMode::Dealer => MODE_DEALER,
+            OfflineMode::Seeded => MODE_SEEDED,
+            OfflineMode::Pooled => MODE_POOLED,
+        };
+        let start = SessionStart {
+            label: session.to_string(),
+            mode,
+            coord_has_bundle: bundle0.is_some(),
+            bundle_label: bundle_session.to_string(),
+            input_kind,
+            input,
+        };
+        let mut sess = rp.start_session(start).expect("start remote party session");
+
+        let prov: Box<dyn crate::sharing::provider::Provider> = match self.offline {
+            OfflineMode::Dealer => Box::new(Party0Provider::new(session)),
+            OfflineMode::Seeded => Box::new(FastSeededProvider::new_fast(session, 0)),
+            OfflineMode::Pooled => {
+                if sess.use_pool {
+                    let tuples = bundle0.expect("use_pool implies a local bundle");
+                    let fb = format!("{bundle_session}/fallback");
+                    Box::new(PooledProvider::new(tuples, 0, &fb))
+                } else {
+                    // The party could not match our bundle (or we had
+                    // none): both sides run the seeded stream. A popped
+                    // bundle is spent either way — count the degraded
+                    // session where pool consumers will see it.
+                    if bundle0.is_some() {
+                        if let Some(p) = &self.pool {
+                            p.note_fallback();
+                        }
+                    }
+                    Box::new(FastSeededProvider::new_fast(session, 0))
+                }
+            }
+        };
+
+        let mut ctx = PartyCtx::new(0, sess.take_transport(), prov, 0xAA);
+        let stats = ctx.stats.clone();
+        let out0 = bert_forward(&mut ctx, &self.cfg, &self.shares0, &in0);
+        drop(ctx);
+        let (out1, offline_bytes, offline_msgs) =
+            sess.finish().expect("remote party session result");
+        // Same merge rule as in-process: online stats are symmetric
+        // (S0's view); the offline phase is S1's (reported back in the
+        // RESULT frame).
+        let mut merged = stats.snapshot();
+        merged.offline_bytes = offline_bytes;
+        merged.offline_msgs = offline_msgs;
+        (out0, out1, merged)
     }
 }
 

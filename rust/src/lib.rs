@@ -14,7 +14,8 @@
 //!   path; Python is never on the request path.
 //!
 //! Start at [`proto`] for the paper's protocols, [`nn`] for the secure
-//! model, [`engine`] for the 3-party execution fabric, and [`coordinator`]
+//! model, [`engine`] for the 3-party execution fabric, [`party`] for the
+//! distributed two-party runtime (`party-serve`), and [`coordinator`]
 //! for serving.
 
 // Indexing-heavy numeric kernels and 3-party protocol code: the
@@ -33,6 +34,7 @@ pub mod engine;
 pub mod net;
 pub mod nn;
 pub mod offline;
+pub mod party;
 pub mod proto;
 pub mod runtime;
 pub mod sharing;

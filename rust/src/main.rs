@@ -4,14 +4,19 @@
 //!   selftest                 end-to-end check: secure engine vs plaintext
 //!                            reference vs PJRT artifact
 //!   infer [opts]             run one inference (secure and/or plaintext)
-//!   serve [opts]             TCP serving coordinator (line protocol)
+//!   serve [opts]             TCP serving coordinator (line protocol);
+//!                            hosts S0 (add --peer-addr for a remote S1)
+//!   party-serve [opts]       standalone computing party S1: accepts
+//!                            sessions from `serve --peer-addr` over the
+//!                            fingerprint-verified party protocol
 //!   dealer-serve [opts]      standalone correlated-randomness dealer:
 //!                            plans tuple demand, pregenerates session
 //!                            bundles and streams them to coordinators
+//!   dealer-stats [opts]      query a dealer's STATS endpoint
 //!   bench <target> [opts]    regenerate a paper table/figure
 //!                            targets: table3 table4 fig1 fig5 fig6 fig7
 //!                                     fig8 fig9 rounds serving
-//!                                     distribution all
+//!                                     distribution two_party all
 //!
 //! Common options:
 //!   --framework <crypten|puma|mpcformer|secformer>   (default secformer)
@@ -236,7 +241,7 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
     // (OfflineMode::Pooled); `--workers` sets the number of concurrent
     // secure workers either way.
     let pooled = args.has("pool") || args.has("dealer-addr") || args.has("spool-dir");
-    let serving = if pooled {
+    let mut serving = if pooled {
         let depth: usize = match args.flag("pool") {
             Some(d) => d.parse().context("--pool takes a bundle depth")?,
             None => 4,
@@ -268,8 +273,16 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
             }
         }
         // `--spool-dir DIR`: persist bundles to an append-only spool and
-        // warm-start from it after a restart.
+        // warm-start from it after a restart. `--spool-max-bytes N`
+        // caps the file (compaction + pause, never correctness).
         s.spool_dir = args.flag("spool-dir").map(String::from);
+        s.spool_max_bytes = args
+            .flag("spool-max-bytes")
+            .map(|v| v.parse().context("--spool-max-bytes takes a byte count"))
+            .transpose()?;
+        // `--dealer-psk KEY`: authenticate to a dealer started with
+        // `dealer-serve --psk KEY`.
+        s.dealer_psk = args.flag("dealer-psk").map(String::from);
         // `--namespace NS`: session-align this coordinator with another
         // — tests/reproducibility ONLY. Reusing a namespace across
         // coordinator lives replays session randomness for different
@@ -282,6 +295,10 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
             ..ServingConfig::default()
         }
     };
+    // `--peer-addr HOST:PORT`: run party S1 in a remote `party-serve`
+    // process (any offline mode); `--peer-psk` authenticates the link.
+    serving.peer_addr = args.flag("peer-addr").map(String::from);
+    serving.peer_psk = args.flag("peer-psk").map(String::from);
     let coordinator = std::sync::Arc::new(Coordinator::start_with(
         cfg.clone(),
         weights,
@@ -305,7 +322,7 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
 /// — the handshake rejects any manifest mismatch.
 fn cmd_dealer_serve(args: &Args, cfg_file: &Config) -> Result<()> {
     use secformer::offline::pool::PoolConfig;
-    use secformer::offline::remote::serve_dealer;
+    use secformer::offline::remote::{serve_dealer, DealerConfig};
     use secformer::offline::source::PoolSet;
     let fw = framework_of(args, cfg_file);
     let seq = args.usize_or("seq", 16);
@@ -350,7 +367,137 @@ fn cmd_dealer_serve(args: &Args, cfg_file: &Config) -> Result<()> {
         }
     }
     let bind = args.flag("bind").unwrap_or("127.0.0.1:7979");
-    serve_dealer(bind, pools)
+    // `--psk KEY`: gate the handshake behind a shared-key
+    // challenge/response (clients pass `--dealer-psk` / `--psk`).
+    serve_dealer(
+        bind,
+        pools,
+        DealerConfig { psk: args.flag("psk").map(String::from) },
+    )
+}
+
+/// `dealer-stats` — query a running dealer's `STATS` endpoint and print
+/// the JSON snapshot (pull rates, per-coordinator outstanding credit).
+fn cmd_dealer_stats(args: &Args) -> Result<()> {
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:7979");
+    let json = secformer::offline::remote::fetch_dealer_stats(addr, args.flag("psk"))?;
+    println!("{json}");
+    Ok(())
+}
+
+/// `party-serve` — host computing party S1 as its own process: verify
+/// the coordinator's model at the HELLO fingerprint handshake, then
+/// execute S1's half of every session it starts. S1's correlated
+/// randomness comes from this process's own source (local pool, remote
+/// dealer, or disk spool) — pad material never crosses the party link.
+fn cmd_party_serve(args: &Args, cfg_file: &Config) -> Result<()> {
+    use secformer::offline::planner::PlanInput;
+    use secformer::offline::pool::PoolConfig;
+    use secformer::offline::remote::{RemotePool, RemotePoolConfig};
+    use secformer::offline::source::{BundleSource, PoolSet};
+    use secformer::offline::spool::{SpoolConfig, SpooledSource};
+    use secformer::party::runtime::{serve_party, PartyHostConfig};
+    use std::sync::Arc;
+
+    let fw = framework_of(args, cfg_file);
+    let seq = args.usize_or("seq", 16);
+    let mut cfg = ModelConfig::tiny(seq, fw);
+    cfg.vocab = args.usize_or("vocab", cfg.vocab);
+    let weights = load_weights(args, &cfg)?;
+    // Same sharing seed as the engine/coordinator: equal plaintext
+    // weights on both machines ⇒ equal S1 shares ⇒ matching HELLO
+    // fingerprints (and bit-identical inference).
+    let mut wrng = secformer::core::rng::Xoshiro::seed_from(0x5EC0);
+    let (_s0, s1) = secformer::nn::weights::share_weights(&weights, &mut wrng);
+
+    let pooled = args.has("pool") || args.has("dealer-addr") || args.has("spool-dir");
+    let source: Option<Arc<dyn BundleSource>> = if pooled {
+        let depth: usize = match args.flag("pool") {
+            Some(d) => d.parse().context("--pool takes a bundle depth")?,
+            None => 4,
+        };
+        let plan_hidden = args.flag("plan").map(|p| p != "tokens").unwrap_or(true);
+        let base: Arc<dyn BundleSource> = match args.flag("dealer-addr") {
+            Some(addr) => {
+                let mut kinds = vec![PlanInput::Tokens];
+                if plan_hidden {
+                    kinds.push(PlanInput::Hidden);
+                }
+                RemotePool::connect(
+                    addr,
+                    &cfg,
+                    RemotePoolConfig {
+                        depth: depth.max(1),
+                        kinds,
+                        psk: args.flag("dealer-psk").map(String::from),
+                    },
+                )?
+            }
+            None => {
+                // Pooled sessions only hit when this pool generates the
+                // SAME bundles the coordinator's pool pops (generation
+                // is a pure function of `{prefix}-{seq}`): `--namespace
+                // NS` mirrors a coordinator started with `serve
+                // --namespace NS`; `--prefix` sets the prefix verbatim.
+                // The per-process default keeps results correct but
+                // every pooled session degrades to seeded fallback.
+                let prefix = match (args.flag("prefix"), args.flag("namespace")) {
+                    (Some(p), _) => p.to_string(),
+                    (None, Some(ns)) => format!("coord-pool-{ns}"),
+                    (None, None) => {
+                        eprintln!(
+                            "party-serve: --pool without --namespace/--prefix cannot \
+                             align with the coordinator's pool; pooled sessions will \
+                             fall back to seeded generation"
+                        );
+                        format!("party-pool-{:x}", std::process::id())
+                    }
+                };
+                PoolSet::start(
+                    &cfg,
+                    &prefix,
+                    PoolConfig {
+                        target_depth: depth.max(1),
+                        producers: args.usize_or("pool-producers", 1).max(1),
+                        fast: !args.has("pool-prf"),
+                        adaptive: args.has("adaptive"),
+                        ..PoolConfig::default()
+                    },
+                    plan_hidden,
+                )
+            }
+        };
+        let src: Arc<dyn BundleSource> = match args.flag("spool-dir") {
+            Some(dir) => SpooledSource::open(
+                std::path::Path::new(dir),
+                Some(base),
+                SpoolConfig {
+                    depth: depth.max(1),
+                    max_bytes: args
+                        .flag("spool-max-bytes")
+                        .map(|v| v.parse().context("--spool-max-bytes takes a byte count"))
+                        .transpose()?,
+                    ..SpoolConfig::default()
+                },
+            )?,
+            None => base,
+        };
+        Some(src)
+    } else {
+        None
+    };
+
+    let bind = args.flag("bind").unwrap_or("127.0.0.1:8787");
+    serve_party(
+        bind,
+        cfg,
+        Arc::new(s1),
+        source,
+        PartyHostConfig {
+            psk: args.flag("psk").map(String::from),
+            ..PartyHostConfig::default()
+        },
+    )
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -400,6 +547,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 args.usize_or("workers", 2),
             );
         }
+        "two_party" => {
+            bh::two_party_bench(args.usize_or("seq", 8), args.usize_or("iters", 3));
+        }
         "ablations" => {
             secformer::bench::ablations::ablation_fourier_terms(args.usize_or("points", 1000));
             secformer::bench::ablations::ablation_goldschmidt_iters(args.usize_or("points", 1000));
@@ -429,6 +579,8 @@ fn main() -> Result<()> {
         "infer" => cmd_infer(&args, &cfg_file),
         "serve" => cmd_serve(&args, &cfg_file),
         "dealer-serve" => cmd_dealer_serve(&args, &cfg_file),
+        "dealer-stats" => cmd_dealer_stats(&args),
+        "party-serve" => cmd_party_serve(&args, &cfg_file),
         "bench" => cmd_bench(&args),
         "" | "help" | "--help" => {
             println!("{}", HELP);
@@ -449,13 +601,23 @@ USAGE:
                    [--max-batch 8] [--max-wait-ms 5]
                    [--workers N] [--pool DEPTH] [--pool-producers P] [--pool-prf]
                    [--plan tokens|both] [--adaptive]
-                   [--dealer-addr HOST:PORT] [--spool-dir DIR] [--namespace NS]
+                   [--dealer-addr HOST:PORT] [--dealer-psk KEY]
+                   [--spool-dir DIR] [--spool-max-bytes N] [--namespace NS]
+                   [--peer-addr HOST:PORT] [--peer-psk KEY]
+  secformer party-serve [--bind 127.0.0.1:8787] [--seq N] [--framework F]
+                   [--vocab V] [--weights W.swts] [--psk KEY]
+                   [--pool DEPTH] [--pool-producers P] [--pool-prf]
+                   [--plan tokens|both] [--adaptive]
+                   [--namespace NS | --prefix PFX]
+                   [--dealer-addr HOST:PORT] [--dealer-psk KEY]
+                   [--spool-dir DIR] [--spool-max-bytes N]
   secformer dealer-serve [--bind 127.0.0.1:7979] [--seq N] [--framework F]
                    [--vocab V] [--depth 8] [--producers 2] [--prf]
                    [--plan tokens|both] [--adaptive] [--max-depth 64]
-                   [--max-bundles N] [--prefix PFX]
+                   [--max-bundles N] [--prefix PFX] [--psk KEY]
+  secformer dealer-stats [--addr 127.0.0.1:7979] [--psk KEY]
   secformer bench  <table3|table4|fig1|fig5|fig6|fig7|fig8|fig9|rounds|serving|
-                    distribution|ablations|all>
+                    distribution|two_party|ablations|all>
                    [--seq N] [--paper] [--iters K] [--base-only]
                    [--concurrency C] [--requests R] [--workers N]
 
@@ -464,15 +626,26 @@ demand planner dry-runs the model at startup, background producers keep
 DEPTH pregenerated session bundles ready per input kind, and every
 inference runs with zero dealer round-trips online.
 
-`dealer-serve` moves that offline phase to its own machine: it streams
+`serve --peer-addr` moves computing party S1 to a separate machine: the
+coordinator keeps S0 and drives a `party-serve` process over a
+multiplexed TCP session link (model flags and weights must match — the
+HELLO handshake verifies a config+weights fingerprint). For pooled
+two-party serving, give BOTH processes the same `--namespace` so their
+pools generate identical bundles; any mismatch degrades to seeded
+fallback, never wrong results.
+
+`dealer-serve` moves the offline phase to its own machine: it streams
 serialized session bundles to any number of coordinators started with
 `serve --dealer-addr` (model flags must match — the handshake verifies
 manifest fingerprints). `serve --spool-dir DIR` additionally persists
 bundles to an append-only spool so a restarted coordinator warm-starts
-from disk. See README.md for the full flag reference and ARCHITECTURE.md
-for the wire format.
+from disk; the spool compacts itself and `--spool-max-bytes` caps it.
+`--psk` on dealer-serve/party-serve gates every connection behind a
+shared-key challenge/response. See README.md for the full flag
+reference and ARCHITECTURE.md for the wire formats and topologies.
 
 `bench serving` writes BENCH_serving.json; `bench distribution` compares
 in-process vs remote-dealer vs spool-cold-start and writes
-BENCH_distribution.json.
+BENCH_distribution.json; `bench two_party` compares in-process vs
+localhost-TCP vs simulated LAN/WAN and writes BENCH_two_party.json.
 ";

@@ -43,7 +43,10 @@ pub mod wire;
 pub use planner::{plan_demand, PlanInput, RecordingProvider, TupleManifest, TupleReq};
 pub use pool::{generate_bundle, PoolConfig, PoolSnapshot, SessionBundle, Tuple, TuplePool};
 pub use provider::{PooledProvider, PoolTelemetry};
-pub use remote::{serve_dealer, spawn_dealer, RemotePool, RemotePoolConfig};
+pub use remote::{
+    fetch_dealer_stats, serve_dealer, spawn_dealer, spawn_dealer_with, DealerConfig,
+    DealerStats, RemotePool, RemotePoolConfig,
+};
 pub use source::{BundleSource, PoolSet};
 pub use spool::{SpoolConfig, SpooledSource};
 pub use wire::{manifest_fingerprint, WIRE_VERSION};

@@ -36,42 +36,144 @@ use crate::offline::planner::{plan_demand, PlanInput};
 use crate::offline::pool::{PoolSnapshot, SessionBundle};
 use crate::offline::source::{BundleSource, PoolSet};
 use crate::offline::wire::{
-    decode_bundle, decode_kind, encode_bundle, encode_kind, manifest_fingerprint, msg,
-    read_frame, write_frame,
+    client_auth, decode_bundle, decode_kind, encode_bundle, encode_kind,
+    manifest_fingerprint, msg, read_frame, server_auth, write_frame,
 };
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 // ---------------------------------------------------------------------
 // Dealer side
 // ---------------------------------------------------------------------
 
+/// Dealer service policy (`dealer-serve` flags beyond pool sizing).
+#[derive(Clone, Debug, Default)]
+pub struct DealerConfig {
+    /// Require this pre-shared key at the connection handshake
+    /// (`dealer-serve --psk`).
+    pub psk: Option<String>,
+}
+
+/// Live telemetry of one coordinator connection.
+#[derive(Clone, Copy, Debug, Default)]
+struct ConnStat {
+    /// Bundles requested by PULL frames (the standing credit).
+    requested: u64,
+    /// BUNDLE frames written back.
+    served: u64,
+}
+
+/// Dealer-side service counters, answered over the `STATS` frame —
+/// the dealer's mirror of the coordinator's `stats` line.
+pub struct DealerStats {
+    started: Instant,
+    pulls: AtomicU64,
+    requested: AtomicU64,
+    served: AtomicU64,
+    conns: Mutex<BTreeMap<String, ConnStat>>,
+}
+
+impl DealerStats {
+    fn new() -> Arc<DealerStats> {
+        Arc::new(DealerStats {
+            started: Instant::now(),
+            pulls: AtomicU64::new(0),
+            requested: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            conns: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Total PULL frames handled.
+    pub fn pulls(&self) -> u64 {
+        self.pulls.load(Ordering::Relaxed)
+    }
+
+    /// Total BUNDLE frames served.
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Render the stats snapshot as a JSON object (the `STATS_OK`
+    /// payload): uptime, pool gauges, pull/serve totals and rates, and
+    /// one row per connected coordinator with its outstanding credit
+    /// (requested − served: the dealer-side view of that
+    /// coordinator's prefetch queue depth).
+    pub fn render_json(&self, pools: &PoolSet) -> String {
+        let uptime = self.started.elapsed().as_secs_f64();
+        let ps = pools.snapshot();
+        let pulls = self.pulls.load(Ordering::Relaxed);
+        let requested = self.requested.load(Ordering::Relaxed);
+        let served = self.served.load(Ordering::Relaxed);
+        let conns = self.conns.lock().unwrap();
+        let rows: Vec<String> = conns
+            .iter()
+            .map(|(peer, c)| {
+                format!(
+                    "{{\"peer\": \"{peer}\", \"requested\": {}, \"served\": {}, \
+                     \"outstanding\": {}}}",
+                    c.requested,
+                    c.served,
+                    c.requested.saturating_sub(c.served)
+                )
+            })
+            .collect();
+        format!(
+            "{{\"uptime_s\": {uptime:.3}, \
+             \"pool\": {{\"depth\": {}, \"produced\": {}, \"consumed\": {}, \
+             \"hits\": {}, \"misses\": {}, \"hit_rate\": {:.4}, \
+             \"offline_bytes\": {}}}, \
+             \"pulls\": {pulls}, \"bundles_requested\": {requested}, \
+             \"bundles_served\": {served}, \"pull_rate_per_s\": {:.4}, \
+             \"coordinators\": [{}]}}",
+            ps.depth,
+            ps.produced,
+            ps.consumed,
+            ps.hits,
+            ps.misses,
+            ps.hit_rate(),
+            ps.offline_bytes,
+            pulls as f64 / uptime.max(1e-9),
+            rows.join(", ")
+        )
+    }
+}
+
 /// Serve bundles from `pools` to any number of coordinators, forever
 /// (one thread per connection). This is the body of
 /// `secformer dealer-serve`.
-pub fn serve_dealer(bind: &str, pools: Arc<PoolSet>) -> Result<()> {
+pub fn serve_dealer(bind: &str, pools: Arc<PoolSet>, cfg: DealerConfig) -> Result<()> {
     let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
     eprintln!("secformer dealer listening on {bind}");
-    dealer_accept_loop(listener, pools);
+    dealer_accept_loop(listener, pools, cfg, DealerStats::new());
     Ok(())
 }
 
 /// Accept loop over an already-bound listener. Exposed so tests and the
 /// distribution benchmark can serve on an ephemeral port; returns only
 /// if the listener errors.
-pub fn dealer_accept_loop(listener: TcpListener, pools: Arc<PoolSet>) {
+pub fn dealer_accept_loop(
+    listener: TcpListener,
+    pools: Arc<PoolSet>,
+    cfg: DealerConfig,
+    stats: Arc<DealerStats>,
+) {
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
                 let pools = pools.clone();
+                let cfg = cfg.clone();
+                let stats = stats.clone();
                 std::thread::spawn(move || {
                     let peer = s.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-                    if let Err(e) = handle_dealer_conn(s, &pools) {
+                    if let Err(e) = handle_dealer_conn(s, &pools, &cfg, &stats, &peer) {
                         eprintln!("dealer: connection {peer}: {e}");
                     }
+                    stats.conns.lock().unwrap().remove(&peer);
                 });
             }
             Err(e) => {
@@ -88,23 +190,69 @@ pub fn dealer_accept_loop(listener: TcpListener, pools: Arc<PoolSet>) {
 /// instead (`PoolConfig::max_bundles`), after which every further pull
 /// is answered with `ERR`.
 pub fn spawn_dealer(pools: Arc<PoolSet>) -> Result<std::net::SocketAddr> {
+    let (addr, _) = spawn_dealer_with(pools, DealerConfig::default())?;
+    Ok(addr)
+}
+
+/// [`spawn_dealer`] with an explicit [`DealerConfig`]; also returns the
+/// stats handle so tests can assert service counters directly.
+pub fn spawn_dealer_with(
+    pools: Arc<PoolSet>,
+    cfg: DealerConfig,
+) -> Result<(std::net::SocketAddr, Arc<DealerStats>)> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
+    let stats = DealerStats::new();
+    let st = stats.clone();
     std::thread::Builder::new()
         .name("dealer-accept".to_string())
-        .spawn(move || dealer_accept_loop(listener, pools))
+        .spawn(move || dealer_accept_loop(listener, pools, cfg, st))
         .expect("spawn dealer accept loop");
-    Ok(addr)
+    Ok((addr, stats))
+}
+
+/// Query a running dealer's `STATS` endpoint; returns the JSON payload.
+/// This is the body of `secformer dealer-stats`.
+pub fn fetch_dealer_stats(addr: &str, psk: Option<&str>) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect to dealer {addr}"))?;
+    stream.set_nodelay(true)?;
+    client_auth(&mut stream, psk)?;
+    write_frame(&mut stream, msg::STATS, &[])?;
+    match read_frame(&mut stream).map_err(|e| anyhow!("stats query: {e}"))? {
+        (t, p) if t == msg::STATS_OK => Ok(String::from_utf8_lossy(&p).into_owned()),
+        (t, p) if t == msg::ERR => {
+            bail!("dealer rejected stats query: {}", String::from_utf8_lossy(&p))
+        }
+        (t, _) => bail!("unexpected stats reply type {t}"),
+    }
 }
 
 fn send_err(stream: &mut TcpStream, why: &str) {
     let _ = write_frame(stream, msg::ERR, why.as_bytes());
 }
 
-fn handle_dealer_conn(mut stream: TcpStream, pools: &PoolSet) -> Result<()> {
+fn handle_dealer_conn(
+    mut stream: TcpStream,
+    pools: &PoolSet,
+    cfg: &DealerConfig,
+    stats: &DealerStats,
+    peer: &str,
+) -> Result<()> {
     stream.set_nodelay(true)?;
-    // Handshake: HELLO carries (kind, fingerprint) pairs.
-    let (ty, payload) = read_frame(&mut stream).map_err(|e| anyhow!("handshake: {e}"))?;
+    server_auth(&mut stream, cfg.psk.as_deref())?;
+    // Handshake: HELLO carries (kind, fingerprint) pairs. A bare STATS
+    // query (monitoring) is answered without a manifest handshake — it
+    // exposes service counters, never bundle material.
+    let (mut ty, mut payload) =
+        read_frame(&mut stream).map_err(|e| anyhow!("handshake: {e}"))?;
+    while ty == msg::STATS {
+        write_frame(&mut stream, msg::STATS_OK, stats.render_json(pools).as_bytes())?;
+        match read_frame(&mut stream) {
+            Ok(f) => (ty, payload) = f,
+            Err(_) => return Ok(()), // stats poller went away
+        }
+    }
     if ty != msg::HELLO {
         send_err(&mut stream, "expected HELLO");
         bail!("client opened with message type {ty}");
@@ -144,6 +292,7 @@ fn handle_dealer_conn(mut stream: TcpStream, pools: &PoolSet) -> Result<()> {
         }
     }
     write_frame(&mut stream, msg::HELLO_OK, b"secformer-dealer/1")?;
+    stats.conns.lock().unwrap().insert(peer.to_string(), ConnStat::default());
 
     // Credit loop: every PULL is answered by exactly `count` bundles.
     loop {
@@ -163,18 +312,36 @@ fn handle_dealer_conn(mut stream: TcpStream, pools: &PoolSet) -> Result<()> {
                     bail!("client pulled unverified kind {kind:?}");
                 }
                 let count = u32::from_le_bytes(payload[1..5].try_into().unwrap());
+                stats.pulls.fetch_add(1, Ordering::Relaxed);
+                stats.requested.fetch_add(count as u64, Ordering::Relaxed);
+                if let Some(c) = stats.conns.lock().unwrap().get_mut(peer) {
+                    c.requested += count as u64;
+                }
                 for _ in 0..count {
                     // Arrival signal first so adaptive pools size to the
                     // pull rate, then a (possibly blocking) pop.
                     pools.note_arrival(kind);
                     match pools.pop(kind) {
-                        Some(b) => write_frame(&mut stream, msg::BUNDLE, &encode_bundle(&b))?,
+                        Some(b) => {
+                            write_frame(&mut stream, msg::BUNDLE, &encode_bundle(&b))?;
+                            stats.served.fetch_add(1, Ordering::Relaxed);
+                            if let Some(c) = stats.conns.lock().unwrap().get_mut(peer) {
+                                c.served += 1;
+                            }
+                        }
                         None => {
                             send_err(&mut stream, "pool exhausted");
                             return Ok(());
                         }
                     }
                 }
+            }
+            msg::STATS => {
+                write_frame(
+                    &mut stream,
+                    msg::STATS_OK,
+                    stats.render_json(pools).as_bytes(),
+                )?;
             }
             msg::ERR => return Ok(()), // client-side goodbye
             other => {
@@ -197,11 +364,18 @@ pub struct RemotePoolConfig {
     pub depth: usize,
     /// Input kinds to handshake for and prefetch.
     pub kinds: Vec<PlanInput>,
+    /// Pre-shared key for the dealer's challenge/response handshake
+    /// (required when the dealer runs with `--psk`).
+    pub psk: Option<String>,
 }
 
 impl Default for RemotePoolConfig {
     fn default() -> Self {
-        RemotePoolConfig { depth: 4, kinds: vec![PlanInput::Tokens, PlanInput::Hidden] }
+        RemotePoolConfig {
+            depth: 4,
+            kinds: vec![PlanInput::Tokens, PlanInput::Hidden],
+            psk: None,
+        }
     }
 }
 
@@ -277,6 +451,7 @@ impl RemotePool {
         let mut stream =
             TcpStream::connect(addr).with_context(|| format!("connect to dealer {addr}"))?;
         stream.set_nodelay(true)?;
+        client_auth(&mut stream, rcfg.psk.as_deref())?;
 
         let mut hello = vec![rcfg.kinds.len() as u8];
         for &kind in &rcfg.kinds {
@@ -499,7 +674,7 @@ mod tests {
         let pool = RemotePool::connect(
             &addr.to_string(),
             &tiny(),
-            RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens] },
+            RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens], psk: None },
         )
         .expect("connect");
         let b1 = pool.pop(PlanInput::Tokens).expect("bundle 1");
@@ -527,7 +702,7 @@ mod tests {
         let pool = RemotePool::connect(
             &addr.to_string(),
             &tiny(),
-            RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens] },
+            RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens], psk: None },
         )
         .expect("connect");
         assert!(pool.pop(PlanInput::Tokens).is_some());
@@ -536,6 +711,88 @@ mod tests {
         assert!(pool.pop(PlanInput::Tokens).is_none());
         pool.stop();
         dealer_pools.stop();
+    }
+
+    #[test]
+    fn stats_endpoint_reports_pulls_and_outstanding_credit() {
+        let pools = PoolSet::start(
+            &tiny(),
+            "rp-s",
+            PoolConfig {
+                target_depth: 4,
+                producers: 1,
+                max_bundles: Some(4),
+                ..PoolConfig::default()
+            },
+            true,
+        );
+        let (addr, stats) =
+            spawn_dealer_with(pools.clone(), DealerConfig::default()).expect("spawn dealer");
+        // Bare stats query needs no manifest handshake.
+        let before = fetch_dealer_stats(&addr.to_string(), None).expect("stats");
+        assert!(before.contains("\"pulls\": 0"), "{before}");
+        assert!(before.contains("\"coordinators\": []"), "{before}");
+
+        let pool = RemotePool::connect(
+            &addr.to_string(),
+            &tiny(),
+            RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens], psk: None },
+        )
+        .expect("connect");
+        pool.warm(2);
+        let after = fetch_dealer_stats(&addr.to_string(), None).expect("stats");
+        assert!(stats.pulls() >= 1, "initial credit PULL must be counted");
+        assert!(stats.served() >= 2, "warmed bundles must be counted");
+        assert!(after.contains("\"peer\""), "a live coordinator row: {after}");
+        pool.stop();
+        pools.stop();
+    }
+
+    #[test]
+    fn dealer_psk_gates_both_pulls_and_stats() {
+        let pools = PoolSet::start(
+            &tiny(),
+            "rp-k",
+            PoolConfig {
+                target_depth: 2,
+                producers: 1,
+                max_bundles: Some(2),
+                ..PoolConfig::default()
+            },
+            false,
+        );
+        let (addr, _) = spawn_dealer_with(
+            pools.clone(),
+            DealerConfig { psk: Some("hunter2".to_string()) },
+        )
+        .expect("spawn dealer");
+        // Keyless clients are refused locally (the challenge demands a key).
+        let err = fetch_dealer_stats(&addr.to_string(), None).expect_err("keyless stats");
+        assert!(err.to_string().contains("pre-shared key"), "{err}");
+        let err = RemotePool::connect(
+            &addr.to_string(),
+            &tiny(),
+            RemotePoolConfig { depth: 1, kinds: vec![PlanInput::Tokens], psk: None },
+        )
+        .expect_err("keyless pull client");
+        assert!(err.to_string().contains("pre-shared key"), "{err}");
+        // The right key opens both surfaces.
+        let json =
+            fetch_dealer_stats(&addr.to_string(), Some("hunter2")).expect("keyed stats");
+        assert!(json.contains("uptime_s"), "{json}");
+        let pool = RemotePool::connect(
+            &addr.to_string(),
+            &tiny(),
+            RemotePoolConfig {
+                depth: 1,
+                kinds: vec![PlanInput::Tokens],
+                psk: Some("hunter2".to_string()),
+            },
+        )
+        .expect("keyed client connects");
+        assert!(pool.pop(PlanInput::Tokens).is_some());
+        pool.stop();
+        pools.stop();
     }
 
     #[test]

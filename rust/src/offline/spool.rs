@@ -41,16 +41,28 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-/// Spool sizing.
+/// Spool sizing and retention policy.
 #[derive(Clone, Copy, Debug)]
 pub struct SpoolConfig {
     /// Bundles to keep persisted ahead of demand, per input kind.
     pub depth: usize,
+    /// Compact (rewrite the file to its live records) once this many
+    /// consume tombstones have accumulated. The append-only file
+    /// otherwise grows by one tombstone per served bundle forever.
+    /// `0` disables compaction.
+    pub compact_after: usize,
+    /// Hard cap on the spool file size (`serve --spool-max-bytes`).
+    /// When an append would grow the file past this, the spooler first
+    /// compacts and, if the live records alone still exceed the cap,
+    /// pauses persisting new bundles (consumers keep draining the live
+    /// source directly — a cap never affects correctness, only how
+    /// much prefetch survives a restart).
+    pub max_bytes: Option<u64>,
 }
 
 impl Default for SpoolConfig {
     fn default() -> Self {
-        SpoolConfig { depth: 4 }
+        SpoolConfig { depth: 4, compact_after: 64, max_bytes: None }
     }
 }
 
@@ -72,6 +84,8 @@ impl SpoolState {
 struct SpoolShared {
     inner: Option<Arc<dyn BundleSource>>,
     cfg: SpoolConfig,
+    /// The spool file path (compaction renames a rewrite over it).
+    path: PathBuf,
     /// Append handle; every record is written and flushed under this lock.
     file: Mutex<File>,
     state: Mutex<SpoolState>,
@@ -79,6 +93,10 @@ struct SpoolShared {
     stopping: AtomicBool,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Consume tombstones in the file since the last compaction.
+    tombstones: AtomicU64,
+    /// Completed compaction rewrites.
+    compactions: AtomicU64,
     /// Bundles recovered from disk at open.
     restored: u64,
 }
@@ -88,7 +106,77 @@ impl SpoolShared {
     fn append(&self, msg_type: u8, payload: &[u8]) -> std::io::Result<()> {
         let mut f = self.file.lock().unwrap();
         wire::write_frame(&mut *f, msg_type, payload)?;
-        f.sync_data()
+        f.sync_data()?;
+        if msg_type == msg::CONSUMED {
+            self.tombstones.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Current spool file length in bytes.
+    fn file_len(&self) -> u64 {
+        let f = self.file.lock().unwrap();
+        f.metadata().map(|m| m.len()).unwrap_or(0)
+    }
+
+    /// Whether the retention policy calls for a rewrite right now.
+    fn wants_compaction(&self) -> bool {
+        let tombs = self.tombstones.load(Ordering::Relaxed);
+        if tombs == 0 {
+            return false;
+        }
+        (self.cfg.compact_after > 0 && tombs >= self.cfg.compact_after as u64)
+            || self.cfg.max_bytes.is_some_and(|cap| self.file_len() > cap)
+    }
+
+    /// Rewrite the spool to its live records only: serialize the
+    /// in-memory queues (exactly the unconsumed disk bundles) to a
+    /// temporary file, fsync, and atomically rename it over the spool.
+    /// Holding the file lock for the whole rewrite keeps appends (and
+    /// their tombstone-before-serve ordering) consistent: a bundle
+    /// popped from the queues while we rewrite blocks on its tombstone
+    /// append until the new file (which still contains it) is in place.
+    fn compact(&self) -> std::io::Result<()> {
+        let mut f = self.file.lock().unwrap();
+        let live: Vec<SessionBundle> = {
+            let st = self.state.lock().unwrap();
+            st.tokens.iter().chain(st.hidden.iter()).cloned().collect()
+        };
+        let tmp = self.path.with_extension("spool.tmp");
+        let mut out = File::create(&tmp)?;
+        for b in &live {
+            wire::write_frame(&mut out, msg::BUNDLE, &wire::encode_bundle(b))?;
+        }
+        out.sync_all()?;
+        drop(out);
+        std::fs::rename(&tmp, &self.path)?;
+        // Best-effort directory fsync so the rename itself is durable.
+        if let Some(dir) = self.path.parent() {
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        let mut nf = OpenOptions::new().read(true).write(true).open(&self.path)?;
+        nf.seek(std::io::SeekFrom::End(0))?;
+        *f = nf;
+        self.tombstones.store(0, Ordering::Relaxed);
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Run a compaction if the policy asks for one. Any rewrite failure
+    /// after the rename could leave the append handle pointing at an
+    /// unlinked inode — tombstones would stop being durable — so on
+    /// error the disk queues are discarded and persistence stops
+    /// (consumers degrade to the live source; never double-serve).
+    fn maybe_compact(&self) {
+        if !self.wants_compaction() {
+            return;
+        }
+        if let Err(e) = self.compact() {
+            eprintln!("spool: compaction failed ({e})");
+            self.poison_disk("compaction");
+        }
     }
 
     /// The disk became unwritable mid-serve: consume markers can no
@@ -123,6 +211,8 @@ struct ScanOutcome {
     bundles: Vec<SessionBundle>,
     /// Byte offset just past the last complete record.
     valid_len: u64,
+    /// Consume tombstones present in the surviving file prefix.
+    tombstones: u64,
     /// Mid-file corruption was found (poisons the whole file).
     poisoned: bool,
 }
@@ -130,6 +220,7 @@ struct ScanOutcome {
 fn scan_spool(path: &Path) -> Result<ScanOutcome> {
     let mut bundles: Vec<SessionBundle> = Vec::new();
     let mut consumed: HashSet<String> = HashSet::new();
+    let mut tombstones = 0u64;
     let mut valid_len = 0u64;
     let mut poisoned = false;
     if path.exists() {
@@ -152,6 +243,7 @@ fn scan_spool(path: &Path) -> Result<ScanOutcome> {
                     if let Ok(session) = std::str::from_utf8(&payload) {
                         consumed.insert(session.to_string());
                     }
+                    tombstones += 1;
                     valid_len = f.stream_position()?;
                 }
                 Ok((_, _)) => {
@@ -174,7 +266,7 @@ fn scan_spool(path: &Path) -> Result<ScanOutcome> {
     } else {
         bundles.retain(|b| !consumed.contains(&b.session));
     }
-    Ok(ScanOutcome { bundles, valid_len, poisoned })
+    Ok(ScanOutcome { bundles, valid_len, tombstones, poisoned })
 }
 
 impl SpooledSource {
@@ -228,14 +320,20 @@ impl SpooledSource {
         let shared = Arc::new(SpoolShared {
             inner,
             cfg,
+            path,
             file: Mutex::new(file),
             state: Mutex::new(state),
             cv: Condvar::new(),
             stopping: AtomicBool::new(false),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            tombstones: AtomicU64::new(if scan.poisoned { 0 } else { scan.tombstones }),
+            compactions: AtomicU64::new(0),
             restored,
         });
+        // A spool inherited from a long-lived predecessor may reopen
+        // with a large tombstone backlog — rewrite it away up front.
+        shared.maybe_compact();
         let spooler = if shared.inner.is_some() {
             let sh = shared.clone();
             Some(
@@ -259,6 +357,21 @@ impl SpooledSource {
     /// Bundles recovered from disk when the spool was opened.
     pub fn restored(&self) -> u64 {
         self.shared.restored
+    }
+
+    /// Consume tombstones accumulated since the last compaction.
+    pub fn tombstones(&self) -> u64 {
+        self.shared.tombstones.load(Ordering::Relaxed)
+    }
+
+    /// Completed compaction rewrites over this spool's lifetime.
+    pub fn compactions(&self) -> u64 {
+        self.shared.compactions.load(Ordering::Relaxed)
+    }
+
+    /// Current spool file size in bytes.
+    pub fn file_bytes(&self) -> u64 {
+        self.shared.file_len()
     }
 
     /// Block until at least `n` bundles are persisted across kinds (or
@@ -288,7 +401,26 @@ pub fn spool_path(dir: &Path) -> PathBuf {
 /// until each kind holds [`SpoolConfig::depth`] persisted bundles.
 fn spooler_loop(shared: Arc<SpoolShared>) {
     let inner = shared.inner.as_ref().expect("spooler requires inner source").clone();
+    // Size cap: checked before EVERY transfer (a deficit pass may span
+    // many bundles). Try to reclaim tombstone space first; while the
+    // live records alone keep the file over the cap, pause persisting —
+    // consumers drain the live source directly. The file can exceed the
+    // cap by at most one record.
+    let over_cap = |shared: &SpoolShared| -> bool {
+        match shared.cfg.max_bytes {
+            None => false,
+            Some(cap) => {
+                if shared.file_len() > cap {
+                    shared.maybe_compact();
+                }
+                shared.file_len() > cap
+            }
+        }
+    };
     while !shared.stopping.load(Ordering::Relaxed) {
+        // Retention work belongs on this thread, not the serve path:
+        // consumers only notify the condvar; the rewrite runs here.
+        shared.maybe_compact();
         let mut moved = false;
         for kind in [PlanInput::Tokens, PlanInput::Hidden] {
             let deficit = {
@@ -298,6 +430,9 @@ fn spooler_loop(shared: Arc<SpoolShared>) {
             for _ in 0..deficit {
                 if shared.stopping.load(Ordering::Relaxed) {
                     return;
+                }
+                if over_cap(&*shared) {
+                    break;
                 }
                 match inner.try_pop(kind) {
                     Some(b) => {
@@ -353,7 +488,13 @@ impl BundleSource for SpooledSource {
                     continue;
                 }
                 self.shared.hits.fetch_add(1, Ordering::Relaxed);
+                // The notify also wakes the spooler, which runs any due
+                // compaction off the consumer path; only a spooler-less
+                // spool (restart recovery) compacts inline here.
                 self.shared.cv.notify_all();
+                if self.shared.inner.is_none() {
+                    self.shared.maybe_compact();
+                }
                 return Some(b);
             }
             match &self.shared.inner {
@@ -395,6 +536,9 @@ impl BundleSource for SpooledSource {
                     return self.shared.inner.as_ref().and_then(|i| i.try_pop(kind));
                 }
                 self.shared.cv.notify_all();
+                if self.shared.inner.is_none() {
+                    self.shared.maybe_compact();
+                }
                 Some(b)
             }
             None => self.shared.inner.as_ref().and_then(|i| i.try_pop(kind)),
@@ -495,7 +639,7 @@ mod tests {
             let spool = SpooledSource::open(
                 &dir,
                 Some(pool.clone() as Arc<dyn BundleSource>),
-                SpoolConfig { depth: 3 },
+                SpoolConfig { depth: 3, ..SpoolConfig::default() },
             )
             .unwrap();
             spool.wait_spooled(3);
@@ -525,7 +669,7 @@ mod tests {
             let spool = SpooledSource::open(
                 &dir,
                 Some(pool.clone() as Arc<dyn BundleSource>),
-                SpoolConfig { depth: 3 },
+                SpoolConfig { depth: 3, ..SpoolConfig::default() },
             )
             .unwrap();
             spool.wait_spooled(3);
@@ -560,6 +704,108 @@ mod tests {
     }
 
     #[test]
+    fn tombstone_threshold_triggers_compaction_and_shrinks_file() {
+        let dir = temp_dir("compact");
+        let grown;
+        {
+            let pool = hidden_pool("sp-g", 6);
+            let spool = SpooledSource::open(
+                &dir,
+                Some(pool.clone() as Arc<dyn BundleSource>),
+                SpoolConfig { depth: 6, compact_after: 3, ..SpoolConfig::default() },
+            )
+            .unwrap();
+            spool.wait_spooled(6);
+            grown = spool.file_bytes();
+            for want in 1..=4u64 {
+                let b = spool.pop(PlanInput::Hidden).expect("disk bundle");
+                assert_eq!(b.session, format!("sp-g-{want}"));
+            }
+            // 4 consumes crossed the threshold of 3. The rewrite runs
+            // on the spooler thread (off the consumer path), so give it
+            // a moment; then the counter has restarted and the file
+            // holds fewer records than its append-only peak.
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+            while spool.compactions() == 0 && std::time::Instant::now() < deadline {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            assert!(spool.compactions() >= 1, "threshold must trigger a rewrite");
+            assert!(spool.tombstones() < 3, "counter restarts at compaction");
+            assert!(
+                spool.file_bytes() < grown,
+                "{} bytes after compaction vs {grown} at peak",
+                spool.file_bytes()
+            );
+            spool.stop();
+        }
+        // The compacted file must still be a valid spool: restart
+        // serves exactly the unconsumed bundles, bit-identical.
+        let spool = SpooledSource::open(&dir, None, SpoolConfig::default()).unwrap();
+        assert_eq!(spool.restored(), 2);
+        let b5 = spool.pop(PlanInput::Hidden).expect("bundle 5");
+        let b6 = spool.pop(PlanInput::Hidden).expect("bundle 6");
+        assert_eq!((b5.session.as_str(), b6.session.as_str()), ("sp-g-5", "sp-g-6"));
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let manifest = plan_demand(&cfg, PlanInput::Hidden);
+        let (p0, _) = crate::offline::pool::generate_bundle(
+            &mut crate::sharing::provider::FastCrGen::from_session_fast("sp-g-5"),
+            &manifest,
+        );
+        assert_eq!(b5.p0, p0, "compaction must preserve bundle bytes");
+        spool.stop();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn max_bytes_caps_file_growth_without_losing_bundles() {
+        let dir = temp_dir("cap");
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let manifest = plan_demand(&cfg, PlanInput::Hidden);
+        let (p0, p1) = crate::offline::pool::generate_bundle(
+            &mut crate::sharing::provider::FastCrGen::from_session_fast("sizer-1"),
+            &manifest,
+        );
+        let record = wire::encode_bundle(&SessionBundle {
+            seq: 1,
+            input: PlanInput::Hidden,
+            session: "sizer-1".to_string(),
+            p0,
+            p1,
+            words_per_party: manifest.words_per_party(),
+        })
+        .len() as u64
+            + 24; // frame header + checksum
+        let cap = record * 5 / 2; // room for ~2 records
+
+        let pool = hidden_pool("sp-b", 8);
+        let spool = SpooledSource::open(
+            &dir,
+            Some(pool.clone() as Arc<dyn BundleSource>),
+            SpoolConfig { depth: 8, compact_after: 0, max_bytes: Some(cap) },
+        )
+        .unwrap();
+        spool.wait_spooled(2);
+        // The spooler checks the cap before each transfer round, so the
+        // file may overshoot by at most one record.
+        assert!(
+            spool.file_bytes() <= cap + record,
+            "file {} exceeds cap {cap} by more than one record",
+            spool.file_bytes()
+        );
+        // Every produced bundle is still served exactly once — from
+        // disk while the cap allows, from the live source beyond it.
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..8 {
+            let b = spool.pop(PlanInput::Hidden).expect("bundle");
+            assert!(seen.insert(b.session.clone()), "duplicate {}", b.session);
+        }
+        assert!(spool.pop(PlanInput::Hidden).is_none(), "all 8 drained");
+        assert_eq!(seen.len(), 8);
+        spool.stop();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn midfile_corruption_quarantines_whole_spool() {
         let dir = temp_dir("poison");
         {
@@ -567,7 +813,7 @@ mod tests {
             let spool = SpooledSource::open(
                 &dir,
                 Some(pool.clone() as Arc<dyn BundleSource>),
-                SpoolConfig { depth: 2 },
+                SpoolConfig { depth: 2, ..SpoolConfig::default() },
             )
             .unwrap();
             spool.wait_spooled(2);

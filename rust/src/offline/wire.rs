@@ -63,6 +63,17 @@ pub mod msg {
     pub const ERR: u8 = 5;
     /// Spool only: tombstone marking a bundle (by session label) consumed.
     pub const CONSUMED: u8 = 6;
+    /// Client → dealer: request a telemetry snapshot (no payload).
+    pub const STATS: u8 = 7;
+    /// Dealer → client: telemetry snapshot (payload: UTF-8 JSON).
+    pub const STATS_OK: u8 = 8;
+    /// Server → client greeting: `[auth_required u8 | nonce 16 B]`. Sent
+    /// by `dealer-serve` and `party-serve` immediately after accept,
+    /// before any client frame.
+    pub const CHALLENGE: u8 = 9;
+    /// Client → server: PSK challenge response (32-byte SHA-256, or
+    /// empty when the server's challenge did not require auth).
+    pub const AUTH: u8 = 10;
 }
 
 /// Why a frame could not be read.
@@ -166,33 +177,141 @@ pub fn read_frame<R: Read>(r: &mut R) -> std::result::Result<(u8, Vec<u8>), Fram
 }
 
 // ---------------------------------------------------------------------
+// PSK challenge/response handshake
+// ---------------------------------------------------------------------
+//
+// The FNV frame checksum guards against corruption, not against an
+// unauthorized peer. Services that hold one-time-pad material
+// (`dealer-serve`, `party-serve`) therefore gate their HELLO behind a
+// shared-key challenge/response: the server greets every connection
+// with `CHALLENGE` (a fresh nonce + an auth-required flag) and the
+// client answers `AUTH` with `SHA-256("secformer-psk-v1" || psk ||
+// nonce)`. Without a configured key the exchange still runs (empty
+// answer) so both protocols keep one handshake shape. This
+// authenticates the *connection*, not each frame — wire privacy/MACs
+// (TLS) remain deployment-level concerns.
+
+/// Domain-separation tag mixed into every PSK response.
+const PSK_DOMAIN: &[u8] = b"secformer-psk-v1";
+
+/// The challenge response: `SHA-256(domain || psk || nonce)`.
+pub fn psk_response(psk: &str, nonce: &[u8]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(PSK_DOMAIN);
+    h.update(psk.as_bytes());
+    h.update(nonce);
+    let mut out = [0u8; 32];
+    out.copy_from_slice(&h.finalize());
+    out
+}
+
+/// A fresh 16-byte challenge nonce (time + pid + counter, hashed —
+/// replay protection for the handshake, not a general-purpose CSPRNG).
+fn fresh_nonce() -> [u8; 16] {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static CTR: AtomicU64 = AtomicU64::new(0);
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    let mut h = Sha256::new();
+    h.update(b"secformer-nonce");
+    h.update(now.to_le_bytes());
+    h.update(std::process::id().to_le_bytes());
+    h.update(CTR.fetch_add(1, Ordering::Relaxed).to_le_bytes());
+    let d = h.finalize();
+    let mut out = [0u8; 16];
+    out.copy_from_slice(&d[..16]);
+    out
+}
+
+/// Server half of the handshake: send `CHALLENGE`, read `AUTH`, verify
+/// the response when a `psk` is configured. Must be called before any
+/// other frame is exchanged; on failure an `ERR` frame is sent and an
+/// error returned (the caller drops the connection).
+pub fn server_auth<S: Read + Write>(stream: &mut S, psk: Option<&str>) -> Result<()> {
+    let nonce = fresh_nonce();
+    let mut payload = Vec::with_capacity(17);
+    payload.push(psk.is_some() as u8);
+    payload.extend_from_slice(&nonce);
+    write_frame(stream, msg::CHALLENGE, &payload)?;
+    let (ty, answer) = read_frame(stream).map_err(|e| anyhow::anyhow!("psk handshake: {e}"))?;
+    if ty != msg::AUTH {
+        let _ = write_frame(stream, msg::ERR, b"expected AUTH");
+        bail!("client answered challenge with message type {ty}");
+    }
+    if let Some(key) = psk {
+        let want = psk_response(key, &nonce);
+        // Fixed-time-ish comparison: fold the whole answer before branching.
+        let ok = answer.len() == 32
+            && answer
+                .iter()
+                .zip(want.iter())
+                .fold(0u8, |acc, (a, b)| acc | (a ^ b))
+                == 0;
+        if !ok {
+            let _ = write_frame(stream, msg::ERR, b"psk authentication failed");
+            bail!("client failed PSK authentication");
+        }
+    }
+    Ok(())
+}
+
+/// Client half of the handshake: read the server's `CHALLENGE` and
+/// answer `AUTH`. Errors if the server requires a key and none is
+/// configured locally. The server reports a *wrong* key asynchronously
+/// (an `ERR` frame in place of the next expected reply).
+pub fn client_auth<S: Read + Write>(stream: &mut S, psk: Option<&str>) -> Result<()> {
+    let (ty, payload) =
+        read_frame(stream).map_err(|e| anyhow::anyhow!("psk handshake: {e}"))?;
+    if ty == msg::ERR {
+        bail!("server rejected connection: {}", String::from_utf8_lossy(&payload));
+    }
+    if ty != msg::CHALLENGE {
+        bail!("expected server CHALLENGE, got message type {ty}");
+    }
+    if payload.len() != 17 {
+        bail!("malformed CHALLENGE ({} bytes)", payload.len());
+    }
+    let required = payload[0] != 0;
+    let nonce = &payload[1..17];
+    let answer: Vec<u8> = match (required, psk) {
+        (true, None) => bail!("server requires a pre-shared key (pass --psk)"),
+        (_, Some(key)) => psk_response(key, nonce).to_vec(),
+        (false, None) => Vec::new(),
+    };
+    write_frame(stream, msg::AUTH, &answer)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
 // Payload encoding primitives
 // ---------------------------------------------------------------------
 
-fn put_u64s(buf: &mut Vec<u8>, v: &[u64]) {
+pub(crate) fn put_u64s(buf: &mut Vec<u8>, v: &[u64]) {
     buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
     for &x in v {
         buf.extend_from_slice(&x.to_le_bytes());
     }
 }
 
-fn put_str(buf: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(buf: &mut Vec<u8>, s: &str) {
     buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
     buf.extend_from_slice(s.as_bytes());
 }
 
 /// Bounds-checked little-endian reader over a payload slice.
-struct Cursor<'a> {
+pub(crate) struct Cursor<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Cursor<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
         Cursor { buf, pos: 0 }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.buf.len() {
             bail!("payload underrun at byte {} (+{n})", self.pos);
         }
@@ -201,19 +320,19 @@ impl<'a> Cursor<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn u64s(&mut self) -> Result<Vec<u64>> {
+    pub(crate) fn u64s(&mut self) -> Result<Vec<u64>> {
         let n = self.u64()?;
         if n > MAX_FRAME_LEN / 8 {
             bail!("vector length {n} exceeds frame cap");
@@ -225,12 +344,12 @@ impl<'a> Cursor<'a> {
             .collect())
     }
 
-    fn string(&mut self) -> Result<String> {
+    pub(crate) fn string(&mut self) -> Result<String> {
         let n = self.u32()? as usize;
         Ok(std::str::from_utf8(self.take(n)?)?.to_string())
     }
 
-    fn done(&self) -> Result<()> {
+    pub(crate) fn done(&self) -> Result<()> {
         if self.pos != self.buf.len() {
             bail!("{} trailing bytes after payload", self.buf.len() - self.pos);
         }

@@ -1,0 +1,37 @@
+//! The distributed two-party online runtime: run computing party S1 as
+//! a standalone `party-serve` process and drive S0 against it over a
+//! real TCP socket.
+//!
+//! SecFormer's threat model (like PUMA's and MPCFormer's) places the
+//! two computing servers on *separate machines*; the in-process engine
+//! (`engine/mod.rs`) spawns them as threads over memory channels, which
+//! is perfect for protocol work but is a simulator, not a deployment.
+//! This module closes that gap:
+//!
+//! * [`wire`] — the session protocol: a PSK-gated HELLO handshake that
+//!   fingerprints the model configuration and S1's weight shares, then
+//!   per-session framing so ONE TCP link multiplexes any number of
+//!   concurrent inferences (session start/ack, protocol messages,
+//!   result return).
+//! * [`runtime`] — both ends of the link: the `party-serve` host loop
+//!   that accepts sessions, provisions S1's correlated randomness from
+//!   its *own* [`crate::offline::source::BundleSource`] (local pool,
+//!   remote dealer, or disk spool) and executes the model half; and the
+//!   [`runtime::RemoteParty`] client the engine plugs in as
+//!   `PeerRuntime::Remote`.
+//!
+//! Degradation contract: a pooled session only uses pregenerated
+//! bundles when *both* sides hold the same bundle (matched by session
+//! label in the start/ack exchange); otherwise both fall back to the
+//! synchronized seeded stream — results stay correct, only the
+//! prefetch win is lost. See `rust/ARCHITECTURE.md` §Deployment
+//! topologies for the process layouts and the wire specification.
+#![warn(missing_docs)]
+
+pub mod runtime;
+pub mod wire;
+
+pub use runtime::{
+    serve_party, spawn_party_host, PartyHostConfig, RemoteParty, RemoteSession,
+};
+pub use wire::config_fingerprint;

@@ -1,0 +1,695 @@
+//! Both ends of the two-party link: the `party-serve` host that runs
+//! computing party S1, and the [`RemoteParty`] client the engine plugs
+//! in as its `PeerRuntime::Remote`.
+//!
+//! ## Host (`party-serve`)
+//!
+//! One accept loop; one reader thread per connection (the connection
+//! handler itself) demultiplexes session frames; one worker thread per
+//! *session* executes `bert_forward` for S1. The host provisions S1's
+//! correlated randomness from its **own** [`BundleSource`] — an
+//! in-process pool, a remote dealer's prefetch queue, or a disk spool —
+//! never from the coordinator: pad material stays on the machine that
+//! consumes it. Because bundle generation is a pure function of the
+//! session label, a host pool started with the same prefix as the
+//! coordinator's produces the *same* bundles; the start/ack exchange
+//! matches them by label and degrades any mismatch to the synchronized
+//! seeded fallback.
+//!
+//! ## Client ([`RemoteParty`])
+//!
+//! One TCP connection carries any number of concurrent sessions: a
+//! single reader thread routes `ACK`/`MSG`/`RESULT` frames to
+//! per-session channels, writers share one frame-atomic mutex. Loss of
+//! the link marks the client dead: sessions blocked mid-protocol fail
+//! fast (the transport's `recv` contract), and new sessions refuse to
+//! start.
+
+use crate::net::stats::CommStats;
+use crate::net::transport::{channel_pair, Transport};
+use crate::nn::config::ModelConfig;
+use crate::nn::model::{bert_forward, InputShare};
+use crate::nn::weights::ShareMap;
+use crate::offline::planner::PlanInput;
+use crate::offline::pool::SessionBundle;
+use crate::offline::provider::PooledProvider;
+use crate::offline::source::BundleSource;
+use crate::offline::wire::{client_auth, msg, read_frame, server_auth, write_frame};
+use crate::party::wire::{
+    config_fingerprint, decode_ack, decode_msg, decode_result, decode_start, encode_ack,
+    encode_msg, encode_result, encode_start, pmsg, SessionStart, INPUT_HIDDEN, MODE_DEALER,
+    MODE_POOLED,
+};
+use crate::proto::ctx::PartyCtx;
+use crate::sharing::dealer::{DealerServer, Party1Provider};
+use crate::sharing::provider::{FastSeededProvider, Provider};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+// ---------------------------------------------------------------------
+// Host side (party-serve)
+// ---------------------------------------------------------------------
+
+/// Host-side policy knobs.
+#[derive(Clone, Debug)]
+pub struct PartyHostConfig {
+    /// Require this pre-shared key at the connection handshake.
+    pub psk: Option<String>,
+    /// Pooled sessions pop bundles from the host's source until the
+    /// coordinator's bundle label is found, stashing non-matching
+    /// bundles for other in-flight sessions. This bounds the stash so a
+    /// misaligned prefix degrades to seeded fallback instead of
+    /// draining the pool forever.
+    pub stash_limit: usize,
+}
+
+impl Default for PartyHostConfig {
+    fn default() -> Self {
+        PartyHostConfig { psk: None, stash_limit: 64 }
+    }
+}
+
+/// Session-id → inbound-message queue routing table of one connection.
+type SessionMap = Arc<Mutex<HashMap<u64, Sender<Vec<u64>>>>>;
+/// Popped-but-not-yet-claimed bundles, keyed by session label.
+type BundleStash = Arc<Mutex<HashMap<String, SessionBundle>>>;
+
+/// Everything one connection (and its session threads) needs.
+struct HostCtx {
+    cfg: ModelConfig,
+    shares1: Arc<ShareMap>,
+    source: Option<Arc<dyn BundleSource>>,
+    host: PartyHostConfig,
+    fingerprint: [u8; 32],
+}
+
+/// Serve party S1 on `bind`, forever (one handler thread per
+/// connection, one worker thread per session). This is the body of
+/// `secformer party-serve`.
+pub fn serve_party(
+    bind: &str,
+    cfg: ModelConfig,
+    shares1: Arc<ShareMap>,
+    source: Option<Arc<dyn BundleSource>>,
+    host: PartyHostConfig,
+) -> Result<()> {
+    let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
+    eprintln!("secformer party (S1) listening on {bind}");
+    party_accept_loop(listener, cfg, shares1, source, host);
+    Ok(())
+}
+
+/// Accept loop over an already-bound listener; returns only if the
+/// listener errors. Exposed so tests and benchmarks can host a party on
+/// an ephemeral port.
+pub fn party_accept_loop(
+    listener: TcpListener,
+    cfg: ModelConfig,
+    shares1: Arc<ShareMap>,
+    source: Option<Arc<dyn BundleSource>>,
+    host: PartyHostConfig,
+) {
+    let fingerprint = config_fingerprint(&cfg, &shares1);
+    let ctx = Arc::new(HostCtx { cfg, shares1, source, host, fingerprint });
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let ctx = ctx.clone();
+                std::thread::spawn(move || {
+                    let peer = s.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+                    if let Err(e) = handle_party_conn(s, ctx) {
+                        eprintln!("party: connection {peer}: {e}");
+                    }
+                });
+            }
+            Err(e) => {
+                eprintln!("party: accept failed: {e}");
+                return;
+            }
+        }
+    }
+}
+
+/// Spawn the accept loop on a background thread bound to an ephemeral
+/// loopback port; returns the bound address. The thread lives until the
+/// process exits (tests/benchmarks only — deployments run
+/// [`serve_party`]).
+pub fn spawn_party_host(
+    cfg: ModelConfig,
+    shares1: Arc<ShareMap>,
+    source: Option<Arc<dyn BundleSource>>,
+    host: PartyHostConfig,
+) -> Result<SocketAddr> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("party-accept".to_string())
+        .spawn(move || party_accept_loop(listener, cfg, shares1, source, host))
+        .context("spawn party accept loop")?;
+    Ok(addr)
+}
+
+fn send_err(stream: &mut TcpStream, why: &str) {
+    let _ = write_frame(stream, msg::ERR, why.as_bytes());
+}
+
+fn handle_party_conn(mut stream: TcpStream, ctx: Arc<HostCtx>) -> Result<()> {
+    stream.set_nodelay(true)?;
+    server_auth(&mut stream, ctx.host.psk.as_deref())?;
+    let (ty, payload) = read_frame(&mut stream).map_err(|e| anyhow!("handshake: {e}"))?;
+    if ty != pmsg::HELLO {
+        send_err(&mut stream, "expected HELLO");
+        bail!("client opened with message type {ty}");
+    }
+    if payload.len() != 32 || payload[..] != ctx.fingerprint[..] {
+        send_err(&mut stream, "model fingerprint mismatch");
+        bail!("client model fingerprint does not match this party's model");
+    }
+    write_frame(&mut stream, pmsg::HELLO_OK, b"secformer-party/1")?;
+
+    // Shared connection state: a frame-atomic writer for session
+    // threads, the session-id → inbound-queue routing table, and the
+    // label-matched bundle stash.
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let sessions: SessionMap = Arc::new(Mutex::new(HashMap::new()));
+    let stash: BundleStash = Arc::new(Mutex::new(HashMap::new()));
+
+    loop {
+        let (ty, payload) = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // client went away
+        };
+        match ty {
+            pmsg::START => {
+                let (id, start) = decode_start(&payload)?;
+                // Register the inbound queue BEFORE acking, so no MSG
+                // can race the session thread's setup.
+                let (tx, rx) = channel();
+                sessions.lock().unwrap().insert(id, tx);
+                let ctx2 = ctx.clone();
+                let writer2 = writer.clone();
+                let stash2 = stash.clone();
+                let sessions2 = sessions.clone();
+                std::thread::Builder::new()
+                    .name(format!("party-session-{id}"))
+                    .spawn(move || {
+                        run_party_session(&ctx2, &writer2, &stash2, id, start, rx);
+                        sessions2.lock().unwrap().remove(&id);
+                    })
+                    .context("spawn party session")?;
+            }
+            pmsg::MSG => {
+                let (id, words) = decode_msg(&payload)?;
+                if let Some(tx) = sessions.lock().unwrap().get(&id) {
+                    let _ = tx.send(words);
+                }
+            }
+            pmsg::BYE => return Ok(()),
+            t if t == msg::ERR => return Ok(()),
+            other => {
+                send_err(&mut stream, "unexpected message");
+                bail!("unexpected message type {other} after handshake");
+            }
+        }
+    }
+}
+
+/// Pop bundles from the host's source until `label` is found, stashing
+/// non-matching pops for other in-flight sessions (concurrent sessions
+/// race their pops, so strict FIFO order cannot be assumed). `None`
+/// means the source cannot produce the label — the session degrades to
+/// seeded fallback, exactly like a coordinator-side pool miss.
+fn match_bundle(
+    stash: &Mutex<HashMap<String, SessionBundle>>,
+    source: &Arc<dyn BundleSource>,
+    label: &str,
+    kind: PlanInput,
+    limit: usize,
+) -> Option<SessionBundle> {
+    if let Some(b) = stash.lock().unwrap().remove(label) {
+        return Some(b);
+    }
+    loop {
+        if stash.lock().unwrap().len() >= limit {
+            // A peer session may have stashed our label while we
+            // popped; check once more before degrading.
+            return stash.lock().unwrap().remove(label);
+        }
+        let b = source.pop(kind)?;
+        if b.session == label {
+            return Some(b);
+        }
+        let mut st = stash.lock().unwrap();
+        st.insert(b.session.clone(), b);
+        if let Some(hit) = st.remove(label) {
+            return Some(hit);
+        }
+    }
+}
+
+/// Per-session transport on the host: frames outbound messages with the
+/// session id through the connection's shared writer; inbound messages
+/// arrive pre-routed on the session's queue.
+struct HostSessionTransport {
+    writer: Arc<Mutex<TcpStream>>,
+    id: u64,
+    rx: Receiver<Vec<u64>>,
+}
+
+impl Transport for HostSessionTransport {
+    fn send(&self, data: Vec<u64>) {
+        // Same contract as every transport here: a send to a vanished
+        // peer is dropped; the matching recv reports the loss.
+        let mut w = self.writer.lock().unwrap();
+        let _ = write_frame(&mut *w, pmsg::MSG, &encode_msg(self.id, &data));
+    }
+
+    fn recv(&self) -> Vec<u64> {
+        self.rx.recv().expect("party session: coordinator disconnected mid-protocol")
+    }
+}
+
+fn run_party_session(
+    ctx: &HostCtx,
+    writer: &Arc<Mutex<TcpStream>>,
+    stash: &Mutex<HashMap<String, SessionBundle>>,
+    id: u64,
+    start: SessionStart,
+    rx: Receiver<Vec<u64>>,
+) {
+    let kind = if start.input_kind == INPUT_HIDDEN {
+        PlanInput::Hidden
+    } else {
+        PlanInput::Tokens
+    };
+    if let Some(src) = &ctx.source {
+        src.note_arrival(kind);
+    }
+    // Pooled sessions use pregenerated material only when BOTH sides
+    // hold the same bundle; the ack commits the joint decision.
+    let bundle = if start.mode == MODE_POOLED && start.coord_has_bundle {
+        ctx.source
+            .as_ref()
+            .and_then(|src| {
+                match_bundle(stash, src, &start.bundle_label, kind, ctx.host.stash_limit)
+            })
+    } else {
+        None
+    };
+    let use_pool = bundle.is_some();
+    {
+        let mut w = writer.lock().unwrap();
+        if write_frame(&mut *w, pmsg::ACK, &encode_ack(id, use_pool)).is_err() {
+            return;
+        }
+    }
+
+    let stats = CommStats::new_handle();
+    let prov: Box<dyn Provider> = match start.mode {
+        MODE_DEALER => {
+            // The assistant server T is co-located with S1 (it serves
+            // only S1's corrections) — spawn it per session, exactly as
+            // the in-process engine does; dropping the provider shuts
+            // it down.
+            let (s1_end, t_end) = channel_pair();
+            let label = start.label.clone();
+            let _ = std::thread::Builder::new()
+                .name(format!("party-dealer-{id}"))
+                .spawn(move || {
+                    let mut d = DealerServer::new(&label, Box::new(t_end));
+                    d.run();
+                });
+            Box::new(Party1Provider::new(
+                &start.label,
+                Box::new(s1_end),
+                Some(stats.clone()),
+            ))
+        }
+        MODE_POOLED => match bundle {
+            Some(b) => {
+                stats.record_offline_prefetched(b.words_per_party * 8);
+                let fb = format!("{}/fallback", b.session);
+                let mut p = PooledProvider::new(b.p1, 1, &fb);
+                if let Some(src) = &ctx.source {
+                    p = p.with_pool(src.clone());
+                }
+                Box::new(p)
+            }
+            None => Box::new(FastSeededProvider::new_fast(&start.label, 1)),
+        },
+        _ => Box::new(FastSeededProvider::new_fast(&start.label, 1)),
+    };
+
+    let in1 = match start.input_kind {
+        INPUT_HIDDEN => InputShare::Hidden(start.input),
+        _ => InputShare::OneHot(start.input),
+    };
+    let transport = HostSessionTransport { writer: writer.clone(), id, rx };
+    // Same party-1 identity as the in-process engine (rng seed 0xBB):
+    // a remote session is bit-identical to its in-process twin.
+    let mut pctx = PartyCtx::new(1, Box::new(transport), prov, 0xBB);
+    pctx.stats = stats.clone();
+    let out1 = bert_forward(&mut pctx, &ctx.cfg, ctx.shares1.as_ref(), &in1);
+    drop(pctx); // closes the dealer link (if any)
+
+    let payload = encode_result(id, stats.offline_bytes(), stats.offline_msgs(), &out1);
+    let mut w = writer.lock().unwrap();
+    let _ = write_frame(&mut *w, pmsg::RESULT, &payload);
+}
+
+// ---------------------------------------------------------------------
+// Client side (the engine's remote peer runtime)
+// ---------------------------------------------------------------------
+
+enum SessionCtrl {
+    Ack(bool),
+    Result { offline_bytes: u64, offline_msgs: u64, out1: Vec<u64> },
+}
+
+struct SessionRoute {
+    msg_tx: Sender<Vec<u64>>,
+    ctrl_tx: Sender<SessionCtrl>,
+}
+
+struct PartyShared {
+    writer: Mutex<TcpStream>,
+    sessions: Mutex<HashMap<u64, SessionRoute>>,
+    dead: AtomicBool,
+    stopping: AtomicBool,
+}
+
+impl PartyShared {
+    /// Dropping every route disconnects the per-session channels, which
+    /// unblocks transports (`recv` fails fast) and control waiters.
+    fn mark_dead(&self) {
+        self.dead.store(true, Ordering::Relaxed);
+        self.sessions.lock().unwrap().clear();
+    }
+
+    fn send_frame(&self, ty: u8, payload: &[u8]) -> bool {
+        let mut w = self.writer.lock().unwrap();
+        match write_frame(&mut *w, ty, payload) {
+            Ok(()) => true,
+            Err(_) => {
+                drop(w);
+                self.mark_dead();
+                false
+            }
+        }
+    }
+}
+
+/// A connected remote S1: the engine's `PeerRuntime::Remote` handle.
+/// One connection multiplexes any number of concurrent sessions, so a
+/// coordinator's secure workers share a single `RemoteParty`.
+pub struct RemoteParty {
+    shared: Arc<PartyShared>,
+    next_id: AtomicU64,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// Per-session transport on the client: mirrors
+/// [`HostSessionTransport`] over the shared connection.
+struct ClientSessionTransport {
+    shared: Arc<PartyShared>,
+    id: u64,
+    rx: Receiver<Vec<u64>>,
+}
+
+impl Transport for ClientSessionTransport {
+    fn send(&self, data: Vec<u64>) {
+        let _ = self.shared.send_frame(pmsg::MSG, &encode_msg(self.id, &data));
+    }
+
+    fn recv(&self) -> Vec<u64> {
+        self.rx.recv().expect("remote party disconnected mid-protocol")
+    }
+}
+
+/// One in-flight remote session: hands the engine its S0-side
+/// [`Transport`], then returns S1's output share (and offline stats)
+/// at [`RemoteSession::finish`].
+pub struct RemoteSession {
+    /// The joint pooled/fallback decision from the start/ack exchange:
+    /// `true` iff both sides hold the same pregenerated bundle.
+    pub use_pool: bool,
+    id: u64,
+    shared: Arc<PartyShared>,
+    ctrl_rx: Receiver<SessionCtrl>,
+    transport: Option<Box<dyn Transport>>,
+}
+
+impl RemoteSession {
+    /// The S0-side transport for this session (callable once).
+    pub fn take_transport(&mut self) -> Box<dyn Transport> {
+        self.transport.take().expect("session transport already taken")
+    }
+
+    /// Block until the party returns S1's result; yields
+    /// `(out1, offline_bytes, offline_msgs)`.
+    pub fn finish(self) -> Result<(Vec<u64>, u64, u64)> {
+        match self.ctrl_rx.recv() {
+            Ok(SessionCtrl::Result { offline_bytes, offline_msgs, out1 }) => {
+                Ok((out1, offline_bytes, offline_msgs))
+            }
+            Ok(SessionCtrl::Ack(_)) => Err(anyhow!("party sent a second ACK")),
+            Err(_) => Err(anyhow!("party link lost before session result")),
+        }
+    }
+}
+
+impl Drop for RemoteSession {
+    fn drop(&mut self) {
+        self.shared.sessions.lock().unwrap().remove(&self.id);
+    }
+}
+
+impl RemoteParty {
+    /// Dial a `party-serve` host, run the PSK handshake, and verify the
+    /// model fingerprint (computed locally from `cfg` + S1's weight
+    /// shares — both sides derive shares deterministically, so equal
+    /// models agree).
+    pub fn connect(
+        addr: &str,
+        cfg: &ModelConfig,
+        shares1: &ShareMap,
+        psk: Option<&str>,
+    ) -> Result<Arc<RemoteParty>> {
+        let mut stream =
+            TcpStream::connect(addr).with_context(|| format!("connect to party {addr}"))?;
+        stream.set_nodelay(true)?;
+        client_auth(&mut stream, psk)?;
+        write_frame(&mut stream, pmsg::HELLO, &config_fingerprint(cfg, shares1))?;
+        match read_frame(&mut stream).map_err(|e| anyhow!("party handshake: {e}"))? {
+            (t, _) if t == pmsg::HELLO_OK => {}
+            (t, p) if t == msg::ERR => {
+                bail!("party rejected handshake: {}", String::from_utf8_lossy(&p))
+            }
+            (t, _) => bail!("unexpected handshake reply type {t}"),
+        }
+
+        let reader_stream = stream.try_clone()?;
+        let shared = Arc::new(PartyShared {
+            writer: Mutex::new(stream),
+            sessions: Mutex::new(HashMap::new()),
+            dead: AtomicBool::new(false),
+            stopping: AtomicBool::new(false),
+        });
+        let sh = shared.clone();
+        let reader = std::thread::Builder::new()
+            .name("remote-party-reader".to_string())
+            .spawn(move || reader_loop(sh, reader_stream))
+            .context("spawn remote party reader")?;
+        Ok(Arc::new(RemoteParty {
+            shared,
+            next_id: AtomicU64::new(0),
+            reader: Mutex::new(Some(reader)),
+        }))
+    }
+
+    /// Open a session: ship S1's input share, wait for the ack (which
+    /// settles the joint pooled/fallback decision), and return the
+    /// session handle.
+    pub fn start_session(&self, start: SessionStart) -> Result<RemoteSession> {
+        if self.shared.dead.load(Ordering::Relaxed) {
+            bail!("party link is down");
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let (msg_tx, msg_rx) = channel();
+        let (ctrl_tx, ctrl_rx) = channel();
+        self.shared
+            .sessions
+            .lock()
+            .unwrap()
+            .insert(id, SessionRoute { msg_tx, ctrl_tx });
+        if !self.shared.send_frame(pmsg::START, &encode_start(id, &start)) {
+            self.shared.sessions.lock().unwrap().remove(&id);
+            bail!("party link failed while starting session");
+        }
+        let use_pool = match ctrl_rx.recv() {
+            Ok(SessionCtrl::Ack(v)) => v,
+            Ok(SessionCtrl::Result { .. }) => {
+                self.shared.sessions.lock().unwrap().remove(&id);
+                bail!("party answered START with RESULT");
+            }
+            Err(_) => bail!("party link lost before session ack"),
+        };
+        let transport = ClientSessionTransport { shared: self.shared.clone(), id, rx: msg_rx };
+        Ok(RemoteSession {
+            use_pool,
+            id,
+            shared: self.shared.clone(),
+            ctrl_rx,
+            transport: Some(Box::new(transport)),
+        })
+    }
+
+    /// Close the link: say goodbye, shut the socket, join the reader.
+    /// Idempotent; also runs on drop.
+    pub fn stop(&self) {
+        self.shared.stopping.store(true, Ordering::Relaxed);
+        {
+            let w = self.shared.writer.lock().unwrap();
+            let _ = write_frame(&mut &*w, pmsg::BYE, &[]);
+            let _ = w.shutdown(Shutdown::Both);
+        }
+        self.shared.mark_dead();
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RemoteParty {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn reader_loop(shared: Arc<PartyShared>, mut stream: TcpStream) {
+    loop {
+        if shared.stopping.load(Ordering::Relaxed) {
+            return;
+        }
+        let frame = read_frame(&mut stream);
+        match frame {
+            Ok((t, payload)) if t == pmsg::MSG => match decode_msg(&payload) {
+                Ok((id, words)) => {
+                    let sessions = shared.sessions.lock().unwrap();
+                    if let Some(r) = sessions.get(&id) {
+                        let _ = r.msg_tx.send(words);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("remote party: undecodable MSG ({e}); closing");
+                    shared.mark_dead();
+                    return;
+                }
+            },
+            Ok((t, payload)) if t == pmsg::ACK => match decode_ack(&payload) {
+                Ok((id, use_pool)) => {
+                    let sessions = shared.sessions.lock().unwrap();
+                    if let Some(r) = sessions.get(&id) {
+                        let _ = r.ctrl_tx.send(SessionCtrl::Ack(use_pool));
+                    }
+                }
+                Err(e) => {
+                    eprintln!("remote party: undecodable ACK ({e}); closing");
+                    shared.mark_dead();
+                    return;
+                }
+            },
+            Ok((t, payload)) if t == pmsg::RESULT => match decode_result(&payload) {
+                Ok((id, offline_bytes, offline_msgs, out1)) => {
+                    let sessions = shared.sessions.lock().unwrap();
+                    if let Some(r) = sessions.get(&id) {
+                        let _ = r.ctrl_tx.send(SessionCtrl::Result {
+                            offline_bytes,
+                            offline_msgs,
+                            out1,
+                        });
+                    }
+                }
+                Err(e) => {
+                    eprintln!("remote party: undecodable RESULT ({e}); closing");
+                    shared.mark_dead();
+                    return;
+                }
+            },
+            Ok((t, payload)) if t == msg::ERR => {
+                eprintln!(
+                    "remote party error: {}; closing",
+                    String::from_utf8_lossy(&payload)
+                );
+                shared.mark_dead();
+                return;
+            }
+            Ok((t, _)) => {
+                eprintln!("remote party: unexpected frame type {t}; closing");
+                shared.mark_dead();
+                return;
+            }
+            Err(_) => {
+                // Disconnect (or local shutdown during stop()).
+                shared.mark_dead();
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Xoshiro;
+    use crate::nn::config::Framework;
+    use crate::nn::weights::{random_weights, share_weights};
+
+    fn tiny_host(psk: Option<&str>) -> (SocketAddr, ModelConfig, crate::nn::weights::WeightMap) {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let w = random_weights(&cfg, 77);
+        let (_, s1) = share_weights(&w, &mut Xoshiro::seed_from(0x5EC0));
+        let addr = spawn_party_host(
+            cfg.clone(),
+            Arc::new(s1),
+            None,
+            PartyHostConfig { psk: psk.map(String::from), ..PartyHostConfig::default() },
+        )
+        .expect("spawn party host");
+        (addr, cfg, w)
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_rejected_at_hello() {
+        let (addr, cfg, w) = tiny_host(None);
+        let mut other = cfg.clone();
+        other.fused_attention = false;
+        let (_, s1) = share_weights(&w, &mut Xoshiro::seed_from(0x5EC0));
+        let err = RemoteParty::connect(&addr.to_string(), &other, &s1, None)
+            .expect_err("mismatched config must be rejected");
+        assert!(err.to_string().contains("rejected"), "{err}");
+    }
+
+    #[test]
+    fn psk_is_enforced_both_ways() {
+        let (addr, cfg, w) = tiny_host(Some("sesame"));
+        let (_, s1) = share_weights(&w, &mut Xoshiro::seed_from(0x5EC0));
+        // No key at all: the client refuses locally (server demands one).
+        let err = RemoteParty::connect(&addr.to_string(), &cfg, &s1, None)
+            .expect_err("keyless client must fail");
+        assert!(err.to_string().contains("pre-shared key"), "{err}");
+        // Wrong key: the server rejects before HELLO_OK (surfaced as an
+        // ERR frame or, if the close races our HELLO write, an I/O
+        // error — either way the connection must not come up).
+        RemoteParty::connect(&addr.to_string(), &cfg, &s1, Some("wrong"))
+            .expect_err("wrong key must fail");
+        // Right key: handshake completes.
+        let rp = RemoteParty::connect(&addr.to_string(), &cfg, &s1, Some("sesame"))
+            .expect("correct key connects");
+        rp.stop();
+    }
+}

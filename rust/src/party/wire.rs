@@ -1,0 +1,336 @@
+//! The two-party session protocol: handshake fingerprints and
+//! per-session payload encodings.
+//!
+//! Frames reuse the versioned/checksummed layout of
+//! [`crate::offline::wire`] (magic `SBW1`, FNV-1a payload checksum) so
+//! one wire toolkit serves every TCP surface in the codebase; the
+//! party protocol claims its own message-type range (16–23) so a
+//! coordinator that dials a dealer port (or vice versa) fails on the
+//! first frame instead of desyncing.
+//!
+//! ## Connection lifecycle
+//!
+//! ```text
+//!   client (S0 / coordinator)            server (party-serve, S1)
+//!   ───────────────────────────────────────────────────────────────
+//!                      ◀── CHALLENGE  (nonce, auth-required flag)
+//!   AUTH            ──▶                (PSK response, or empty)
+//!   HELLO           ──▶                (config/weights fingerprint)
+//!                      ◀── HELLO_OK   (server banner)
+//!   START #id       ──▶                (session label, mode, input share)
+//!                      ◀── ACK #id    (pooled? both sides now agree)
+//!   MSG #id ◀──────────▶ MSG #id      (online protocol rounds)
+//!                      ◀── RESULT #id (S1 output share + offline stats)
+//!   BYE             ──▶
+//! ```
+//!
+//! Every session-scoped payload starts with the client-assigned session
+//! id (u64), which is how concurrent inferences multiplex one socket.
+//!
+//! ## What the HELLO fingerprint covers
+//!
+//! Two-party inference is only meaningful when both processes hold the
+//! same model: the same [`ModelConfig`] (shapes, framework, protocol
+//! constants, attention path) and the same S1 weight shares (both sides
+//! derive shares from the plaintext weights with the engine's fixed
+//! sharing seed, so equal weights ⇒ equal shares). The fingerprint
+//! hashes both; a mismatch is rejected at HELLO, before any share of
+//! the input leaves the coordinator.
+
+use crate::nn::config::{Framework, ModelConfig};
+use crate::nn::weights::ShareMap;
+use crate::offline::wire::{put_str, put_u64s, Cursor};
+use anyhow::{bail, Result};
+use sha2::{Digest, Sha256};
+
+/// Message-type tags of the party protocol (disjoint from
+/// [`crate::offline::wire::msg`] so endpoint mixups fail fast).
+pub mod pmsg {
+    /// Client → server: config/weights fingerprint (32 bytes).
+    pub const HELLO: u8 = 16;
+    /// Server → client: handshake accepted (payload: banner string).
+    pub const HELLO_OK: u8 = 17;
+    /// Client → server: open a session (label, mode, S1 input share).
+    pub const START: u8 = 18;
+    /// Server → client: session accepted; reports whether the server
+    /// found the matching pregenerated bundle (`use_pool`).
+    pub const ACK: u8 = 19;
+    /// Either direction: one online protocol message for a session.
+    pub const MSG: u8 = 20;
+    /// Server → client: S1's output share + offline-phase stats.
+    pub const RESULT: u8 = 21;
+    /// Client → server: clean goodbye, no more sessions on this link.
+    pub const BYE: u8 = 22;
+}
+
+/// Session offline mode tag: full dealer protocol (S1 runs a local T).
+pub const MODE_DEALER: u8 = 0;
+/// Session offline mode tag: synchronized seeded generation.
+pub const MODE_SEEDED: u8 = 1;
+/// Session offline mode tag: pregenerated bundles (subject to the
+/// start/ack agreement).
+pub const MODE_POOLED: u8 = 2;
+
+/// Input-share kind tag: pre-embedded hidden states.
+pub const INPUT_HIDDEN: u8 = 0;
+/// Input-share kind tag: one-hot token shares.
+pub const INPUT_ONEHOT: u8 = 1;
+
+/// FNV-1a over the little-endian bytes of a word vector (cheap
+/// per-tensor digest folded into [`config_fingerprint`]).
+fn fnv1a64_words(words: &[u64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn framework_tag(f: Framework) -> u8 {
+    match f {
+        Framework::Crypten => 0,
+        Framework::Puma => 1,
+        Framework::MpcFormer => 2,
+        Framework::SecFormer => 3,
+    }
+}
+
+/// SHA-256 over the model configuration and S1's weight-share map
+/// (names, shapes and values). Compared at HELLO so a coordinator
+/// never drives a party holding a different model.
+pub fn config_fingerprint(cfg: &ModelConfig, shares1: &ShareMap) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(b"secformer-party-v1");
+    for v in [
+        cfg.layers,
+        cfg.hidden,
+        cfg.heads,
+        cfg.intermediate,
+        cfg.seq,
+        cfg.vocab,
+        cfg.num_labels,
+        cfg.rsqrt_iters,
+        cfg.div_iters,
+    ] {
+        h.update((v as u64).to_le_bytes());
+    }
+    h.update([
+        framework_tag(cfg.framework),
+        cfg.causal as u8,
+        cfg.fused_attention as u8,
+    ]);
+    h.update(cfg.eta_layernorm.to_bits().to_le_bytes());
+    h.update(cfg.eta_softmax.to_bits().to_le_bytes());
+    // BTreeMap iterates in sorted key order — canonical by construction.
+    for (name, words) in shares1 {
+        h.update((name.len() as u64).to_le_bytes());
+        h.update(name.as_bytes());
+        h.update((words.len() as u64).to_le_bytes());
+        h.update(fnv1a64_words(words).to_le_bytes());
+    }
+    let mut out = [0u8; 32];
+    out.copy_from_slice(&h.finalize());
+    out
+}
+
+/// Everything S1 needs to run one session (the `START` payload minus
+/// the session id).
+#[derive(Clone, Debug)]
+pub struct SessionStart {
+    /// The session label (`{model_label}-{counter}`) every
+    /// label-derived stream (seeded providers, dealer PRFs, fallbacks)
+    /// is keyed by.
+    pub label: String,
+    /// [`MODE_DEALER`], [`MODE_SEEDED`] or [`MODE_POOLED`].
+    pub mode: u8,
+    /// Pooled mode: the coordinator holds its half of a pregenerated
+    /// bundle. The server only commits to the pooled path when it finds
+    /// the matching bundle too.
+    pub coord_has_bundle: bool,
+    /// Pooled mode: the session label of the coordinator's bundle
+    /// (empty when `coord_has_bundle` is false).
+    pub bundle_label: String,
+    /// [`INPUT_HIDDEN`] or [`INPUT_ONEHOT`].
+    pub input_kind: u8,
+    /// S1's additive share of the model input.
+    pub input: Vec<u64>,
+}
+
+/// Encode a `START` payload.
+pub fn encode_start(session_id: u64, s: &SessionStart) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(32 + s.label.len() + s.input.len() * 8);
+    buf.extend_from_slice(&session_id.to_le_bytes());
+    buf.push(s.mode);
+    buf.push(s.coord_has_bundle as u8);
+    buf.push(s.input_kind);
+    put_str(&mut buf, &s.label);
+    put_str(&mut buf, &s.bundle_label);
+    put_u64s(&mut buf, &s.input);
+    buf
+}
+
+/// Decode a `START` payload into `(session_id, start)`.
+pub fn decode_start(payload: &[u8]) -> Result<(u64, SessionStart)> {
+    let mut c = Cursor::new(payload);
+    let session_id = c.u64()?;
+    let mode = c.u8()?;
+    if mode > MODE_POOLED {
+        bail!("unknown session mode tag {mode}");
+    }
+    let coord_has_bundle = c.u8()? != 0;
+    let input_kind = c.u8()?;
+    if input_kind > INPUT_ONEHOT {
+        bail!("unknown input-kind tag {input_kind}");
+    }
+    let label = c.string()?;
+    let bundle_label = c.string()?;
+    let input = c.u64s()?;
+    c.done()?;
+    Ok((
+        session_id,
+        SessionStart { label, mode, coord_has_bundle, bundle_label, input_kind, input },
+    ))
+}
+
+/// Encode an `ACK` payload.
+pub fn encode_ack(session_id: u64, use_pool: bool) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(9);
+    buf.extend_from_slice(&session_id.to_le_bytes());
+    buf.push(use_pool as u8);
+    buf
+}
+
+/// Decode an `ACK` payload into `(session_id, use_pool)`.
+pub fn decode_ack(payload: &[u8]) -> Result<(u64, bool)> {
+    let mut c = Cursor::new(payload);
+    let session_id = c.u64()?;
+    let use_pool = c.u8()? != 0;
+    c.done()?;
+    Ok((session_id, use_pool))
+}
+
+/// Encode a `MSG` payload (one online protocol message).
+pub fn encode_msg(session_id: u64, words: &[u64]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + words.len() * 8);
+    buf.extend_from_slice(&session_id.to_le_bytes());
+    put_u64s(&mut buf, words);
+    buf
+}
+
+/// Decode a `MSG` payload into `(session_id, words)`.
+pub fn decode_msg(payload: &[u8]) -> Result<(u64, Vec<u64>)> {
+    let mut c = Cursor::new(payload);
+    let session_id = c.u64()?;
+    let words = c.u64s()?;
+    c.done()?;
+    Ok((session_id, words))
+}
+
+/// Encode a `RESULT` payload.
+pub fn encode_result(
+    session_id: u64,
+    offline_bytes: u64,
+    offline_msgs: u64,
+    out1: &[u64],
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(32 + out1.len() * 8);
+    buf.extend_from_slice(&session_id.to_le_bytes());
+    buf.extend_from_slice(&offline_bytes.to_le_bytes());
+    buf.extend_from_slice(&offline_msgs.to_le_bytes());
+    put_u64s(&mut buf, out1);
+    buf
+}
+
+/// Decode a `RESULT` payload into
+/// `(session_id, offline_bytes, offline_msgs, out1)`.
+pub fn decode_result(payload: &[u8]) -> Result<(u64, u64, u64, Vec<u64>)> {
+    let mut c = Cursor::new(payload);
+    let session_id = c.u64()?;
+    let offline_bytes = c.u64()?;
+    let offline_msgs = c.u64()?;
+    let out1 = c.u64s()?;
+    c.done()?;
+    Ok((session_id, offline_bytes, offline_msgs, out1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Xoshiro;
+    use crate::nn::weights::{random_weights, share_weights};
+
+    #[test]
+    fn session_payloads_roundtrip() {
+        let start = SessionStart {
+            label: "two-party-7".to_string(),
+            mode: MODE_POOLED,
+            coord_has_bundle: true,
+            bundle_label: "pool-7".to_string(),
+            input_kind: INPUT_ONEHOT,
+            input: vec![1, u64::MAX, 0, 42],
+        };
+        let (id, got) = decode_start(&encode_start(9, &start)).expect("start");
+        assert_eq!(id, 9);
+        assert_eq!(got.label, start.label);
+        assert_eq!(got.mode, start.mode);
+        assert!(got.coord_has_bundle);
+        assert_eq!(got.bundle_label, start.bundle_label);
+        assert_eq!(got.input_kind, start.input_kind);
+        assert_eq!(got.input, start.input);
+
+        assert_eq!(decode_ack(&encode_ack(3, true)).unwrap(), (3, true));
+        assert_eq!(
+            decode_msg(&encode_msg(5, &[7, 8])).unwrap(),
+            (5, vec![7, 8])
+        );
+        assert_eq!(
+            decode_result(&encode_result(6, 100, 2, &[9])).unwrap(),
+            (6, 100, 2, vec![9])
+        );
+        // Empty protocol messages are legal.
+        assert_eq!(decode_msg(&encode_msg(1, &[])).unwrap(), (1, vec![]));
+    }
+
+    #[test]
+    fn truncated_session_payloads_error_not_panic() {
+        let p = encode_start(
+            1,
+            &SessionStart {
+                label: "x".into(),
+                mode: MODE_SEEDED,
+                coord_has_bundle: false,
+                bundle_label: String::new(),
+                input_kind: INPUT_HIDDEN,
+                input: vec![1, 2, 3],
+            },
+        );
+        for cut in 0..p.len() {
+            assert!(decode_start(&p[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        let mut padded = p.clone();
+        padded.push(0);
+        assert!(decode_start(&padded).is_err(), "trailing bytes accepted");
+    }
+
+    #[test]
+    fn fingerprint_separates_configs_and_weights() {
+        use crate::nn::config::{Framework, ModelConfig};
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let w = random_weights(&cfg, 1);
+        let (_, s1) = share_weights(&w, &mut Xoshiro::seed_from(0x5EC0));
+        let a = config_fingerprint(&cfg, &s1);
+        let a2 = config_fingerprint(&cfg, &s1);
+        assert_eq!(a, a2, "fingerprint must be deterministic");
+
+        let mut unfused = cfg.clone();
+        unfused.fused_attention = false;
+        assert_ne!(a, config_fingerprint(&unfused, &s1));
+
+        let w2 = random_weights(&cfg, 2);
+        let (_, s1b) = share_weights(&w2, &mut Xoshiro::seed_from(0x5EC0));
+        assert_ne!(a, config_fingerprint(&cfg, &s1b));
+    }
+}

@@ -119,7 +119,7 @@ fn remote_engine_runs_with_zero_online_dealer_roundtrips() {
     let remote_pool = RemotePool::connect(
         &addr.to_string(),
         &cfg,
-        RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens] },
+        RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens], psk: None },
     )
     .expect("connect");
 
@@ -172,7 +172,7 @@ fn spooled_coordinator_restart_full_hit_rate_without_regeneration() {
         let spool = SpooledSource::open(
             &dir,
             Some(feeder as Arc<dyn BundleSource>),
-            SpoolConfig { depth: n },
+            SpoolConfig { depth: n, ..SpoolConfig::default() },
         )
         .expect("populate spool");
         spool.wait_spooled(n);
@@ -232,7 +232,7 @@ fn dealer_loss_degrades_but_stays_correct() {
     let remote_pool = RemotePool::connect(
         &addr.to_string(),
         &cfg,
-        RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens] },
+        RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens], psk: None },
     )
     .expect("connect");
     let mut model = SecureModel::new_pooled(cfg.clone(), &w, remote_pool.clone());

@@ -1,0 +1,240 @@
+//! Two-party runtime parity: an engine driving a remote `party-serve`
+//! host over a real localhost TCP socket must be **bit-identical** to
+//! the in-process thread engine — same logits, same rounds, same
+//! volume — for both input kinds, both attention paths and every
+//! offline mode, with zero dealer round-trips in pooled mode.
+//!
+//! Alignment recipe (mirrors the deployment docs): both processes load
+//! the same weights (the fixed sharing seed then gives equal share
+//! maps, hence a matching HELLO fingerprint), the engines use the same
+//! session label, and in pooled mode the coordinator's and the host's
+//! pools use the same prefix (bundle generation is a pure function of
+//! the session label, so both sides independently derive the same
+//! correlated randomness; the start/ack exchange matches the halves by
+//! label).
+
+use secformer::core::rng::Xoshiro;
+use secformer::engine::{OfflineMode, PeerRuntime, SecureModel};
+use secformer::nn::config::{Framework, ModelConfig};
+use secformer::nn::model::ModelInput;
+use secformer::nn::weights::{random_weights, share_weights, WeightMap};
+use secformer::offline::pool::PoolConfig;
+use secformer::offline::source::{BundleSource, PoolSet};
+use secformer::party::runtime::{spawn_party_host, PartyHostConfig, RemoteParty};
+use std::sync::Arc;
+
+fn tiny(fused: bool) -> ModelConfig {
+    let mut cfg = ModelConfig::tiny(8, Framework::SecFormer);
+    cfg.fused_attention = fused;
+    cfg
+}
+
+fn hidden_input(cfg: &ModelConfig, seed: u64) -> ModelInput {
+    let mut rng = Xoshiro::seed_from(seed);
+    ModelInput::Hidden((0..cfg.seq * cfg.hidden).map(|_| rng.normal() * 0.5).collect())
+}
+
+fn token_input(cfg: &ModelConfig) -> ModelInput {
+    ModelInput::Tokens((0..cfg.seq as u32).map(|i| i % cfg.vocab as u32).collect())
+}
+
+fn shares1(w: &WeightMap) -> secformer::nn::weights::ShareMap {
+    // The engine's fixed sharing seed: equal weights ⇒ equal shares.
+    let (_, s1) = share_weights(w, &mut Xoshiro::seed_from(0x5EC0));
+    s1
+}
+
+fn pool_set(cfg: &ModelConfig, prefix: &str) -> Arc<PoolSet> {
+    PoolSet::start(
+        cfg,
+        prefix,
+        PoolConfig { target_depth: 4, producers: 1, ..PoolConfig::default() },
+        true,
+    )
+}
+
+fn assert_bit_identical(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: logit count");
+    for i in 0..a.len() {
+        assert!(a[i].is_finite(), "{what}: logit {i} not finite");
+        assert_eq!(
+            a[i].to_bits(),
+            b[i].to_bits(),
+            "{what}: logit {i} differs: in-process={} remote={}",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+/// Build the in-process twin and the remote pair (coordinator-side
+/// model + party host), session-aligned on `label`/`prefix`.
+fn pooled_pair(cfg: &ModelConfig, w: &WeightMap, prefix: &str, label: &str) -> (SecureModel, SecureModel) {
+    let mut local = SecureModel::new_pooled(cfg.clone(), w, pool_set(cfg, prefix));
+    local.set_session_label(label);
+
+    let addr = spawn_party_host(
+        cfg.clone(),
+        Arc::new(shares1(w)),
+        Some(pool_set(cfg, prefix) as Arc<dyn BundleSource>),
+        PartyHostConfig::default(),
+    )
+    .expect("spawn party host");
+    let mut remote = SecureModel::new_pooled(cfg.clone(), w, pool_set(cfg, prefix));
+    remote.set_session_label(label);
+    remote
+        .connect_remote_peer(&addr.to_string(), None)
+        .expect("connect to party host");
+    (local, remote)
+}
+
+fn assert_pooled_parity(cfg: &ModelConfig, prefix: &str, label: &str, weight_seed: u64) {
+    let w = random_weights(cfg, weight_seed);
+    let (mut local, mut remote) = pooled_pair(cfg, &w, prefix, label);
+    for (name, input) in [
+        ("tokens", token_input(cfg)),
+        ("hidden", hidden_input(cfg, 5)),
+    ] {
+        let a = local.infer(&input);
+        let b = remote.infer(&input);
+        assert_bit_identical(&a.logits, &b.logits, name);
+        assert_eq!(
+            b.stats.offline_msgs, 0,
+            "{name}: pooled remote session must run with zero dealer round-trips"
+        );
+        assert_eq!(a.stats.offline_msgs, 0, "{name}: in-process twin too");
+        assert!(b.stats.offline_bytes > 0, "{name}: prefetched bundle must be charged");
+        assert_eq!(
+            a.stats.offline_bytes, b.stats.offline_bytes,
+            "{name}: identical bundles ⇒ identical offline accounting"
+        );
+        assert_eq!(a.stats.total_rounds(), b.stats.total_rounds(), "{name}: rounds");
+        assert_eq!(a.stats.total_bytes(), b.stats.total_bytes(), "{name}: volume");
+    }
+}
+
+#[test]
+fn remote_pooled_is_bit_identical_fused() {
+    assert_pooled_parity(&tiny(true), "twop-f-pool", "twop-f", 21);
+}
+
+#[test]
+fn remote_pooled_is_bit_identical_unfused() {
+    assert_pooled_parity(&tiny(false), "twop-u-pool", "twop-u", 22);
+}
+
+#[test]
+fn remote_seeded_and_dealer_match_in_process() {
+    let cfg = tiny(true);
+    let w = random_weights(&cfg, 33);
+    for (name, mode) in [("seeded", OfflineMode::Seeded), ("dealer", OfflineMode::Dealer)] {
+        let label = format!("twop-{name}");
+        let mut local = SecureModel::new(cfg.clone(), &w, mode);
+        local.set_session_label(&label);
+        let addr = spawn_party_host(
+            cfg.clone(),
+            Arc::new(shares1(&w)),
+            None,
+            PartyHostConfig::default(),
+        )
+        .expect("spawn party host");
+        let mut remote = SecureModel::new(cfg.clone(), &w, mode);
+        remote.set_session_label(&label);
+        remote
+            .connect_remote_peer(&addr.to_string(), None)
+            .expect("connect to party host");
+        let input = hidden_input(&cfg, 9);
+        let a = local.infer(&input);
+        let b = remote.infer(&input);
+        assert_bit_identical(&a.logits, &b.logits, name);
+        assert_eq!(
+            a.stats.offline_msgs, b.stats.offline_msgs,
+            "{name}: same label ⇒ same dealer transcript"
+        );
+        assert_eq!(a.stats.offline_bytes, b.stats.offline_bytes, "{name}");
+        if mode == OfflineMode::Dealer {
+            assert!(b.stats.offline_msgs > 0, "dealer mode runs S1↔T on the party host");
+        }
+    }
+}
+
+#[test]
+fn pooled_remote_without_host_pool_degrades_to_seeded_parity() {
+    // The party host has NO bundle source: the start/ack exchange must
+    // land both sides on the synchronized seeded stream — which is
+    // exactly what an in-process SEEDED engine with the same label
+    // runs. Correctness survives the degradation bit-for-bit.
+    let cfg = tiny(true);
+    let w = random_weights(&cfg, 77);
+    let label = "twop-deg";
+    let mut seeded_twin = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+    seeded_twin.set_session_label(label);
+
+    let addr = spawn_party_host(
+        cfg.clone(),
+        Arc::new(shares1(&w)),
+        None, // no source on the host
+        PartyHostConfig::default(),
+    )
+    .expect("spawn party host");
+    let mut remote = SecureModel::new_pooled(cfg.clone(), &w, pool_set(&cfg, "twop-deg-pool"));
+    remote.set_session_label(label);
+    remote
+        .connect_remote_peer(&addr.to_string(), None)
+        .expect("connect to party host");
+
+    let input = token_input(&cfg);
+    let a = seeded_twin.infer(&input);
+    let b = remote.infer(&input);
+    assert_bit_identical(&a.logits, &b.logits, "degraded pooled session");
+    assert_eq!(b.stats.offline_msgs, 0);
+    assert_eq!(
+        b.stats.offline_bytes, 0,
+        "no bundle was used on either side, so none may be charged"
+    );
+}
+
+#[test]
+fn concurrent_sessions_multiplex_one_connection() {
+    // Several engines share ONE RemoteParty connection; their sessions
+    // interleave on the socket. Each must still match its in-process
+    // twin exactly (per-session framing keeps the streams apart).
+    let cfg = tiny(true);
+    let w = random_weights(&cfg, 55);
+    let s1 = shares1(&w);
+    let addr = spawn_party_host(
+        cfg.clone(),
+        Arc::new(s1.clone()),
+        None,
+        PartyHostConfig::default(),
+    )
+    .expect("spawn party host");
+    let rp = RemoteParty::connect(&addr.to_string(), &cfg, &s1, None).expect("connect");
+
+    std::thread::scope(|scope| {
+        for t in 0..3u64 {
+            let cfg = cfg.clone();
+            let w = w.clone();
+            let rp = rp.clone();
+            scope.spawn(move || {
+                let label = format!("twop-mux-{t}");
+                let mut local = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+                local.set_session_label(&label);
+                let mut remote = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+                remote.set_session_label(&label);
+                remote.set_peer_runtime(PeerRuntime::Remote(rp));
+                for round in 0..2u64 {
+                    let input = hidden_input(&cfg, 100 + t * 10 + round);
+                    let a = local.infer(&input);
+                    let b = remote.infer(&input);
+                    assert_bit_identical(
+                        &a.logits,
+                        &b.logits,
+                        &format!("mux thread {t} round {round}"),
+                    );
+                }
+            });
+        }
+    });
+    rp.stop();
+}
