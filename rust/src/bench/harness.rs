@@ -841,6 +841,162 @@ pub fn distribution_bench(
 }
 
 // =====================================================================
+// Cross-request batching — per-request schedules vs one shared schedule
+// =====================================================================
+
+/// One batch size's sequential-vs-batched comparison.
+#[derive(Clone, Debug)]
+pub struct BatchingMeasurement {
+    /// Requests in the batch.
+    pub batch: usize,
+    /// Total online rounds of `batch` independent single inferences.
+    pub seq_rounds: u64,
+    /// Total online rounds of ONE batched schedule (the invariant:
+    /// equals a single inference's rounds).
+    pub batch_rounds: u64,
+    /// Online bytes (both parties), sequential / batched.
+    pub seq_bytes: u64,
+    pub batch_bytes: u64,
+    /// Measured wall-clock for the whole batch, loopback.
+    pub seq_wall_s: f64,
+    pub batch_wall_s: f64,
+    /// Simulated throughput (requests/s: measured compute + network
+    /// model) on the paper's LAN and a WAN.
+    pub seq_lan_rps: f64,
+    pub batch_lan_rps: f64,
+    pub seq_wan_rps: f64,
+    pub batch_wan_rps: f64,
+}
+
+/// Cross-request batching benchmark: for each `B` in `batches`, run the
+/// same `B` inferences (a) sequentially — `B` independent round
+/// schedules, the pre-batching serving path — and (b) as ONE
+/// `infer_batch` schedule. Counted rounds/bytes are projected onto the
+/// paper's LAN and a WAN; since `rounds × rtt` dominates there, the
+/// batched path's throughput approaches `B×` the sequential one. Writes
+/// `BENCH_batching.json`.
+pub fn batching_bench(seq: usize, batches: &[usize]) -> Vec<BatchingMeasurement> {
+    let cfg = ModelConfig::tiny(seq, Framework::SecFormer);
+    let weights = random_weights(&cfg, 0xBA7C);
+    let lan = NetModel::paper_lan();
+    let wan = NetModel::wan();
+    println!("\n=== Cross-request batching: sequential vs one shared round schedule ===");
+    println!("  seq {seq}, seeded offline mode, batch sizes {batches:?}");
+    let mut out = Vec::new();
+    let mut rng = Xoshiro::seed_from(0xBA7C ^ 1);
+    for &b in batches {
+        let inputs: Vec<ModelInput> = (0..b)
+            .map(|_| {
+                ModelInput::Hidden(
+                    (0..cfg.seq * cfg.hidden).map(|_| rng.normal() * 0.5).collect(),
+                )
+            })
+            .collect();
+
+        // (a) Sequential: B independent single-inference schedules.
+        let mut m_seq = SecureModel::new(cfg.clone(), &weights, OfflineMode::Seeded);
+        m_seq.set_session_label("bench-batch-seq");
+        let t0 = std::time::Instant::now();
+        let (mut seq_rounds, mut seq_bytes, mut seq_compute_ns) = (0u64, 0u64, 0u64);
+        for input in &inputs {
+            let r = m_seq.infer(input);
+            seq_rounds += r.stats.total_rounds();
+            seq_bytes += r.stats.total_bytes() * 2;
+            seq_compute_ns += r.stats.nanos.iter().sum::<u64>();
+        }
+        let seq_wall = t0.elapsed().as_secs_f64();
+
+        // (b) Batched: ONE schedule for the whole batch (exact bucket,
+        // no padding — the bench isolates the amortization itself).
+        let mut m_bat = SecureModel::new(cfg.clone(), &weights, OfflineMode::Seeded);
+        m_bat.set_session_label("bench-batch-one");
+        m_bat.set_batch_buckets(&[b]);
+        let t0 = std::time::Instant::now();
+        let r = m_bat.infer_batch(&inputs);
+        let batch_wall = t0.elapsed().as_secs_f64();
+        assert_eq!(r.chunks, 1, "a homogeneous batch must share one schedule");
+        let batch_rounds = r.stats.total_rounds();
+        let batch_bytes = r.stats.total_bytes() * 2;
+        let batch_compute_ns: u64 = r.stats.nanos.iter().sum();
+
+        let rps = |net: &NetModel, rounds: u64, bytes: u64, compute_ns: u64| {
+            b as f64
+                / (compute_ns as f64 * 1e-9 + net.simulated_seconds(rounds, bytes)).max(1e-12)
+        };
+        let m = BatchingMeasurement {
+            batch: b,
+            seq_rounds,
+            batch_rounds,
+            seq_bytes,
+            batch_bytes,
+            seq_wall_s: seq_wall,
+            batch_wall_s: batch_wall,
+            seq_lan_rps: rps(&lan, seq_rounds, seq_bytes, seq_compute_ns),
+            batch_lan_rps: rps(&lan, batch_rounds, batch_bytes, batch_compute_ns),
+            seq_wan_rps: rps(&wan, seq_rounds, seq_bytes, seq_compute_ns),
+            batch_wan_rps: rps(&wan, batch_rounds, batch_bytes, batch_compute_ns),
+        };
+        println!(
+            "  B={:<2} rounds {:>5} → {:>4}  comm {:>10} → {:>10}  wall {:>9} → {:>9}  \
+             LAN rps {:>7.2} → {:>7.2} ({:.2}×)  WAN rps {:>6.3} → {:>6.3}",
+            m.batch,
+            m.seq_rounds,
+            m.batch_rounds,
+            fmt_bytes(m.seq_bytes as f64),
+            fmt_bytes(m.batch_bytes as f64),
+            fmt_s(m.seq_wall_s),
+            fmt_s(m.batch_wall_s),
+            m.seq_lan_rps,
+            m.batch_lan_rps,
+            m.batch_lan_rps / m.seq_lan_rps.max(1e-12),
+            m.seq_wan_rps,
+            m.batch_wan_rps,
+        );
+        out.push(m);
+    }
+    if let Some(one) = out.iter().find(|m| m.batch == 1) {
+        for m in &out {
+            assert_eq!(
+                m.batch_rounds, one.batch_rounds,
+                "rounds invariant: a batch of {} must cost a single inference's rounds",
+                m.batch
+            );
+        }
+    }
+
+    let json_of = |m: &BatchingMeasurement| {
+        format!(
+            "    {{\"batch\": {}, \"sequential_rounds\": {}, \"batched_rounds\": {}, \
+             \"sequential_bytes\": {}, \"batched_bytes\": {}, \
+             \"sequential_wall_s\": {:.6}, \"batched_wall_s\": {:.6}, \
+             \"sequential_lan_rps\": {:.4}, \"batched_lan_rps\": {:.4}, \
+             \"lan_speedup\": {:.4}, \
+             \"sequential_wan_rps\": {:.6}, \"batched_wan_rps\": {:.6}}}",
+            m.batch,
+            m.seq_rounds,
+            m.batch_rounds,
+            m.seq_bytes,
+            m.batch_bytes,
+            m.seq_wall_s,
+            m.batch_wall_s,
+            m.seq_lan_rps,
+            m.batch_lan_rps,
+            m.batch_lan_rps / m.seq_lan_rps.max(1e-12),
+            m.seq_wan_rps,
+            m.batch_wan_rps,
+        )
+    };
+    let rows: Vec<String> = out.iter().map(json_of).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"cross_request_batching\",\n  \"seq\": {seq},\n  \"runs\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n"),
+    );
+    std::fs::write("BENCH_batching.json", &json).expect("write BENCH_batching.json");
+    println!("  wrote BENCH_batching.json");
+    out
+}
+
+// =====================================================================
 // Two-party runtime — in-process threads vs real-socket party split
 // =====================================================================
 

@@ -3,8 +3,11 @@
 //! Requests are enqueued by any thread into per-engine queues. Each
 //! *secure* worker drains up to `max_batch` requests (waiting at most
 //! `max_wait` for stragglers — the classic dynamic-batching policy) and
-//! runs them on its own `SecureModel`; with `ServingConfig::secure_workers
-//! > 1`, concurrent secure requests genuinely run in parallel. In
+//! executes the whole drained batch as ONE cross-request round schedule
+//! on its own `SecureModel` (`infer_batch`: B requests cost a single
+//! inference's online rounds — PERF.md §Cross-request batching); with
+//! `ServingConfig::secure_workers > 1`, concurrent batches genuinely
+//! run in parallel. In
 //! [`OfflineMode::Pooled`] every worker draws pregenerated session
 //! bundles from one shared [`BundleSource`] warmed at startup — per-kind
 //! in-process pools, a remote dealer's prefetch queue, or a disk spool —
@@ -56,7 +59,8 @@ pub struct InferenceReply {
     pub logits: Vec<f64>,
     pub latency_s: f64,
     pub engine: EngineKind,
-    /// Online communication for secure requests (bytes, both parties).
+    /// Online communication for secure requests (bytes, both parties) —
+    /// this request's amortized share of its dynamic batch's volume.
     pub comm_bytes: u64,
 }
 
@@ -128,6 +132,15 @@ pub struct ServingConfig {
     pub peer_addr: Option<String>,
     /// Pre-shared key for the party link (`serve --peer-psk`).
     pub peer_psk: Option<String>,
+    /// Cross-request batch buckets: a drained dynamic batch is padded up
+    /// to the nearest bucket and executed as ONE round schedule (`B`
+    /// requests cost a single inference's online rounds — see PERF.md
+    /// §Cross-request batching). In pooled mode every bucket gets its
+    /// own planned manifest and pool at startup (one dry-run per
+    /// (kind, bucket), paid once). `vec![1]` disables batching — each
+    /// request runs its own schedule, the pre-batching behaviour that
+    /// [`ServingConfig::pooled`] keeps for parity.
+    pub batch_buckets: Vec<usize>,
     /// Override the per-process session namespace — FOR TESTS AND
     /// REPRODUCIBILITY ONLY. Two coordinators given the same namespace,
     /// weights and request stream produce bit-identical logits, which is
@@ -159,6 +172,7 @@ impl Default for ServingConfig {
             peer_addr: None,
             peer_psk: None,
             session_namespace: None,
+            batch_buckets: vec![1, 2, 4, 8],
         }
     }
 }
@@ -166,6 +180,11 @@ impl Default for ServingConfig {
 impl ServingConfig {
     /// Pooled serving: `workers` concurrent secure workers over a pool
     /// kept `depth` bundles deep, warmed with one ready bundle per worker.
+    ///
+    /// Keeps `batch_buckets = [1]` (one bundle per request, the PR 2/3
+    /// parity behaviour the distribution tests pin down); call
+    /// [`ServingConfig::with_batch_buckets`] — or pass `serve
+    /// --batch-buckets` — to amortize rounds across dynamic batches.
     pub fn pooled(workers: usize, depth: usize) -> Self {
         ServingConfig {
             secure_workers: workers.max(1),
@@ -173,8 +192,15 @@ impl ServingConfig {
             pool_depth: depth.max(1),
             warm_bundles: workers.min(depth).max(1),
             plan_hidden: true,
+            batch_buckets: vec![1],
             ..ServingConfig::default()
         }
+    }
+
+    /// Builder: set the cross-request batch buckets.
+    pub fn with_batch_buckets(mut self, buckets: &[usize]) -> Self {
+        self.batch_buckets = crate::offline::source::normalize_buckets(buckets);
+        self
     }
 }
 
@@ -210,9 +236,13 @@ fn drain_batch(
         if shared.shutdown.load(Ordering::Relaxed) {
             return None;
         }
-        let (guard, _timeout) =
-            shared.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
-        q = guard;
+        // Pure condvar park — no periodic poll. This is safe because
+        // every wake source notifies while holding (or having just
+        // held under the same critical section) the queue mutex:
+        // `submit` pushes under the lock before notifying, and shutdown
+        // stores its flag while holding the lock, so the flag/queue
+        // check above can never miss a wakeup.
+        q = shared.cv.wait(q).unwrap();
     }
     // Dynamic batching: give stragglers `max_wait` to join. The deadline
     // may pass between the length check and the subtraction, so saturate
@@ -239,25 +269,33 @@ fn secure_worker_loop(
     batcher: BatcherConfig,
     mut model: SecureModel,
     metrics: Arc<Metrics>,
-    peers: usize,
+    max_take: usize,
 ) {
-    // With several secure workers, one worker must not swallow a whole
-    // burst as a single sequential batch while its peers idle — secure
-    // batch items execute one-by-one anyway, so spread them: each worker
-    // takes a single request per drain when it has peers.
-    let max_take = if peers > 1 { 1 } else { batcher.max_batch };
+    // The whole drained batch executes as ONE secure round schedule
+    // (`SecureModel::infer_batch`): B requests cost a single inference's
+    // online rounds, so — unlike the pre-batching design, which spread
+    // bursts one request per worker because batch items ran one-by-one
+    // anyway — a worker WANTS the full batch whenever batching can
+    // amortize. `max_take` is 1 only when it cannot (bucket-1 engine
+    // with peer workers — see `Coordinator::start_with`), which keeps
+    // the pre-batching burst-spreading policy for those configurations.
     while let Some(batch) = drain_batch(&shared, &batcher, EngineKind::Secure, max_take) {
-        for req in batch {
-            let r = model.infer(&req.input);
+        let inputs: Vec<ModelInput> = batch.iter().map(|r| r.input.clone()).collect();
+        let r = model.infer_batch(&inputs);
+        metrics.observe_batch(batch.len(), r.stats.total_rounds());
+        metrics.add_offline_bytes(r.stats.offline_bytes);
+        // Per-request share of the batch's online volume (both parties):
+        // the amortized cost a client actually caused.
+        let per_req_bytes = r.stats.total_bytes() * 2 / batch.len() as u64;
+        for (req, logits) in batch.into_iter().zip(r.logits) {
             let latency = req.submitted.elapsed().as_secs_f64();
             metrics.observe(latency);
-            metrics.add_offline_bytes(r.stats.offline_bytes);
             let _ = req.reply_to.send(InferenceReply {
                 id: req.id,
-                logits: r.logits,
+                logits,
                 latency_s: latency,
                 engine: EngineKind::Secure,
-                comm_bytes: r.stats.total_bytes() * 2,
+                comm_bytes: per_req_bytes,
             });
         }
     }
@@ -286,8 +324,7 @@ fn plain_worker_loop(
             None
         }
     });
-    while let Some(batch) =
-        drain_batch(&shared, &batcher, EngineKind::Plaintext, batcher.max_batch)
+    while let Some(batch) = drain_batch(&shared, &batcher, EngineKind::Plaintext, batcher.max_batch)
     {
         for req in batch {
             let logits = match plain.as_mut() {
@@ -401,7 +438,7 @@ impl Coordinator {
                             },
                         )?
                     }
-                    None => PoolSet::start(
+                    None => PoolSet::start_with_buckets(
                         &cfg,
                         &prefix,
                         PoolConfig {
@@ -413,6 +450,7 @@ impl Coordinator {
                             ..PoolConfig::default()
                         },
                         serving.plan_hidden,
+                        &serving.batch_buckets,
                     ),
                 };
                 let source: Arc<dyn BundleSource> = match &serving.spool_dir {
@@ -461,6 +499,34 @@ impl Coordinator {
             None => None,
         };
 
+        // Cross-request batch buckets for the secure workers. A remote
+        // dealer serves single-session (bucket-1) bundles only, so
+        // batched chunks would degrade to seeded fallback there — chunk
+        // to 1 instead and keep every session pool-hit (extending the
+        // dealer wire to batch buckets is a tracked ROADMAP follow-up).
+        let engine_buckets: Vec<usize> =
+            if serving.offline == OfflineMode::Pooled && serving.dealer_addr.is_some() {
+                if serving.batch_buckets.iter().any(|&b| b > 1) {
+                    eprintln!(
+                        "coordinator: --dealer-addr serves batch bucket 1 only; \
+                         cross-request batching disabled for pooled sessions"
+                    );
+                }
+                vec![1]
+            } else {
+                crate::offline::source::normalize_buckets(&serving.batch_buckets)
+            };
+        // When batching cannot amortize (bucket 1 only) a worker gains
+        // nothing from a multi-request drain — it would execute the
+        // batch sequentially while its peers idle. Keep the pre-batching
+        // policy there: one request per drain when there are peers.
+        let max_take = if engine_buckets.last() == Some(&1) && serving.secure_workers.max(1) > 1
+        {
+            1
+        } else {
+            batcher.max_batch
+        };
+
         // Any spawn failure must not leak already-running workers: signal
         // shutdown, join what was spawned and stop the pool before
         // propagating the error.
@@ -475,15 +541,15 @@ impl Coordinator {
                 pool.clone(),
             );
             model.set_session_label(&format!("coord-{instance}-w{i}"));
+            model.set_batch_buckets(&engine_buckets);
             if let Some(rp) = &remote_peer {
                 model.set_peer_runtime(PeerRuntime::Remote(rp.clone()));
             }
             let sh = shared.clone();
             let ms = metrics_secure.clone();
-            let peers = serving.secure_workers.max(1);
             match std::thread::Builder::new()
                 .name(format!("secure-worker-{i}"))
-                .spawn(move || secure_worker_loop(sh, batcher, model, ms, peers))
+                .spawn(move || secure_worker_loop(sh, batcher, model, ms, max_take))
             {
                 Ok(h) => workers.push(h),
                 Err(e) => {
@@ -504,8 +570,14 @@ impl Coordinator {
             }
         }
         if let Some(e) = spawn_err {
-            shared.shutdown.store(true, Ordering::Relaxed);
-            shared.cv.notify_all();
+            {
+                // Store + notify under the queue lock: a worker that
+                // checked the flag and is about to park cannot miss the
+                // wakeup (it holds the lock until `wait` releases it).
+                let _q = shared.q.lock().unwrap();
+                shared.shutdown.store(true, Ordering::Relaxed);
+                shared.cv.notify_all();
+            }
             for h in workers {
                 let _ = h.join();
             }
@@ -583,8 +655,14 @@ impl Coordinator {
     }
 
     fn stop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::Relaxed);
-        self.shared.cv.notify_all();
+        {
+            // Store + notify under the queue lock — see `drain_batch`:
+            // the workers park on a plain condvar wait (no poll), so the
+            // shutdown signal must be ordered with their predicate check.
+            let _q = self.shared.q.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Relaxed);
+            self.shared.cv.notify_all();
+        }
         for h in self.workers.drain(..) {
             let _ = h.join();
         }

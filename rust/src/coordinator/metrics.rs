@@ -14,6 +14,10 @@ use std::time::Instant;
 /// secure traffic; fixed memory forever.
 pub const WINDOW: usize = 4096;
 
+/// Largest batch size tracked individually by the histogram; bigger
+/// batches land in the top bucket (reported as `{MAX}+`).
+pub const BATCH_HIST_MAX: usize = 16;
+
 #[derive(Debug, Default)]
 struct LatencyWindow {
     /// Ring buffer of the most recent latencies (seconds).
@@ -30,6 +34,17 @@ pub struct Metrics {
     /// Offline correlated-randomness bytes consumed by this engine's
     /// requests (dealer corrections or pooled bundles).
     offline_bytes: AtomicU64,
+    /// Dynamic batches executed (secure engine: one shared round
+    /// schedule each — see PERF.md §Cross-request batching).
+    batches: AtomicU64,
+    /// Requests served through those batches (Σ batch sizes).
+    batched_requests: AtomicU64,
+    /// Batch-size histogram; index = `min(size, BATCH_HIST_MAX)`.
+    batch_hist: [AtomicU64; BATCH_HIST_MAX + 1],
+    /// Total online protocol rounds across all batches — with the
+    /// all-time request count this yields the rounds-per-request gauge,
+    /// the amortization the batcher exists to drive down.
+    rounds_total: AtomicU64,
     started: Instant,
 }
 
@@ -52,6 +67,15 @@ pub struct MetricsSummary {
     pub pool_depth: usize,
     /// Pool hit-rate in [0, 1] (1.0 when serving unpooled).
     pub pool_hit_rate: f64,
+    /// Mean dynamic-batch size, all time (0.0 until a batch ran).
+    pub mean_batch_size: f64,
+    /// Online protocol rounds per request, all time (0.0 until a batch
+    /// ran). With cross-request batching a batch of B shares ONE round
+    /// schedule, so this gauge drops ~B× under load.
+    pub rounds_per_request: f64,
+    /// Batch-size histogram: `(size, count)` rows with non-zero counts,
+    /// ascending; sizes ≥ [`BATCH_HIST_MAX`] share the top row.
+    pub batch_hist: Vec<(usize, u64)>,
 }
 
 impl Default for Metrics {
@@ -65,8 +89,21 @@ impl Metrics {
         Metrics {
             window: Mutex::new(LatencyWindow::default()),
             offline_bytes: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            batch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            rounds_total: AtomicU64::new(0),
             started: Instant::now(),
         }
+    }
+
+    /// Record one executed dynamic batch: its size and the online rounds
+    /// its (shared) schedule cost.
+    pub fn observe_batch(&self, size: usize, rounds: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.batch_hist[size.min(BATCH_HIST_MAX)].fetch_add(1, Ordering::Relaxed);
+        self.rounds_total.fetch_add(rounds, Ordering::Relaxed);
     }
 
     pub fn observe(&self, latency_s: f64) {
@@ -86,15 +123,37 @@ impl Metrics {
         self.offline_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    fn batch_gauges(&self) -> (f64, f64, Vec<(usize, u64)>) {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let reqs = self.batched_requests.load(Ordering::Relaxed);
+        let rounds = self.rounds_total.load(Ordering::Relaxed);
+        let mean = if batches == 0 { 0.0 } else { reqs as f64 / batches as f64 };
+        let rpr = if reqs == 0 { 0.0 } else { rounds as f64 / reqs as f64 };
+        let hist: Vec<(usize, u64)> = self
+            .batch_hist
+            .iter()
+            .enumerate()
+            .filter_map(|(size, c)| {
+                let c = c.load(Ordering::Relaxed);
+                (c > 0).then_some((size, c))
+            })
+            .collect();
+        (mean, rpr, hist)
+    }
+
     pub fn summary(&self) -> MetricsSummary {
         let (mut v, total) = {
             let w = self.window.lock().unwrap();
             (w.recent.clone(), w.total)
         };
+        let (mean_batch_size, rounds_per_request, batch_hist) = self.batch_gauges();
         if v.is_empty() {
             return MetricsSummary {
                 pool_hit_rate: 1.0,
                 offline_bytes: self.offline_bytes.load(Ordering::Relaxed),
+                mean_batch_size,
+                rounds_per_request,
+                batch_hist,
                 ..MetricsSummary::default()
             };
         }
@@ -111,6 +170,9 @@ impl Metrics {
             offline_bytes: self.offline_bytes.load(Ordering::Relaxed),
             pool_depth: 0,
             pool_hit_rate: 1.0,
+            mean_batch_size,
+            rounds_per_request,
+            batch_hist,
         }
     }
 }
@@ -166,5 +228,28 @@ mod tests {
         m.add_offline_bytes(100);
         m.add_offline_bytes(50);
         assert_eq!(m.summary().offline_bytes, 150);
+    }
+
+    #[test]
+    fn batch_gauges_track_amortization() {
+        let m = Metrics::new();
+        assert_eq!(m.summary().mean_batch_size, 0.0);
+        assert_eq!(m.summary().rounds_per_request, 0.0);
+        // Two batches sharing one 300-round schedule each: 8 requests,
+        // 600 rounds → 75 rounds/request, mean batch 4.
+        m.observe_batch(6, 300);
+        m.observe_batch(2, 300);
+        // Oversized batches land in the top histogram bucket.
+        m.observe_batch(BATCH_HIST_MAX + 9, 300);
+        let s = m.summary();
+        assert!((s.mean_batch_size - (6 + 2 + BATCH_HIST_MAX + 9) as f64 / 3.0).abs() < 1e-9);
+        assert!(
+            (s.rounds_per_request - 900.0 / (8 + BATCH_HIST_MAX as f64 + 9.0)).abs() < 1e-9
+        );
+        assert_eq!(
+            s.batch_hist,
+            vec![(2, 1), (6, 1), (BATCH_HIST_MAX, 1)],
+            "hist rows ascend and clamp at the top bucket"
+        );
     }
 }

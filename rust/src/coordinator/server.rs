@@ -69,9 +69,28 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
         "stats" => {
             let s = coord.secure_summary();
             let p = coord.metrics_plain.summary();
+            // Batch-size histogram as `size:count` pairs (top bucket is
+            // "{BATCH_HIST_MAX}+"), so the round amortization is
+            // observable in production from one line.
+            let hist = if s.batch_hist.is_empty() {
+                "-".to_string()
+            } else {
+                s.batch_hist
+                    .iter()
+                    .map(|&(size, count)| {
+                        if size >= crate::coordinator::metrics::BATCH_HIST_MAX {
+                            format!("{size}+:{count}")
+                        } else {
+                            format!("{size}:{count}")
+                        }
+                    })
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
             Some(format!(
                 "secure: n={} mean={:.3}s p95={:.3}s rps={:.2} offline_bytes={} \
-                 pool_depth={} pool_hit={:.2} | plain: n={} mean={:.4}s p95={:.4}s",
+                 pool_depth={} pool_hit={:.2} batch_mean={:.2} rounds_per_req={:.1} \
+                 batch_hist={} | plain: n={} mean={:.4}s p95={:.4}s",
                 s.count,
                 s.mean_s,
                 s.p95_s,
@@ -79,6 +98,9 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
                 s.offline_bytes,
                 s.pool_depth,
                 s.pool_hit_rate,
+                s.mean_batch_size,
+                s.rounds_per_request,
+                hist,
                 p.count,
                 p.mean_s,
                 p.p95_s
@@ -183,6 +205,9 @@ mod tests {
         assert!(stats.contains("offline_bytes="), "{stats}");
         assert!(stats.contains("pool_depth="), "{stats}");
         assert!(stats.contains("pool_hit="), "{stats}");
+        assert!(stats.contains("batch_mean="), "{stats}");
+        assert!(stats.contains("rounds_per_req="), "{stats}");
+        assert!(stats.contains("batch_hist=1:1"), "one single-request batch: {stats}");
         c.shutdown();
     }
 

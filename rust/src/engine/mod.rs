@@ -12,7 +12,7 @@ use crate::core::rng::Xoshiro;
 use crate::net::stats::{NetModel, StatsSnapshot};
 use crate::net::transport::channel_pair;
 use crate::nn::config::ModelConfig;
-use crate::nn::model::{bert_forward, InputShare, ModelInput};
+use crate::nn::model::{bert_forward_batch, InputShare, ModelInput};
 use crate::nn::weights::{share_weights, ShareMap, WeightMap};
 use crate::offline::planner::PlanInput;
 use crate::offline::pool::Tuple;
@@ -20,7 +20,8 @@ use crate::offline::provider::PooledProvider;
 use crate::offline::source::BundleSource;
 use crate::party::runtime::RemoteParty;
 use crate::party::wire::{
-    SessionStart, INPUT_HIDDEN, INPUT_ONEHOT, MODE_DEALER, MODE_POOLED, MODE_SEEDED,
+    BatchSessionStart, SessionStart, INPUT_HIDDEN, INPUT_ONEHOT, MODE_DEALER, MODE_POOLED,
+    MODE_SEEDED,
 };
 use crate::proto::ctx::PartyCtx;
 use crate::sharing::dealer::{DealerServer, Party0Provider, Party1Provider};
@@ -70,6 +71,29 @@ pub struct InferenceResult {
     pub simulated_lan_seconds: f64,
 }
 
+/// Default cross-request batch buckets: drained batches are padded up to
+/// the nearest bucket so pooled manifests stay plan-exact (see
+/// [`SecureModel::set_batch_buckets`]).
+pub const DEFAULT_BATCH_BUCKETS: [usize; 4] = [1, 2, 4, 8];
+
+/// Result of one cross-request batched secure execution
+/// ([`SecureModel::infer_batch`]).
+#[derive(Clone, Debug)]
+pub struct BatchResult {
+    /// Reconstructed, decoded logits per input, in input order.
+    pub logits: Vec<Vec<f64>>,
+    /// Merged party-0 online stats across the batch's round schedules
+    /// (ONE schedule for a homogeneous batch that fits a bucket).
+    pub stats: StatsSnapshot,
+    /// End-to-end wall-clock for the whole batch.
+    pub wall_seconds: f64,
+    /// Simulated wall-clock on the paper's LAN for the whole batch.
+    pub simulated_lan_seconds: f64,
+    /// Round schedules executed (1 = the whole batch shared one; mixed
+    /// kinds or bucket overflow split it).
+    pub chunks: usize,
+}
+
 impl InferenceResult {
     /// Per-category (GeLU, Softmax, LayerNorm, Others) breakdown rows:
     /// (name, seconds, comm GB) — the Table 3 row format.
@@ -110,6 +134,9 @@ pub struct SecureModel {
     pool: Option<Arc<dyn BundleSource>>,
     /// Where party S1 executes (thread or remote `party-serve`).
     peer: PeerRuntime,
+    /// Batch buckets [`SecureModel::infer_batch`] pads chunks up to
+    /// (ascending, always containing 1).
+    batch_buckets: Vec<usize>,
 }
 
 impl SecureModel {
@@ -173,7 +200,19 @@ impl SecureModel {
             session_label: format!("secformer-{:x}", std::process::id()),
             pool,
             peer: PeerRuntime::InProcess,
+            batch_buckets: DEFAULT_BATCH_BUCKETS.to_vec(),
         }
+    }
+
+    /// Configure the batch buckets [`SecureModel::infer_batch`] pads its
+    /// chunks up to. Pooled deployments must plan matching buckets
+    /// ([`crate::offline::source::PoolSet::start_with_buckets`]) or
+    /// batched chunks degrade to seeded fallback; pass `[1]` to disable
+    /// cross-request batching (every request runs its own schedule, the
+    /// pre-batching behaviour). The list is normalized: sorted,
+    /// deduplicated, and bucket 1 is always present.
+    pub fn set_batch_buckets(&mut self, buckets: &[usize]) {
+        self.batch_buckets = crate::offline::source::normalize_buckets(buckets);
     }
 
     /// Select where party S1 executes. Pass
@@ -280,8 +319,8 @@ impl SecureModel {
         // transport to (and location of) S1 differs.
         let (out0, out1, stats) = match &self.peer {
             PeerRuntime::InProcess => self.run_in_process(
-                in0,
-                in1,
+                vec![in0],
+                vec![in1],
                 &session,
                 bundle0,
                 bundle1,
@@ -290,7 +329,7 @@ impl SecureModel {
             ),
             PeerRuntime::Remote(rp) => {
                 let rp = rp.clone();
-                self.run_remote(&rp, in0, in1, &session, bundle0, &bundle_session)
+                self.run_remote(&rp, vec![in0], vec![in1], &session, bundle0, &bundle_session)
             }
         };
 
@@ -304,12 +343,160 @@ impl SecureModel {
         InferenceResult { logits, stats, wall_seconds: wall, simulated_lan_seconds: simulated }
     }
 
+    /// Run one dynamic batch of inferences with cross-request round
+    /// amortization: all same-kind requests that fit one batch bucket
+    /// share ONE round schedule (`B` requests cost a single inference's
+    /// online rounds; volume scales with `B`). Mixed token/hidden batches
+    /// are split into per-kind chunks; chunks are padded up to the
+    /// nearest configured bucket ([`SecureModel::set_batch_buckets`]) so
+    /// pooled manifests stay plan-exact, and oversized batches run in
+    /// several max-bucket chunks.
+    ///
+    /// In [`OfflineMode::Pooled`] each chunk draws ONE batch-sized bundle
+    /// via [`BundleSource::pop_batch`]; a source without the bucket
+    /// degrades that chunk to synchronized seeded generation (correct
+    /// results, counted as a miss). Bucket-1 chunks take exactly the
+    /// single-[`SecureModel::infer`] path, wire frames included.
+    pub fn infer_batch(&mut self, inputs: &[ModelInput]) -> BatchResult {
+        assert!(!inputs.is_empty(), "infer_batch needs at least one input");
+        let t0 = Instant::now();
+        let mut logits: Vec<Option<Vec<f64>>> = vec![None; inputs.len()];
+        let mut stats = StatsSnapshot::default();
+        let mut chunks = 0usize;
+        // Group by input kind, preserving arrival order inside each group
+        // (the SPMD forward stacks one kind at a time).
+        let mut groups: Vec<(PlanInput, Vec<usize>)> = Vec::new();
+        for (i, input) in inputs.iter().enumerate() {
+            let kind = match input {
+                ModelInput::Hidden(_) => PlanInput::Hidden,
+                ModelInput::Tokens(_) => PlanInput::Tokens,
+            };
+            match groups.iter_mut().find(|(k, _)| *k == kind) {
+                Some((_, v)) => v.push(i),
+                None => groups.push((kind, vec![i])),
+            }
+        }
+        let max_bucket = *self.batch_buckets.last().expect("buckets are never empty");
+        for (kind, idxs) in groups {
+            let mut off = 0;
+            while off < idxs.len() {
+                let take = (idxs.len() - off).min(max_bucket);
+                let chunk = &idxs[off..off + take];
+                let bucket = self
+                    .batch_buckets
+                    .iter()
+                    .copied()
+                    .find(|&b| b >= take)
+                    .unwrap_or(max_bucket);
+                let (chunk_logits, chunk_stats) =
+                    self.run_chunk(kind, inputs, chunk, bucket);
+                for (&slot, l) in chunk.iter().zip(chunk_logits) {
+                    logits[slot] = Some(l);
+                }
+                stats.accumulate(&chunk_stats);
+                chunks += 1;
+                off += take;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let lan = NetModel::paper_lan();
+        let compute_s: f64 = stats.nanos.iter().sum::<u64>() as f64 * 1e-9;
+        let simulated =
+            compute_s + lan.simulated_seconds(stats.total_rounds(), stats.total_bytes() * 2);
+        BatchResult {
+            logits: logits
+                .into_iter()
+                .map(|l| l.expect("every input slot is filled by its chunk"))
+                .collect(),
+            stats,
+            wall_seconds: wall,
+            simulated_lan_seconds: simulated,
+            chunks,
+        }
+    }
+
+    /// One kind-homogeneous chunk, padded to `bucket`: share inputs,
+    /// provision one batch-sized bundle, dispatch, reconstruct per-item
+    /// logits (padding outputs are dropped).
+    fn run_chunk(
+        &mut self,
+        kind: PlanInput,
+        inputs: &[ModelInput],
+        chunk: &[usize],
+        bucket: usize,
+    ) -> (Vec<Vec<f64>>, StatsSnapshot) {
+        debug_assert!(!chunk.is_empty() && chunk.len() <= bucket);
+        if bucket == 1 {
+            // Bit-identical to the pre-batching build: same session
+            // labels, same bundle pops, same START wire frame.
+            let r = self.infer(&inputs[chunk[0]]);
+            return (vec![r.logits], r.stats);
+        }
+        // Pad with an all-zero dummy of the chunk's kind; the dummy is
+        // shared (and masked) like any real input, so nothing about the
+        // padding leaks, and its logits are simply discarded.
+        let dummy = match kind {
+            PlanInput::Hidden => ModelInput::Hidden(vec![0.0; self.cfg.seq * self.cfg.hidden]),
+            PlanInput::Tokens => ModelInput::Tokens(vec![0; self.cfg.seq]),
+        };
+        let mut in0s = Vec::with_capacity(bucket);
+        let mut in1s = Vec::with_capacity(bucket);
+        for &i in chunk {
+            let (a, b) = self.share_input(&inputs[i]);
+            in0s.push(a);
+            in1s.push(b);
+        }
+        for _ in chunk.len()..bucket {
+            let (a, b) = self.share_input(&dummy);
+            in0s.push(a);
+            in1s.push(b);
+        }
+        // One session label for the whole chunk (the counter advanced per
+        // shared item, so labels never collide with single sessions).
+        let session = format!("{}-{}", self.session_label, self.session_counter);
+
+        let (bundle0, bundle1, bundle_session, bundle_words) = match self.offline {
+            OfflineMode::Pooled => {
+                let pool = self.pool.as_ref().expect("pooled model without pool");
+                match pool.pop_batch(kind, bucket) {
+                    Some(b) => (Some(b.p0), Some(b.p1), b.session, b.words_per_party),
+                    None => (None, None, String::new(), 0),
+                }
+            }
+            _ => (None, None, String::new(), 0),
+        };
+
+        let (out0, out1, stats) = match &self.peer {
+            PeerRuntime::InProcess => self.run_in_process(
+                in0s,
+                in1s,
+                &session,
+                bundle0,
+                bundle1,
+                &bundle_session,
+                bundle_words,
+            ),
+            PeerRuntime::Remote(rp) => {
+                let rp = rp.clone();
+                self.run_remote(&rp, in0s, in1s, &session, bundle0, &bundle_session)
+            }
+        };
+        let rec = crate::sharing::reconstruct(&out0, &out1);
+        let all = crate::core::fixed::decode_vec(&rec);
+        let nl = self.cfg.num_labels;
+        let logits: Vec<Vec<f64>> =
+            (0..chunk.len()).map(|j| all[j * nl..(j + 1) * nl].to_vec()).collect();
+        (logits, stats)
+    }
+
     /// The simulator topology: both parties as scoped threads over
-    /// in-memory channels (plus a dealer thread in dealer mode).
+    /// in-memory channels (plus a dealer thread in dealer mode). Takes a
+    /// kind-homogeneous batch of input shares (usually one) and returns
+    /// the concatenated `batch × num_labels` output shares.
     fn run_in_process(
         &self,
-        in0: InputShare,
-        in1: InputShare,
+        in0: Vec<InputShare>,
+        in1: Vec<InputShare>,
         session: &str,
         bundle0: Option<Vec<Tuple>>,
         bundle1: Option<Vec<Tuple>>,
@@ -358,7 +545,7 @@ impl SecureModel {
                 };
                 let mut ctx = PartyCtx::new(0, Box::new(peer0), prov, 0xAA);
                 let stats = ctx.stats.clone();
-                let out = bert_forward(&mut ctx, &cfg0, w0, &in0);
+                let out = bert_forward_batch(&mut ctx, &cfg0, w0, &in0);
                 (out, stats.snapshot())
             });
             let h1 = scope.spawn(move || {
@@ -393,7 +580,7 @@ impl SecureModel {
                 let mut ctx = PartyCtx::new(1, Box::new(peer1), prov, 0xBB);
                 ctx.stats = stats_handle;
                 let stats = ctx.stats.clone();
-                let out = bert_forward(&mut ctx, &cfg1, w1, &in1);
+                let out = bert_forward_batch(&mut ctx, &cfg1, w1, &in1);
                 // Dropping ctx (and with it Party1Provider) shuts down T.
                 drop(ctx);
                 (out, stats.snapshot())
@@ -428,30 +615,51 @@ impl SecureModel {
     fn run_remote(
         &self,
         rp: &RemoteParty,
-        in0: InputShare,
-        in1: InputShare,
+        in0: Vec<InputShare>,
+        in1: Vec<InputShare>,
         session: &str,
         bundle0: Option<Vec<Tuple>>,
         bundle_session: &str,
     ) -> (Vec<u64>, Vec<u64>, StatsSnapshot) {
-        let (input_kind, input) = match in1 {
-            InputShare::Hidden(v) => (INPUT_HIDDEN, v),
-            InputShare::OneHot(v) => (INPUT_ONEHOT, v),
+        let input_kind = match &in1[0] {
+            InputShare::Hidden(_) => INPUT_HIDDEN,
+            InputShare::OneHot(_) => INPUT_ONEHOT,
         };
+        let inputs1: Vec<Vec<u64>> = in1
+            .into_iter()
+            .map(|i| match i {
+                InputShare::Hidden(v) | InputShare::OneHot(v) => v,
+            })
+            .collect();
         let mode = match self.offline {
             OfflineMode::Dealer => MODE_DEALER,
             OfflineMode::Seeded => MODE_SEEDED,
             OfflineMode::Pooled => MODE_POOLED,
         };
-        let start = SessionStart {
-            label: session.to_string(),
-            mode,
-            coord_has_bundle: bundle0.is_some(),
-            bundle_label: bundle_session.to_string(),
-            input_kind,
-            input,
-        };
-        let mut sess = rp.start_session(start).expect("start remote party session");
+        // Single sessions keep the classic START frame (bit-identical to
+        // pre-batching builds); a whole batch ships in ONE START_BATCH.
+        let mut sess = if inputs1.len() == 1 {
+            let start = SessionStart {
+                label: session.to_string(),
+                mode,
+                coord_has_bundle: bundle0.is_some(),
+                bundle_label: bundle_session.to_string(),
+                input_kind,
+                input: inputs1.into_iter().next().expect("one input"),
+            };
+            rp.start_session(start)
+        } else {
+            let start = BatchSessionStart {
+                label: session.to_string(),
+                mode,
+                coord_has_bundle: bundle0.is_some(),
+                bundle_label: bundle_session.to_string(),
+                input_kind,
+                inputs: inputs1,
+            };
+            rp.start_session_batch(start)
+        }
+        .expect("start remote party session");
 
         let prov: Box<dyn crate::sharing::provider::Provider> = match self.offline {
             OfflineMode::Dealer => Box::new(Party0Provider::new(session)),
@@ -478,7 +686,7 @@ impl SecureModel {
 
         let mut ctx = PartyCtx::new(0, sess.take_transport(), prov, 0xAA);
         let stats = ctx.stats.clone();
-        let out0 = bert_forward(&mut ctx, &self.cfg, &self.shares0, &in0);
+        let out0 = bert_forward_batch(&mut ctx, &self.cfg, &self.shares0, &in0);
         drop(ctx);
         let (out1, offline_bytes, offline_msgs) =
             sess.finish().expect("remote party session result");

@@ -16,7 +16,7 @@
 //!   bench <target> [opts]    regenerate a paper table/figure
 //!                            targets: table3 table4 fig1 fig5 fig6 fig7
 //!                                     fig8 fig9 rounds serving
-//!                                     distribution two_party all
+//!                                     distribution two_party batching all
 //!
 //! Common options:
 //!   --framework <crypten|puma|mpcformer|secformer>   (default secformer)
@@ -83,6 +83,16 @@ impl Args {
     }
     fn usize_or(&self, k: &str, d: usize) -> usize {
         self.flag(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    }
+
+    /// Comma-separated batch-bucket list (`--batch-buckets 1,2,4,8`).
+    /// Bucket 1 is always included (normalization happens downstream).
+    fn batch_buckets(&self) -> Vec<usize> {
+        self.flag("batch-buckets")
+            .unwrap_or("1,2,4,8")
+            .split(',')
+            .filter_map(|s| s.trim().parse::<usize>().ok())
+            .collect()
     }
 }
 
@@ -299,6 +309,12 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
     // process (any offline mode); `--peer-psk` authenticates the link.
     serving.peer_addr = args.flag("peer-addr").map(String::from);
     serving.peer_psk = args.flag("peer-psk").map(String::from);
+    // `--batch-buckets 1,2,4,8` (the default): cross-request batching —
+    // a drained dynamic batch is padded up to the nearest bucket and
+    // executed as ONE secure round schedule; pooled mode plans one
+    // manifest/pool per (kind, bucket) at startup. `--batch-buckets 1`
+    // disables batching (each request runs its own schedule).
+    serving.batch_buckets = args.batch_buckets();
     let coordinator = std::sync::Arc::new(Coordinator::start_with(
         cfg.clone(),
         weights,
@@ -453,7 +469,9 @@ fn cmd_party_serve(args: &Args, cfg_file: &Config) -> Result<()> {
                         format!("party-pool-{:x}", std::process::id())
                     }
                 };
-                PoolSet::start(
+                // `--batch-buckets` must mirror the coordinator's so the
+                // host holds bundles for the same batched sessions.
+                PoolSet::start_with_buckets(
                     &cfg,
                     &prefix,
                     PoolConfig {
@@ -464,6 +482,7 @@ fn cmd_party_serve(args: &Args, cfg_file: &Config) -> Result<()> {
                         ..PoolConfig::default()
                     },
                     plan_hidden,
+                    &args.batch_buckets(),
                 )
             }
         };
@@ -550,6 +569,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "two_party" => {
             bh::two_party_bench(args.usize_or("seq", 8), args.usize_or("iters", 3));
         }
+        "batching" => {
+            bh::batching_bench(args.usize_or("seq", 8), &[1, 4, 8]);
+        }
         "ablations" => {
             secformer::bench::ablations::ablation_fourier_terms(args.usize_or("points", 1000));
             secformer::bench::ablations::ablation_goldschmidt_iters(args.usize_or("points", 1000));
@@ -598,7 +620,7 @@ USAGE:
   secformer infer  [--framework F] [--weights W.swts] [--tokens \"1,2,…\"]
                    [--secure|--plain] [--artifacts DIR] [--seeded]
   secformer serve  [--port 7878] [--weights W.swts] [--artifacts DIR]
-                   [--max-batch 8] [--max-wait-ms 5]
+                   [--max-batch 8] [--max-wait-ms 5] [--batch-buckets 1,2,4,8]
                    [--workers N] [--pool DEPTH] [--pool-producers P] [--pool-prf]
                    [--plan tokens|both] [--adaptive]
                    [--dealer-addr HOST:PORT] [--dealer-psk KEY]
@@ -607,7 +629,7 @@ USAGE:
   secformer party-serve [--bind 127.0.0.1:8787] [--seq N] [--framework F]
                    [--vocab V] [--weights W.swts] [--psk KEY]
                    [--pool DEPTH] [--pool-producers P] [--pool-prf]
-                   [--plan tokens|both] [--adaptive]
+                   [--plan tokens|both] [--adaptive] [--batch-buckets 1,2,4,8]
                    [--namespace NS | --prefix PFX]
                    [--dealer-addr HOST:PORT] [--dealer-psk KEY]
                    [--spool-dir DIR] [--spool-max-bytes N]
@@ -617,7 +639,7 @@ USAGE:
                    [--max-bundles N] [--prefix PFX] [--psk KEY]
   secformer dealer-stats [--addr 127.0.0.1:7979] [--psk KEY]
   secformer bench  <table3|table4|fig1|fig5|fig6|fig7|fig8|fig9|rounds|serving|
-                    distribution|two_party|ablations|all>
+                    distribution|two_party|batching|ablations|all>
                    [--seq N] [--paper] [--iters K] [--base-only]
                    [--concurrency C] [--requests R] [--workers N]
 
@@ -625,6 +647,14 @@ USAGE:
 demand planner dry-runs the model at startup, background producers keep
 DEPTH pregenerated session bundles ready per input kind, and every
 inference runs with zero dealer round-trips online.
+
+Cross-request batching (`--batch-buckets`, default 1,2,4,8): each worker
+executes its drained dynamic batch as ONE secure round schedule — B
+requests cost a single inference's online rounds (the `rounds_per_req`
+gauge on the `stats` line shows the amortization). Batches are padded up
+to the nearest bucket; in pooled mode every (kind, bucket) pair gets its
+own planned manifest and pool at startup. `--batch-buckets 1` restores
+the per-request schedule. `bench batching` writes BENCH_batching.json.
 
 `serve --peer-addr` moves computing party S1 to a separate machine: the
 coordinator keeps S0 and drives a `party-serve` process over a

@@ -217,6 +217,19 @@ impl StatsSnapshot {
         d
     }
 
+    /// Counter-wise sum (`self += other`) — merges the schedules of
+    /// independently executed chunks (e.g. the per-kind sub-batches of
+    /// one mixed `infer_batch` call) into one accounting view.
+    pub fn accumulate(&mut self, other: &StatsSnapshot) {
+        for i in 0..4 {
+            self.rounds[i] += other.rounds[i];
+            self.bytes[i] += other.bytes[i];
+            self.nanos[i] += other.nanos[i];
+        }
+        self.offline_bytes += other.offline_bytes;
+        self.offline_msgs += other.offline_msgs;
+    }
+
     /// Online bytes (this party) across all categories.
     pub fn total_bytes(&self) -> u64 {
         self.bytes.iter().sum()

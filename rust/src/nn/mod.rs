@@ -8,5 +8,5 @@ pub mod model;
 pub mod weights;
 
 pub use config::{Framework, ModelConfig};
-pub use model::{bert_forward, ModelInput};
+pub use model::{bert_forward, bert_forward_batch, ModelInput};
 pub use weights::{ShareMap, WeightMap};

@@ -174,43 +174,52 @@ fn apply_layernorm(
 /// "Others", the softmax under its own category — Table 3's convention).
 ///
 /// Dispatches on `cfg.fused_attention` between the round-fused path (the
-/// default; online rounds independent of `cfg.heads`) and the historical
-/// per-head loop kept as the before/after baseline (PERF.md §Round
-/// fusion).
+/// default; online rounds independent of `cfg.heads` AND of the cross-
+/// request batch size `b`) and the historical per-head loop kept as the
+/// before/after baseline (PERF.md §Round fusion). The baseline is only
+/// reachable with `b == 1` — [`bert_forward_batch`] serializes unfused
+/// batches item by item.
 fn attention(
     ctx: &mut PartyCtx,
     cfg: &ModelConfig,
     w: &ShareMap,
     layer: usize,
     h: &[u64],
+    b: usize,
 ) -> Vec<u64> {
     if cfg.fused_attention {
-        attention_fused(ctx, cfg, w, layer, h)
+        attention_fused(ctx, cfg, w, layer, h, b)
     } else {
+        debug_assert_eq!(b, 1, "unfused attention is a single-inference baseline");
         attention_unfused(ctx, cfg, w, layer, h)
     }
 }
 
-/// Round-fused attention: one Π_MatMul round for the concatenated Q/K/V
-/// projection panels, one `matmul_many` round for every head's score
-/// matmul, one row-batched softmax over all `heads × seq` rows, and one
-/// `matmul_many` round for every head's context matmul. With `S` = softmax
-/// rounds (15 for Π_2Quad at `div_iters = 13`), per-layer online attention
-/// rounds drop from `4 + heads·(S + 2)` to `4 + S` — head-count-
-/// independent (PERF.md §Round fusion).
+/// Round-fused attention over a stacked batch: one Π_MatMul round for the
+/// concatenated Q/K/V projection panels of all `b` items, one
+/// `matmul_many` round for every (item, head) score matmul, one
+/// row-batched softmax over all `b × heads × seq` rows, and one
+/// `matmul_many` round for every (item, head) context matmul. With `S` =
+/// softmax rounds (15 for Π_2Quad at `div_iters = 13`), per-layer online
+/// attention rounds drop from `4 + heads·(S + 2)` to `4 + S` — head-count-
+/// independent (PERF.md §Round fusion) — and stay there for ANY batch
+/// size: the batch dimension folds into the rows dimension exactly like
+/// heads did (PERF.md §Cross-request batching).
 fn attention_fused(
     ctx: &mut PartyCtx,
     cfg: &ModelConfig,
     w: &ShareMap,
     layer: usize,
     h: &[u64],
+    b: usize,
 ) -> Vec<u64> {
     let (s, d, nh, dh) = (cfg.seq, cfg.hidden, cfg.heads, cfg.head_dim());
+    let rows = b * s;
     let p = format!("layer{layer}");
 
-    // --- Q/K/V in one round: (s×d) · (d×3d) with concatenated panels.
+    // --- Q/K/V in one round: (b·s×d) · (d×3d) with concatenated panels.
     // Sharing one mask opening for the common left operand also saves
-    // 2·s·d opened elements per layer versus three separate Π_MatMul.
+    // 2·b·s·d opened elements per layer versus three separate Π_MatMul.
     let wq = get(w, &format!("{p}.wq"));
     let wk = get(w, &format!("{p}.wk"));
     let wv = get(w, &format!("{p}.wv"));
@@ -224,8 +233,8 @@ fn attention_fused(
     let bk = get(w, &format!("{p}.bk"));
     let bv = get(w, &format!("{p}.bv"));
     let qkv = with_cat(ctx, OpCategory::Others, |ctx| {
-        let mut y = prim::matmul(ctx, h, &wqkv, s, d, 3 * d);
-        for r in 0..s {
+        let mut y = prim::matmul(ctx, h, &wqkv, rows, d, 3 * d);
+        for r in 0..rows {
             let row = &mut y[r * 3 * d..(r + 1) * 3 * d];
             for c in 0..d {
                 row[c] = row[c].wrapping_add(bq[c]);
@@ -235,46 +244,53 @@ fn attention_fused(
         }
         y
     });
-    let q = slice_cols(&qkv, s, 3 * d, 0, d);
-    let k = slice_cols(&qkv, s, 3 * d, d, 2 * d);
-    let v = slice_cols(&qkv, s, 3 * d, 2 * d, 3 * d);
+    let q = slice_cols(&qkv, rows, 3 * d, 0, d);
+    let k = slice_cols(&qkv, rows, 3 * d, d, 2 * d);
+    let v = slice_cols(&qkv, rows, 3 * d, 2 * d, 3 * d);
 
-    // Per-head operand views (local slicing/transposition only).
-    let mut qhs = Vec::with_capacity(nh);
-    let mut kts = Vec::with_capacity(nh);
-    let mut vhs = Vec::with_capacity(nh);
-    for head in 0..nh {
-        let (c0, c1) = (head * dh, (head + 1) * dh);
-        qhs.push(slice_cols(&q, s, d, c0, c1));
-        kts.push(transpose(&slice_cols(&k, s, d, c0, c1), s, dh));
-        vhs.push(slice_cols(&v, s, d, c0, c1));
+    // Per-(item, head) operand views (local slicing/transposition only),
+    // item-major so the b == 1 layout is exactly the pre-batch one.
+    let mut qhs = Vec::with_capacity(b * nh);
+    let mut kts = Vec::with_capacity(b * nh);
+    let mut vhs = Vec::with_capacity(b * nh);
+    for item in 0..b {
+        let q_i = &q[item * s * d..(item + 1) * s * d];
+        let k_i = &k[item * s * d..(item + 1) * s * d];
+        let v_i = &v[item * s * d..(item + 1) * s * d];
+        for head in 0..nh {
+            let (c0, c1) = (head * dh, (head + 1) * dh);
+            qhs.push(slice_cols(q_i, s, d, c0, c1));
+            kts.push(transpose(&slice_cols(k_i, s, d, c0, c1), s, dh));
+            vhs.push(slice_cols(v_i, s, d, c0, c1));
+        }
     }
 
-    // --- All heads' score matmuls share ONE communication round; the
-    // result is laid out head-major as (heads·s) × s rows.
+    // --- All b·heads score matmuls share ONE communication round; the
+    // result is laid out (item, head)-major as (b·heads·s) × s rows.
     let scale = 1.0 / (dh as f64).sqrt();
     let mut scores_all = with_cat(ctx, OpCategory::Others, |ctx| {
-        let specs: Vec<prim::MatMulSpec> = (0..nh)
+        let specs: Vec<prim::MatMulSpec> = (0..b * nh)
             .map(|i| prim::MatMulSpec { x: &qhs[i], y: &kts[i], m: s, k: dh, n: s })
             .collect();
         let per_head = prim::matmul_many(ctx, &specs);
         prim::mul_public(ctx, &per_head.concat(), scale)
     });
     if cfg.causal {
-        for head in 0..nh {
-            apply_causal_mask(ctx, cfg, &mut scores_all[head * s * s..(head + 1) * s * s], s);
+        for blk in 0..b * nh {
+            apply_causal_mask(ctx, cfg, &mut scores_all[blk * s * s..(blk + 1) * s * s], s);
         }
     }
 
-    // --- One softmax for every head: the protocols are row-oriented, so
-    // the head loop collapses into the rows dimension (heads·s rows of s).
+    // --- One softmax for every item and head: the protocols are
+    // row-oriented, so both loops collapse into the rows dimension
+    // (b·heads·s rows of s).
     let attnw = with_cat(ctx, OpCategory::Softmax, |ctx| {
-        apply_softmax(ctx, cfg, &scores_all, nh * s, s)
+        apply_softmax(ctx, cfg, &scores_all, b * nh * s, s)
     });
 
     // --- All context matmuls share ONE round.
     let ctxs = with_cat(ctx, OpCategory::Others, |ctx| {
-        let specs: Vec<prim::MatMulSpec> = (0..nh)
+        let specs: Vec<prim::MatMulSpec> = (0..b * nh)
             .map(|i| prim::MatMulSpec {
                 x: &attnw[i * s * s..(i + 1) * s * s],
                 y: &vhs[i],
@@ -285,16 +301,19 @@ fn attention_fused(
             .collect();
         prim::matmul_many(ctx, &specs)
     });
-    let mut ctx_all = vec![0u64; s * d];
-    for (head, ctxh) in ctxs.iter().enumerate() {
-        put_cols(&mut ctx_all, ctxh, s, d, head * dh, (head + 1) * dh);
+    let mut ctx_all = vec![0u64; rows * d];
+    for item in 0..b {
+        let dst = &mut ctx_all[item * s * d..(item + 1) * s * d];
+        for head in 0..nh {
+            put_cols(dst, &ctxs[item * nh + head], s, d, head * dh, (head + 1) * dh);
+        }
     }
     linear(
         ctx,
         &ctx_all,
         get(w, &format!("{p}.wo")),
         get(w, &format!("{p}.bo")),
-        s,
+        rows,
         d,
         d,
     )
@@ -350,17 +369,20 @@ fn attention_unfused(
     )
 }
 
-/// One encoder layer: MHA + residual + LN, FFN(GeLU) + residual + LN.
+/// One encoder layer over a stacked batch: MHA + residual + LN, FFN(GeLU)
+/// + residual + LN. All row-oriented protocols run with `rows = b·seq`.
 fn encoder_layer(
     ctx: &mut PartyCtx,
     cfg: &ModelConfig,
     w: &ShareMap,
     layer: usize,
     h: &[u64],
+    b: usize,
 ) -> Vec<u64> {
     let (s, d, it) = (cfg.seq, cfg.hidden, cfg.intermediate);
+    let rows = b * s;
     let p = format!("layer{layer}");
-    let attn_out = attention(ctx, cfg, w, layer, h);
+    let attn_out = attention(ctx, cfg, w, layer, h, b);
     let resid1 = prim::add(h, &attn_out);
     let h1 = with_cat(ctx, OpCategory::LayerNorm, |ctx| {
         apply_layernorm(
@@ -369,13 +391,15 @@ fn encoder_layer(
             &resid1,
             get(w, &format!("{p}.ln1_g")),
             get(w, &format!("{p}.ln1_b")),
-            s,
+            rows,
             d,
         )
     });
-    let ff1 = linear(ctx, &h1, get(w, &format!("{p}.w1")), get(w, &format!("{p}.b1")), s, d, it);
+    let ff1 =
+        linear(ctx, &h1, get(w, &format!("{p}.w1")), get(w, &format!("{p}.b1")), rows, d, it);
     let act = with_cat(ctx, OpCategory::Gelu, |ctx| apply_gelu(ctx, cfg, &ff1));
-    let ff2 = linear(ctx, &act, get(w, &format!("{p}.w2")), get(w, &format!("{p}.b2")), s, it, d);
+    let ff2 =
+        linear(ctx, &act, get(w, &format!("{p}.w2")), get(w, &format!("{p}.b2")), rows, it, d);
     let resid2 = prim::add(&h1, &ff2);
     with_cat(ctx, OpCategory::LayerNorm, |ctx| {
         apply_layernorm(
@@ -384,7 +408,7 @@ fn encoder_layer(
             &resid2,
             get(w, &format!("{p}.ln2_g")),
             get(w, &format!("{p}.ln2_b")),
-            s,
+            rows,
             d,
         )
     })
@@ -393,43 +417,111 @@ fn encoder_layer(
 /// Full secure forward: input share → logits share (num_labels,).
 ///
 /// SPMD: both computing parties call this with their own `ctx` and shares;
-/// every communication round inside is symmetric.
+/// every communication round inside is symmetric. A one-element
+/// [`bert_forward_batch`]: identical round schedule, byte volume and
+/// provider stream to the pre-batching forward.
 pub fn bert_forward(
     ctx: &mut PartyCtx,
     cfg: &ModelConfig,
     w: &ShareMap,
     input: &InputShare,
 ) -> Vec<u64> {
+    bert_forward_batch(ctx, cfg, w, std::slice::from_ref(input))
+}
+
+/// Cross-request batched secure forward: `B` same-kind input shares →
+/// concatenated logits shares (`B × num_labels`, input order).
+///
+/// The batch dimension folds into the rows dimension exactly like heads
+/// did in the round-fused attention path: activations are stacked as
+/// `(B·seq) × hidden`, every linear layer is one `Π_MatMul` over the
+/// stacked rows, all `B × heads` score/context matmuls open in one
+/// `exchange_many`, and softmax/GeLU/LayerNorm run row-batched. Total
+/// online rounds for the batch therefore equal a SINGLE inference's
+/// rounds — batch-size-independent (asserted by `tests/batching.rs`) —
+/// while byte volume scales with `B` as it must.
+///
+/// Invariants: the batch must be non-empty and kind-homogeneous (the
+/// engine splits mixed token/hidden batches before dispatch). With
+/// `cfg.fused_attention == false` the historical per-head baseline has no
+/// batched form, so items run sequentially (`B` independent schedules).
+pub fn bert_forward_batch(
+    ctx: &mut PartyCtx,
+    cfg: &ModelConfig,
+    w: &ShareMap,
+    inputs: &[InputShare],
+) -> Vec<u64> {
+    assert!(!inputs.is_empty(), "bert_forward_batch needs at least one input");
+    let b = inputs.len();
+    if b > 1 && !cfg.fused_attention {
+        // The unfused path is kept verbatim as the pre-fusion baseline;
+        // batching it would change what the before/after benchmarks
+        // measure, so batched items simply run one by one.
+        let mut out = Vec::with_capacity(b * cfg.num_labels);
+        for input in inputs {
+            out.extend(bert_forward_batch(ctx, cfg, w, std::slice::from_ref(input)));
+        }
+        return out;
+    }
     ctx.stats.set_category(OpCategory::Others);
     let (s, d) = (cfg.seq, cfg.hidden);
-    let mut h = match input {
-        InputShare::Hidden(hs) => {
-            assert_eq!(hs.len(), s * d, "hidden input must be seq×hidden");
-            hs.clone()
+    let mut h = match &inputs[0] {
+        InputShare::Hidden(_) => {
+            let mut h = Vec::with_capacity(b * s * d);
+            for input in inputs {
+                let InputShare::Hidden(hs) = input else {
+                    panic!("mixed input kinds in one batch");
+                };
+                assert_eq!(hs.len(), s * d, "hidden input must be seq×hidden");
+                h.extend_from_slice(hs);
+            }
+            h
         }
-        InputShare::OneHot(oh) => {
-            assert_eq!(oh.len(), s * cfg.vocab);
-            // Word embeddings via secure one-hot matmul, then positional
-            // rows added locally (positions are public).
+        InputShare::OneHot(_) => {
+            let mut oh = Vec::with_capacity(b * s * cfg.vocab);
+            for input in inputs {
+                let InputShare::OneHot(o) = input else {
+                    panic!("mixed input kinds in one batch");
+                };
+                assert_eq!(o.len(), s * cfg.vocab);
+                oh.extend_from_slice(o);
+            }
+            // Word embeddings via ONE secure one-hot matmul over the
+            // stacked batch, then positional rows added locally per item
+            // (positions are public).
             let mut e = with_cat(ctx, OpCategory::Others, |ctx| {
-                prim::matmul(ctx, oh, get(w, "embed.word"), s, cfg.vocab, d)
+                prim::matmul(ctx, &oh, get(w, "embed.word"), b * s, cfg.vocab, d)
             });
             let pos = get(w, "embed.pos");
-            for i in 0..s * d {
-                e[i] = e[i].wrapping_add(pos[i]);
+            for item in 0..b {
+                let blk = &mut e[item * s * d..(item + 1) * s * d];
+                for i in 0..s * d {
+                    blk[i] = blk[i].wrapping_add(pos[i]);
+                }
             }
             with_cat(ctx, OpCategory::LayerNorm, |ctx| {
-                apply_layernorm(ctx, cfg, &e, get(w, "embed.ln_g"), get(w, "embed.ln_b"), s, d)
+                apply_layernorm(
+                    ctx,
+                    cfg,
+                    &e,
+                    get(w, "embed.ln_g"),
+                    get(w, "embed.ln_b"),
+                    b * s,
+                    d,
+                )
             })
         }
     };
     for layer in 0..cfg.layers {
-        h = encoder_layer(ctx, cfg, w, layer, &h);
+        h = encoder_layer(ctx, cfg, w, layer, &h, b);
     }
-    // Classifier on the [CLS] position (tanh-free head by model design —
-    // see PERF.md "Model head" note).
-    let cls = &h[..d];
-    linear(ctx, cls, get(w, "cls.w"), get(w, "cls.b"), 1, d, cfg.num_labels)
+    // Classifier on every item's [CLS] position, as one B-row matmul
+    // (tanh-free head by model design — see PERF.md "Model head" note).
+    let mut cls = Vec::with_capacity(b * d);
+    for item in 0..b {
+        cls.extend_from_slice(&h[item * s * d..item * s * d + d]);
+    }
+    linear(ctx, &cls, get(w, "cls.w"), get(w, "cls.b"), b, d, cfg.num_labels)
 }
 
 // ---------------------------------------------------------------------

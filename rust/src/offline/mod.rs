@@ -40,7 +40,9 @@ pub mod source;
 pub mod spool;
 pub mod wire;
 
-pub use planner::{plan_demand, PlanInput, RecordingProvider, TupleManifest, TupleReq};
+pub use planner::{
+    plan_demand, plan_demand_batch, PlanInput, RecordingProvider, TupleManifest, TupleReq,
+};
 pub use pool::{generate_bundle, PoolConfig, PoolSnapshot, SessionBundle, Tuple, TuplePool};
 pub use provider::{PooledProvider, PoolTelemetry};
 pub use remote::{

@@ -13,7 +13,7 @@ use crate::core::fixed::encode_vec;
 use crate::core::rng::Xoshiro;
 use crate::net::transport::channel_pair;
 use crate::nn::config::ModelConfig;
-use crate::nn::model::{bert_forward, InputShare};
+use crate::nn::model::{bert_forward_batch, InputShare};
 use crate::nn::weights::{random_weights, share_weights};
 use crate::proto::ctx::PartyCtx;
 use crate::sharing::provider::{
@@ -85,8 +85,11 @@ pub enum PlanInput {
     Tokens,
 }
 
-/// The exact offline demand of ONE secure inference: every tuple request
-/// the protocol layer issues, in order.
+/// The exact offline demand of ONE secure session: every tuple request
+/// the protocol layer issues, in order. A session covers `batch`
+/// inferences when planned with [`plan_demand_batch`] — the stacked
+/// forward issues the same NUMBER of requests as a single inference,
+/// with batch-scaled shapes.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TupleManifest {
     /// The input kind this demand was planned for.
@@ -94,7 +97,10 @@ pub struct TupleManifest {
     /// Whether the plan used the fused attention path
     /// (`ModelConfig::fused_attention`) — the demand streams differ.
     pub fused: bool,
-    /// Every tuple request of one inference, in consumption order.
+    /// The cross-request batch size the demand was planned for (1 = one
+    /// inference per session, the classic plan).
+    pub batch: usize,
+    /// Every tuple request of one session, in consumption order.
     pub reqs: Vec<TupleReq>,
 }
 
@@ -203,10 +209,26 @@ fn plan_input_shares(
 /// Cost: one full inference at `cfg`'s shape — paid once at startup, then
 /// amortized over every pooled session the manifest backs.
 pub fn plan_demand(cfg: &ModelConfig, input: PlanInput) -> TupleManifest {
+    plan_demand_batch(cfg, input, 1)
+}
+
+/// Dry-run one `batch`-sized secure session (the cross-request batched
+/// forward, [`crate::nn::model::bert_forward_batch`]) and return its
+/// exact tuple demand. `batch == 1` is stream-identical to
+/// [`plan_demand`]; larger batches record the batch-scaled matmul shapes
+/// and row counts one shared round schedule consumes.
+pub fn plan_demand_batch(cfg: &ModelConfig, input: PlanInput, batch: usize) -> TupleManifest {
+    assert!(batch >= 1, "batch sizes are 1-based");
     let weights = random_weights(cfg, 0x0FF1);
     let mut rng = Xoshiro::seed_from(0x0FF1 ^ 0x9E37);
     let (w0, w1) = share_weights(&weights, &mut rng);
-    let (in0, in1) = plan_input_shares(cfg, input, &mut rng);
+    let mut in0s = Vec::with_capacity(batch);
+    let mut in1s = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let (a, b) = plan_input_shares(cfg, input, &mut rng);
+        in0s.push(a);
+        in1s.push(b);
+    }
 
     let (peer0, peer1) = channel_pair();
     let log0 = Arc::new(Mutex::new(Vec::new()));
@@ -218,17 +240,19 @@ pub fn plan_demand(cfg: &ModelConfig, input: PlanInput) -> TupleManifest {
     std::thread::scope(|scope| {
         let w0 = &w0;
         let w1 = &w1;
+        let in0s = &in0s;
+        let in1s = &in1s;
         let h0 = scope.spawn(move || {
             let seeded = Box::new(FastSeededProvider::new_fast("offline-plan", 0));
             let prov = Box::new(RecordingProvider::new(seeded, l0));
             let mut ctx = PartyCtx::new(0, Box::new(peer0), prov, 0xAA);
-            let _ = bert_forward(&mut ctx, &cfg0, w0, &in0);
+            let _ = bert_forward_batch(&mut ctx, &cfg0, w0, in0s);
         });
         let h1 = scope.spawn(move || {
             let seeded = Box::new(FastSeededProvider::new_fast("offline-plan", 1));
             let prov = Box::new(RecordingProvider::new(seeded, l1));
             let mut ctx = PartyCtx::new(1, Box::new(peer1), prov, 0xBB);
-            let _ = bert_forward(&mut ctx, &cfg1, w1, &in1);
+            let _ = bert_forward_batch(&mut ctx, &cfg1, w1, in1s);
         });
         h0.join().expect("planner party 0 panicked");
         h1.join().expect("planner party 1 panicked");
@@ -239,7 +263,7 @@ pub fn plan_demand(cfg: &ModelConfig, input: PlanInput) -> TupleManifest {
     // SPMD invariant: both parties must have issued the identical request
     // stream — a divergence here would corrupt every pooled session.
     assert_eq!(reqs, reqs1, "planner: party demand streams diverged");
-    TupleManifest { input, fused: cfg.fused_attention, reqs }
+    TupleManifest { input, fused: cfg.fused_attention, batch, reqs }
 }
 
 #[cfg(test)]
@@ -292,6 +316,28 @@ mod tests {
                 .count()
         };
         assert!(batches(&pf) < batches(&pu));
+    }
+
+    #[test]
+    fn batched_plan_keeps_request_count_and_scales_words() {
+        // The stacked batch forward issues the SAME number of tuple
+        // requests as a single inference (one shared round schedule);
+        // only the shapes grow, so stored words scale ≈ linearly.
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let one = plan_demand_batch(&cfg, PlanInput::Hidden, 1);
+        let four = plan_demand_batch(&cfg, PlanInput::Hidden, 4);
+        assert_eq!(one.batch, 1);
+        assert_eq!(four.batch, 4);
+        assert_eq!(
+            one.reqs.len(),
+            four.reqs.len(),
+            "batched demand must keep the single-inference request count"
+        );
+        // Strictly more material per session (weight-side matmul masks
+        // are batch-independent, so growth is sublinear in B).
+        assert!(four.words_per_party() > one.words_per_party());
+        // batch == 1 is the classic plan, exactly.
+        assert_eq!(one, plan_demand(&cfg, PlanInput::Hidden));
     }
 
     #[test]

@@ -205,6 +205,7 @@ mod tests {
         TupleManifest {
             input: PlanInput::Hidden,
             fused: true,
+            batch: 1,
             reqs: vec![
                 TupleReq::Mul(8),
                 TupleReq::MatmulBatch(vec![(2, 3, 4), (1, 2, 2)]),
@@ -277,6 +278,7 @@ mod tests {
         let manifest = TupleManifest {
             input: PlanInput::Hidden,
             fused: true,
+            batch: 1,
             reqs: vec![TupleReq::Mul(4)],
         };
         let (b0, b1) = generate_bundle(&mut CrGen::from_session("ex"), &manifest);

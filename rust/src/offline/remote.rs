@@ -19,11 +19,14 @@
 //! answers `HELLO_OK` (or `ERR` + close on any mismatch — a client must
 //! never consume bundles planned for a different model). After the
 //! handshake the client keeps a fixed credit of outstanding `PULL`s per
-//! kind: one issued for the initial depth, then one replacement per
-//! consumed bundle, so the dealer's send rate is consumer-clocked and
-//! the socket applies natural backpressure. Every `PULL` is answered by
-//! exactly `count` `BUNDLE` frames (or `ERR` when the dealer's pools
-//! are exhausted/stopped).
+//! kind: one issued for the initial depth, then **coalesced**
+//! replacements — spent credit accumulates locally and ships as one
+//! `PULL count=N` frame per `max(1, depth/2)` consumed bundles, cutting
+//! the dealer-link frame count during prefetch bursts while the
+//! dealer's send rate stays consumer-clocked (the socket applies
+//! natural backpressure). Every `PULL` is answered by exactly `count`
+//! `BUNDLE` frames (or `ERR` when the dealer's pools are
+//! exhausted/stopped).
 //!
 //! Loss of the dealer mid-session is non-fatal: the client marks itself
 //! dead, drains its local queues, and further pops return `None` — the
@@ -407,6 +410,20 @@ struct RemoteShared {
     consumed: AtomicU64,
     received: AtomicU64,
     offline_bytes: AtomicU64,
+    /// Consumed-but-not-yet-replaced credit per kind (indexed by
+    /// `credit_slot`): batch PULL coalescing accumulates spent credit
+    /// here and ships it as ONE `PULL count=N` frame once it reaches the
+    /// flush threshold, instead of one frame per consumed bundle.
+    pending_credit: [AtomicU64; 2],
+    /// PULL frames written since connect (coalescing telemetry).
+    pulls_sent: AtomicU64,
+}
+
+fn credit_slot(kind: PlanInput) -> usize {
+    match kind {
+        PlanInput::Hidden => 0,
+        PlanInput::Tokens => 1,
+    }
 }
 
 impl RemoteShared {
@@ -419,10 +436,28 @@ impl RemoteShared {
         let mut payload = [0u8; 5];
         payload[0] = encode_kind(kind);
         payload[1..5].copy_from_slice(&count.to_le_bytes());
+        self.pulls_sent.fetch_add(1, Ordering::Relaxed);
         let mut w = self.writer.lock().unwrap();
         if write_frame(&mut *w, msg::PULL, &payload).is_err() {
             drop(w);
             self.mark_dead();
+        }
+    }
+
+    /// Account one consumed bundle and flush the accumulated credit as a
+    /// single coalesced PULL once it reaches `threshold`. Keeping the
+    /// threshold ≤ half the prefetch depth guarantees at least one
+    /// outstanding credit at all times, so the prefetch queue can never
+    /// starve waiting for a PULL that was never sent.
+    fn credit_consumed(&self, kind: PlanInput, threshold: u64) {
+        let slot = &self.pending_credit[credit_slot(kind)];
+        if slot.fetch_add(1, Ordering::Relaxed) + 1 >= threshold {
+            // Claim whatever accrued (racing consumers may leave 0 for
+            // the losers — exactly one PULL carries the batch).
+            let claimed = slot.swap(0, Ordering::Relaxed);
+            if claimed > 0 {
+                self.send_pull(kind, claimed as u32);
+            }
         }
     }
 }
@@ -482,6 +517,8 @@ impl RemotePool {
             consumed: AtomicU64::new(0),
             received: AtomicU64::new(0),
             offline_bytes: AtomicU64::new(0),
+            pending_credit: [AtomicU64::new(0), AtomicU64::new(0)],
+            pulls_sent: AtomicU64::new(0),
         });
 
         // Standing credit: depth outstanding PULLs per kind; one
@@ -503,6 +540,19 @@ impl RemotePool {
     pub fn local_depth(&self) -> usize {
         let st = self.shared.state.lock().unwrap();
         st.hidden.len() + st.tokens.len()
+    }
+
+    /// PULL frames written since connect. With batch PULL coalescing
+    /// this grows sublinearly in consumed bundles (one frame per
+    /// `max(1, depth/2)` consumptions instead of one per bundle).
+    pub fn pulls_sent(&self) -> u64 {
+        self.shared.pulls_sent.load(Ordering::Relaxed)
+    }
+
+    /// Coalescing flush threshold: half the prefetch depth, floor 1 —
+    /// the largest batch that still keeps ≥ depth/2 credit outstanding.
+    fn pull_flush_threshold(&self) -> u64 {
+        (self.cfg.depth as u64 / 2).max(1)
     }
 }
 
@@ -567,8 +617,9 @@ impl BundleSource for RemotePool {
             if let Some(b) = st.queue(kind).pop_front() {
                 drop(st);
                 self.shared.consumed.fetch_add(1, Ordering::Relaxed);
-                // Replace the spent credit so the dealer tops us back up.
-                self.shared.send_pull(kind, 1);
+                // Replace the spent credit — coalesced: one PULL frame
+                // carries several bundles' worth once enough accrues.
+                self.shared.credit_consumed(kind, self.pull_flush_threshold());
                 return Some(b);
             }
             if st.dead || self.shared.stopping.load(Ordering::Relaxed) {
@@ -582,9 +633,10 @@ impl BundleSource for RemotePool {
         let mut st = self.shared.state.lock().unwrap();
         let b = st.queue(kind).pop_front()?;
         drop(st);
-        // Internal transfer: replace the credit but leave consumer
-        // accounting (consumed/hits) to the stage that hands it out.
-        self.shared.send_pull(kind, 1);
+        // Internal transfer: replace the credit (coalesced) but leave
+        // consumer accounting (consumed/hits) to the stage that hands
+        // the bundle out.
+        self.shared.credit_consumed(kind, self.pull_flush_threshold());
         Some(b)
     }
 
@@ -709,6 +761,34 @@ mod tests {
         // The dealer's bounded pool is spent: the ERR it answers the
         // outstanding credit with must surface as `None`, not a hang.
         assert!(pool.pop(PlanInput::Tokens).is_none());
+        pool.stop();
+        dealer_pools.stop();
+    }
+
+    #[test]
+    fn pull_credit_is_coalesced_into_batched_frames() {
+        // Depth-4 prefetch, 6 consumed bundles: the flush threshold is
+        // depth/2 = 2, so replacement credit ships as 3 coalesced PULLs
+        // instead of 6 — 1 (initial) + 3 frames total, never one frame
+        // per bundle.
+        let (addr, dealer_pools) = start_dealer("rp-c", 16);
+        let pool = RemotePool::connect(
+            &addr.to_string(),
+            &tiny(),
+            RemotePoolConfig { depth: 4, kinds: vec![PlanInput::Tokens], psk: None },
+        )
+        .expect("connect");
+        for i in 1..=6u64 {
+            let b = pool.pop(PlanInput::Tokens).expect("bundle");
+            assert_eq!(b.seq, i, "in-order delivery survives coalescing");
+        }
+        let pulls = pool.pulls_sent();
+        assert!(pulls >= 2, "replacement credit must still flow: {pulls} frames");
+        assert!(
+            pulls <= 1 + 3,
+            "6 consumptions at threshold 2 must coalesce into ≤ 3 \
+             replacement PULLs (got {pulls} total frames)"
+        );
         pool.stop();
         dealer_pools.stop();
     }

@@ -1,14 +1,16 @@
 //! [`BundleSource`] — the engine-facing abstraction over *where* session
-//! bundles come from — and [`PoolSet`], the per-input-kind pool cache.
+//! bundles come from — and [`PoolSet`], the per-(input kind, batch
+//! bucket) pool cache.
 //!
 //! PR 2 wired the engine directly to one in-process [`TuplePool`]. The
 //! distribution subsystem generalizes that to a trait with four
 //! implementations:
 //!
 //! * [`TuplePool`] — in-process background producers (the PR 2 path);
-//! * [`PoolSet`] — one pool per [`PlanInput`] kind, so mixed
-//!   hidden/token request streams are all served from plan-exact bundles
-//!   instead of falling back to seeded generation mid-session;
+//! * [`PoolSet`] — one pool per ([`PlanInput`], batch bucket), so mixed
+//!   hidden/token request streams AND cross-request batched sessions are
+//!   all served from plan-exact bundles instead of falling back to
+//!   seeded generation mid-session;
 //! * [`crate::offline::remote::RemotePool`] — bundles prefetched from a
 //!   standalone `dealer-serve` process over TCP;
 //! * [`crate::offline::spool::SpooledSource`] — a disk-backed spool
@@ -19,7 +21,7 @@
 //! `None` sends the session to synchronized seeded generation (results
 //! stay correct; only the prefetch win is lost).
 
-use crate::offline::planner::PlanInput;
+use crate::offline::planner::{plan_demand_batch, PlanInput};
 use crate::offline::pool::{PoolConfig, PoolSnapshot, SessionBundle, TuplePool};
 use crate::nn::config::ModelConfig;
 use std::sync::Arc;
@@ -34,6 +36,21 @@ pub trait BundleSource: Send + Sync {
     /// `None` means this source cannot serve the kind (stopped, exhausted
     /// or never planned) — the caller falls back to seeded generation.
     fn pop(&self, kind: PlanInput) -> Option<SessionBundle>;
+
+    /// Pop a bundle pregenerated for a `batch`-sized session
+    /// (cross-request batching; see PERF.md §Cross-request batching).
+    /// Sources that only plan single-inference demand serve `batch == 1`
+    /// and degrade larger buckets to `None` — the batched chunk then
+    /// falls back to synchronized seeded generation (correct results, no
+    /// prefetch win), counted as a miss.
+    fn pop_batch(&self, kind: PlanInput, batch: usize) -> Option<SessionBundle> {
+        if batch == 1 {
+            self.pop(kind)
+        } else {
+            self.note_fallback();
+            None
+        }
+    }
 
     /// Non-blocking pop used by internal pipeline stages (the spooler).
     /// Does NOT touch hit/miss/consumed accounting: transfers between
@@ -51,8 +68,8 @@ pub trait BundleSource: Send + Sync {
     /// Point-in-time telemetry, aggregated across the source's pools.
     fn snapshot(&self) -> PoolSnapshot;
 
-    /// Block until at least `n` bundles are ready per planned kind
-    /// (clamped to each pool's depth/production bounds).
+    /// Block until at least `n` bundles are ready per planned (kind,
+    /// bucket) pool (clamped to each pool's depth/production bounds).
     fn warm(&self, _n: usize) {}
 
     /// Stop background production/prefetch and unblock waiting
@@ -60,74 +77,154 @@ pub trait BundleSource: Send + Sync {
     fn stop(&self);
 }
 
-/// One [`TuplePool`] per input kind, planned eagerly at startup.
+/// One [`TuplePool`] per (input kind, batch bucket), planned eagerly at
+/// startup.
 ///
-/// This closes the PR 2 manifest-cache gap: a coordinator that planned
-/// only token demand served hidden-state requests by mid-session seeded
-/// fallback. With a `PoolSet`, each kind's manifest is planned once and
-/// pops route by kind, so mixed-kind request streams keep a 1.0 hit
-/// rate (asserted by `tests/distribution.rs`).
+/// The kind split closes the PR 2 manifest-cache gap (mixed token/hidden
+/// streams keep a 1.0 hit rate); the bucket split backs cross-request
+/// batching: the coordinator pads each drained batch up to the nearest
+/// planned bucket and pops ONE bundle sized for the whole batch, so a
+/// batch of B requests costs the round schedule (and the dealer
+/// interaction) of a single inference.
 ///
-/// The token pool keeps the bare `prefix` as its session prefix — token
-/// streams are therefore bundle-for-bundle identical to the PR 2
-/// single-pool path; the hidden pool derives sessions from
-/// `{prefix}/hidden`.
+/// Prefix scheme (bit-parity with earlier PRs): the bucket-1 token pool
+/// keeps the bare `prefix` (bundle-for-bundle identical to the PR 2
+/// single-pool path) and the bucket-1 hidden pool keeps
+/// `{prefix}/hidden`; bucket `b > 1` pools derive sessions from
+/// `{prefix}/b{b}` and `{prefix}/hidden/b{b}`.
 pub struct PoolSet {
-    tokens: Arc<TuplePool>,
-    hidden: Option<Arc<TuplePool>>,
+    /// (kind, bucket) → pool; a handful of entries, scanned linearly.
+    pools: Vec<(PlanInput, usize, Arc<TuplePool>)>,
 }
 
 impl PoolSet {
-    /// Plan demand for `cfg` and start one pool per kind (hidden only
-    /// when `plan_hidden`; a `PoolSet` without a hidden pool answers
-    /// hidden pops with `None` → seeded fallback, exactly the PR 2
-    /// behaviour).
+    /// Plan demand for `cfg` and start the bucket-1 pools only (hidden
+    /// only when `plan_hidden`) — the pre-batching behaviour, kept for
+    /// parity tests and single-request deployments. A `PoolSet` without
+    /// a pool for a popped (kind, bucket) answers `None` → seeded
+    /// fallback.
     pub fn start(
         cfg: &ModelConfig,
         prefix: &str,
         pool_cfg: PoolConfig,
         plan_hidden: bool,
     ) -> Arc<PoolSet> {
-        let tokens = TuplePool::start(
-            crate::offline::planner::plan_demand(cfg, PlanInput::Tokens),
-            prefix,
-            pool_cfg,
-        );
-        let hidden = plan_hidden.then(|| {
-            TuplePool::start(
-                crate::offline::planner::plan_demand(cfg, PlanInput::Hidden),
-                &format!("{prefix}/hidden"),
-                pool_cfg,
-            )
-        });
-        Arc::new(PoolSet { tokens, hidden })
+        Self::start_with_buckets(cfg, prefix, pool_cfg, plan_hidden, &[1])
     }
 
-    /// The pool backing `kind`, if planned.
-    pub fn pool(&self, kind: PlanInput) -> Option<&Arc<TuplePool>> {
-        match kind {
-            PlanInput::Tokens => Some(&self.tokens),
-            PlanInput::Hidden => self.hidden.as_ref(),
+    /// Plan demand for every (kind, bucket) pair and start one pool per
+    /// pair. `buckets` is normalized (sorted, deduplicated, values < 1
+    /// dropped) and ALWAYS includes bucket 1, so the legacy single-
+    /// session surfaces (`pop`, the dealer protocol, the disk spool)
+    /// keep working unchanged.
+    ///
+    /// Depth scaling: a bucket-`b` bundle holds ~`b` requests' worth of
+    /// correlated randomness, so each bucket-`b` pool runs at
+    /// `max(1, target_depth / b)` — total resident pad material per kind
+    /// stays ≈ `target_depth` request-equivalents instead of multiplying
+    /// by the bucket count (and [`BundleSource::warm`] clamps to each
+    /// pool's own target, keeping startup warming bounded too). The
+    /// dry-run planning cost — one stacked forward per (kind, bucket) —
+    /// is paid once at startup, like all offline-phase work.
+    pub fn start_with_buckets(
+        cfg: &ModelConfig,
+        prefix: &str,
+        pool_cfg: PoolConfig,
+        plan_hidden: bool,
+        buckets: &[usize],
+    ) -> Arc<PoolSet> {
+        let buckets = normalize_buckets(buckets);
+        let mut pools = Vec::with_capacity(buckets.len() * 2);
+        for &b in &buckets {
+            let bucket_cfg = PoolConfig {
+                target_depth: (pool_cfg.target_depth / b).max(1),
+                max_depth: (pool_cfg.max_depth / b).max(pool_cfg.target_depth / b).max(1),
+                ..pool_cfg
+            };
+            let tok_prefix =
+                if b == 1 { prefix.to_string() } else { format!("{prefix}/b{b}") };
+            pools.push((
+                PlanInput::Tokens,
+                b,
+                TuplePool::start(
+                    plan_demand_batch(cfg, PlanInput::Tokens, b),
+                    &tok_prefix,
+                    bucket_cfg,
+                ),
+            ));
+            if plan_hidden {
+                let hid_prefix = if b == 1 {
+                    format!("{prefix}/hidden")
+                } else {
+                    format!("{prefix}/hidden/b{b}")
+                };
+                pools.push((
+                    PlanInput::Hidden,
+                    b,
+                    TuplePool::start(
+                        plan_demand_batch(cfg, PlanInput::Hidden, b),
+                        &hid_prefix,
+                        bucket_cfg,
+                    ),
+                ));
+            }
         }
+        Arc::new(PoolSet { pools })
     }
 
-    /// The manifest bundles of `kind` satisfy, if planned.
+    /// The bucket-1 pool backing `kind`, if planned (the legacy
+    /// single-session accessor the dealer protocol serves from).
+    pub fn pool(&self, kind: PlanInput) -> Option<&Arc<TuplePool>> {
+        self.pool_for(kind, 1)
+    }
+
+    /// The pool backing (`kind`, `bucket`), if planned.
+    pub fn pool_for(&self, kind: PlanInput, bucket: usize) -> Option<&Arc<TuplePool>> {
+        self.pools
+            .iter()
+            .find(|(k, b, _)| *k == kind && *b == bucket)
+            .map(|(_, _, p)| p)
+    }
+
+    /// The single-session manifest bundles of `kind` satisfy, if planned.
     pub fn manifest_for(
         &self,
         kind: PlanInput,
     ) -> Option<&crate::offline::planner::TupleManifest> {
         self.pool(kind).map(|p| p.manifest())
     }
+
+    /// The batch buckets planned for `kind`, ascending.
+    pub fn buckets_for(&self, kind: PlanInput) -> Vec<usize> {
+        self.pools
+            .iter()
+            .filter(|(k, _, _)| *k == kind)
+            .map(|(_, b, _)| *b)
+            .collect()
+    }
+}
+
+/// Sort, deduplicate and floor-clamp a bucket list; always includes 1.
+pub fn normalize_buckets(buckets: &[usize]) -> Vec<usize> {
+    let mut b: Vec<usize> = buckets.iter().copied().filter(|&x| x >= 1).collect();
+    b.push(1);
+    b.sort_unstable();
+    b.dedup();
+    b
 }
 
 impl BundleSource for PoolSet {
     fn pop(&self, kind: PlanInput) -> Option<SessionBundle> {
-        match self.pool(kind) {
-            Some(p) => BundleSource::pop(p.as_ref(), kind),
+        self.pop_batch(kind, 1)
+    }
+
+    fn pop_batch(&self, kind: PlanInput, batch: usize) -> Option<SessionBundle> {
+        match self.pool_for(kind, batch) {
+            Some(p) => BundleSource::pop_batch(p.as_ref(), kind, batch),
             None => {
-                // Unplanned kind: count the degraded session where the
-                // token pool's consumers will see it.
-                self.tokens.note_fallback();
+                // Unplanned (kind, bucket): count the degraded session
+                // where this set's consumers will see it.
+                self.note_fallback();
                 None
             }
         }
@@ -138,40 +235,45 @@ impl BundleSource for PoolSet {
     }
 
     fn note_arrival(&self, kind: PlanInput) {
+        // The adaptive-depth signal feeds the bucket-1 pool (arrival
+        // counting predates batching; batch pools are sized statically).
         if let Some(p) = self.pool(kind) {
             p.note_arrival();
         }
     }
 
     fn note_fallback(&self) {
-        self.tokens.note_fallback();
+        if let Some((_, _, p)) = self.pools.first() {
+            p.note_fallback();
+        }
     }
 
     fn snapshot(&self) -> PoolSnapshot {
-        let mut s = self.tokens.snapshot();
-        if let Some(h) = &self.hidden {
-            let hs = h.snapshot();
-            s.depth += hs.depth;
-            s.produced += hs.produced;
-            s.consumed += hs.consumed;
-            s.hits += hs.hits;
-            s.misses += hs.misses;
-            s.offline_bytes += hs.offline_bytes;
+        let mut s = PoolSnapshot::default();
+        for (_, bucket, p) in &self.pools {
+            let ps = p.snapshot();
+            // Depth in REQUEST capacity, not bundle count: a bucket-b
+            // bundle serves b requests, so the gauge stays comparable to
+            // the configured `--pool DEPTH` whatever the bucket mix.
+            s.depth += ps.depth * bucket;
+            s.produced += ps.produced;
+            s.consumed += ps.consumed;
+            s.hits += ps.hits;
+            s.misses += ps.misses;
+            s.offline_bytes += ps.offline_bytes;
         }
         s
     }
 
     fn warm(&self, n: usize) {
-        self.tokens.warm(n);
-        if let Some(h) = &self.hidden {
-            h.warm(n);
+        for (_, _, p) in &self.pools {
+            p.warm(n);
         }
     }
 
     fn stop(&self) {
-        self.tokens.stop();
-        if let Some(h) = &self.hidden {
-            h.stop();
+        for (_, _, p) in &self.pools {
+            p.stop();
         }
     }
 }
@@ -220,6 +322,32 @@ mod tests {
         );
         assert!(set.pop(PlanInput::Hidden).is_none());
         assert!(set.snapshot().misses >= 1, "unplanned kind counts as a miss");
+        set.stop();
+    }
+
+    #[test]
+    fn bucketed_pool_set_routes_by_batch_size() {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let set = PoolSet::start_with_buckets(
+            &cfg,
+            "ps-b",
+            PoolConfig { target_depth: 1, producers: 1, ..PoolConfig::default() },
+            false,
+            &[2, 1],
+        );
+        assert_eq!(set.buckets_for(PlanInput::Tokens), vec![1, 2]);
+        set.warm(1);
+        let one = set.pop_batch(PlanInput::Tokens, 1).expect("bucket-1 bundle");
+        assert_eq!(one.session, "ps-b-1", "bucket 1 keeps the legacy prefix");
+        let two = set.pop_batch(PlanInput::Tokens, 2).expect("bucket-2 bundle");
+        assert_eq!(two.session, "ps-b/b2-1");
+        assert!(
+            two.words_per_party > one.words_per_party,
+            "a batch bundle holds more correlated randomness"
+        );
+        // An unplanned bucket degrades to None and counts a miss.
+        assert!(set.pop_batch(PlanInput::Tokens, 4).is_none());
+        assert!(set.snapshot().misses >= 1);
         set.stop();
     }
 }

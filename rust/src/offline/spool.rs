@@ -522,6 +522,22 @@ impl BundleSource for SpooledSource {
         }
     }
 
+    fn pop_batch(&self, kind: PlanInput, batch: usize) -> Option<SessionBundle> {
+        if batch == 1 {
+            return self.pop(kind);
+        }
+        // The spool persists single-session (bucket-1) bundles only;
+        // batched sessions bypass the disk layer and draw straight from
+        // the live source when one is attached.
+        match &self.shared.inner {
+            Some(inner) => inner.pop_batch(kind, batch),
+            None => {
+                self.shared.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
     fn try_pop(&self, kind: PlanInput) -> Option<SessionBundle> {
         let from_disk = {
             let mut st = self.shared.state.lock().unwrap();

@@ -504,6 +504,9 @@ fn encode_manifest(m: &TupleManifest) -> Vec<u8> {
     let mut buf = Vec::with_capacity(16 + m.reqs.len() * 8);
     buf.push(kind_tag(m.input));
     buf.push(m.fused as u8);
+    // Batch bucket: a bundle planned for a B-sized stacked session must
+    // never serve a differently-sized one, so the fingerprint covers it.
+    buf.extend_from_slice(&(m.batch as u32).to_le_bytes());
     buf.extend_from_slice(&(m.reqs.len() as u32).to_le_bytes());
     for r in &m.reqs {
         match r {
@@ -633,7 +636,8 @@ mod tests {
     }
 
     #[test]
-    fn fingerprints_separate_kinds_and_paths() {
+    fn fingerprints_separate_kinds_paths_and_batches() {
+        use crate::offline::planner::plan_demand_batch;
         let cfg = ModelConfig::tiny(8, Framework::SecFormer);
         let mut unfused = cfg.clone();
         unfused.fused_attention = false;
@@ -644,5 +648,8 @@ mod tests {
         assert_eq!(a, a2, "fingerprint must be deterministic");
         assert_ne!(a, b);
         assert_ne!(a, c);
+        // A batch-2 plan must never satisfy a batch-1 consumer.
+        let d = manifest_fingerprint(&plan_demand_batch(&cfg, PlanInput::Hidden, 2));
+        assert_ne!(a, d);
     }
 }

@@ -28,7 +28,7 @@
 use crate::net::stats::CommStats;
 use crate::net::transport::{channel_pair, Transport};
 use crate::nn::config::ModelConfig;
-use crate::nn::model::{bert_forward, InputShare};
+use crate::nn::model::{bert_forward_batch, InputShare};
 use crate::nn::weights::ShareMap;
 use crate::offline::planner::PlanInput;
 use crate::offline::pool::SessionBundle;
@@ -36,8 +36,9 @@ use crate::offline::provider::PooledProvider;
 use crate::offline::source::BundleSource;
 use crate::offline::wire::{client_auth, msg, read_frame, server_auth, write_frame};
 use crate::party::wire::{
-    config_fingerprint, decode_ack, decode_msg, decode_result, decode_start, encode_ack,
-    encode_msg, encode_result, encode_start, pmsg, SessionStart, INPUT_HIDDEN, MODE_DEALER,
+    config_fingerprint, decode_ack, decode_msg, decode_result, decode_start,
+    decode_start_batch, encode_ack, encode_msg, encode_result, encode_start,
+    encode_start_batch, pmsg, BatchSessionStart, SessionStart, INPUT_HIDDEN, MODE_DEALER,
     MODE_POOLED,
 };
 use crate::proto::ctx::PartyCtx;
@@ -184,8 +185,26 @@ fn handle_party_conn(mut stream: TcpStream, ctx: Arc<HostCtx>) -> Result<()> {
             Err(_) => return Ok(()), // client went away
         };
         match ty {
-            pmsg::START => {
-                let (id, start) = decode_start(&payload)?;
+            pmsg::START | pmsg::START_BATCH => {
+                // A classic START is a one-item batch; both frames run
+                // the same session body (bert_forward_batch at B == 1 is
+                // bit-identical to the single forward).
+                let (id, start) = if ty == pmsg::START {
+                    let (id, s) = decode_start(&payload)?;
+                    (
+                        id,
+                        BatchSessionStart {
+                            label: s.label,
+                            mode: s.mode,
+                            coord_has_bundle: s.coord_has_bundle,
+                            bundle_label: s.bundle_label,
+                            input_kind: s.input_kind,
+                            inputs: vec![s.input],
+                        },
+                    )
+                } else {
+                    decode_start_batch(&payload)?
+                };
                 // Register the inbound queue BEFORE acking, so no MSG
                 // can race the session thread's setup.
                 let (tx, rx) = channel();
@@ -228,6 +247,7 @@ fn match_bundle(
     source: &Arc<dyn BundleSource>,
     label: &str,
     kind: PlanInput,
+    batch: usize,
     limit: usize,
 ) -> Option<SessionBundle> {
     if let Some(b) = stash.lock().unwrap().remove(label) {
@@ -239,7 +259,7 @@ fn match_bundle(
             // popped; check once more before degrading.
             return stash.lock().unwrap().remove(label);
         }
-        let b = source.pop(kind)?;
+        let b = source.pop_batch(kind, batch)?;
         if b.session == label {
             return Some(b);
         }
@@ -278,7 +298,7 @@ fn run_party_session(
     writer: &Arc<Mutex<TcpStream>>,
     stash: &Mutex<HashMap<String, SessionBundle>>,
     id: u64,
-    start: SessionStart,
+    start: BatchSessionStart,
     rx: Receiver<Vec<u64>>,
 ) {
     let kind = if start.input_kind == INPUT_HIDDEN {
@@ -286,16 +306,18 @@ fn run_party_session(
     } else {
         PlanInput::Tokens
     };
+    let batch = start.inputs.len();
     if let Some(src) = &ctx.source {
         src.note_arrival(kind);
     }
     // Pooled sessions use pregenerated material only when BOTH sides
-    // hold the same bundle; the ack commits the joint decision.
+    // hold the same bundle (sized for this batch); the ack commits the
+    // joint decision.
     let bundle = if start.mode == MODE_POOLED && start.coord_has_bundle {
         ctx.source
             .as_ref()
             .and_then(|src| {
-                match_bundle(stash, src, &start.bundle_label, kind, ctx.host.stash_limit)
+                match_bundle(stash, src, &start.bundle_label, kind, batch, ctx.host.stash_limit)
             })
     } else {
         None
@@ -344,16 +366,20 @@ fn run_party_session(
         _ => Box::new(FastSeededProvider::new_fast(&start.label, 1)),
     };
 
-    let in1 = match start.input_kind {
-        INPUT_HIDDEN => InputShare::Hidden(start.input),
-        _ => InputShare::OneHot(start.input),
-    };
+    let in1s: Vec<InputShare> = start
+        .inputs
+        .into_iter()
+        .map(|input| match start.input_kind {
+            INPUT_HIDDEN => InputShare::Hidden(input),
+            _ => InputShare::OneHot(input),
+        })
+        .collect();
     let transport = HostSessionTransport { writer: writer.clone(), id, rx };
     // Same party-1 identity as the in-process engine (rng seed 0xBB):
     // a remote session is bit-identical to its in-process twin.
     let mut pctx = PartyCtx::new(1, Box::new(transport), prov, 0xBB);
     pctx.stats = stats.clone();
-    let out1 = bert_forward(&mut pctx, &ctx.cfg, ctx.shares1.as_ref(), &in1);
+    let out1 = bert_forward_batch(&mut pctx, &ctx.cfg, ctx.shares1.as_ref(), &in1s);
     drop(pctx); // closes the dealer link (if any)
 
     let payload = encode_result(id, stats.offline_bytes(), stats.offline_msgs(), &out1);
@@ -515,6 +541,21 @@ impl RemoteParty {
     /// settles the joint pooled/fallback decision), and return the
     /// session handle.
     pub fn start_session(&self, start: SessionStart) -> Result<RemoteSession> {
+        self.start_session_frame(|id| (pmsg::START, encode_start(id, &start)))
+    }
+
+    /// Open a cross-request batched session: ONE `START_BATCH` frame
+    /// ships every item's S1 input share, and the whole batch runs one
+    /// round schedule on the host (the `RESULT` carries the concatenated
+    /// output shares).
+    pub fn start_session_batch(&self, start: BatchSessionStart) -> Result<RemoteSession> {
+        self.start_session_frame(|id| (pmsg::START_BATCH, encode_start_batch(id, &start)))
+    }
+
+    fn start_session_frame(
+        &self,
+        encode: impl FnOnce(u64) -> (u8, Vec<u8>),
+    ) -> Result<RemoteSession> {
         if self.shared.dead.load(Ordering::Relaxed) {
             bail!("party link is down");
         }
@@ -526,7 +567,8 @@ impl RemoteParty {
             .lock()
             .unwrap()
             .insert(id, SessionRoute { msg_tx, ctrl_tx });
-        if !self.shared.send_frame(pmsg::START, &encode_start(id, &start)) {
+        let (ty, payload) = encode(id);
+        if !self.shared.send_frame(ty, &payload) {
             self.shared.sessions.lock().unwrap().remove(&id);
             bail!("party link failed while starting session");
         }

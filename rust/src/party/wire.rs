@@ -61,6 +61,11 @@ pub mod pmsg {
     pub const RESULT: u8 = 21;
     /// Client → server: clean goodbye, no more sessions on this link.
     pub const BYE: u8 = 22;
+    /// Client → server: open a cross-request batched session (label,
+    /// mode, `B` stacked S1 input shares; see PERF.md §Cross-request
+    /// batching). Answered by the same `ACK`, and the `RESULT` carries
+    /// the concatenated `B × num_labels` output shares.
+    pub const START_BATCH: u8 = 23;
 }
 
 /// Session offline mode tag: full dealer protocol (S1 runs a local T).
@@ -195,6 +200,80 @@ pub fn decode_start(payload: &[u8]) -> Result<(u64, SessionStart)> {
     ))
 }
 
+/// Everything S1 needs to run one cross-request batched session (the
+/// `START_BATCH` payload minus the session id): one label, one mode and
+/// one joint bundle decision for the whole batch, plus every item's S1
+/// input share. The batch is kind-homogeneous by construction (the
+/// engine splits mixed batches before dispatch).
+#[derive(Clone, Debug)]
+pub struct BatchSessionStart {
+    /// The session label (`{model_label}-{counter}`) every label-derived
+    /// stream is keyed by — ONE per batch, like the round schedule.
+    pub label: String,
+    /// [`MODE_DEALER`], [`MODE_SEEDED`] or [`MODE_POOLED`].
+    pub mode: u8,
+    /// Pooled mode: the coordinator holds its half of a batch-sized
+    /// pregenerated bundle.
+    pub coord_has_bundle: bool,
+    /// Pooled mode: the session label of the coordinator's bundle.
+    pub bundle_label: String,
+    /// [`INPUT_HIDDEN`] or [`INPUT_ONEHOT`] — all items share the kind.
+    pub input_kind: u8,
+    /// S1's additive share of each item's input, in batch order.
+    pub inputs: Vec<Vec<u64>>,
+}
+
+/// Upper bound on the per-frame batch size (sanity cap; real batches are
+/// bounded by the coordinator's `max_batch`).
+pub const MAX_WIRE_BATCH: usize = 4096;
+
+/// Encode a `START_BATCH` payload.
+pub fn encode_start_batch(session_id: u64, s: &BatchSessionStart) -> Vec<u8> {
+    let words: usize = s.inputs.iter().map(|i| i.len()).sum();
+    let mut buf = Vec::with_capacity(48 + s.label.len() + words * 8);
+    buf.extend_from_slice(&session_id.to_le_bytes());
+    buf.push(s.mode);
+    buf.push(s.coord_has_bundle as u8);
+    buf.push(s.input_kind);
+    put_str(&mut buf, &s.label);
+    put_str(&mut buf, &s.bundle_label);
+    buf.extend_from_slice(&(s.inputs.len() as u32).to_le_bytes());
+    for input in &s.inputs {
+        put_u64s(&mut buf, input);
+    }
+    buf
+}
+
+/// Decode a `START_BATCH` payload into `(session_id, start)`.
+pub fn decode_start_batch(payload: &[u8]) -> Result<(u64, BatchSessionStart)> {
+    let mut c = Cursor::new(payload);
+    let session_id = c.u64()?;
+    let mode = c.u8()?;
+    if mode > MODE_POOLED {
+        bail!("unknown session mode tag {mode}");
+    }
+    let coord_has_bundle = c.u8()? != 0;
+    let input_kind = c.u8()?;
+    if input_kind > INPUT_ONEHOT {
+        bail!("unknown input-kind tag {input_kind}");
+    }
+    let label = c.string()?;
+    let bundle_label = c.string()?;
+    let batch = c.u32()? as usize;
+    if batch == 0 || batch > MAX_WIRE_BATCH {
+        bail!("batched session size {batch} out of range");
+    }
+    let mut inputs = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        inputs.push(c.u64s()?);
+    }
+    c.done()?;
+    Ok((
+        session_id,
+        BatchSessionStart { label, mode, coord_has_bundle, bundle_label, input_kind, inputs },
+    ))
+}
+
 /// Encode an `ACK` payload.
 pub fn encode_ack(session_id: u64, use_pool: bool) -> Vec<u8> {
     let mut buf = Vec::with_capacity(9);
@@ -292,6 +371,38 @@ mod tests {
         );
         // Empty protocol messages are legal.
         assert_eq!(decode_msg(&encode_msg(1, &[])).unwrap(), (1, vec![]));
+    }
+
+    #[test]
+    fn batch_start_roundtrips_and_rejects_malformed() {
+        let start = BatchSessionStart {
+            label: "batch-4".to_string(),
+            mode: MODE_POOLED,
+            coord_has_bundle: true,
+            bundle_label: "pool/b4-2".to_string(),
+            input_kind: INPUT_HIDDEN,
+            inputs: vec![vec![1, 2], vec![3, u64::MAX], vec![], vec![9]],
+        };
+        let (id, got) = decode_start_batch(&encode_start_batch(42, &start)).expect("batch");
+        assert_eq!(id, 42);
+        assert_eq!(got.label, start.label);
+        assert_eq!(got.mode, start.mode);
+        assert!(got.coord_has_bundle);
+        assert_eq!(got.bundle_label, start.bundle_label);
+        assert_eq!(got.input_kind, start.input_kind);
+        assert_eq!(got.inputs, start.inputs);
+
+        // Every strict prefix errors (never panics), trailing bytes too.
+        let p = encode_start_batch(1, &start);
+        for cut in 0..p.len() {
+            assert!(decode_start_batch(&p[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        let mut padded = p.clone();
+        padded.push(0);
+        assert!(decode_start_batch(&padded).is_err(), "trailing bytes accepted");
+        // A zero-item batch is malformed.
+        let empty = BatchSessionStart { inputs: vec![], ..start };
+        assert!(decode_start_batch(&encode_start_batch(2, &empty)).is_err());
     }
 
     #[test]

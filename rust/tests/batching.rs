@@ -1,0 +1,340 @@
+//! Integration tests for cross-request batched secure inference (the
+//! PR 5 tentpole): one round schedule for the whole dynamic batch.
+//!
+//! 1. rounds invariant — total online rounds of a batch of B equal a
+//!    SINGLE inference's rounds, for any B and head count;
+//! 2. correctness — each batched item's logits match the plaintext
+//!    reference and a solo run (within 2× the per-run fixed-point
+//!    bound), padding included;
+//! 3. mixed token/hidden batches split into per-kind chunks correctly;
+//! 4. pooled batches consume ONE plan-exact batch bundle: zero online
+//!    dealer messages, hit rate 1.0;
+//! 5. remote (`party-serve`) batched sessions are bit-identical to the
+//!    in-process engine;
+//! 6. the coordinator amortizes rounds across its dynamic batch (the
+//!    `rounds_per_request` gauge drops), and the simulated-LAN bill of
+//!    a batch of 8 beats 8 sequential schedules by ≥ 2×.
+
+use secformer::coordinator::{BatcherConfig, Coordinator, EngineKind, ServingConfig};
+use secformer::core::rng::Xoshiro;
+use secformer::engine::{OfflineMode, SecureModel};
+use secformer::net::stats::NetModel;
+use secformer::nn::config::{Framework, ModelConfig};
+use secformer::nn::model::{ref_forward, ModelInput};
+use secformer::nn::weights::{random_weights, share_weights};
+use secformer::offline::pool::PoolConfig;
+use secformer::offline::source::{BundleSource, PoolSet};
+use secformer::party::runtime::{spawn_party_host, PartyHostConfig};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tiny() -> ModelConfig {
+    ModelConfig::tiny(8, Framework::SecFormer)
+}
+
+fn hidden_input(cfg: &ModelConfig, seed: u64) -> ModelInput {
+    let mut rng = Xoshiro::seed_from(seed);
+    ModelInput::Hidden((0..cfg.seq * cfg.hidden).map(|_| rng.normal() * 0.5).collect())
+}
+
+fn token_input(cfg: &ModelConfig, salt: u32) -> ModelInput {
+    ModelInput::Tokens(
+        (0..cfg.seq as u32).map(|i| (i + salt) % cfg.vocab as u32).collect(),
+    )
+}
+
+#[test]
+fn batch_rounds_equal_single_inference_rounds() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 0xBA01);
+    let single = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded)
+        .infer(&hidden_input(&cfg, 1));
+    for b in [2usize, 4, 8] {
+        let mut m = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+        m.set_batch_buckets(&[b]);
+        let inputs: Vec<ModelInput> =
+            (0..b).map(|i| hidden_input(&cfg, 10 + i as u64)).collect();
+        let r = m.infer_batch(&inputs);
+        assert_eq!(r.chunks, 1, "B={b}: a homogeneous batch shares one schedule");
+        assert_eq!(
+            r.stats.total_rounds(),
+            single.stats.total_rounds(),
+            "B={b}: batch rounds must equal a single inference's rounds"
+        );
+        assert!(
+            r.stats.total_bytes() > single.stats.total_bytes(),
+            "B={b}: volume must scale with the batch"
+        );
+    }
+    // Head-count independence (the PR 1 invariant) carries over to the
+    // batched schedule: fewer heads, same rounds.
+    let mut c2 = cfg.clone();
+    c2.heads = 2;
+    let w2 = random_weights(&c2, 0xBA02);
+    let mut m = SecureModel::new(c2.clone(), &w2, OfflineMode::Seeded);
+    m.set_batch_buckets(&[4]);
+    let inputs: Vec<ModelInput> = (0..4).map(|i| hidden_input(&c2, 30 + i)).collect();
+    let r = m.infer_batch(&inputs);
+    assert_eq!(r.stats.total_rounds(), single.stats.total_rounds());
+}
+
+#[test]
+fn batched_items_match_reference_and_solo_runs() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 0xBA03);
+    let inputs: Vec<ModelInput> = (0..4).map(|i| hidden_input(&cfg, 40 + i)).collect();
+    let mut m = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+    m.set_batch_buckets(&[4]);
+    let r = m.infer_batch(&inputs);
+    assert_eq!(r.logits.len(), 4);
+    for (i, input) in inputs.iter().enumerate() {
+        let expect = ref_forward(&cfg, &w, input);
+        let solo = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded).infer(input);
+        for j in 0..cfg.num_labels {
+            assert!(
+                (r.logits[i][j] - expect[j]).abs() < 0.2,
+                "item {i} logit {j}: batch={} ref={}",
+                r.logits[i][j],
+                expect[j]
+            );
+            // Batch and solo runs draw independent correlated
+            // randomness, so compare within 2× the per-run bound.
+            assert!(
+                (r.logits[i][j] - solo.logits[j]).abs() < 0.4,
+                "item {i} logit {j}: batch={} solo={}",
+                r.logits[i][j],
+                solo.logits[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn partial_batch_pads_to_bucket_and_drops_padding() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 0xBA04);
+    let inputs: Vec<ModelInput> = (0..3).map(|i| hidden_input(&cfg, 50 + i)).collect();
+    let mut m = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+    m.set_batch_buckets(&[4]); // 3 requests pad up to the 4-bucket
+    let r = m.infer_batch(&inputs);
+    assert_eq!(r.chunks, 1, "padding keeps one schedule");
+    assert_eq!(r.logits.len(), 3, "padding outputs are dropped");
+    for (i, input) in inputs.iter().enumerate() {
+        let expect = ref_forward(&cfg, &w, input);
+        for j in 0..cfg.num_labels {
+            assert!(
+                (r.logits[i][j] - expect[j]).abs() < 0.2,
+                "item {i} logit {j}: got={} ref={}",
+                r.logits[i][j],
+                expect[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_kind_batches_split_into_per_kind_chunks() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 0xBA05);
+    let inputs = vec![
+        token_input(&cfg, 1),
+        hidden_input(&cfg, 61),
+        token_input(&cfg, 2),
+        hidden_input(&cfg, 62),
+    ];
+    let mut m = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+    m.set_batch_buckets(&[1, 2, 4, 8]);
+    let r = m.infer_batch(&inputs);
+    assert_eq!(r.chunks, 2, "one chunk per input kind");
+    assert_eq!(r.logits.len(), 4);
+    for (i, input) in inputs.iter().enumerate() {
+        let expect = ref_forward(&cfg, &w, input);
+        for j in 0..cfg.num_labels {
+            assert!(
+                (r.logits[i][j] - expect[j]).abs() < 0.25,
+                "item {i} logit {j}: got={} ref={}",
+                r.logits[i][j],
+                expect[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn unfused_batches_run_sequentially_but_stay_correct() {
+    let mut cfg = tiny();
+    cfg.fused_attention = false;
+    let w = random_weights(&cfg, 0xBA06);
+    let single = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded)
+        .infer(&hidden_input(&cfg, 70));
+    let inputs: Vec<ModelInput> = (0..2).map(|i| hidden_input(&cfg, 71 + i)).collect();
+    let mut m = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+    m.set_batch_buckets(&[2]);
+    let r = m.infer_batch(&inputs);
+    // The pre-fusion baseline has no batched form: B independent
+    // schedules, so rounds scale with B.
+    assert_eq!(r.stats.total_rounds(), 2 * single.stats.total_rounds());
+    for (i, input) in inputs.iter().enumerate() {
+        let expect = ref_forward(&cfg, &w, input);
+        for j in 0..cfg.num_labels {
+            assert!((r.logits[i][j] - expect[j]).abs() < 0.2, "item {i} logit {j}");
+        }
+    }
+}
+
+#[test]
+fn pooled_batches_keep_zero_dealer_msgs_and_full_hit_rate() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 0xBA07);
+    let pools = PoolSet::start_with_buckets(
+        &cfg,
+        "batch-pool",
+        PoolConfig { target_depth: 2, producers: 1, ..PoolConfig::default() },
+        true,
+        &[4],
+    );
+    pools.warm(1);
+    let mut m = SecureModel::new_pooled(cfg.clone(), &w, pools.clone());
+    m.set_batch_buckets(&[4]);
+    // One hidden batch and one token batch: both (kind, 4) pools serve.
+    let makers: [fn(u64) -> ModelInput; 2] = [
+        |i| hidden_input(&tiny(), 80 + i),
+        |i| token_input(&tiny(), 80 + i as u32),
+    ];
+    for mk in makers {
+        let inputs: Vec<ModelInput> = (0..4).map(mk).collect();
+        let r = m.infer_batch(&inputs);
+        assert_eq!(r.chunks, 1);
+        assert_eq!(
+            r.stats.offline_msgs, 0,
+            "pooled batch must never consult a dealer online"
+        );
+        assert!(r.stats.offline_bytes > 0, "the batch bundle is accounted");
+        for logits in &r.logits {
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+    }
+    let snap = pools.snapshot();
+    assert_eq!(snap.consumed, 2, "ONE bundle per 4-request batch");
+    assert_eq!(
+        snap.misses, 0,
+        "batch manifests must be plan-exact (no in-session fallback): {snap:?}"
+    );
+    assert!((snap.hit_rate() - 1.0).abs() < 1e-9);
+    pools.stop();
+}
+
+#[test]
+fn remote_party_batch_is_bit_identical_to_in_process() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 0xBA08);
+    let (_s0, s1) = share_weights(&w, &mut Xoshiro::seed_from(0x5EC0));
+    let addr = spawn_party_host(
+        cfg.clone(),
+        Arc::new(s1),
+        None,
+        PartyHostConfig::default(),
+    )
+    .expect("spawn party host");
+
+    // Mixed batch: the hidden chunk ships as ONE START_BATCH frame, the
+    // lone token item as a classic START — both paths must match the
+    // in-process engine bit for bit (same labels, same seeded streams).
+    let inputs = vec![
+        hidden_input(&cfg, 90),
+        token_input(&cfg, 9),
+        hidden_input(&cfg, 91),
+        hidden_input(&cfg, 92),
+    ];
+    let mut local = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+    local.set_session_label("batch-2p");
+    local.set_batch_buckets(&[1, 2, 4, 8]);
+    let a = local.infer_batch(&inputs);
+
+    let mut remote = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+    remote.set_session_label("batch-2p");
+    remote.set_batch_buckets(&[1, 2, 4, 8]);
+    remote
+        .connect_remote_peer(&addr.to_string(), None)
+        .expect("connect to party host");
+    let b = remote.infer_batch(&inputs);
+
+    assert_eq!(a.logits, b.logits, "remote batch must be bit-identical");
+    assert_eq!(a.chunks, b.chunks);
+    assert_eq!(a.stats.total_rounds(), b.stats.total_rounds());
+    assert_eq!(a.stats.total_bytes(), b.stats.total_bytes());
+}
+
+#[test]
+fn coordinator_amortizes_rounds_across_the_dynamic_batch() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 0xBA09);
+    let single_rounds = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded)
+        .infer(&token_input(&cfg, 0))
+        .stats
+        .total_rounds();
+
+    // A generous straggler window so all 8 submissions join one drain.
+    let c = Coordinator::start_with(
+        cfg.clone(),
+        w,
+        None,
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(500) },
+        ServingConfig::default(), // seeded, batch_buckets 1,2,4,8
+    )
+    .unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    for i in 0..8 {
+        c.submit(token_input(&cfg, i), EngineKind::Secure, tx.clone());
+    }
+    for _ in 0..8 {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(r.logits.len(), cfg.num_labels);
+        assert!(r.logits.iter().all(|v| v.is_finite()));
+    }
+    let s = c.secure_summary();
+    assert_eq!(s.count, 8);
+    assert!(
+        s.mean_batch_size >= 2.0,
+        "the burst must coalesce into dynamic batches: mean {}",
+        s.mean_batch_size
+    );
+    assert!(
+        s.rounds_per_request <= single_rounds as f64 / 2.0,
+        "rounds/request must amortize: {} vs single {}",
+        s.rounds_per_request,
+        single_rounds
+    );
+    assert!(!s.batch_hist.is_empty());
+    c.shutdown();
+}
+
+#[test]
+fn batched_lan_bill_beats_sequential_by_2x_at_b8() {
+    // Deterministic network-bill comparison (counted rounds/bytes through
+    // the paper's LAN model, as in tests/round_fusion.rs): 8 sequential
+    // schedules vs one batched schedule for the same 8 inferences.
+    let cfg = tiny();
+    let w = random_weights(&cfg, 0xBA0A);
+    let single = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded)
+        .infer(&hidden_input(&cfg, 100));
+    let inputs: Vec<ModelInput> = (0..8).map(|i| hidden_input(&cfg, 101 + i)).collect();
+    let mut m = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+    m.set_batch_buckets(&[8]);
+    let batched = m.infer_batch(&inputs);
+
+    let lan = NetModel::paper_lan();
+    let seq_bill = lan.simulated_seconds(
+        8 * single.stats.total_rounds(),
+        8 * single.stats.total_bytes() * 2,
+    );
+    let batch_bill = lan.simulated_seconds(
+        batched.stats.total_rounds(),
+        batched.stats.total_bytes() * 2,
+    );
+    assert!(
+        seq_bill >= 2.0 * batch_bill,
+        "simulated-LAN bill must improve ≥2× at B=8: sequential {seq_bill:.6}s vs \
+         batched {batch_bill:.6}s"
+    );
+}
