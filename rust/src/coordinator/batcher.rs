@@ -232,36 +232,53 @@ fn drain_batch(
     };
     let target = batcher.max_batch.min(max_take).max(1);
     let mut q = shared.q.lock().unwrap();
-    while len_of(&q) == 0 {
-        if shared.shutdown.load(Ordering::Relaxed) {
-            return None;
+    loop {
+        while len_of(&q) == 0 {
+            if shared.shutdown.load(Ordering::Relaxed) {
+                return None;
+            }
+            // Pure condvar park — no periodic poll. This is safe because
+            // every wake source notifies while holding (or having just
+            // held under the same critical section) the queue mutex:
+            // `submit` pushes under the lock before notifying, and shutdown
+            // stores its flag while holding the lock, so the flag/queue
+            // check above can never miss a wakeup.
+            q = shared.cv.wait(q).unwrap();
         }
-        // Pure condvar park — no periodic poll. This is safe because
-        // every wake source notifies while holding (or having just
-        // held under the same critical section) the queue mutex:
-        // `submit` pushes under the lock before notifying, and shutdown
-        // stores its flag while holding the lock, so the flag/queue
-        // check above can never miss a wakeup.
-        q = shared.cv.wait(q).unwrap();
-    }
-    // Dynamic batching: give stragglers `max_wait` to join. The deadline
-    // may pass between the length check and the subtraction, so saturate
-    // instead of panicking on `deadline - now` underflow.
-    let deadline = Instant::now() + batcher.max_wait;
-    while len_of(&q) < target {
-        let remaining = deadline.saturating_duration_since(Instant::now());
-        if remaining.is_zero() {
-            break;
+        // Dynamic batching: give stragglers `max_wait` to join. The deadline
+        // may pass between the length check and the subtraction, so saturate
+        // instead of panicking on `deadline - now` underflow.
+        let deadline = Instant::now() + batcher.max_wait;
+        while len_of(&q) < target {
+            // No new stragglers are coming after shutdown — serve the
+            // partial batch now instead of sleeping out `max_wait`
+            // (which is unbounded: `--max-wait-ms` has no cap).
+            if shared.shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            let (guard, _timeout) = shared.cv.wait_timeout(q, remaining).unwrap();
+            q = guard;
         }
-        let (guard, _timeout) = shared.cv.wait_timeout(q, remaining).unwrap();
-        q = guard;
+        let queue = match kind {
+            EngineKind::Secure => &mut q.secure,
+            EngineKind::Plaintext => &mut q.plain,
+        };
+        let take = queue.len().min(target);
+        if take == 0 {
+            // The straggler wait releases the lock, so with several
+            // workers another one can drain the queue behind our back —
+            // both saw it non-empty, one took everything. An empty batch
+            // must not reach the engine (`infer_batch` asserts non-empty
+            // and the per-request accounting divides by the batch size),
+            // so go back to the empty-queue park instead of returning.
+            continue;
+        }
+        return Some(queue.drain(..take).collect());
     }
-    let queue = match kind {
-        EngineKind::Secure => &mut q.secure,
-        EngineKind::Plaintext => &mut q.plain,
-    };
-    let take = queue.len().min(target);
-    Some(queue.drain(..take).collect())
 }
 
 fn secure_worker_loop(
@@ -280,18 +297,24 @@ fn secure_worker_loop(
     // with peer workers — see `Coordinator::start_with`), which keeps
     // the pre-batching burst-spreading policy for those configurations.
     while let Some(batch) = drain_batch(&shared, &batcher, EngineKind::Secure, max_take) {
-        let inputs: Vec<ModelInput> = batch.iter().map(|r| r.input.clone()).collect();
+        // Move the inputs out instead of cloning them — a hidden-state
+        // input is seq×hidden words per item, and the reply path only
+        // needs the request metadata.
+        let (metas, inputs): (Vec<_>, Vec<ModelInput>) = batch
+            .into_iter()
+            .map(|r| ((r.id, r.submitted, r.reply_to), r.input))
+            .unzip();
         let r = model.infer_batch(&inputs);
-        metrics.observe_batch(batch.len(), r.stats.total_rounds());
+        metrics.observe_batch(metas.len(), r.stats.total_rounds());
         metrics.add_offline_bytes(r.stats.offline_bytes);
         // Per-request share of the batch's online volume (both parties):
         // the amortized cost a client actually caused.
-        let per_req_bytes = r.stats.total_bytes() * 2 / batch.len() as u64;
-        for (req, logits) in batch.into_iter().zip(r.logits) {
-            let latency = req.submitted.elapsed().as_secs_f64();
+        let per_req_bytes = r.stats.total_bytes() * 2 / metas.len() as u64;
+        for ((id, submitted, reply_to), logits) in metas.into_iter().zip(r.logits) {
+            let latency = submitted.elapsed().as_secs_f64();
             metrics.observe(latency);
-            let _ = req.reply_to.send(InferenceReply {
-                id: req.id,
+            let _ = reply_to.send(InferenceReply {
+                id,
                 logits,
                 latency_s: latency,
                 engine: EngineKind::Secure,

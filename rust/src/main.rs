@@ -87,11 +87,28 @@ impl Args {
 
     /// Comma-separated batch-bucket list (`--batch-buckets 1,2,4,8`).
     /// Bucket 1 is always included (normalization happens downstream).
-    fn batch_buckets(&self) -> Vec<usize> {
+    /// A malformed or out-of-range entry is an error — silently dropping
+    /// (or clamping) it would change the round bill under load with no
+    /// diagnostic.
+    fn batch_buckets(&self) -> Result<Vec<usize>> {
+        use secformer::offline::source::MAX_BATCH_BUCKET;
         self.flag("batch-buckets")
             .unwrap_or("1,2,4,8")
             .split(',')
-            .filter_map(|s| s.trim().parse::<usize>().ok())
+            .map(|s| {
+                let s = s.trim();
+                match s.parse::<usize>() {
+                    Ok(b) if (1..=MAX_BATCH_BUCKET).contains(&b) => Ok(b),
+                    Ok(b) => bail!(
+                        "--batch-buckets entries must be 1..={MAX_BATCH_BUCKET} \
+                         (the party-wire per-frame cap), got {b}"
+                    ),
+                    Err(_) => bail!(
+                        "--batch-buckets takes a comma-separated list of sizes \
+                         1..={MAX_BATCH_BUCKET}, got {s:?}"
+                    ),
+                }
+            })
             .collect()
     }
 }
@@ -314,7 +331,7 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
     // executed as ONE secure round schedule; pooled mode plans one
     // manifest/pool per (kind, bucket) at startup. `--batch-buckets 1`
     // disables batching (each request runs its own schedule).
-    serving.batch_buckets = args.batch_buckets();
+    serving.batch_buckets = args.batch_buckets()?;
     let coordinator = std::sync::Arc::new(Coordinator::start_with(
         cfg.clone(),
         weights,
@@ -426,6 +443,10 @@ fn cmd_party_serve(args: &Args, cfg_file: &Config) -> Result<()> {
     let mut wrng = secformer::core::rng::Xoshiro::seed_from(0x5EC0);
     let (_s0, s1) = secformer::nn::weights::share_weights(&weights, &mut wrng);
 
+    // Validate `--batch-buckets` on every arm (a dealer-fed host never
+    // reaches the local-pool constructor, but a typo there should fail
+    // just as loudly as it does on `serve`).
+    let batch_buckets = args.batch_buckets()?;
     let pooled = args.has("pool") || args.has("dealer-addr") || args.has("spool-dir");
     let source: Option<Arc<dyn BundleSource>> = if pooled {
         let depth: usize = match args.flag("pool") {
@@ -482,7 +503,7 @@ fn cmd_party_serve(args: &Args, cfg_file: &Config) -> Result<()> {
                         ..PoolConfig::default()
                     },
                     plan_hidden,
-                    &args.batch_buckets(),
+                    &batch_buckets,
                 )
             }
         };

@@ -204,9 +204,25 @@ impl PoolSet {
     }
 }
 
-/// Sort, deduplicate and floor-clamp a bucket list; always includes 1.
+/// Upper bound on a batch bucket. A bucket is also the largest chunk a
+/// single `START_BATCH` frame ships to a remote `party-serve`
+/// ([`crate::party::wire::MAX_WIRE_BATCH`] is this same constant), so a
+/// bucket above the wire cap would make the host reject the frame and
+/// tear down the whole multiplexed party link. The CLI rejects larger
+/// `--batch-buckets` entries outright; every programmatic bucket list
+/// additionally goes through [`normalize_buckets`], which clamps to
+/// this as a backstop.
+pub const MAX_BATCH_BUCKET: usize = 4096;
+
+/// Sort, deduplicate and clamp a bucket list to
+/// `1..=`[`MAX_BATCH_BUCKET`]; always includes 1.
 pub fn normalize_buckets(buckets: &[usize]) -> Vec<usize> {
-    let mut b: Vec<usize> = buckets.iter().copied().filter(|&x| x >= 1).collect();
+    let mut b: Vec<usize> = buckets
+        .iter()
+        .copied()
+        .filter(|&x| x >= 1)
+        .map(|x| x.min(MAX_BATCH_BUCKET))
+        .collect();
     b.push(1);
     b.sort_unstable();
     b.dedup();
@@ -288,6 +304,24 @@ impl Drop for PoolSet {
 mod tests {
     use super::*;
     use crate::nn::config::Framework;
+
+    #[test]
+    fn normalize_buckets_sorts_dedups_and_clamps_to_the_wire_cap() {
+        assert_eq!(normalize_buckets(&[8, 2, 2, 0, 4]), vec![1, 2, 4, 8]);
+        assert_eq!(normalize_buckets(&[]), vec![1]);
+        // A bucket above MAX_BATCH_BUCKET would make a remote party host
+        // reject the START_BATCH frame (tearing down the whole mux link),
+        // so it clamps to the cap instead.
+        assert_eq!(
+            normalize_buckets(&[MAX_BATCH_BUCKET + 1]),
+            vec![1, MAX_BATCH_BUCKET]
+        );
+        assert_eq!(
+            crate::party::wire::MAX_WIRE_BATCH,
+            MAX_BATCH_BUCKET,
+            "config-time clamp and wire decode cap must agree"
+        );
+    }
 
     #[test]
     fn pool_set_routes_by_kind_and_merges_telemetry() {

@@ -322,6 +322,28 @@ fn run_party_session(
     } else {
         None
     };
+    if start.mode == MODE_POOLED && start.coord_has_bundle && bundle.is_none() && batch > 1 {
+        // The coordinator popped (and will now waste) a batch-sized
+        // bundle, but this host's source produced none — the session
+        // degrades to seeded fallback. We can't see WHY the pop missed
+        // (a bucket-1-only source like `--dealer-addr`, an exhausted
+        // production bound, a namespace mismatch …), so name the
+        // possibilities without asserting one. Warn once — the point is
+        // surfacing the silent degradation, not per-session log spam.
+        static BATCH_MISS_WARNED: std::sync::atomic::AtomicBool =
+            std::sync::atomic::AtomicBool::new(false);
+        if !BATCH_MISS_WARNED.swap(true, std::sync::atomic::Ordering::Relaxed) {
+            eprintln!(
+                "party-serve: pooled batch session (B={batch}) found no matching \
+                 batch-sized bundle; it runs on seeded fallback and the coordinator's \
+                 batch bundle goes unused. Common causes: this host's source serves \
+                 single-session bundles only (--dealer-addr — run the coordinator with \
+                 --batch-buckets 1 there), --batch-buckets/--namespace not mirroring \
+                 the coordinator's, or an exhausted bundle bound. Warned once; further \
+                 batch misses are not logged."
+            );
+        }
+    }
     let use_pool = bundle.is_some();
     {
         let mut w = writer.lock().unwrap();

@@ -223,9 +223,11 @@ pub struct BatchSessionStart {
     pub inputs: Vec<Vec<u64>>,
 }
 
-/// Upper bound on the per-frame batch size (sanity cap; real batches are
-/// bounded by the coordinator's `max_batch`).
-pub const MAX_WIRE_BATCH: usize = 4096;
+/// Upper bound on the per-frame batch size. The same constant caps batch
+/// buckets at config time ([`crate::offline::source::normalize_buckets`]
+/// clamps to it), so a well-configured coordinator can never emit a
+/// frame this decode check would reject.
+pub const MAX_WIRE_BATCH: usize = crate::offline::source::MAX_BATCH_BUCKET;
 
 /// Encode a `START_BATCH` payload.
 pub fn encode_start_batch(session_id: u64, s: &BatchSessionStart) -> Vec<u8> {
