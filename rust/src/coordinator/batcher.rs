@@ -16,8 +16,11 @@
 
 use crate::coordinator::metrics::{Metrics, MetricsSummary};
 use crate::core::rng::Xoshiro;
+use crate::core::sync::{lock_or_recover, wait_or_recover, wait_timeout_or_recover};
 use crate::engine::{OfflineMode, PeerRuntime, SecureModel};
-use crate::party::runtime::RemoteParty;
+use crate::net::error::SessionError;
+use crate::party::runtime::LinkOptions;
+use crate::party::supervisor::{PartyLinkSupervisor, RedialPolicy};
 use crate::nn::config::ModelConfig;
 use crate::nn::model::ModelInput;
 use crate::nn::weights::{share_weights, WeightMap};
@@ -51,6 +54,12 @@ pub struct InferenceRequest {
     pub engine: EngineKind,
     pub submitted: Instant,
     pub reply_to: Sender<InferenceReply>,
+    /// Secure sessions this request has already been part of that
+    /// failed. A request whose session dies retryably is re-enqueued
+    /// with `attempts + 1` until [`ServingConfig::session_retries`] is
+    /// spent; every attempt runs as a brand-new session (fresh label,
+    /// fresh shares, fresh pads — see `ARCHITECTURE.md` §Failure model).
+    pub attempts: u32,
 }
 
 #[derive(Clone, Debug)]
@@ -62,6 +71,9 @@ pub struct InferenceReply {
     /// Online communication for secure requests (bytes, both parties) —
     /// this request's amortized share of its dynamic batch's volume.
     pub comm_bytes: u64,
+    /// `Some` when the request failed terminally (retry budget spent or
+    /// a non-retryable session error); `logits` is empty then.
+    pub error: Option<SessionError>,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -132,6 +144,20 @@ pub struct ServingConfig {
     pub peer_addr: Option<String>,
     /// Pre-shared key for the party link (`serve --peer-psk`).
     pub peer_psk: Option<String>,
+    /// How many times a failed secure session is retried before its
+    /// requests get error replies (`serve --session-retries`). Only
+    /// retryable errors (peer loss, timeout) respect this budget;
+    /// protocol violations and bundle mismatches fail immediately.
+    /// Every retry is a brand-new session — fresh label, fresh input
+    /// shares, fresh pad material.
+    pub session_retries: u32,
+    /// Party-link heartbeat interval in milliseconds (`serve
+    /// --party-heartbeat-ms`): idle gap after which the client pings.
+    pub party_heartbeat_ms: u64,
+    /// Party-link silence budget in milliseconds (`serve
+    /// --link-timeout-ms`): total silence after which the link is
+    /// declared dead and the supervisor re-dials.
+    pub link_timeout_ms: u64,
     /// Cross-request batch buckets: a drained dynamic batch is padded up
     /// to the nearest bucket and executed as ONE round schedule (`B`
     /// requests cost a single inference's online rounds — see PERF.md
@@ -171,6 +197,9 @@ impl Default for ServingConfig {
             dealer_psk: None,
             peer_addr: None,
             peer_psk: None,
+            session_retries: 2,
+            party_heartbeat_ms: 1000,
+            link_timeout_ms: 5000,
             session_namespace: None,
             batch_buckets: vec![1, 2, 4, 8],
         }
@@ -231,7 +260,10 @@ fn drain_batch(
         EngineKind::Plaintext => q.plain.len(),
     };
     let target = batcher.max_batch.min(max_take).max(1);
-    let mut q = shared.q.lock().unwrap();
+    // Poison recovery everywhere this lock is taken: a worker that
+    // panicked while holding it must degrade that one session, not
+    // wedge every subsequent submit/drain behind a poisoned mutex.
+    let mut q = lock_or_recover(&shared.q);
     loop {
         while len_of(&q) == 0 {
             if shared.shutdown.load(Ordering::Relaxed) {
@@ -243,7 +275,7 @@ fn drain_batch(
             // `submit` pushes under the lock before notifying, and shutdown
             // stores its flag while holding the lock, so the flag/queue
             // check above can never miss a wakeup.
-            q = shared.cv.wait(q).unwrap();
+            q = wait_or_recover(&shared.cv, q);
         }
         // Dynamic batching: give stragglers `max_wait` to join. The deadline
         // may pass between the length check and the subtraction, so saturate
@@ -260,7 +292,7 @@ fn drain_batch(
             if remaining.is_zero() {
                 break;
             }
-            let (guard, _timeout) = shared.cv.wait_timeout(q, remaining).unwrap();
+            let (guard, _timed_out) = wait_timeout_or_recover(&shared.cv, q, remaining);
             q = guard;
         }
         let queue = match kind {
@@ -287,6 +319,7 @@ fn secure_worker_loop(
     mut model: SecureModel,
     metrics: Arc<Metrics>,
     max_take: usize,
+    session_retries: u32,
 ) {
     // The whole drained batch executes as ONE secure round schedule
     // (`SecureModel::infer_batch`): B requests cost a single inference's
@@ -302,15 +335,68 @@ fn secure_worker_loop(
         // needs the request metadata.
         let (metas, inputs): (Vec<_>, Vec<ModelInput>) = batch
             .into_iter()
-            .map(|r| ((r.id, r.submitted, r.reply_to), r.input))
+            .map(|r| ((r.id, r.submitted, r.reply_to, r.attempts), r.input))
             .unzip();
-        let r = model.infer_batch(&inputs);
+        let r = match model.try_infer_batch(&inputs) {
+            Ok(r) => r,
+            Err(e) => {
+                // The session died mid-protocol. Requests with retry
+                // budget left go back into the queue (any worker may
+                // pick them up; the re-run is a brand-new session with
+                // a fresh label, fresh shares and fresh pads — see
+                // `SecureModel::share_input`); the rest get typed error
+                // replies. The worker itself stays alive either way.
+                let retryable = e.is_retryable();
+                let mut requeued = 0usize;
+                let mut failed = 0usize;
+                {
+                    let mut q = lock_or_recover(&shared.q);
+                    for ((id, submitted, reply_to, attempts), input) in
+                        metas.into_iter().zip(inputs)
+                    {
+                        if retryable && attempts < session_retries {
+                            q.secure.push_back(InferenceRequest {
+                                id,
+                                input,
+                                engine: EngineKind::Secure,
+                                submitted,
+                                reply_to,
+                                attempts: attempts + 1,
+                            });
+                            requeued += 1;
+                        } else {
+                            failed += 1;
+                            let _ = reply_to.send(InferenceReply {
+                                id,
+                                logits: Vec::new(),
+                                latency_s: submitted.elapsed().as_secs_f64(),
+                                engine: EngineKind::Secure,
+                                comm_bytes: 0,
+                                error: Some(e.clone()),
+                            });
+                        }
+                    }
+                }
+                if requeued > 0 {
+                    metrics.note_session_retry();
+                    shared.cv.notify_all();
+                }
+                if failed > 0 {
+                    metrics.note_session_failure();
+                }
+                eprintln!(
+                    "secure worker: session failed ({e}); {requeued} re-enqueued, \
+                     {failed} failed"
+                );
+                continue;
+            }
+        };
         metrics.observe_batch(metas.len(), r.stats.total_rounds());
         metrics.add_offline_bytes(r.stats.offline_bytes);
         // Per-request share of the batch's online volume (both parties):
         // the amortized cost a client actually caused.
         let per_req_bytes = r.stats.total_bytes() * 2 / metas.len() as u64;
-        for ((id, submitted, reply_to), logits) in metas.into_iter().zip(r.logits) {
+        for ((id, submitted, reply_to, _attempts), logits) in metas.into_iter().zip(r.logits) {
             let latency = submitted.elapsed().as_secs_f64();
             metrics.observe(latency);
             let _ = reply_to.send(InferenceReply {
@@ -319,6 +405,7 @@ fn secure_worker_loop(
                 latency_s: latency,
                 engine: EngineKind::Secure,
                 comm_bytes: per_req_bytes,
+                error: None,
             });
         }
     }
@@ -379,6 +466,7 @@ fn plain_worker_loop(
                 latency_s: latency,
                 engine: EngineKind::Plaintext,
                 comm_bytes: 0,
+                error: None,
             });
         }
     }
@@ -392,6 +480,9 @@ pub struct Coordinator {
     pub metrics_secure: Arc<Metrics>,
     pub metrics_plain: Arc<Metrics>,
     pool: Option<Arc<dyn BundleSource>>,
+    /// Party-link supervisor (distributed serving only): owns the
+    /// re-dial policy and the reconnect/link-state gauges.
+    supervisor: Option<Arc<PartyLinkSupervisor>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -503,14 +594,27 @@ impl Coordinator {
             (Arc::new(a), Arc::new(b))
         };
 
-        // Distributed deployment: dial the remote party once; every
-        // secure worker multiplexes its sessions over this connection.
-        // A failed dial must stop the already-running pool producers
+        // Distributed deployment: dial the remote party once and hand
+        // the link to a supervisor; every secure worker multiplexes its
+        // sessions over the supervised connection and the supervisor
+        // re-dials (with capped backoff) when the host dies. A failed
+        // initial dial must stop the already-running pool producers
         // before propagating (same no-leak rule as worker spawns below).
-        let remote_peer = match &serving.peer_addr {
+        let supervisor = match &serving.peer_addr {
             Some(addr) => {
-                match RemoteParty::connect(addr, &cfg, &ws1, serving.peer_psk.as_deref()) {
-                    Ok(rp) => Some(rp),
+                let opts = LinkOptions {
+                    heartbeat: Duration::from_millis(serving.party_heartbeat_ms.max(1)),
+                    link_timeout: Duration::from_millis(serving.link_timeout_ms.max(1)),
+                };
+                match PartyLinkSupervisor::connect(
+                    addr,
+                    &cfg,
+                    ws1.clone(),
+                    serving.peer_psk.as_deref(),
+                    opts,
+                    RedialPolicy::default(),
+                ) {
+                    Ok(sup) => Some(sup),
                     Err(e) => {
                         if let Some(p) = &pool {
                             p.stop();
@@ -565,14 +669,15 @@ impl Coordinator {
             );
             model.set_session_label(&format!("coord-{instance}-w{i}"));
             model.set_batch_buckets(&engine_buckets);
-            if let Some(rp) = &remote_peer {
-                model.set_peer_runtime(PeerRuntime::Remote(rp.clone()));
+            if let Some(sup) = &supervisor {
+                model.set_peer_runtime(PeerRuntime::Supervised(sup.clone()));
             }
             let sh = shared.clone();
             let ms = metrics_secure.clone();
+            let retries = serving.session_retries;
             match std::thread::Builder::new()
                 .name(format!("secure-worker-{i}"))
-                .spawn(move || secure_worker_loop(sh, batcher, model, ms, max_take))
+                .spawn(move || secure_worker_loop(sh, batcher, model, ms, max_take, retries))
             {
                 Ok(h) => workers.push(h),
                 Err(e) => {
@@ -597,12 +702,15 @@ impl Coordinator {
                 // Store + notify under the queue lock: a worker that
                 // checked the flag and is about to park cannot miss the
                 // wakeup (it holds the lock until `wait` releases it).
-                let _q = shared.q.lock().unwrap();
+                let _q = lock_or_recover(&shared.q);
                 shared.shutdown.store(true, Ordering::Relaxed);
                 shared.cv.notify_all();
             }
             for h in workers {
                 let _ = h.join();
+            }
+            if let Some(s) = &supervisor {
+                s.stop();
             }
             if let Some(p) = &pool {
                 p.stop();
@@ -616,6 +724,7 @@ impl Coordinator {
             metrics_secure,
             metrics_plain,
             pool,
+            supervisor,
             workers,
         })
     }
@@ -638,9 +747,16 @@ impl Coordinator {
             }
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = InferenceRequest { id, input, engine, submitted: Instant::now(), reply_to };
+        let req = InferenceRequest {
+            id,
+            input,
+            engine,
+            submitted: Instant::now(),
+            reply_to,
+            attempts: 0,
+        };
         {
-            let mut q = self.shared.q.lock().unwrap();
+            let mut q = lock_or_recover(&self.shared.q);
             match engine {
                 EngineKind::Secure => q.secure.push_back(req),
                 EngineKind::Plaintext => q.plain.push_back(req),
@@ -658,7 +774,7 @@ impl Coordinator {
     }
 
     pub fn queue_depth(&self) -> usize {
-        let q = self.shared.q.lock().unwrap();
+        let q = lock_or_recover(&self.shared.q);
         q.secure.len() + q.plain.len()
     }
 
@@ -667,12 +783,19 @@ impl Coordinator {
         self.pool.as_ref().map(|p| p.snapshot())
     }
 
-    /// Secure-engine metrics with the pool gauges folded in.
+    /// Secure-engine metrics with the pool and link gauges folded in.
     pub fn secure_summary(&self) -> MetricsSummary {
         let mut s = self.metrics_secure.summary();
         if let Some(ps) = self.pool_snapshot() {
             s.pool_depth = ps.depth;
             s.pool_hit_rate = ps.hit_rate();
+        }
+        if let Some(sup) = &self.supervisor {
+            s.party_reconnects = sup.reconnects();
+            s.link_up = sup.link_up();
+        }
+        if let Some(p) = &self.pool {
+            s.dealer_reconnects = p.reconnects();
         }
         s
     }
@@ -682,12 +805,17 @@ impl Coordinator {
             // Store + notify under the queue lock — see `drain_batch`:
             // the workers park on a plain condvar wait (no poll), so the
             // shutdown signal must be ordered with their predicate check.
-            let _q = self.shared.q.lock().unwrap();
+            let _q = lock_or_recover(&self.shared.q);
             self.shared.shutdown.store(true, Ordering::Relaxed);
             self.shared.cv.notify_all();
         }
+        // Workers first (they drain outstanding requests before
+        // exiting), then the link and the pool they were using.
         for h in self.workers.drain(..) {
             let _ = h.join();
+        }
+        if let Some(s) = &self.supervisor {
+            s.stop();
         }
         if let Some(p) = &self.pool {
             p.stop();

@@ -45,6 +45,12 @@ pub struct Metrics {
     /// all-time request count this yields the rounds-per-request gauge,
     /// the amortization the batcher exists to drive down.
     rounds_total: AtomicU64,
+    /// Failed sessions whose requests were re-enqueued for another
+    /// attempt (counted once per failed session, not per request).
+    sessions_retried: AtomicU64,
+    /// Sessions that failed terminally — retry budget exhausted or a
+    /// non-retryable error; their requests got error replies.
+    sessions_failed: AtomicU64,
     started: Instant,
 }
 
@@ -76,6 +82,21 @@ pub struct MetricsSummary {
     /// Batch-size histogram: `(size, count)` rows with non-zero counts,
     /// ascending; sizes ≥ [`BATCH_HIST_MAX`] share the top row.
     pub batch_hist: Vec<(usize, u64)>,
+    /// Failed sessions re-enqueued for another attempt, all time
+    /// (counted per failed session).
+    pub sessions_retried: u64,
+    /// Sessions that failed terminally (retry budget exhausted or a
+    /// non-retryable [`crate::net::error::SessionError`]), all time.
+    pub sessions_failed: u64,
+    /// Successful party-link re-dials since startup (0 without a remote
+    /// peer; filled by the coordinator from its link supervisor).
+    pub party_reconnects: u64,
+    /// Whether the party link is currently up (`true` for in-process
+    /// serving, which has no link to lose).
+    pub link_up: bool,
+    /// Successful dealer-link re-dials since startup (0 without a
+    /// remote dealer; filled from the bundle source).
+    pub dealer_reconnects: u64,
 }
 
 impl Default for Metrics {
@@ -93,8 +114,22 @@ impl Metrics {
             batched_requests: AtomicU64::new(0),
             batch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
             rounds_total: AtomicU64::new(0),
+            sessions_retried: AtomicU64::new(0),
+            sessions_failed: AtomicU64::new(0),
             started: Instant::now(),
         }
+    }
+
+    /// Record one failed session whose requests were re-enqueued for
+    /// another attempt.
+    pub fn note_session_retry(&self) {
+        self.sessions_retried.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one terminally failed session (its requests received
+    /// error replies).
+    pub fn note_session_failure(&self) {
+        self.sessions_failed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one executed dynamic batch: its size and the online rounds
@@ -147,6 +182,8 @@ impl Metrics {
             (w.recent.clone(), w.total)
         };
         let (mean_batch_size, rounds_per_request, batch_hist) = self.batch_gauges();
+        let sessions_retried = self.sessions_retried.load(Ordering::Relaxed);
+        let sessions_failed = self.sessions_failed.load(Ordering::Relaxed);
         if v.is_empty() {
             return MetricsSummary {
                 pool_hit_rate: 1.0,
@@ -154,6 +191,11 @@ impl Metrics {
                 mean_batch_size,
                 rounds_per_request,
                 batch_hist,
+                sessions_retried,
+                sessions_failed,
+                // Link gauges are the coordinator's to fill (it owns the
+                // supervisor and the bundle source); in-process defaults.
+                link_up: true,
                 ..MetricsSummary::default()
             };
         }
@@ -173,6 +215,11 @@ impl Metrics {
             mean_batch_size,
             rounds_per_request,
             batch_hist,
+            sessions_retried,
+            sessions_failed,
+            party_reconnects: 0,
+            link_up: true,
+            dealer_reconnects: 0,
         }
     }
 }

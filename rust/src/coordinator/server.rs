@@ -90,7 +90,8 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
             Some(format!(
                 "secure: n={} mean={:.3}s p95={:.3}s rps={:.2} offline_bytes={} \
                  pool_depth={} pool_hit={:.2} batch_mean={:.2} rounds_per_req={:.1} \
-                 batch_hist={} | plain: n={} mean={:.4}s p95={:.4}s",
+                 batch_hist={} retried={} failed={} party_reconnects={} link={} \
+                 dealer_reconnects={} | plain: n={} mean={:.4}s p95={:.4}s",
                 s.count,
                 s.mean_s,
                 s.p95_s,
@@ -101,6 +102,11 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
                 s.mean_batch_size,
                 s.rounds_per_request,
                 hist,
+                s.sessions_retried,
+                s.sessions_failed,
+                s.party_reconnects,
+                if s.link_up { "up" } else { "down" },
+                s.dealer_reconnects,
                 p.count,
                 p.mean_s,
                 p.p95_s
@@ -120,6 +126,12 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
             }
             let engine = if cmd == "secure" { EngineKind::Secure } else { EngineKind::Plaintext };
             let r = coord.infer_blocking(ModelInput::Tokens(toks), engine);
+            if let Some(e) = &r.error {
+                // Terminal session failure (retry budget spent or a
+                // non-retryable error): the client gets a typed error
+                // line instead of a hung or dropped connection.
+                return Some(format!("err session failed: {e}"));
+            }
             let logits = r
                 .logits
                 .iter()
@@ -208,6 +220,11 @@ mod tests {
         assert!(stats.contains("batch_mean="), "{stats}");
         assert!(stats.contains("rounds_per_req="), "{stats}");
         assert!(stats.contains("batch_hist=1:1"), "one single-request batch: {stats}");
+        assert!(stats.contains("retried=0"), "{stats}");
+        assert!(stats.contains("failed=0"), "{stats}");
+        assert!(stats.contains("party_reconnects=0"), "{stats}");
+        assert!(stats.contains("link=up"), "{stats}");
+        assert!(stats.contains("dealer_reconnects=0"), "{stats}");
         c.shutdown();
     }
 

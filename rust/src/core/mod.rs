@@ -7,8 +7,10 @@
 
 pub mod fixed;
 pub mod rng;
+pub mod sync;
 pub mod tensor;
 
 pub use fixed::{decode, decode_vec, encode, encode_vec, FRAC_BITS, SCALE};
 pub use rng::{Prf, Xoshiro};
+pub use sync::{lock_or_recover, wait_or_recover, wait_timeout_or_recover};
 pub use tensor::RingTensor;

@@ -1,0 +1,64 @@
+//! Poison-tolerant lock helpers.
+//!
+//! The serving stack keeps long-lived state (request queues, session
+//! routing tables, bundle stashes, metrics windows) behind `Mutex`es
+//! shared by many threads. Under the fail-stop model a panic while
+//! holding one of those locks poisoned it and every later
+//! `.lock().unwrap()` cascaded the crash across otherwise-healthy
+//! workers. The fault-tolerant runtime catches session failures instead
+//! of crashing — but a panic *can* still unwind through a critical
+//! section, so the hot paths recover the guard from a poisoned lock
+//! rather than amplifying one failure into total loss of service.
+//!
+//! Recovery is safe here because every protected structure stays
+//! internally consistent under unwind: queues and maps are only touched
+//! through single `insert`/`remove`/`push` calls, and the metrics
+//! window tolerates a lost sample.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// [`Condvar::wait`] that recovers the reacquired guard from poison.
+pub fn wait_or_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|p| p.into_inner())
+}
+
+/// [`Condvar::wait_timeout`] that recovers the reacquired guard from
+/// poison; returns the guard and whether the wait timed out.
+pub fn wait_timeout_or_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: std::time::Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, t)) => (g, t.timed_out()),
+        Err(p) => {
+            let (g, t) = p.into_inner();
+            (g, t.timed_out())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn poisoned_lock_is_recovered_not_propagated() {
+        let m = std::sync::Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned(), "lock must be poisoned by the panicking holder");
+        let g = lock_or_recover(&m);
+        assert_eq!(*g, 7, "state survives the recovery");
+    }
+}

@@ -9,6 +9,7 @@
 
 use crate::core::fixed::encode_vec;
 use crate::core::rng::Xoshiro;
+use crate::net::error::{catch_session, session_error_from_panic, SessionError};
 use crate::net::stats::{NetModel, StatsSnapshot};
 use crate::net::transport::channel_pair;
 use crate::nn::config::ModelConfig;
@@ -19,6 +20,7 @@ use crate::offline::pool::Tuple;
 use crate::offline::provider::PooledProvider;
 use crate::offline::source::BundleSource;
 use crate::party::runtime::RemoteParty;
+use crate::party::supervisor::PartyLinkSupervisor;
 use crate::party::wire::{
     BatchSessionStart, SessionStart, INPUT_HIDDEN, INPUT_ONEHOT, MODE_DEALER, MODE_POOLED,
     MODE_SEEDED,
@@ -55,6 +57,13 @@ pub enum PeerRuntime {
     /// S1 runs in a separate `party-serve` process, reached over a
     /// multiplexed TCP session link (see [`crate::party`]).
     Remote(Arc<RemoteParty>),
+    /// Like [`PeerRuntime::Remote`], but the link is owned by a
+    /// [`PartyLinkSupervisor`]: every session asks the supervisor for
+    /// the current live connection, so a dead link is transparently
+    /// re-dialed (PSK + fingerprint re-verified) before the session
+    /// starts. Failed sessions still surface as typed errors — the
+    /// caller decides whether to retry with fresh shares.
+    Supervised(Arc<PartyLinkSupervisor>),
 }
 
 /// Result of one secure inference.
@@ -286,8 +295,27 @@ impl SecureModel {
         }
     }
 
-    /// Run one secure inference (steps ②–⑤ of Fig 2).
+    /// Run one secure inference (steps ②–⑤ of Fig 2). Panics if the
+    /// session fails — callers that must survive peer loss (the
+    /// coordinator's serving workers, retry loops) use
+    /// [`SecureModel::try_infer`] instead.
     pub fn infer(&mut self, input: &ModelInput) -> InferenceResult {
+        self.try_infer(input)
+            .unwrap_or_else(|e| panic!("secure inference failed: {e}"))
+    }
+
+    /// [`SecureModel::infer`] with a typed failure path: a session that
+    /// loses its peer (or hits a protocol/bundle mismatch) returns a
+    /// [`SessionError`] instead of panicking, leaving the model ready
+    /// for the next attempt. Retrying is safe by construction — each
+    /// call re-enters [`SecureModel::share_input`], which advances the
+    /// session counter and thus mints a fresh session label, fresh
+    /// input-share masks and a fresh pad bundle; nothing masked with a
+    /// failed session's pads is ever re-sent.
+    pub fn try_infer(
+        &mut self,
+        input: &ModelInput,
+    ) -> std::result::Result<InferenceResult, SessionError> {
         let (in0, in1) = self.share_input(input);
         let session = format!("{}-{}", self.session_label, self.session_counter);
 
@@ -326,10 +354,14 @@ impl SecureModel {
                 bundle1,
                 &bundle_session,
                 bundle_words,
-            ),
+            )?,
             PeerRuntime::Remote(rp) => {
                 let rp = rp.clone();
-                self.run_remote(&rp, vec![in0], vec![in1], &session, bundle0, &bundle_session)
+                self.run_remote(&rp, vec![in0], vec![in1], &session, bundle0, &bundle_session)?
+            }
+            PeerRuntime::Supervised(sup) => {
+                let rp = sup.party()?;
+                self.run_remote(&rp, vec![in0], vec![in1], &session, bundle0, &bundle_session)?
             }
         };
 
@@ -340,7 +372,7 @@ impl SecureModel {
         let compute_s: f64 = stats.nanos.iter().sum::<u64>() as f64 * 1e-9;
         let simulated =
             compute_s + lan.simulated_seconds(stats.total_rounds(), stats.total_bytes() * 2);
-        InferenceResult { logits, stats, wall_seconds: wall, simulated_lan_seconds: simulated }
+        Ok(InferenceResult { logits, stats, wall_seconds: wall, simulated_lan_seconds: simulated })
     }
 
     /// Run one dynamic batch of inferences with cross-request round
@@ -357,7 +389,25 @@ impl SecureModel {
     /// degrades that chunk to synchronized seeded generation (correct
     /// results, counted as a miss). Bucket-1 chunks take exactly the
     /// single-[`SecureModel::infer`] path, wire frames included.
+    ///
+    /// Panics on a failed session; fault-tolerant callers use
+    /// [`SecureModel::try_infer_batch`].
     pub fn infer_batch(&mut self, inputs: &[ModelInput]) -> BatchResult {
+        self.try_infer_batch(inputs)
+            .unwrap_or_else(|e| panic!("secure batch inference failed: {e}"))
+    }
+
+    /// [`SecureModel::infer_batch`] with a typed failure path. A batch
+    /// whose session dies mid-protocol returns the [`SessionError`] for
+    /// the WHOLE batch (results of chunks that finished earlier are
+    /// discarded): the caller re-enqueues or fails every member
+    /// request. Retrying re-shares every input — fresh labels, masks
+    /// and pads — so a retried batch is cryptographically independent
+    /// of the dead one.
+    pub fn try_infer_batch(
+        &mut self,
+        inputs: &[ModelInput],
+    ) -> std::result::Result<BatchResult, SessionError> {
         assert!(!inputs.is_empty(), "infer_batch needs at least one input");
         let t0 = Instant::now();
         let mut logits: Vec<Option<Vec<f64>>> = vec![None; inputs.len()];
@@ -389,7 +439,7 @@ impl SecureModel {
                     .find(|&b| b >= take)
                     .unwrap_or(max_bucket);
                 let (chunk_logits, chunk_stats) =
-                    self.run_chunk(kind, inputs, chunk, bucket);
+                    self.run_chunk(kind, inputs, chunk, bucket)?;
                 for (&slot, l) in chunk.iter().zip(chunk_logits) {
                     logits[slot] = Some(l);
                 }
@@ -403,7 +453,7 @@ impl SecureModel {
         let compute_s: f64 = stats.nanos.iter().sum::<u64>() as f64 * 1e-9;
         let simulated =
             compute_s + lan.simulated_seconds(stats.total_rounds(), stats.total_bytes() * 2);
-        BatchResult {
+        Ok(BatchResult {
             logits: logits
                 .into_iter()
                 .map(|l| l.expect("every input slot is filled by its chunk"))
@@ -412,7 +462,7 @@ impl SecureModel {
             wall_seconds: wall,
             simulated_lan_seconds: simulated,
             chunks,
-        }
+        })
     }
 
     /// One kind-homogeneous chunk, padded to `bucket`: share inputs,
@@ -424,13 +474,13 @@ impl SecureModel {
         inputs: &[ModelInput],
         chunk: &[usize],
         bucket: usize,
-    ) -> (Vec<Vec<f64>>, StatsSnapshot) {
+    ) -> std::result::Result<(Vec<Vec<f64>>, StatsSnapshot), SessionError> {
         debug_assert!(!chunk.is_empty() && chunk.len() <= bucket);
         if bucket == 1 {
             // Bit-identical to the pre-batching build: same session
             // labels, same bundle pops, same START wire frame.
-            let r = self.infer(&inputs[chunk[0]]);
-            return (vec![r.logits], r.stats);
+            let r = self.try_infer(&inputs[chunk[0]])?;
+            return Ok((vec![r.logits], r.stats));
         }
         // Pad with an all-zero dummy of the chunk's kind; the dummy is
         // shared (and masked) like any real input, so nothing about the
@@ -475,10 +525,14 @@ impl SecureModel {
                 bundle1,
                 &bundle_session,
                 bundle_words,
-            ),
+            )?,
             PeerRuntime::Remote(rp) => {
                 let rp = rp.clone();
-                self.run_remote(&rp, in0s, in1s, &session, bundle0, &bundle_session)
+                self.run_remote(&rp, in0s, in1s, &session, bundle0, &bundle_session)?
+            }
+            PeerRuntime::Supervised(sup) => {
+                let rp = sup.party()?;
+                self.run_remote(&rp, in0s, in1s, &session, bundle0, &bundle_session)?
             }
         };
         let rec = crate::sharing::reconstruct(&out0, &out1);
@@ -486,13 +540,16 @@ impl SecureModel {
         let nl = self.cfg.num_labels;
         let logits: Vec<Vec<f64>> =
             (0..chunk.len()).map(|j| all[j * nl..(j + 1) * nl].to_vec()).collect();
-        (logits, stats)
+        Ok((logits, stats))
     }
 
     /// The simulator topology: both parties as scoped threads over
     /// in-memory channels (plus a dealer thread in dealer mode). Takes a
     /// kind-homogeneous batch of input shares (usually one) and returns
-    /// the concatenated `batch × num_labels` output shares.
+    /// the concatenated `batch × num_labels` output shares. A party
+    /// thread that unwinds (typed session abort or a protocol-invariant
+    /// panic) surfaces as a [`SessionError`] after BOTH parties have
+    /// been joined — the scope never re-raises the panic.
     fn run_in_process(
         &self,
         in0: Vec<InputShare>,
@@ -502,7 +559,7 @@ impl SecureModel {
         bundle1: Option<Vec<Tuple>>,
         bundle_session: &str,
         bundle_words: u64,
-    ) -> (Vec<u64>, Vec<u64>, StatsSnapshot) {
+    ) -> std::result::Result<(Vec<u64>, Vec<u64>, StatsSnapshot), SessionError> {
         let cfg = self.cfg.clone();
         let pool_handle = self.pool.clone();
         let session = session.to_string();
@@ -585,17 +642,25 @@ impl SecureModel {
                 drop(ctx);
                 (out, stats.snapshot())
             });
-            let (o0, s0) = h0.join().expect("party 0 panicked");
-            let (o1, s1) = h1.join().expect("party 1 panicked");
-            if let Some(h) = dealer_handle {
-                h.join().expect("dealer panicked");
+            // Join BOTH parties before inspecting either result: if one
+            // died, the other's channel transport aborts with a typed
+            // PeerDisconnected, and leaving an unjoined panicked handle
+            // to the scope's implicit join would re-raise the panic we
+            // are converting.
+            let r0 = h0.join();
+            let r1 = h1.join();
+            let dealer = dealer_handle.map(|h| h.join());
+            let (o0, s0) = r0.map_err(session_error_from_panic)?;
+            let (o1, s1) = r1.map_err(session_error_from_panic)?;
+            if let Some(Err(p)) = dealer {
+                return Err(session_error_from_panic(p));
             }
             // Online stats are symmetric (party 0's view); the offline
             // phase runs on the S1↔T link (or the prefetched bundle) only.
             let mut merged = s0;
             merged.offline_bytes = s1.offline_bytes;
             merged.offline_msgs = s1.offline_msgs;
-            (o0, o1, merged)
+            Ok((o0, o1, merged))
         })
     }
 
@@ -607,11 +672,15 @@ impl SecureModel {
     /// back to the synchronized seeded stream, exactly like an
     /// in-process pool miss).
     ///
-    /// Failure model mirrors the in-process engine: losing the peer
-    /// mid-inference panics the calling thread (the in-process path
-    /// panics on a party-thread failure the same way) — an SMPC run
-    /// cannot continue without its counterpart. Session-level retry on
-    /// a re-dialed link is a tracked follow-up (ROADMAP).
+    /// Failure model (fail-recover, not fail-stop): an SMPC run cannot
+    /// continue without its counterpart, so losing the peer mid-session
+    /// aborts THIS session — but the abort is a typed [`SessionError`]
+    /// returned to the caller, never a thread-killing panic. The caller
+    /// (e.g. the coordinator's retry loop over a
+    /// [`PeerRuntime::Supervised`] link) may then re-run the inference
+    /// from the top: re-sharing mints fresh labels/masks/pads, so a
+    /// retry never re-sends bytes masked with the dead session's pad
+    /// material.
     fn run_remote(
         &self,
         rp: &RemoteParty,
@@ -620,7 +689,7 @@ impl SecureModel {
         session: &str,
         bundle0: Option<Vec<Tuple>>,
         bundle_session: &str,
-    ) -> (Vec<u64>, Vec<u64>, StatsSnapshot) {
+    ) -> std::result::Result<(Vec<u64>, Vec<u64>, StatsSnapshot), SessionError> {
         let input_kind = match &in1[0] {
             InputShare::Hidden(_) => INPUT_HIDDEN,
             InputShare::OneHot(_) => INPUT_ONEHOT,
@@ -658,15 +727,22 @@ impl SecureModel {
                 inputs: inputs1,
             };
             rp.start_session_batch(start)
-        }
-        .expect("start remote party session");
+        }?;
 
         let prov: Box<dyn crate::sharing::provider::Provider> = match self.offline {
             OfflineMode::Dealer => Box::new(Party0Provider::new(session)),
             OfflineMode::Seeded => Box::new(FastSeededProvider::new_fast(session, 0)),
             OfflineMode::Pooled => {
                 if sess.use_pool {
-                    let tuples = bundle0.expect("use_pool implies a local bundle");
+                    // The ack can only commit to pooled material the
+                    // coordinator advertised; an ack for a bundle we do
+                    // not hold is a broken offline agreement.
+                    let tuples = bundle0.ok_or_else(|| {
+                        SessionError::BundleMismatch(
+                            "party acknowledged pooled mode but the coordinator holds no bundle"
+                                .into(),
+                        )
+                    })?;
                     let fb = format!("{bundle_session}/fallback");
                     Box::new(PooledProvider::new(tuples, 0, &fb))
                 } else {
@@ -686,17 +762,19 @@ impl SecureModel {
 
         let mut ctx = PartyCtx::new(0, sess.take_transport(), prov, 0xAA);
         let stats = ctx.stats.clone();
-        let out0 = bert_forward_batch(&mut ctx, &self.cfg, &self.shares0, &in0);
+        // S0's forward runs under a session boundary: a link lost
+        // mid-round unwinds out of the transport as a typed error
+        // instead of killing the calling worker thread.
+        let out0 = catch_session(|| bert_forward_batch(&mut ctx, &self.cfg, &self.shares0, &in0))?;
         drop(ctx);
-        let (out1, offline_bytes, offline_msgs) =
-            sess.finish().expect("remote party session result");
+        let (out1, offline_bytes, offline_msgs) = sess.finish()?;
         // Same merge rule as in-process: online stats are symmetric
         // (S0's view); the offline phase is S1's (reported back in the
         // RESULT frame).
         let mut merged = stats.snapshot();
         merged.offline_bytes = offline_bytes;
         merged.offline_msgs = offline_msgs;
-        (out0, out1, merged)
+        Ok((out0, out1, merged))
     }
 }
 

@@ -326,6 +326,14 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
     // process (any offline mode); `--peer-psk` authenticates the link.
     serving.peer_addr = args.flag("peer-addr").map(String::from);
     serving.peer_psk = args.flag("peer-psk").map(String::from);
+    // Fault tolerance on the party link: `--session-retries N` re-runs a
+    // failed session as a brand-new one (fresh label/shares/pads) up to
+    // N times; `--party-heartbeat-ms` sets the idle-PING interval and
+    // `--link-timeout-ms` the silence budget before the supervisor
+    // declares the link dead and re-dials.
+    serving.session_retries = args.usize_or("session-retries", 2) as u32;
+    serving.party_heartbeat_ms = args.usize_or("party-heartbeat-ms", 1000).max(1) as u64;
+    serving.link_timeout_ms = args.usize_or("link-timeout-ms", 5000).max(1) as u64;
     // `--batch-buckets 1,2,4,8` (the default): cross-request batching —
     // a drained dynamic batch is padded up to the nearest bucket and
     // executed as ONE secure round schedule; pooled mode plans one
@@ -647,6 +655,8 @@ USAGE:
                    [--dealer-addr HOST:PORT] [--dealer-psk KEY]
                    [--spool-dir DIR] [--spool-max-bytes N] [--namespace NS]
                    [--peer-addr HOST:PORT] [--peer-psk KEY]
+                   [--session-retries 2] [--party-heartbeat-ms 1000]
+                   [--link-timeout-ms 5000]
   secformer party-serve [--bind 127.0.0.1:8787] [--seq N] [--framework F]
                    [--vocab V] [--weights W.swts] [--psk KEY]
                    [--pool DEPTH] [--pool-producers P] [--pool-prf]
@@ -684,6 +694,15 @@ HELLO handshake verifies a config+weights fingerprint). For pooled
 two-party serving, give BOTH processes the same `--namespace` so their
 pools generate identical bundles; any mismatch degrades to seeded
 fallback, never wrong results.
+
+The party link is supervised: the client PINGs after
+`--party-heartbeat-ms` of silence, declares the link dead after
+`--link-timeout-ms`, re-dials with capped backoff, and re-runs failed
+sessions up to `--session-retries` times — every retry is a brand-new
+session (fresh label, shares and pads; old pad material is never
+reused). Requests that exhaust the budget get a typed `err session
+failed: …` line; the `stats` line reports `retried`, `failed`,
+`party_reconnects` and `link`.
 
 `dealer-serve` moves the offline phase to its own machine: it streams
 serialized session bundles to any number of coordinators started with

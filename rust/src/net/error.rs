@@ -1,0 +1,161 @@
+//! Typed session failures — the error taxonomy of the fault-tolerant
+//! online stack.
+//!
+//! Every online protocol message funnels through a [`Transport`]
+//! (`crate::net::transport::Transport`), whose `recv` returns bare
+//! words — there is no `Result` on the protocol hot path. Fault
+//! tolerance therefore rides on the *unwind* channel instead: a
+//! transport that loses its peer raises a [`SessionError`] with
+//! [`abort_session`] (a typed panic payload), and the session boundary
+//! — [`catch_session`] in the engine, the party host's session thread,
+//! the coordinator's secure worker — converts the unwind back into a
+//! plain `Result<_, SessionError>`. Worker threads stay alive, the
+//! failed request gets an error *response* (or a retry), and nothing
+//! between the transport and the boundary needs to thread a `Result`
+//! through hundreds of protocol call sites.
+//!
+//! ## Retry safety
+//!
+//! [`SessionError::is_retryable`] is deliberately conservative: only
+//! link-loss shapes ([`SessionError::PeerDisconnected`],
+//! [`SessionError::Timeout`]) are retryable. A retry re-enters the
+//! engine from the top — fresh session label, fresh input shares, fresh
+//! pad material — so no byte masked with a dead session's pads is ever
+//! re-sent (see ARCHITECTURE §Failure model & recovery).
+
+use std::sync::Once;
+
+/// Why a secure session failed. Cloneable so one failure can fan out to
+/// every request of a batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SessionError {
+    /// The peer vanished mid-protocol (socket closed, reader died,
+    /// channel sender dropped). Retryable: a re-dialed link can run a
+    /// fresh session.
+    PeerDisconnected,
+    /// The peer stayed silent past the configured deadline. Retryable —
+    /// indistinguishable from a slow death of the link.
+    Timeout,
+    /// The peer spoke, but wrongly: handshake rejection, an undecodable
+    /// or out-of-order frame, or an unclassified panic payload caught at
+    /// the session boundary. NOT retryable — the same bytes would fail
+    /// again.
+    ProtocolViolation(String),
+    /// The offline-phase bundle agreement broke (e.g. an ack committed
+    /// to pooled material the coordinator does not hold). NOT retryable
+    /// as-is: it signals a configuration/protocol mismatch, not a flaky
+    /// link.
+    BundleMismatch(String),
+}
+
+impl SessionError {
+    /// Whether a retry with a *fresh* session (new label, new shares,
+    /// new pads) can plausibly succeed. Protocol and bundle shapes are
+    /// deterministic failures, so only link-loss shapes qualify.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, SessionError::PeerDisconnected | SessionError::Timeout)
+    }
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::PeerDisconnected => write!(f, "peer disconnected mid-session"),
+            SessionError::Timeout => write!(f, "session timed out waiting for the peer"),
+            SessionError::ProtocolViolation(m) => write!(f, "protocol violation: {m}"),
+            SessionError::BundleMismatch(m) => write!(f, "bundle mismatch: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+/// Abort the current session by raising `err` as a typed unwind
+/// payload. Must only be called under a [`catch_session`] boundary (the
+/// engine, party-host session threads and coordinator workers all
+/// provide one); escaping one anywhere else kills that thread like any
+/// panic would.
+pub fn abort_session(err: SessionError) -> ! {
+    install_quiet_hook();
+    std::panic::panic_any(err)
+}
+
+/// Install (once, process-wide) a panic hook that stays silent for
+/// [`SessionError`] payloads — they are control flow, not bugs — and
+/// delegates every other panic to the previously installed hook.
+fn install_quiet_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<SessionError>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Convert an unwind payload (from `catch_unwind` or a `JoinHandle`)
+/// into the [`SessionError`] it carries; unclassified payloads — plain
+/// `panic!` messages from protocol invariants — map to
+/// [`SessionError::ProtocolViolation`].
+pub fn session_error_from_panic(payload: Box<dyn std::any::Any + Send>) -> SessionError {
+    match payload.downcast::<SessionError>() {
+        Ok(e) => *e,
+        Err(other) => {
+            let msg = if let Some(s) = other.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = other.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "unclassified session panic".to_string()
+            };
+            SessionError::ProtocolViolation(msg)
+        }
+    }
+}
+
+/// Run `f` as a session body: a [`SessionError`] raised anywhere below
+/// (transport `recv`, protocol invariants) unwinds to here and returns
+/// as `Err` instead of killing the calling thread.
+pub fn catch_session<R>(f: impl FnOnce() -> R) -> Result<R, SessionError> {
+    install_quiet_hook();
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).map_err(session_error_from_panic)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catch_session_returns_the_typed_error() {
+        let r: Result<(), _> = catch_session(|| abort_session(SessionError::PeerDisconnected));
+        assert_eq!(r, Err(SessionError::PeerDisconnected));
+        let ok = catch_session(|| 42);
+        assert_eq!(ok, Ok(42));
+    }
+
+    #[test]
+    fn unclassified_panics_become_protocol_violations() {
+        let r: Result<(), _> = catch_session(|| panic!("shape disagreement"));
+        match r {
+            Err(SessionError::ProtocolViolation(m)) => assert!(m.contains("shape")),
+            other => panic!("expected ProtocolViolation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn retryability_is_link_loss_only() {
+        assert!(SessionError::PeerDisconnected.is_retryable());
+        assert!(SessionError::Timeout.is_retryable());
+        assert!(!SessionError::ProtocolViolation("x".into()).is_retryable());
+        assert!(!SessionError::BundleMismatch("x".into()).is_retryable());
+    }
+
+    #[test]
+    fn session_errors_cross_thread_joins() {
+        let h = std::thread::spawn(|| abort_session(SessionError::Timeout));
+        let payload = h.join().expect_err("thread must unwind");
+        assert_eq!(session_error_from_panic(payload), SessionError::Timeout);
+    }
+}

@@ -1,0 +1,375 @@
+//! Fault injection: a chaos wrapper for in-process [`Transport`]s and a
+//! chaos TCP proxy for the party/dealer listeners.
+//!
+//! Both tools exist to *prove* the fault-tolerant session runtime: the
+//! fault-injection tests (`tests/fault_injection.rs`) run real secure
+//! inferences through them and assert that every submitted request
+//! still resolves to a correct logit or a clean typed
+//! [`SessionError`](crate::net::error::SessionError) — never a dead
+//! worker thread or a silently dropped request.
+//!
+//! * [`FaultyTransport`] wraps any transport and, under a seeded
+//!   deterministic plan, delays, corrupts or severs messages at a
+//!   configurable point in the stream.
+//! * [`ChaosProxy`] sits between a client and a real TCP listener
+//!   (`party-serve`, `dealer-serve`) and forwards bytes until told to
+//!   sever — either every live connection at once (a process death) or
+//!   a single connection after a byte threshold (a mid-handshake or
+//!   mid-round cut). New connections keep being accepted and proxied,
+//!   so a supervisor's re-dial lands on the restarted/healthy upstream.
+
+use crate::core::rng::Xoshiro;
+use crate::core::sync::lock_or_recover;
+use crate::net::error::{abort_session, SessionError};
+use crate::net::transport::Transport;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// FaultyTransport — in-process chaos
+// ---------------------------------------------------------------------
+
+/// Deterministic fault schedule for one [`FaultyTransport`]. All
+/// counters are in *messages* (send + recv combined), so a plan replays
+/// identically for a fixed seed and protocol.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Seed for the corruption-position RNG (which word/bit to flip).
+    pub seed: u64,
+    /// After this many messages the link is severed: sends are dropped
+    /// and the next recv raises `SessionError::PeerDisconnected`.
+    pub sever_after_msgs: Option<u64>,
+    /// Flip one seeded bit in the payload of this (0-based) outbound
+    /// message. SMPC shares carry no per-message MAC, so this models
+    /// silent in-flight corruption (the result decodes to wrong logits
+    /// — which is why frame checksums guard the real TCP surfaces).
+    pub corrupt_msg: Option<u64>,
+    /// Sleep this long before every message (latency injection).
+    pub delay: Option<Duration>,
+}
+
+/// A [`Transport`] wrapper that injects the faults scheduled in its
+/// [`FaultPlan`]. Wraps any inner transport; used by unit tests to
+/// drive the typed-error paths without a real socket.
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    msgs: AtomicU64,
+    rng: Mutex<Xoshiro>,
+}
+
+impl FaultyTransport {
+    /// Wrap `inner` under `plan`.
+    pub fn new(inner: Box<dyn Transport>, plan: FaultPlan) -> Self {
+        let rng = Mutex::new(Xoshiro::seed_from(plan.seed ^ 0xFA17));
+        FaultyTransport { inner, plan, msgs: AtomicU64::new(0), rng }
+    }
+
+    fn severed(&self, msg_index: u64) -> bool {
+        self.plan.sever_after_msgs.is_some_and(|n| msg_index >= n)
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn send(&self, mut data: Vec<u64>) {
+        let idx = self.msgs.fetch_add(1, Ordering::Relaxed);
+        if let Some(d) = self.plan.delay {
+            std::thread::sleep(d);
+        }
+        if self.severed(idx) {
+            return; // the wire is cut: the bytes vanish
+        }
+        if self.plan.corrupt_msg == Some(idx) && !data.is_empty() {
+            let mut rng = lock_or_recover(&self.rng);
+            let word = (rng.next_u64() as usize) % data.len();
+            let bit = rng.next_u64() % 64;
+            data[word] ^= 1u64 << bit;
+        }
+        self.inner.send(data);
+    }
+
+    fn recv(&self) -> Vec<u64> {
+        let idx = self.msgs.fetch_add(1, Ordering::Relaxed);
+        if self.severed(idx) {
+            abort_session(SessionError::PeerDisconnected);
+        }
+        self.inner.recv()
+    }
+}
+
+// ---------------------------------------------------------------------
+// ChaosProxy — TCP-level chaos for real listeners
+// ---------------------------------------------------------------------
+
+/// Shared control block of a [`ChaosProxy`].
+struct ProxyCtl {
+    /// Where to forward new connections (swappable: "the party was
+    /// restarted on another port").
+    upstream: Mutex<String>,
+    /// Live connection endpoints, for [`ChaosProxy::sever_all`].
+    conns: Mutex<Vec<(TcpStream, TcpStream)>>,
+    /// Byte budget applied to the NEXT accepted connection: once the
+    /// connection has forwarded this many bytes (both directions
+    /// combined) it is cut. 0 = unlimited.
+    next_conn_cut: AtomicU64,
+    /// XOR this byte offset's byte on the NEXT accepted connection
+    /// (u64::MAX = off) — models in-flight corruption that the frame
+    /// checksum must catch.
+    next_conn_corrupt: AtomicU64,
+    /// Total connections the proxy has severed (by cut or sever_all).
+    severed: AtomicU64,
+    /// Total connections accepted.
+    accepted: AtomicU64,
+    stopping: AtomicBool,
+}
+
+/// A chaos TCP proxy: forwards `listen → upstream` byte streams and
+/// severs/corrupts them on command. See the module docs for the
+/// scenarios it models.
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    ctl: Arc<ProxyCtl>,
+}
+
+impl ChaosProxy {
+    /// Start a proxy on an ephemeral loopback port forwarding to
+    /// `upstream`.
+    pub fn start(upstream: &str) -> std::io::Result<ChaosProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let ctl = Arc::new(ProxyCtl {
+            upstream: Mutex::new(upstream.to_string()),
+            conns: Mutex::new(Vec::new()),
+            next_conn_cut: AtomicU64::new(0),
+            next_conn_corrupt: AtomicU64::new(u64::MAX),
+            severed: AtomicU64::new(0),
+            accepted: AtomicU64::new(0),
+            stopping: AtomicBool::new(false),
+        });
+        let ctl2 = ctl.clone();
+        std::thread::Builder::new()
+            .name("chaos-proxy-accept".to_string())
+            .spawn(move || accept_loop(listener, ctl2))?;
+        Ok(ChaosProxy { addr, ctl })
+    }
+
+    /// The proxy's listen address — dial this instead of the upstream.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Point NEW connections at a different upstream (a "restarted"
+    /// party on a fresh port). Live connections are unaffected.
+    pub fn set_upstream(&self, upstream: &str) {
+        *lock_or_recover(&self.ctl.upstream) = upstream.to_string();
+    }
+
+    /// Sever every live proxied connection NOW — both sides see the
+    /// peer vanish, exactly like a process death. New connections keep
+    /// being accepted.
+    pub fn sever_all(&self) {
+        let mut conns = lock_or_recover(&self.ctl.conns);
+        for (a, b) in conns.drain(..) {
+            let _ = a.shutdown(Shutdown::Both);
+            let _ = b.shutdown(Shutdown::Both);
+            self.ctl.severed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Cut the NEXT accepted connection after it has forwarded `bytes`
+    /// bytes (both directions combined). `bytes` small enough lands
+    /// mid-handshake; larger lands mid-round. One-shot: connections
+    /// after the next one are clean again.
+    pub fn cut_next_after(&self, bytes: u64) {
+        self.ctl.next_conn_cut.store(bytes.max(1), Ordering::Relaxed);
+    }
+
+    /// Corrupt (XOR 0x5A) the byte at stream offset `at` of the NEXT
+    /// accepted connection. One-shot.
+    pub fn corrupt_next_at(&self, at: u64) {
+        self.ctl.next_conn_corrupt.store(at, Ordering::Relaxed);
+    }
+
+    /// Number of connections the proxy severed so far.
+    pub fn severed(&self) -> u64 {
+        self.ctl.severed.load(Ordering::Relaxed)
+    }
+
+    /// Number of connections accepted so far.
+    pub fn accepted(&self) -> u64 {
+        self.ctl.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting; live connections are severed.
+    pub fn stop(&self) {
+        self.ctl.stopping.store(true, Ordering::Relaxed);
+        self.sever_all();
+        // Unblock the accept loop with a throwaway dial.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, ctl: Arc<ProxyCtl>) {
+    for stream in listener.incoming() {
+        if ctl.stopping.load(Ordering::Relaxed) {
+            return;
+        }
+        let Ok(client) = stream else { return };
+        ctl.accepted.fetch_add(1, Ordering::Relaxed);
+        let upstream_addr = lock_or_recover(&ctl.upstream).clone();
+        let Ok(upstream) = TcpStream::connect(&upstream_addr) else {
+            let _ = client.shutdown(Shutdown::Both);
+            continue;
+        };
+        let _ = client.set_nodelay(true);
+        let _ = upstream.set_nodelay(true);
+        // Claim the one-shot per-connection fault budgets.
+        let cut = ctl.next_conn_cut.swap(0, Ordering::Relaxed);
+        let corrupt = ctl.next_conn_corrupt.swap(u64::MAX, Ordering::Relaxed);
+        let budget = Arc::new(ConnBudget {
+            remaining: AtomicU64::new(if cut == 0 { u64::MAX } else { cut }),
+            corrupt_at: AtomicU64::new(corrupt),
+            offset: AtomicU64::new(0),
+        });
+        let (Ok(c2), Ok(u2)) = (client.try_clone(), upstream.try_clone()) else {
+            continue;
+        };
+        lock_or_recover(&ctl.conns).push((c2, u2));
+        let (Ok(c3), Ok(u3)) = (client.try_clone(), upstream.try_clone()) else {
+            continue;
+        };
+        spawn_pump(client, u3, budget.clone(), ctl.clone());
+        spawn_pump(upstream, c3, budget, ctl.clone());
+    }
+}
+
+/// Per-connection fault budget shared by both pump directions.
+struct ConnBudget {
+    /// Bytes left before the connection is cut (u64::MAX = unlimited).
+    remaining: AtomicU64,
+    /// Absolute stream offset to corrupt (u64::MAX = off).
+    corrupt_at: AtomicU64,
+    /// Bytes forwarded so far, both directions combined.
+    offset: AtomicU64,
+}
+
+fn spawn_pump(mut from: TcpStream, mut to: TcpStream, budget: Arc<ConnBudget>, ctl: Arc<ProxyCtl>) {
+    let _ = std::thread::Builder::new()
+        .name("chaos-proxy-pump".to_string())
+        .spawn(move || {
+            let mut buf = [0u8; 8192];
+            loop {
+                let n = match from.read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => n,
+                };
+                let start = budget.offset.fetch_add(n as u64, Ordering::Relaxed);
+                let corrupt_at = budget.corrupt_at.load(Ordering::Relaxed);
+                if corrupt_at >= start && corrupt_at < start + n as u64 {
+                    buf[(corrupt_at - start) as usize] ^= 0x5A;
+                }
+                let mut n = n;
+                let remaining = budget.remaining.load(Ordering::Relaxed);
+                let cut_here = remaining != u64::MAX && (n as u64) >= remaining;
+                if cut_here {
+                    n = remaining as usize; // forward the last partial chunk, then cut
+                }
+                if n > 0 && to.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+                if cut_here {
+                    ctl.severed.fetch_add(1, Ordering::Relaxed);
+                    let _ = from.shutdown(Shutdown::Both);
+                    let _ = to.shutdown(Shutdown::Both);
+                    break;
+                }
+                if remaining != u64::MAX {
+                    budget.remaining.fetch_sub(n as u64, Ordering::Relaxed);
+                }
+            }
+            // One side closed: mirror it so the other end learns promptly.
+            let _ = from.shutdown(Shutdown::Both);
+            let _ = to.shutdown(Shutdown::Both);
+        });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::error::catch_session;
+    use crate::net::transport::channel_pair;
+
+    #[test]
+    fn severed_transport_raises_a_typed_error() {
+        let (a, b) = channel_pair();
+        let faulty = FaultyTransport::new(
+            Box::new(a),
+            FaultPlan { sever_after_msgs: Some(1), ..FaultPlan::default() },
+        );
+        faulty.send(vec![1, 2]); // msg 0: delivered
+        assert_eq!(b.recv(), vec![1, 2]);
+        b.send(vec![3]);
+        let r = catch_session(|| faulty.recv()); // msg 1: severed
+        assert_eq!(r, Err(SessionError::PeerDisconnected));
+    }
+
+    #[test]
+    fn corruption_flips_exactly_one_bit() {
+        let (a, b) = channel_pair();
+        let faulty = FaultyTransport::new(
+            Box::new(a),
+            FaultPlan { seed: 9, corrupt_msg: Some(0), ..FaultPlan::default() },
+        );
+        faulty.send(vec![0, 0, 0, 0]);
+        let got = b.recv();
+        let flipped: u32 = got.iter().map(|w| w.count_ones()).sum();
+        assert_eq!(flipped, 1, "exactly one bit flips: {got:?}");
+    }
+
+    #[test]
+    fn proxy_forwards_and_severs_on_command() {
+        // Upstream echo server: one connection, echo bytes back.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let up_addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for s in listener.incoming() {
+                let Ok(mut s) = s else { return };
+                std::thread::spawn(move || {
+                    let mut buf = [0u8; 256];
+                    while let Ok(n) = s.read(&mut buf) {
+                        if n == 0 || s.write_all(&buf[..n]).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        let proxy = ChaosProxy::start(&up_addr.to_string()).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.write_all(b"ping").unwrap();
+        let mut back = [0u8; 4];
+        c.read_exact(&mut back).unwrap();
+        assert_eq!(&back, b"ping");
+        proxy.sever_all();
+        // After the cut, the connection reads EOF (or errors).
+        let mut rest = [0u8; 1];
+        assert!(matches!(c.read(&mut rest), Ok(0) | Err(_)));
+        assert!(proxy.severed() >= 1);
+        // New connections still work.
+        let mut c2 = TcpStream::connect(proxy.addr()).unwrap();
+        c2.write_all(b"again").unwrap();
+        let mut back2 = [0u8; 5];
+        c2.read_exact(&mut back2).unwrap();
+        assert_eq!(&back2, b"again");
+        proxy.stop();
+    }
+}

@@ -10,8 +10,12 @@
 //! for cross-machine deployments.
 #![warn(missing_docs)]
 
+pub mod error;
+pub mod fault;
 pub mod stats;
 pub mod transport;
 
+pub use error::{abort_session, catch_session, SessionError};
+pub use fault::{ChaosProxy, FaultPlan, FaultyTransport};
 pub use stats::{CommStats, NetModel, OpCategory, StatsHandle};
 pub use transport::{channel_pair, ChannelTransport, TcpTransport, Transport};

@@ -2,6 +2,8 @@
 //! test double, and a length-prefixed TCP transport for real
 //! cross-machine deployments.
 
+use crate::core::sync::lock_or_recover;
+use crate::net::error::{abort_session, SessionError};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -15,8 +17,12 @@ pub trait Transport: Send {
     /// Queue one message to the peer (never blocks on the peer's pace
     /// beyond flow control; delivery to a vanished peer may be dropped).
     fn send(&self, data: Vec<u64>);
-    /// Receive the next message, blocking; panics if the peer is gone
-    /// mid-protocol (an SMPC run cannot continue without it).
+    /// Receive the next message, blocking. If the peer is gone
+    /// mid-protocol (an SMPC run cannot continue without it) the
+    /// transport raises a typed [`SessionError`] unwind via
+    /// [`abort_session`]; the session boundary
+    /// ([`crate::net::error::catch_session`]) converts it into an error
+    /// result instead of a thread death.
     fn recv(&self) -> Vec<u64>;
 }
 
@@ -35,7 +41,9 @@ impl Transport for ChannelTransport {
     }
 
     fn recv(&self) -> Vec<u64> {
-        self.rx.recv().expect("peer disconnected")
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| abort_session(SessionError::PeerDisconnected))
     }
 }
 
@@ -93,7 +101,7 @@ pub const TCP_MAX_WORDS: u64 = 1 << 28;
 /// phases (send-then-recv on both sides) cannot deadlock. Like
 /// [`ChannelTransport`], `send` to a disconnected peer is dropped
 /// silently (a peer that died mid-protocol is caught by the matching
-/// `recv`, which panics with a diagnostic).
+/// `recv`, which raises a typed [`SessionError`]).
 pub struct TcpTransport {
     reader: Mutex<BufReader<TcpStream>>,
     writer: Mutex<BufWriter<TcpStream>>,
@@ -117,7 +125,7 @@ impl TcpTransport {
     }
 
     fn try_send(&self, data: &[u64]) -> std::io::Result<()> {
-        let mut w = self.writer.lock().unwrap();
+        let mut w = lock_or_recover(&self.writer);
         let mut buf = Vec::with_capacity(12 + data.len() * 8);
         buf.extend_from_slice(&TCP_FRAME_MAGIC.to_le_bytes());
         buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
@@ -131,7 +139,7 @@ impl TcpTransport {
     }
 
     fn try_recv(&self) -> std::io::Result<Vec<u64>> {
-        let mut r = self.reader.lock().unwrap();
+        let mut r = lock_or_recover(&self.reader);
         let mut header = [0u8; 12];
         r.read_exact(&mut header)?;
         let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
@@ -166,7 +174,17 @@ impl Transport for TcpTransport {
     }
 
     fn recv(&self) -> Vec<u64> {
-        self.try_recv().expect("tcp transport: peer disconnected")
+        self.try_recv().unwrap_or_else(|e| {
+            abort_session(match e.kind() {
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                    SessionError::Timeout
+                }
+                std::io::ErrorKind::InvalidData => {
+                    SessionError::ProtocolViolation(e.to_string())
+                }
+                _ => SessionError::PeerDisconnected,
+            })
+        })
     }
 }
 

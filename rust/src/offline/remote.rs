@@ -28,11 +28,19 @@
 //! `BUNDLE` frames (or `ERR` when the dealer's pools are
 //! exhausted/stopped).
 //!
-//! Loss of the dealer mid-session is non-fatal: the client marks itself
-//! dead, drains its local queues, and further pops return `None` — the
-//! engine then falls back to synchronized seeded generation (correct
-//! results, no prefetch win), the same degradation contract as every
-//! other [`BundleSource`].
+//! Loss of the dealer mid-session is non-fatal, and since the
+//! fault-tolerance PR it is usually not even permanent: the prefetch
+//! reader re-dials the dealer with capped exponential backoff
+//! (re-running the PSK handshake and the manifest check), re-issues its
+//! standing credit on the fresh link and keeps prefetching — local
+//! queued bundles stay valid because each bundle is self-contained pad
+//! material. Only when every re-dial attempt fails (or the dealer
+//! *rejects* the client) does the pool mark itself dead: queues drain,
+//! further pops return `None`, and the engine falls back to
+//! synchronized seeded generation (correct results, no prefetch win),
+//! the same degradation contract as every other [`BundleSource`]. A
+//! socket read timeout doubles as a wedge detector: prolonged silence
+//! while bundle credit is outstanding is treated as a dead link.
 
 use crate::nn::config::ModelConfig;
 use crate::offline::planner::{plan_demand, PlanInput};
@@ -40,14 +48,14 @@ use crate::offline::pool::{PoolSnapshot, SessionBundle};
 use crate::offline::source::{BundleSource, PoolSet};
 use crate::offline::wire::{
     client_auth, decode_bundle, decode_kind, encode_bundle, encode_kind,
-    manifest_fingerprint, msg, read_frame, server_auth, write_frame,
+    manifest_fingerprint, msg, read_frame, server_auth, write_frame, FrameError,
 };
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------
 // Dealer side
@@ -403,12 +411,19 @@ struct RemoteShared {
     state: Mutex<RemoteState>,
     cv: Condvar,
     /// Write half for PULL frames (reads run on the prefetch thread).
+    /// Replaced wholesale when the reader re-dials a lost dealer.
     writer: Mutex<TcpStream>,
     stopping: AtomicBool,
     hits: AtomicU64,
     misses: AtomicU64,
     consumed: AtomicU64,
     received: AtomicU64,
+    /// Bundles requested via PULL frames since connect; `requested −
+    /// received` is the outstanding credit the wedge detector watches.
+    requested: AtomicU64,
+    /// Successful dealer re-dials (surfaced on the coordinator's stats
+    /// line as `dealer_reconnects`).
+    reconnects: AtomicU64,
     offline_bytes: AtomicU64,
     /// Consumed-but-not-yet-replaced credit per kind (indexed by
     /// `credit_slot`): batch PULL coalescing accumulates spent credit
@@ -437,6 +452,7 @@ impl RemoteShared {
         payload[0] = encode_kind(kind);
         payload[1..5].copy_from_slice(&count.to_le_bytes());
         self.pulls_sent.fetch_add(1, Ordering::Relaxed);
+        self.requested.fetch_add(count as u64, Ordering::Relaxed);
         let mut w = self.writer.lock().unwrap();
         if write_frame(&mut *w, msg::PULL, &payload).is_err() {
             drop(w);
@@ -462,6 +478,52 @@ impl RemoteShared {
     }
 }
 
+/// Read-timeout tick on the dealer socket: the reader wakes this often
+/// to check for shutdown and run the wedge detector.
+const DEALER_IDLE_TICK: Duration = Duration::from_millis(500);
+/// Consecutive idle ticks with bundle credit outstanding before the
+/// link is declared wedged (generous: a healthy dealer may legitimately
+/// block for a while generating large bundles).
+const DEALER_IDLE_STRIKES: u32 = 20;
+/// Dial attempts per recovery (the first happens immediately).
+const DEALER_REDIAL_ATTEMPTS: u32 = 5;
+/// Backoff before the second attempt; doubles per attempt, capped.
+const DEALER_REDIAL_BASE: Duration = Duration::from_millis(100);
+const DEALER_REDIAL_CAP: Duration = Duration::from_secs(2);
+
+/// Everything needed to re-dial the dealer from scratch: address, PSK,
+/// the exact HELLO payload of the original handshake (the manifest
+/// fingerprints cannot change while the process runs), and the credit
+/// to re-issue on a fresh link.
+struct DialInfo {
+    addr: String,
+    psk: Option<String>,
+    hello: Vec<u8>,
+    kinds: Vec<PlanInput>,
+    depth: usize,
+}
+
+/// Dial + authenticate + handshake one dealer connection; used for both
+/// the initial connect and every re-dial. The read timeout is installed
+/// *after* the handshake so slow handshakes are governed by blocking
+/// I/O, not the idle tick.
+fn dial_dealer(dial: &DialInfo) -> Result<TcpStream> {
+    let mut stream = TcpStream::connect(&dial.addr)
+        .with_context(|| format!("connect to dealer {}", dial.addr))?;
+    stream.set_nodelay(true)?;
+    client_auth(&mut stream, dial.psk.as_deref())?;
+    write_frame(&mut stream, msg::HELLO, &dial.hello)?;
+    match read_frame(&mut stream).map_err(|e| anyhow!("dealer handshake: {e}"))? {
+        (t, _) if t == msg::HELLO_OK => {}
+        (t, p) if t == msg::ERR => {
+            bail!("dealer rejected handshake: {}", String::from_utf8_lossy(&p))
+        }
+        (t, _) => bail!("unexpected handshake reply type {t}"),
+    }
+    stream.set_read_timeout(Some(DEALER_IDLE_TICK))?;
+    Ok(stream)
+}
+
 /// A [`BundleSource`] fed by a remote `dealer-serve` process: bundles
 /// are prefetched over TCP into per-kind local queues ahead of demand,
 /// so the online phase runs with zero dealer round-trips exactly as the
@@ -483,24 +545,19 @@ impl RemotePool {
         cfg: &ModelConfig,
         rcfg: RemotePoolConfig,
     ) -> Result<Arc<RemotePool>> {
-        let mut stream =
-            TcpStream::connect(addr).with_context(|| format!("connect to dealer {addr}"))?;
-        stream.set_nodelay(true)?;
-        client_auth(&mut stream, rcfg.psk.as_deref())?;
-
         let mut hello = vec![rcfg.kinds.len() as u8];
         for &kind in &rcfg.kinds {
             hello.push(encode_kind(kind));
             hello.extend_from_slice(&manifest_fingerprint(&plan_demand(cfg, kind)));
         }
-        write_frame(&mut stream, msg::HELLO, &hello)?;
-        match read_frame(&mut stream).map_err(|e| anyhow!("dealer handshake: {e}"))? {
-            (t, _) if t == msg::HELLO_OK => {}
-            (t, p) if t == msg::ERR => {
-                bail!("dealer rejected handshake: {}", String::from_utf8_lossy(&p))
-            }
-            (t, _) => bail!("unexpected handshake reply type {t}"),
-        }
+        let dial = DialInfo {
+            addr: addr.to_string(),
+            psk: rcfg.psk.clone(),
+            hello,
+            kinds: rcfg.kinds.clone(),
+            depth: rcfg.depth.max(1),
+        };
+        let stream = dial_dealer(&dial)?;
 
         let reader_stream = stream.try_clone()?;
         let shared = Arc::new(RemoteShared {
@@ -516,6 +573,8 @@ impl RemotePool {
             misses: AtomicU64::new(0),
             consumed: AtomicU64::new(0),
             received: AtomicU64::new(0),
+            requested: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
             offline_bytes: AtomicU64::new(0),
             pending_credit: [AtomicU64::new(0), AtomicU64::new(0)],
             pulls_sent: AtomicU64::new(0),
@@ -530,10 +589,15 @@ impl RemotePool {
         let sh = shared.clone();
         let reader = std::thread::Builder::new()
             .name("remote-pool-reader".to_string())
-            .spawn(move || reader_loop(sh, reader_stream))
+            .spawn(move || reader_loop(sh, reader_stream, dial))
             .expect("spawn remote pool reader");
 
         Ok(Arc::new(RemotePool { shared, cfg: rcfg, reader: Mutex::new(Some(reader)) }))
+    }
+
+    /// Successful dealer re-dials since connect.
+    pub fn dealer_reconnects(&self) -> u64 {
+        self.shared.reconnects.load(Ordering::Relaxed)
     }
 
     /// Bundles currently prefetched locally (both kinds).
@@ -556,7 +620,71 @@ impl RemotePool {
     }
 }
 
-fn reader_loop(shared: Arc<RemoteShared>, mut stream: TcpStream) {
+/// Replace a lost dealer link: re-dial with capped exponential backoff,
+/// swap the shared writer, void credit stranded on the old link and
+/// re-issue the full standing credit on the new one. Returns the fresh
+/// read stream, or `None` when the budget is spent (or stop() raced).
+fn redial_dealer(shared: &RemoteShared, dial: &DialInfo) -> Option<TcpStream> {
+    for attempt in 0..DEALER_REDIAL_ATTEMPTS {
+        if attempt > 0 {
+            let exp = DEALER_REDIAL_BASE
+                .saturating_mul(1u32 << (attempt - 1).min(16))
+                .min(DEALER_REDIAL_CAP);
+            std::thread::sleep(exp);
+        }
+        if shared.stopping.load(Ordering::Relaxed) {
+            return None;
+        }
+        match dial_dealer(dial) {
+            Ok(stream) => {
+                let reader_stream = match stream.try_clone() {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("remote pool: clone of re-dialed socket failed: {e}");
+                        continue;
+                    }
+                };
+                {
+                    let mut w = shared.writer.lock().unwrap();
+                    *w = stream;
+                    // Credit stranded on the dead link never arrives;
+                    // reset the ledgers before re-issuing from scratch.
+                    for slot in &shared.pending_credit {
+                        slot.store(0, Ordering::Relaxed);
+                    }
+                    shared
+                        .requested
+                        .store(shared.received.load(Ordering::Relaxed), Ordering::Relaxed);
+                    shared.state.lock().unwrap().dead = false;
+                }
+                for &kind in &dial.kinds {
+                    shared.send_pull(kind, dial.depth as u32);
+                }
+                shared.reconnects.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "remote pool: reconnected to dealer {} (attempt {})",
+                    dial.addr,
+                    attempt + 1
+                );
+                return Some(reader_stream);
+            }
+            Err(e) => {
+                eprintln!(
+                    "remote pool: dealer {} unreachable (attempt {}/{}): {e}",
+                    dial.addr,
+                    attempt + 1,
+                    DEALER_REDIAL_ATTEMPTS
+                );
+            }
+        }
+    }
+    None
+}
+
+fn reader_loop(shared: Arc<RemoteShared>, mut stream: TcpStream, dial: DialInfo) {
+    // Consecutive idle ticks while bundles are owed to us; prolonged
+    // silence with credit outstanding means a wedged (half-open) link.
+    let mut idle_strikes = 0u32;
     loop {
         if shared.stopping.load(Ordering::Relaxed) {
             return;
@@ -564,6 +692,7 @@ fn reader_loop(shared: Arc<RemoteShared>, mut stream: TcpStream) {
         match read_frame(&mut stream) {
             Ok((t, payload)) if t == msg::BUNDLE => match decode_bundle(&payload) {
                 Ok(b) => {
+                    idle_strikes = 0;
                     shared.received.fetch_add(1, Ordering::Relaxed);
                     shared
                         .offline_bytes
@@ -574,12 +703,16 @@ fn reader_loop(shared: Arc<RemoteShared>, mut stream: TcpStream) {
                     shared.cv.notify_all();
                 }
                 Err(e) => {
+                    // Corrupt pad material is a protocol violation, not
+                    // a link failure: re-dialing cannot make it sound.
                     eprintln!("remote pool: undecodable bundle ({e}); degrading");
                     shared.mark_dead();
                     return;
                 }
             },
             Ok((t, payload)) if t == msg::ERR => {
+                // An explicit dealer refusal (exhausted pools, shutdown)
+                // is an answer, not an outage — degrade, don't re-dial.
                 eprintln!(
                     "remote pool: dealer error: {}; degrading to seeded fallback",
                     String::from_utf8_lossy(&payload)
@@ -592,10 +725,48 @@ fn reader_loop(shared: Arc<RemoteShared>, mut stream: TcpStream) {
                 shared.mark_dead();
                 return;
             }
+            Err(FrameError::Idle) => {
+                let outstanding = shared
+                    .requested
+                    .load(Ordering::Relaxed)
+                    .saturating_sub(shared.received.load(Ordering::Relaxed));
+                if outstanding == 0 {
+                    idle_strikes = 0;
+                    continue;
+                }
+                idle_strikes += 1;
+                if idle_strikes < DEALER_IDLE_STRIKES {
+                    continue;
+                }
+                eprintln!(
+                    "remote pool: dealer silent for {:?} with {outstanding} bundles \
+                     outstanding; re-dialing",
+                    DEALER_IDLE_TICK * DEALER_IDLE_STRIKES
+                );
+                match redial_dealer(&shared, &dial) {
+                    Some(s) => {
+                        stream = s;
+                        idle_strikes = 0;
+                    }
+                    None => {
+                        shared.mark_dead();
+                        return;
+                    }
+                }
+            }
             Err(_) => {
-                // Disconnect (or local shutdown during stop()).
-                shared.mark_dead();
-                return;
+                // Disconnect (or local shutdown during stop()): try to
+                // replace the link before giving up on prefetch.
+                match redial_dealer(&shared, &dial) {
+                    Some(s) => {
+                        stream = s;
+                        idle_strikes = 0;
+                    }
+                    None => {
+                        shared.mark_dead();
+                        return;
+                    }
+                }
             }
         }
     }
@@ -642,6 +813,10 @@ impl BundleSource for RemotePool {
 
     fn note_fallback(&self) {
         self.shared.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn reconnects(&self) -> u64 {
+        self.dealer_reconnects()
     }
 
     fn snapshot(&self) -> PoolSnapshot {

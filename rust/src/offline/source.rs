@@ -72,6 +72,14 @@ pub trait BundleSource: Send + Sync {
     /// bucket) pool (clamped to each pool's depth/production bounds).
     fn warm(&self, _n: usize) {}
 
+    /// Successful link re-dials this source performed since startup.
+    /// Only sources with a network link count anything
+    /// ([`crate::offline::remote::RemotePool`] overrides this);
+    /// in-process and disk sources stay 0.
+    fn reconnects(&self) -> u64 {
+        0
+    }
+
     /// Stop background production/prefetch and unblock waiting
     /// consumers (which then receive `None`). Idempotent.
     fn stop(&self);

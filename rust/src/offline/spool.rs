@@ -252,6 +252,7 @@ fn scan_spool(path: &Path) -> Result<ScanOutcome> {
                     valid_len = f.stream_position()?;
                 }
                 Err(FrameError::Eof) => break,
+                Err(FrameError::Idle) => break, // unreachable: files have no read timeout
                 Err(FrameError::Truncated) => break, // crash tail: drop it
                 Err(FrameError::Corrupt(_)) => {
                     poisoned = true;
@@ -596,6 +597,12 @@ impl BundleSource for SpooledSource {
         if let Some(i) = &self.shared.inner {
             i.warm(n);
         }
+    }
+
+    fn reconnects(&self) -> u64 {
+        // The disk layer has no link of its own; surface the inner
+        // source's (e.g. a remote dealer's) re-dial count.
+        self.shared.inner.as_ref().map_or(0, |i| i.reconnects())
     }
 
     fn stop(&self) {

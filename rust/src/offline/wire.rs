@@ -87,6 +87,13 @@ pub enum FrameError {
     /// Structurally invalid data: bad magic/version, oversized length or
     /// checksum mismatch. A spool treats this as file-level poison.
     Corrupt(String),
+    /// A read timeout fired on a frame *boundary* (zero bytes of the
+    /// next frame read). Only possible on sockets with a read timeout
+    /// configured; readers use it as a heartbeat tick — the stream is
+    /// intact and the read can simply be retried. A timeout *inside* a
+    /// frame stays [`FrameError::Io`]: a half-received frame means the
+    /// link stalled and resynchronization is impossible.
+    Idle,
     /// An underlying I/O error other than end-of-stream.
     Io(std::io::Error),
 }
@@ -97,6 +104,7 @@ impl std::fmt::Display for FrameError {
             FrameError::Eof => write!(f, "end of stream"),
             FrameError::Truncated => write!(f, "frame truncated mid-write"),
             FrameError::Corrupt(m) => write!(f, "corrupt frame: {m}"),
+            FrameError::Idle => write!(f, "read timed out on a frame boundary"),
             FrameError::Io(e) => write!(f, "frame i/o error: {e}"),
         }
     }
@@ -143,6 +151,16 @@ fn read_exact_or(r: &mut impl Read, buf: &mut [u8], at_start: bool) -> std::resu
             }
             Ok(n) => got += n,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if at_start
+                    && got == 0
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+            {
+                return Err(FrameError::Idle);
+            }
             Err(e) => return Err(FrameError::Io(e)),
         }
     }

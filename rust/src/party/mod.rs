@@ -19,6 +19,11 @@
 //!   remote dealer, or disk spool) and executes the model half; and the
 //!   [`runtime::RemoteParty`] client the engine plugs in as
 //!   `PeerRuntime::Remote`.
+//! * [`supervisor`] — coordinator-side fault recovery: heartbeat-driven
+//!   death detection is the reader's job ([`runtime::LinkOptions`]),
+//!   re-dialing the host with capped backoff and re-running the
+//!   handshake is the [`supervisor::PartyLinkSupervisor`]'s; retried
+//!   sessions always mint fresh labels/shares/pads.
 //!
 //! Degradation contract: a pooled session only uses pregenerated
 //! bundles when *both* sides hold the same bundle (matched by session
@@ -29,9 +34,12 @@
 #![warn(missing_docs)]
 
 pub mod runtime;
+pub mod supervisor;
 pub mod wire;
 
 pub use runtime::{
-    serve_party, spawn_party_host, PartyHostConfig, RemoteParty, RemoteSession,
+    serve_party, spawn_party_host, spawn_party_host_stats, DialError, LinkOptions,
+    PartyHostConfig, PartyHostStats, RemoteParty, RemoteSession,
 };
+pub use supervisor::{PartyLinkSupervisor, RedialPolicy};
 pub use wire::config_fingerprint;

@@ -22,9 +22,16 @@
 //! single reader thread routes `ACK`/`MSG`/`RESULT` frames to
 //! per-session channels, writers share one frame-atomic mutex. Loss of
 //! the link marks the client dead: sessions blocked mid-protocol fail
-//! fast (the transport's `recv` contract), and new sessions refuse to
-//! start.
+//! fast with a typed [`crate::net::error::SessionError`], and new
+//! sessions refuse to start. The reader doubles as a liveness monitor
+//! (see [`LinkOptions`]): its socket read timeout is the heartbeat
+//! interval — an idle tick sends `PING`, any inbound frame refreshes
+//! the liveness clock, and silence past the link timeout declares the
+//! link dead so the [`crate::party::supervisor::PartyLinkSupervisor`]
+//! can re-dial.
 
+use crate::core::sync::lock_or_recover;
+use crate::net::error::{abort_session, catch_session, SessionError};
 use crate::net::stats::CommStats;
 use crate::net::transport::{channel_pair, Transport};
 use crate::nn::config::ModelConfig;
@@ -34,7 +41,7 @@ use crate::offline::planner::PlanInput;
 use crate::offline::pool::SessionBundle;
 use crate::offline::provider::PooledProvider;
 use crate::offline::source::BundleSource;
-use crate::offline::wire::{client_auth, msg, read_frame, server_auth, write_frame};
+use crate::offline::wire::{client_auth, msg, read_frame, server_auth, write_frame, FrameError};
 use crate::party::wire::{
     config_fingerprint, decode_ack, decode_msg, decode_result, decode_start,
     decode_start_batch, encode_ack, encode_msg, encode_result, encode_start,
@@ -50,6 +57,7 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------
 // Host side (party-serve)
@@ -79,6 +87,33 @@ type SessionMap = Arc<Mutex<HashMap<u64, Sender<Vec<u64>>>>>;
 /// Popped-but-not-yet-claimed bundles, keyed by session label.
 type BundleStash = Arc<Mutex<HashMap<String, SessionBundle>>>;
 
+/// Liveness/leak counters of one party host. The churn tests use these
+/// to pin that a coordinator disconnect mid-session frees every
+/// per-session worker (no thread, stash entry or bundle leaks across
+/// dropped connections).
+#[derive(Debug, Default)]
+pub struct PartyHostStats {
+    /// Sessions accepted (a `START`/`START_BATCH` spawned a worker).
+    pub sessions_started: AtomicU64,
+    /// Sessions that returned a `RESULT` to their coordinator.
+    pub sessions_completed: AtomicU64,
+    /// Sessions torn down without a `RESULT` — the coordinator vanished
+    /// mid-protocol or a typed session error unwound the worker.
+    pub sessions_failed: AtomicU64,
+    /// Session worker threads alive right now.
+    pub active_sessions: AtomicU64,
+    /// Connections alive right now.
+    pub active_conns: AtomicU64,
+}
+
+impl PartyHostStats {
+    /// Sessions currently running (started − completed − failed would
+    /// race; this reads the live gauge).
+    pub fn active(&self) -> u64 {
+        self.active_sessions.load(Ordering::Relaxed)
+    }
+}
+
 /// Everything one connection (and its session threads) needs.
 struct HostCtx {
     cfg: ModelConfig,
@@ -86,6 +121,7 @@ struct HostCtx {
     source: Option<Arc<dyn BundleSource>>,
     host: PartyHostConfig,
     fingerprint: [u8; 32],
+    stats: Arc<PartyHostStats>,
 }
 
 /// Serve party S1 on `bind`, forever (one handler thread per
@@ -114,8 +150,21 @@ pub fn party_accept_loop(
     source: Option<Arc<dyn BundleSource>>,
     host: PartyHostConfig,
 ) {
+    party_accept_loop_stats(listener, cfg, shares1, source, host, Arc::default())
+}
+
+/// [`party_accept_loop`] with an externally observable
+/// [`PartyHostStats`] handle (leak/liveness assertions in tests).
+pub fn party_accept_loop_stats(
+    listener: TcpListener,
+    cfg: ModelConfig,
+    shares1: Arc<ShareMap>,
+    source: Option<Arc<dyn BundleSource>>,
+    host: PartyHostConfig,
+    stats: Arc<PartyHostStats>,
+) {
     let fingerprint = config_fingerprint(&cfg, &shares1);
-    let ctx = Arc::new(HostCtx { cfg, shares1, source, host, fingerprint });
+    let ctx = Arc::new(HostCtx { cfg, shares1, source, host, fingerprint, stats });
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
@@ -145,13 +194,26 @@ pub fn spawn_party_host(
     source: Option<Arc<dyn BundleSource>>,
     host: PartyHostConfig,
 ) -> Result<SocketAddr> {
+    spawn_party_host_stats(cfg, shares1, source, host).map(|(addr, _)| addr)
+}
+
+/// [`spawn_party_host`] that also returns the host's
+/// [`PartyHostStats`] handle, so tests can assert session cleanup.
+pub fn spawn_party_host_stats(
+    cfg: ModelConfig,
+    shares1: Arc<ShareMap>,
+    source: Option<Arc<dyn BundleSource>>,
+    host: PartyHostConfig,
+) -> Result<(SocketAddr, Arc<PartyHostStats>)> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
+    let stats: Arc<PartyHostStats> = Arc::default();
+    let stats2 = stats.clone();
     std::thread::Builder::new()
         .name("party-accept".to_string())
-        .spawn(move || party_accept_loop(listener, cfg, shares1, source, host))
+        .spawn(move || party_accept_loop_stats(listener, cfg, shares1, source, host, stats2))
         .context("spawn party accept loop")?;
-    Ok(addr)
+    Ok((addr, stats))
 }
 
 fn send_err(stream: &mut TcpStream, why: &str) {
@@ -179,10 +241,33 @@ fn handle_party_conn(mut stream: TcpStream, ctx: Arc<HostCtx>) -> Result<()> {
     let sessions: SessionMap = Arc::new(Mutex::new(HashMap::new()));
     let stash: BundleStash = Arc::new(Mutex::new(HashMap::new()));
 
+    ctx.stats.active_conns.fetch_add(1, Ordering::Relaxed);
+    let result = party_conn_demux(&mut stream, &ctx, &writer, &sessions, &stash);
+    // The connection is gone (cleanly or not): drop every session
+    // route. In-flight session workers then see their inbound channel
+    // close, unwind with a typed PeerDisconnected, and free themselves
+    // — without this, a worker blocked on `recv` (plus its stash Arc
+    // and any matched-but-unused bundle) would leak per disconnect.
+    lock_or_recover(&sessions).clear();
+    ctx.stats.active_conns.fetch_sub(1, Ordering::Relaxed);
+    result
+}
+
+/// The per-connection frame demultiplexer; split out of
+/// [`handle_party_conn`] so session-route cleanup runs on EVERY exit
+/// path (clean BYE, peer error, read failure, protocol violation).
+fn party_conn_demux(
+    stream: &mut TcpStream,
+    ctx: &Arc<HostCtx>,
+    writer: &Arc<Mutex<TcpStream>>,
+    sessions: &SessionMap,
+    stash: &BundleStash,
+) -> Result<()> {
     loop {
-        let (ty, payload) = match read_frame(&mut stream) {
+        let (ty, payload) = match read_frame(stream) {
             Ok(f) => f,
-            Err(_) => return Ok(()), // client went away
+            Err(FrameError::Idle) => continue, // host sockets have no read timeout today
+            Err(_) => return Ok(()),           // client went away
         };
         match ty {
             pmsg::START | pmsg::START_BATCH => {
@@ -208,7 +293,7 @@ fn handle_party_conn(mut stream: TcpStream, ctx: Arc<HostCtx>) -> Result<()> {
                 // Register the inbound queue BEFORE acking, so no MSG
                 // can race the session thread's setup.
                 let (tx, rx) = channel();
-                sessions.lock().unwrap().insert(id, tx);
+                lock_or_recover(&sessions).insert(id, tx);
                 let ctx2 = ctx.clone();
                 let writer2 = writer.clone();
                 let stash2 = stash.clone();
@@ -217,20 +302,29 @@ fn handle_party_conn(mut stream: TcpStream, ctx: Arc<HostCtx>) -> Result<()> {
                     .name(format!("party-session-{id}"))
                     .spawn(move || {
                         run_party_session(&ctx2, &writer2, &stash2, id, start, rx);
-                        sessions2.lock().unwrap().remove(&id);
+                        lock_or_recover(&sessions2).remove(&id);
                     })
                     .context("spawn party session")?;
             }
             pmsg::MSG => {
                 let (id, words) = decode_msg(&payload)?;
-                if let Some(tx) = sessions.lock().unwrap().get(&id) {
+                if let Some(tx) = lock_or_recover(sessions).get(&id) {
                     let _ = tx.send(words);
                 }
             }
+            pmsg::PING => {
+                // Heartbeat probe: answer through the shared writer so
+                // the PONG cannot interleave with a session frame.
+                let mut w = lock_or_recover(writer);
+                if write_frame(&mut *w, pmsg::PONG, &[]).is_err() {
+                    return Ok(());
+                }
+            }
+            pmsg::PONG => {} // tolerated: symmetric peers may probe back
             pmsg::BYE => return Ok(()),
             t if t == msg::ERR => return Ok(()),
             other => {
-                send_err(&mut stream, "unexpected message");
+                send_err(stream, "unexpected message");
                 bail!("unexpected message type {other} after handshake");
             }
         }
@@ -250,20 +344,20 @@ fn match_bundle(
     batch: usize,
     limit: usize,
 ) -> Option<SessionBundle> {
-    if let Some(b) = stash.lock().unwrap().remove(label) {
+    if let Some(b) = lock_or_recover(stash).remove(label) {
         return Some(b);
     }
     loop {
-        if stash.lock().unwrap().len() >= limit {
+        if lock_or_recover(stash).len() >= limit {
             // A peer session may have stashed our label while we
             // popped; check once more before degrading.
-            return stash.lock().unwrap().remove(label);
+            return lock_or_recover(stash).remove(label);
         }
         let b = source.pop_batch(kind, batch)?;
         if b.session == label {
             return Some(b);
         }
-        let mut st = stash.lock().unwrap();
+        let mut st = lock_or_recover(stash);
         st.insert(b.session.clone(), b);
         if let Some(hit) = st.remove(label) {
             return Some(hit);
@@ -284,12 +378,17 @@ impl Transport for HostSessionTransport {
     fn send(&self, data: Vec<u64>) {
         // Same contract as every transport here: a send to a vanished
         // peer is dropped; the matching recv reports the loss.
-        let mut w = self.writer.lock().unwrap();
+        let mut w = lock_or_recover(&self.writer);
         let _ = write_frame(&mut *w, pmsg::MSG, &encode_msg(self.id, &data));
     }
 
     fn recv(&self) -> Vec<u64> {
-        self.rx.recv().expect("party session: coordinator disconnected mid-protocol")
+        // The connection handler clears the session route when the
+        // coordinator vanishes; the dropped sender lands here and the
+        // typed unwind frees this session's worker thread.
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| abort_session(SessionError::PeerDisconnected))
     }
 }
 
@@ -301,6 +400,39 @@ fn run_party_session(
     start: BatchSessionStart,
     rx: Receiver<Vec<u64>>,
 ) {
+    ctx.stats.sessions_started.fetch_add(1, Ordering::Relaxed);
+    ctx.stats.active_sessions.fetch_add(1, Ordering::Relaxed);
+    // The session body runs under a catch_session boundary: a
+    // coordinator that vanishes mid-protocol unwinds the worker with a
+    // typed error instead of a thread-killing panic, and cleanup (the
+    // route removal in the spawn closure, the gauges here) always runs.
+    let outcome = catch_session(|| run_party_session_body(ctx, writer, stash, id, start, rx));
+    match outcome {
+        Ok(true) => {
+            ctx.stats.sessions_completed.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(false) => {
+            ctx.stats.sessions_failed.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(e) => {
+            ctx.stats.sessions_failed.fetch_add(1, Ordering::Relaxed);
+            eprintln!("party: session {id} aborted: {e}");
+        }
+    }
+    ctx.stats.active_sessions.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// One session's protocol body; returns `true` iff the RESULT frame was
+/// delivered. Runs under [`catch_session`] — transports below may raise
+/// typed [`SessionError`] unwinds.
+fn run_party_session_body(
+    ctx: &HostCtx,
+    writer: &Arc<Mutex<TcpStream>>,
+    stash: &Mutex<HashMap<String, SessionBundle>>,
+    id: u64,
+    start: BatchSessionStart,
+    rx: Receiver<Vec<u64>>,
+) -> bool {
     let kind = if start.input_kind == INPUT_HIDDEN {
         PlanInput::Hidden
     } else {
@@ -346,9 +478,9 @@ fn run_party_session(
     }
     let use_pool = bundle.is_some();
     {
-        let mut w = writer.lock().unwrap();
+        let mut w = lock_or_recover(writer);
         if write_frame(&mut *w, pmsg::ACK, &encode_ack(id, use_pool)).is_err() {
-            return;
+            return false;
         }
     }
 
@@ -405,13 +537,62 @@ fn run_party_session(
     drop(pctx); // closes the dealer link (if any)
 
     let payload = encode_result(id, stats.offline_bytes(), stats.offline_msgs(), &out1);
-    let mut w = writer.lock().unwrap();
-    let _ = write_frame(&mut *w, pmsg::RESULT, &payload);
+    let mut w = lock_or_recover(writer);
+    write_frame(&mut *w, pmsg::RESULT, &payload).is_ok()
 }
 
 // ---------------------------------------------------------------------
 // Client side (the engine's remote peer runtime)
 // ---------------------------------------------------------------------
+
+/// Liveness policy of one party link: how often the client probes an
+/// idle link and how long silence may last before the link is declared
+/// dead. The heartbeat interval doubles as the reader's socket read
+/// timeout; the link timeout also bounds blocking writes.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkOptions {
+    /// Idle interval after which the reader sends a `PING` (and the
+    /// socket read timeout backing it).
+    pub heartbeat: Duration,
+    /// Total silence after which the link is declared dead
+    /// ([`SessionError::Timeout`]); also the socket write timeout.
+    pub link_timeout: Duration,
+}
+
+impl Default for LinkOptions {
+    fn default() -> Self {
+        LinkOptions {
+            heartbeat: Duration::from_millis(1000),
+            link_timeout: Duration::from_millis(5000),
+        }
+    }
+}
+
+/// Why a dial attempt failed — the distinction the
+/// [`crate::party::supervisor::PartyLinkSupervisor`] keys its retry
+/// decision on.
+#[derive(Debug)]
+pub enum DialError {
+    /// The host answered and said no (PSK failure, fingerprint
+    /// mismatch, protocol error). Retrying cannot help: the
+    /// configuration disagrees.
+    Rejected(String),
+    /// The host could not be reached or vanished mid-handshake (dial
+    /// refused, I/O error, cut connection). A retry may succeed once
+    /// the host is back.
+    Unreachable(String),
+}
+
+impl std::fmt::Display for DialError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DialError::Rejected(m) => write!(f, "party rejected handshake: {m}"),
+            DialError::Unreachable(m) => write!(f, "party unreachable: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for DialError {}
 
 enum SessionCtrl {
     Ack(bool),
@@ -427,24 +608,37 @@ struct PartyShared {
     writer: Mutex<TcpStream>,
     sessions: Mutex<HashMap<u64, SessionRoute>>,
     dead: AtomicBool,
+    /// Why the link died (first cause wins) — sessions that find their
+    /// channel closed re-raise this as their typed error.
+    dead_reason: Mutex<Option<SessionError>>,
     stopping: AtomicBool,
 }
 
 impl PartyShared {
     /// Dropping every route disconnects the per-session channels, which
     /// unblocks transports (`recv` fails fast) and control waiters.
-    fn mark_dead(&self) {
+    /// `reason` records WHY for the sessions that die with the link.
+    fn mark_dead(&self, reason: SessionError) {
+        lock_or_recover(&self.dead_reason).get_or_insert(reason);
         self.dead.store(true, Ordering::Relaxed);
-        self.sessions.lock().unwrap().clear();
+        lock_or_recover(&self.sessions).clear();
+    }
+
+    /// The recorded cause of death (PeerDisconnected when none was
+    /// recorded — e.g. the link is still up and a route vanished).
+    fn reason(&self) -> SessionError {
+        lock_or_recover(&self.dead_reason)
+            .clone()
+            .unwrap_or(SessionError::PeerDisconnected)
     }
 
     fn send_frame(&self, ty: u8, payload: &[u8]) -> bool {
-        let mut w = self.writer.lock().unwrap();
+        let mut w = lock_or_recover(&self.writer);
         match write_frame(&mut *w, ty, payload) {
             Ok(()) => true,
             Err(_) => {
                 drop(w);
-                self.mark_dead();
+                self.mark_dead(SessionError::PeerDisconnected);
                 false
             }
         }
@@ -474,7 +668,13 @@ impl Transport for ClientSessionTransport {
     }
 
     fn recv(&self) -> Vec<u64> {
-        self.rx.recv().expect("remote party disconnected mid-protocol")
+        // The reader clears every route when the link dies (read error,
+        // heartbeat timeout, ERR frame); the dropped sender lands here
+        // and the link's recorded cause of death becomes this session's
+        // typed error.
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| abort_session(self.shared.reason()))
     }
 }
 
@@ -499,20 +699,22 @@ impl RemoteSession {
 
     /// Block until the party returns S1's result; yields
     /// `(out1, offline_bytes, offline_msgs)`.
-    pub fn finish(self) -> Result<(Vec<u64>, u64, u64)> {
+    pub fn finish(self) -> std::result::Result<(Vec<u64>, u64, u64), SessionError> {
         match self.ctrl_rx.recv() {
             Ok(SessionCtrl::Result { offline_bytes, offline_msgs, out1 }) => {
                 Ok((out1, offline_bytes, offline_msgs))
             }
-            Ok(SessionCtrl::Ack(_)) => Err(anyhow!("party sent a second ACK")),
-            Err(_) => Err(anyhow!("party link lost before session result")),
+            Ok(SessionCtrl::Ack(_)) => {
+                Err(SessionError::ProtocolViolation("party sent a second ACK".into()))
+            }
+            Err(_) => Err(self.shared.reason()),
         }
     }
 }
 
 impl Drop for RemoteSession {
     fn drop(&mut self) {
-        self.shared.sessions.lock().unwrap().remove(&self.id);
+        lock_or_recover(&self.shared.sessions).remove(&self.id);
     }
 }
 
@@ -520,38 +722,95 @@ impl RemoteParty {
     /// Dial a `party-serve` host, run the PSK handshake, and verify the
     /// model fingerprint (computed locally from `cfg` + S1's weight
     /// shares — both sides derive shares deterministically, so equal
-    /// models agree).
+    /// models agree). Uses the default [`LinkOptions`].
     pub fn connect(
         addr: &str,
         cfg: &ModelConfig,
         shares1: &ShareMap,
         psk: Option<&str>,
     ) -> Result<Arc<RemoteParty>> {
-        let mut stream =
-            TcpStream::connect(addr).with_context(|| format!("connect to party {addr}"))?;
-        stream.set_nodelay(true)?;
-        client_auth(&mut stream, psk)?;
-        write_frame(&mut stream, pmsg::HELLO, &config_fingerprint(cfg, shares1))?;
-        match read_frame(&mut stream).map_err(|e| anyhow!("party handshake: {e}"))? {
-            (t, _) if t == pmsg::HELLO_OK => {}
-            (t, p) if t == msg::ERR => {
-                bail!("party rejected handshake: {}", String::from_utf8_lossy(&p))
+        Self::connect_with(addr, cfg, shares1, psk, LinkOptions::default())
+    }
+
+    /// [`RemoteParty::connect`] with explicit heartbeat/timeout policy.
+    pub fn connect_with(
+        addr: &str,
+        cfg: &ModelConfig,
+        shares1: &ShareMap,
+        psk: Option<&str>,
+        opts: LinkOptions,
+    ) -> Result<Arc<RemoteParty>> {
+        Self::try_connect(addr, cfg, shares1, psk, opts).map_err(|e| anyhow!("{e}"))
+    }
+
+    /// [`RemoteParty::connect_with`] preserving the dial-failure
+    /// classification ([`DialError`]) — the supervisor retries
+    /// `Unreachable` hosts and gives up on `Rejected` handshakes.
+    pub fn try_connect(
+        addr: &str,
+        cfg: &ModelConfig,
+        shares1: &ShareMap,
+        psk: Option<&str>,
+        opts: LinkOptions,
+    ) -> std::result::Result<Arc<RemoteParty>, DialError> {
+        let io = |stage: &str| {
+            let stage = stage.to_string();
+            move |e: std::io::Error| DialError::Unreachable(format!("{stage}: {e}"))
+        };
+        let mut stream = TcpStream::connect(addr)
+            .map_err(|e| DialError::Unreachable(format!("connect to party {addr}: {e}")))?;
+        stream.set_nodelay(true).map_err(io("nodelay"))?;
+        // Handshake under generous timeouts: a host that neither
+        // answers nor closes must not wedge the dial (or, later, a
+        // blocking write) forever.
+        stream
+            .set_read_timeout(Some(opts.link_timeout.max(opts.heartbeat)))
+            .map_err(io("read timeout"))?;
+        stream
+            .set_write_timeout(Some(opts.link_timeout))
+            .map_err(io("write timeout"))?;
+        client_auth(&mut stream, psk).map_err(|e| {
+            let m = e.to_string();
+            // client_auth prefixes transport-level failures with "psk
+            // handshake:"; everything else is the host (or local
+            // config) saying no.
+            if m.starts_with("psk handshake:") {
+                DialError::Unreachable(m)
+            } else {
+                DialError::Rejected(m)
             }
-            (t, _) => bail!("unexpected handshake reply type {t}"),
+        })?;
+        write_frame(&mut stream, pmsg::HELLO, &config_fingerprint(cfg, shares1))
+            .map_err(io("hello"))?;
+        match read_frame(&mut stream) {
+            Ok((t, _)) if t == pmsg::HELLO_OK => {}
+            Ok((t, p)) if t == msg::ERR => {
+                return Err(DialError::Rejected(String::from_utf8_lossy(&p).into_owned()));
+            }
+            Ok((t, _)) => {
+                return Err(DialError::Rejected(format!("unexpected handshake reply type {t}")));
+            }
+            Err(e) => return Err(DialError::Unreachable(format!("party handshake: {e}"))),
         }
 
-        let reader_stream = stream.try_clone()?;
+        let reader_stream = stream.try_clone().map_err(io("clone stream"))?;
+        // Tighten the read timeout to the heartbeat interval: every
+        // Idle tick in the reader is a probe opportunity.
+        reader_stream
+            .set_read_timeout(Some(opts.heartbeat))
+            .map_err(io("read timeout"))?;
         let shared = Arc::new(PartyShared {
             writer: Mutex::new(stream),
             sessions: Mutex::new(HashMap::new()),
             dead: AtomicBool::new(false),
+            dead_reason: Mutex::new(None),
             stopping: AtomicBool::new(false),
         });
         let sh = shared.clone();
         let reader = std::thread::Builder::new()
             .name("remote-party-reader".to_string())
-            .spawn(move || reader_loop(sh, reader_stream))
-            .context("spawn remote party reader")?;
+            .spawn(move || reader_loop(sh, reader_stream, opts))
+            .map_err(|e| DialError::Unreachable(format!("spawn reader: {e}")))?;
         Ok(Arc::new(RemoteParty {
             shared,
             next_id: AtomicU64::new(0),
@@ -559,10 +818,20 @@ impl RemoteParty {
         }))
     }
 
+    /// Whether the link has been declared dead (peer loss, heartbeat
+    /// timeout or protocol error). A dead link never recovers — the
+    /// supervisor replaces the whole `RemoteParty`.
+    pub fn is_dead(&self) -> bool {
+        self.shared.dead.load(Ordering::Relaxed)
+    }
+
     /// Open a session: ship S1's input share, wait for the ack (which
     /// settles the joint pooled/fallback decision), and return the
     /// session handle.
-    pub fn start_session(&self, start: SessionStart) -> Result<RemoteSession> {
+    pub fn start_session(
+        &self,
+        start: SessionStart,
+    ) -> std::result::Result<RemoteSession, SessionError> {
         self.start_session_frame(|id| (pmsg::START, encode_start(id, &start)))
     }
 
@@ -570,37 +839,38 @@ impl RemoteParty {
     /// ships every item's S1 input share, and the whole batch runs one
     /// round schedule on the host (the `RESULT` carries the concatenated
     /// output shares).
-    pub fn start_session_batch(&self, start: BatchSessionStart) -> Result<RemoteSession> {
+    pub fn start_session_batch(
+        &self,
+        start: BatchSessionStart,
+    ) -> std::result::Result<RemoteSession, SessionError> {
         self.start_session_frame(|id| (pmsg::START_BATCH, encode_start_batch(id, &start)))
     }
 
     fn start_session_frame(
         &self,
         encode: impl FnOnce(u64) -> (u8, Vec<u8>),
-    ) -> Result<RemoteSession> {
+    ) -> std::result::Result<RemoteSession, SessionError> {
         if self.shared.dead.load(Ordering::Relaxed) {
-            bail!("party link is down");
+            return Err(self.shared.reason());
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         let (msg_tx, msg_rx) = channel();
         let (ctrl_tx, ctrl_rx) = channel();
-        self.shared
-            .sessions
-            .lock()
-            .unwrap()
-            .insert(id, SessionRoute { msg_tx, ctrl_tx });
+        lock_or_recover(&self.shared.sessions).insert(id, SessionRoute { msg_tx, ctrl_tx });
         let (ty, payload) = encode(id);
         if !self.shared.send_frame(ty, &payload) {
-            self.shared.sessions.lock().unwrap().remove(&id);
-            bail!("party link failed while starting session");
+            lock_or_recover(&self.shared.sessions).remove(&id);
+            return Err(self.shared.reason());
         }
         let use_pool = match ctrl_rx.recv() {
             Ok(SessionCtrl::Ack(v)) => v,
             Ok(SessionCtrl::Result { .. }) => {
-                self.shared.sessions.lock().unwrap().remove(&id);
-                bail!("party answered START with RESULT");
+                lock_or_recover(&self.shared.sessions).remove(&id);
+                return Err(SessionError::ProtocolViolation(
+                    "party answered START with RESULT".into(),
+                ));
             }
-            Err(_) => bail!("party link lost before session ack"),
+            Err(_) => return Err(self.shared.reason()),
         };
         let transport = ClientSessionTransport { shared: self.shared.clone(), id, rx: msg_rx };
         Ok(RemoteSession {
@@ -617,12 +887,12 @@ impl RemoteParty {
     pub fn stop(&self) {
         self.shared.stopping.store(true, Ordering::Relaxed);
         {
-            let w = self.shared.writer.lock().unwrap();
+            let w = lock_or_recover(&self.shared.writer);
             let _ = write_frame(&mut &*w, pmsg::BYE, &[]);
             let _ = w.shutdown(Shutdown::Both);
         }
-        self.shared.mark_dead();
-        if let Some(h) = self.reader.lock().unwrap().take() {
+        self.shared.mark_dead(SessionError::PeerDisconnected);
+        if let Some(h) = lock_or_recover(&self.reader).take() {
             let _ = h.join();
         }
     }
@@ -634,42 +904,53 @@ impl Drop for RemoteParty {
     }
 }
 
-fn reader_loop(shared: Arc<PartyShared>, mut stream: TcpStream) {
+fn reader_loop(shared: Arc<PartyShared>, mut stream: TcpStream, opts: LinkOptions) {
+    // The socket read timeout equals the heartbeat interval, so every
+    // `FrameError::Idle` below is one heartbeat tick: probe with PING,
+    // and declare the link dead once silence outlasts the link timeout.
+    let mut last_rx = Instant::now();
     loop {
         if shared.stopping.load(Ordering::Relaxed) {
             return;
         }
         let frame = read_frame(&mut stream);
+        if frame.is_ok() {
+            last_rx = Instant::now();
+        }
         match frame {
             Ok((t, payload)) if t == pmsg::MSG => match decode_msg(&payload) {
                 Ok((id, words)) => {
-                    let sessions = shared.sessions.lock().unwrap();
+                    let sessions = lock_or_recover(&shared.sessions);
                     if let Some(r) = sessions.get(&id) {
                         let _ = r.msg_tx.send(words);
                     }
                 }
                 Err(e) => {
                     eprintln!("remote party: undecodable MSG ({e}); closing");
-                    shared.mark_dead();
+                    shared.mark_dead(SessionError::ProtocolViolation(format!(
+                        "undecodable MSG: {e}"
+                    )));
                     return;
                 }
             },
             Ok((t, payload)) if t == pmsg::ACK => match decode_ack(&payload) {
                 Ok((id, use_pool)) => {
-                    let sessions = shared.sessions.lock().unwrap();
+                    let sessions = lock_or_recover(&shared.sessions);
                     if let Some(r) = sessions.get(&id) {
                         let _ = r.ctrl_tx.send(SessionCtrl::Ack(use_pool));
                     }
                 }
                 Err(e) => {
                     eprintln!("remote party: undecodable ACK ({e}); closing");
-                    shared.mark_dead();
+                    shared.mark_dead(SessionError::ProtocolViolation(format!(
+                        "undecodable ACK: {e}"
+                    )));
                     return;
                 }
             },
             Ok((t, payload)) if t == pmsg::RESULT => match decode_result(&payload) {
                 Ok((id, offline_bytes, offline_msgs, out1)) => {
-                    let sessions = shared.sessions.lock().unwrap();
+                    let sessions = lock_or_recover(&shared.sessions);
                     if let Some(r) = sessions.get(&id) {
                         let _ = r.ctrl_tx.send(SessionCtrl::Result {
                             offline_bytes,
@@ -680,26 +961,44 @@ fn reader_loop(shared: Arc<PartyShared>, mut stream: TcpStream) {
                 }
                 Err(e) => {
                     eprintln!("remote party: undecodable RESULT ({e}); closing");
-                    shared.mark_dead();
+                    shared.mark_dead(SessionError::ProtocolViolation(format!(
+                        "undecodable RESULT: {e}"
+                    )));
                     return;
                 }
             },
+            Ok((t, _)) if t == pmsg::PONG => {} // liveness clock already refreshed
             Ok((t, payload)) if t == msg::ERR => {
-                eprintln!(
-                    "remote party error: {}; closing",
-                    String::from_utf8_lossy(&payload)
-                );
-                shared.mark_dead();
+                let m = String::from_utf8_lossy(&payload).into_owned();
+                eprintln!("remote party error: {m}; closing");
+                shared.mark_dead(SessionError::ProtocolViolation(m));
                 return;
             }
             Ok((t, _)) => {
                 eprintln!("remote party: unexpected frame type {t}; closing");
-                shared.mark_dead();
+                shared.mark_dead(SessionError::ProtocolViolation(format!(
+                    "unexpected frame type {t}"
+                )));
                 return;
+            }
+            Err(FrameError::Idle) => {
+                if last_rx.elapsed() >= opts.link_timeout {
+                    eprintln!(
+                        "remote party: link silent for {:?} (timeout {:?}); closing",
+                        last_rx.elapsed(),
+                        opts.link_timeout
+                    );
+                    shared.mark_dead(SessionError::Timeout);
+                    return;
+                }
+                // Probe; a failed write marks the link dead itself.
+                if !shared.send_frame(pmsg::PING, &[]) {
+                    return;
+                }
             }
             Err(_) => {
                 // Disconnect (or local shutdown during stop()).
-                shared.mark_dead();
+                shared.mark_dead(SessionError::PeerDisconnected);
                 return;
             }
         }

@@ -1,0 +1,216 @@
+//! Coordinator-side supervision of the party link: detect a dead
+//! [`RemoteParty`], re-dial it with capped exponential backoff, and
+//! hand workers a live link — or a typed [`SessionError`] when the
+//! host is gone for good.
+//!
+//! A [`RemoteParty`] never recovers once its reader declares the link
+//! dead (peer loss, heartbeat timeout, protocol violation): recovery
+//! means replacing the whole client, re-running the PSK handshake and
+//! the config-fingerprint check against the (possibly restarted) host.
+//! The supervisor owns that replacement. Safety property: a replaced
+//! link carries **no session state** — every retried inference re-enters
+//! the engine's share path, which mints a fresh session label, fresh
+//! input shares and fresh pad material. Bytes masked with old pads are
+//! never re-sent (see `ARCHITECTURE.md` §Failure model & recovery).
+
+use crate::core::rng::seed_from_label;
+use crate::core::sync::lock_or_recover;
+use crate::net::error::SessionError;
+use crate::nn::config::ModelConfig;
+use crate::nn::weights::ShareMap;
+use crate::party::runtime::{DialError, LinkOptions, RemoteParty};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How hard the supervisor tries to bring a dead link back before a
+/// session fails with [`SessionError::PeerDisconnected`].
+#[derive(Clone, Copy, Debug)]
+pub struct RedialPolicy {
+    /// Dial attempts per recovery (the first happens immediately).
+    pub attempts: u32,
+    /// Backoff before the second attempt; doubles each attempt.
+    pub backoff_base: Duration,
+    /// Upper bound on the per-attempt backoff.
+    pub backoff_cap: Duration,
+}
+
+impl Default for RedialPolicy {
+    fn default() -> Self {
+        RedialPolicy {
+            attempts: 5,
+            backoff_base: Duration::from_millis(100),
+            backoff_cap: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Supervises one coordinator→party link: all secure workers share one
+/// supervisor, and every session asks it for the current live
+/// [`RemoteParty`] instead of holding its own handle.
+pub struct PartyLinkSupervisor {
+    addr: String,
+    cfg: ModelConfig,
+    shares1: Arc<ShareMap>,
+    psk: Option<String>,
+    opts: LinkOptions,
+    policy: RedialPolicy,
+    /// The current link; `None` only after a failed recovery (workers
+    /// that arrive next trigger a fresh dial round).
+    current: Mutex<Option<Arc<RemoteParty>>>,
+    reconnects: AtomicU64,
+    link_up: AtomicBool,
+    stopping: AtomicBool,
+    /// LCG state for backoff jitter (decorrelates coordinators that
+    /// lost the same host at the same instant).
+    jitter: AtomicU64,
+}
+
+impl PartyLinkSupervisor {
+    /// Dial the party once (the initial connection must succeed — a
+    /// coordinator that cannot reach its peer at startup is
+    /// misconfigured) and wrap the link in a supervisor.
+    pub fn connect(
+        addr: &str,
+        cfg: &ModelConfig,
+        shares1: Arc<ShareMap>,
+        psk: Option<&str>,
+        opts: LinkOptions,
+        policy: RedialPolicy,
+    ) -> Result<Arc<Self>> {
+        let rp = RemoteParty::try_connect(addr, cfg, &shares1, psk, opts)
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok(Arc::new(PartyLinkSupervisor {
+            addr: addr.to_string(),
+            cfg: cfg.clone(),
+            shares1,
+            psk: psk.map(String::from),
+            opts,
+            policy,
+            current: Mutex::new(Some(rp)),
+            reconnects: AtomicU64::new(0),
+            link_up: AtomicBool::new(true),
+            stopping: AtomicBool::new(false),
+            jitter: AtomicU64::new(seed_from_label(addr) | 1),
+        }))
+    }
+
+    /// The current live link, re-dialing a dead one first. Re-dials are
+    /// serialized under the slot lock: concurrent workers that lost the
+    /// same link block here and all receive the single replacement (or
+    /// its failure) instead of racing N dials against a restarting
+    /// host.
+    pub fn party(&self) -> std::result::Result<Arc<RemoteParty>, SessionError> {
+        if self.stopping.load(Ordering::Relaxed) {
+            return Err(SessionError::PeerDisconnected);
+        }
+        let mut slot = lock_or_recover(&self.current);
+        if let Some(rp) = slot.as_ref() {
+            if !rp.is_dead() {
+                return Ok(rp.clone());
+            }
+        }
+        // The link is dead (or a previous recovery failed): replace it.
+        if let Some(old) = slot.take() {
+            self.link_up.store(false, Ordering::Relaxed);
+            old.stop(); // join the reader, release the socket
+        }
+        for attempt in 0..self.policy.attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.backoff(attempt));
+            }
+            if self.stopping.load(Ordering::Relaxed) {
+                return Err(SessionError::PeerDisconnected);
+            }
+            match RemoteParty::try_connect(
+                &self.addr,
+                &self.cfg,
+                &self.shares1,
+                self.psk.as_deref(),
+                self.opts,
+            ) {
+                Ok(rp) => {
+                    // The handshake re-verified the PSK and the model
+                    // fingerprint: the restarted host runs the same
+                    // model, so retried sessions stay correct.
+                    *slot = Some(rp.clone());
+                    self.reconnects.fetch_add(1, Ordering::Relaxed);
+                    self.link_up.store(true, Ordering::Relaxed);
+                    eprintln!(
+                        "party link: reconnected to {} (attempt {})",
+                        self.addr,
+                        attempt + 1
+                    );
+                    return Ok(rp);
+                }
+                Err(DialError::Rejected(m)) => {
+                    // The host answered and said no — retrying cannot
+                    // help (config/PSK disagreement). Not retryable.
+                    eprintln!("party link: re-dial rejected by {}: {m}", self.addr);
+                    return Err(SessionError::ProtocolViolation(format!(
+                        "party re-dial rejected: {m}"
+                    )));
+                }
+                Err(DialError::Unreachable(m)) => {
+                    eprintln!(
+                        "party link: {} unreachable (attempt {}/{}): {m}",
+                        self.addr,
+                        attempt + 1,
+                        self.policy.attempts
+                    );
+                }
+            }
+        }
+        Err(SessionError::PeerDisconnected)
+    }
+
+    /// Exponential backoff before attempt `attempt` (1-based beyond the
+    /// immediate first try), capped, with up to +50% multiplicative
+    /// jitter.
+    fn backoff(&self, attempt: u32) -> Duration {
+        let exp = self
+            .policy
+            .backoff_base
+            .saturating_mul(1u32 << (attempt - 1).min(16))
+            .min(self.policy.backoff_cap);
+        // Linear congruential step (Knuth MMIX constants) — statistical
+        // decorrelation only, no crypto claim.
+        let prev = self.jitter.load(Ordering::Relaxed);
+        let next = prev
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.jitter.store(next, Ordering::Relaxed);
+        let frac = (next >> 33) as f64 / (1u64 << 31) as f64; // [0, 1)
+        exp.mul_f64(1.0 + 0.5 * frac)
+    }
+
+    /// Successful re-dials since startup (the initial connect is not
+    /// counted).
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Whether the link was up the last time anyone looked: `true`
+    /// after a successful (re)connect, `false` from the moment a dead
+    /// link is detected until its replacement handshake completes.
+    pub fn link_up(&self) -> bool {
+        self.link_up.load(Ordering::Relaxed)
+    }
+
+    /// Stop supervising: close the current link and refuse further
+    /// re-dials. Idempotent.
+    pub fn stop(&self) {
+        self.stopping.store(true, Ordering::Relaxed);
+        if let Some(rp) = lock_or_recover(&self.current).take() {
+            rp.stop();
+        }
+        self.link_up.store(false, Ordering::Relaxed);
+    }
+}
+
+impl Drop for PartyLinkSupervisor {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}

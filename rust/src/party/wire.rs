@@ -4,7 +4,7 @@
 //! Frames reuse the versioned/checksummed layout of
 //! [`crate::offline::wire`] (magic `SBW1`, FNV-1a payload checksum) so
 //! one wire toolkit serves every TCP surface in the codebase; the
-//! party protocol claims its own message-type range (16–23) so a
+//! party protocol claims its own message-type range (16–25) so a
 //! coordinator that dials a dealer port (or vice versa) fails on the
 //! first frame instead of desyncing.
 //!
@@ -66,6 +66,16 @@ pub mod pmsg {
     /// batching). Answered by the same `ACK`, and the `RESULT` carries
     /// the concatenated `B × num_labels` output shares.
     pub const START_BATCH: u8 = 23;
+    /// Client → server: liveness probe (empty payload). Sent by the
+    /// client's reader when the link has been idle for a heartbeat
+    /// interval; answered by [`PONG`]. A link that stays silent past
+    /// the configured `--link-timeout-ms` is declared dead and handed
+    /// to the supervisor for re-dial.
+    pub const PING: u8 = 24;
+    /// Server → client: heartbeat reply (empty payload). Any frame
+    /// refreshes the client's liveness clock; `PONG` exists so an
+    /// otherwise-idle link still proves the host is reading.
+    pub const PONG: u8 = 25;
 }
 
 /// Session offline mode tag: full dealer protocol (S1 runs a local T).

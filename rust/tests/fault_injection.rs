@@ -1,0 +1,399 @@
+//! Fault-injection harness: the serving stack must be fail-*recover*,
+//! not fail-stop. Every scenario routes the coordinator↔party link
+//! through a [`ChaosProxy`] and kills it at a different point in the
+//! protocol — mid-round, mid-handshake, between batches — then asserts
+//! the recovery contract:
+//!
+//! * every submitted request gets either a correct (finite) logit
+//!   vector or a clean typed [`SessionError`] reply — none are lost,
+//!   no worker thread dies;
+//! * the supervisor's reconnect counter and the batcher's retry
+//!   counter tick, and `link_up` settles back to `true`;
+//! * a retried session is cryptographically independent of the dead
+//!   one: fresh session label, fresh input shares, fresh pad bundle
+//!   (`retry_mints_fresh_label_and_consumes_fresh_bundle` pins it);
+//! * the party host reaps every churned connection (no session or
+//!   connection leak across 100 dropped dials).
+//!
+//! Scenario tests iterate fixed seeds [1, 2, 3] so CI exercises three
+//! sever timings deterministically.
+
+use secformer::coordinator::batcher::{
+    BatcherConfig, Coordinator, EngineKind, InferenceReply, ServingConfig,
+};
+use secformer::core::rng::Xoshiro;
+use secformer::engine::{OfflineMode, PeerRuntime, SecureModel};
+use secformer::net::fault::ChaosProxy;
+use secformer::nn::config::{Framework, ModelConfig};
+use secformer::nn::model::ModelInput;
+use secformer::nn::weights::{random_weights, share_weights, ShareMap, WeightMap};
+use secformer::offline::planner::PlanInput;
+use secformer::offline::pool::{PoolConfig, PoolSnapshot, SessionBundle};
+use secformer::offline::source::{BundleSource, PoolSet};
+use secformer::party::runtime::{
+    spawn_party_host, spawn_party_host_stats, LinkOptions, PartyHostConfig, RemoteParty,
+};
+use secformer::party::supervisor::{PartyLinkSupervisor, RedialPolicy};
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+fn tiny() -> ModelConfig {
+    ModelConfig::tiny(8, Framework::SecFormer)
+}
+
+/// The engine's fixed sharing seed: equal weights ⇒ equal share maps ⇒
+/// a matching HELLO fingerprint between coordinator and host.
+fn shares1(w: &WeightMap) -> ShareMap {
+    let (_, s1) = share_weights(w, &mut Xoshiro::seed_from(0x5EC0));
+    s1
+}
+
+fn token_input(cfg: &ModelConfig, seed: u64) -> ModelInput {
+    ModelInput::Tokens(
+        (0..cfg.seq as u32).map(|i| (i + seed as u32) % cfg.vocab as u32).collect(),
+    )
+}
+
+/// Tight link policy so fault tests detect death in tens of
+/// milliseconds instead of the production multi-second defaults.
+fn fast_link() -> LinkOptions {
+    LinkOptions {
+        heartbeat: Duration::from_millis(100),
+        link_timeout: Duration::from_millis(1000),
+    }
+}
+
+fn spawn_host(cfg: &ModelConfig, w: &WeightMap) -> std::net::SocketAddr {
+    spawn_party_host(cfg.clone(), Arc::new(shares1(w)), None, PartyHostConfig::default())
+        .expect("party host")
+}
+
+/// A coordinator whose party link runs through the chaos proxy, with a
+/// generous retry budget and the fast link policy.
+fn chaos_coordinator(cfg: &ModelConfig, w: &WeightMap, proxy: &ChaosProxy) -> Coordinator {
+    Coordinator::start_with(
+        cfg.clone(),
+        w.clone(),
+        None,
+        BatcherConfig::default(),
+        ServingConfig {
+            peer_addr: Some(proxy.addr().to_string()),
+            session_retries: 4,
+            party_heartbeat_ms: 100,
+            link_timeout_ms: 1000,
+            ..ServingConfig::default()
+        },
+    )
+    .expect("coordinator over chaos proxy")
+}
+
+fn assert_clean_reply(r: &InferenceReply, nl: usize, what: &str) {
+    match &r.error {
+        None => {
+            assert_eq!(r.logits.len(), nl, "{what}: logit count for request {}", r.id);
+            for (i, v) in r.logits.iter().enumerate() {
+                assert!(v.is_finite(), "{what}: logit {i} of request {} not finite", r.id);
+            }
+        }
+        Some(_) => {
+            // A typed failure is a legal outcome — but it must be a
+            // clean one: no half-results.
+            assert!(r.logits.is_empty(), "{what}: error reply carries logits");
+        }
+    }
+}
+
+/// Sever the link while a stream of requests is in flight: every
+/// request is answered (retried to success or a typed error), the
+/// recovery counters tick, and the workers survive to serve more.
+#[test]
+fn mid_round_sever_loses_no_requests() {
+    for seed in [1u64, 2, 3] {
+        let cfg = tiny();
+        let w = random_weights(&cfg, 13);
+        let host_addr = spawn_host(&cfg, &w);
+        let proxy = ChaosProxy::start(&host_addr.to_string()).expect("proxy");
+        let coord = chaos_coordinator(&cfg, &w, &proxy);
+
+        let (tx, rx) = std::sync::mpsc::channel();
+        let total = 10usize;
+        // Seed-dependent sever point: early, mid and late in the stream.
+        let sever_at = 1 + (seed as usize % 3) * 3;
+        let mut ids = Vec::with_capacity(total);
+        for i in 0..total {
+            ids.push(coord.submit(token_input(&cfg, seed + i as u64), EngineKind::Secure, tx.clone()));
+            if i == sever_at {
+                proxy.sever_all();
+            }
+        }
+        drop(tx);
+
+        let mut replies = Vec::with_capacity(total);
+        for _ in 0..total {
+            let r = match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(r) => r,
+                Err(_) => panic!("seed {seed}: request lost (no reply within 60s)"),
+            };
+            assert_clean_reply(&r, cfg.num_labels, "mid-round sever");
+            replies.push(r);
+        }
+        let mut got: Vec<u64> = replies.iter().map(|r| r.id).collect();
+        got.sort_unstable();
+        ids.sort_unstable();
+        assert_eq!(got, ids, "seed {seed}: every submitted id answered exactly once");
+
+        let s = coord.secure_summary();
+        assert!(
+            s.sessions_retried >= 1 || s.party_reconnects >= 1,
+            "seed {seed}: no recovery observed (retried={} reconnects={})",
+            s.sessions_retried,
+            s.party_reconnects
+        );
+
+        // Workers are still alive: a post-fault request completes cleanly.
+        let r = coord.infer_blocking(token_input(&cfg, seed + 99), EngineKind::Secure);
+        assert!(r.error.is_none(), "seed {seed}: post-fault request failed: {:?}", r.error);
+        assert_eq!(r.logits.len(), cfg.num_labels);
+        let s = coord.secure_summary();
+        assert!(s.link_up, "seed {seed}: link did not settle back up");
+        coord.shutdown();
+    }
+}
+
+/// Kill the link, then sabotage the *re-dial* mid-handshake: the
+/// supervisor's backoff loop must absorb the half-dead dial and land
+/// the one after it.
+#[test]
+fn mid_handshake_cut_recovers() {
+    for seed in [1u64, 2, 3] {
+        let cfg = tiny();
+        let w = random_weights(&cfg, 13);
+        let host_addr = spawn_host(&cfg, &w);
+        let proxy = ChaosProxy::start(&host_addr.to_string()).expect("proxy");
+        let coord = chaos_coordinator(&cfg, &w, &proxy);
+
+        let r = coord.infer_blocking(token_input(&cfg, seed), EngineKind::Secure);
+        assert!(r.error.is_none(), "seed {seed}: baseline request failed");
+
+        // The next accepted connection (the re-dial) dies a few bytes
+        // into the HELLO exchange (the fingerprint alone is 32 bytes).
+        proxy.cut_next_after(8 + seed);
+        proxy.sever_all();
+
+        let r = coord.infer_blocking(token_input(&cfg, seed + 1), EngineKind::Secure);
+        assert!(r.error.is_none(), "seed {seed}: request after handshake cut failed: {:?}", r.error);
+        assert_eq!(r.logits.len(), cfg.num_labels);
+
+        let s = coord.secure_summary();
+        assert!(s.party_reconnects >= 1, "seed {seed}: reconnect counter never ticked");
+        assert!(s.link_up, "seed {seed}: link down after recovery");
+        coord.shutdown();
+    }
+}
+
+/// The party host "restarts" between batches: a fresh host comes up on
+/// a new address, the proxy is repointed, the old connections die.
+/// Subsequent requests must ride the re-dial onto the new host.
+#[test]
+fn party_restart_between_batches() {
+    for seed in [1u64, 2, 3] {
+        let cfg = tiny();
+        let w = random_weights(&cfg, 13);
+        let first = spawn_host(&cfg, &w);
+        let proxy = ChaosProxy::start(&first.to_string()).expect("proxy");
+        let coord = chaos_coordinator(&cfg, &w, &proxy);
+
+        let r = coord.infer_blocking(token_input(&cfg, seed), EngineKind::Secure);
+        assert!(r.error.is_none(), "seed {seed}: pre-restart request failed");
+
+        // Same weights + config ⇒ same fingerprint: the replacement
+        // host accepts the supervisor's re-handshake.
+        let second = spawn_host(&cfg, &w);
+        proxy.set_upstream(&second.to_string());
+        proxy.sever_all();
+
+        for i in 0..3u64 {
+            let r = coord.infer_blocking(token_input(&cfg, seed + 10 + i), EngineKind::Secure);
+            assert!(
+                r.error.is_none(),
+                "seed {seed}: post-restart request {i} failed: {:?}",
+                r.error
+            );
+            assert_eq!(r.logits.len(), cfg.num_labels);
+        }
+        let s = coord.secure_summary();
+        assert!(s.party_reconnects >= 1, "seed {seed}: restart produced no reconnect");
+        assert!(s.link_up, "seed {seed}: link down after restart recovery");
+        coord.shutdown();
+    }
+}
+
+/// 100 connections that dial the host and vanish — some silently, some
+/// after a burst of garbage — must all be reaped: no leaked connection
+/// or session threads, and the host still serves a real session after.
+#[test]
+fn host_cleans_up_churned_connections() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 13);
+    let (addr, stats) = spawn_party_host_stats(
+        cfg.clone(),
+        Arc::new(shares1(&w)),
+        None,
+        PartyHostConfig::default(),
+    )
+    .expect("party host");
+
+    for i in 0..100 {
+        let mut s = TcpStream::connect(addr).expect("churn dial");
+        if i % 3 == 0 {
+            // Not a HELLO frame: the handshake must reject and close.
+            let _ = s.write_all(&[0xde, 0xad, 0xbe, 0xef]);
+        }
+        drop(s);
+    }
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let conns = stats.active_conns.load(Ordering::Relaxed);
+        let sessions = stats.active();
+        if conns == 0 && sessions == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "leak after churn: {conns} connections, {sessions} sessions still active"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // The accept loop survived the abuse: a real handshake + session
+    // still completes.
+    let rp = RemoteParty::connect(&addr.to_string(), &cfg, &shares1(&w), None)
+        .expect("post-churn handshake");
+    let mut model = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+    model.set_peer_runtime(PeerRuntime::Remote(rp));
+    let out = model.infer(&token_input(&cfg, 7));
+    assert_eq!(out.logits.len(), cfg.num_labels);
+    assert!(out.logits.iter().all(|v| v.is_finite()));
+}
+
+/// [`BundleSource`] wrapper that records every bundle handed to the
+/// engine, so the test can pin *which* pad material each session
+/// attempt consumed.
+struct RecordingSource {
+    inner: Arc<PoolSet>,
+    popped: Mutex<Vec<(u64, String)>>,
+}
+
+impl RecordingSource {
+    fn record(&self, b: Option<SessionBundle>) -> Option<SessionBundle> {
+        if let Some(b) = &b {
+            self.popped.lock().unwrap().push((b.seq, b.session.clone()));
+        }
+        b
+    }
+}
+
+impl BundleSource for RecordingSource {
+    fn pop(&self, kind: PlanInput) -> Option<SessionBundle> {
+        self.record(BundleSource::pop(&*self.inner, kind))
+    }
+    fn pop_batch(&self, kind: PlanInput, batch: usize) -> Option<SessionBundle> {
+        self.record(BundleSource::pop_batch(&*self.inner, kind, batch))
+    }
+    fn try_pop(&self, kind: PlanInput) -> Option<SessionBundle> {
+        BundleSource::try_pop(&*self.inner, kind)
+    }
+    fn note_fallback(&self) {
+        BundleSource::note_fallback(&*self.inner)
+    }
+    fn snapshot(&self) -> PoolSnapshot {
+        BundleSource::snapshot(&*self.inner)
+    }
+    fn stop(&self) {
+        BundleSource::stop(&*self.inner)
+    }
+}
+
+/// The retry-safety invariant, pinned at the engine level: a session
+/// that dies and is retried consumes a NEW session label and a NEW pad
+/// bundle — nothing masked with the dead session's one-time-pad
+/// material is ever re-sent. Bundle `seq` mirrors the engine's session
+/// counter and bundle `session` is `{prefix}-{seq}`, so recording the
+/// pops pins both the label freshness and the pad freshness at once.
+#[test]
+fn retry_mints_fresh_label_and_consumes_fresh_bundle() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 13);
+    let host_addr = spawn_host(&cfg, &w);
+    let proxy = ChaosProxy::start(&host_addr.to_string()).expect("proxy");
+
+    let rec = Arc::new(RecordingSource {
+        inner: PoolSet::start(
+            &cfg,
+            "fresh",
+            PoolConfig { target_depth: 4, producers: 1, ..PoolConfig::default() },
+            false,
+        ),
+        popped: Mutex::new(Vec::new()),
+    });
+    let mut model = SecureModel::new_pooled(cfg.clone(), &w, rec.clone());
+    model.set_session_label("fresh");
+
+    let sup = PartyLinkSupervisor::connect(
+        &proxy.addr().to_string(),
+        &cfg,
+        Arc::new(shares1(&w)),
+        None,
+        fast_link(),
+        RedialPolicy::default(),
+    )
+    .expect("supervised link");
+    model.set_peer_runtime(PeerRuntime::Supervised(sup.clone()));
+
+    let input = token_input(&cfg, 5);
+    let healthy = model.try_infer(&input).expect("healthy session");
+    assert_eq!(healthy.logits.len(), cfg.num_labels);
+
+    // Provoke a failed attempt. If the heartbeat reader wins the race
+    // and the supervisor re-dials before our write (transparent
+    // recovery, no session error), sever again — bounded attempts.
+    let mut provoked = false;
+    for _ in 0..10 {
+        proxy.sever_all();
+        match model.try_infer(&input) {
+            Err(e) => {
+                assert!(e.is_retryable(), "expected a retryable link error, got: {e}");
+                provoked = true;
+                break;
+            }
+            Ok(_) => continue,
+        }
+    }
+    assert!(provoked, "could not provoke a session failure through the proxy");
+
+    // The retry: the supervisor re-dials and the session must succeed.
+    let retried = model.try_infer(&input).expect("retried session");
+    assert_eq!(retried.logits.len(), cfg.num_labels);
+    assert!(retried.logits.iter().all(|v| v.is_finite()));
+    assert!(sup.reconnects() >= 1, "retry succeeded without a re-dial");
+
+    // Every attempt — healthy, severed, failed and retried alike —
+    // consumed its own bundle: strictly increasing seq (the session
+    // counter) and a never-repeated session label.
+    let popped = rec.popped.lock().unwrap().clone();
+    assert!(popped.len() >= 3, "expected ≥3 pops (healthy, failed, retried): {popped:?}");
+    for (i, (seq, session)) in popped.iter().enumerate() {
+        let expect = (i + 1) as u64;
+        assert_eq!(*seq, expect, "bundle seq must advance every attempt: {popped:?}");
+        assert_eq!(
+            session,
+            &format!("fresh-{expect}"),
+            "bundle label must match the freshly minted session label: {popped:?}"
+        );
+    }
+    sup.stop();
+}
