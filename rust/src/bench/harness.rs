@@ -1122,6 +1122,129 @@ pub fn two_party_bench(seq: usize, iters: usize) -> Vec<TwoPartyMeasurement> {
     vec![inproc, tcp]
 }
 
+// =====================================================================
+// Observability — tracing overhead on the serving path
+// =====================================================================
+
+/// One tracing-overhead measurement: the same sequential secure request
+/// load with the session tracer off or on.
+#[derive(Clone, Debug)]
+pub struct ObservabilityMeasurement {
+    /// Run label (`trace_off` / `trace_on`).
+    pub label: String,
+    /// Timed requests (one untimed warm-up precedes them).
+    pub requests: usize,
+    /// Wall-clock for the whole timed loop.
+    pub wall_s: f64,
+    /// Median per-request latency.
+    pub p50_latency_s: f64,
+    /// 95th-percentile per-request latency.
+    pub p95_latency_s: f64,
+    /// Spans left in the coordinator's ring after the run (0 when off).
+    pub spans_recorded: usize,
+}
+
+fn run_observability_load(
+    label: &str,
+    cfg: &ModelConfig,
+    weights: &crate::nn::weights::WeightMap,
+    trace: bool,
+    requests: usize,
+) -> ObservabilityMeasurement {
+    use crate::coordinator::{BatcherConfig, Coordinator, EngineKind, ServingConfig};
+    let serving = ServingConfig { trace, ..ServingConfig::default() };
+    let coord = Coordinator::start_with(
+        cfg.clone(),
+        weights.clone(),
+        None,
+        BatcherConfig::default(),
+        serving,
+    )
+    .expect("coordinator");
+    // Warm-up outside the clock: worker spin-up and allocator warm-up
+    // would otherwise dominate the p50 delta this bench exists to pin.
+    let warm: Vec<u32> = (0..cfg.seq as u32).map(|i| i % cfg.vocab as u32).collect();
+    let r = coord.infer_blocking(ModelInput::Tokens(warm), EngineKind::Secure);
+    assert!(r.error.is_none(), "warm-up failed: {:?}", r.error);
+    let mut lat = Vec::with_capacity(requests);
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
+        let toks: Vec<u32> =
+            (0..cfg.seq as u32).map(|j| (j + i as u32) % cfg.vocab as u32).collect();
+        let t = std::time::Instant::now();
+        let r = coord.infer_blocking(ModelInput::Tokens(toks), EngineKind::Secure);
+        lat.push(t.elapsed().as_secs_f64());
+        assert_eq!(r.logits.len(), 2);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let spans_recorded = coord.tracer().len();
+    coord.shutdown();
+    lat.sort_by(f64::total_cmp);
+    let q = |p: f64| lat[((lat.len() - 1) as f64 * p).round() as usize];
+    ObservabilityMeasurement {
+        label: label.to_string(),
+        requests,
+        wall_s,
+        p50_latency_s: q(0.50),
+        p95_latency_s: q(0.95),
+        spans_recorded,
+    }
+}
+
+/// Tracing overhead on the secure serving path: the same sequential
+/// request load with the tracer disabled vs enabled (span ring, phase
+/// attribution and JSON rendering all live on the enabled run). The
+/// protocol transcript is identical either way — the bench pins what
+/// observability costs at p50 and writes `BENCH_observability.json`.
+pub fn observability_bench(
+    seq: usize,
+    requests: usize,
+) -> (ObservabilityMeasurement, ObservabilityMeasurement) {
+    let cfg = ModelConfig::tiny(seq, Framework::SecFormer);
+    let weights = random_weights(&cfg, 0x0B5E);
+    let requests = requests.max(1);
+    println!("\n=== Observability: tracing off vs on, same sequential load ===");
+    println!("  seq {seq}, {requests} secure requests per run (one warm-up each)");
+
+    let off = run_observability_load("trace_off", &cfg, &weights, false, requests);
+    let on = run_observability_load("trace_on", &cfg, &weights, true, requests);
+    assert_eq!(off.spans_recorded, 0, "disabled tracer must record nothing");
+    assert!(on.spans_recorded > 0, "enabled tracer must record spans");
+
+    for m in [&off, &on] {
+        println!(
+            "  {:<10} wall {:>9}  p50 {:>9}  p95 {:>9}  spans {}",
+            m.label,
+            fmt_s(m.wall_s),
+            fmt_s(m.p50_latency_s),
+            fmt_s(m.p95_latency_s),
+            m.spans_recorded,
+        );
+    }
+    let overhead = on.p50_latency_s / off.p50_latency_s.max(1e-12) - 1.0;
+    println!(
+        "  tracing p50 overhead: {:+.2}%  (acceptance bound: ≤ 3%)",
+        overhead * 100.0
+    );
+
+    let json_of = |m: &ObservabilityMeasurement| {
+        format!(
+            "    {{\"label\": \"{}\", \"requests\": {}, \"wall_seconds\": {:.6}, \
+             \"p50_latency_s\": {:.6}, \"p95_latency_s\": {:.6}, \"spans_recorded\": {}}}",
+            m.label, m.requests, m.wall_s, m.p50_latency_s, m.p95_latency_s, m.spans_recorded,
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"observability_overhead\",\n  \"seq\": {seq},\n  \
+         \"requests\": {requests},\n  \"p50_overhead_frac\": {overhead:.6},\n  \"runs\": [\n{},\n{}\n  ]\n}}\n",
+        json_of(&off),
+        json_of(&on),
+    );
+    std::fs::write("BENCH_observability.json", &json).expect("write BENCH_observability.json");
+    println!("  wrote BENCH_observability.json");
+    (off, on)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -14,8 +14,9 @@
 //! so the online phase never waits on the dealer. A dedicated worker owns
 //! the plaintext PJRT engine.
 
-use crate::coordinator::metrics::{Metrics, MetricsSummary};
+use crate::coordinator::metrics::{Metrics, MetricsSummary, PHASES};
 use crate::core::rng::Xoshiro;
+use crate::obs::{MetricsRegistry, Tracer, ROLE_COORDINATOR};
 use crate::core::sync::{lock_or_recover, wait_or_recover, wait_timeout_or_recover};
 use crate::engine::{OfflineMode, PeerRuntime, SecureModel};
 use crate::net::error::SessionError;
@@ -177,6 +178,14 @@ pub struct ServingConfig {
     /// randomness for different inputs — one-time-pad reuse. Deployments
     /// must leave this unset (the default namespace is per-process).
     pub session_namespace: Option<String>,
+    /// Record session/phase spans into the coordinator's bounded trace
+    /// ring (on by default; `serve --no-trace` turns it off). Recording
+    /// is observation-only — logits, rounds and bytes are identical
+    /// either way.
+    pub trace: bool,
+    /// Export every recorded span to `{dir}/trace-coordinator.jsonl`
+    /// (`serve --trace-dir`).
+    pub trace_dir: Option<String>,
 }
 
 impl Default for ServingConfig {
@@ -202,6 +211,8 @@ impl Default for ServingConfig {
             link_timeout_ms: 5000,
             session_namespace: None,
             batch_buckets: vec![1, 2, 4, 8],
+            trace: true,
+            trace_dir: None,
         }
     }
 }
@@ -318,6 +329,7 @@ fn secure_worker_loop(
     batcher: BatcherConfig,
     mut model: SecureModel,
     metrics: Arc<Metrics>,
+    tracer: Arc<Tracer>,
     max_take: usize,
     session_retries: u32,
 ) {
@@ -330,6 +342,9 @@ fn secure_worker_loop(
     // with peer workers — see `Coordinator::start_with`), which keeps
     // the pre-batching burst-spreading policy for those configurations.
     while let Some(batch) = drain_batch(&shared, &batcher, EngineKind::Secure, max_take) {
+        // Queue wait ends here for every member of this drain: the
+        // worker owns the batch from this instant on.
+        let t_drained = Instant::now();
         // Move the inputs out instead of cloning them — a hidden-state
         // input is seq×hidden words per item, and the reply path only
         // needs the request metadata.
@@ -396,8 +411,18 @@ fn secure_worker_loop(
         // Per-request share of the batch's online volume (both parties):
         // the amortized cost a client actually caused.
         let per_req_bytes = r.stats.total_bytes() * 2 / metas.len() as u64;
+        // Every member request waited through the whole batch's engine
+        // phases (one shared round schedule), so those apply unscaled;
+        // only the queue wait is the request's own.
+        let trace_label = r.sessions.first().cloned();
         for ((id, submitted, reply_to, _attempts), logits) in metas.into_iter().zip(r.logits) {
             let latency = submitted.elapsed().as_secs_f64();
+            let mut phases = r.phases;
+            phases.queue_s = t_drained.duration_since(submitted).as_secs_f64();
+            metrics.observe_phases(&phases);
+            if let Some(label) = &trace_label {
+                tracer.record(label, "phase:queue", submitted, t_drained);
+            }
             metrics.observe(latency);
             let _ = reply_to.send(InferenceReply {
                 id,
@@ -483,6 +508,10 @@ pub struct Coordinator {
     /// Party-link supervisor (distributed serving only): owns the
     /// re-dial policy and the reconnect/link-state gauges.
     supervisor: Option<Arc<PartyLinkSupervisor>>,
+    /// The coordinator's span ring — every secure worker's engine
+    /// records into it, and the `trace` command reads from it.
+    tracer: Arc<Tracer>,
+    started: Instant,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -515,6 +544,16 @@ impl Coordinator {
         });
         let metrics_secure = Arc::new(Metrics::new());
         let metrics_plain = Arc::new(Metrics::new());
+        let tracer = Tracer::with_capacity(
+            ROLE_COORDINATOR,
+            crate::obs::trace::DEFAULT_RING_SPANS,
+            serving.trace,
+        );
+        if let Some(dir) = &serving.trace_dir {
+            if let Err(e) = tracer.set_dir(std::path::Path::new(dir)) {
+                eprintln!("coordinator: trace export to {dir} disabled: {e}");
+            }
+        }
 
         // Per-coordinator nonce: two coordinators in one process (test
         // binaries, embedded uses) must never share session labels — a
@@ -669,16 +708,19 @@ impl Coordinator {
             );
             model.set_session_label(&format!("coord-{instance}-w{i}"));
             model.set_batch_buckets(&engine_buckets);
+            model.set_tracer(Some(tracer.clone()));
             if let Some(sup) = &supervisor {
                 model.set_peer_runtime(PeerRuntime::Supervised(sup.clone()));
             }
             let sh = shared.clone();
             let ms = metrics_secure.clone();
+            let tr = tracer.clone();
             let retries = serving.session_retries;
             match std::thread::Builder::new()
                 .name(format!("secure-worker-{i}"))
-                .spawn(move || secure_worker_loop(sh, batcher, model, ms, max_take, retries))
-            {
+                .spawn(move || {
+                    secure_worker_loop(sh, batcher, model, ms, tr, max_take, retries)
+                }) {
                 Ok(h) => workers.push(h),
                 Err(e) => {
                     spawn_err = Some(e);
@@ -725,6 +767,8 @@ impl Coordinator {
             metrics_plain,
             pool,
             supervisor,
+            tracer,
+            started: Instant::now(),
             workers,
         })
     }
@@ -793,11 +837,159 @@ impl Coordinator {
         if let Some(sup) = &self.supervisor {
             s.party_reconnects = sup.reconnects();
             s.link_up = sup.link_up();
+            s.link_rtt_last_ms = sup.rtt_last_ms();
+            s.link_rtt_ewma_ms = sup.rtt_ewma_ms();
         }
         if let Some(p) = &self.pool {
             s.dealer_reconnects = p.reconnects();
+            s.dealer_pulls = p.pulls_sent();
+            s.prefetch_depth = p.prefetch_depth();
+            s.spool_tombstones = p.spool_tombstones();
+            s.spool_compactions = p.spool_compactions();
         }
         s
+    }
+
+    /// The coordinator's span ring (the `trace` command's source; tests
+    /// use it to join coordinator and party-host spans by session label).
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+
+    /// The recorded spans for one trace id (session label) as JSONL —
+    /// the body of the line protocol's `trace <label>` command.
+    pub fn render_trace(&self, trace: &str) -> String {
+        self.tracer.render_trace(trace)
+    }
+
+    /// The coordinator's side of the unified `secformer_*` exposition:
+    /// both engines' latency histograms, the secure engine's phase
+    /// attribution, queue/pool/link gauges and trace-ring health, every
+    /// sample labelled `role="coordinator"`.
+    pub fn render_metrics(&self) -> String {
+        let s = self.secure_summary();
+        let mut r = MetricsRegistry::new(ROLE_COORDINATOR);
+        r.gauge(
+            "secformer_uptime_seconds",
+            "Seconds since this role started.",
+            self.started.elapsed().as_secs_f64(),
+        );
+        r.counter_rows(
+            "secformer_requests_total",
+            "Completed inference requests.",
+            &[
+                ("engine=\"secure\"".to_string(), s.count as f64),
+                ("engine=\"plaintext\"".to_string(), self.metrics_plain.count() as f64),
+            ],
+        );
+        r.histogram_rows(
+            "secformer_request_latency_seconds",
+            "End-to-end request latency (submit to reply).",
+            &[
+                ("engine=\"secure\"".to_string(), self.metrics_secure.latency_hist()),
+                ("engine=\"plaintext\"".to_string(), self.metrics_plain.latency_hist()),
+            ],
+        );
+        let phase_rows: Vec<(String, f64)> = PHASES
+            .iter()
+            .zip(s.phase_totals_s)
+            .map(|(name, v)| (format!("phase=\"{name}\""), v))
+            .collect();
+        r.counter_rows(
+            "secformer_phase_seconds_total",
+            "Secure-request wall-clock attributed per phase; the five \
+             phases partition total latency.",
+            &phase_rows,
+        );
+        r.gauge(
+            "secformer_recent_rps",
+            "Secure requests per second over the trailing window.",
+            s.recent_rps,
+        );
+        r.gauge("secformer_queue_depth", "Requests waiting in both queues.", self.queue_depth() as f64);
+        r.counter(
+            "secformer_offline_bytes_total",
+            "Offline correlated-randomness bytes consumed.",
+            s.offline_bytes as f64,
+        );
+        r.gauge("secformer_pool_depth", "Bundles ready, in request capacity.", s.pool_depth as f64);
+        r.gauge("secformer_pool_hit_rate", "Pool hit rate in [0, 1].", s.pool_hit_rate);
+        r.gauge(
+            "secformer_batch_size_mean",
+            "Mean dynamic-batch size, all time.",
+            s.mean_batch_size,
+        );
+        r.gauge(
+            "secformer_rounds_per_request",
+            "Online protocol rounds per secure request, all time.",
+            s.rounds_per_request,
+        );
+        r.counter(
+            "secformer_sessions_retried_total",
+            "Failed sessions whose requests were re-enqueued.",
+            s.sessions_retried as f64,
+        );
+        r.counter(
+            "secformer_sessions_failed_total",
+            "Sessions that failed terminally.",
+            s.sessions_failed as f64,
+        );
+        r.counter(
+            "secformer_party_reconnects_total",
+            "Successful party-link re-dials.",
+            s.party_reconnects as f64,
+        );
+        r.gauge(
+            "secformer_link_up",
+            "Whether the party link is up (1 for in-process serving).",
+            if s.link_up { 1.0 } else { 0.0 },
+        );
+        r.gauge_rows(
+            "secformer_link_rtt_ms",
+            "Party-link heartbeat RTT in milliseconds (0 until a \
+             PING/PONG pair completed).",
+            &[
+                ("kind=\"last\"".to_string(), s.link_rtt_last_ms),
+                ("kind=\"ewma\"".to_string(), s.link_rtt_ewma_ms),
+            ],
+        );
+        r.counter(
+            "secformer_dealer_reconnects_total",
+            "Successful dealer link re-dials.",
+            s.dealer_reconnects as f64,
+        );
+        r.counter(
+            "secformer_dealer_pulls_sent_total",
+            "Coalesced PULL frames sent to a remote dealer.",
+            s.dealer_pulls as f64,
+        );
+        r.gauge(
+            "secformer_prefetch_depth",
+            "Bundles in the dealer-prefetch queue right now.",
+            s.prefetch_depth as f64,
+        );
+        r.gauge(
+            "secformer_spool_tombstones",
+            "Consume tombstones since the last spool compaction.",
+            s.spool_tombstones as f64,
+        );
+        r.counter(
+            "secformer_spool_compactions_total",
+            "Spool-file compaction rewrites.",
+            s.spool_compactions as f64,
+        );
+        r.gauge(
+            "secformer_trace_enabled",
+            "Whether span recording is on.",
+            if self.tracer.is_enabled() { 1.0 } else { 0.0 },
+        );
+        r.gauge("secformer_trace_spans", "Spans held in the ring.", self.tracer.len() as f64);
+        r.counter(
+            "secformer_trace_dropped_total",
+            "Spans evicted from the bounded ring.",
+            self.tracer.dropped() as f64,
+        );
+        r.render()
     }
 
     fn stop(&mut self) {

@@ -1,36 +1,40 @@
-//! Serving metrics: latency percentiles + throughput + offline/pool
-//! gauges.
+//! Serving metrics: all-time latency quantiles, recent-window
+//! throughput, per-phase latency attribution, and offline/pool gauges.
 //!
-//! Latency storage is a fixed-size recent-window ring (a long-running
-//! server must not grow a `Vec` forever): percentiles, mean and max are
-//! computed over the most recent [`WINDOW`] observations, while `count`
-//! and `throughput_rps` cover the server's whole lifetime.
+//! Latency storage is a constant-memory log-bucketed histogram
+//! ([`LogHistogram`]): quantiles (p50/p95/p99/p99.9), mean and max are
+//! **all-time** (a long-running server never loses its tail), while
+//! `recent_rps` tracks a trailing window so throughput reads true after
+//! idle periods. Each request's wall-clock is additionally attributed
+//! to phases (queue → share → bundle-wait → compute vs. transport) via
+//! [`crate::obs::PhaseBreakdown`]; the accumulated per-phase totals
+//! are what the `metrics` exposition reports.
 
+use crate::obs::{LogHistogram, PhaseBreakdown, WindowedRate};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
-
-/// Recent-window size for percentile math. 4096 samples ≈ minutes of
-/// secure traffic; fixed memory forever.
-pub const WINDOW: usize = 4096;
 
 /// Largest batch size tracked individually by the histogram; bigger
 /// batches land in the top bucket (reported as `{MAX}+`).
 pub const BATCH_HIST_MAX: usize = 16;
 
-#[derive(Debug, Default)]
-struct LatencyWindow {
-    /// Ring buffer of the most recent latencies (seconds).
-    recent: Vec<f64>,
-    /// Next write slot once the ring is full.
-    next: usize,
-    /// All-time observation count.
-    total: u64,
-}
+/// Trailing window (seconds) for the recent-throughput gauge.
+pub const RECENT_WINDOW_S: u64 = 10;
 
+/// Phase names, in [`Metrics::phase_totals_s`] order. `compute` is
+/// dispatch wall minus transport plus the reconstruct/decode tail, so
+/// the five phases partition each request's total latency.
+pub const PHASES: [&str; 5] = ["queue", "share", "bundle_wait", "compute", "transport"];
+
+/// One engine's serving metrics (the coordinator keeps one per engine).
 #[derive(Debug)]
 pub struct Metrics {
-    window: Mutex<LatencyWindow>,
+    /// All-time latency histogram (constant memory, ~6% bucket error).
+    latency: LogHistogram,
+    /// Trailing-window completion counter for `recent_rps`.
+    recent: WindowedRate,
+    /// Accumulated per-phase nanoseconds, indexed like [`PHASES`].
+    phase_ns: [AtomicU64; 5],
     /// Offline correlated-randomness bytes consumed by this engine's
     /// requests (dealer corrections or pooled bundles).
     offline_bytes: AtomicU64,
@@ -54,17 +58,32 @@ pub struct Metrics {
     started: Instant,
 }
 
+/// Point-in-time summary of one engine's [`Metrics`], plus the
+/// link/pool gauges the coordinator folds in (it owns the supervisor
+/// and the bundle source).
 #[derive(Clone, Debug, Default)]
 pub struct MetricsSummary {
     /// All-time request count.
     pub count: usize,
-    /// Mean/percentiles/max over the recent window (≤ [`WINDOW`] samples).
+    /// All-time mean latency (exact, from the histogram's sum/count).
     pub mean_s: f64,
+    /// All-time median latency (log-bucketed, ≤ ~6% high).
     pub p50_s: f64,
+    /// All-time 95th-percentile latency.
     pub p95_s: f64,
+    /// All-time 99th-percentile latency.
+    pub p99_s: f64,
+    /// All-time 99.9th-percentile latency.
+    pub p99_9_s: f64,
+    /// All-time maximum latency (exact).
     pub max_s: f64,
     /// All-time requests per second.
     pub throughput_rps: f64,
+    /// Requests per second over the trailing [`RECENT_WINDOW_S`]
+    /// seconds — the honest load gauge after any idle period.
+    pub recent_rps: f64,
+    /// Accumulated per-phase seconds, indexed like [`PHASES`].
+    pub phase_totals_s: [f64; 5],
     /// Offline correlated-randomness bytes drawn, all time (dealer
     /// corrections, or pooled bundles — a pooled session that diverges
     /// from its plan still spends its bundle, like any one-time pad).
@@ -94,9 +113,27 @@ pub struct MetricsSummary {
     /// Whether the party link is currently up (`true` for in-process
     /// serving, which has no link to lose).
     pub link_up: bool,
+    /// Last measured party-link heartbeat RTT in milliseconds (0 until
+    /// a PING/PONG pair completed; filled from the link supervisor).
+    pub link_rtt_last_ms: f64,
+    /// Exponentially weighted moving average of the party-link RTT in
+    /// milliseconds (same source as `link_rtt_last_ms`).
+    pub link_rtt_ewma_ms: f64,
     /// Successful dealer-link re-dials since startup (0 without a
     /// remote dealer; filled from the bundle source).
     pub dealer_reconnects: u64,
+    /// PULL credit messages sent to the remote dealer, all time (0
+    /// without a remote dealer; filled from the bundle source).
+    pub dealer_pulls: u64,
+    /// Bundles sitting in the remote pool's local prefetch queue (0
+    /// without a remote dealer; filled from the bundle source).
+    pub prefetch_depth: usize,
+    /// Spool records superseded in place of rewriting (tombstones
+    /// pending compaction; filled from the bundle source).
+    pub spool_tombstones: u64,
+    /// Spool compaction passes completed since startup (filled from
+    /// the bundle source).
+    pub spool_compactions: u64,
 }
 
 impl Default for Metrics {
@@ -106,9 +143,12 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Fresh, zeroed metrics anchored at the current instant.
     pub fn new() -> Self {
         Metrics {
-            window: Mutex::new(LatencyWindow::default()),
+            latency: LogHistogram::new(),
+            recent: WindowedRate::new(),
+            phase_ns: std::array::from_fn(|_| AtomicU64::new(0)),
             offline_bytes: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
@@ -141,16 +181,27 @@ impl Metrics {
         self.rounds_total.fetch_add(rounds, Ordering::Relaxed);
     }
 
+    /// Record one completed request's latency.
     pub fn observe(&self, latency_s: f64) {
-        let mut w = self.window.lock().unwrap();
-        if w.recent.len() < WINDOW {
-            w.recent.push(latency_s);
-        } else {
-            let slot = w.next;
-            w.recent[slot] = latency_s;
-            w.next = (slot + 1) % WINDOW;
-        }
-        w.total += 1;
+        self.latency.record(latency_s);
+        self.recent.note();
+    }
+
+    /// Attribute one completed request's phase breakdown. The five
+    /// accumulated phases partition total latency, so
+    /// `Σ phase_totals_s ≈ Σ observed latencies` (within measurement
+    /// slack — the invariant `tests/observability.rs` pins per request).
+    pub fn observe_phases(&self, p: &PhaseBreakdown) {
+        let add = |i: usize, s: f64| {
+            if s > 0.0 {
+                self.phase_ns[i].fetch_add((s * 1e9) as u64, Ordering::Relaxed);
+            }
+        };
+        add(0, p.queue_s);
+        add(1, p.share_s);
+        add(2, p.bundle_wait_s);
+        add(3, p.compute_s());
+        add(4, p.transport_s);
     }
 
     /// Account offline bytes consumed by one finished request.
@@ -158,7 +209,28 @@ impl Metrics {
         self.offline_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
-    fn batch_gauges(&self) -> (f64, f64, Vec<(usize, u64)>) {
+    /// The all-time latency histogram (for `metrics` exposition).
+    pub fn latency_hist(&self) -> &LogHistogram {
+        &self.latency
+    }
+
+    /// All-time completed-request count.
+    pub fn count(&self) -> u64 {
+        self.latency.count()
+    }
+
+    /// Accumulated per-phase seconds, indexed like [`PHASES`].
+    pub fn phase_totals_s(&self) -> [f64; 5] {
+        std::array::from_fn(|i| self.phase_ns[i].load(Ordering::Relaxed) as f64 / 1e9)
+    }
+
+    /// Requests per second over the trailing [`RECENT_WINDOW_S`] s.
+    pub fn recent_rps(&self) -> f64 {
+        self.recent.rate(RECENT_WINDOW_S)
+    }
+
+    /// `(mean batch size, rounds per request, histogram rows)`.
+    pub fn batch_gauges(&self) -> (f64, f64, Vec<(usize, u64)>) {
         let batches = self.batches.load(Ordering::Relaxed);
         let reqs = self.batched_requests.load(Ordering::Relaxed);
         let rounds = self.rounds_total.load(Ordering::Relaxed);
@@ -176,50 +248,35 @@ impl Metrics {
         (mean, rpr, hist)
     }
 
+    /// Snapshot the engine-local gauges (the coordinator fills the
+    /// link/pool fields on top — see `Coordinator::secure_summary`).
     pub fn summary(&self) -> MetricsSummary {
-        let (mut v, total) = {
-            let w = self.window.lock().unwrap();
-            (w.recent.clone(), w.total)
-        };
         let (mean_batch_size, rounds_per_request, batch_hist) = self.batch_gauges();
-        let sessions_retried = self.sessions_retried.load(Ordering::Relaxed);
-        let sessions_failed = self.sessions_failed.load(Ordering::Relaxed);
-        if v.is_empty() {
-            return MetricsSummary {
-                pool_hit_rate: 1.0,
-                offline_bytes: self.offline_bytes.load(Ordering::Relaxed),
-                mean_batch_size,
-                rounds_per_request,
-                batch_hist,
-                sessions_retried,
-                sessions_failed,
-                // Link gauges are the coordinator's to fill (it owns the
-                // supervisor and the bundle source); in-process defaults.
-                link_up: true,
-                ..MetricsSummary::default()
-            };
-        }
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let n = v.len();
-        let pct = |p: f64| v[((n as f64 * p) as usize).min(n - 1)];
         MetricsSummary {
-            count: total as usize,
-            mean_s: v.iter().sum::<f64>() / n as f64,
-            p50_s: pct(0.50),
-            p95_s: pct(0.95),
-            max_s: *v.last().unwrap(),
-            throughput_rps: total as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
+            count: self.latency.count() as usize,
+            mean_s: self.latency.mean_s(),
+            p50_s: self.latency.quantile(0.50),
+            p95_s: self.latency.quantile(0.95),
+            p99_s: self.latency.quantile(0.99),
+            p99_9_s: self.latency.quantile(0.999),
+            max_s: self.latency.max_s(),
+            throughput_rps: self.latency.count() as f64
+                / self.started.elapsed().as_secs_f64().max(1e-9),
+            recent_rps: self.recent_rps(),
+            phase_totals_s: self.phase_totals_s(),
             offline_bytes: self.offline_bytes.load(Ordering::Relaxed),
             pool_depth: 0,
             pool_hit_rate: 1.0,
             mean_batch_size,
             rounds_per_request,
             batch_hist,
-            sessions_retried,
-            sessions_failed,
+            sessions_retried: self.sessions_retried.load(Ordering::Relaxed),
+            sessions_failed: self.sessions_failed.load(Ordering::Relaxed),
             party_reconnects: 0,
+            // Link gauges are the coordinator's to fill (it owns the
+            // supervisor and the bundle source); in-process defaults.
             link_up: true,
-            dealer_reconnects: 0,
+            ..MetricsSummary::default()
         }
     }
 }
@@ -236,10 +293,18 @@ mod tests {
         }
         let s = m.summary();
         assert_eq!(s.count, 100);
-        assert!((s.mean_s - 0.505).abs() < 1e-9);
-        assert!((s.p50_s - 0.51).abs() < 1e-9);
-        assert!((s.p95_s - 0.96).abs() < 1e-9);
+        // Mean and max are exact; quantiles carry ≤ ~6% bucket error.
+        assert!((s.mean_s - 0.505).abs() < 1e-6);
         assert!((s.max_s - 1.0).abs() < 1e-9);
+        for (got, expect) in
+            [(s.p50_s, 0.50), (s.p95_s, 0.95), (s.p99_s, 0.99), (s.p99_9_s, 1.0)]
+        {
+            assert!(
+                got >= expect * 0.999 && got <= expect * 1.07,
+                "quantile {got} vs expected ~{expect}"
+            );
+        }
+        assert!(s.p50_s <= s.p95_s && s.p95_s <= s.p99_s && s.p99_s <= s.p99_9_s);
     }
 
     #[test]
@@ -247,26 +312,39 @@ mod tests {
         let s = Metrics::new().summary();
         assert_eq!(s.count, 0);
         assert_eq!(s.mean_s, 0.0);
+        assert_eq!(s.p99_9_s, 0.0);
         assert_eq!(s.pool_hit_rate, 1.0);
+        assert_eq!(s.recent_rps, 0.0);
     }
 
     #[test]
-    fn window_is_bounded_and_percentiles_track_recent() {
+    fn quantiles_are_all_time_in_constant_memory() {
+        // The old 4096-sample ring silently turned quantiles into
+        // windowed quantiles; the histogram keeps the whole history.
         let m = Metrics::new();
-        // 2× WINDOW observations: first half at 1.0 s, second half at
-        // 10.0 s. The window must hold only the recent (10 s) samples.
-        for _ in 0..WINDOW {
+        for _ in 0..6000 {
             m.observe(1.0);
         }
-        for _ in 0..WINDOW {
+        for _ in 0..6000 {
             m.observe(10.0);
         }
         let s = m.summary();
-        assert_eq!(s.count, 2 * WINDOW, "count is all-time");
-        assert!((s.p50_s - 10.0).abs() < 1e-9, "percentiles are windowed");
-        assert!((s.mean_s - 10.0).abs() < 1e-9);
-        // Storage stays fixed.
-        assert!(m.window.lock().unwrap().recent.len() == WINDOW);
+        assert_eq!(s.count, 12000, "count is all-time");
+        // Half the all-time samples are 1.0 s — the median must see them.
+        assert!(s.p50_s <= 1.0 * 1.07, "p50 {} must reflect the old half", s.p50_s);
+        assert!(s.p99_s >= 10.0 * 0.99, "p99 {} must reflect the slow half", s.p99_s);
+        assert!((s.max_s - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recent_rps_counts_only_fresh_completions() {
+        let m = Metrics::new();
+        for _ in 0..50 {
+            m.observe(0.01);
+        }
+        // All 50 completions happened "just now".
+        assert!(m.recent_rps() > 0.0);
+        assert!(m.summary().recent_rps > 0.0);
     }
 
     #[test]
@@ -275,6 +353,31 @@ mod tests {
         m.add_offline_bytes(100);
         m.add_offline_bytes(50);
         assert_eq!(m.summary().offline_bytes, 150);
+    }
+
+    #[test]
+    fn phase_totals_partition_latency() {
+        let m = Metrics::new();
+        let p = PhaseBreakdown {
+            queue_s: 0.010,
+            share_s: 0.002,
+            bundle_wait_s: 0.001,
+            dispatch_s: 0.050,
+            transport_s: 0.030,
+            finish_s: 0.003,
+        };
+        m.observe_phases(&p);
+        m.observe_phases(&p);
+        let totals = m.phase_totals_s();
+        assert!((totals[0] - 0.020).abs() < 1e-6, "queue total");
+        assert!((totals[4] - 0.060).abs() < 1e-6, "transport total");
+        let sum: f64 = totals.iter().sum();
+        assert!(
+            (sum - 2.0 * p.total_s()).abs() < 1e-6,
+            "phases must partition the total: {sum} vs {}",
+            2.0 * p.total_s()
+        );
+        assert_eq!(PHASES.len(), totals.len());
     }
 
     #[test]

@@ -6,7 +6,13 @@
 //!   `secure <tok> <tok> …`   → `ok <id> <logit> <logit> … latency=<s> comm=<bytes>`
 //!   `plain  <tok> <tok> …`   → same, via the PJRT artifact
 //!   `stats`                  → one line of serving metrics
+//!   `metrics`                → Prometheus text exposition, `# EOF`-terminated
+//!   `trace <label>`          → recorded spans of one session as JSONL, `# EOF`-terminated
 //!   `quit`                   → closes the connection
+//!
+//! `metrics` and `trace` are the only multi-line replies; both end with
+//! a literal `# EOF` line so a line-oriented client knows where the
+//! payload stops.
 
 use crate::coordinator::batcher::{Coordinator, EngineKind};
 use crate::nn::model::ModelInput;
@@ -88,14 +94,21 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
                     .join(",")
             };
             Some(format!(
-                "secure: n={} mean={:.3}s p95={:.3}s rps={:.2} offline_bytes={} \
+                "secure: n={} mean={:.3}s p95={:.3}s p99={:.3}s p99.9={:.3}s rps={:.2} \
+                 recent_rps={:.2} offline_bytes={} \
                  pool_depth={} pool_hit={:.2} batch_mean={:.2} rounds_per_req={:.1} \
                  batch_hist={} retried={} failed={} party_reconnects={} link={} \
-                 dealer_reconnects={} | plain: n={} mean={:.4}s p95={:.4}s",
+                 rtt_ms={:.3} rtt_ewma_ms={:.3} \
+                 dealer_reconnects={} dealer_pulls={} prefetch_depth={} \
+                 spool_tombstones={} spool_compactions={} \
+                 | plain: n={} mean={:.4}s p95={:.4}s",
                 s.count,
                 s.mean_s,
                 s.p95_s,
+                s.p99_s,
+                s.p99_9_s,
                 s.throughput_rps,
+                s.recent_rps,
                 s.offline_bytes,
                 s.pool_depth,
                 s.pool_hit_rate,
@@ -106,12 +119,28 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
                 s.sessions_failed,
                 s.party_reconnects,
                 if s.link_up { "up" } else { "down" },
+                s.link_rtt_last_ms,
+                s.link_rtt_ewma_ms,
                 s.dealer_reconnects,
+                s.dealer_pulls,
+                s.prefetch_depth,
+                s.spool_tombstones,
+                s.spool_compactions,
                 p.count,
                 p.mean_s,
                 p.p95_s
             ))
         }
+        "metrics" => {
+            // Multi-line: the exposition ends with "# EOF\n"; strip the
+            // final newline so the connection loop's writeln restores it
+            // without doubling.
+            Some(coord.render_metrics().trim_end().to_string())
+        }
+        "trace" => match parts.next() {
+            Some(label) => Some(coord.render_trace(label).trim_end().to_string()),
+            None => Some("err trace needs a session label".to_string()),
+        },
         "secure" | "plain" => {
             let toks: Result<Vec<u32>, _> = parts.map(|t| t.parse::<u32>()).collect();
             let toks = match toks {
@@ -225,6 +254,35 @@ mod tests {
         assert!(stats.contains("party_reconnects=0"), "{stats}");
         assert!(stats.contains("link=up"), "{stats}");
         assert!(stats.contains("dealer_reconnects=0"), "{stats}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn metrics_and_trace_commands() {
+        let (c, cfg) = coord();
+        let line = format!(
+            "secure {}",
+            (0..cfg.seq).map(|i| i.to_string()).collect::<Vec<_>>().join(" ")
+        );
+        assert!(handle_line(&line, &c, cfg.seq, cfg.vocab).unwrap().starts_with("ok "));
+        let metrics = handle_line("metrics", &c, cfg.seq, cfg.vocab).unwrap();
+        assert!(
+            metrics.contains("secformer_requests_total{role=\"coordinator\",engine=\"secure\"} 1"),
+            "{metrics}"
+        );
+        assert!(metrics.contains("# TYPE secformer_request_latency_seconds histogram"));
+        assert!(metrics.ends_with("# EOF"), "multi-line reply must be EOF-terminated");
+        assert!(
+            handle_line("trace", &c, cfg.seq, cfg.vocab).unwrap().starts_with("err"),
+            "trace without a label is an error"
+        );
+        // Any recorded session's label works; take one from the ring.
+        let spans = c.tracer().recent(16);
+        assert!(!spans.is_empty(), "serving one request must record spans");
+        let trace =
+            handle_line(&format!("trace {}", spans[0].trace), &c, cfg.seq, cfg.vocab).unwrap();
+        assert!(trace.contains("\"name\":\"session\""), "{trace}");
+        assert!(trace.ends_with("# EOF"));
         c.shutdown();
     }
 

@@ -15,6 +15,7 @@ use crate::net::transport::channel_pair;
 use crate::nn::config::ModelConfig;
 use crate::nn::model::{bert_forward_batch, InputShare, ModelInput};
 use crate::nn::weights::{share_weights, ShareMap, WeightMap};
+use crate::obs::{PhaseBreakdown, Tracer};
 use crate::offline::planner::PlanInput;
 use crate::offline::pool::Tuple;
 use crate::offline::provider::PooledProvider;
@@ -78,6 +79,12 @@ pub struct InferenceResult {
     /// Simulated wall-clock on the paper's LAN (counted rounds/bytes
     /// through the network model) plus measured compute.
     pub simulated_lan_seconds: f64,
+    /// The session label this inference ran under — the trace id that
+    /// joins coordinator, party-host and dealer spans.
+    pub session: String,
+    /// Engine-side phase attribution (queue wait is the caller's to
+    /// fill — the engine never sees the request queue).
+    pub phases: PhaseBreakdown,
 }
 
 /// Default cross-request batch buckets: drained batches are padded up to
@@ -101,6 +108,13 @@ pub struct BatchResult {
     /// Round schedules executed (1 = the whole batch shared one; mixed
     /// kinds or bucket overflow split it).
     pub chunks: usize,
+    /// Session labels of the executed chunks (trace ids), in execution
+    /// order — one per chunk.
+    pub sessions: Vec<String>,
+    /// Engine-side phase attribution summed across the batch's chunks.
+    /// Every member request waited through the whole batch, so these
+    /// phases apply to each request unscaled (plus its own queue wait).
+    pub phases: PhaseBreakdown,
 }
 
 impl InferenceResult {
@@ -146,6 +160,9 @@ pub struct SecureModel {
     /// Batch buckets [`SecureModel::infer_batch`] pads chunks up to
     /// (ascending, always containing 1).
     batch_buckets: Vec<usize>,
+    /// Optional span recorder (`None` costs nothing; tracing is pure
+    /// observation and never touches protocol state).
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl SecureModel {
@@ -210,7 +227,15 @@ impl SecureModel {
             pool,
             peer: PeerRuntime::InProcess,
             batch_buckets: DEFAULT_BATCH_BUCKETS.to_vec(),
+            tracer: None,
         }
+    }
+
+    /// Attach a span recorder: every inference records `session` and
+    /// `phase:*` spans keyed by its session label. Pass `None` (the
+    /// default) to trace nothing.
+    pub fn set_tracer(&mut self, tracer: Option<Arc<Tracer>>) {
+        self.tracer = tracer;
     }
 
     /// Configure the batch buckets [`SecureModel::infer_batch`] pads its
@@ -316,8 +341,10 @@ impl SecureModel {
         &mut self,
         input: &ModelInput,
     ) -> std::result::Result<InferenceResult, SessionError> {
+        let t_start = Instant::now();
         let (in0, in1) = self.share_input(input);
         let session = format!("{}-{}", self.session_label, self.session_counter);
+        let t_shared = Instant::now();
 
         // Pooled mode: draw the session's pregenerated bundle — routed
         // by input kind so a token bundle never reaches a hidden-state
@@ -340,6 +367,7 @@ impl SecureModel {
             }
             _ => (None, None, String::new(), 0),
         };
+        let t_bundled = Instant::now();
 
         let t0 = Instant::now();
         // The deployment-agnostic dispatch: identical sharing and
@@ -365,14 +393,38 @@ impl SecureModel {
             }
         };
 
-        let wall = t0.elapsed().as_secs_f64();
+        let t_dispatched = Instant::now();
+        let wall = (t_dispatched - t0).as_secs_f64();
         let rec = crate::sharing::reconstruct(&out0, &out1);
         let logits = crate::core::fixed::decode_vec(&rec);
+        let t_finished = Instant::now();
         let lan = NetModel::paper_lan();
         let compute_s: f64 = stats.nanos.iter().sum::<u64>() as f64 * 1e-9;
         let simulated =
             compute_s + lan.simulated_seconds(stats.total_rounds(), stats.total_bytes() * 2);
-        Ok(InferenceResult { logits, stats, wall_seconds: wall, simulated_lan_seconds: simulated })
+        let phases = PhaseBreakdown {
+            queue_s: 0.0,
+            share_s: (t_shared - t_start).as_secs_f64(),
+            bundle_wait_s: (t_bundled - t_shared).as_secs_f64(),
+            dispatch_s: wall,
+            transport_s: stats.transport_nanos as f64 * 1e-9,
+            finish_s: (t_finished - t_dispatched).as_secs_f64(),
+        };
+        if let Some(tr) = &self.tracer {
+            tr.record(&session, "phase:share", t_start, t_shared);
+            tr.record(&session, "phase:bundle_wait", t_shared, t_bundled);
+            tr.record(&session, "phase:dispatch", t0, t_dispatched);
+            tr.record(&session, "phase:finish", t_dispatched, t_finished);
+            tr.record(&session, "session", t_start, t_finished);
+        }
+        Ok(InferenceResult {
+            logits,
+            stats,
+            wall_seconds: wall,
+            simulated_lan_seconds: simulated,
+            session,
+            phases,
+        })
     }
 
     /// Run one dynamic batch of inferences with cross-request round
@@ -412,6 +464,8 @@ impl SecureModel {
         let t0 = Instant::now();
         let mut logits: Vec<Option<Vec<f64>>> = vec![None; inputs.len()];
         let mut stats = StatsSnapshot::default();
+        let mut phases = PhaseBreakdown::default();
+        let mut sessions: Vec<String> = Vec::new();
         let mut chunks = 0usize;
         // Group by input kind, preserving arrival order inside each group
         // (the SPMD forward stacks one kind at a time).
@@ -438,12 +492,14 @@ impl SecureModel {
                     .copied()
                     .find(|&b| b >= take)
                     .unwrap_or(max_bucket);
-                let (chunk_logits, chunk_stats) =
+                let (chunk_logits, chunk_stats, chunk_phases, chunk_session) =
                     self.run_chunk(kind, inputs, chunk, bucket)?;
                 for (&slot, l) in chunk.iter().zip(chunk_logits) {
                     logits[slot] = Some(l);
                 }
                 stats.accumulate(&chunk_stats);
+                phases.accumulate(&chunk_phases);
+                sessions.push(chunk_session);
                 chunks += 1;
                 off += take;
             }
@@ -462,6 +518,8 @@ impl SecureModel {
             wall_seconds: wall,
             simulated_lan_seconds: simulated,
             chunks,
+            sessions,
+            phases,
         })
     }
 
@@ -474,14 +532,16 @@ impl SecureModel {
         inputs: &[ModelInput],
         chunk: &[usize],
         bucket: usize,
-    ) -> std::result::Result<(Vec<Vec<f64>>, StatsSnapshot), SessionError> {
+    ) -> std::result::Result<(Vec<Vec<f64>>, StatsSnapshot, PhaseBreakdown, String), SessionError>
+    {
         debug_assert!(!chunk.is_empty() && chunk.len() <= bucket);
         if bucket == 1 {
             // Bit-identical to the pre-batching build: same session
             // labels, same bundle pops, same START wire frame.
             let r = self.try_infer(&inputs[chunk[0]])?;
-            return Ok((vec![r.logits], r.stats));
+            return Ok((vec![r.logits], r.stats, r.phases, r.session));
         }
+        let t_start = Instant::now();
         // Pad with an all-zero dummy of the chunk's kind; the dummy is
         // shared (and masked) like any real input, so nothing about the
         // padding leaks, and its logits are simply discarded.
@@ -504,6 +564,7 @@ impl SecureModel {
         // One session label for the whole chunk (the counter advanced per
         // shared item, so labels never collide with single sessions).
         let session = format!("{}-{}", self.session_label, self.session_counter);
+        let t_shared = Instant::now();
 
         let (bundle0, bundle1, bundle_session, bundle_words) = match self.offline {
             OfflineMode::Pooled => {
@@ -515,6 +576,7 @@ impl SecureModel {
             }
             _ => (None, None, String::new(), 0),
         };
+        let t_bundled = Instant::now();
 
         let (out0, out1, stats) = match &self.peer {
             PeerRuntime::InProcess => self.run_in_process(
@@ -535,12 +597,29 @@ impl SecureModel {
                 self.run_remote(&rp, in0s, in1s, &session, bundle0, &bundle_session)?
             }
         };
+        let t_dispatched = Instant::now();
         let rec = crate::sharing::reconstruct(&out0, &out1);
         let all = crate::core::fixed::decode_vec(&rec);
         let nl = self.cfg.num_labels;
         let logits: Vec<Vec<f64>> =
             (0..chunk.len()).map(|j| all[j * nl..(j + 1) * nl].to_vec()).collect();
-        Ok((logits, stats))
+        let t_finished = Instant::now();
+        let phases = PhaseBreakdown {
+            queue_s: 0.0,
+            share_s: (t_shared - t_start).as_secs_f64(),
+            bundle_wait_s: (t_bundled - t_shared).as_secs_f64(),
+            dispatch_s: (t_dispatched - t_bundled).as_secs_f64(),
+            transport_s: stats.transport_nanos as f64 * 1e-9,
+            finish_s: (t_finished - t_dispatched).as_secs_f64(),
+        };
+        if let Some(tr) = &self.tracer {
+            tr.record(&session, "phase:share", t_start, t_shared);
+            tr.record(&session, "phase:bundle_wait", t_shared, t_bundled);
+            tr.record(&session, "phase:dispatch", t_bundled, t_dispatched);
+            tr.record(&session, "phase:finish", t_dispatched, t_finished);
+            tr.record(&session, "session", t_start, t_finished);
+        }
+        Ok((logits, stats, phases, session))
     }
 
     /// The simulator topology: both parties as scoped threads over

@@ -33,6 +33,7 @@ pub mod core;
 pub mod engine;
 pub mod net;
 pub mod nn;
+pub mod obs;
 pub mod offline;
 pub mod party;
 pub mod proto;

@@ -13,10 +13,13 @@
 //!                            plans tuple demand, pregenerates session
 //!                            bundles and streams them to coordinators
 //!   dealer-stats [opts]      query a dealer's STATS endpoint
+//!   metrics [opts]           fetch any role's Prometheus exposition
+//!   trace <label> [opts]     fetch a session's recorded spans (JSONL)
 //!   bench <target> [opts]    regenerate a paper table/figure
 //!                            targets: table3 table4 fig1 fig5 fig6 fig7
 //!                                     fig8 fig9 rounds serving
-//!                                     distribution two_party batching all
+//!                                     distribution two_party batching
+//!                                     observability all
 //!
 //! Common options:
 //!   --framework <crypten|puma|mpcformer|secformer>   (default secformer)
@@ -340,6 +343,11 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
     // manifest/pool per (kind, bucket) at startup. `--batch-buckets 1`
     // disables batching (each request runs its own schedule).
     serving.batch_buckets = args.batch_buckets()?;
+    // Observability: spans are recorded into a bounded ring by default
+    // (`--no-trace` turns recording off); `--trace-dir DIR` additionally
+    // appends every span to DIR/trace-coordinator.jsonl.
+    serving.trace = !args.has("no-trace");
+    serving.trace_dir = args.flag("trace-dir").map(String::from);
     let coordinator = std::sync::Arc::new(Coordinator::start_with(
         cfg.clone(),
         weights,
@@ -413,7 +421,11 @@ fn cmd_dealer_serve(args: &Args, cfg_file: &Config) -> Result<()> {
     serve_dealer(
         bind,
         pools,
-        DealerConfig { psk: args.flag("psk").map(String::from) },
+        DealerConfig {
+            psk: args.flag("psk").map(String::from),
+            trace: !args.has("no-trace"),
+            trace_dir: args.flag("trace-dir").map(String::from),
+        },
     )
 }
 
@@ -543,9 +555,83 @@ fn cmd_party_serve(args: &Args, cfg_file: &Config) -> Result<()> {
         source,
         PartyHostConfig {
             psk: args.flag("psk").map(String::from),
+            trace: !args.has("no-trace"),
+            trace_dir: args.flag("trace-dir").map(String::from),
             ..PartyHostConfig::default()
         },
     )
+}
+
+/// Default address of each role's endpoint (`serve`, `party-serve`,
+/// `dealer-serve` bind defaults).
+fn role_default_addr(role: &str) -> &'static str {
+    match role {
+        "party" => "127.0.0.1:8787",
+        "dealer" => "127.0.0.1:7979",
+        _ => "127.0.0.1:7878",
+    }
+}
+
+/// Send one line-protocol command to a coordinator and collect its
+/// multi-line reply up to the terminating `# EOF` line.
+fn fetch_coordinator_multiline(addr: &str, cmd: &str) -> Result<String> {
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connect to coordinator {addr}"))?;
+    writeln!(stream, "{cmd}")?;
+    let mut reader = BufReader::new(stream);
+    let mut out = String::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("coordinator closed the connection before `# EOF`");
+        }
+        if line.trim_end().starts_with("err ") {
+            bail!("coordinator: {}", line.trim_end());
+        }
+        out.push_str(&line);
+        if line.trim_end() == "# EOF" {
+            return Ok(out);
+        }
+    }
+}
+
+/// `metrics` — fetch the Prometheus text exposition of any role. All
+/// three roles answer with the same `secformer_*` name schema,
+/// distinguished by the `role` label.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let role = args.flag("role").unwrap_or("coordinator");
+    let addr = args.flag("addr").unwrap_or(role_default_addr(role));
+    let psk = args.flag("psk");
+    let body = match role {
+        "coordinator" => fetch_coordinator_multiline(addr, "metrics")?,
+        "party" => secformer::party::runtime::fetch_party_metrics(addr, psk)?,
+        "dealer" => secformer::offline::remote::fetch_dealer_metrics(addr, psk)?,
+        other => bail!("--role must be coordinator, party or dealer, got '{other}'"),
+    };
+    print!("{body}");
+    Ok(())
+}
+
+/// `trace <label>` — fetch the spans one role recorded for a session
+/// label, as JSONL. Query all three roles with the same label to
+/// reconstruct the session across processes.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let label = args
+        .sub
+        .as_deref()
+        .ok_or_else(|| anyhow::anyhow!("usage: secformer trace <session-label> [--role R]"))?;
+    let role = args.flag("role").unwrap_or("coordinator");
+    let addr = args.flag("addr").unwrap_or(role_default_addr(role));
+    let psk = args.flag("psk");
+    let body = match role {
+        "coordinator" => fetch_coordinator_multiline(addr, &format!("trace {label}"))?,
+        "party" => secformer::party::runtime::fetch_party_trace(addr, psk, label)?,
+        "dealer" => secformer::offline::remote::fetch_dealer_trace(addr, psk, label)?,
+        other => bail!("--role must be coordinator, party or dealer, got '{other}'"),
+    };
+    print!("{body}");
+    Ok(())
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -601,6 +687,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "batching" => {
             bh::batching_bench(args.usize_or("seq", 8), &[1, 4, 8]);
         }
+        "observability" => {
+            bh::observability_bench(args.usize_or("seq", 8), args.usize_or("requests", 10));
+        }
         "ablations" => {
             secformer::bench::ablations::ablation_fourier_terms(args.usize_or("points", 1000));
             secformer::bench::ablations::ablation_goldschmidt_iters(args.usize_or("points", 1000));
@@ -631,6 +720,8 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args, &cfg_file),
         "dealer-serve" => cmd_dealer_serve(&args, &cfg_file),
         "dealer-stats" => cmd_dealer_stats(&args),
+        "metrics" => cmd_metrics(&args),
+        "trace" => cmd_trace(&args),
         "party-serve" => cmd_party_serve(&args, &cfg_file),
         "bench" => cmd_bench(&args),
         "" | "help" | "--help" => {
@@ -656,7 +747,7 @@ USAGE:
                    [--spool-dir DIR] [--spool-max-bytes N] [--namespace NS]
                    [--peer-addr HOST:PORT] [--peer-psk KEY]
                    [--session-retries 2] [--party-heartbeat-ms 1000]
-                   [--link-timeout-ms 5000]
+                   [--link-timeout-ms 5000] [--no-trace] [--trace-dir DIR]
   secformer party-serve [--bind 127.0.0.1:8787] [--seq N] [--framework F]
                    [--vocab V] [--weights W.swts] [--psk KEY]
                    [--pool DEPTH] [--pool-producers P] [--pool-prf]
@@ -664,13 +755,19 @@ USAGE:
                    [--namespace NS | --prefix PFX]
                    [--dealer-addr HOST:PORT] [--dealer-psk KEY]
                    [--spool-dir DIR] [--spool-max-bytes N]
+                   [--no-trace] [--trace-dir DIR]
   secformer dealer-serve [--bind 127.0.0.1:7979] [--seq N] [--framework F]
                    [--vocab V] [--depth 8] [--producers 2] [--prf]
                    [--plan tokens|both] [--adaptive] [--max-depth 64]
                    [--max-bundles N] [--prefix PFX] [--psk KEY]
+                   [--no-trace] [--trace-dir DIR]
   secformer dealer-stats [--addr 127.0.0.1:7979] [--psk KEY]
+  secformer metrics [--role coordinator|party|dealer] [--addr HOST:PORT]
+                   [--psk KEY]
+  secformer trace LABEL [--role coordinator|party|dealer] [--addr HOST:PORT]
+                   [--psk KEY]
   secformer bench  <table3|table4|fig1|fig5|fig6|fig7|fig8|fig9|rounds|serving|
-                    distribution|two_party|batching|ablations|all>
+                    distribution|two_party|batching|observability|ablations|all>
                    [--seq N] [--paper] [--iters K] [--base-only]
                    [--concurrency C] [--requests R] [--workers N]
 
@@ -718,4 +815,15 @@ reference and ARCHITECTURE.md for the wire formats and topologies.
 in-process vs remote-dealer vs spool-cold-start and writes
 BENCH_distribution.json; `bench two_party` compares in-process vs
 localhost-TCP vs simulated LAN/WAN and writes BENCH_two_party.json.
+
+Observability: every role answers a `metrics` command (Prometheus text
+exposition, `# EOF`-terminated) and a `trace <label>` command (recorded
+spans of one session as JSONL) — `secformer metrics`/`secformer trace`
+fetch either from a running process, dispatching on `--role`. The trace
+id IS the session label already on every wire, so coordinator and party
+spans of one inference join with no new protocol fields. `--trace-dir`
+additionally streams spans to `DIR/trace-<role>.jsonl`; `--no-trace`
+turns the tracer off (requests are bit-identical either way). `bench
+observability` pins the tracing overhead and writes
+BENCH_observability.json.
 ";

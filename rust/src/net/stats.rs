@@ -58,6 +58,10 @@ pub struct CommStats {
     current: AtomicU8,
     offline_bytes: AtomicU64,
     offline_msgs: AtomicU64,
+    /// Wall-clock nanoseconds this party spent blocked in peer
+    /// send/recv at the `Transport` seam (category-independent: it is
+    /// the "network-bound vs compute-bound" split of a whole request).
+    transport_nanos: AtomicU64,
 }
 
 /// Shared handle to a party's stats.
@@ -108,6 +112,20 @@ impl CommStats {
     #[inline]
     pub fn record_nanos(&self, nanos: u64) {
         self.cur().nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Attribute wall-clock nanoseconds spent blocked in peer
+    /// send/recv (called by the `Transport` wrapper in
+    /// [`crate::proto::ctx::PartyCtx`], the one funnel every online
+    /// exchange passes through).
+    #[inline]
+    pub fn record_transport_nanos(&self, nanos: u64) {
+        self.transport_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Total nanoseconds blocked in peer send/recv.
+    pub fn transport_nanos(&self) -> u64 {
+        self.transport_nanos.load(Ordering::Relaxed)
     }
 
     /// Count one synchronous dealer (S1↔T) message of `bytes` payload.
@@ -171,6 +189,7 @@ impl CommStats {
         }
         self.offline_bytes.store(0, Ordering::Relaxed);
         self.offline_msgs.store(0, Ordering::Relaxed);
+        self.transport_nanos.store(0, Ordering::Relaxed);
     }
 
     /// Snapshot all counters (rounds, bytes, nanos) per category.
@@ -183,6 +202,7 @@ impl CommStats {
         }
         s.offline_bytes = self.offline_bytes();
         s.offline_msgs = self.offline_msgs();
+        s.transport_nanos = self.transport_nanos();
         s
     }
 }
@@ -201,6 +221,8 @@ pub struct StatsSnapshot {
     /// Synchronous dealer round-trips (zero in seeded AND pooled modes —
     /// the pooled-mode invariant tests assert on this).
     pub offline_msgs: u64,
+    /// Nanoseconds blocked in peer send/recv at the `Transport` seam.
+    pub transport_nanos: u64,
 }
 
 impl StatsSnapshot {
@@ -214,6 +236,7 @@ impl StatsSnapshot {
         }
         d.offline_bytes = self.offline_bytes - earlier.offline_bytes;
         d.offline_msgs = self.offline_msgs - earlier.offline_msgs;
+        d.transport_nanos = self.transport_nanos - earlier.transport_nanos;
         d
     }
 
@@ -228,6 +251,7 @@ impl StatsSnapshot {
         }
         self.offline_bytes += other.offline_bytes;
         self.offline_msgs += other.offline_msgs;
+        self.transport_nanos += other.transport_nanos;
     }
 
     /// Online bytes (this party) across all categories.
@@ -344,8 +368,24 @@ mod tests {
     fn reset_clears() {
         let s = CommStats::new_handle();
         s.record_round(5);
+        s.record_transport_nanos(1_000);
         s.reset();
         assert_eq!(s.total_bytes(), 0);
         assert_eq!(s.total_rounds(), 0);
+        assert_eq!(s.transport_nanos(), 0);
+    }
+
+    #[test]
+    fn transport_time_flows_through_snapshots() {
+        let s = CommStats::new_handle();
+        s.record_transport_nanos(500);
+        let snap1 = s.snapshot();
+        assert_eq!(snap1.transport_nanos, 500);
+        s.record_transport_nanos(250);
+        let d = s.snapshot().delta(&snap1);
+        assert_eq!(d.transport_nanos, 250);
+        let mut acc = snap1.clone();
+        acc.accumulate(&d);
+        assert_eq!(acc.transport_nanos, 750);
     }
 }

@@ -1,0 +1,314 @@
+//! Constant-memory latency aggregation: an HDR-style log-bucketed
+//! histogram for all-time quantiles and a slotted one-second ring for
+//! recent-window throughput.
+//!
+//! The previous latency surface was a fixed 4096-sample ring: memory
+//! was bounded but the quantiles silently became *windowed* quantiles
+//! once the ring wrapped, and p99/p99.9 of a long run were
+//! unrecoverable. [`LogHistogram`] keeps every sample forever in a
+//! fixed ~8 KB footprint by bucketing durations logarithmically: each
+//! power-of-two octave of nanoseconds is split into 16 linear
+//! sub-buckets, so any reported quantile is within `1/17 ≈ 6%` of the
+//! true value — comfortably inside the 5% phase-attribution tolerance
+//! when combined with exact `sum`/`count`/`max` counters.
+//!
+//! All state is atomic; recording is lock-free and wait-free
+//! (`fetch_add`/`fetch_max` only) so histograms can sit on the request
+//! hot path of every worker thread.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Values `0..LINEAR` ns get exact buckets; every octave above is split
+/// into `LINEAR` sub-buckets (relative error ≤ `1/(LINEAR+1)`).
+const LINEAR: usize = 16;
+const SUB_BITS: u32 = 4; // log2(LINEAR)
+/// Total bucket count: 16 exact + 60 octaves × 16 sub-buckets.
+const NBUCKETS: usize = LINEAR + (64 - SUB_BITS as usize) * LINEAR;
+
+/// Index of the log bucket containing `v` nanoseconds.
+fn bucket_index(v: u64) -> usize {
+    if v < LINEAR as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize; // 4..=63
+    let sub = ((v >> (msb as u32 - SUB_BITS)) & (LINEAR as u64 - 1)) as usize;
+    LINEAR + (msb - SUB_BITS as usize) * LINEAR + sub
+}
+
+/// Inclusive upper edge (in nanoseconds) of bucket `idx`.
+fn bucket_upper(idx: usize) -> u64 {
+    if idx < LINEAR {
+        return idx as u64;
+    }
+    let rel = idx - LINEAR;
+    let oct = (rel / LINEAR) as u32;
+    let sub = (rel % LINEAR) as u64;
+    (LINEAR as u64 + sub + 1)
+        .checked_shl(oct)
+        .map(|x| x - 1)
+        .unwrap_or(u64::MAX)
+}
+
+/// Lock-free log-bucketed duration histogram with exact count/sum/max.
+///
+/// Quantiles are all-time (never windowed) and accurate to ~6%; memory
+/// is constant regardless of sample count.
+#[derive(Debug)]
+pub struct LogHistogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        LogHistogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration, in nanoseconds.
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Record one duration, in seconds (negative values clamp to zero).
+    pub fn record(&self, seconds: f64) {
+        let ns = if seconds <= 0.0 { 0 } else { (seconds * 1e9).round() as u64 };
+        self.record_ns(ns);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded durations, in seconds.
+    pub fn sum_s(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Largest recorded duration, in seconds (exact, not bucketed).
+    pub fn max_s(&self) -> f64 {
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Mean recorded duration, in seconds (0 when empty).
+    pub fn mean_s(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_s() / n as f64
+        }
+    }
+
+    /// The `q`-quantile (`0.0..=1.0`) in seconds, reported as the upper
+    /// edge of the containing bucket (≤ ~6% above the true value).
+    /// Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_upper(i) as f64 / 1e9;
+            }
+        }
+        // Samples raced in after `count` was read; the max is a safe answer.
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Cumulative sample counts at the given ascending `le` boundaries
+    /// (nanoseconds), plus the total. Each fine bucket is attributed to
+    /// the smallest boundary containing its upper edge, so every sample
+    /// is counted exactly once and the returned counts are monotone —
+    /// the shape the Prometheus `_bucket` series requires.
+    pub fn cumulative(&self, bounds_ns: &[u64]) -> (Vec<u64>, u64) {
+        let mut cum = vec![0u64; bounds_ns.len()];
+        let mut total = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            total += c;
+            let upper = bucket_upper(i);
+            if let Some(j) = bounds_ns.iter().position(|&le| upper <= le) {
+                cum[j] += c;
+            }
+        }
+        for j in 1..cum.len() {
+            cum[j] += cum[j - 1];
+        }
+        (cum, total)
+    }
+}
+
+/// How many one-second slots [`WindowedRate`] keeps (bounds the largest
+/// supported window to `SLOTS - 1` seconds).
+const SLOTS: usize = 64;
+
+/// Event-rate gauge over a recent window: a ring of one-second slots
+/// stamped with their epoch, so idle periods age out instead of being
+/// averaged away (the failure mode of all-time `throughput_rps`).
+#[derive(Debug)]
+pub struct WindowedRate {
+    start: Instant,
+    slots: Box<[AtomicU64]>,
+    epochs: Box<[AtomicU64]>,
+}
+
+impl Default for WindowedRate {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WindowedRate {
+    /// A rate gauge anchored at the current instant.
+    pub fn new() -> Self {
+        WindowedRate {
+            start: Instant::now(),
+            slots: (0..SLOTS).map(|_| AtomicU64::new(0)).collect(),
+            epochs: (0..SLOTS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Epochs are 1-based so slot epoch 0 unambiguously means "never
+    /// written".
+    fn epoch(&self) -> u64 {
+        self.start.elapsed().as_secs() + 1
+    }
+
+    /// Count one event in the current one-second slot.
+    pub fn note(&self) {
+        let t = self.epoch();
+        let i = (t % SLOTS as u64) as usize;
+        if self.epochs[i].load(Ordering::Relaxed) != t {
+            // A racing writer may double-reset; the loss of a couple of
+            // events in one slot is acceptable for a throughput gauge.
+            self.epochs[i].store(t, Ordering::Relaxed);
+            self.slots[i].store(0, Ordering::Relaxed);
+        }
+        self.slots[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Events per second over the trailing `window_s` seconds
+    /// (including the current partial second), clamped to the ring
+    /// capacity. Young gauges divide by their actual age so early
+    /// readings are not understated.
+    pub fn rate(&self, window_s: u64) -> f64 {
+        let window = window_s.clamp(1, SLOTS as u64 - 1);
+        let t = self.epoch();
+        let mut n = 0u64;
+        for i in 0..SLOTS {
+            let e = self.epochs[i].load(Ordering::Relaxed);
+            if e <= t && e + window > t {
+                n += self.slots[i].load(Ordering::Relaxed);
+            }
+        }
+        n as f64 / window.min(t) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_and_upper_are_consistent() {
+        for v in [0u64, 1, 15, 16, 17, 31, 32, 1000, 123_456_789, u64::MAX / 2, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(i < NBUCKETS, "index {i} out of range for {v}");
+            let upper = bucket_upper(i);
+            assert!(upper >= v, "upper {upper} below value {v}");
+            if i > 0 {
+                assert!(bucket_upper(i - 1) < v, "value {v} fits an earlier bucket");
+            }
+        }
+        // Uppers are strictly increasing across the whole range.
+        for i in 1..NBUCKETS {
+            assert!(bucket_upper(i) > bucket_upper(i - 1), "non-monotone at {i}");
+        }
+    }
+
+    #[test]
+    fn quantiles_track_within_bucket_error() {
+        let h = LogHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(i as f64 / 1000.0); // 1ms..1s uniform
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean_s() - 0.5005).abs() < 1e-6);
+        assert!((h.max_s() - 1.0).abs() < 1e-9);
+        for (q, expect) in [(0.5, 0.5), (0.95, 0.95), (0.99, 0.99), (0.999, 0.999)] {
+            let got = h.quantile(q);
+            assert!(
+                got >= expect * 0.999 && got <= expect * 1.07,
+                "q{q}: got {got}, expected ~{expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_of_empty_is_zero() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_s(), 0.0);
+    }
+
+    #[test]
+    fn cumulative_counts_are_monotone_and_complete() {
+        let h = LogHistogram::new();
+        for i in 1..=100u64 {
+            h.record_ns(i * 1_000_000); // 1ms..100ms
+        }
+        let bounds: Vec<u64> = [0.005f64, 0.01, 0.05, 0.1, 10.0]
+            .iter()
+            .map(|s| (s * 1e9) as u64)
+            .collect();
+        let (cum, total) = h.cumulative(&bounds);
+        assert_eq!(total, 100);
+        for w in cum.windows(2) {
+            assert!(w[0] <= w[1], "cumulative counts must be monotone: {cum:?}");
+        }
+        assert_eq!(*cum.last().unwrap(), 100, "last bound must cover everything");
+        // ~half the samples are ≤ 50ms (bucketed edges allow slack).
+        assert!(cum[2] >= 45 && cum[2] <= 55, "cum at 50ms: {}", cum[2]);
+    }
+
+    #[test]
+    fn windowed_rate_counts_recent_events() {
+        let r = WindowedRate::new();
+        for _ in 0..30 {
+            r.note();
+        }
+        // All 30 events landed within the last few seconds.
+        let got = r.rate(10);
+        assert!(got > 0.0, "recent events must be visible");
+        assert!(got <= 30.0 + 1e-9);
+        // A 1-second window still sees them (they are in the current slot).
+        assert!(r.rate(1) >= 30.0 - 1e-9);
+    }
+}

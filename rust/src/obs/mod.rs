@@ -1,0 +1,113 @@
+//! Unified cross-process telemetry: session tracing, phase-attributed
+//! latency, and Prometheus-text metrics exposition for all three roles.
+//!
+//! The stack is a three-process distributed system (coordinator,
+//! `party-serve`, `dealer-serve`); this module is its one observability
+//! surface:
+//!
+//! - [`trace`] — bounded span rings keyed by the session label (the
+//!   trace id that already flows on every wire), with optional
+//!   `--trace-dir` JSONL export, so one slow session can be
+//!   reconstructed across all three processes.
+//! - [`hist`] — constant-memory log-bucketed histograms (all-time
+//!   p50/p95/p99/p99.9) and a recent-window throughput gauge.
+//! - [`registry`] — the shared `secformer_*` Prometheus name schema and
+//!   the renderer behind every role's `metrics` command.
+//! - [`PhaseBreakdown`] — the per-request wall-clock decomposition
+//!   (queue → share → bundle-wait → dispatch/transport → finish) whose
+//!   phases sum to total latency by construction.
+//!
+//! Everything here is std-only (no new dependencies) and strictly
+//! observation: tracing on vs. off is bit-identical in logits and
+//! identical in rounds/bytes.
+
+#![warn(missing_docs)]
+
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{LogHistogram, WindowedRate};
+pub use registry::{MetricsRegistry, ROLE_COORDINATOR, ROLE_DEALER, ROLE_PARTY};
+pub use trace::{opt_span, SpanGuard, SpanRecord, Tracer};
+
+/// Per-request wall-clock decomposition. The engine fills the
+/// share/bundle/dispatch/finish phases from contiguous timestamps (so
+/// they partition the engine wall exactly); the coordinator adds the
+/// queue wait it measured before the engine saw the request; transport
+/// is carved out of dispatch at the `Transport` seam.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    /// Submit → drain: time queued before a worker picked the request
+    /// up (includes the batcher's straggler wait).
+    pub queue_s: f64,
+    /// Input sharing: minting the session label and additive shares.
+    pub share_s: f64,
+    /// Blocking pop on the offline pool / bundle source.
+    pub bundle_wait_s: f64,
+    /// Online dispatch wall time (protocol rounds, includes transport).
+    pub dispatch_s: f64,
+    /// Of `dispatch_s`, time blocked in peer send/recv at the
+    /// `Transport` seam.
+    pub transport_s: f64,
+    /// Reconstruct + decode after the last round.
+    pub finish_s: f64,
+}
+
+impl PhaseBreakdown {
+    /// Online compute: dispatch wall minus transport-blocked time, plus
+    /// the reconstruct/decode tail.
+    pub fn compute_s(&self) -> f64 {
+        (self.dispatch_s - self.transport_s).max(0.0) + self.finish_s
+    }
+
+    /// Engine-side total (everything after the queue).
+    pub fn engine_s(&self) -> f64 {
+        self.share_s + self.bundle_wait_s + self.dispatch_s + self.finish_s
+    }
+
+    /// Full request total: queue wait plus engine phases. This is the
+    /// quantity the phase-sum invariant compares against measured
+    /// request latency (within 5%).
+    pub fn total_s(&self) -> f64 {
+        self.queue_s + self.engine_s()
+    }
+
+    /// Component-wise accumulate — merges the sequentially executed
+    /// chunks of one batch into the batch's total attribution.
+    pub fn accumulate(&mut self, other: &PhaseBreakdown) {
+        self.queue_s += other.queue_s;
+        self.share_s += other.share_s;
+        self.bundle_wait_s += other.bundle_wait_s;
+        self.dispatch_s += other.dispatch_s;
+        self.transport_s += other.transport_s;
+        self.finish_s += other.finish_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_partition_the_total() {
+        let p = PhaseBreakdown {
+            queue_s: 0.010,
+            share_s: 0.002,
+            bundle_wait_s: 0.001,
+            dispatch_s: 0.050,
+            transport_s: 0.030,
+            finish_s: 0.003,
+        };
+        assert!((p.engine_s() - 0.056).abs() < 1e-12);
+        assert!((p.total_s() - 0.066).abs() < 1e-12);
+        // compute + transport reassemble dispatch + finish exactly.
+        assert!((p.compute_s() + p.transport_s - (p.dispatch_s + p.finish_s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_never_goes_negative() {
+        let p = PhaseBreakdown { dispatch_s: 0.01, transport_s: 0.02, ..Default::default() };
+        assert_eq!(p.compute_s(), 0.0);
+    }
+}

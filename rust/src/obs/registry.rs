@@ -1,0 +1,198 @@
+//! Prometheus-text-format exposition shared by all three roles.
+//!
+//! [`MetricsRegistry`] is a one-shot renderer: each role assembles its
+//! metrics into a registry and renders the text response for its
+//! `metrics` command. Using one builder everywhere is what keeps the
+//! name schema unified — the same metric name means the same thing on
+//! the coordinator, the party host and the dealer, distinguished only
+//! by the mandatory `role` label.
+//!
+//! ## Name schema
+//!
+//! Every metric is prefixed `secformer_`; units are spelled in the
+//! name (`_seconds`, `_bytes`, `_ms`); monotone values end in `_total`.
+//! Shared families (emitted by more than one role):
+//!
+//! - `secformer_uptime_seconds{role=...}`
+//! - `secformer_trace_spans{role=...}` / `secformer_trace_enabled{role=...}`
+//! - `secformer_pool_depth{role=...}` and the other pool gauges
+//!
+//! The response body ends with a literal `# EOF` line so line-protocol
+//! clients (the coordinator serves `metrics` over its newline-delimited
+//! TCP protocol) know where the multi-line payload stops; framed
+//! clients simply ignore it.
+
+use super::hist::LogHistogram;
+
+/// Role label value for the coordinator (`serve`).
+pub const ROLE_COORDINATOR: &str = "coordinator";
+/// Role label value for the party host (`party-serve`).
+pub const ROLE_PARTY: &str = "party";
+/// Role label value for the dealer (`dealer-serve`).
+pub const ROLE_DEALER: &str = "dealer";
+
+/// Histogram `le` boundaries (seconds) used for every latency
+/// histogram the registry renders: stable, shared across roles.
+pub const LE_BOUNDS_S: [f64; 16] = [
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0,
+    60.0,
+];
+
+/// One-shot Prometheus text builder; construct, add families, render.
+pub struct MetricsRegistry {
+    role: &'static str,
+    out: String,
+}
+
+/// Format a float the way Prometheus samples expect (plain decimal,
+/// integers without a trailing `.0`).
+fn fmt_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl MetricsRegistry {
+    /// A registry whose every sample carries `role="<role>"`.
+    pub fn new(role: &'static str) -> Self {
+        MetricsRegistry { role, out: String::with_capacity(4096) }
+    }
+
+    fn header(&mut self, name: &str, help: &str, ty: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {ty}\n"));
+    }
+
+    fn sample(&mut self, name: &str, extra: &str, v: f64) {
+        if extra.is_empty() {
+            self.out.push_str(&format!("{name}{{role=\"{}\"}} {}\n", self.role, fmt_value(v)));
+        } else {
+            self.out.push_str(&format!(
+                "{name}{{role=\"{}\",{extra}}} {}\n",
+                self.role,
+                fmt_value(v)
+            ));
+        }
+    }
+
+    /// Emit a single-sample counter family.
+    pub fn counter(&mut self, name: &str, help: &str, v: f64) {
+        self.header(name, help, "counter");
+        self.sample(name, "", v);
+    }
+
+    /// Emit a counter family with one sample per `(labels, value)` row;
+    /// `labels` is pre-rendered (e.g. `cat="gelu"`).
+    pub fn counter_rows(&mut self, name: &str, help: &str, rows: &[(String, f64)]) {
+        self.header(name, help, "counter");
+        for (labels, v) in rows {
+            self.sample(name, labels, *v);
+        }
+    }
+
+    /// Emit a single-sample gauge family.
+    pub fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.header(name, help, "gauge");
+        self.sample(name, "", v);
+    }
+
+    /// Emit a gauge family with one sample per `(labels, value)` row.
+    pub fn gauge_rows(&mut self, name: &str, help: &str, rows: &[(String, f64)]) {
+        self.header(name, help, "gauge");
+        for (labels, v) in rows {
+            self.sample(name, labels, *v);
+        }
+    }
+
+    /// Emit a full Prometheus histogram (`_bucket`/`_sum`/`_count`)
+    /// from a [`LogHistogram`], using the shared [`LE_BOUNDS_S`].
+    pub fn histogram(&mut self, name: &str, help: &str, h: &LogHistogram) {
+        self.histogram_rows(name, help, &[(String::new(), h)]);
+    }
+
+    /// Emit one histogram family with several labeled series (e.g. one
+    /// per engine); headers appear once, as the text format requires.
+    pub fn histogram_rows(&mut self, name: &str, help: &str, rows: &[(String, &LogHistogram)]) {
+        self.header(name, help, "histogram");
+        let bounds_ns: Vec<u64> = LE_BOUNDS_S.iter().map(|s| (s * 1e9) as u64).collect();
+        let bucket = format!("{name}_bucket");
+        let join = |labels: &str, le: &str| {
+            if labels.is_empty() {
+                format!("le=\"{le}\"")
+            } else {
+                format!("{labels},le=\"{le}\"")
+            }
+        };
+        for (labels, h) in rows {
+            let (cum, total) = h.cumulative(&bounds_ns);
+            for (le, c) in LE_BOUNDS_S.iter().zip(cum.iter()) {
+                self.sample(&bucket, &join(labels, &le.to_string()), *c as f64);
+            }
+            self.sample(&bucket, &join(labels, "+Inf"), total as f64);
+            self.sample(&format!("{name}_sum"), labels, h.sum_s());
+            self.sample(&format!("{name}_count"), labels, total as f64);
+        }
+    }
+
+    /// Finish: the complete exposition body, `# EOF`-terminated.
+    pub fn render(mut self) -> String {
+        self.out.push_str("# EOF\n");
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn families_render_with_role_and_eof() {
+        let mut r = MetricsRegistry::new(ROLE_COORDINATOR);
+        r.counter("secformer_requests_total", "Requests served.", 42.0);
+        r.gauge("secformer_pool_depth", "Bundles ready.", 7.0);
+        r.gauge_rows(
+            "secformer_link_rtt_ms",
+            "Party link RTT.",
+            &[("kind=\"last\"".to_string(), 1.25), ("kind=\"ewma\"".to_string(), 1.5)],
+        );
+        let text = r.render();
+        assert!(text.contains("# HELP secformer_requests_total Requests served.\n"));
+        assert!(text.contains("# TYPE secformer_requests_total counter\n"));
+        assert!(text.contains("secformer_requests_total{role=\"coordinator\"} 42\n"));
+        assert!(text.contains("secformer_link_rtt_ms{role=\"coordinator\",kind=\"last\"} 1.25\n"));
+        assert!(text.ends_with("# EOF\n"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_monotone_and_capped_by_inf() {
+        let h = LogHistogram::new();
+        for i in 1..=50u64 {
+            h.record(i as f64 / 100.0); // 10ms..500ms
+        }
+        let mut r = MetricsRegistry::new(ROLE_PARTY);
+        r.histogram("secformer_request_latency_seconds", "Latency.", &h);
+        let text = r.render();
+        let mut last = 0.0f64;
+        let mut inf = None;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("secformer_request_latency_seconds_bucket{") {
+                let v: f64 = rest.rsplit(' ').next().unwrap().parse().expect("bucket value");
+                assert!(v >= last, "bucket counts must be monotone: {line}");
+                last = v;
+                if rest.contains("le=\"+Inf\"") {
+                    inf = Some(v);
+                }
+            }
+        }
+        assert_eq!(inf, Some(50.0), "+Inf bucket must equal the count");
+        assert!(text.contains("secformer_request_latency_seconds_count{role=\"party\"} 50\n"));
+    }
+
+    #[test]
+    fn integer_valued_samples_render_without_decimals() {
+        assert_eq!(fmt_value(5.0), "5");
+        assert_eq!(fmt_value(0.25), "0.25");
+        assert_eq!(fmt_value(0.0), "0");
+    }
+}

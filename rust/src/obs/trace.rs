@@ -1,0 +1,326 @@
+//! Session tracing: lightweight spans recorded into a bounded
+//! per-process ring, keyed by the session label so one request can be
+//! reconstructed across the coordinator, the party host and the dealer.
+//!
+//! ## Span model
+//!
+//! A span is `(trace, role, name, start_us, dur_us)`:
+//!
+//! - `trace` is the **session label** (`{model_label}-{counter}`) that
+//!   already flows through every process: the engine mints it, the
+//!   party wire carries it in `START`/`START_BATCH`, and pooled/dealer
+//!   bundles are keyed by it. No new wire field is needed — the trace
+//!   id *is* the session label, so spans recorded independently on
+//!   three machines join on it after the fact.
+//! - `role` tags the recording process (`coordinator`/`party`/`dealer`),
+//!   which keeps spans separable even when several roles share one
+//!   process (in-process tests, benches).
+//! - `name` follows `session` → `phase:*` → `op:*` nesting by
+//!   convention; consumers group by prefix.
+//! - Timestamps are microseconds since the tracer's construction; they
+//!   order spans *within* one process. Cross-process alignment uses the
+//!   shared `session` span as the anchor, not wall clocks.
+//!
+//! Tracing is observation-only: a [`Tracer`] never touches protocol
+//! state, randomness or message contents, so enabling it cannot change
+//! logits, round counts or bytes on the wire (pinned by
+//! `tests/observability.rs`).
+
+use crate::core::sync::lock_or_recover;
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default bound on the per-process span ring (~0.5 MB worst case).
+pub const DEFAULT_RING_SPANS: usize = 4096;
+
+/// One completed span. See the module docs for the field semantics.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Trace id: the session label (or bundle label on the dealer).
+    pub trace: String,
+    /// Which process recorded it: `coordinator`, `party` or `dealer`.
+    pub role: &'static str,
+    /// Span name (`session`, `phase:share`, `pull`, ...).
+    pub name: String,
+    /// Start, in microseconds since the recording tracer's epoch.
+    pub start_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+}
+
+/// Escape a string for embedding in a JSON literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl SpanRecord {
+    /// One JSON object (no trailing newline) — the JSONL export format.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"trace\":\"{}\",\"role\":\"{}\",\"name\":\"{}\",\"start_us\":{},\"dur_us\":{}}}",
+            json_escape(&self.trace),
+            self.role,
+            json_escape(&self.name),
+            self.start_us,
+            self.dur_us
+        )
+    }
+}
+
+/// A per-role span recorder: bounded in-memory ring plus an optional
+/// append-only JSONL sink (`--trace-dir`).
+///
+/// Recording is behind a single `enabled` flag so the disabled path is
+/// one relaxed atomic load and no allocation — the property the
+/// `bench observability` overhead bound relies on.
+pub struct Tracer {
+    role: &'static str,
+    enabled: AtomicBool,
+    epoch: Instant,
+    cap: usize,
+    dropped: AtomicU64,
+    ring: Mutex<VecDeque<SpanRecord>>,
+    sink: Mutex<Option<BufWriter<File>>>,
+}
+
+impl Tracer {
+    /// A tracer for `role` with the default ring bound, enabled.
+    pub fn new(role: &'static str) -> Arc<Self> {
+        Self::with_capacity(role, DEFAULT_RING_SPANS, true)
+    }
+
+    /// A tracer with an explicit ring bound and initial enabled state.
+    pub fn with_capacity(role: &'static str, cap: usize, enabled: bool) -> Arc<Self> {
+        Arc::new(Tracer {
+            role,
+            enabled: AtomicBool::new(enabled),
+            epoch: Instant::now(),
+            cap: cap.max(1),
+            dropped: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+            sink: Mutex::new(None),
+        })
+    }
+
+    /// The role tag this tracer stamps on every span.
+    pub fn role(&self) -> &'static str {
+        self.role
+    }
+
+    /// Turn span recording on or off (runtime-switchable).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether spans are currently recorded.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Spans recorded so far and still in the ring.
+    pub fn len(&self) -> usize {
+        lock_or_recover(&self.ring).len()
+    }
+
+    /// Whether the ring holds no spans.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans evicted from the ring since startup.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Attach a JSONL export sink: appends every span to
+    /// `{dir}/trace-{role}.jsonl` (directory is created if missing).
+    pub fn set_dir(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join(format!("trace-{}.jsonl", self.role)))?;
+        *lock_or_recover(&self.sink) = Some(BufWriter::new(f));
+        Ok(())
+    }
+
+    /// Open a span; it is recorded when the returned guard drops. When
+    /// tracing is disabled this allocates nothing and records nothing.
+    pub fn span(self: &Arc<Self>, trace: &str, name: &str) -> SpanGuard {
+        if !self.is_enabled() {
+            return SpanGuard { tracer: None, trace: String::new(), name: String::new(), start: self.epoch };
+        }
+        SpanGuard {
+            tracer: Some(self.clone()),
+            trace: trace.to_string(),
+            name: name.to_string(),
+            start: Instant::now(),
+        }
+    }
+
+    /// Record a span from explicit instants (for intervals that started
+    /// before a guard could — e.g. queue wait measured from `submitted`).
+    pub fn record(&self, trace: &str, name: &str, start: Instant, end: Instant) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.push_span(trace.to_string(), name.to_string(), start, end);
+    }
+
+    fn push_span(&self, trace: String, name: String, start: Instant, end: Instant) {
+        let rec = SpanRecord {
+            trace,
+            role: self.role,
+            name,
+            start_us: start.saturating_duration_since(self.epoch).as_micros() as u64,
+            dur_us: end.saturating_duration_since(start).as_micros() as u64,
+        };
+        if let Some(w) = lock_or_recover(&self.sink).as_mut() {
+            // Line-buffered-ish: flush per span so a crash loses nothing.
+            let _ = writeln!(w, "{}", rec.to_json());
+            let _ = w.flush();
+        }
+        let mut ring = lock_or_recover(&self.ring);
+        if ring.len() >= self.cap {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(rec);
+    }
+
+    /// All ring spans whose trace id equals `trace`, oldest first.
+    pub fn spans_for(&self, trace: &str) -> Vec<SpanRecord> {
+        lock_or_recover(&self.ring).iter().filter(|s| s.trace == trace).cloned().collect()
+    }
+
+    /// The most recent `n` ring spans, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<SpanRecord> {
+        let ring = lock_or_recover(&self.ring);
+        ring.iter().skip(ring.len().saturating_sub(n)).cloned().collect()
+    }
+
+    /// Render the spans for `trace` as JSONL, terminated by `# EOF` —
+    /// the response body of the `trace` command on every role.
+    pub fn render_trace(&self, trace: &str) -> String {
+        let mut out = String::new();
+        for s in self.spans_for(trace) {
+            out.push_str(&s.to_json());
+            out.push('\n');
+        }
+        out.push_str("# EOF\n");
+        out
+    }
+}
+
+/// RAII guard returned by [`Tracer::span`]; records the span on drop.
+pub struct SpanGuard {
+    tracer: Option<Arc<Tracer>>,
+    trace: String,
+    name: String,
+    start: Instant,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(t) = self.tracer.take() {
+            let end = Instant::now();
+            t.push_span(std::mem::take(&mut self.trace), std::mem::take(&mut self.name), self.start, end);
+        }
+    }
+}
+
+/// Open a span on an optional tracer (the engine holds
+/// `Option<Arc<Tracer>>`); `None` or disabled costs nothing.
+pub fn opt_span(tracer: &Option<Arc<Tracer>>, trace: &str, name: &str) -> Option<SpanGuard> {
+    tracer.as_ref().map(|t| t.span(trace, name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_record_and_filter_by_trace() {
+        let t = Tracer::new("coordinator");
+        {
+            let _a = t.span("sess-1", "session");
+            let _b = t.span("sess-1", "phase:share");
+            let _c = t.span("sess-2", "session");
+        }
+        assert_eq!(t.len(), 3);
+        let got = t.spans_for("sess-1");
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().all(|s| s.role == "coordinator"));
+        let names: Vec<&str> = got.iter().map(|s| s.name.as_str()).collect();
+        assert!(names.contains(&"session") && names.contains(&"phase:share"));
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::with_capacity("party", 16, false);
+        {
+            let _a = t.span("sess-1", "session");
+            t.record("sess-1", "phase:queue", Instant::now(), Instant::now());
+        }
+        assert!(t.is_empty());
+        t.set_enabled(true);
+        {
+            let _a = t.span("sess-1", "session");
+        }
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let t = Tracer::with_capacity("dealer", 4, true);
+        for i in 0..10 {
+            let _s = t.span(&format!("sess-{i}"), "pull");
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped(), 6);
+        // The survivors are the most recent four.
+        assert_eq!(t.spans_for("sess-9").len(), 1);
+        assert!(t.spans_for("sess-0").is_empty());
+    }
+
+    #[test]
+    fn json_is_escaped_and_eof_terminated() {
+        let t = Tracer::new("coordinator");
+        {
+            let _s = t.span("weird\"label\\x", "session");
+        }
+        let text = t.render_trace("weird\"label\\x");
+        assert!(text.ends_with("# EOF\n"));
+        let line = text.lines().next().unwrap();
+        assert!(line.starts_with('{') && line.contains("\\\"label\\\\x"));
+        assert!(line.contains("\"role\":\"coordinator\""));
+    }
+
+    #[test]
+    fn jsonl_sink_appends_spans() {
+        let dir = std::env::temp_dir().join(format!("secformer-trace-test-{}", std::process::id()));
+        let t = Tracer::new("coordinator");
+        t.set_dir(&dir).expect("set_dir");
+        {
+            let _s = t.span("sess-file", "session");
+        }
+        let path = dir.join("trace-coordinator.jsonl");
+        let body = std::fs::read_to_string(&path).expect("read trace file");
+        assert!(body.contains("\"trace\":\"sess-file\""));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

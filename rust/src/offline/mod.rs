@@ -46,8 +46,8 @@ pub use planner::{
 pub use pool::{generate_bundle, PoolConfig, PoolSnapshot, SessionBundle, Tuple, TuplePool};
 pub use provider::{PooledProvider, PoolTelemetry};
 pub use remote::{
-    fetch_dealer_stats, serve_dealer, spawn_dealer, spawn_dealer_with, DealerConfig,
-    DealerStats, RemotePool, RemotePoolConfig,
+    fetch_dealer_metrics, fetch_dealer_stats, fetch_dealer_trace, serve_dealer, spawn_dealer,
+    spawn_dealer_with, DealerConfig, DealerStats, RemotePool, RemotePoolConfig,
 };
 pub use source::{BundleSource, PoolSet};
 pub use spool::{SpoolConfig, SpooledSource};

@@ -43,6 +43,7 @@
 //! while bundle credit is outstanding is treated as a dead link.
 
 use crate::nn::config::ModelConfig;
+use crate::obs::{MetricsRegistry, Tracer, ROLE_DEALER};
 use crate::offline::planner::{plan_demand, PlanInput};
 use crate::offline::pool::{PoolSnapshot, SessionBundle};
 use crate::offline::source::{BundleSource, PoolSet};
@@ -53,6 +54,7 @@ use crate::offline::wire::{
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -62,11 +64,23 @@ use std::time::{Duration, Instant};
 // ---------------------------------------------------------------------
 
 /// Dealer service policy (`dealer-serve` flags beyond pool sizing).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct DealerConfig {
     /// Require this pre-shared key at the connection handshake
     /// (`dealer-serve --psk`).
     pub psk: Option<String>,
+    /// Record `pull` spans into the dealer's trace ring (on by default;
+    /// the ring is bounded and recording is observation-only).
+    pub trace: bool,
+    /// Export every recorded span to `{dir}/trace-dealer.jsonl`
+    /// (`dealer-serve --trace-dir`).
+    pub trace_dir: Option<String>,
+}
+
+impl Default for DealerConfig {
+    fn default() -> Self {
+        DealerConfig { psk: None, trace: true, trace_dir: None }
+    }
 }
 
 /// Live telemetry of one coordinator connection.
@@ -173,15 +187,24 @@ pub fn dealer_accept_loop(
     cfg: DealerConfig,
     stats: Arc<DealerStats>,
 ) {
+    let tracer =
+        Tracer::with_capacity(ROLE_DEALER, crate::obs::trace::DEFAULT_RING_SPANS, cfg.trace);
+    if let Some(dir) = &cfg.trace_dir {
+        if let Err(e) = tracer.set_dir(Path::new(dir)) {
+            eprintln!("dealer: cannot open trace dir {dir}: {e}");
+        }
+    }
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
                 let pools = pools.clone();
                 let cfg = cfg.clone();
                 let stats = stats.clone();
+                let tracer = tracer.clone();
                 std::thread::spawn(move || {
                     let peer = s.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-                    if let Err(e) = handle_dealer_conn(s, &pools, &cfg, &stats, &peer) {
+                    if let Err(e) = handle_dealer_conn(s, &pools, &cfg, &stats, &tracer, &peer)
+                    {
                         eprintln!("dealer: connection {peer}: {e}");
                     }
                     stats.conns.lock().unwrap().remove(&peer);
@@ -239,6 +262,113 @@ pub fn fetch_dealer_stats(addr: &str, psk: Option<&str>) -> Result<String> {
     }
 }
 
+/// Query a running dealer's `metrics` endpoint; returns the Prometheus
+/// text body. Like [`fetch_dealer_stats`], this needs the PSK but no
+/// manifest handshake. This is the body of `secformer metrics --role
+/// dealer`.
+pub fn fetch_dealer_metrics(addr: &str, psk: Option<&str>) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect to dealer {addr}"))?;
+    stream.set_nodelay(true)?;
+    client_auth(&mut stream, psk)?;
+    write_frame(&mut stream, msg::METRICS, &[])?;
+    match read_frame(&mut stream).map_err(|e| anyhow!("metrics query: {e}"))? {
+        (t, p) if t == msg::METRICS => Ok(String::from_utf8_lossy(&p).into_owned()),
+        (t, p) if t == msg::ERR => {
+            bail!("dealer rejected metrics query: {}", String::from_utf8_lossy(&p))
+        }
+        (t, _) => bail!("unexpected metrics reply type {t}"),
+    }
+}
+
+/// Fetch the dealer's recorded spans for one trace id (session/bundle
+/// label) as JSONL. This is the body of `secformer trace --role dealer`.
+pub fn fetch_dealer_trace(addr: &str, psk: Option<&str>, trace: &str) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect to dealer {addr}"))?;
+    stream.set_nodelay(true)?;
+    client_auth(&mut stream, psk)?;
+    write_frame(&mut stream, msg::TRACE, trace.as_bytes())?;
+    match read_frame(&mut stream).map_err(|e| anyhow!("trace query: {e}"))? {
+        (t, p) if t == msg::TRACE => Ok(String::from_utf8_lossy(&p).into_owned()),
+        (t, p) if t == msg::ERR => {
+            bail!("dealer rejected trace query: {}", String::from_utf8_lossy(&p))
+        }
+        (t, _) => bail!("unexpected trace reply type {t}"),
+    }
+}
+
+/// The dealer's side of the unified `secformer_*` exposition: pool
+/// gauges, pull/serve counters and trace-ring health, every sample
+/// labelled `role="dealer"`.
+fn render_dealer_metrics(pools: &PoolSet, stats: &DealerStats, tracer: &Tracer) -> String {
+    let mut r = MetricsRegistry::new(ROLE_DEALER);
+    r.gauge(
+        "secformer_uptime_seconds",
+        "Seconds since this role started.",
+        stats.started.elapsed().as_secs_f64(),
+    );
+    let ps = pools.snapshot();
+    r.gauge(
+        "secformer_pool_depth",
+        "Bundles ready, in request capacity.",
+        ps.depth as f64,
+    );
+    r.counter("secformer_pool_produced_total", "Bundles generated.", ps.produced as f64);
+    r.counter(
+        "secformer_pool_consumed_total",
+        "Bundles handed to consumers.",
+        ps.consumed as f64,
+    );
+    r.counter(
+        "secformer_pool_hits_total",
+        "Pops served from pregenerated material.",
+        ps.hits as f64,
+    );
+    r.counter(
+        "secformer_pool_misses_total",
+        "Pops degraded to seeded fallback.",
+        ps.misses as f64,
+    );
+    r.counter(
+        "secformer_offline_bytes_total",
+        "Offline-phase bytes generated or shipped.",
+        ps.offline_bytes as f64,
+    );
+    r.counter(
+        "secformer_dealer_pulls_total",
+        "PULL frames handled.",
+        stats.pulls() as f64,
+    );
+    r.counter(
+        "secformer_dealer_bundles_requested_total",
+        "Bundles requested by PULL credit.",
+        stats.requested.load(Ordering::Relaxed) as f64,
+    );
+    r.counter(
+        "secformer_dealer_bundles_served_total",
+        "BUNDLE frames written back.",
+        stats.served() as f64,
+    );
+    r.gauge(
+        "secformer_dealer_connected_coordinators",
+        "Coordinator connections alive right now.",
+        stats.conns.lock().unwrap().len() as f64,
+    );
+    r.gauge(
+        "secformer_trace_enabled",
+        "Whether span recording is on.",
+        if tracer.is_enabled() { 1.0 } else { 0.0 },
+    );
+    r.gauge("secformer_trace_spans", "Spans held in the ring.", tracer.len() as f64);
+    r.counter(
+        "secformer_trace_dropped_total",
+        "Spans evicted from the bounded ring.",
+        tracer.dropped() as f64,
+    );
+    r.render()
+}
+
 fn send_err(stream: &mut TcpStream, why: &str) {
     let _ = write_frame(stream, msg::ERR, why.as_bytes());
 }
@@ -248,20 +378,38 @@ fn handle_dealer_conn(
     pools: &PoolSet,
     cfg: &DealerConfig,
     stats: &DealerStats,
+    tracer: &Arc<Tracer>,
     peer: &str,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
     server_auth(&mut stream, cfg.psk.as_deref())?;
-    // Handshake: HELLO carries (kind, fingerprint) pairs. A bare STATS
-    // query (monitoring) is answered without a manifest handshake — it
-    // exposes service counters, never bundle material.
+    // Handshake: HELLO carries (kind, fingerprint) pairs. Bare STATS /
+    // METRICS / TRACE queries (monitoring) are answered without a
+    // manifest handshake — they expose service counters and spans,
+    // never bundle material.
     let (mut ty, mut payload) =
         read_frame(&mut stream).map_err(|e| anyhow!("handshake: {e}"))?;
-    while ty == msg::STATS {
-        write_frame(&mut stream, msg::STATS_OK, stats.render_json(pools).as_bytes())?;
+    loop {
+        match ty {
+            msg::STATS => {
+                write_frame(&mut stream, msg::STATS_OK, stats.render_json(pools).as_bytes())?;
+            }
+            msg::METRICS => {
+                write_frame(
+                    &mut stream,
+                    msg::METRICS,
+                    render_dealer_metrics(pools, stats, tracer).as_bytes(),
+                )?;
+            }
+            msg::TRACE => {
+                let label = String::from_utf8_lossy(&payload).into_owned();
+                write_frame(&mut stream, msg::TRACE, tracer.render_trace(&label).as_bytes())?;
+            }
+            _ => break,
+        }
         match read_frame(&mut stream) {
             Ok(f) => (ty, payload) = f,
-            Err(_) => return Ok(()), // stats poller went away
+            Err(_) => return Ok(()), // monitoring poller went away
         }
     }
     if ty != msg::HELLO {
@@ -331,10 +479,15 @@ fn handle_dealer_conn(
                 for _ in 0..count {
                     // Arrival signal first so adaptive pools size to the
                     // pull rate, then a (possibly blocking) pop.
+                    let t0 = Instant::now();
                     pools.note_arrival(kind);
                     match pools.pop(kind) {
                         Some(b) => {
                             write_frame(&mut stream, msg::BUNDLE, &encode_bundle(&b))?;
+                            // The span is keyed by the bundle's session
+                            // label — the trace id the coordinator's
+                            // spans for the same session carry.
+                            tracer.record(&b.session, "pull", t0, Instant::now());
                             stats.served.fetch_add(1, Ordering::Relaxed);
                             if let Some(c) = stats.conns.lock().unwrap().get_mut(peer) {
                                 c.served += 1;
@@ -353,6 +506,17 @@ fn handle_dealer_conn(
                     msg::STATS_OK,
                     stats.render_json(pools).as_bytes(),
                 )?;
+            }
+            msg::METRICS => {
+                write_frame(
+                    &mut stream,
+                    msg::METRICS,
+                    render_dealer_metrics(pools, stats, tracer).as_bytes(),
+                )?;
+            }
+            msg::TRACE => {
+                let label = String::from_utf8_lossy(&payload).into_owned();
+                write_frame(&mut stream, msg::TRACE, tracer.render_trace(&label).as_bytes())?;
             }
             msg::ERR => return Ok(()), // client-side goodbye
             other => {
@@ -819,6 +983,14 @@ impl BundleSource for RemotePool {
         self.dealer_reconnects()
     }
 
+    fn pulls_sent(&self) -> u64 {
+        self.shared.pulls_sent.load(Ordering::Relaxed)
+    }
+
+    fn prefetch_depth(&self) -> usize {
+        self.local_depth()
+    }
+
     fn snapshot(&self) -> PoolSnapshot {
         PoolSnapshot {
             depth: self.local_depth(),
@@ -1018,7 +1190,7 @@ mod tests {
         );
         let (addr, _) = spawn_dealer_with(
             pools.clone(),
-            DealerConfig { psk: Some("hunter2".to_string()) },
+            DealerConfig { psk: Some("hunter2".to_string()), ..DealerConfig::default() },
         )
         .expect("spawn dealer");
         // Keyless clients are refused locally (the challenge demands a key).

@@ -80,6 +80,34 @@ pub trait BundleSource: Send + Sync {
         0
     }
 
+    /// Credit-based `PULL` requests this source sent to a remote dealer
+    /// since startup ([`crate::offline::remote::RemotePool`] overrides;
+    /// sources without a dealer link stay 0).
+    fn pulls_sent(&self) -> u64 {
+        0
+    }
+
+    /// Bundles sitting in this source's dealer-prefetch queue right now
+    /// ([`crate::offline::remote::RemotePool`] overrides this with its
+    /// local queue depth; sources without a dealer link stay 0).
+    fn prefetch_depth(&self) -> usize {
+        0
+    }
+
+    /// Consumed-bundle tombstones currently recorded by a disk spool
+    /// ([`crate::offline::spool::SpooledSource`] overrides; memory-only
+    /// sources stay 0).
+    fn spool_tombstones(&self) -> u64 {
+        0
+    }
+
+    /// Spool-file compactions performed since startup
+    /// ([`crate::offline::spool::SpooledSource`] overrides; memory-only
+    /// sources stay 0).
+    fn spool_compactions(&self) -> u64 {
+        0
+    }
+
     /// Stop background production/prefetch and unblock waiting
     /// consumers (which then receive `None`). Idempotent.
     fn stop(&self);

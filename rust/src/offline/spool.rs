@@ -605,6 +605,22 @@ impl BundleSource for SpooledSource {
         self.shared.inner.as_ref().map_or(0, |i| i.reconnects())
     }
 
+    fn pulls_sent(&self) -> u64 {
+        self.shared.inner.as_ref().map_or(0, |i| i.pulls_sent())
+    }
+
+    fn prefetch_depth(&self) -> usize {
+        self.shared.inner.as_ref().map_or(0, |i| i.prefetch_depth())
+    }
+
+    fn spool_tombstones(&self) -> u64 {
+        self.tombstones()
+    }
+
+    fn spool_compactions(&self) -> u64 {
+        self.compactions()
+    }
+
     fn stop(&self) {
         self.shared.stopping.store(true, Ordering::Relaxed);
         self.shared.cv.notify_all();

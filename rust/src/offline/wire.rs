@@ -74,6 +74,13 @@ pub mod msg {
     /// Client → server: PSK challenge response (32-byte SHA-256, or
     /// empty when the server's challenge did not require auth).
     pub const AUTH: u8 = 10;
+    /// Either direction (request: empty payload; reply: Prometheus
+    /// text). Like [`STATS`], answered without a manifest handshake —
+    /// it exposes service counters, never bundle material.
+    pub const METRICS: u8 = 11;
+    /// Either direction (request: trace-id payload; reply: JSONL span
+    /// dump). Answered without a manifest handshake, like [`METRICS`].
+    pub const TRACE: u8 = 12;
 }
 
 /// Why a frame could not be read.

@@ -38,8 +38,9 @@ pub mod supervisor;
 pub mod wire;
 
 pub use runtime::{
-    serve_party, spawn_party_host, spawn_party_host_stats, DialError, LinkOptions,
-    PartyHostConfig, PartyHostStats, RemoteParty, RemoteSession,
+    fetch_party_metrics, fetch_party_trace, serve_party, spawn_party_host,
+    spawn_party_host_stats, DialError, LinkOptions, PartyHostConfig, PartyHostStats,
+    RemoteParty, RemoteSession,
 };
 pub use supervisor::{PartyLinkSupervisor, RedialPolicy};
 pub use wire::config_fingerprint;

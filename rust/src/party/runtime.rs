@@ -37,6 +37,7 @@ use crate::net::transport::{channel_pair, Transport};
 use crate::nn::config::ModelConfig;
 use crate::nn::model::{bert_forward_batch, InputShare};
 use crate::nn::weights::ShareMap;
+use crate::obs::{MetricsRegistry, Tracer, ROLE_PARTY};
 use crate::offline::planner::PlanInput;
 use crate::offline::pool::SessionBundle;
 use crate::offline::provider::PooledProvider;
@@ -54,6 +55,7 @@ use crate::sharing::provider::{FastSeededProvider, Provider};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -74,11 +76,17 @@ pub struct PartyHostConfig {
     /// misaligned prefix degrades to seeded fallback instead of
     /// draining the pool forever.
     pub stash_limit: usize,
+    /// Record session spans into the host's trace ring (on by default;
+    /// the ring is bounded and recording is observation-only).
+    pub trace: bool,
+    /// Export every recorded span to `{dir}/trace-party.jsonl`
+    /// (`party-serve --trace-dir`).
+    pub trace_dir: Option<String>,
 }
 
 impl Default for PartyHostConfig {
     fn default() -> Self {
-        PartyHostConfig { psk: None, stash_limit: 64 }
+        PartyHostConfig { psk: None, stash_limit: 64, trace: true, trace_dir: None }
     }
 }
 
@@ -122,6 +130,8 @@ struct HostCtx {
     host: PartyHostConfig,
     fingerprint: [u8; 32],
     stats: Arc<PartyHostStats>,
+    tracer: Arc<Tracer>,
+    started: Instant,
 }
 
 /// Serve party S1 on `bind`, forever (one handler thread per
@@ -164,7 +174,23 @@ pub fn party_accept_loop_stats(
     stats: Arc<PartyHostStats>,
 ) {
     let fingerprint = config_fingerprint(&cfg, &shares1);
-    let ctx = Arc::new(HostCtx { cfg, shares1, source, host, fingerprint, stats });
+    let tracer =
+        Tracer::with_capacity(ROLE_PARTY, crate::obs::trace::DEFAULT_RING_SPANS, host.trace);
+    if let Some(dir) = &host.trace_dir {
+        if let Err(e) = tracer.set_dir(Path::new(dir)) {
+            eprintln!("party: cannot open trace dir {dir}: {e}");
+        }
+    }
+    let ctx = Arc::new(HostCtx {
+        cfg,
+        shares1,
+        source,
+        host,
+        fingerprint,
+        stats,
+        tracer,
+        started: Instant::now(),
+    });
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
@@ -223,7 +249,31 @@ fn send_err(stream: &mut TcpStream, why: &str) {
 fn handle_party_conn(mut stream: TcpStream, ctx: Arc<HostCtx>) -> Result<()> {
     stream.set_nodelay(true)?;
     server_auth(&mut stream, ctx.host.psk.as_deref())?;
-    let (ty, payload) = read_frame(&mut stream).map_err(|e| anyhow!("handshake: {e}"))?;
+    // Bare METRICS / TRACE queries (monitoring) are answered without a
+    // model handshake — a scraper needs the PSK but not the coordinator's
+    // config fingerprint (the dealer's bare-STATS convention).
+    let (mut ty, mut payload) =
+        read_frame(&mut stream).map_err(|e| anyhow!("handshake: {e}"))?;
+    loop {
+        match ty {
+            pmsg::METRICS => {
+                write_frame(&mut stream, pmsg::METRICS, render_party_metrics(&ctx).as_bytes())?;
+            }
+            pmsg::TRACE => {
+                let label = String::from_utf8_lossy(&payload).into_owned();
+                write_frame(
+                    &mut stream,
+                    pmsg::TRACE,
+                    ctx.tracer.render_trace(&label).as_bytes(),
+                )?;
+            }
+            _ => break,
+        }
+        match read_frame(&mut stream) {
+            Ok(f) => (ty, payload) = f,
+            Err(_) => return Ok(()), // monitoring poller went away
+        }
+    }
     if ty != pmsg::HELLO {
         send_err(&mut stream, "expected HELLO");
         bail!("client opened with message type {ty}");
@@ -321,6 +371,24 @@ fn party_conn_demux(
                 }
             }
             pmsg::PONG => {} // tolerated: symmetric peers may probe back
+            pmsg::METRICS => {
+                // Also answered post-handshake, through the shared
+                // writer so the reply cannot interleave with a session
+                // frame.
+                let body = render_party_metrics(ctx);
+                let mut w = lock_or_recover(writer);
+                if write_frame(&mut *w, pmsg::METRICS, body.as_bytes()).is_err() {
+                    return Ok(());
+                }
+            }
+            pmsg::TRACE => {
+                let label = String::from_utf8_lossy(&payload).into_owned();
+                let body = ctx.tracer.render_trace(&label);
+                let mut w = lock_or_recover(writer);
+                if write_frame(&mut *w, pmsg::TRACE, body.as_bytes()).is_err() {
+                    return Ok(());
+                }
+            }
             pmsg::BYE => return Ok(()),
             t if t == msg::ERR => return Ok(()),
             other => {
@@ -392,6 +460,139 @@ impl Transport for HostSessionTransport {
     }
 }
 
+/// The party host's side of the unified `secformer_*` exposition:
+/// session/connection gauges, the host's own bundle-source telemetry
+/// and trace-ring health, every sample labelled `role="party"`.
+fn render_party_metrics(ctx: &HostCtx) -> String {
+    let mut r = MetricsRegistry::new(ROLE_PARTY);
+    r.gauge(
+        "secformer_uptime_seconds",
+        "Seconds since this role started.",
+        ctx.started.elapsed().as_secs_f64(),
+    );
+    r.counter(
+        "secformer_sessions_started_total",
+        "Sessions accepted (START/START_BATCH spawned a worker).",
+        ctx.stats.sessions_started.load(Ordering::Relaxed) as f64,
+    );
+    r.counter(
+        "secformer_sessions_completed_total",
+        "Sessions that returned a RESULT.",
+        ctx.stats.sessions_completed.load(Ordering::Relaxed) as f64,
+    );
+    r.counter(
+        "secformer_sessions_failed_total",
+        "Sessions torn down without a RESULT.",
+        ctx.stats.sessions_failed.load(Ordering::Relaxed) as f64,
+    );
+    r.gauge(
+        "secformer_active_sessions",
+        "Session worker threads alive right now.",
+        ctx.stats.active() as f64,
+    );
+    r.gauge(
+        "secformer_active_conns",
+        "Connections alive right now.",
+        ctx.stats.active_conns.load(Ordering::Relaxed) as f64,
+    );
+    if let Some(src) = &ctx.source {
+        let ps = src.snapshot();
+        r.gauge(
+            "secformer_pool_depth",
+            "Bundles ready, in request capacity.",
+            ps.depth as f64,
+        );
+        r.counter("secformer_pool_produced_total", "Bundles generated.", ps.produced as f64);
+        r.counter(
+            "secformer_pool_consumed_total",
+            "Bundles handed to consumers.",
+            ps.consumed as f64,
+        );
+        r.counter(
+            "secformer_pool_hits_total",
+            "Pops served from pregenerated material.",
+            ps.hits as f64,
+        );
+        r.counter(
+            "secformer_pool_misses_total",
+            "Pops degraded to seeded fallback.",
+            ps.misses as f64,
+        );
+        r.counter(
+            "secformer_dealer_reconnects_total",
+            "Successful dealer link re-dials.",
+            src.reconnects() as f64,
+        );
+        r.counter(
+            "secformer_dealer_pulls_sent_total",
+            "Coalesced PULL frames sent to a remote dealer.",
+            src.pulls_sent() as f64,
+        );
+        r.gauge(
+            "secformer_prefetch_depth",
+            "Bundles in the dealer-prefetch queue right now.",
+            src.prefetch_depth() as f64,
+        );
+        r.gauge(
+            "secformer_spool_tombstones",
+            "Consume tombstones since the last spool compaction.",
+            src.spool_tombstones() as f64,
+        );
+        r.counter(
+            "secformer_spool_compactions_total",
+            "Spool-file compaction rewrites.",
+            src.spool_compactions() as f64,
+        );
+    }
+    r.gauge(
+        "secformer_trace_enabled",
+        "Whether span recording is on.",
+        if ctx.tracer.is_enabled() { 1.0 } else { 0.0 },
+    );
+    r.gauge("secformer_trace_spans", "Spans held in the ring.", ctx.tracer.len() as f64);
+    r.counter(
+        "secformer_trace_dropped_total",
+        "Spans evicted from the bounded ring.",
+        ctx.tracer.dropped() as f64,
+    );
+    r.render()
+}
+
+/// Fetch a party host's Prometheus exposition. Answered right after
+/// the PSK handshake — a scraper needs the key but not the model
+/// fingerprint. This is the body of `secformer metrics --role party`.
+pub fn fetch_party_metrics(addr: &str, psk: Option<&str>) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect to party {addr}"))?;
+    stream.set_nodelay(true)?;
+    client_auth(&mut stream, psk)?;
+    write_frame(&mut stream, pmsg::METRICS, &[])?;
+    match read_frame(&mut stream).map_err(|e| anyhow!("metrics query: {e}"))? {
+        (t, p) if t == pmsg::METRICS => Ok(String::from_utf8_lossy(&p).into_owned()),
+        (t, p) if t == msg::ERR => {
+            bail!("party rejected metrics query: {}", String::from_utf8_lossy(&p))
+        }
+        (t, _) => bail!("unexpected metrics reply type {t}"),
+    }
+}
+
+/// Fetch a party host's recorded spans for one trace id (session
+/// label) as JSONL. This is the body of `secformer trace --role party`.
+pub fn fetch_party_trace(addr: &str, psk: Option<&str>, trace: &str) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect to party {addr}"))?;
+    stream.set_nodelay(true)?;
+    client_auth(&mut stream, psk)?;
+    write_frame(&mut stream, pmsg::TRACE, trace.as_bytes())?;
+    match read_frame(&mut stream).map_err(|e| anyhow!("trace query: {e}"))? {
+        (t, p) if t == pmsg::TRACE => Ok(String::from_utf8_lossy(&p).into_owned()),
+        (t, p) if t == msg::ERR => {
+            bail!("party rejected trace query: {}", String::from_utf8_lossy(&p))
+        }
+        (t, _) => bail!("unexpected trace reply type {t}"),
+    }
+}
+
 fn run_party_session(
     ctx: &HostCtx,
     writer: &Arc<Mutex<TcpStream>>,
@@ -433,6 +634,9 @@ fn run_party_session_body(
     start: BatchSessionStart,
     rx: Receiver<Vec<u64>>,
 ) -> bool {
+    // Keyed by the session label, so this host's spans join the
+    // coordinator's trace of the same session.
+    let _session_span = ctx.tracer.span(&start.label, "session");
     let kind = if start.input_kind == INPUT_HIDDEN {
         PlanInput::Hidden
     } else {
@@ -445,6 +649,7 @@ fn run_party_session_body(
     // Pooled sessions use pregenerated material only when BOTH sides
     // hold the same bundle (sized for this batch); the ack commits the
     // joint decision.
+    let t_bundle = Instant::now();
     let bundle = if start.mode == MODE_POOLED && start.coord_has_bundle {
         ctx.source
             .as_ref()
@@ -476,6 +681,7 @@ fn run_party_session_body(
             );
         }
     }
+    ctx.tracer.record(&start.label, "phase:bundle_wait", t_bundle, Instant::now());
     let use_pool = bundle.is_some();
     {
         let mut w = lock_or_recover(writer);
@@ -533,7 +739,9 @@ fn run_party_session_body(
     // a remote session is bit-identical to its in-process twin.
     let mut pctx = PartyCtx::new(1, Box::new(transport), prov, 0xBB);
     pctx.stats = stats.clone();
+    let t_dispatch = Instant::now();
     let out1 = bert_forward_batch(&mut pctx, &ctx.cfg, ctx.shares1.as_ref(), &in1s);
+    ctx.tracer.record(&start.label, "phase:dispatch", t_dispatch, Instant::now());
     drop(pctx); // closes the dealer link (if any)
 
     let payload = encode_result(id, stats.offline_bytes(), stats.offline_msgs(), &out1);
@@ -612,6 +820,12 @@ struct PartyShared {
     /// channel closed re-raise this as their typed error.
     dead_reason: Mutex<Option<SessionError>>,
     stopping: AtomicBool,
+    /// Microseconds of the most recent PING→PONG round trip. `0` means
+    /// "no sample yet" — real samples are clamped to ≥ 1 µs.
+    rtt_last_us: AtomicU64,
+    /// EWMA (α = 1/8) of the round-trip time, microseconds; same
+    /// `0` = no-sample convention.
+    rtt_ewma_us: AtomicU64,
 }
 
 impl PartyShared {
@@ -805,6 +1019,8 @@ impl RemoteParty {
             dead: AtomicBool::new(false),
             dead_reason: Mutex::new(None),
             stopping: AtomicBool::new(false),
+            rtt_last_us: AtomicU64::new(0),
+            rtt_ewma_us: AtomicU64::new(0),
         });
         let sh = shared.clone();
         let reader = std::thread::Builder::new()
@@ -823,6 +1039,19 @@ impl RemoteParty {
     /// supervisor replaces the whole `RemoteParty`.
     pub fn is_dead(&self) -> bool {
         self.shared.dead.load(Ordering::Relaxed)
+    }
+
+    /// Most recent party-link round-trip time in milliseconds, sampled
+    /// from the idle-probe `PING`→`PONG` exchange. `0.0` until the link
+    /// has been idle long enough to probe at least once.
+    pub fn rtt_last_ms(&self) -> f64 {
+        self.shared.rtt_last_us.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    /// Smoothed (EWMA, α = 1/8) party-link round-trip time in
+    /// milliseconds; `0.0` means no sample yet.
+    pub fn rtt_ewma_ms(&self) -> f64 {
+        self.shared.rtt_ewma_us.load(Ordering::Relaxed) as f64 / 1000.0
     }
 
     /// Open a session: ship S1's input share, wait for the ack (which
@@ -909,6 +1138,10 @@ fn reader_loop(shared: Arc<PartyShared>, mut stream: TcpStream, opts: LinkOption
     // `FrameError::Idle` below is one heartbeat tick: probe with PING,
     // and declare the link dead once silence outlasts the link timeout.
     let mut last_rx = Instant::now();
+    // When the last idle tick sent a PING, its send instant — the next
+    // PONG closes it into an RTT sample. The host answers in frame
+    // order, so one outstanding probe at a time is enough.
+    let mut ping_sent: Option<Instant> = None;
     loop {
         if shared.stopping.load(Ordering::Relaxed) {
             return;
@@ -967,7 +1200,17 @@ fn reader_loop(shared: Arc<PartyShared>, mut stream: TcpStream, opts: LinkOption
                     return;
                 }
             },
-            Ok((t, _)) if t == pmsg::PONG => {} // liveness clock already refreshed
+            Ok((t, _)) if t == pmsg::PONG => {
+                // Liveness clock already refreshed; a pending probe
+                // also yields a link-RTT sample.
+                if let Some(sent) = ping_sent.take() {
+                    let rtt = (sent.elapsed().as_micros() as u64).max(1);
+                    shared.rtt_last_us.store(rtt, Ordering::Relaxed);
+                    let old = shared.rtt_ewma_us.load(Ordering::Relaxed);
+                    let ewma = if old == 0 { rtt } else { (old * 7 + rtt) / 8 };
+                    shared.rtt_ewma_us.store(ewma.max(1), Ordering::Relaxed);
+                }
+            }
             Ok((t, payload)) if t == msg::ERR => {
                 let m = String::from_utf8_lossy(&payload).into_owned();
                 eprintln!("remote party error: {m}; closing");
@@ -992,6 +1235,7 @@ fn reader_loop(shared: Arc<PartyShared>, mut stream: TcpStream, opts: LinkOption
                     return;
                 }
                 // Probe; a failed write marks the link dead itself.
+                ping_sent = Some(Instant::now());
                 if !shared.send_frame(pmsg::PING, &[]) {
                     return;
                 }

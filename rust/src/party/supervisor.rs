@@ -198,6 +198,21 @@ impl PartyLinkSupervisor {
         self.link_up.load(Ordering::Relaxed)
     }
 
+    /// Most recent heartbeat RTT of the current link in milliseconds
+    /// ([`RemoteParty::rtt_last_ms`]); `0.0` when no link is held or no
+    /// probe has completed yet.
+    pub fn rtt_last_ms(&self) -> f64 {
+        lock_or_recover(&self.current).as_ref().map_or(0.0, |rp| rp.rtt_last_ms())
+    }
+
+    /// Smoothed heartbeat RTT of the current link in milliseconds
+    /// ([`RemoteParty::rtt_ewma_ms`]); `0.0` when no link is held or no
+    /// probe has completed yet. Replacing a dead link resets the EWMA —
+    /// a new link's latency is a new distribution.
+    pub fn rtt_ewma_ms(&self) -> f64 {
+        lock_or_recover(&self.current).as_ref().map_or(0.0, |rp| rp.rtt_ewma_ms())
+    }
+
     /// Stop supervising: close the current link and refuse further
     /// re-dials. Idempotent.
     pub fn stop(&self) {

@@ -4,7 +4,7 @@
 //! Frames reuse the versioned/checksummed layout of
 //! [`crate::offline::wire`] (magic `SBW1`, FNV-1a payload checksum) so
 //! one wire toolkit serves every TCP surface in the codebase; the
-//! party protocol claims its own message-type range (16–25) so a
+//! party protocol claims its own message-type range (16–27) so a
 //! coordinator that dials a dealer port (or vice versa) fails on the
 //! first frame instead of desyncing.
 //!
@@ -76,6 +76,14 @@ pub mod pmsg {
     /// refreshes the client's liveness clock; `PONG` exists so an
     /// otherwise-idle link still proves the host is reading.
     pub const PONG: u8 = 25;
+    /// Either direction (request: empty payload; reply: Prometheus
+    /// text). Answered *before* HELLO so a scraper needs the PSK but
+    /// not the model fingerprint — mirroring the dealer's bare-STATS
+    /// convention.
+    pub const METRICS: u8 = 26;
+    /// Either direction (request: session-label payload; reply: JSONL
+    /// span dump). Answered before HELLO, like [`METRICS`].
+    pub const TRACE: u8 = 27;
 }
 
 /// Session offline mode tag: full dealer protocol (S1 runs a local T).

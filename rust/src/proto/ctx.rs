@@ -35,10 +35,14 @@ impl PartyCtx {
     /// One synchronized round: send `data`, receive the peer's buffer.
     ///
     /// Every online communication in the codebase funnels through here (or
-    /// [`Self::exchange_many`]) so round/byte accounting is exact.
+    /// [`Self::exchange_many`]) so round/byte accounting is exact — and so
+    /// is transport-blocked time: the send+recv wall clock recorded here is
+    /// exactly the "network-bound" share of a request's latency.
     pub fn exchange(&mut self, data: &[u64]) -> Vec<u64> {
+        let t0 = std::time::Instant::now();
         self.peer.send(data.to_vec());
         let r = self.peer.recv();
+        self.stats.record_transport_nanos(t0.elapsed().as_nanos() as u64);
         self.stats.record_round(data.len() as u64 * 8);
         r
     }
@@ -52,8 +56,10 @@ impl PartyCtx {
         for b in bufs {
             msg.extend_from_slice(b);
         }
+        let t0 = std::time::Instant::now();
         self.peer.send(msg);
         let r = self.peer.recv();
+        self.stats.record_transport_nanos(t0.elapsed().as_nanos() as u64);
         self.stats.record_round(total as u64 * 8);
         let mut out = Vec::with_capacity(bufs.len());
         let mut off = 0;

@@ -1,0 +1,454 @@
+//! Integration tests for the unified telemetry subsystem, pinning the
+//! PR's acceptance criteria:
+//!
+//! 1. all three roles answer `metrics` with a well-formed Prometheus
+//!    text exposition under ONE name schema (`secformer_*`, every
+//!    sample labelled with its role);
+//! 2. the phase decomposition is honest: per-phase latency totals sum
+//!    to total measured latency within 5%, under both the pooled
+//!    in-process topology and a real remote party link;
+//! 3. spans of one inference join across coordinator and party by the
+//!    session label alone — the trace id IS the label already on the
+//!    wire;
+//! 4. tracing is observation-only: logits, rounds and bytes are
+//!    bit-identical with the tracer on or off, and the overhead stays
+//!    bounded;
+//! 5. metrics stay consistent under concurrent load.
+
+use secformer::coordinator::{BatcherConfig, Coordinator, EngineKind, ServingConfig};
+use secformer::coordinator::metrics::PHASES;
+use secformer::core::rng::Xoshiro;
+use secformer::nn::config::{Framework, ModelConfig};
+use secformer::nn::model::ModelInput;
+use secformer::nn::weights::{random_weights, share_weights, ShareMap, WeightMap};
+use secformer::offline::pool::PoolConfig;
+use secformer::offline::remote::{fetch_dealer_metrics, fetch_dealer_trace, spawn_dealer};
+use secformer::offline::source::PoolSet;
+use secformer::party::runtime::{
+    fetch_party_metrics, fetch_party_trace, spawn_party_host, LinkOptions, PartyHostConfig,
+    RemoteParty,
+};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tiny() -> ModelConfig {
+    ModelConfig::tiny(8, Framework::SecFormer)
+}
+
+fn tokens(cfg: &ModelConfig, shift: u32) -> Vec<u32> {
+    (0..cfg.seq as u32).map(|i| (i + shift) % cfg.vocab as u32).collect()
+}
+
+/// The engine's fixed sharing seed: equal weights ⇒ equal share maps ⇒
+/// a matching HELLO fingerprint between coordinator and party host.
+fn shares1(w: &WeightMap) -> ShareMap {
+    let (_, s1) = share_weights(w, &mut Xoshiro::seed_from(0x5EC0));
+    s1
+}
+
+/// Structural validation of one Prometheus text exposition: every
+/// sample line is `name{labels} value` with a `secformer_` name, the
+/// expected `role` label and a parseable finite value; every histogram
+/// bucket series is monotone with its `+Inf` bucket equal to `_count`;
+/// the body ends with the `# EOF` terminator.
+fn assert_well_formed_exposition(text: &str, role: &str) {
+    assert!(text.ends_with("# EOF\n") || text.ends_with("# EOF"), "missing EOF: {text:?}");
+    let mut samples = 0usize;
+    let mut bucket_prev: Option<f64> = None;
+    // `+Inf` bucket and `_count` per histogram series (keyed by the
+    // series' label set, so multi-row families compare row-to-row).
+    let mut bucket_inf: HashMap<String, f64> = HashMap::new();
+    let mut hist_count: HashMap<String, f64> = HashMap::new();
+    for line in text.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+            panic!("sample line without value: {line:?}");
+        });
+        assert!(series.starts_with("secformer_"), "unprefixed sample: {line:?}");
+        assert!(
+            series.contains(&format!("role=\"{role}\"")),
+            "sample without role label: {line:?}"
+        );
+        let v: f64 = value.parse().unwrap_or_else(|e| {
+            panic!("unparseable value in {line:?}: {e}");
+        });
+        assert!(v.is_finite(), "non-finite sample: {line:?}");
+        samples += 1;
+        // Cumulative-bucket monotonicity within each histogram row; a
+        // `+Inf` bucket closes the row and must equal that row's
+        // `_count`.
+        if series.contains("_bucket{") {
+            if let Some(prev) = bucket_prev {
+                assert!(v >= prev, "non-monotone bucket: {line:?}");
+            }
+            bucket_prev = Some(v);
+            if series.contains("le=\"+Inf\"") {
+                bucket_inf.insert(
+                    series.replace(",le=\"+Inf\"", "").replace("le=\"+Inf\"", ""),
+                    v,
+                );
+                bucket_prev = None; // the next row's series restarts
+            }
+        } else if series.contains("_count{") {
+            hist_count.insert(series.replace("_count{", "_bucket{"), v);
+        }
+    }
+    assert!(samples > 5, "suspiciously empty exposition:\n{text}");
+    assert!(!bucket_inf.is_empty() || hist_count.is_empty(), "counts without buckets");
+    for (key, count) in &hist_count {
+        let inf = bucket_inf
+            .get(key)
+            .unwrap_or_else(|| panic!("no +Inf bucket for {key}"));
+        assert!(
+            (inf - count).abs() < 0.5,
+            "+Inf bucket {inf} must equal _count {count} for {key}"
+        );
+    }
+}
+
+/// `Σ phase_totals ≈ Σ latencies`: the decomposition covers the whole
+/// request, with nothing double-counted and nothing unattributed.
+fn assert_phases_cover_total(coord: &Coordinator, what: &str) {
+    let s = coord.secure_summary();
+    assert!(s.count > 0, "{what}: no requests observed");
+    let total: f64 = s.mean_s * s.count as f64;
+    let phase_sum: f64 = s.phase_totals_s.iter().sum();
+    let tol = total * 0.05 + 0.02; // 5% + a fixed epsilon for timer jitter
+    assert!(
+        (phase_sum - total).abs() <= tol,
+        "{what}: phase sum {phase_sum:.4}s vs total {total:.4}s exceeds 5% tolerance \
+         (phases: {:?})",
+        PHASES.iter().zip(s.phase_totals_s.iter()).collect::<Vec<_>>()
+    );
+}
+
+/// Acceptance: the coordinator's exposition is well-formed and counts
+/// exactly what was served.
+#[test]
+fn coordinator_metrics_exposition_is_well_formed() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 71);
+    let c = Coordinator::start(cfg.clone(), w, None, BatcherConfig::default()).unwrap();
+    for i in 0..3 {
+        let r = c.infer_blocking(ModelInput::Tokens(tokens(&cfg, i)), EngineKind::Secure);
+        assert!(r.error.is_none());
+    }
+    let text = c.render_metrics();
+    assert_well_formed_exposition(&text, "coordinator");
+    assert!(
+        text.contains("secformer_requests_total{role=\"coordinator\",engine=\"secure\"} 3"),
+        "{text}"
+    );
+    assert!(text.contains("secformer_uptime_seconds{role=\"coordinator\"}"), "{text}");
+    assert!(text.contains("secformer_phase_seconds_total{role=\"coordinator\",phase=\"queue\"}"));
+    c.shutdown();
+}
+
+/// Acceptance: party and dealer answer `metrics` over their framed
+/// wires pre-handshake, in the same name schema (shared families like
+/// `secformer_uptime_seconds`, distinguished only by the role label).
+#[test]
+fn party_and_dealer_answer_metrics_in_one_schema() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 73);
+
+    let party_addr =
+        spawn_party_host(cfg.clone(), Arc::new(shares1(&w)), None, PartyHostConfig::default())
+            .expect("party host");
+    let party = fetch_party_metrics(&party_addr.to_string(), None).expect("party metrics");
+    assert_well_formed_exposition(&party, "party");
+    assert!(party.contains("secformer_uptime_seconds{role=\"party\"}"), "{party}");
+    assert!(party.contains("secformer_sessions_started_total{role=\"party\"} 0"), "{party}");
+
+    let pools = PoolSet::start(
+        &cfg,
+        "obs-dealer",
+        PoolConfig { target_depth: 2, producers: 1, ..PoolConfig::default() },
+        false,
+    );
+    let dealer_addr = spawn_dealer(pools.clone()).expect("spawn dealer");
+    let dealer = fetch_dealer_metrics(&dealer_addr.to_string(), None).expect("dealer metrics");
+    assert_well_formed_exposition(&dealer, "dealer");
+    assert!(dealer.contains("secformer_uptime_seconds{role=\"dealer\"}"), "{dealer}");
+    assert!(dealer.contains("secformer_pool_depth{role=\"dealer\"}"), "{dealer}");
+    // An unknown trace id is not an error — just an empty, terminated
+    // JSONL body (a scrape must never kill a serving dealer).
+    let trace = fetch_dealer_trace(&dealer_addr.to_string(), None, "no-such-label")
+        .expect("dealer trace");
+    assert!(trace.trim_end().ends_with("# EOF"), "{trace:?}");
+    pools.stop();
+}
+
+/// Acceptance: per-phase latencies sum to total within 5% under the
+/// pooled in-process topology.
+#[test]
+fn phase_totals_cover_latency_pooled() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 79);
+    let mut serving = ServingConfig::pooled(1, 4);
+    serving.plan_hidden = false;
+    let c = Coordinator::start_with(cfg.clone(), w, None, BatcherConfig::default(), serving)
+        .unwrap();
+    for i in 0..4 {
+        let r = c.infer_blocking(ModelInput::Tokens(tokens(&cfg, i)), EngineKind::Secure);
+        assert!(r.error.is_none());
+    }
+    assert_phases_cover_total(&c, "pooled");
+    // The transport phase exists but in-process "transport" is just
+    // channel hand-off — it must not dominate.
+    let s = c.secure_summary();
+    assert!(s.phase_totals_s[4] < s.mean_s * s.count as f64, "{:?}", s.phase_totals_s);
+    c.shutdown();
+}
+
+/// Acceptance: the decomposition survives a real remote party link —
+/// transport-blocked time moves into the `transport` phase and the sum
+/// still covers the total.
+#[test]
+fn phase_totals_cover_latency_remote_party() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 83);
+    let addr = spawn_party_host(
+        cfg.clone(),
+        Arc::new(shares1(&w)),
+        None,
+        PartyHostConfig::default(),
+    )
+    .expect("party host");
+    let c = Coordinator::start_with(
+        cfg.clone(),
+        w,
+        None,
+        BatcherConfig::default(),
+        ServingConfig { peer_addr: Some(addr.to_string()), ..ServingConfig::default() },
+    )
+    .unwrap();
+    for i in 0..3 {
+        let r = c.infer_blocking(ModelInput::Tokens(tokens(&cfg, i)), EngineKind::Secure);
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    assert_phases_cover_total(&c, "remote-party");
+    let s = c.secure_summary();
+    assert!(
+        s.phase_totals_s[4] > 0.0,
+        "a socket link must accrue transport-blocked time: {:?}",
+        s.phase_totals_s
+    );
+    c.shutdown();
+}
+
+/// Acceptance: coordinator and party spans of ONE inference join on the
+/// session label with no other correlation state.
+#[test]
+fn trace_spans_join_across_coordinator_and_party() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 89);
+    let addr = spawn_party_host(
+        cfg.clone(),
+        Arc::new(shares1(&w)),
+        None,
+        PartyHostConfig::default(),
+    )
+    .expect("party host");
+    let c = Coordinator::start_with(
+        cfg.clone(),
+        w,
+        None,
+        BatcherConfig::default(),
+        ServingConfig { peer_addr: Some(addr.to_string()), ..ServingConfig::default() },
+    )
+    .unwrap();
+    let r = c.infer_blocking(ModelInput::Tokens(tokens(&cfg, 1)), EngineKind::Secure);
+    assert!(r.error.is_none(), "{:?}", r.error);
+
+    // The coordinator minted the label; its own ring has the session.
+    let spans = c.tracer().recent(64);
+    let label = spans
+        .iter()
+        .find(|s| s.name == "session")
+        .map(|s| s.trace.clone())
+        .expect("coordinator recorded a session span");
+    let coord_trace = c.render_trace(&label);
+    assert!(coord_trace.contains("\"role\":\"coordinator\""), "{coord_trace}");
+    assert!(coord_trace.contains("phase:"), "phases must be attributed: {coord_trace}");
+
+    // The party host recorded under the SAME label — fetched over the
+    // wire by label alone. The host's `session` span lands when its
+    // worker unwinds, which can trail the coordinator's reply by a
+    // moment; poll briefly instead of racing it.
+    let deadline = std::time::Instant::now() + Duration::from_secs(3);
+    let mut party_trace =
+        fetch_party_trace(&addr.to_string(), None, &label).expect("party trace");
+    while !party_trace.contains("\"name\":\"session\"")
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(25));
+        party_trace = fetch_party_trace(&addr.to_string(), None, &label).expect("party trace");
+    }
+    assert!(
+        party_trace.contains("\"name\":\"session\""),
+        "party must have joined session {label}: {party_trace}"
+    );
+    assert!(party_trace.contains("\"role\":\"party\""), "{party_trace}");
+    assert!(party_trace.contains(&label), "{party_trace}");
+    c.shutdown();
+}
+
+/// Acceptance: tracing is observation-only — logits, per-request comm
+/// and the round/byte gauges are bit-identical with the tracer on or
+/// off.
+#[test]
+fn tracing_on_off_is_bit_identical() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 97);
+    let run = |trace: bool| {
+        // Pin the session namespace: seeded offline randomness derives
+        // from session labels, so bit-identity across two coordinator
+        // instances needs label-aligned sessions (tests only — see the
+        // `session_namespace` pad-reuse warning).
+        let c = Coordinator::start_with(
+            cfg.clone(),
+            w.clone(),
+            None,
+            BatcherConfig::default(),
+            ServingConfig {
+                trace,
+                session_namespace: Some("obs-parity".to_string()),
+                ..ServingConfig::default()
+            },
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        for i in 0..3 {
+            let r = c.infer_blocking(ModelInput::Tokens(tokens(&cfg, i)), EngineKind::Secure);
+            assert!(r.error.is_none());
+            out.push((r.logits, r.comm_bytes));
+        }
+        let s = c.secure_summary();
+        let spans = c.tracer().len();
+        c.shutdown();
+        (out, s.rounds_per_request, s.offline_bytes, spans)
+    };
+    let (off, off_rounds, off_bytes, off_spans) = run(false);
+    let (on, on_rounds, on_bytes, on_spans) = run(true);
+    assert_eq!(off, on, "tracing must not perturb logits or comm");
+    assert_eq!(off_rounds, on_rounds, "tracing must not add rounds");
+    assert_eq!(off_bytes, on_bytes, "tracing must not add offline bytes");
+    assert_eq!(off_spans, 0, "disabled tracer must record nothing");
+    assert!(on_spans > 0, "enabled tracer must record spans");
+}
+
+/// Acceptance (generous CI bound): tracing overhead on the serving
+/// path stays far from pathological — the 3% p50 bound is pinned by
+/// `bench observability`; this test only guards against a catastrophic
+/// regression (per-span allocation storms, lock convoys).
+#[test]
+fn tracing_overhead_is_bounded() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 101);
+    let mean_latency = |trace: bool| {
+        let c = Coordinator::start_with(
+            cfg.clone(),
+            w.clone(),
+            None,
+            BatcherConfig::default(),
+            ServingConfig { trace, ..ServingConfig::default() },
+        )
+        .unwrap();
+        // Warm-up outside the measurement.
+        let _ = c.infer_blocking(ModelInput::Tokens(tokens(&cfg, 0)), EngineKind::Secure);
+        let t0 = std::time::Instant::now();
+        for i in 0..6 {
+            let r = c.infer_blocking(ModelInput::Tokens(tokens(&cfg, i)), EngineKind::Secure);
+            assert!(r.error.is_none());
+        }
+        let mean = t0.elapsed().as_secs_f64() / 6.0;
+        c.shutdown();
+        mean
+    };
+    let off = mean_latency(false);
+    let on = mean_latency(true);
+    assert!(
+        on <= off * 2.0 + 0.05,
+        "tracing overhead out of bounds: off {off:.4}s vs on {on:.4}s"
+    );
+}
+
+/// Acceptance: the metrics stay consistent under concurrent load —
+/// every request is counted exactly once and the exposition stays
+/// well-formed while workers race.
+#[test]
+fn concurrent_load_keeps_metrics_consistent() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 103);
+    let mut serving = ServingConfig::pooled(2, 8);
+    serving.plan_hidden = false;
+    let c = Arc::new(
+        Coordinator::start_with(cfg.clone(), w, None, BatcherConfig::default(), serving)
+            .unwrap(),
+    );
+    let clients = 4;
+    let per_client = 3;
+    std::thread::scope(|scope| {
+        for t in 0..clients {
+            let c = c.clone();
+            let cfg = cfg.clone();
+            scope.spawn(move || {
+                for i in 0..per_client {
+                    let r = c.infer_blocking(
+                        ModelInput::Tokens(tokens(&cfg, (t * per_client + i) as u32)),
+                        EngineKind::Secure,
+                    );
+                    assert!(r.error.is_none());
+                }
+            });
+        }
+    });
+    let n = clients * per_client;
+    let s = c.secure_summary();
+    assert_eq!(s.count, n, "every request counted exactly once");
+    assert_phases_cover_total(&c, "concurrent");
+    let text = c.render_metrics();
+    assert_well_formed_exposition(&text, "coordinator");
+    assert!(
+        text.contains(&format!(
+            "secformer_requests_total{{role=\"coordinator\",engine=\"secure\"}} {n}"
+        )),
+        "{text}"
+    );
+    c.shutdown();
+}
+
+/// Acceptance: the party-link heartbeat doubles as an RTT probe — an
+/// idle link populates the last/EWMA gauges within a few heartbeats.
+#[test]
+fn party_link_rtt_gauge_populates() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 107);
+    let addr = spawn_party_host(
+        cfg.clone(),
+        Arc::new(shares1(&w)),
+        None,
+        PartyHostConfig::default(),
+    )
+    .expect("party host");
+    let s1 = Arc::new(shares1(&w));
+    let opts = LinkOptions {
+        heartbeat: Duration::from_millis(50),
+        link_timeout: Duration::from_millis(2000),
+    };
+    let rp = RemoteParty::try_connect(&addr.to_string(), &cfg, &s1, None, opts)
+        .expect("connect party link");
+    // Idle past several heartbeats: each PING's PONG carries an RTT
+    // sample into the gauges.
+    let deadline = std::time::Instant::now() + Duration::from_secs(3);
+    while rp.rtt_last_ms() == 0.0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(rp.rtt_last_ms() > 0.0, "no RTT sample after 3s of idle heartbeats");
+    assert!(rp.rtt_ewma_ms() > 0.0, "EWMA must seed from the first sample");
+    rp.stop();
+}
