@@ -6,11 +6,13 @@
 //! CrypTen default).
 
 pub mod fixed;
+pub mod kernel;
 pub mod rng;
 pub mod sync;
 pub mod tensor;
 
 pub use fixed::{decode, decode_vec, encode, encode_vec, FRAC_BITS, SCALE};
+pub use kernel::{Kernel, KernelChoice, KernelConfig};
 pub use rng::{Prf, Xoshiro};
 pub use sync::{lock_or_recover, wait_or_recover, wait_timeout_or_recover};
 pub use tensor::RingTensor;

@@ -3,8 +3,17 @@
 //! `RingTensor` is the workhorse of the SMPC layer: every share a party
 //! holds is a `RingTensor`. All arithmetic is wrapping (ring) arithmetic;
 //! fixed-point semantics are layered on top by the protocol code.
+//!
+//! The compute itself — the ring matmul and the hot elementwise ops — is
+//! delegated to the runtime-selected backend in [`crate::core::kernel`];
+//! this module keeps the shape bookkeeping.
 
 use crate::core::fixed;
+use crate::core::kernel;
+
+// Re-exported for callers (and the perf-probe example) that predate the
+// kernel module; the implementation lives in `core/kernel.rs` now.
+pub use crate::core::kernel::{matmul_ring, matmul_ring_with};
 
 /// A dense row-major tensor of ring elements.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -72,23 +81,15 @@ impl RingTensor {
 
     pub fn add(&self, rhs: &RingTensor) -> RingTensor {
         assert_eq!(self.shape, rhs.shape);
-        let data = self
-            .data
-            .iter()
-            .zip(&rhs.data)
-            .map(|(&a, &b)| a.wrapping_add(b))
-            .collect();
+        let mut data = vec![0u64; self.len()];
+        kernel::active().add(&self.data, &rhs.data, &mut data);
         RingTensor { data, shape: self.shape.clone() }
     }
 
     pub fn sub(&self, rhs: &RingTensor) -> RingTensor {
         assert_eq!(self.shape, rhs.shape);
-        let data = self
-            .data
-            .iter()
-            .zip(&rhs.data)
-            .map(|(&a, &b)| a.wrapping_sub(b))
-            .collect();
+        let mut data = vec![0u64; self.len()];
+        kernel::active().sub(&self.data, &rhs.data, &mut data);
         RingTensor { data, shape: self.shape.clone() }
     }
 
@@ -113,10 +114,9 @@ impl RingTensor {
 
     /// Multiply every element by a public ring scalar.
     pub fn scale(&self, c: u64) -> RingTensor {
-        RingTensor {
-            data: self.data.iter().map(|&a| a.wrapping_mul(c)).collect(),
-            shape: self.shape.clone(),
-        }
+        let mut data = vec![0u64; self.len()];
+        kernel::active().scale(&self.data, c, &mut data);
+        RingTensor { data, shape: self.shape.clone() }
     }
 
     /// Add a public ring scalar to every element.
@@ -189,13 +189,8 @@ impl RingTensor {
         let n = self.cols_2d();
         let rows = self.rows_2d();
         assert_eq!(row.len(), rows);
-        let mut data = Vec::with_capacity(self.len());
-        for r in 0..rows {
-            let c = row.data[r];
-            for &v in &self.data[r * n..(r + 1) * n] {
-                data.push(v.wrapping_mul(c));
-            }
-        }
+        let mut data = vec![0u64; self.len()];
+        kernel::active().mul_rowwise(&self.data, &row.data, &mut data, n);
         RingTensor { data, shape: self.shape.clone() }
     }
 
@@ -204,96 +199,9 @@ impl RingTensor {
         let n = self.cols_2d();
         let rows = self.rows_2d();
         assert_eq!(row.len(), rows);
-        let mut data = Vec::with_capacity(self.len());
-        for r in 0..rows {
-            let c = row.data[r];
-            for &v in &self.data[r * n..(r + 1) * n] {
-                data.push(v.wrapping_sub(c));
-            }
-        }
+        let mut data = vec![0u64; self.len()];
+        kernel::active().sub_rowwise(&self.data, &row.data, &mut data, n);
         RingTensor { data, shape: self.shape.clone() }
-    }
-}
-
-/// Work threshold (multiply-accumulate ops) above which [`matmul_ring`]
-/// shards rows across threads. Below it, thread spawn/join overhead beats
-/// the parallel win (PERF.md §Matmul kernel).
-const MATMUL_PAR_THRESHOLD_OPS: usize = 1 << 20;
-
-/// Cap on worker threads per matmul. Party threads run concurrently (each
-/// engine inference already holds 2–3 OS threads), so each local matmul
-/// takes at most this many cores rather than oversubscribing the host.
-const MATMUL_MAX_THREADS: usize = 8;
-
-/// Wrapping matmul: C (m×n) = A (m×k) · B (k×n) mod 2^64.
-///
-/// Dispatches to the blocked single-thread kernel below, or — when the
-/// product has ≥ 2^20 multiply-accumulates — shards the rows of A/C across
-/// `std::thread::scope` workers (each party's triple-masked matmuls are
-/// embarrassingly parallel; no extra deps needed). Kernel design and
-/// measured rates: PERF.md §Matmul kernel.
-pub fn matmul_ring(a: &[u64], b: &[u64], c: &mut [u64], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    let ops = m.saturating_mul(k).saturating_mul(n);
-    let workers = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1)
-        .min(MATMUL_MAX_THREADS)
-        .min(m);
-    if ops < MATMUL_PAR_THRESHOLD_OPS || workers <= 1 {
-        matmul_ring_serial(a, b, c, m, k, n);
-        return;
-    }
-    let chunk_rows = (m + workers - 1) / workers;
-    std::thread::scope(|scope| {
-        for (ci, c_chunk) in c.chunks_mut(chunk_rows * n).enumerate() {
-            let rows = c_chunk.len() / n;
-            let a_chunk = &a[ci * chunk_rows * k..ci * chunk_rows * k + rows * k];
-            scope.spawn(move || matmul_ring_serial(a_chunk, b, c_chunk, rows, k, n));
-        }
-    });
-}
-
-/// Blocked single-thread kernel: i-k-j loop order, k blocked for cache
-/// residency of the B panel and unrolled 4-wide so the inner j-loop carries
-/// four independent multiply-accumulate chains (ILP) over contiguous
-/// memory. PERF.md §Matmul kernel: 0.50 → ~1.7 Gop/s single-core versus
-/// the naive i-k-j loop.
-fn matmul_ring_serial(a: &[u64], b: &[u64], c: &mut [u64], m: usize, k: usize, n: usize) {
-    const KB: usize = 128;
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    for kk in (0..k).step_by(KB) {
-        let kend = (kk + KB).min(k);
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut c[i * n..(i + 1) * n];
-            let mut p = kk;
-            while p + 4 <= kend {
-                let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
-                let b0 = &b[p * n..(p + 1) * n];
-                let b1 = &b[(p + 1) * n..(p + 2) * n];
-                let b2 = &b[(p + 2) * n..(p + 3) * n];
-                let b3 = &b[(p + 3) * n..(p + 4) * n];
-                for j in 0..n {
-                    let t0 = a0.wrapping_mul(b0[j]).wrapping_add(a1.wrapping_mul(b1[j]));
-                    let t1 = a2.wrapping_mul(b2[j]).wrapping_add(a3.wrapping_mul(b3[j]));
-                    crow[j] = crow[j].wrapping_add(t0).wrapping_add(t1);
-                }
-                p += 4;
-            }
-            while p < kend {
-                let av = arow[p];
-                let brow = &b[p * n..(p + 1) * n];
-                for j in 0..n {
-                    crow[j] = crow[j].wrapping_add(av.wrapping_mul(brow[j]));
-                }
-                p += 1;
-            }
-        }
     }
 }
 
@@ -347,6 +255,7 @@ mod tests {
         // public entry point takes the threaded path; results must be
         // bit-identical to the serial kernel (and chunk edges must be
         // handled when m doesn't divide evenly by the worker count).
+        use crate::core::kernel::{Kernel, SCALAR, SIMD};
         for m in [128usize, 127, 3] {
             let (k, n) = (128usize, 128usize);
             let mut rng = crate::core::rng::Xoshiro::seed_from(m as u64);
@@ -355,8 +264,13 @@ mod tests {
             let mut par = vec![0u64; m * n];
             let mut ser = vec![0u64; m * n];
             matmul_ring(&a, &b, &mut par, m, k, n);
-            matmul_ring_serial(&a, &b, &mut ser, m, k, n);
-            assert_eq!(par, ser, "m={m}");
+            // Serial references from BOTH backends: parallel sharding and
+            // backend choice alike must be bit-identical.
+            SCALAR.matmul(&a, &b, &mut ser, m, k, n);
+            assert_eq!(par, ser, "m={m} (scalar serial)");
+            let mut ser_simd = vec![0u64; m * n];
+            SIMD.matmul(&a, &b, &mut ser_simd, m, k, n);
+            assert_eq!(par, ser_simd, "m={m} (simd serial)");
         }
     }
 

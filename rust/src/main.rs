@@ -19,10 +19,14 @@
 //!                            targets: table3 table4 fig1 fig5 fig6 fig7
 //!                                     fig8 fig9 rounds serving
 //!                                     distribution two_party batching
-//!                                     observability all
+//!                                     observability kernels all
 //!
 //! Common options:
 //!   --framework <crypten|puma|mpcformer|secformer>   (default secformer)
+//!   --kernel <scalar|simd|auto>   ring-compute backend (default auto;
+//!                                 env SECFORMER_KERNEL; bit-identical)
+//!   --matmul-threads <n>     per-matmul worker-thread cap (default 8)
+//!   --matmul-par-ops <n>     MAC threshold for threading (default 2^20)
 //!   --seq <n>            sequence length for bench shapes (default 32)
 //!   --paper              paper scale (seq=512) for bench table3
 //!   --weights <file>     .swts checkpoint (default: random weights)
@@ -690,6 +694,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "observability" => {
             bh::observability_bench(args.usize_or("seq", 8), args.usize_or("requests", 10));
         }
+        "kernels" => {
+            bh::kernels_bench(iters);
+        }
         "ablations" => {
             secformer::bench::ablations::ablation_fourier_terms(args.usize_or("points", 1000));
             secformer::bench::ablations::ablation_goldschmidt_iters(args.usize_or("points", 1000));
@@ -711,9 +718,33 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Apply the global compute-backend flags before any subcommand runs:
+/// `--kernel scalar|simd|auto` (overrides `SECFORMER_KERNEL`; auto
+/// consults the accelerator seam and falls back to SIMD) and the
+/// `--matmul-threads`/`--matmul-par-ops` dispatcher tunables. Every
+/// backend is bit-identical, so these are pure performance knobs.
+fn apply_kernel_flags(args: &Args) -> Result<()> {
+    use secformer::core::kernel::{self, KernelChoice};
+    if let Some(v) = args.flag("kernel") {
+        match KernelChoice::parse(v) {
+            Some(c) => kernel::set_kernel(c),
+            None => bail!("--kernel takes scalar|simd|auto, got '{v}'"),
+        }
+    }
+    if args.has("matmul-threads") || args.has("matmul-par-ops") {
+        let d = kernel::kernel_config();
+        kernel::set_kernel_config(secformer::core::kernel::KernelConfig {
+            max_threads: args.usize_or("matmul-threads", d.max_threads),
+            par_threshold_ops: args.usize_or("matmul-par-ops", d.par_threshold_ops),
+        });
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
     let cfg_file = load_config(&args)?;
+    apply_kernel_flags(&args)?;
     match args.cmd.as_str() {
         "selftest" => cmd_selftest(&args),
         "infer" => cmd_infer(&args, &cfg_file),
@@ -767,9 +798,23 @@ USAGE:
   secformer trace LABEL [--role coordinator|party|dealer] [--addr HOST:PORT]
                    [--psk KEY]
   secformer bench  <table3|table4|fig1|fig5|fig6|fig7|fig8|fig9|rounds|serving|
-                    distribution|two_party|batching|observability|ablations|all>
+                    distribution|two_party|batching|observability|kernels|
+                    ablations|all>
                    [--seq N] [--paper] [--iters K] [--base-only]
                    [--concurrency C] [--requests R] [--workers N]
+
+Global options (every subcommand):
+  --kernel scalar|simd|auto   ring-compute backend (default auto: an
+                              accelerator registered at the xla_shim seam,
+                              else the portable SIMD kernel). Overrides the
+                              SECFORMER_KERNEL env var. All backends are
+                              bit-identical (exact ring arithmetic mod 2^64)
+                              — this is a pure performance knob.
+  --matmul-threads N          per-matmul worker-thread cap (default 8;
+                              env SECFORMER_MATMUL_THREADS)
+  --matmul-par-ops N          multiply-accumulate threshold above which a
+                              matmul row-shards across threads (default
+                              1048576; env SECFORMER_MATMUL_PAR_OPS)
 
 `serve --pool DEPTH` switches the secure workers to OfflineMode::Pooled: a
 demand planner dry-runs the model at startup, background producers keep
@@ -815,6 +860,9 @@ reference and ARCHITECTURE.md for the wire formats and topologies.
 in-process vs remote-dealer vs spool-cold-start and writes
 BENCH_distribution.json; `bench two_party` compares in-process vs
 localhost-TCP vs simulated LAN/WAN and writes BENCH_two_party.json.
+`bench kernels` pins per-shape Gop/s of every compute backend (scalar vs
+SIMD, thread counts 1/4/8, BERT-base shapes) and writes
+BENCH_kernels.json.
 
 Observability: every role answers a `metrics` command (Prometheus text
 exposition, `# EOF`-terminated) and a `trace <label>` command (recorded

@@ -4,6 +4,7 @@
 //! Fig 1(a).
 
 use crate::core::fixed::decode_vec;
+use crate::core::kernel;
 use crate::net::stats::OpCategory;
 use crate::nn::config::{Framework, ModelConfig};
 use crate::nn::weights::{get, ShareMap, WeightMap};
@@ -51,10 +52,9 @@ fn linear(
 ) -> Vec<u64> {
     with_cat(ctx, OpCategory::Others, |ctx| {
         let mut y = prim::matmul(ctx, x, w, rows, din, dout);
+        let kern = kernel::active();
         for r in 0..rows {
-            for c in 0..dout {
-                y[r * dout + c] = y[r * dout + c].wrapping_add(b[c]);
-            }
+            kern.add_assign(&mut y[r * dout..(r + 1) * dout], b);
         }
         y
     })
@@ -234,13 +234,12 @@ fn attention_fused(
     let bv = get(w, &format!("{p}.bv"));
     let qkv = with_cat(ctx, OpCategory::Others, |ctx| {
         let mut y = prim::matmul(ctx, h, &wqkv, rows, d, 3 * d);
+        let kern = kernel::active();
         for r in 0..rows {
             let row = &mut y[r * 3 * d..(r + 1) * 3 * d];
-            for c in 0..d {
-                row[c] = row[c].wrapping_add(bq[c]);
-                row[d + c] = row[d + c].wrapping_add(bk[c]);
-                row[2 * d + c] = row[2 * d + c].wrapping_add(bv[c]);
-            }
+            kern.add_assign(&mut row[..d], bq);
+            kern.add_assign(&mut row[d..2 * d], bk);
+            kern.add_assign(&mut row[2 * d..], bv);
         }
         y
     });
@@ -493,11 +492,10 @@ pub fn bert_forward_batch(
                 prim::matmul(ctx, &oh, get(w, "embed.word"), b * s, cfg.vocab, d)
             });
             let pos = get(w, "embed.pos");
+            let kern = kernel::active();
             for item in 0..b {
                 let blk = &mut e[item * s * d..(item + 1) * s * d];
-                for i in 0..s * d {
-                    blk[i] = blk[i].wrapping_add(pos[i]);
-                }
+                kern.add_assign(blk, &pos[..s * d]);
             }
             with_cat(ctx, OpCategory::LayerNorm, |ctx| {
                 apply_layernorm(

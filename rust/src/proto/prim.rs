@@ -9,17 +9,22 @@
 //!   product back to `FRAC_BITS` with SecureML local truncation.
 
 use crate::core::fixed::{self, encode, FRAC_BITS};
+use crate::core::kernel;
 use crate::proto::ctx::PartyCtx;
 
 // ---------- local (zero-communication) helpers ----------
+//
+// The hot elementwise helpers dispatch through the runtime-selected
+// compute backend (`core/kernel`); lengths are checked there with real
+// asserts — a silent zip-truncation here would corrupt shares downstream.
 
 /// `Π_Add` on shares: purely local.
 pub fn add(x: &[u64], y: &[u64]) -> Vec<u64> {
-    x.iter().zip(y).map(|(&a, &b)| a.wrapping_add(b)).collect()
+    kernel::add_ring(x, y)
 }
 
 pub fn sub(x: &[u64], y: &[u64]) -> Vec<u64> {
-    x.iter().zip(y).map(|(&a, &b)| a.wrapping_sub(b)).collect()
+    kernel::sub_ring(x, y)
 }
 
 pub fn neg(x: &[u64]) -> Vec<u64> {
@@ -56,7 +61,7 @@ pub fn mul_public(ctx: &PartyCtx, x: &[u64], c: f64) -> Vec<u64> {
 
 /// Multiply by a public *ring* constant (no truncation).
 pub fn scale_ring(x: &[u64], c: u64) -> Vec<u64> {
-    x.iter().map(|&a| a.wrapping_mul(c)).collect()
+    kernel::scale_ring(x, c)
 }
 
 /// Truncate shares by `f` bits (SecureML local truncation).
@@ -256,10 +261,14 @@ pub struct MatMulSpec<'a> {
 /// from `specs.len()` to 1 — the primitive behind the head-fused attention
 /// path (PERF.md §Round fusion).
 pub fn matmul_many_raw(ctx: &mut PartyCtx, specs: &[MatMulSpec]) -> Vec<Vec<u64>> {
-    use crate::core::tensor::matmul_ring;
+    use crate::core::kernel::matmul_ring_with;
     if specs.is_empty() {
         return Vec::new();
     }
+    // Resolve the backend and dispatcher config once per batch rather than
+    // per reconstruction term.
+    let kern = kernel::active();
+    let kcfg = kernel::kernel_config();
     let shapes: Vec<(usize, usize, usize)> =
         specs.iter().map(|s| (s.m, s.k, s.n)).collect();
     let triples = ctx.prov.matmul_triples(&shapes);
@@ -280,21 +289,15 @@ pub fn matmul_many_raw(ctx: &mut PartyCtx, specs: &[MatMulSpec]) -> Vec<Vec<u64>
         // Z_j = C_j + A_j·E + D·B_j (+ D·E for party 1)
         let mut z = t.c.clone();
         let mut tmp = vec![0u64; s.m * s.n];
-        matmul_ring(&t.a, &e_open, &mut tmp, s.m, s.k, s.n);
-        for (zi, ti) in z.iter_mut().zip(&tmp) {
-            *zi = zi.wrapping_add(*ti);
-        }
-        tmp.iter_mut().for_each(|v| *v = 0);
-        matmul_ring(&d_open, &t.b, &mut tmp, s.m, s.k, s.n);
-        for (zi, ti) in z.iter_mut().zip(&tmp) {
-            *zi = zi.wrapping_add(*ti);
-        }
+        matmul_ring_with(kern, kcfg, &t.a, &e_open, &mut tmp, s.m, s.k, s.n);
+        kern.add_assign(&mut z, &tmp);
+        tmp.fill(0);
+        matmul_ring_with(kern, kcfg, &d_open, &t.b, &mut tmp, s.m, s.k, s.n);
+        kern.add_assign(&mut z, &tmp);
         if ctx.id == 1 {
-            tmp.iter_mut().for_each(|v| *v = 0);
-            matmul_ring(&d_open, &e_open, &mut tmp, s.m, s.k, s.n);
-            for (zi, ti) in z.iter_mut().zip(&tmp) {
-                *zi = zi.wrapping_add(*ti);
-            }
+            tmp.fill(0);
+            matmul_ring_with(kern, kcfg, &d_open, &e_open, &mut tmp, s.m, s.k, s.n);
+            kern.add_assign(&mut z, &tmp);
         }
         out.push(z);
     }

@@ -13,6 +13,19 @@
 
 use std::fmt;
 
+/// Registration seam for accelerator-backed [`crate::core::kernel::Kernel`]
+/// implementations.
+///
+/// `--kernel auto` (the default) consults this before falling back to the
+/// portable SIMD backend. A real PJRT/GPU build replaces this shim and
+/// returns its device kernel here; the shim build has none, so auto-detect
+/// always lands on the CPU backends. Any kernel registered here inherits
+/// the bit-identity contract (exact ring arithmetic mod 2^64) — the
+/// differential battery in `tests/kernels.rs` is the gate.
+pub fn accelerator_kernel() -> Option<&'static dyn crate::core::kernel::Kernel> {
+    None
+}
+
 /// Error produced by every shim entry point.
 #[derive(Debug, Clone)]
 pub struct XlaUnavailable;

@@ -291,7 +291,7 @@ mod tests {
         let b = reconstruct(&m0.b, &m1.b);
         let c = reconstruct(&m0.c, &m1.c);
         let mut expect = vec![0u64; 4];
-        crate::core::tensor::matmul_ring(&a, &b, &mut expect, 2, 3, 2);
+        crate::core::kernel::matmul_ring(&a, &b, &mut expect, 2, 3, 2);
         assert_eq!(c, expect);
 
         let s0 = p0.sin_tuple(8);
@@ -341,7 +341,7 @@ mod tests {
             let b = reconstruct(&t0.b, &t1.b);
             let c = reconstruct(&t0.c, &t1.c);
             let mut expect = vec![0u64; t0.m * t0.n];
-            crate::core::tensor::matmul_ring(&a, &b, &mut expect, t0.m, t0.k, t0.n);
+            crate::core::kernel::matmul_ring(&a, &b, &mut expect, t0.m, t0.k, t0.n);
             assert_eq!(c, expect);
         }
 

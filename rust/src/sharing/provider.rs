@@ -9,7 +9,7 @@
 //! benchmarks) are thin wrappers over it.
 
 use crate::core::rng::{Prf, RandStream, Xoshiro};
-use crate::core::tensor::matmul_ring;
+use crate::core::kernel::matmul_ring;
 
 /// Beaver multiplication triple shares: `c = a * b` (elementwise, ring).
 #[derive(Clone, Debug, PartialEq, Eq)]

@@ -1,0 +1,362 @@
+//! Differential battery for the swappable compute backends.
+//!
+//! Ring arithmetic is exact (mod 2^64) and wrapping addition is
+//! commutative/associative, so every `Kernel` implementation must be
+//! **bit-identical** — a single divergent bit would silently corrupt
+//! every secret share downstream. These tests hammer that contract:
+//!
+//! * ≥ 1000 randomized shapes, scalar vs SIMD vs a naive reference,
+//!   including lane-remainder edges (k % 4 ≠ 0, n below the lane/tile
+//!   width, m = 1) and empty dims;
+//! * the parallel/serial sharding boundary (forced sharding at chunk-edge
+//!   row counts, swept thread caps);
+//! * the elementwise ring ops at remainder-heavy lengths;
+//! * end-to-end logit bit-identity across `--kernel scalar|simd` under a
+//!   pooled in-process topology and a remote-party (localhost TCP)
+//!   topology.
+
+use secformer::core::kernel::{
+    matmul_ring, matmul_ring_with, set_kernel, Kernel, KernelChoice, KernelConfig, SCALAR, SIMD,
+};
+use secformer::core::rng::Xoshiro;
+use std::sync::Mutex;
+
+/// Serializes the tests that flip the process-global backend selection,
+/// so each end-to-end run is attributable to one backend. (Even without
+/// it the assertions would hold — backends are bit-identical — but the
+/// test names would lie about what ran.)
+static KERNEL_FLIP: Mutex<()> = Mutex::new(());
+
+const SERIAL: KernelConfig = KernelConfig { max_threads: 1, par_threshold_ops: usize::MAX };
+
+fn random_operands(m: usize, k: usize, n: usize, rng: &mut Xoshiro) -> (Vec<u64>, Vec<u64>) {
+    let a: Vec<u64> = (0..m * k).map(|_| rng.next_u64()).collect();
+    let b: Vec<u64> = (0..k * n).map(|_| rng.next_u64()).collect();
+    (a, b)
+}
+
+/// Naive i-j-k triple loop — the definitional reference.
+fn matmul_naive(a: &[u64], b: &[u64], m: usize, k: usize, n: usize) -> Vec<u64> {
+    let mut c = vec![0u64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0u64;
+            for p in 0..k {
+                acc = acc.wrapping_add(a[i * k + p].wrapping_mul(b[p * n + j]));
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+fn assert_backends_identical(
+    a: &[u64],
+    b: &[u64],
+    m: usize,
+    k: usize,
+    n: usize,
+    check_naive: bool,
+    what: &str,
+) {
+    let mut c_scalar = vec![0u64; m * n];
+    matmul_ring_with(&SCALAR, SERIAL, a, b, &mut c_scalar, m, k, n);
+    let mut c_simd = vec![0u64; m * n];
+    matmul_ring_with(&SIMD, SERIAL, a, b, &mut c_simd, m, k, n);
+    assert_eq!(c_scalar, c_simd, "{what}: scalar vs simd at {m}x{k}x{n}");
+    if check_naive {
+        assert_eq!(c_scalar, matmul_naive(a, b, m, k, n), "{what}: vs naive at {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn differential_battery_randomized_shapes() {
+    let mut rng = Xoshiro::seed_from(0xD1FF);
+    let mut trials = 0usize;
+
+    // Directed edges first: empty dims, m = 1, n below the SIMD column
+    // tile (JT = 8) and the vector lane width (4), k around the 4-wide
+    // unroll and the KB = 128 k-block boundary.
+    let edges: [(usize, usize, usize); 22] = [
+        (0, 5, 7),
+        (3, 0, 4),
+        (2, 6, 0),
+        (0, 0, 0),
+        (1, 1, 1),
+        (1, 7, 3),
+        (1, 13, 16),
+        (5, 4, 1),
+        (5, 5, 2),
+        (4, 6, 3),
+        (3, 3, 4),
+        (2, 9, 5),
+        (2, 10, 7),
+        (3, 11, 8),
+        (3, 12, 9),
+        (2, 127, 11),
+        (2, 128, 11),
+        (2, 129, 11),
+        (2, 131, 17),
+        (1, 255, 9),
+        (2, 257, 8),
+        (7, 130, 23),
+    ];
+    for &(m, k, n) in &edges {
+        let (a, b) = random_operands(m, k, n, &mut rng);
+        assert_backends_identical(&a, &b, m, k, n, true, "edge");
+        trials += 1;
+    }
+
+    // Randomized sweep. Small dims dominate (they hit every remainder
+    // path: k % 4, n % 8, n % 4); every 16th trial grows k past the
+    // 128-wide k-block and n past several column tiles.
+    for t in 0..1024usize {
+        let (m, k, n) = if t % 16 == 0 {
+            (
+                1 + (rng.next_u64() % 24) as usize,
+                1 + (rng.next_u64() % 300) as usize,
+                1 + (rng.next_u64() % 70) as usize,
+            )
+        } else {
+            (
+                (rng.next_u64() % 9) as usize,
+                (rng.next_u64() % 33) as usize,
+                (rng.next_u64() % 19) as usize,
+            )
+        };
+        let (a, b) = random_operands(m, k, n, &mut rng);
+        // Naive reference on a subset — it's O(mkn) with no blocking, and
+        // the scalar kernel is already pinned against it on every edge.
+        assert_backends_identical(&a, &b, m, k, n, t % 8 == 0, "random");
+        trials += 1;
+    }
+    assert!(trials >= 1000, "battery must cover >= 1000 shapes, ran {trials}");
+}
+
+#[test]
+fn differential_all_max_operands_wrap_identically() {
+    // All-u64::MAX operands exercise maximal wrapping on every product
+    // and every accumulation step. Closed form: MAX·MAX ≡ 1 (mod 2^64),
+    // so each output element is exactly k mod 2^64.
+    for (m, k, n) in [(3usize, 7usize, 5usize), (2, 130, 9), (1, 4, 1), (4, 64, 12)] {
+        let a = vec![u64::MAX; m * k];
+        let b = vec![u64::MAX; k * n];
+        for kern in [&SCALAR as &dyn Kernel, &SIMD] {
+            let mut c = vec![0u64; m * n];
+            matmul_ring_with(kern, SERIAL, &a, &b, &mut c, m, k, n);
+            assert!(
+                c.iter().all(|&v| v == k as u64),
+                "{} at {m}x{k}x{n}: expected all {k}",
+                kern.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn differential_parallel_sharding_boundary() {
+    // Forced sharding (threshold 1) must be bit-identical to the serial
+    // path for both backends at row counts around chunk boundaries —
+    // including m = 1 (fewer rows than workers) and m = 127 (uneven last
+    // chunk) — for several thread caps.
+    let (k, n) = (96usize, 40usize);
+    let mut rng = Xoshiro::seed_from(0x5AAD);
+    for m in [1usize, 2, 3, 7, 8, 9, 127, 128] {
+        let (a, b) = random_operands(m, k, n, &mut rng);
+        for kern in [&SCALAR as &dyn Kernel, &SIMD] {
+            let mut serial = vec![0u64; m * n];
+            matmul_ring_with(kern, SERIAL, &a, &b, &mut serial, m, k, n);
+            for threads in [2usize, 3, 8] {
+                let cfg = KernelConfig { max_threads: threads, par_threshold_ops: 1 };
+                let mut par = vec![0u64; m * n];
+                matmul_ring_with(kern, cfg, &a, &b, &mut par, m, k, n);
+                assert_eq!(par, serial, "{} m={m} threads={threads}", kern.name());
+            }
+        }
+    }
+    // The default entry point (global backend + config) on an
+    // above-threshold shape agrees with both explicit serial backends.
+    let (m, k, n) = (160usize, 80, 96); // > 2^20 MACs
+    let (a, b) = random_operands(m, k, n, &mut rng);
+    let mut via_global = vec![0u64; m * n];
+    matmul_ring(&a, &b, &mut via_global, m, k, n);
+    let mut serial = vec![0u64; m * n];
+    matmul_ring_with(&SCALAR, SERIAL, &a, &b, &mut serial, m, k, n);
+    assert_eq!(via_global, serial, "global dispatch vs explicit serial scalar");
+}
+
+#[test]
+fn differential_elementwise_ops() {
+    let mut rng = Xoshiro::seed_from(0xE7E7);
+    // Lengths straddling the lane width (4) and tile remainders.
+    for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 63, 64, 67] {
+        let x: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+        let y: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+        let c = rng.next_u64();
+        let (mut s, mut v) = (vec![0u64; len], vec![0u64; len]);
+        SCALAR.add(&x, &y, &mut s);
+        SIMD.add(&x, &y, &mut v);
+        assert_eq!(s, v, "add len={len}");
+        SCALAR.sub(&x, &y, &mut s);
+        SIMD.sub(&x, &y, &mut v);
+        assert_eq!(s, v, "sub len={len}");
+        SCALAR.scale(&x, c, &mut s);
+        SIMD.scale(&x, c, &mut v);
+        assert_eq!(s, v, "scale len={len}");
+        let (mut accs, mut accv) = (x.clone(), x.clone());
+        SCALAR.add_assign(&mut accs, &y);
+        SIMD.add_assign(&mut accv, &y);
+        assert_eq!(accs, accv, "add_assign len={len}");
+    }
+    // Rowwise broadcasts at remainder-heavy column counts.
+    for (rows, cols) in [(1usize, 1usize), (2, 3), (3, 4), (4, 7), (5, 9), (2, 16), (3, 17)] {
+        let x: Vec<u64> = (0..rows * cols).map(|_| rng.next_u64()).collect();
+        let row: Vec<u64> = (0..rows).map(|_| rng.next_u64()).collect();
+        let (mut s, mut v) = (vec![0u64; rows * cols], vec![0u64; rows * cols]);
+        SCALAR.mul_rowwise(&x, &row, &mut s, cols);
+        SIMD.mul_rowwise(&x, &row, &mut v, cols);
+        assert_eq!(s, v, "mul_rowwise {rows}x{cols}");
+        SCALAR.sub_rowwise(&x, &row, &mut s, cols);
+        SIMD.sub_rowwise(&x, &row, &mut v, cols);
+        assert_eq!(s, v, "sub_rowwise {rows}x{cols}");
+    }
+}
+
+// =====================================================================
+// End-to-end logit bit-identity across backends
+// =====================================================================
+
+mod e2e {
+    use super::*;
+    use secformer::engine::{OfflineMode, SecureModel};
+    use secformer::nn::config::{Framework, ModelConfig};
+    use secformer::nn::model::ModelInput;
+    use secformer::nn::weights::{random_weights, share_weights, WeightMap};
+    use secformer::offline::pool::PoolConfig;
+    use secformer::offline::source::{BundleSource, PoolSet};
+    use secformer::party::runtime::{spawn_party_host, PartyHostConfig};
+    use std::sync::Arc;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::tiny(8, Framework::SecFormer)
+    }
+
+    fn hidden_input(cfg: &ModelConfig, seed: u64) -> ModelInput {
+        let mut rng = Xoshiro::seed_from(seed);
+        ModelInput::Hidden((0..cfg.seq * cfg.hidden).map(|_| rng.normal() * 0.5).collect())
+    }
+
+    fn shares1(w: &WeightMap) -> secformer::nn::weights::ShareMap {
+        // The engine's fixed sharing seed: equal weights ⇒ equal shares.
+        let (_, s1) = share_weights(w, &mut Xoshiro::seed_from(0x5EC0));
+        s1
+    }
+
+    fn pool_set(cfg: &ModelConfig, prefix: &str) -> Arc<PoolSet> {
+        PoolSet::start(
+            cfg,
+            prefix,
+            PoolConfig { target_depth: 4, producers: 1, ..PoolConfig::default() },
+            true,
+        )
+    }
+
+    fn assert_bit_identical(a: &[f64], b: &[f64], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: logit count");
+        for i in 0..a.len() {
+            assert!(a[i].is_finite(), "{what}: logit {i} not finite");
+            assert_eq!(
+                a[i].to_bits(),
+                b[i].to_bits(),
+                "{what}: logit {i} differs: scalar={} simd={}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+
+    /// Run `f` once per backend (scalar, then SIMD), restoring
+    /// auto-detection afterwards, and return both results.
+    fn with_each_backend<T>(mut f: impl FnMut() -> T) -> (T, T) {
+        let _guard = KERNEL_FLIP.lock().unwrap_or_else(|p| p.into_inner());
+        set_kernel(KernelChoice::Scalar);
+        let scalar = f();
+        set_kernel(KernelChoice::Simd);
+        let simd = f();
+        set_kernel(KernelChoice::Auto);
+        (scalar, simd)
+    }
+
+    #[test]
+    fn pooled_logits_bit_identical_across_kernels() {
+        // Same pooled in-process engine topology, same session labels,
+        // one run per backend: the full secure forward pass — triple
+        // generation, Beaver reconstruction, every protocol — must
+        // produce bit-identical logits.
+        let cfg = tiny();
+        let w = random_weights(&cfg, 91);
+        let input = hidden_input(&cfg, 17);
+        let mut run = |prefix: &str| {
+            let mut model = SecureModel::new_pooled(cfg.clone(), &w, pool_set(&cfg, prefix));
+            model.set_session_label("kern-pooled");
+            model.infer(&input).logits
+        };
+        // Distinct pool prefixes per run (one-time-pad hygiene): the
+        // correlated randomness DIFFERS between the two runs, yet the
+        // reconstructed logits may not — bit-identity must hold
+        // independently of the randomness, not just transcript-for-
+        // transcript.
+        let mut round = 0u32;
+        let (scalar, simd) = with_each_backend(|| {
+            round += 1;
+            run(&format!("kern-pool-{round}"))
+        });
+        assert_bit_identical(&scalar, &simd, "pooled");
+    }
+
+    #[test]
+    fn remote_party_logits_bit_identical_across_kernels() {
+        // Remote-party topology: S1 lives in a `spawn_party_host`
+        // process-twin behind a real localhost TCP socket (pooled source
+        // on both sides, session-aligned on label/prefix). One full
+        // remote inference per backend; logits must match bit-for-bit.
+        let cfg = tiny();
+        let w = random_weights(&cfg, 92);
+        let input = hidden_input(&cfg, 23);
+        let mut run = |prefix: &str| {
+            let addr = spawn_party_host(
+                cfg.clone(),
+                Arc::new(shares1(&w)),
+                Some(pool_set(&cfg, prefix) as Arc<dyn BundleSource>),
+                PartyHostConfig::default(),
+            )
+            .expect("spawn party host");
+            let mut model = SecureModel::new_pooled(cfg.clone(), &w, pool_set(&cfg, prefix));
+            model.set_session_label("kern-remote");
+            model
+                .connect_remote_peer(&addr.to_string(), None)
+                .expect("connect to party host");
+            model.infer(&input).logits
+        };
+        let mut round = 0u32;
+        let (scalar, simd) = with_each_backend(|| {
+            round += 1;
+            run(&format!("kern-remote-{round}"))
+        });
+        assert_bit_identical(&scalar, &simd, "remote-party");
+    }
+
+    #[test]
+    fn seeded_logits_bit_identical_across_kernels() {
+        // Cheapest end-to-end cross-check: the in-process seeded engine.
+        let cfg = tiny();
+        let w = random_weights(&cfg, 93);
+        let input = hidden_input(&cfg, 31);
+        let (scalar, simd) = with_each_backend(|| {
+            let mut model = SecureModel::new(cfg.clone(), &w, OfflineMode::Seeded);
+            model.set_session_label("kern-seeded");
+            model.infer(&input).logits
+        });
+        assert_bit_identical(&scalar, &simd, "seeded");
+    }
+}

@@ -139,6 +139,66 @@ fn prop_trunc_error_bounded() {
 }
 
 #[test]
+fn prop_matmul_parallel_matches_serial_random_shapes() {
+    // Row sharding must be bit-identical to the serial kernel for ANY
+    // shape, not just the fixed one pinned in core/tensor.rs — wrapped
+    // sums are order-independent, so a divergence means a sharding bug
+    // (mis-sliced chunk edges), not a rounding difference.
+    use secformer::core::kernel::{matmul_ring_with, Kernel, KernelConfig, SCALAR, SIMD};
+    let serial = KernelConfig { max_threads: 1, par_threshold_ops: usize::MAX };
+    let mut rng = Xoshiro::seed_from(10);
+    for trial in 0..24 {
+        let m = 1 + (rng.next_u64() % 130) as usize;
+        let k = 1 + (rng.next_u64() % 64) as usize;
+        let n = 1 + (rng.next_u64() % 48) as usize;
+        let a: Vec<u64> = (0..m * k).map(|_| rng.next_u64()).collect();
+        let b: Vec<u64> = (0..k * n).map(|_| rng.next_u64()).collect();
+        for kern in [&SCALAR as &dyn Kernel, &SIMD] {
+            let mut ser = vec![0u64; m * n];
+            matmul_ring_with(kern, serial, &a, &b, &mut ser, m, k, n);
+            let threads = 2 + (rng.next_u64() % 7) as usize;
+            let forced = KernelConfig { max_threads: threads, par_threshold_ops: 1 };
+            let mut par = vec![0u64; m * n];
+            matmul_ring_with(kern, forced, &a, &b, &mut par, m, k, n);
+            assert_eq!(
+                par,
+                ser,
+                "trial {trial}: {} ({m},{k},{n}) threads={threads}",
+                kern.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_matmul_overflow_heavy_all_max_operands() {
+    // All-u64::MAX operands force maximal wrapping on every product and
+    // accumulation. MAX·MAX ≡ 1 (mod 2^64), so each output element is
+    // exactly k — an independent closed form both backends (and the
+    // threaded path) must hit bit-for-bit.
+    use secformer::core::kernel::{matmul_ring_with, Kernel, KernelConfig, SCALAR, SIMD};
+    for (m, k, n) in [(1usize, 1usize, 1usize), (3, 5, 7), (2, 129, 9), (17, 31, 13)] {
+        let a = vec![u64::MAX; m * k];
+        let b = vec![u64::MAX; k * n];
+        for kern in [&SCALAR as &dyn Kernel, &SIMD] {
+            for cfg in [
+                KernelConfig { max_threads: 1, par_threshold_ops: usize::MAX },
+                KernelConfig { max_threads: 4, par_threshold_ops: 1 },
+            ] {
+                let mut c = vec![0u64; m * n];
+                matmul_ring_with(kern, cfg, &a, &b, &mut c, m, k, n);
+                assert!(
+                    c.iter().all(|&v| v == k as u64),
+                    "{} ({m},{k},{n}) threads={}: expected all {k}",
+                    kern.name(),
+                    cfg.max_threads
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_boolean_and_arithmetic_shares_consistent() {
     // encode_vec → share → reconstruct is exact for representable values.
     let mut rng = Xoshiro::seed_from(9);
