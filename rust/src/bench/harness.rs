@@ -1126,11 +1126,11 @@ pub fn two_party_bench(seq: usize, iters: usize) -> Vec<TwoPartyMeasurement> {
 // Observability — tracing overhead on the serving path
 // =====================================================================
 
-/// One tracing-overhead measurement: the same sequential secure request
-/// load with the session tracer off or on.
+/// One observability-overhead measurement: the same sequential secure
+/// request load with tracer/ledger off or on.
 #[derive(Clone, Debug)]
 pub struct ObservabilityMeasurement {
-    /// Run label (`trace_off` / `trace_on`).
+    /// Run label (`all_off` / `trace_on` / `trace_ledger_on`).
     pub label: String,
     /// Timed requests (one untimed warm-up precedes them).
     pub requests: usize,
@@ -1149,10 +1149,11 @@ fn run_observability_load(
     cfg: &ModelConfig,
     weights: &crate::nn::weights::WeightMap,
     trace: bool,
+    ledger: bool,
     requests: usize,
 ) -> ObservabilityMeasurement {
     use crate::coordinator::{BatcherConfig, Coordinator, EngineKind, ServingConfig};
-    let serving = ServingConfig { trace, ..ServingConfig::default() };
+    let serving = ServingConfig { trace, ledger, ..ServingConfig::default() };
     let coord = Coordinator::start_with(
         cfg.clone(),
         weights.clone(),
@@ -1191,11 +1192,13 @@ fn run_observability_load(
     }
 }
 
-/// Tracing overhead on the secure serving path: the same sequential
-/// request load with the tracer disabled vs enabled (span ring, phase
-/// attribution and JSON rendering all live on the enabled run). The
-/// protocol transcript is identical either way — the bench pins what
+/// Observability overhead on the secure serving path: the same
+/// sequential request load with everything off, the tracer on, and
+/// tracer + cost ledger on (span ring, phase attribution, per-op round
+/// and byte attribution all live on the full run). The protocol
+/// transcript is identical in every configuration — the bench pins what
 /// observability costs at p50 and writes `BENCH_observability.json`.
+/// The acceptance bound (≤ 3% p50) applies to the FULL configuration.
 pub fn observability_bench(
     seq: usize,
     requests: usize,
@@ -1203,17 +1206,19 @@ pub fn observability_bench(
     let cfg = ModelConfig::tiny(seq, Framework::SecFormer);
     let weights = random_weights(&cfg, 0x0B5E);
     let requests = requests.max(1);
-    println!("\n=== Observability: tracing off vs on, same sequential load ===");
+    println!("\n=== Observability: all-off vs trace vs trace+ledger, same sequential load ===");
     println!("  seq {seq}, {requests} secure requests per run (one warm-up each)");
 
-    let off = run_observability_load("trace_off", &cfg, &weights, false, requests);
-    let on = run_observability_load("trace_on", &cfg, &weights, true, requests);
+    let off = run_observability_load("all_off", &cfg, &weights, false, false, requests);
+    let trace_only = run_observability_load("trace_on", &cfg, &weights, true, false, requests);
+    let full = run_observability_load("trace_ledger_on", &cfg, &weights, true, true, requests);
     assert_eq!(off.spans_recorded, 0, "disabled tracer must record nothing");
-    assert!(on.spans_recorded > 0, "enabled tracer must record spans");
+    assert!(trace_only.spans_recorded > 0, "enabled tracer must record spans");
+    assert!(full.spans_recorded > 0, "enabled tracer must record spans");
 
-    for m in [&off, &on] {
+    for m in [&off, &trace_only, &full] {
         println!(
-            "  {:<10} wall {:>9}  p50 {:>9}  p95 {:>9}  spans {}",
+            "  {:<16} wall {:>9}  p50 {:>9}  p95 {:>9}  spans {}",
             m.label,
             fmt_s(m.wall_s),
             fmt_s(m.p50_latency_s),
@@ -1221,9 +1226,9 @@ pub fn observability_bench(
             m.spans_recorded,
         );
     }
-    let overhead = on.p50_latency_s / off.p50_latency_s.max(1e-12) - 1.0;
+    let overhead = full.p50_latency_s / off.p50_latency_s.max(1e-12) - 1.0;
     println!(
-        "  tracing p50 overhead: {:+.2}%  (acceptance bound: ≤ 3%)",
+        "  trace+ledger p50 overhead: {:+.2}%  (acceptance bound: ≤ 3%)",
         overhead * 100.0
     );
 
@@ -1236,13 +1241,121 @@ pub fn observability_bench(
     };
     let json = format!(
         "{{\n  \"bench\": \"observability_overhead\",\n  \"seq\": {seq},\n  \
-         \"requests\": {requests},\n  \"p50_overhead_frac\": {overhead:.6},\n  \"runs\": [\n{},\n{}\n  ]\n}}\n",
+         \"requests\": {requests},\n  \"p50_overhead_frac\": {overhead:.6},\n  \"runs\": [\n{},\n{},\n{}\n  ]\n}}\n",
         json_of(&off),
-        json_of(&on),
+        json_of(&trace_only),
+        json_of(&full),
     );
     std::fs::write("BENCH_observability.json", &json).expect("write BENCH_observability.json");
     println!("  wrote BENCH_observability.json");
-    (off, on)
+    (off, full)
+}
+
+// =====================================================================
+// bench ledger — per-op measured cost vs the analytic model (CI gate)
+// =====================================================================
+
+/// One `(batch, op)` reconciliation row of `bench ledger`.
+#[derive(Clone, Debug)]
+pub struct LedgerBenchRow {
+    /// Batch size the inference ran at.
+    pub batch: usize,
+    /// Op name (rollup taxonomy).
+    pub op: &'static str,
+    /// Scope opens observed.
+    pub calls: u64,
+    /// Rounds the ledger attributed to the op's subtree.
+    pub measured_rounds: u64,
+    /// `calls × per-call analytic rounds` from the cost model.
+    pub expected_rounds: u64,
+    /// `measured − expected`; any positive value is a regression.
+    pub rounds_delta: i64,
+    /// Measured wire bits per element, both parties.
+    pub measured_bits_per_elem: f64,
+    /// Analytic bits per element, when the model defines one.
+    pub expected_bits_per_elem: Option<f64>,
+}
+
+/// The CI perf-regression gate: run BERT-tiny at B = 1 and B = 8 with
+/// the cost ledger attached, reconcile every measured op against
+/// [`crate::obs::ledger::CostModelCheck`] (i.e. `proto/cost.rs`), print
+/// the table and write `BENCH_ledger.json`. Returns the number of ops
+/// whose measured rounds EXCEED the analytic model — CI fails on any:
+/// a round-count increase is a silent protocol regression no wall-clock
+/// noise can excuse.
+pub fn ledger_bench(seq: usize) -> usize {
+    use crate::obs::ledger::{CostModelCheck, Ledger};
+    use crate::obs::ROLE_COORDINATOR;
+    let seq = seq.max(2);
+    let cfg = ModelConfig::tiny(seq, Framework::SecFormer);
+    let weights = random_weights(&cfg, 0x1ED6);
+    println!("\n=== Cost ledger: measured per-op rounds/bytes vs the analytic model ===");
+    println!("  BERT-tiny seq {seq}, B ∈ {{1, 8}} (seeded offline mode)");
+    let check = CostModelCheck::new(cfg.seq, cfg.hidden);
+    let mut rows: Vec<LedgerBenchRow> = Vec::new();
+    let mut regressions = 0usize;
+    for batch in [1usize, 8] {
+        let ledger = Ledger::new(ROLE_COORDINATOR, true);
+        let mut model = SecureModel::new(cfg.clone(), &weights, OfflineMode::Seeded);
+        model.set_ledger(Some(ledger.clone()));
+        let toks: Vec<u32> = (0..cfg.seq as u32).map(|i| i % cfg.vocab as u32).collect();
+        if batch == 1 {
+            let _ = model.infer(&ModelInput::Tokens(toks));
+        } else {
+            let inputs: Vec<ModelInput> =
+                (0..batch).map(|_| ModelInput::Tokens(toks.clone())).collect();
+            let _ = model.infer_batch(&inputs);
+        }
+        for c in check.check(&ledger.aggregate()) {
+            let delta = c.rounds_delta();
+            if delta > 0 {
+                regressions += 1;
+            }
+            let bits = match c.expected_bits_per_elem {
+                Some(e) => format!("{:.1} (expect {e:.1})", c.measured_bits_per_elem),
+                None => format!("{:.1}", c.measured_bits_per_elem),
+            };
+            println!(
+                "  B={batch} {:<10} calls {:>4}  rounds {:>5} (expect {:>5}, Δ{delta:+})  bits/elem {bits}",
+                c.op, c.calls, c.measured_rounds, c.expected_rounds,
+            );
+            rows.push(LedgerBenchRow {
+                batch,
+                op: c.op,
+                calls: c.calls,
+                measured_rounds: c.measured_rounds,
+                expected_rounds: c.expected_rounds,
+                rounds_delta: delta,
+                measured_bits_per_elem: c.measured_bits_per_elem,
+                expected_bits_per_elem: c.expected_bits_per_elem,
+            });
+        }
+    }
+    println!("  round regressions vs cost model: {regressions}");
+    let json_rows: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            let expected_bits = match r.expected_bits_per_elem {
+                Some(e) => format!("{e:.4}"),
+                None => "null".to_string(),
+            };
+            format!(
+                "    {{\"batch\": {}, \"op\": \"{}\", \"calls\": {}, \
+                 \"measured_rounds\": {}, \"expected_rounds\": {}, \"rounds_delta\": {}, \
+                 \"measured_bits_per_elem\": {:.4}, \"expected_bits_per_elem\": {}}}",
+                r.batch, r.op, r.calls, r.measured_rounds, r.expected_rounds, r.rounds_delta,
+                r.measured_bits_per_elem, expected_bits,
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"ledger\",\n  \"seq\": {seq},\n  \
+         \"rounds_regressions\": {regressions},\n  \"runs\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n"),
+    );
+    std::fs::write("BENCH_ledger.json", &json).expect("write BENCH_ledger.json");
+    println!("  wrote BENCH_ledger.json");
+    regressions
 }
 
 // =====================================================================

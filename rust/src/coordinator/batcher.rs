@@ -16,6 +16,7 @@
 
 use crate::coordinator::metrics::{Metrics, MetricsSummary, PHASES};
 use crate::core::rng::Xoshiro;
+use crate::obs::ledger::{CostModelCheck, Ledger};
 use crate::obs::{MetricsRegistry, Tracer, ROLE_COORDINATOR};
 use crate::core::sync::{lock_or_recover, wait_or_recover, wait_timeout_or_recover};
 use crate::engine::{OfflineMode, PeerRuntime, SecureModel};
@@ -186,6 +187,11 @@ pub struct ServingConfig {
     /// Export every recorded span to `{dir}/trace-coordinator.jsonl`
     /// (`serve --trace-dir`).
     pub trace_dir: Option<String>,
+    /// Attribute every secure session's rounds/bytes/tuples per protocol
+    /// op in the coordinator's cost ledger (on by default; `serve
+    /// --no-ledger` turns it off). Session tables also export to
+    /// `{trace_dir}/ledger-coordinator.jsonl` when `trace_dir` is set.
+    pub ledger: bool,
 }
 
 impl Default for ServingConfig {
@@ -213,6 +219,7 @@ impl Default for ServingConfig {
             batch_buckets: vec![1, 2, 4, 8],
             trace: true,
             trace_dir: None,
+            ledger: true,
         }
     }
 }
@@ -511,6 +518,13 @@ pub struct Coordinator {
     /// The coordinator's span ring — every secure worker's engine
     /// records into it, and the `trace` command reads from it.
     tracer: Arc<Tracer>,
+    /// The coordinator's cost ledger — every secure worker's engine
+    /// absorbs its per-session op attribution into it, and the `ledger`
+    /// command reads from it.
+    ledger: Arc<Ledger>,
+    /// Analytic-cost reconciliation for this model's shape (drives the
+    /// `secformer_cost_model_rounds_delta` gauges).
+    cost_check: CostModelCheck,
     started: Instant,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
@@ -554,6 +568,13 @@ impl Coordinator {
                 eprintln!("coordinator: trace export to {dir} disabled: {e}");
             }
         }
+        let ledger = Ledger::new(ROLE_COORDINATOR, serving.ledger);
+        if let Some(dir) = &serving.trace_dir {
+            if let Err(e) = ledger.set_dir(std::path::Path::new(dir)) {
+                eprintln!("coordinator: ledger export to {dir} disabled: {e}");
+            }
+        }
+        let cost_check = CostModelCheck::new(cfg.seq, cfg.hidden);
 
         // Per-coordinator nonce: two coordinators in one process (test
         // binaries, embedded uses) must never share session labels — a
@@ -709,6 +730,7 @@ impl Coordinator {
             model.set_session_label(&format!("coord-{instance}-w{i}"));
             model.set_batch_buckets(&engine_buckets);
             model.set_tracer(Some(tracer.clone()));
+            model.set_ledger(Some(ledger.clone()));
             if let Some(sup) = &supervisor {
                 model.set_peer_runtime(PeerRuntime::Supervised(sup.clone()));
             }
@@ -768,6 +790,8 @@ impl Coordinator {
             pool,
             supervisor,
             tracer,
+            ledger,
+            cost_check,
             started: Instant::now(),
             workers,
         })
@@ -862,6 +886,19 @@ impl Coordinator {
         self.tracer.render_trace(trace)
     }
 
+    /// The coordinator's cost ledger (the `ledger` command's source;
+    /// tests reconcile it against [`crate::proto::cost`]).
+    pub fn ledger(&self) -> &Arc<Ledger> {
+        &self.ledger
+    }
+
+    /// The per-op attribution rows for one session label (or the
+    /// process-lifetime aggregate for an empty label) as JSONL — the
+    /// body of the line protocol's `ledger [label]` command.
+    pub fn render_ledger(&self, label: &str) -> String {
+        self.ledger.render(label)
+    }
+
     /// The coordinator's side of the unified `secformer_*` exposition:
     /// both engines' latency histograms, the secure engine's phase
     /// attribution, queue/pool/link gauges and trace-ring health, every
@@ -900,6 +937,17 @@ impl Coordinator {
             "Secure-request wall-clock attributed per phase; the five \
              phases partition total latency.",
             &phase_rows,
+        );
+        let phase_hist_rows: Vec<(String, &crate::obs::LogHistogram)> = PHASES
+            .iter()
+            .zip(self.metrics_secure.phase_hists().iter())
+            .map(|(name, h)| (format!("phase=\"{name}\""), h))
+            .collect();
+        r.histogram_rows(
+            "secformer_phase_latency_seconds",
+            "Per-request latency of each secure-request phase (one \
+             sample per phase per request).",
+            &phase_hist_rows,
         );
         r.gauge(
             "secformer_recent_rps",
@@ -977,6 +1025,72 @@ impl Coordinator {
             "secformer_spool_compactions_total",
             "Spool-file compaction rewrites.",
             s.spool_compactions as f64,
+        );
+        let agg = self.ledger.aggregate();
+        if !agg.is_empty() {
+            let mut rounds = Vec::with_capacity(agg.len());
+            let mut bytes = Vec::with_capacity(agg.len());
+            let mut tuples = Vec::with_capacity(agg.len());
+            let mut seconds = Vec::with_capacity(agg.len());
+            for (op, st) in &agg {
+                let label = format!("op=\"{op}\"");
+                rounds.push((label.clone(), st.rounds as f64));
+                bytes.push((label.clone(), st.bytes as f64));
+                tuples.push((label.clone(), st.tuple_words as f64));
+                seconds.push((label, st.seconds()));
+            }
+            r.counter_rows(
+                "secformer_op_rounds_total",
+                "Online protocol rounds attributed per op path; rows \
+                 partition the total round count exactly.",
+                &rounds,
+            );
+            r.counter_rows(
+                "secformer_op_bytes_total",
+                "Online payload bytes (one party's sends) attributed per \
+                 op path; rows partition the online total exactly.",
+                &bytes,
+            );
+            r.counter_rows(
+                "secformer_op_tuple_words_total",
+                "Correlated-randomness ring elements (one party's words) \
+                 consumed per op path.",
+                &tuples,
+            );
+            r.counter_rows(
+                "secformer_op_seconds_total",
+                "Cumulative scope wall-clock per op path.",
+                &seconds,
+            );
+            let deltas: Vec<(String, f64)> = self
+                .cost_check
+                .check(&agg)
+                .into_iter()
+                .map(|c| (format!("op=\"{}\"", c.op), c.rounds_delta() as f64))
+                .collect();
+            if !deltas.is_empty() {
+                r.gauge_rows(
+                    "secformer_cost_model_rounds_delta",
+                    "Measured minus analytic rounds per taxonomy op \
+                     (0 = the implementation matches proto::cost).",
+                    &deltas,
+                );
+            }
+        }
+        r.gauge(
+            "secformer_ledger_enabled",
+            "Whether per-op cost attribution is on.",
+            if self.ledger.is_enabled() { 1.0 } else { 0.0 },
+        );
+        r.counter(
+            "secformer_ledger_sessions_total",
+            "Secure sessions absorbed into the cost ledger.",
+            self.ledger.sessions_absorbed() as f64,
+        );
+        r.counter(
+            "secformer_ledger_dropped_total",
+            "Session tables evicted from the bounded recent ring.",
+            self.ledger.dropped() as f64,
         );
         r.gauge(
             "secformer_trace_enabled",

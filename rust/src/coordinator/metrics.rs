@@ -33,8 +33,10 @@ pub struct Metrics {
     latency: LogHistogram,
     /// Trailing-window completion counter for `recent_rps`.
     recent: WindowedRate,
-    /// Accumulated per-phase nanoseconds, indexed like [`PHASES`].
-    phase_ns: [AtomicU64; 5],
+    /// Per-phase latency histograms, indexed like [`PHASES`]: each
+    /// request contributes one sample per phase, so phase totals AND
+    /// phase quantiles (p50/p95/p99) come from the same storage.
+    phase_hist: [LogHistogram; 5],
     /// Offline correlated-randomness bytes consumed by this engine's
     /// requests (dealer corrections or pooled bundles).
     offline_bytes: AtomicU64,
@@ -84,6 +86,12 @@ pub struct MetricsSummary {
     pub recent_rps: f64,
     /// Accumulated per-phase seconds, indexed like [`PHASES`].
     pub phase_totals_s: [f64; 5],
+    /// Per-phase median latency, indexed like [`PHASES`].
+    pub phase_p50_s: [f64; 5],
+    /// Per-phase 95th-percentile latency, indexed like [`PHASES`].
+    pub phase_p95_s: [f64; 5],
+    /// Per-phase 99th-percentile latency, indexed like [`PHASES`].
+    pub phase_p99_s: [f64; 5],
     /// Offline correlated-randomness bytes drawn, all time (dealer
     /// corrections, or pooled bundles — a pooled session that diverges
     /// from its plan still spends its bundle, like any one-time pad).
@@ -148,7 +156,7 @@ impl Metrics {
         Metrics {
             latency: LogHistogram::new(),
             recent: WindowedRate::new(),
-            phase_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            phase_hist: std::array::from_fn(|_| LogHistogram::new()),
             offline_bytes: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
@@ -192,16 +200,15 @@ impl Metrics {
     /// `Σ phase_totals_s ≈ Σ observed latencies` (within measurement
     /// slack — the invariant `tests/observability.rs` pins per request).
     pub fn observe_phases(&self, p: &PhaseBreakdown) {
-        let add = |i: usize, s: f64| {
-            if s > 0.0 {
-                self.phase_ns[i].fetch_add((s * 1e9) as u64, Ordering::Relaxed);
-            }
-        };
-        add(0, p.queue_s);
-        add(1, p.share_s);
-        add(2, p.bundle_wait_s);
-        add(3, p.compute_s());
-        add(4, p.transport_s);
+        for (i, s) in
+            [p.queue_s, p.share_s, p.bundle_wait_s, p.compute_s(), p.transport_s]
+                .into_iter()
+                .enumerate()
+        {
+            // `record` clamps negatives to 0; every request contributes
+            // one sample per phase so the histograms stay comparable.
+            self.phase_hist[i].record(s);
+        }
     }
 
     /// Account offline bytes consumed by one finished request.
@@ -221,7 +228,18 @@ impl Metrics {
 
     /// Accumulated per-phase seconds, indexed like [`PHASES`].
     pub fn phase_totals_s(&self) -> [f64; 5] {
-        std::array::from_fn(|i| self.phase_ns[i].load(Ordering::Relaxed) as f64 / 1e9)
+        std::array::from_fn(|i| self.phase_hist[i].sum_s())
+    }
+
+    /// The per-phase latency histograms, indexed like [`PHASES`] (for
+    /// the `metrics` exposition's `_bucket` series).
+    pub fn phase_hists(&self) -> &[LogHistogram; 5] {
+        &self.phase_hist
+    }
+
+    /// The `q`-quantile of each phase's latency, indexed like [`PHASES`].
+    pub fn phase_quantiles(&self, q: f64) -> [f64; 5] {
+        std::array::from_fn(|i| self.phase_hist[i].quantile(q))
     }
 
     /// Requests per second over the trailing [`RECENT_WINDOW_S`] s.
@@ -264,6 +282,9 @@ impl Metrics {
                 / self.started.elapsed().as_secs_f64().max(1e-9),
             recent_rps: self.recent_rps(),
             phase_totals_s: self.phase_totals_s(),
+            phase_p50_s: self.phase_quantiles(0.50),
+            phase_p95_s: self.phase_quantiles(0.95),
+            phase_p99_s: self.phase_quantiles(0.99),
             offline_bytes: self.offline_bytes.load(Ordering::Relaxed),
             pool_depth: 0,
             pool_hit_rate: 1.0,
@@ -378,6 +399,23 @@ mod tests {
             2.0 * p.total_s()
         );
         assert_eq!(PHASES.len(), totals.len());
+    }
+
+    #[test]
+    fn phase_quantiles_come_from_per_request_histograms() {
+        let m = Metrics::new();
+        // 99 fast requests and one slow one: the queue p50 must stay
+        // near the fast cluster while p99 sees the straggler.
+        for _ in 0..99 {
+            m.observe_phases(&PhaseBreakdown { queue_s: 0.001, ..PhaseBreakdown::default() });
+        }
+        m.observe_phases(&PhaseBreakdown { queue_s: 1.0, ..PhaseBreakdown::default() });
+        let s = m.summary();
+        assert!(s.phase_p50_s[0] <= 0.001 * 1.07, "queue p50 {}", s.phase_p50_s[0]);
+        assert!(s.phase_p99_s[0] >= 0.9, "queue p99 {}", s.phase_p99_s[0]);
+        // Other phases recorded 100 zero samples — quantiles stay 0.
+        assert_eq!(s.phase_p95_s[1], 0.0);
+        assert_eq!(m.phase_hists()[0].count(), 100);
     }
 
     #[test]

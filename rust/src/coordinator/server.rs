@@ -8,11 +8,13 @@
 //!   `stats`                  → one line of serving metrics
 //!   `metrics`                → Prometheus text exposition, `# EOF`-terminated
 //!   `trace <label>`          → recorded spans of one session as JSONL, `# EOF`-terminated
+//!   `ledger [label]`         → per-op cost rows of one session (or the
+//!                              aggregate) as JSONL, `# EOF`-terminated
 //!   `quit`                   → closes the connection
 //!
-//! `metrics` and `trace` are the only multi-line replies; both end with
-//! a literal `# EOF` line so a line-oriented client knows where the
-//! payload stops.
+//! `metrics`, `trace` and `ledger` are the only multi-line replies; each
+//! ends with a literal `# EOF` line so a line-oriented client knows where
+//! the payload stops.
 
 use crate::coordinator::batcher::{Coordinator, EngineKind};
 use crate::nn::model::ModelInput;
@@ -93,11 +95,22 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
                     .collect::<Vec<_>>()
                     .join(",")
             };
+            // Per-phase quantiles in PHASES order, comma-joined, so the
+            // one-line summary shows where request time concentrates.
+            let phase_q = |a: &[f64; 5]| {
+                crate::coordinator::metrics::PHASES
+                    .iter()
+                    .zip(a)
+                    .map(|(n, v)| format!("{n}:{v:.3}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
             Some(format!(
                 "secure: n={} mean={:.3}s p95={:.3}s p99={:.3}s p99.9={:.3}s rps={:.2} \
                  recent_rps={:.2} offline_bytes={} \
                  pool_depth={} pool_hit={:.2} batch_mean={:.2} rounds_per_req={:.1} \
-                 batch_hist={} retried={} failed={} party_reconnects={} link={} \
+                 batch_hist={} phase_p50=[{}] phase_p95=[{}] phase_p99=[{}] \
+                 retried={} failed={} party_reconnects={} link={} \
                  rtt_ms={:.3} rtt_ewma_ms={:.3} \
                  dealer_reconnects={} dealer_pulls={} prefetch_depth={} \
                  spool_tombstones={} spool_compactions={} \
@@ -115,6 +128,9 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
                 s.mean_batch_size,
                 s.rounds_per_request,
                 hist,
+                phase_q(&s.phase_p50_s),
+                phase_q(&s.phase_p95_s),
+                phase_q(&s.phase_p99_s),
                 s.sessions_retried,
                 s.sessions_failed,
                 s.party_reconnects,
@@ -141,6 +157,9 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
             Some(label) => Some(coord.render_trace(label).trim_end().to_string()),
             None => Some("err trace needs a session label".to_string()),
         },
+        // `ledger` with no label renders the process-lifetime aggregate;
+        // with a label, one recent session's table.
+        "ledger" => Some(coord.render_ledger(parts.next().unwrap_or("")).trim_end().to_string()),
         "secure" | "plain" => {
             let toks: Result<Vec<u32>, _> = parts.map(|t| t.parse::<u32>()).collect();
             let toks = match toks {
@@ -249,6 +268,8 @@ mod tests {
         assert!(stats.contains("batch_mean="), "{stats}");
         assert!(stats.contains("rounds_per_req="), "{stats}");
         assert!(stats.contains("batch_hist=1:1"), "one single-request batch: {stats}");
+        assert!(stats.contains("phase_p50=[queue:"), "{stats}");
+        assert!(stats.contains("phase_p99=[queue:"), "{stats}");
         assert!(stats.contains("retried=0"), "{stats}");
         assert!(stats.contains("failed=0"), "{stats}");
         assert!(stats.contains("party_reconnects=0"), "{stats}");
@@ -283,6 +304,56 @@ mod tests {
             handle_line(&format!("trace {}", spans[0].trace), &c, cfg.seq, cfg.vocab).unwrap();
         assert!(trace.contains("\"name\":\"session\""), "{trace}");
         assert!(trace.ends_with("# EOF"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn ledger_command_renders_op_rows() {
+        let (c, cfg) = coord();
+        let line = format!(
+            "secure {}",
+            (0..cfg.seq).map(|i| i.to_string()).collect::<Vec<_>>().join(" ")
+        );
+        assert!(handle_line(&line, &c, cfg.seq, cfg.vocab).unwrap().starts_with("ok "));
+        // Bare `ledger` renders the aggregate table.
+        let agg = handle_line("ledger", &c, cfg.seq, cfg.vocab).unwrap();
+        assert!(agg.contains("\"session\":\"*\""), "{agg}");
+        assert!(agg.contains("\"op\":\"attn"), "attention rows must be attributed: {agg}");
+        assert!(agg.ends_with("# EOF"));
+        // With a label, the session table (labels are shared with traces).
+        let spans = c.tracer().recent(16);
+        let label = spans[0].trace.clone();
+        let one = handle_line(&format!("ledger {label}"), &c, cfg.seq, cfg.vocab).unwrap();
+        assert!(one.contains(&format!("\"session\":\"{label}\"")), "{one}");
+        assert!(one.ends_with("# EOF"));
+        // An unknown label yields an empty (but well-formed) reply.
+        assert_eq!(handle_line("ledger nope", &c, cfg.seq, cfg.vocab).unwrap(), "# EOF");
+        c.shutdown();
+    }
+
+    #[test]
+    fn metrics_expose_op_and_cost_model_families() {
+        let (c, cfg) = coord();
+        let line = format!(
+            "secure {}",
+            (0..cfg.seq).map(|i| i.to_string()).collect::<Vec<_>>().join(" ")
+        );
+        assert!(handle_line(&line, &c, cfg.seq, cfg.vocab).unwrap().starts_with("ok "));
+        let metrics = handle_line("metrics", &c, cfg.seq, cfg.vocab).unwrap();
+        assert!(metrics.contains("# TYPE secformer_op_rounds_total counter"), "{metrics}");
+        assert!(metrics.contains("secformer_op_bytes_total{role=\"coordinator\",op=\""));
+        assert!(metrics.contains("# TYPE secformer_phase_latency_seconds histogram"));
+        assert!(metrics.contains("secformer_ledger_sessions_total{role=\"coordinator\"} 1"));
+        // The cost-model gauges must reconcile to zero on a healthy build.
+        for lineref in metrics.lines() {
+            if lineref.starts_with("secformer_cost_model_rounds_delta{") {
+                assert!(lineref.ends_with(" 0"), "round regression surfaced: {lineref}");
+            }
+        }
+        assert!(
+            metrics.contains("secformer_cost_model_rounds_delta{role=\"coordinator\",op=\"softmax\"} 0"),
+            "{metrics}"
+        );
         c.shutdown();
     }
 

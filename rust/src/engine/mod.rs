@@ -15,6 +15,7 @@ use crate::net::transport::channel_pair;
 use crate::nn::config::ModelConfig;
 use crate::nn::model::{bert_forward_batch, InputShare, ModelInput};
 use crate::nn::weights::{share_weights, ShareMap, WeightMap};
+use crate::obs::ledger::{Ledger, SessionLedger};
 use crate::obs::{PhaseBreakdown, Tracer};
 use crate::offline::planner::PlanInput;
 use crate::offline::pool::Tuple;
@@ -163,6 +164,10 @@ pub struct SecureModel {
     /// Optional span recorder (`None` costs nothing; tracing is pure
     /// observation and never touches protocol state).
     tracer: Option<Arc<Tracer>>,
+    /// Optional cost ledger: when attached AND enabled, every inference
+    /// mints a [`SessionLedger`] for its S0 protocol context and absorbs
+    /// it (keyed by the session label) on success.
+    ledger: Option<Arc<Ledger>>,
 }
 
 impl SecureModel {
@@ -228,6 +233,7 @@ impl SecureModel {
             peer: PeerRuntime::InProcess,
             batch_buckets: DEFAULT_BATCH_BUCKETS.to_vec(),
             tracer: None,
+            ledger: None,
         }
     }
 
@@ -236,6 +242,21 @@ impl SecureModel {
     /// default) to trace nothing.
     pub fn set_tracer(&mut self, tracer: Option<Arc<Tracer>>) {
         self.tracer = tracer;
+    }
+
+    /// Attach a cost ledger: every inference attributes its rounds, wire
+    /// bytes and tuple consumption per protocol op (see
+    /// [`crate::obs::ledger`]) and folds the table into `ledger` under
+    /// the inference's session label. Pass `None` (the default) to
+    /// attribute nothing; a disabled ledger costs one relaxed atomic
+    /// load per session.
+    pub fn set_ledger(&mut self, ledger: Option<Arc<Ledger>>) {
+        self.ledger = ledger;
+    }
+
+    /// The attached role ledger, if any.
+    pub fn ledger(&self) -> Option<&Arc<Ledger>> {
+        self.ledger.as_ref()
     }
 
     /// Configure the batch buckets [`SecureModel::infer_batch`] pads its
@@ -345,6 +366,15 @@ impl SecureModel {
         let (in0, in1) = self.share_input(input);
         let session = format!("{}-{}", self.session_label, self.session_counter);
         let t_shared = Instant::now();
+        // Mint the session's attribution table (None when the ledger is
+        // absent or disabled — the whole fast path).
+        let sl = self.ledger.as_ref().and_then(|l| l.session());
+        if let Some(s) = &sl {
+            let elems = match &in0 {
+                InputShare::Hidden(v) | InputShare::OneHot(v) => v.len(),
+            };
+            s.record_op("share", elems as u64, 0, (t_shared - t_start).as_nanos() as u64);
+        }
 
         // Pooled mode: draw the session's pregenerated bundle — routed
         // by input kind so a token bundle never reaches a hidden-state
@@ -382,14 +412,31 @@ impl SecureModel {
                 bundle1,
                 &bundle_session,
                 bundle_words,
+                sl.clone(),
             )?,
             PeerRuntime::Remote(rp) => {
                 let rp = rp.clone();
-                self.run_remote(&rp, vec![in0], vec![in1], &session, bundle0, &bundle_session)?
+                self.run_remote(
+                    &rp,
+                    vec![in0],
+                    vec![in1],
+                    &session,
+                    bundle0,
+                    &bundle_session,
+                    sl.clone(),
+                )?
             }
             PeerRuntime::Supervised(sup) => {
                 let rp = sup.party()?;
-                self.run_remote(&rp, vec![in0], vec![in1], &session, bundle0, &bundle_session)?
+                self.run_remote(
+                    &rp,
+                    vec![in0],
+                    vec![in1],
+                    &session,
+                    bundle0,
+                    &bundle_session,
+                    sl.clone(),
+                )?
             }
         };
 
@@ -398,6 +445,17 @@ impl SecureModel {
         let rec = crate::sharing::reconstruct(&out0, &out1);
         let logits = crate::core::fixed::decode_vec(&rec);
         let t_finished = Instant::now();
+        if let Some(s) = &sl {
+            s.record_op(
+                "reconstruct",
+                logits.len() as u64,
+                0,
+                (t_finished - t_dispatched).as_nanos() as u64,
+            );
+        }
+        if let (Some(l), Some(s)) = (&self.ledger, &sl) {
+            l.absorb(&session, s);
+        }
         let lan = NetModel::paper_lan();
         let compute_s: f64 = stats.nanos.iter().sum::<u64>() as f64 * 1e-9;
         let simulated =
@@ -565,6 +623,16 @@ impl SecureModel {
         // shared item, so labels never collide with single sessions).
         let session = format!("{}-{}", self.session_label, self.session_counter);
         let t_shared = Instant::now();
+        let sl = self.ledger.as_ref().and_then(|l| l.session());
+        if let Some(s) = &sl {
+            let elems: usize = in0s
+                .iter()
+                .map(|i| match i {
+                    InputShare::Hidden(v) | InputShare::OneHot(v) => v.len(),
+                })
+                .sum();
+            s.record_op("share", elems as u64, 0, (t_shared - t_start).as_nanos() as u64);
+        }
 
         let (bundle0, bundle1, bundle_session, bundle_words) = match self.offline {
             OfflineMode::Pooled => {
@@ -587,14 +655,15 @@ impl SecureModel {
                 bundle1,
                 &bundle_session,
                 bundle_words,
+                sl.clone(),
             )?,
             PeerRuntime::Remote(rp) => {
                 let rp = rp.clone();
-                self.run_remote(&rp, in0s, in1s, &session, bundle0, &bundle_session)?
+                self.run_remote(&rp, in0s, in1s, &session, bundle0, &bundle_session, sl.clone())?
             }
             PeerRuntime::Supervised(sup) => {
                 let rp = sup.party()?;
-                self.run_remote(&rp, in0s, in1s, &session, bundle0, &bundle_session)?
+                self.run_remote(&rp, in0s, in1s, &session, bundle0, &bundle_session, sl.clone())?
             }
         };
         let t_dispatched = Instant::now();
@@ -604,6 +673,17 @@ impl SecureModel {
         let logits: Vec<Vec<f64>> =
             (0..chunk.len()).map(|j| all[j * nl..(j + 1) * nl].to_vec()).collect();
         let t_finished = Instant::now();
+        if let Some(s) = &sl {
+            s.record_op(
+                "reconstruct",
+                all.len() as u64,
+                0,
+                (t_finished - t_dispatched).as_nanos() as u64,
+            );
+        }
+        if let (Some(l), Some(s)) = (&self.ledger, &sl) {
+            l.absorb(&session, s);
+        }
         let phases = PhaseBreakdown {
             queue_s: 0.0,
             share_s: (t_shared - t_start).as_secs_f64(),
@@ -629,6 +709,7 @@ impl SecureModel {
     /// thread that unwinds (typed session abort or a protocol-invariant
     /// panic) surfaces as a [`SessionError`] after BOTH parties have
     /// been joined — the scope never re-raises the panic.
+    #[allow(clippy::too_many_arguments)]
     fn run_in_process(
         &self,
         in0: Vec<InputShare>,
@@ -638,6 +719,7 @@ impl SecureModel {
         bundle1: Option<Vec<Tuple>>,
         bundle_session: &str,
         bundle_words: u64,
+        ledger: Option<Arc<SessionLedger>>,
     ) -> std::result::Result<(Vec<u64>, Vec<u64>, StatsSnapshot), SessionError> {
         let cfg = self.cfg.clone();
         let pool_handle = self.pool.clone();
@@ -680,6 +762,9 @@ impl SecureModel {
                     },
                 };
                 let mut ctx = PartyCtx::new(0, Box::new(peer0), prov, 0xAA);
+                // Ledger attribution rides on S0 only: the round schedule
+                // is symmetric, so one party's view is the whole story.
+                ctx.ledger = ledger;
                 let stats = ctx.stats.clone();
                 let out = bert_forward_batch(&mut ctx, &cfg0, w0, &in0);
                 (out, stats.snapshot())
@@ -760,6 +845,7 @@ impl SecureModel {
     /// from the top: re-sharing mints fresh labels/masks/pads, so a
     /// retry never re-sends bytes masked with the dead session's pad
     /// material.
+    #[allow(clippy::too_many_arguments)]
     fn run_remote(
         &self,
         rp: &RemoteParty,
@@ -768,6 +854,7 @@ impl SecureModel {
         session: &str,
         bundle0: Option<Vec<Tuple>>,
         bundle_session: &str,
+        ledger: Option<Arc<SessionLedger>>,
     ) -> std::result::Result<(Vec<u64>, Vec<u64>, StatsSnapshot), SessionError> {
         let input_kind = match &in1[0] {
             InputShare::Hidden(_) => INPUT_HIDDEN,
@@ -840,6 +927,7 @@ impl SecureModel {
         };
 
         let mut ctx = PartyCtx::new(0, sess.take_transport(), prov, 0xAA);
+        ctx.ledger = ledger;
         let stats = ctx.stats.clone();
         // S0's forward runs under a session boundary: a link lost
         // mid-round unwinds out of the transport as a typed error

@@ -15,11 +15,13 @@
 //!   dealer-stats [opts]      query a dealer's STATS endpoint
 //!   metrics [opts]           fetch any role's Prometheus exposition
 //!   trace <label> [opts]     fetch a session's recorded spans (JSONL)
+//!   ledger [label] [opts]    fetch a role's per-op cost-ledger table
+//!                            (JSONL; aggregate without a label)
 //!   bench <target> [opts]    regenerate a paper table/figure
 //!                            targets: table3 table4 fig1 fig5 fig6 fig7
 //!                                     fig8 fig9 rounds serving
 //!                                     distribution two_party batching
-//!                                     observability kernels all
+//!                                     observability kernels ledger all
 //!
 //! Common options:
 //!   --framework <crypten|puma|mpcformer|secformer>   (default secformer)
@@ -352,6 +354,9 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
     // appends every span to DIR/trace-coordinator.jsonl.
     serving.trace = !args.has("no-trace");
     serving.trace_dir = args.flag("trace-dir").map(String::from);
+    // Per-op cost attribution is on by default; `--no-ledger` turns it
+    // off (one relaxed atomic load per session is all that remains).
+    serving.ledger = !args.has("no-ledger");
     let coordinator = std::sync::Arc::new(Coordinator::start_with(
         cfg.clone(),
         weights,
@@ -359,6 +364,14 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
         batcher,
         serving,
     )?);
+    // `--metrics-http ADDR`: serve the same exposition body over plain
+    // HTTP so Prometheus scrapes the coordinator directly.
+    let http_coord = coordinator.clone();
+    let _http = secformer::obs::http::maybe_start(
+        &args.flag("metrics-http").map(String::from),
+        "coordinator",
+        std::sync::Arc::new(move || http_coord.render_metrics()),
+    );
     let server = secformer::coordinator::server::TcpServer {
         coordinator,
         seq: cfg.seq,
@@ -429,6 +442,8 @@ fn cmd_dealer_serve(args: &Args, cfg_file: &Config) -> Result<()> {
             psk: args.flag("psk").map(String::from),
             trace: !args.has("no-trace"),
             trace_dir: args.flag("trace-dir").map(String::from),
+            ledger: !args.has("no-ledger"),
+            metrics_http: args.flag("metrics-http").map(String::from),
         },
     )
 }
@@ -561,6 +576,8 @@ fn cmd_party_serve(args: &Args, cfg_file: &Config) -> Result<()> {
             psk: args.flag("psk").map(String::from),
             trace: !args.has("no-trace"),
             trace_dir: args.flag("trace-dir").map(String::from),
+            ledger: !args.has("no-ledger"),
+            metrics_http: args.flag("metrics-http").map(String::from),
             ..PartyHostConfig::default()
         },
     )
@@ -638,6 +655,32 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ledger [label]` — fetch a role's per-op cost table (rounds, wire
+/// bytes, tuple words, element counts, wall seconds) as JSONL. Without
+/// a label, the role's process-lifetime aggregate; with one, a recent
+/// session's table (labels are the same session labels traces use).
+fn cmd_ledger(args: &Args) -> Result<()> {
+    let label = args.sub.as_deref().unwrap_or("");
+    let role = args.flag("role").unwrap_or("coordinator");
+    let addr = args.flag("addr").unwrap_or(role_default_addr(role));
+    let psk = args.flag("psk");
+    let body = match role {
+        "coordinator" => {
+            let cmd = if label.is_empty() {
+                "ledger".to_string()
+            } else {
+                format!("ledger {label}")
+            };
+            fetch_coordinator_multiline(addr, &cmd)?
+        }
+        "party" => secformer::party::runtime::fetch_party_ledger(addr, psk, label)?,
+        "dealer" => secformer::offline::remote::fetch_dealer_ledger(addr, psk, label)?,
+        other => bail!("--role must be coordinator, party or dealer, got '{other}'"),
+    };
+    print!("{body}");
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let target = args.sub.clone().unwrap_or_else(|| "all".to_string());
     let seq = args.usize_or("seq", if args.has("paper") { 512 } else { 32 });
@@ -697,6 +740,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "kernels" => {
             bh::kernels_bench(iters);
         }
+        "ledger" => {
+            let regressions = bh::ledger_bench(args.usize_or("seq", 8));
+            if regressions > 0 {
+                bail!(
+                    "cost-model regression: {regressions} op(s) measured more rounds \
+                     than the analytic model (see BENCH_ledger.json)"
+                );
+            }
+        }
         "ablations" => {
             secformer::bench::ablations::ablation_fourier_terms(args.usize_or("points", 1000));
             secformer::bench::ablations::ablation_goldschmidt_iters(args.usize_or("points", 1000));
@@ -753,6 +805,7 @@ fn main() -> Result<()> {
         "dealer-stats" => cmd_dealer_stats(&args),
         "metrics" => cmd_metrics(&args),
         "trace" => cmd_trace(&args),
+        "ledger" => cmd_ledger(&args),
         "party-serve" => cmd_party_serve(&args, &cfg_file),
         "bench" => cmd_bench(&args),
         "" | "help" | "--help" => {
@@ -779,6 +832,7 @@ USAGE:
                    [--peer-addr HOST:PORT] [--peer-psk KEY]
                    [--session-retries 2] [--party-heartbeat-ms 1000]
                    [--link-timeout-ms 5000] [--no-trace] [--trace-dir DIR]
+                   [--no-ledger] [--metrics-http HOST:PORT]
   secformer party-serve [--bind 127.0.0.1:8787] [--seq N] [--framework F]
                    [--vocab V] [--weights W.swts] [--psk KEY]
                    [--pool DEPTH] [--pool-producers P] [--pool-prf]
@@ -787,19 +841,23 @@ USAGE:
                    [--dealer-addr HOST:PORT] [--dealer-psk KEY]
                    [--spool-dir DIR] [--spool-max-bytes N]
                    [--no-trace] [--trace-dir DIR]
+                   [--no-ledger] [--metrics-http HOST:PORT]
   secformer dealer-serve [--bind 127.0.0.1:7979] [--seq N] [--framework F]
                    [--vocab V] [--depth 8] [--producers 2] [--prf]
                    [--plan tokens|both] [--adaptive] [--max-depth 64]
                    [--max-bundles N] [--prefix PFX] [--psk KEY]
                    [--no-trace] [--trace-dir DIR]
+                   [--no-ledger] [--metrics-http HOST:PORT]
   secformer dealer-stats [--addr 127.0.0.1:7979] [--psk KEY]
   secformer metrics [--role coordinator|party|dealer] [--addr HOST:PORT]
                    [--psk KEY]
   secformer trace LABEL [--role coordinator|party|dealer] [--addr HOST:PORT]
                    [--psk KEY]
+  secformer ledger [LABEL] [--role coordinator|party|dealer]
+                   [--addr HOST:PORT] [--psk KEY]
   secformer bench  <table3|table4|fig1|fig5|fig6|fig7|fig8|fig9|rounds|serving|
                     distribution|two_party|batching|observability|kernels|
-                    ablations|all>
+                    ledger|ablations|all>
                    [--seq N] [--paper] [--iters K] [--base-only]
                    [--concurrency C] [--requests R] [--workers N]
 
@@ -874,4 +932,16 @@ additionally streams spans to `DIR/trace-<role>.jsonl`; `--no-trace`
 turns the tracer off (requests are bit-identical either way). `bench
 observability` pins the tracing overhead and writes
 BENCH_observability.json.
+
+The cost ledger attributes every communication round, wire byte and
+correlated-randomness word to the protocol op that spent it
+(`attn/softmax/div_rows/mul2`-style paths). `secformer ledger` fetches
+any role's table as JSONL (the aggregate, or one session by label);
+the exposition carries the same data as `secformer_op_*_total`
+families plus `secformer_cost_model_rounds_delta` gauges reconciling
+measured rounds against the analytic cost model. `--no-ledger` turns
+attribution off; `--trace-dir` also appends per-session ledger rows to
+`DIR/ledger-<role>.jsonl`. `--metrics-http HOST:PORT` (all three
+roles) serves `GET /metrics` over plain HTTP for Prometheus. `bench
+ledger` writes BENCH_ledger.json (the CI round-regression gate).
 ";

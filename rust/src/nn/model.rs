@@ -6,6 +6,7 @@
 use crate::core::fixed::decode_vec;
 use crate::core::kernel;
 use crate::net::stats::OpCategory;
+use crate::obs::ledger::OpScope;
 use crate::nn::config::{Framework, ModelConfig};
 use crate::nn::weights::{get, ShareMap, WeightMap};
 use crate::proto::ctx::PartyCtx;
@@ -117,6 +118,7 @@ fn apply_softmax(
     rows: usize,
     n: usize,
 ) -> Vec<u64> {
+    let _scope = OpScope::open(&ctx.ledger, "softmax", rows * n);
     match cfg.framework {
         Framework::Crypten | Framework::Puma => softmax::softmax_exact(ctx, scores, rows, n),
         Framework::MpcFormer => softmax::softmax_2quad_mpcformer(ctx, scores, rows, n),
@@ -145,6 +147,7 @@ fn apply_softmax(
 }
 
 fn apply_gelu(ctx: &mut PartyCtx, cfg: &ModelConfig, x: &[u64]) -> Vec<u64> {
+    let _scope = OpScope::open(&ctx.ledger, "gelu", x.len());
     match cfg.framework {
         Framework::Crypten => gelu::gelu_crypten(ctx, x),
         Framework::Puma => gelu::gelu_puma(ctx, x),
@@ -162,6 +165,7 @@ fn apply_layernorm(
     rows: usize,
     n: usize,
 ) -> Vec<u64> {
+    let _scope = OpScope::open(&ctx.ledger, "layernorm", rows * n);
     match cfg.framework {
         Framework::SecFormer => {
             layernorm::layernorm_secformer(ctx, x, g, b, rows, n)
@@ -187,6 +191,7 @@ fn attention(
     h: &[u64],
     b: usize,
 ) -> Vec<u64> {
+    let _scope = OpScope::open(&ctx.ledger, "attn", h.len());
     if cfg.fused_attention {
         attention_fused(ctx, cfg, w, layer, h, b)
     } else {
@@ -394,11 +399,20 @@ fn encoder_layer(
             d,
         )
     });
-    let ff1 =
-        linear(ctx, &h1, get(w, &format!("{p}.w1")), get(w, &format!("{p}.b1")), rows, d, it);
-    let act = with_cat(ctx, OpCategory::Gelu, |ctx| apply_gelu(ctx, cfg, &ff1));
-    let ff2 =
-        linear(ctx, &act, get(w, &format!("{p}.w2")), get(w, &format!("{p}.b2")), rows, it, d);
+    let ff2 = {
+        let _scope = OpScope::open(&ctx.ledger, "ffn", rows * it);
+        let ff1 = linear(
+            ctx,
+            &h1,
+            get(w, &format!("{p}.w1")),
+            get(w, &format!("{p}.b1")),
+            rows,
+            d,
+            it,
+        );
+        let act = with_cat(ctx, OpCategory::Gelu, |ctx| apply_gelu(ctx, cfg, &ff1));
+        linear(ctx, &act, get(w, &format!("{p}.w2")), get(w, &format!("{p}.b2")), rows, it, d)
+    };
     let resid2 = prim::add(&h1, &ff2);
     with_cat(ctx, OpCategory::LayerNorm, |ctx| {
         apply_layernorm(

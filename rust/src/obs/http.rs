@@ -1,0 +1,153 @@
+//! Minimal HTTP `/metrics` listener so Prometheus can scrape any role
+//! directly, without bridging through the `secformer metrics` CLI.
+//!
+//! Deliberately tiny and std-only: one detached accept-loop thread, one
+//! request per connection (`Connection: close`), `GET /metrics` answered
+//! with the same exposition body the role's native-wire `metrics` command
+//! renders, `405` for non-GET methods and `404` for other paths. Enabled
+//! by `--metrics-http <addr>` on all three roles.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Render callback: produces the current Prometheus exposition body.
+pub type RenderFn = Arc<dyn Fn() -> String + Send + Sync>;
+
+/// A running `/metrics` HTTP listener (the accept thread is detached and
+/// lives for the process; the handle reports the bound address).
+pub struct MetricsHttpServer {
+    addr: std::net::SocketAddr,
+}
+
+impl MetricsHttpServer {
+    /// Bind `addr` and serve `GET /metrics` with `render`'s output.
+    pub fn start(addr: &str, render: RenderFn) -> std::io::Result<MetricsHttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        std::thread::Builder::new()
+            .name("metrics-http".into())
+            .spawn(move || {
+                // One-thread accept loop: requests are handled inline
+                // (a read timeout bounds how long a stalled client can
+                // hold it; scrape concurrency is one by construction).
+                for conn in listener.incoming() {
+                    let Ok(stream) = conn else { continue };
+                    let _ = handle_http_conn(stream, &render);
+                }
+            })?;
+        Ok(MetricsHttpServer { addr: local })
+    }
+
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn handle_http_conn(mut stream: TcpStream, render: &RenderFn) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    // Drain headers so well-behaved clients see a clean close.
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 || line == "\r\n" || line == "\n" {
+            break;
+        }
+    }
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    if method != "GET" {
+        return respond(&mut stream, "405 Method Not Allowed", "text/plain", "method not allowed\n");
+    }
+    if path != "/metrics" {
+        return respond(&mut stream, "404 Not Found", "text/plain", "not found\n");
+    }
+    let body = render();
+    respond(&mut stream, "200 OK", "text/plain; version=0.0.4; charset=utf-8", &body)
+}
+
+/// Start a listener if `addr` is configured; log (to stderr) and continue
+/// on bind failure — metrics scraping must never take the role down.
+pub fn maybe_start(addr: &Option<String>, role: &str, render: RenderFn) -> Option<MetricsHttpServer> {
+    let addr = addr.as_deref()?;
+    match MetricsHttpServer::start(addr, render) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("[{role}] metrics-http bind {addr} failed: {e}");
+            None
+        }
+    }
+}
+
+/// Test helper: one blocking HTTP GET, returning `(status_line, body)`.
+pub fn http_get(addr: &std::net::SocketAddr, path: &str) -> std::io::Result<(String, String)> {
+    http_request(addr, "GET", path)
+}
+
+/// Test helper: a blocking single-request HTTP exchange with `method`.
+pub fn http_request(
+    addr: &std::net::SocketAddr,
+    method: &str,
+    path: &str,
+) -> std::io::Result<(String, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(stream, "{method} {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")?;
+    stream.flush()?;
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf)?;
+    let status = buf.lines().next().unwrap_or("").to_string();
+    let body = match buf.find("\r\n\r\n") {
+        Some(i) => buf[i + 4..].to_string(),
+        None => String::new(),
+    };
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_metrics_over_real_http() {
+        let render: RenderFn = Arc::new(|| "secformer_up 1\n# EOF\n".to_string());
+        let srv = MetricsHttpServer::start("127.0.0.1:0", render).expect("bind");
+        let (status, body) = http_get(&srv.local_addr(), "/metrics").expect("get");
+        assert!(status.contains("200"), "{status}");
+        assert_eq!(body, "secformer_up 1\n# EOF\n");
+    }
+
+    #[test]
+    fn rejects_non_get_with_405_and_unknown_path_with_404() {
+        let render: RenderFn = Arc::new(|| "x 1\n".to_string());
+        let srv = MetricsHttpServer::start("127.0.0.1:0", render).expect("bind");
+        let (status, _) = http_request(&srv.local_addr(), "POST", "/metrics").expect("post");
+        assert!(status.contains("405"), "{status}");
+        let (status, _) = http_get(&srv.local_addr(), "/other").expect("get");
+        assert!(status.contains("404"), "{status}");
+    }
+
+    #[test]
+    fn maybe_start_none_when_unconfigured() {
+        let render: RenderFn = Arc::new(String::new);
+        assert!(maybe_start(&None, "coordinator", render).is_none());
+    }
+}

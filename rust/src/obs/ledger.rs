@@ -1,0 +1,709 @@
+//! Protocol-attribution cost ledger: live per-op rounds / wire bytes /
+//! tuple-consumption / element counts, reconciled against the analytic
+//! model in [`crate::proto::cost`].
+//!
+//! The paper states its claims in per-protocol communication terms
+//! (rounds and bits for `Π_GeLU`, `Π_Softmax`, `Π_LayerNorm`, …); the
+//! ledger closes the loop between those analytic costs and what the live
+//! engine actually sends:
+//!
+//! - [`SessionLedger`] — one secure session's attribution table. The
+//!   protocol layer pushes/pops *op scopes* (mirroring the span model in
+//!   [`crate::obs::trace`]): every [`crate::proto::ctx::PartyCtx`]
+//!   exchange attributes its round and bytes to the innermost open scope,
+//!   keyed by the full parent chain (e.g. `attn/softmax/div_rows/mul2`).
+//!   Because the two `exchange*` funnels are the only places online bytes
+//!   are counted, Σ over all ledger rows equals the `CommStats` totals
+//!   *exactly* — no sampled or unattributed traffic.
+//! - [`Ledger`] — a role-level aggregate plus a bounded ring of recent
+//!   per-session tables (same discipline as the span ring: overflow
+//!   increments a dropped counter, never blocks), with optional
+//!   `--trace-dir` JSONL export to `ledger-<role>.jsonl`.
+//! - [`CostModelCheck`] — reconciles a measured table against
+//!   [`crate::proto::cost`]: per op, measured rounds must equal
+//!   `calls × per-call rounds` exactly, and measured bits/element must
+//!   match the analytic projection within tolerance. Exposed as both a
+//!   metrics gauge (`secformer_cost_model_rounds_delta`) and hard test
+//!   assertions (`tests/ledger.rs`, the CI `bench ledger` gate).
+//!
+//! The disabled path costs one `Option` check per scope/exchange (the
+//! engine only attaches a [`SessionLedger`] when the role-level
+//! [`Ledger`] is enabled, gated by one relaxed atomic load per session).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::proto::cost::{self, Cost, WORD};
+use crate::proto::goldschmidt::{DIV_GOLD_ITERS, RSQRT_GOLD_ITERS};
+
+/// Sessions retained in a role ledger's recent ring.
+pub const DEFAULT_RING_SESSIONS: usize = 256;
+
+/// Row key used for traffic recorded with no op scope open.
+pub const UNATTRIBUTED: &str = "other";
+
+/// One attribution row: everything the ledger knows about one op path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpStat {
+    /// Times a scope for this exact path was opened.
+    pub calls: u64,
+    /// Synchronized exchanges recorded while this path was innermost.
+    pub rounds: u64,
+    /// Online payload bytes this party sent while this path was innermost.
+    pub bytes: u64,
+    /// Correlated-randomness ring elements (one party's words) consumed
+    /// while this path was innermost.
+    pub tuple_words: u64,
+    /// Elements processed (as declared at scope open).
+    pub elems: u64,
+    /// Wall-clock nanoseconds from scope open to close.
+    pub nanos: u64,
+}
+
+impl OpStat {
+    /// Component-wise accumulate.
+    pub fn add(&mut self, o: &OpStat) {
+        self.calls += o.calls;
+        self.rounds += o.rounds;
+        self.bytes += o.bytes;
+        self.tuple_words += o.tuple_words;
+        self.elems += o.elems;
+        self.nanos += o.nanos;
+    }
+
+    /// Cumulative scope wall-clock in seconds.
+    pub fn seconds(&self) -> f64 {
+        self.nanos as f64 / 1e9
+    }
+}
+
+struct SessionInner {
+    stack: Vec<&'static str>,
+    /// Cached `stack.join("/")` so the hot exchange path does one map
+    /// lookup, not a re-join.
+    path: String,
+    rows: BTreeMap<String, OpStat>,
+}
+
+/// One session's live attribution table. Single-writer by construction
+/// (it is owned by one party's protocol thread); the mutex exists so the
+/// role ledger can absorb it afterwards through a shared `Arc`.
+pub struct SessionLedger {
+    inner: Mutex<SessionInner>,
+}
+
+impl Default for SessionLedger {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SessionLedger {
+    /// An empty table with no open scopes.
+    pub fn new() -> Self {
+        SessionLedger {
+            inner: Mutex::new(SessionInner {
+                stack: Vec::with_capacity(8),
+                path: String::new(),
+                rows: BTreeMap::new(),
+            }),
+        }
+    }
+
+    fn push(&self, op: &'static str, elems: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.stack.push(op);
+        if !g.path.is_empty() {
+            g.path.push('/');
+        }
+        g.path.push_str(op);
+        let key = g.path.clone();
+        let row = g.rows.entry(key).or_default();
+        row.calls += 1;
+        row.elems += elems;
+    }
+
+    fn pop(&self, nanos: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let key = g.path.clone();
+        g.rows.entry(key).or_default().nanos += nanos;
+        if let Some(op) = g.stack.pop() {
+            let cut = g.path.len() - op.len();
+            let cut = cut.saturating_sub(if cut > 0 { 1 } else { 0 });
+            g.path.truncate(cut);
+        }
+    }
+
+    fn current_key(g: &SessionInner) -> String {
+        if g.path.is_empty() {
+            UNATTRIBUTED.to_string()
+        } else {
+            g.path.clone()
+        }
+    }
+
+    /// Attribute one synchronized exchange of `bytes` sent payload to the
+    /// innermost open scope (called from the `PartyCtx` exchange funnels).
+    pub fn on_round(&self, bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let key = Self::current_key(&g);
+        let row = g.rows.entry(key).or_default();
+        row.rounds += 1;
+        row.bytes += bytes;
+    }
+
+    /// Attribute `words` ring elements of consumed correlated randomness
+    /// to the innermost open scope.
+    pub fn on_tuples(&self, words: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let key = Self::current_key(&g);
+        g.rows.entry(key).or_default().tuple_words += words;
+    }
+
+    /// Record a complete row directly (no scope): used by the engine for
+    /// share/reconstruct work and by the dealer for served bundles.
+    pub fn record_op(&self, op: &str, elems: u64, tuple_words: u64, nanos: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let row = g.rows.entry(op.to_string()).or_default();
+        row.calls += 1;
+        row.elems += elems;
+        row.tuple_words += tuple_words;
+        row.nanos += nanos;
+    }
+
+    /// Snapshot the table (path → stats).
+    pub fn rows(&self) -> BTreeMap<String, OpStat> {
+        self.inner.lock().unwrap().rows.clone()
+    }
+}
+
+/// RAII op scope: opened by the protocol layer around one op, closed on
+/// drop (attributing elapsed wall-clock). A `None` ledger produces an
+/// inert guard, so the disabled path is one `Option` check.
+pub struct OpScope {
+    l: Option<Arc<SessionLedger>>,
+    t0: Instant,
+}
+
+impl OpScope {
+    /// Open a scope named `op` covering `elems` elements.
+    pub fn open(l: &Option<Arc<SessionLedger>>, op: &'static str, elems: usize) -> OpScope {
+        if let Some(l) = l {
+            l.push(op, elems as u64);
+            OpScope { l: Some(l.clone()), t0: Instant::now() }
+        } else {
+            OpScope { l: None, t0: Instant::now() }
+        }
+    }
+}
+
+impl Drop for OpScope {
+    fn drop(&mut self) {
+        if let Some(l) = &self.l {
+            l.pop(self.t0.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+/// Record consumed correlated-randomness words against the innermost open
+/// scope (no-op when no ledger is attached).
+#[inline]
+pub fn tuples(l: &Option<Arc<SessionLedger>>, words: usize) {
+    if let Some(l) = l {
+        l.on_tuples(words as u64);
+    }
+}
+
+/// Fold `src` rows into `dst`.
+pub fn merge_rows(dst: &mut BTreeMap<String, OpStat>, src: &BTreeMap<String, OpStat>) {
+    for (k, v) in src {
+        dst.entry(k.clone()).or_default().add(v);
+    }
+}
+
+/// Hierarchical rollup of a path-keyed table into per-op totals.
+///
+/// For each op name: `calls`/`elems`/`nanos` sum over rows whose *last*
+/// segment is the op (each scope open counted once); `rounds`/`bytes`/
+/// `tuple_words` sum over rows containing the op as *any* segment, so a
+/// composite op like `gelu` accumulates its whole subtree (`gelu/lt`,
+/// `gelu/sin`, …). Leaf rows still partition traffic exactly; rollup rows
+/// of nested ops intentionally overlap (`softmax` contains `div_rows`).
+pub fn rollup(rows: &BTreeMap<String, OpStat>) -> BTreeMap<String, OpStat> {
+    let mut out: BTreeMap<String, OpStat> = BTreeMap::new();
+    for (path, st) in rows {
+        let segs: Vec<&str> = path.split('/').collect();
+        let mut seen: Vec<&str> = Vec::with_capacity(segs.len());
+        for (i, seg) in segs.iter().enumerate() {
+            let last = i + 1 == segs.len();
+            if !seen.contains(seg) {
+                seen.push(seg);
+                let row = out.entry(seg.to_string()).or_default();
+                row.rounds += st.rounds;
+                row.bytes += st.bytes;
+                row.tuple_words += st.tuple_words;
+                if !last {
+                    continue;
+                }
+            }
+            if last {
+                let row = out.entry(seg.to_string()).or_default();
+                row.calls += st.calls;
+                row.elems += st.elems;
+                row.nanos += st.nanos;
+            }
+        }
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn row_json(session: &str, role: &str, op: &str, s: &OpStat) -> String {
+    format!(
+        "{{\"session\":\"{}\",\"role\":\"{}\",\"op\":\"{}\",\"calls\":{},\"rounds\":{},\"bytes\":{},\"tuple_words\":{},\"elems\":{},\"seconds\":{:.9}}}",
+        json_escape(session),
+        role,
+        json_escape(op),
+        s.calls,
+        s.rounds,
+        s.bytes,
+        s.tuple_words,
+        s.elems,
+        s.seconds()
+    )
+}
+
+struct LedgerInner {
+    agg: BTreeMap<String, OpStat>,
+    recent: VecDeque<(String, BTreeMap<String, OpStat>)>,
+    sink: Option<BufWriter<File>>,
+}
+
+/// Role-level ledger: the process-lifetime aggregate plus a bounded ring
+/// of recent per-session tables, shared by every worker of one role.
+pub struct Ledger {
+    role: &'static str,
+    enabled: AtomicBool,
+    capacity: usize,
+    sessions_absorbed: AtomicU64,
+    dropped: AtomicU64,
+    inner: Mutex<LedgerInner>,
+}
+
+impl Ledger {
+    /// A ledger for `role` with the default recent-session ring.
+    pub fn new(role: &'static str, enabled: bool) -> Arc<Ledger> {
+        Self::with_capacity(role, DEFAULT_RING_SESSIONS, enabled)
+    }
+
+    /// A ledger with an explicit recent-session ring capacity.
+    pub fn with_capacity(role: &'static str, capacity: usize, enabled: bool) -> Arc<Ledger> {
+        Arc::new(Ledger {
+            role,
+            enabled: AtomicBool::new(enabled),
+            capacity: capacity.max(1),
+            sessions_absorbed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            inner: Mutex::new(LedgerInner {
+                agg: BTreeMap::new(),
+                recent: VecDeque::new(),
+                sink: None,
+            }),
+        })
+    }
+
+    /// The role label this ledger renders under.
+    pub fn role(&self) -> &'static str {
+        self.role
+    }
+
+    /// One relaxed atomic load — the whole disabled-ledger fast path.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Toggle attribution (affects sessions minted afterwards).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Mint a session table to attach to a `PartyCtx`; `None` when the
+    /// ledger is disabled, which keeps the per-exchange cost at one
+    /// `Option` check.
+    pub fn session(&self) -> Option<Arc<SessionLedger>> {
+        if self.is_enabled() {
+            Some(Arc::new(SessionLedger::new()))
+        } else {
+            None
+        }
+    }
+
+    /// Fold a finished session's table into the aggregate, the recent
+    /// ring (dropping the oldest entry past capacity) and the JSONL sink.
+    pub fn absorb(&self, label: &str, session: &SessionLedger) {
+        let rows = session.rows();
+        if rows.is_empty() {
+            return;
+        }
+        self.sessions_absorbed.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.inner.lock().unwrap();
+        merge_rows(&mut g.agg, &rows);
+        if let Some(sink) = g.sink.as_mut() {
+            for (op, st) in &rows {
+                let _ = writeln!(sink, "{}", row_json(label, self.role, op, st));
+            }
+            let _ = sink.flush();
+        }
+        g.recent.push_back((label.to_string(), rows));
+        while g.recent.len() > self.capacity {
+            g.recent.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Sessions evicted from the recent ring since startup.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Sessions absorbed since startup.
+    pub fn sessions_absorbed(&self) -> u64 {
+        self.sessions_absorbed.load(Ordering::Relaxed)
+    }
+
+    /// Export absorbed sessions as JSONL to `<dir>/ledger-<role>.jsonl`
+    /// (append; one line per (session, op-path) row).
+    pub fn set_dir(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join(format!("ledger-{}.jsonl", self.role)))?;
+        self.inner.lock().unwrap().sink = Some(BufWriter::new(file));
+        Ok(())
+    }
+
+    /// The process-lifetime aggregate table (path → stats).
+    pub fn aggregate(&self) -> BTreeMap<String, OpStat> {
+        self.inner.lock().unwrap().agg.clone()
+    }
+
+    /// A recent session's table by label, if still in the ring.
+    pub fn session_rows(&self, label: &str) -> Option<BTreeMap<String, OpStat>> {
+        let g = self.inner.lock().unwrap();
+        g.recent
+            .iter()
+            .rev()
+            .find(|(l, _)| l == label)
+            .map(|(_, rows)| rows.clone())
+    }
+
+    /// Render the `ledger` command payload: JSONL rows (the aggregate for
+    /// an empty label, one session otherwise) terminated by `# EOF`.
+    pub fn render(&self, label: &str) -> String {
+        let mut out = String::new();
+        if label.is_empty() {
+            for (op, st) in self.aggregate() {
+                out.push_str(&row_json("*", self.role, &op, &st));
+                out.push('\n');
+            }
+        } else if let Some(rows) = self.session_rows(label) {
+            for (op, st) in rows {
+                out.push_str(&row_json(label, self.role, &op, &st));
+                out.push('\n');
+            }
+        }
+        out.push_str("# EOF\n");
+        out
+    }
+}
+
+/// Convert a measured row to Table-1 units: total wire bits per element,
+/// both parties combined (the recorded bytes are one party's sends; the
+/// schedule is symmetric, hence the ×2).
+pub fn bits_per_elem(s: &OpStat) -> f64 {
+    if s.elems == 0 {
+        return 0.0;
+    }
+    s.bytes as f64 * 8.0 * 2.0 / s.elems as f64
+}
+
+/// One op's measured-vs-analytic reconciliation.
+#[derive(Clone, Debug)]
+pub struct OpCheck {
+    /// Op name (rollup taxonomy).
+    pub op: &'static str,
+    /// Scope opens observed.
+    pub calls: u64,
+    /// Measured rounds (rollup).
+    pub measured_rounds: u64,
+    /// `calls × per-call analytic rounds`.
+    pub expected_rounds: u64,
+    /// Measured total bits per element (both parties).
+    pub measured_bits_per_elem: f64,
+    /// Analytic bits per element, when the model defines one for this op.
+    pub expected_bits_per_elem: Option<f64>,
+}
+
+impl OpCheck {
+    /// `measured − expected` rounds; zero when the implementation matches
+    /// the analytic model exactly.
+    pub fn rounds_delta(&self) -> i64 {
+        self.measured_rounds as i64 - self.expected_rounds as i64
+    }
+
+    /// Whether measured bits/element are within `tol` (fractional) of the
+    /// analytic projection (vacuously true for ops without one).
+    pub fn bytes_within(&self, tol: f64) -> bool {
+        match self.expected_bits_per_elem {
+            None => true,
+            Some(e) => (self.measured_bits_per_elem - e).abs() <= e * tol,
+        }
+    }
+}
+
+/// Reconciles a measured ledger table against [`crate::proto::cost`]'s
+/// analytic projections for the SecFormer protocol selections.
+///
+/// `seq` parameterizes the softmax row width and `hidden` the LayerNorm
+/// row width (their analytic bits amortize row-scalar work over the row).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModelCheck {
+    /// Softmax row width (`cfg.seq`).
+    pub seq: u64,
+    /// LayerNorm row width (`cfg.hidden`).
+    pub hidden: u64,
+}
+
+impl CostModelCheck {
+    /// A check for a model with the given sequence length and hidden size.
+    pub fn new(seq: usize, hidden: usize) -> Self {
+        CostModelCheck { seq: seq as u64, hidden: hidden as u64 }
+    }
+
+    /// Per-call analytic cost of every op in the ledger taxonomy; `None`
+    /// bits where the model defines no per-element volume (shape-dependent
+    /// matmuls, row-scalar `div_rows`).
+    pub fn expectation(&self, op: &str) -> Option<(u64, Option<f64>)> {
+        let c = |c: Cost| (c.rounds, Some(c.bits));
+        Some(match op {
+            "mul" => c(cost::mul()),
+            "square" => c(cost::square()),
+            // `{p·m, m²}` batched: 3 opened words/element both ways.
+            "mul_square" => (1, Some(6.0 * WORD)),
+            // Two fused muls: same 4-word volume per stacked element.
+            "mul2" => (1, Some(4.0 * WORD)),
+            "matmul" => (1, None),
+            "sin" => c(cost::sin()),
+            "lt" => c(cost::lt()),
+            "exp" => c(cost::exp()),
+            "rsqrt" => c(cost::rsqrt_goldschmidt(RSQRT_GOLD_ITERS as u64)),
+            "div" => c(cost::div_goldschmidt(DIV_GOLD_ITERS as u64)),
+            // Row-scalar division + one trailing broadcast multiply; its
+            // volume is split between rows and elements, so only the
+            // round count is pinned at this granularity.
+            "div_rows" => (DIV_GOLD_ITERS as u64 + 1, None),
+            "gelu" => c(cost::gelu_secformer()),
+            "softmax" => c(cost::softmax_2quad_secformer(self.seq)),
+            "layernorm" => c(cost::layernorm_secformer(self.hidden)),
+            _ => return None,
+        })
+    }
+
+    /// Reconcile a (path-keyed) measured table: one [`OpCheck`] per
+    /// taxonomy op that was actually called.
+    pub fn check(&self, rows: &BTreeMap<String, OpStat>) -> Vec<OpCheck> {
+        const OPS: [&str; 15] = [
+            "mul", "square", "mul_square", "mul2", "matmul", "sin", "lt", "exp", "rsqrt",
+            "div", "div_rows", "gelu", "softmax", "layernorm", "attn",
+        ];
+        let r = rollup(rows);
+        let mut out = Vec::new();
+        for op in OPS {
+            let Some(st) = r.get(op) else { continue };
+            if st.calls == 0 {
+                continue;
+            }
+            let Some((per_call_rounds, bits)) = self.expectation(op) else { continue };
+            out.push(OpCheck {
+                op,
+                calls: st.calls,
+                measured_rounds: st.rounds,
+                expected_rounds: st.calls * per_call_rounds,
+                measured_bits_per_elem: bits_per_elem(st),
+                expected_bits_per_elem: bits,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arc(l: SessionLedger) -> Option<Arc<SessionLedger>> {
+        Some(Arc::new(l))
+    }
+
+    #[test]
+    fn scopes_attribute_to_innermost_with_parent_chain() {
+        let l = arc(SessionLedger::new());
+        {
+            let _g = OpScope::open(&l, "softmax", 64);
+            l.as_ref().unwrap().on_round(100);
+            {
+                let _m = OpScope::open(&l, "mul", 8);
+                l.as_ref().unwrap().on_round(16);
+                tuples(&l, 24);
+            }
+            l.as_ref().unwrap().on_round(50);
+        }
+        let rows = l.as_ref().unwrap().rows();
+        let sm = rows.get("softmax").unwrap();
+        assert_eq!((sm.calls, sm.rounds, sm.bytes, sm.elems), (1, 2, 150, 64));
+        let mul = rows.get("softmax/mul").unwrap();
+        assert_eq!((mul.calls, mul.rounds, mul.bytes, mul.tuple_words), (1, 1, 16, 24));
+        // Nothing unattributed, and the leaf partition sums exactly.
+        assert!(rows.get(UNATTRIBUTED).is_none());
+        let total: u64 = rows.values().map(|s| s.bytes).sum();
+        assert_eq!(total, 166);
+    }
+
+    #[test]
+    fn unscoped_rounds_land_in_other() {
+        let l = SessionLedger::new();
+        l.on_round(42);
+        let rows = l.rows();
+        assert_eq!(rows.get(UNATTRIBUTED).unwrap().bytes, 42);
+    }
+
+    #[test]
+    fn rollup_merges_subtrees_once() {
+        let l = arc(SessionLedger::new());
+        {
+            let _a = OpScope::open(&l, "gelu", 10);
+            {
+                let _b = OpScope::open(&l, "lt", 20);
+                l.as_ref().unwrap().on_round(8);
+            }
+            {
+                let _c = OpScope::open(&l, "mul", 10);
+                l.as_ref().unwrap().on_round(4);
+            }
+        }
+        let r = rollup(&l.as_ref().unwrap().rows());
+        let g = r.get("gelu").unwrap();
+        // Composite: subtree rounds/bytes, own calls/elems.
+        assert_eq!((g.calls, g.elems, g.rounds, g.bytes), (1, 10, 2, 12));
+        let lt = r.get("lt").unwrap();
+        assert_eq!((lt.calls, lt.rounds, lt.bytes), (1, 1, 8));
+    }
+
+    #[test]
+    fn disabled_scope_is_inert() {
+        let none: Option<Arc<SessionLedger>> = None;
+        let _g = OpScope::open(&none, "mul", 8);
+        tuples(&none, 100);
+    }
+
+    #[test]
+    fn role_ledger_absorbs_and_bounds_ring() {
+        let led = Ledger::with_capacity("coordinator", 2, true);
+        assert!(led.is_enabled());
+        for i in 0..3 {
+            let s = led.session().unwrap();
+            {
+                let _g = OpScope::open(&Some(s.clone()), "mul", 4);
+                s.on_round(32);
+            }
+            led.absorb(&format!("sess-{i}"), &s);
+        }
+        assert_eq!(led.sessions_absorbed(), 3);
+        assert_eq!(led.dropped(), 1);
+        assert!(led.session_rows("sess-0").is_none(), "oldest evicted");
+        assert!(led.session_rows("sess-2").is_some());
+        let agg = led.aggregate();
+        assert_eq!(agg.get("mul").unwrap().bytes, 96);
+        let text = led.render("");
+        assert!(text.contains("\"op\":\"mul\""));
+        assert!(text.ends_with("# EOF\n"));
+        assert!(led.render("sess-2").contains("\"session\":\"sess-2\""));
+        assert_eq!(led.render("nope"), "# EOF\n");
+    }
+
+    #[test]
+    fn disabled_ledger_mints_no_sessions() {
+        let led = Ledger::new("party", false);
+        assert!(led.session().is_none());
+        led.set_enabled(true);
+        assert!(led.session().is_some());
+    }
+
+    #[test]
+    fn cost_check_flags_round_regressions() {
+        let l = arc(SessionLedger::new());
+        {
+            let _g = OpScope::open(&l, "mul", 16);
+            l.as_ref().unwrap().on_round(2 * 16 * 8); // exactly Π_Mul volume
+        }
+        {
+            // A second call that takes TWO rounds — a regression.
+            let _g = OpScope::open(&l, "mul", 16);
+            l.as_ref().unwrap().on_round(16 * 8);
+            l.as_ref().unwrap().on_round(16 * 8);
+        }
+        let checks = CostModelCheck::new(8, 32).check(&l.as_ref().unwrap().rows());
+        let mul = checks.iter().find(|c| c.op == "mul").unwrap();
+        assert_eq!(mul.calls, 2);
+        assert_eq!(mul.expected_rounds, 2);
+        assert_eq!(mul.measured_rounds, 3);
+        assert_eq!(mul.rounds_delta(), 1);
+    }
+
+    #[test]
+    fn cost_check_bits_per_elem_matches_table1_units() {
+        let l = arc(SessionLedger::new());
+        {
+            let _g = OpScope::open(&l, "mul", 10);
+            l.as_ref().unwrap().on_round(2 * 10 * 8); // d,e opens: 2n words
+        }
+        let checks = CostModelCheck::new(8, 32).check(&l.as_ref().unwrap().rows());
+        let mul = checks.iter().find(|c| c.op == "mul").unwrap();
+        assert_eq!(mul.rounds_delta(), 0);
+        assert_eq!(mul.measured_bits_per_elem, 4.0 * WORD);
+        assert!(mul.bytes_within(0.0));
+    }
+
+    #[test]
+    fn render_row_json_is_parseable_shape() {
+        let mut s = OpStat::default();
+        s.calls = 1;
+        s.bytes = 7;
+        let line = row_json("a-1", "party", "attn/mul", &s);
+        assert!(line.starts_with('{') && line.ends_with('}'));
+        assert!(line.contains("\"op\":\"attn/mul\""));
+        assert!(!line.contains('\n'));
+    }
+}

@@ -11,8 +11,13 @@
 //!   reconstructed across all three processes.
 //! - [`hist`] — constant-memory log-bucketed histograms (all-time
 //!   p50/p95/p99/p99.9) and a recent-window throughput gauge.
+//! - [`ledger`] — the protocol-attribution cost ledger: per-op rounds /
+//!   wire bytes / tuple consumption per session and per role, reconciled
+//!   live against the analytic model in [`crate::proto::cost`].
 //! - [`registry`] — the shared `secformer_*` Prometheus name schema and
 //!   the renderer behind every role's `metrics` command.
+//! - [`http`] — the optional `--metrics-http` listener serving the same
+//!   exposition over plain HTTP for direct Prometheus scrapes.
 //! - [`PhaseBreakdown`] — the per-request wall-clock decomposition
 //!   (queue → share → bundle-wait → dispatch/transport → finish) whose
 //!   phases sum to total latency by construction.
@@ -24,10 +29,14 @@
 #![warn(missing_docs)]
 
 pub mod hist;
+pub mod http;
+pub mod ledger;
 pub mod registry;
 pub mod trace;
 
 pub use hist::{LogHistogram, WindowedRate};
+pub use http::MetricsHttpServer;
+pub use ledger::{CostModelCheck, Ledger, OpScope, OpStat, SessionLedger};
 pub use registry::{MetricsRegistry, ROLE_COORDINATOR, ROLE_DEALER, ROLE_PARTY};
 pub use trace::{opt_span, SpanGuard, SpanRecord, Tracer};
 

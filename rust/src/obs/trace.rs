@@ -195,11 +195,26 @@ impl Tracer {
             let _ = w.flush();
         }
         let mut ring = lock_or_recover(&self.ring);
+        let mut evicted = None;
         if ring.len() >= self.cap {
             ring.pop_front();
-            self.dropped.fetch_add(1, Ordering::Relaxed);
+            evicted = Some(self.dropped.fetch_add(1, Ordering::Relaxed) + 1);
         }
         ring.push_back(rec);
+        drop(ring);
+        // Surface ring evictions in the export: the JSONL sink keeps
+        // every span, but `trace <label>` queries serve the ring — a
+        // meta line tells the file's reader how far the two diverge.
+        if let Some(count) = evicted {
+            if let Some(w) = lock_or_recover(&self.sink).as_mut() {
+                let _ = writeln!(
+                    w,
+                    "{{\"role\":\"{}\",\"meta\":\"ring_dropped\",\"count\":{count}}}",
+                    self.role
+                );
+                let _ = w.flush();
+            }
+        }
     }
 
     /// All ring spans whose trace id equals `trace`, oldest first.

@@ -43,6 +43,7 @@
 //! while bundle credit is outstanding is treated as a dead link.
 
 use crate::nn::config::ModelConfig;
+use crate::obs::ledger::Ledger;
 use crate::obs::{MetricsRegistry, Tracer, ROLE_DEALER};
 use crate::offline::planner::{plan_demand, PlanInput};
 use crate::offline::pool::{PoolSnapshot, SessionBundle};
@@ -75,11 +76,25 @@ pub struct DealerConfig {
     /// Export every recorded span to `{dir}/trace-dealer.jsonl`
     /// (`dealer-serve --trace-dir`).
     pub trace_dir: Option<String>,
+    /// Record per-bundle serving cost into the dealer's ledger (on by
+    /// default; `dealer-serve --no-ledger` turns it off). Rows export
+    /// to `{trace_dir}/ledger-dealer.jsonl` when a trace dir is set.
+    pub ledger: bool,
+    /// Serve `GET /metrics` over plain HTTP on this address
+    /// (`dealer-serve --metrics-http`), same exposition body as the
+    /// native-wire METRICS query.
+    pub metrics_http: Option<String>,
 }
 
 impl Default for DealerConfig {
     fn default() -> Self {
-        DealerConfig { psk: None, trace: true, trace_dir: None }
+        DealerConfig {
+            psk: None,
+            trace: true,
+            trace_dir: None,
+            ledger: true,
+            metrics_http: None,
+        }
     }
 }
 
@@ -194,6 +209,22 @@ pub fn dealer_accept_loop(
             eprintln!("dealer: cannot open trace dir {dir}: {e}");
         }
     }
+    let ledger = Ledger::new(ROLE_DEALER, cfg.ledger);
+    if let Some(dir) = &cfg.trace_dir {
+        if let Err(e) = ledger.set_dir(Path::new(dir)) {
+            eprintln!("dealer: cannot open ledger export in {dir}: {e}");
+        }
+    }
+    {
+        // The accept thread is detached and process-lived, like this loop.
+        let (pools, stats, tracer, ledger) =
+            (pools.clone(), stats.clone(), tracer.clone(), ledger.clone());
+        let _http = crate::obs::http::maybe_start(
+            &cfg.metrics_http,
+            ROLE_DEALER,
+            Arc::new(move || render_dealer_metrics(&pools, &stats, &tracer, &ledger)),
+        );
+    }
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
@@ -201,9 +232,11 @@ pub fn dealer_accept_loop(
                 let cfg = cfg.clone();
                 let stats = stats.clone();
                 let tracer = tracer.clone();
+                let ledger = ledger.clone();
                 std::thread::spawn(move || {
                     let peer = s.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-                    if let Err(e) = handle_dealer_conn(s, &pools, &cfg, &stats, &tracer, &peer)
+                    if let Err(e) =
+                        handle_dealer_conn(s, &pools, &cfg, &stats, &tracer, &ledger, &peer)
                     {
                         eprintln!("dealer: connection {peer}: {e}");
                     }
@@ -298,10 +331,33 @@ pub fn fetch_dealer_trace(addr: &str, psk: Option<&str>, trace: &str) -> Result<
     }
 }
 
+/// Fetch the dealer's cost-ledger table (the aggregate for an empty
+/// label, one session otherwise) as JSONL. This is the body of
+/// `secformer ledger --role dealer`.
+pub fn fetch_dealer_ledger(addr: &str, psk: Option<&str>, label: &str) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect to dealer {addr}"))?;
+    stream.set_nodelay(true)?;
+    client_auth(&mut stream, psk)?;
+    write_frame(&mut stream, msg::LEDGER, label.as_bytes())?;
+    match read_frame(&mut stream).map_err(|e| anyhow!("ledger query: {e}"))? {
+        (t, p) if t == msg::LEDGER => Ok(String::from_utf8_lossy(&p).into_owned()),
+        (t, p) if t == msg::ERR => {
+            bail!("dealer rejected ledger query: {}", String::from_utf8_lossy(&p))
+        }
+        (t, _) => bail!("unexpected ledger reply type {t}"),
+    }
+}
+
 /// The dealer's side of the unified `secformer_*` exposition: pool
-/// gauges, pull/serve counters and trace-ring health, every sample
-/// labelled `role="dealer"`.
-fn render_dealer_metrics(pools: &PoolSet, stats: &DealerStats, tracer: &Tracer) -> String {
+/// gauges, pull/serve counters, per-bundle ledger rows and trace-ring
+/// health, every sample labelled `role="dealer"`.
+fn render_dealer_metrics(
+    pools: &PoolSet,
+    stats: &DealerStats,
+    tracer: &Tracer,
+    ledger: &Ledger,
+) -> String {
     let mut r = MetricsRegistry::new(ROLE_DEALER);
     r.gauge(
         "secformer_uptime_seconds",
@@ -355,6 +411,41 @@ fn render_dealer_metrics(pools: &PoolSet, stats: &DealerStats, tracer: &Tracer) 
         "Coordinator connections alive right now.",
         stats.conns.lock().unwrap().len() as f64,
     );
+    let agg = ledger.aggregate();
+    if !agg.is_empty() {
+        let mut tuples = Vec::with_capacity(agg.len());
+        let mut seconds = Vec::with_capacity(agg.len());
+        for (op, st) in &agg {
+            let l = format!("op=\"{op}\"");
+            tuples.push((l.clone(), st.tuple_words as f64));
+            seconds.push((l, st.seconds()));
+        }
+        r.counter_rows(
+            "secformer_op_tuple_words_total",
+            "Correlated-randomness words consumed by each op path.",
+            &tuples,
+        );
+        r.counter_rows(
+            "secformer_op_seconds_total",
+            "Wall seconds spent inside each op path.",
+            &seconds,
+        );
+    }
+    r.gauge(
+        "secformer_ledger_enabled",
+        "Whether per-op cost attribution is on.",
+        if ledger.is_enabled() { 1.0 } else { 0.0 },
+    );
+    r.counter(
+        "secformer_ledger_sessions_total",
+        "Session ledgers absorbed into the aggregate.",
+        ledger.sessions_absorbed() as f64,
+    );
+    r.counter(
+        "secformer_ledger_dropped_total",
+        "Session tables evicted from the bounded recent ring.",
+        ledger.dropped() as f64,
+    );
     r.gauge(
         "secformer_trace_enabled",
         "Whether span recording is on.",
@@ -379,6 +470,7 @@ fn handle_dealer_conn(
     cfg: &DealerConfig,
     stats: &DealerStats,
     tracer: &Arc<Tracer>,
+    ledger: &Arc<Ledger>,
     peer: &str,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
@@ -398,12 +490,16 @@ fn handle_dealer_conn(
                 write_frame(
                     &mut stream,
                     msg::METRICS,
-                    render_dealer_metrics(pools, stats, tracer).as_bytes(),
+                    render_dealer_metrics(pools, stats, tracer, ledger).as_bytes(),
                 )?;
             }
             msg::TRACE => {
                 let label = String::from_utf8_lossy(&payload).into_owned();
                 write_frame(&mut stream, msg::TRACE, tracer.render_trace(&label).as_bytes())?;
+            }
+            msg::LEDGER => {
+                let label = String::from_utf8_lossy(&payload).into_owned();
+                write_frame(&mut stream, msg::LEDGER, ledger.render(&label).as_bytes())?;
             }
             _ => break,
         }
@@ -488,6 +584,18 @@ fn handle_dealer_conn(
                             // label — the trace id the coordinator's
                             // spans for the same session carry.
                             tracer.record(&b.session, "pull", t0, Instant::now());
+                            // Ledger row under the same label, so the
+                            // dealer's tuple-word bill joins the
+                            // coordinator's and party's tables.
+                            if let Some(s) = ledger.session() {
+                                s.record_op(
+                                    "bundle",
+                                    1,
+                                    b.words_per_party as u64,
+                                    t0.elapsed().as_nanos() as u64,
+                                );
+                                ledger.absorb(&b.session, &s);
+                            }
                             stats.served.fetch_add(1, Ordering::Relaxed);
                             if let Some(c) = stats.conns.lock().unwrap().get_mut(peer) {
                                 c.served += 1;
@@ -511,12 +619,16 @@ fn handle_dealer_conn(
                 write_frame(
                     &mut stream,
                     msg::METRICS,
-                    render_dealer_metrics(pools, stats, tracer).as_bytes(),
+                    render_dealer_metrics(pools, stats, tracer, ledger).as_bytes(),
                 )?;
             }
             msg::TRACE => {
                 let label = String::from_utf8_lossy(&payload).into_owned();
                 write_frame(&mut stream, msg::TRACE, tracer.render_trace(&label).as_bytes())?;
+            }
+            msg::LEDGER => {
+                let label = String::from_utf8_lossy(&payload).into_owned();
+                write_frame(&mut stream, msg::LEDGER, ledger.render(&label).as_bytes())?;
             }
             msg::ERR => return Ok(()), // client-side goodbye
             other => {

@@ -81,6 +81,10 @@ pub mod msg {
     /// Either direction (request: trace-id payload; reply: JSONL span
     /// dump). Answered without a manifest handshake, like [`METRICS`].
     pub const TRACE: u8 = 12;
+    /// Either direction (request: session-label payload, empty for the
+    /// aggregate; reply: JSONL cost-ledger rows). Answered without a
+    /// manifest handshake, like [`METRICS`].
+    pub const LEDGER: u8 = 13;
 }
 
 /// Why a frame could not be read.

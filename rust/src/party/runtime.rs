@@ -37,6 +37,7 @@ use crate::net::transport::{channel_pair, Transport};
 use crate::nn::config::ModelConfig;
 use crate::nn::model::{bert_forward_batch, InputShare};
 use crate::nn::weights::ShareMap;
+use crate::obs::ledger::Ledger;
 use crate::obs::{MetricsRegistry, Tracer, ROLE_PARTY};
 use crate::offline::planner::PlanInput;
 use crate::offline::pool::SessionBundle;
@@ -82,11 +83,27 @@ pub struct PartyHostConfig {
     /// Export every recorded span to `{dir}/trace-party.jsonl`
     /// (`party-serve --trace-dir`).
     pub trace_dir: Option<String>,
+    /// Attribute per-op protocol cost (rounds/bytes/tuples) into the
+    /// host's cost ledger (on by default; `party-serve --no-ledger`
+    /// turns it off). Session tables export to
+    /// `{trace_dir}/ledger-party.jsonl` when a trace dir is set.
+    pub ledger: bool,
+    /// Serve `GET /metrics` over plain HTTP on this address
+    /// (`party-serve --metrics-http`), same exposition body as the
+    /// native-wire METRICS query.
+    pub metrics_http: Option<String>,
 }
 
 impl Default for PartyHostConfig {
     fn default() -> Self {
-        PartyHostConfig { psk: None, stash_limit: 64, trace: true, trace_dir: None }
+        PartyHostConfig {
+            psk: None,
+            stash_limit: 64,
+            trace: true,
+            trace_dir: None,
+            ledger: true,
+            metrics_http: None,
+        }
     }
 }
 
@@ -131,6 +148,7 @@ struct HostCtx {
     fingerprint: [u8; 32],
     stats: Arc<PartyHostStats>,
     tracer: Arc<Tracer>,
+    ledger: Arc<Ledger>,
     started: Instant,
 }
 
@@ -181,6 +199,12 @@ pub fn party_accept_loop_stats(
             eprintln!("party: cannot open trace dir {dir}: {e}");
         }
     }
+    let ledger = Ledger::new(ROLE_PARTY, host.ledger);
+    if let Some(dir) = &host.trace_dir {
+        if let Err(e) = ledger.set_dir(Path::new(dir)) {
+            eprintln!("party: cannot open ledger export in {dir}: {e}");
+        }
+    }
     let ctx = Arc::new(HostCtx {
         cfg,
         shares1,
@@ -189,8 +213,16 @@ pub fn party_accept_loop_stats(
         fingerprint,
         stats,
         tracer,
+        ledger,
         started: Instant::now(),
     });
+    // The accept thread is detached and process-lived, like this loop.
+    let http_ctx = ctx.clone();
+    let _http = crate::obs::http::maybe_start(
+        &ctx.host.metrics_http,
+        ROLE_PARTY,
+        Arc::new(move || render_party_metrics(&http_ctx)),
+    );
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
@@ -266,6 +298,10 @@ fn handle_party_conn(mut stream: TcpStream, ctx: Arc<HostCtx>) -> Result<()> {
                     pmsg::TRACE,
                     ctx.tracer.render_trace(&label).as_bytes(),
                 )?;
+            }
+            pmsg::LEDGER => {
+                let label = String::from_utf8_lossy(&payload).into_owned();
+                write_frame(&mut stream, pmsg::LEDGER, ctx.ledger.render(&label).as_bytes())?;
             }
             _ => break,
         }
@@ -386,6 +422,14 @@ fn party_conn_demux(
                 let body = ctx.tracer.render_trace(&label);
                 let mut w = lock_or_recover(writer);
                 if write_frame(&mut *w, pmsg::TRACE, body.as_bytes()).is_err() {
+                    return Ok(());
+                }
+            }
+            pmsg::LEDGER => {
+                let label = String::from_utf8_lossy(&payload).into_owned();
+                let body = ctx.ledger.render(&label);
+                let mut w = lock_or_recover(writer);
+                if write_frame(&mut *w, pmsg::LEDGER, body.as_bytes()).is_err() {
                     return Ok(());
                 }
             }
@@ -544,6 +588,55 @@ fn render_party_metrics(ctx: &HostCtx) -> String {
             src.spool_compactions() as f64,
         );
     }
+    let agg = ctx.ledger.aggregate();
+    if !agg.is_empty() {
+        let mut rounds = Vec::with_capacity(agg.len());
+        let mut bytes = Vec::with_capacity(agg.len());
+        let mut tuples = Vec::with_capacity(agg.len());
+        let mut seconds = Vec::with_capacity(agg.len());
+        for (op, st) in &agg {
+            let l = format!("op=\"{op}\"");
+            rounds.push((l.clone(), st.rounds as f64));
+            bytes.push((l.clone(), st.bytes as f64));
+            tuples.push((l.clone(), st.tuple_words as f64));
+            seconds.push((l, st.seconds()));
+        }
+        r.counter_rows(
+            "secformer_op_rounds_total",
+            "Communication rounds attributed to each protocol op path.",
+            &rounds,
+        );
+        r.counter_rows(
+            "secformer_op_bytes_total",
+            "Wire bytes attributed to each protocol op path.",
+            &bytes,
+        );
+        r.counter_rows(
+            "secformer_op_tuple_words_total",
+            "Correlated-randomness words consumed by each op path.",
+            &tuples,
+        );
+        r.counter_rows(
+            "secformer_op_seconds_total",
+            "Wall seconds spent inside each op path.",
+            &seconds,
+        );
+    }
+    r.gauge(
+        "secformer_ledger_enabled",
+        "Whether per-op cost attribution is on.",
+        if ctx.ledger.is_enabled() { 1.0 } else { 0.0 },
+    );
+    r.counter(
+        "secformer_ledger_sessions_total",
+        "Session ledgers absorbed into the aggregate.",
+        ctx.ledger.sessions_absorbed() as f64,
+    );
+    r.counter(
+        "secformer_ledger_dropped_total",
+        "Session tables evicted from the bounded recent ring.",
+        ctx.ledger.dropped() as f64,
+    );
     r.gauge(
         "secformer_trace_enabled",
         "Whether span recording is on.",
@@ -590,6 +683,24 @@ pub fn fetch_party_trace(addr: &str, psk: Option<&str>, trace: &str) -> Result<S
             bail!("party rejected trace query: {}", String::from_utf8_lossy(&p))
         }
         (t, _) => bail!("unexpected trace reply type {t}"),
+    }
+}
+
+/// Fetch a party host's cost-ledger table (the aggregate for an empty
+/// label, one session otherwise) as JSONL. This is the body of
+/// `secformer ledger --role party`.
+pub fn fetch_party_ledger(addr: &str, psk: Option<&str>, label: &str) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect to party {addr}"))?;
+    stream.set_nodelay(true)?;
+    client_auth(&mut stream, psk)?;
+    write_frame(&mut stream, pmsg::LEDGER, label.as_bytes())?;
+    match read_frame(&mut stream).map_err(|e| anyhow!("ledger query: {e}"))? {
+        (t, p) if t == pmsg::LEDGER => Ok(String::from_utf8_lossy(&p).into_owned()),
+        (t, p) if t == msg::ERR => {
+            bail!("party rejected ledger query: {}", String::from_utf8_lossy(&p))
+        }
+        (t, _) => bail!("unexpected ledger reply type {t}"),
     }
 }
 
@@ -739,9 +850,17 @@ fn run_party_session_body(
     // a remote session is bit-identical to its in-process twin.
     let mut pctx = PartyCtx::new(1, Box::new(transport), prov, 0xBB);
     pctx.stats = stats.clone();
+    // S1's own view of the per-op cost: the round schedule is symmetric
+    // with S0, so this table mirrors the coordinator's (same rounds;
+    // bytes are this party's sends).
+    let sl = ctx.ledger.session();
+    pctx.ledger = sl.clone();
     let t_dispatch = Instant::now();
     let out1 = bert_forward_batch(&mut pctx, &ctx.cfg, ctx.shares1.as_ref(), &in1s);
     ctx.tracer.record(&start.label, "phase:dispatch", t_dispatch, Instant::now());
+    if let Some(s) = &sl {
+        ctx.ledger.absorb(&start.label, s);
+    }
     drop(pctx); // closes the dealer link (if any)
 
     let payload = encode_result(id, stats.offline_bytes(), stats.offline_msgs(), &out1);

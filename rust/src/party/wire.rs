@@ -84,6 +84,10 @@ pub mod pmsg {
     /// Either direction (request: session-label payload; reply: JSONL
     /// span dump). Answered before HELLO, like [`METRICS`].
     pub const TRACE: u8 = 27;
+    /// Either direction (request: session-label payload, empty for the
+    /// aggregate; reply: JSONL cost-ledger rows). Answered before
+    /// HELLO, like [`METRICS`].
+    pub const LEDGER: u8 = 28;
 }
 
 /// Session offline mode tag: full dealer protocol (S1 runs a local T).

@@ -3,6 +3,7 @@
 //! the baselines SecFormer's Goldschmidt protocols replace.
 
 use crate::core::fixed::FRAC_BITS;
+use crate::obs::ledger::OpScope;
 use crate::proto::ctx::PartyCtx;
 use crate::proto::prim::{
     add_public, mul, mul_public, square, sub_from_public, trunc,
@@ -17,6 +18,7 @@ pub const RSQRT_ITERS: usize = 3;
 
 /// `Π_Exp`: e^x ≈ (1 + x/2^n)^(2^n) — n squarings, n rounds (Eq. 9).
 pub fn exp(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
+    let _scope = OpScope::open(&ctx.ledger, "exp", x.len());
     // x / 2^n (local truncation), + 1
     let scaled = trunc(ctx, x, EXP_ITERS);
     let mut y = add_public(ctx, &scaled, 1.0);

@@ -12,6 +12,7 @@
 //! delta is documented in EXPERIMENTS.md.
 
 use crate::core::fixed::encode;
+use crate::obs::ledger::{self, OpScope};
 use crate::proto::ctx::PartyCtx;
 use crate::proto::prim::sub;
 
@@ -19,6 +20,7 @@ use crate::proto::prim::sub;
 pub fn and_bool(ctx: &mut PartyCtx, x: &[u64], y: &[u64]) -> Vec<u64> {
     let n = x.len();
     let t = ctx.prov.and_triple(n);
+    ledger::tuples(&ctx.ledger, 3 * n);
     let d: Vec<u64> = (0..n).map(|i| x[i] ^ t.a[i]).collect();
     let e: Vec<u64> = (0..n).map(|i| y[i] ^ t.b[i]).collect();
     let opened = ctx.exchange_many(&[&d, &e]);
@@ -96,6 +98,7 @@ pub fn kogge_stone_add(ctx: &mut PartyCtx, x: &[u64], y: &[u64]) -> Vec<u64> {
 pub fn b2a_bit(ctx: &mut PartyCtx, bits: &[u64]) -> Vec<u64> {
     let n = bits.len();
     let pair = ctx.prov.bit_pair(n);
+    ledger::tuples(&ctx.ledger, 2 * n);
     let v_shared: Vec<u64> = (0..n).map(|i| (bits[i] ^ pair.boolean[i]) & 1).collect();
     let v = ctx.open_bool(&v_shared);
     // b = β ⊕ v = β + v − 2βv  →  share_j = β_j(1−2v) + j·v
@@ -118,6 +121,9 @@ pub fn b2a_bit(ctx: &mut PartyCtx, bits: &[u64]) -> Vec<u64> {
 /// `(x < 0)` — sign-bit extraction. Output arithmetic shares of {0,1} at
 /// integer scale.
 pub fn ltz(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
+    // The whole `Π_LT` pipeline (A2B, Kogge–Stone, B2A) attributes to one
+    // "lt" scope: its 9 rounds are the taxonomy-level unit of Table 1.
+    let _scope = OpScope::open(&ctx.ledger, "lt", x.len());
     let sum_bool = a2b(ctx, x);
     let sign: Vec<u64> = sum_bool.iter().map(|&w| w >> 63).collect();
     b2a_bit(ctx, &sign)

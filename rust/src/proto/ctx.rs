@@ -3,7 +3,9 @@
 use crate::core::rng::Xoshiro;
 use crate::net::stats::{CommStats, StatsHandle};
 use crate::net::transport::Transport;
+use crate::obs::ledger::SessionLedger;
 use crate::sharing::provider::Provider;
+use std::sync::Arc;
 
 /// Everything one computing server (`S0` or `S1`) needs to run protocols:
 /// its identity, the link to the peer, the correlated-randomness provider,
@@ -14,6 +16,11 @@ pub struct PartyCtx {
     pub prov: Box<dyn Provider>,
     pub rng: Xoshiro,
     pub stats: StatsHandle,
+    /// Optional per-session protocol-attribution ledger. `None` (the
+    /// default, and the ledger-disabled path) costs one `Option` check at
+    /// each exchange; when attached, both exchange funnels attribute
+    /// their round + bytes to the innermost open op scope.
+    pub ledger: Option<Arc<SessionLedger>>,
 }
 
 impl PartyCtx {
@@ -29,6 +36,7 @@ impl PartyCtx {
             prov,
             rng: Xoshiro::seed_from(rng_seed ^ (0xC0FFEE << id)),
             stats: CommStats::new_handle(),
+            ledger: None,
         }
     }
 
@@ -44,6 +52,9 @@ impl PartyCtx {
         let r = self.peer.recv();
         self.stats.record_transport_nanos(t0.elapsed().as_nanos() as u64);
         self.stats.record_round(data.len() as u64 * 8);
+        if let Some(l) = &self.ledger {
+            l.on_round(data.len() as u64 * 8);
+        }
         r
     }
 
@@ -61,6 +72,9 @@ impl PartyCtx {
         let r = self.peer.recv();
         self.stats.record_transport_nanos(t0.elapsed().as_nanos() as u64);
         self.stats.record_round(total as u64 * 8);
+        if let Some(l) = &self.ledger {
+            l.on_round(total as u64 * 8);
+        }
         let mut out = Vec::with_capacity(bufs.len());
         let mut off = 0;
         for b in bufs {

@@ -9,6 +9,7 @@
 //! for LayerNorm, η = 5000 for Softmax.
 
 use crate::core::fixed::FRAC_BITS;
+use crate::obs::ledger::OpScope;
 use crate::proto::ctx::PartyCtx;
 use crate::proto::prim::{mul, mul2, mul_and_square, mul_public, sub_from_public, trunc};
 
@@ -29,6 +30,7 @@ pub const ETA_SOFTMAX: f64 = 5000.0;
 /// batched, then q·m²), and un-deflates with the public factor `1/√η`.
 pub fn rsqrt_goldschmidt(ctx: &mut PartyCtx, v: &[u64], eta: f64, iters: usize) -> Vec<u64> {
     let n = v.len();
+    let _scope = OpScope::open(&ctx.ledger, "rsqrt", n);
     let q0 = mul_public(ctx, v, 1.0 / eta);
     // p0 = 1 (public share), q = q0
     let mut p = crate::proto::prim::const_share(ctx, &vec![1.0; n]);
@@ -61,6 +63,7 @@ pub fn div_goldschmidt(
     iters: usize,
 ) -> Vec<u64> {
     assert_eq!(x.len(), q.len());
+    let _scope = OpScope::open(&ctx.ledger, "div", x.len());
     let mut p = mul_public(ctx, x, 1.0 / eta);
     let mut qq = mul_public(ctx, q, 1.0 / eta);
     for _ in 0..iters {
@@ -92,6 +95,7 @@ pub fn div_goldschmidt_rows(
 ) -> Vec<u64> {
     assert_eq!(x.len(), rows * n);
     assert_eq!(q.len(), rows);
+    let _scope = OpScope::open(&ctx.ledger, "div_rows", rows * n);
     // r accumulates Π m_i = 1/(q/η); starts at the public constant 1.
     let mut r = crate::proto::prim::const_share(ctx, &vec![1.0; rows]);
     let mut qq = mul_public(ctx, q, 1.0 / eta);

@@ -10,6 +10,7 @@
 
 use crate::core::fixed::{self, encode, FRAC_BITS};
 use crate::core::kernel;
+use crate::obs::ledger::{self, OpScope};
 use crate::proto::ctx::PartyCtx;
 
 // ---------- local (zero-communication) helpers ----------
@@ -84,7 +85,9 @@ pub fn const_share(ctx: &PartyCtx, c: &[f64]) -> Vec<u64> {
 pub fn mul_raw(ctx: &mut PartyCtx, x: &[u64], y: &[u64]) -> Vec<u64> {
     assert_eq!(x.len(), y.len());
     let n = x.len();
+    let _scope = OpScope::open(&ctx.ledger, "mul", n);
     let t = ctx.prov.mul_triple(n);
+    ledger::tuples(&ctx.ledger, 3 * n);
     let d = sub(x, &t.a);
     let e = sub(y, &t.b);
     let opened = ctx.exchange_many(&[&d, &e]);
@@ -113,7 +116,9 @@ pub fn mul(ctx: &mut PartyCtx, x: &[u64], y: &[u64]) -> Vec<u64> {
 /// `Π_Square`, ring semantics, 1 round (half the open volume of `Π_Mul`).
 pub fn square_raw(ctx: &mut PartyCtx, x: &[u64]) -> Vec<u64> {
     let n = x.len();
+    let _scope = OpScope::open(&ctx.ledger, "square", n);
     let t = ctx.prov.square_pair(n);
+    ledger::tuples(&ctx.ledger, 2 * n);
     let d = sub(x, &t.a);
     let opened = ctx.exchange(&d);
     let d_open = add(&d, &opened);
@@ -147,8 +152,10 @@ pub fn mul_and_square(
 ) -> (Vec<u64>, Vec<u64>) {
     let n = p.len();
     assert_eq!(m.len(), n);
+    let _scope = OpScope::open(&ctx.ledger, "mul_square", n);
     let tm = ctx.prov.mul_triple(n);
     let ts = ctx.prov.square_pair(n);
+    ledger::tuples(&ctx.ledger, 5 * n);
     let d_mul = sub(p, &tm.a);
     let e_mul = sub(m, &tm.b);
     let d_sq = sub(m, &ts.a);
@@ -191,7 +198,9 @@ pub fn mul2(
     y2: &[u64],
 ) -> (Vec<u64>, Vec<u64>) {
     let (n1, n2) = (x1.len(), x2.len());
+    let _scope = OpScope::open(&ctx.ledger, "mul2", n1 + n2);
     let t = ctx.prov.mul_triple(n1 + n2);
+    ledger::tuples(&ctx.ledger, 3 * (n1 + n2));
     let x: Vec<u64> = x1.iter().chain(x2.iter()).copied().collect();
     let y: Vec<u64> = y1.iter().chain(y2.iter()).copied().collect();
     let d = sub(&x, &t.a);
@@ -269,9 +278,15 @@ pub fn matmul_many_raw(ctx: &mut PartyCtx, specs: &[MatMulSpec]) -> Vec<Vec<u64>
     // per reconstruction term.
     let kern = kernel::active();
     let kcfg = kernel::kernel_config();
+    let out_elems: usize = specs.iter().map(|s| s.m * s.n).sum();
+    let _scope = OpScope::open(&ctx.ledger, "matmul", out_elems);
     let shapes: Vec<(usize, usize, usize)> =
         specs.iter().map(|s| (s.m, s.k, s.n)).collect();
     let triples = ctx.prov.matmul_triples(&shapes);
+    ledger::tuples(
+        &ctx.ledger,
+        shapes.iter().map(|&(m, k, n)| m * k + k * n + m * n).sum(),
+    );
     // Interleaved [d0, e0, d1, e1, …] masked operands, one buffer each.
     let mut masked: Vec<Vec<u64>> = Vec::with_capacity(2 * specs.len());
     for (s, t) in specs.iter().zip(&triples) {

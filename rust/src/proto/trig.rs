@@ -11,6 +11,7 @@
 //! with `(t, [sin t], [cos t])` dealt offline and `sin δ, cos δ` public.
 
 use crate::core::fixed::{self, encode, FRAC_BITS};
+use crate::obs::ledger::{self, OpScope};
 use crate::proto::ctx::PartyCtx;
 
 /// Ring-angle multiplier for `sin(2π · k x / period)` on a fixed-point
@@ -26,7 +27,9 @@ pub fn angle_multiplier(k: u32, period: f64) -> u64 {
 /// where θ is the shared angle in turns. 1 round.
 pub fn sin_turns(ctx: &mut PartyCtx, angle: &[u64]) -> Vec<u64> {
     let n = angle.len();
+    let _scope = OpScope::open(&ctx.ledger, "sin", n);
     let tup = ctx.prov.sin_tuple(n);
+    ledger::tuples(&ctx.ledger, 3 * n);
     // δ = θ − t, opened (uniform ⇒ safe).
     let delta_sh: Vec<u64> =
         (0..n).map(|i| angle[i].wrapping_sub(tup.t[i])).collect();

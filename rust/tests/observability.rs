@@ -21,9 +21,13 @@ use secformer::core::rng::Xoshiro;
 use secformer::nn::config::{Framework, ModelConfig};
 use secformer::nn::model::ModelInput;
 use secformer::nn::weights::{random_weights, share_weights, ShareMap, WeightMap};
+use secformer::offline::planner::PlanInput;
 use secformer::offline::pool::PoolConfig;
-use secformer::offline::remote::{fetch_dealer_metrics, fetch_dealer_trace, spawn_dealer};
-use secformer::offline::source::PoolSet;
+use secformer::offline::remote::{
+    fetch_dealer_metrics, fetch_dealer_trace, spawn_dealer, spawn_dealer_with, DealerConfig,
+    RemotePool, RemotePoolConfig,
+};
+use secformer::offline::source::{BundleSource, PoolSet};
 use secformer::party::runtime::{
     fetch_party_metrics, fetch_party_trace, spawn_party_host, LinkOptions, PartyHostConfig,
     RemoteParty,
@@ -420,6 +424,348 @@ fn concurrent_load_keeps_metrics_consistent() {
         "{text}"
     );
     c.shutdown();
+}
+
+/// The label set of every sample line (the part before the value) — the
+/// stable identity of an exposition, invariant across two scrapes taken
+/// moments apart (values move; series do not).
+fn series_names(text: &str) -> std::collections::BTreeSet<String> {
+    text.lines()
+        .filter(|l| !l.starts_with('#') && !l.is_empty())
+        .filter_map(|l| l.rsplit_once(' ').map(|(s, _)| s.to_string()))
+        .collect()
+}
+
+/// Reserve an ephemeral loopback port for a config field that takes an
+/// address string (the listener binds moments later; the tiny reuse
+/// window is the standard test trade-off).
+fn free_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").expect("reserve port");
+    l.local_addr().expect("local addr").to_string()
+}
+
+/// GET with retries: the role binds its HTTP listener on its accept
+/// thread, which can trail the spawn call by a moment.
+fn http_get_retry(addr: &str, path: &str) -> (String, String) {
+    let sock: std::net::SocketAddr = addr.parse().expect("addr");
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        match secformer::obs::http::http_get(&sock, path) {
+            Ok(r) => return r,
+            Err(e) if std::time::Instant::now() >= deadline => {
+                panic!("HTTP scrape of {addr} never came up: {e}")
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+/// Acceptance: an HTTP scrape of `/metrics` returns the same exposition
+/// as the native-wire `metrics` command on all three roles, and non-GET
+/// methods get 405 over real HTTP.
+#[test]
+fn http_scrape_matches_native_metrics_on_all_roles() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 151);
+
+    // Coordinator: the process wires `--metrics-http` by handing the
+    // listener a render closure over the coordinator handle — do the
+    // same here, over real sockets.
+    let c = Arc::new(
+        Coordinator::start(cfg.clone(), w.clone(), None, BatcherConfig::default()).unwrap(),
+    );
+    let r = c.infer_blocking(ModelInput::Tokens(tokens(&cfg, 1)), EngineKind::Secure);
+    assert!(r.error.is_none());
+    let cc = c.clone();
+    let srv = secformer::obs::MetricsHttpServer::start(
+        "127.0.0.1:0",
+        Arc::new(move || cc.render_metrics()),
+    )
+    .expect("coordinator http");
+    let (status, body) =
+        secformer::obs::http::http_get(&srv.local_addr(), "/metrics").expect("scrape");
+    assert!(status.contains("200"), "{status}");
+    assert_well_formed_exposition(&body, "coordinator");
+    assert_eq!(series_names(&body), series_names(&c.render_metrics()));
+    let (status, _) =
+        secformer::obs::http::http_request(&srv.local_addr(), "POST", "/metrics").expect("post");
+    assert!(status.contains("405"), "non-GET must be rejected: {status}");
+    c.shutdown();
+
+    // Party: `--metrics-http` travels in the host config; the accept
+    // loop starts the listener itself.
+    let party_http = free_addr();
+    let party_addr = spawn_party_host(
+        cfg.clone(),
+        Arc::new(shares1(&w)),
+        None,
+        PartyHostConfig { metrics_http: Some(party_http.clone()), ..PartyHostConfig::default() },
+    )
+    .expect("party host");
+    let (status, body) = http_get_retry(&party_http, "/metrics");
+    assert!(status.contains("200"), "{status}");
+    assert_well_formed_exposition(&body, "party");
+    let native = fetch_party_metrics(&party_addr.to_string(), None).expect("party metrics");
+    assert_eq!(series_names(&body), series_names(&native));
+
+    // Dealer: same convention.
+    let pools = PoolSet::start(
+        &cfg,
+        "http-dealer",
+        PoolConfig { target_depth: 2, producers: 1, ..PoolConfig::default() },
+        false,
+    );
+    let dealer_http = free_addr();
+    let (dealer_addr, _stats) = spawn_dealer_with(
+        pools.clone(),
+        DealerConfig { metrics_http: Some(dealer_http.clone()), ..DealerConfig::default() },
+    )
+    .expect("spawn dealer");
+    let (status, body) = http_get_retry(&dealer_http, "/metrics");
+    assert!(status.contains("200"), "{status}");
+    assert_well_formed_exposition(&body, "dealer");
+    let native = fetch_dealer_metrics(&dealer_addr.to_string(), None).expect("dealer metrics");
+    assert_eq!(series_names(&body), series_names(&native));
+    pools.stop();
+}
+
+/// Every line of a JSONL export must be one complete object — no torn
+/// or interleaved writes — and carry the expected role.
+fn assert_jsonl_integrity(path: &std::path::Path, role: &str) -> Vec<String> {
+    let body = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let lines: Vec<String> = body.lines().map(str::to_string).collect();
+    assert!(!lines.is_empty(), "empty export {}", path.display());
+    for l in &lines {
+        assert!(
+            l.starts_with('{') && l.ends_with('}'),
+            "torn line in {}: {l:?}",
+            path.display()
+        );
+        assert!(l.contains(&format!("\"role\":\"{role}\"")), "{l:?}");
+    }
+    lines
+}
+
+/// Acceptance: `--trace-dir` export stays line-atomic under concurrent
+/// load, and the ledger export lands beside it — every session label in
+/// the ledger file joins a `session` span in the trace file.
+#[test]
+fn trace_dir_export_survives_concurrent_load() {
+    let dir = std::env::temp_dir()
+        .join(format!("secformer-obs-export-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = tiny();
+    let w = random_weights(&cfg, 157);
+    let mut serving = ServingConfig::pooled(2, 8);
+    serving.plan_hidden = false;
+    serving.trace_dir = Some(dir.to_string_lossy().into_owned());
+    let c = Arc::new(
+        Coordinator::start_with(cfg.clone(), w, None, BatcherConfig::default(), serving)
+            .unwrap(),
+    );
+    let clients = 4;
+    let per_client = 3;
+    std::thread::scope(|scope| {
+        for t in 0..clients {
+            let c = c.clone();
+            let cfg = cfg.clone();
+            scope.spawn(move || {
+                for i in 0..per_client {
+                    let r = c.infer_blocking(
+                        ModelInput::Tokens(tokens(&cfg, (t * per_client + i) as u32)),
+                        EngineKind::Secure,
+                    );
+                    assert!(r.error.is_none());
+                }
+            });
+        }
+    });
+    c.shutdown();
+    let n = clients * per_client;
+
+    let trace_lines = assert_jsonl_integrity(&dir.join("trace-coordinator.jsonl"), "coordinator");
+    // One `session` span per executed chunk — the batcher may have
+    // grouped concurrent requests, so chunks ∈ [1, n].
+    let sessions = trace_lines
+        .iter()
+        .filter(|l| l.contains("\"name\":\"session\""))
+        .count();
+    assert!(
+        (1..=n).contains(&sessions),
+        "expected 1..={n} session spans, saw {sessions}"
+    );
+
+    let ledger_lines =
+        assert_jsonl_integrity(&dir.join("ledger-coordinator.jsonl"), "coordinator");
+    assert!(ledger_lines.iter().all(|l| l.contains("\"op\":")), "{ledger_lines:?}");
+    // Every ledger session label joins a trace span by label alone.
+    for l in &ledger_lines {
+        let label = l
+            .split("\"session\":\"")
+            .nth(1)
+            .and_then(|s| s.split('"').next())
+            .unwrap_or_else(|| panic!("ledger row without session: {l:?}"));
+        assert!(
+            trace_lines.iter().any(|t| t.contains(label)),
+            "ledger session {label} has no trace span"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: ring evictions are surfaced IN the export — the JSONL
+/// file keeps every span, and a `ring_dropped` meta line tells its
+/// reader how far the in-memory `trace` query window has fallen behind.
+#[test]
+fn dropped_span_counter_lands_in_export() {
+    let dir = std::env::temp_dir()
+        .join(format!("secformer-obs-dropped-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let t = secformer::obs::Tracer::with_capacity("coordinator", 2, true);
+    t.set_dir(&dir).expect("set_dir");
+    for i in 0..5 {
+        let _s = t.span(&format!("sess-{i}"), "session");
+    }
+    assert_eq!(t.dropped(), 3);
+    let lines = assert_jsonl_integrity(&dir.join("trace-coordinator.jsonl"), "coordinator");
+    assert_eq!(lines.iter().filter(|l| l.contains("\"name\":\"session\"")).count(), 5,
+        "the export keeps every span");
+    let drops: Vec<&String> =
+        lines.iter().filter(|l| l.contains("\"meta\":\"ring_dropped\"")).collect();
+    assert_eq!(drops.len(), 3, "one meta line per eviction: {lines:?}");
+    assert!(drops.last().unwrap().contains("\"count\":3"), "{drops:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: ledger rows join trace spans by session label across all
+/// three roles — coordinator and party under the inference label, the
+/// dealer under the bundle session it served.
+#[test]
+fn ledger_rows_join_trace_spans_across_roles() {
+    let dir = std::env::temp_dir()
+        .join(format!("secformer-obs-join-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = tiny();
+    let w = random_weights(&cfg, 163);
+
+    // Coordinator + remote party, one shared export directory (each
+    // role writes its own role-suffixed files).
+    let addr = spawn_party_host(
+        cfg.clone(),
+        Arc::new(shares1(&w)),
+        None,
+        PartyHostConfig {
+            trace_dir: Some(dir.to_string_lossy().into_owned()),
+            ..PartyHostConfig::default()
+        },
+    )
+    .expect("party host");
+    let c = Coordinator::start_with(
+        cfg.clone(),
+        w.clone(),
+        None,
+        BatcherConfig::default(),
+        ServingConfig {
+            peer_addr: Some(addr.to_string()),
+            trace_dir: Some(dir.to_string_lossy().into_owned()),
+            ..ServingConfig::default()
+        },
+    )
+    .unwrap();
+    let r = c.infer_blocking(ModelInput::Tokens(tokens(&cfg, 2)), EngineKind::Secure);
+    assert!(r.error.is_none(), "{:?}", r.error);
+    let label = c
+        .tracer()
+        .recent(64)
+        .iter()
+        .find(|s| s.name == "session")
+        .map(|s| s.trace.clone())
+        .expect("coordinator session span");
+    c.shutdown();
+
+    // The party's exports land when its session worker unwinds (the
+    // files themselves exist from host startup — poll for content).
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let party_ledger = dir.join("ledger-party.jsonl");
+    while std::fs::read_to_string(&party_ledger)
+        .map(|b| !b.contains(&label))
+        .unwrap_or(true)
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    for (file, role) in [
+        ("trace-coordinator.jsonl", "coordinator"),
+        ("ledger-coordinator.jsonl", "coordinator"),
+        ("trace-party.jsonl", "party"),
+        ("ledger-party.jsonl", "party"),
+    ] {
+        let lines = assert_jsonl_integrity(&dir.join(file), role);
+        assert!(
+            lines.iter().any(|l| l.contains(&label)),
+            "{file} must carry session {label}"
+        );
+    }
+
+    // Dealer: serving one PULL records a trace span and a ledger row
+    // under the served bundle's session label.
+    let pools = PoolSet::start(
+        &cfg,
+        "join-dealer",
+        PoolConfig { target_depth: 2, producers: 1, ..PoolConfig::default() },
+        false,
+    );
+    let (dealer_addr, _stats) = spawn_dealer_with(
+        pools.clone(),
+        DealerConfig {
+            trace_dir: Some(dir.to_string_lossy().into_owned()),
+            ..DealerConfig::default()
+        },
+    )
+    .expect("spawn dealer");
+    let rp = RemotePool::connect(
+        &dealer_addr.to_string(),
+        &cfg,
+        RemotePoolConfig { depth: 1, kinds: vec![PlanInput::Tokens], psk: None },
+    )
+    .expect("remote pool");
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let bundle = loop {
+        if let Some(b) = rp.pop(PlanInput::Tokens) {
+            break b;
+        }
+        assert!(std::time::Instant::now() < deadline, "no bundle prefetched after 5s");
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    // The dealer ships the bundle BEFORE recording its span and ledger
+    // row, so receipt does not order the export — poll for the label.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let dealer_ledger_path = dir.join("ledger-dealer.jsonl");
+    while std::fs::read_to_string(&dealer_ledger_path)
+        .map(|b| !b.contains(&bundle.session))
+        .unwrap_or(true)
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let dealer_trace = assert_jsonl_integrity(&dir.join("trace-dealer.jsonl"), "dealer");
+    let dealer_ledger = assert_jsonl_integrity(&dealer_ledger_path, "dealer");
+    assert!(
+        dealer_trace.iter().any(|l| l.contains(&bundle.session) && l.contains("\"name\":\"pull\"")),
+        "dealer pull span for {}: {dealer_trace:?}",
+        bundle.session
+    );
+    assert!(
+        dealer_ledger
+            .iter()
+            .any(|l| l.contains(&bundle.session) && l.contains("\"op\":\"bundle\"")),
+        "dealer ledger row for {}: {dealer_ledger:?}",
+        bundle.session
+    );
+    rp.stop();
+    pools.stop();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Acceptance: the party-link heartbeat doubles as an RTT probe — an
