@@ -997,6 +997,275 @@ pub fn batching_bench(seq: usize, batches: &[usize]) -> Vec<BatchingMeasurement>
 }
 
 // =====================================================================
+// Session scheduler — compute/communication overlap under concurrency
+// =====================================================================
+
+/// One (configuration, in-flight depth) point of the concurrency sweep.
+#[derive(Clone, Debug)]
+pub struct ConcurrencyMeasurement {
+    /// `"baseline"` (thread-per-session: in-flight capped at the worker
+    /// count, workers block through wire waits) or `"scheduler"`
+    /// (`max_sessions` carriers over the same compute-permit pool).
+    pub label: String,
+    /// Concurrent blocking clients.
+    pub in_flight: usize,
+    /// Requests completed inside the measured window.
+    pub requests: usize,
+    /// Wall-clock for the whole window.
+    pub wall_s: f64,
+    /// Requests per second.
+    pub rps: f64,
+    /// Median request latency.
+    pub p50_s: f64,
+    /// 99th-percentile request latency.
+    pub p99_s: f64,
+    /// Total online protocol rounds from the coordinator's cost ledger —
+    /// the scheduler must leave these untouched.
+    pub rounds: u64,
+    /// Total online payload bytes from the cost ledger.
+    pub bytes: u64,
+}
+
+/// Compute permits (secure workers) every concurrency-bench run gets:
+/// the sweep varies only how many sessions may be in flight over them.
+const CONCURRENCY_WORKERS: usize = 4;
+
+/// Per-receive link delay (ms) simulating a LAN on the in-process party
+/// link, so wire waits are long enough to be worth overlapping.
+const CONCURRENCY_DELAY_MS: u64 = 1;
+
+fn concurrency_serving(max_sessions: usize) -> crate::coordinator::ServingConfig {
+    crate::coordinator::ServingConfig {
+        secure_workers: CONCURRENCY_WORKERS,
+        max_sessions,
+        link_delay_ms: CONCURRENCY_DELAY_MS,
+        // One request per round schedule: rounds/bytes then scale
+        // linearly with the request count, so the ledger totals of the
+        // two configurations are directly comparable.
+        batch_buckets: vec![1],
+        ..crate::coordinator::ServingConfig::default()
+    }
+}
+
+/// Drive `inputs.len()` secure requests through a coordinator from
+/// `in_flight` blocking clients pulling work off a shared counter, and
+/// read latency quantiles + exact ledger totals back out.
+fn run_concurrency_load(
+    label: &str,
+    cfg: &ModelConfig,
+    weights: &crate::nn::weights::WeightMap,
+    serving: crate::coordinator::ServingConfig,
+    in_flight: usize,
+    inputs: &[Vec<u32>],
+) -> ConcurrencyMeasurement {
+    use crate::coordinator::{BatcherConfig, Coordinator, EngineKind};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let coord = Coordinator::start_with(
+        cfg.clone(),
+        weights.clone(),
+        None,
+        BatcherConfig::default(),
+        serving,
+    )
+    .expect("coordinator");
+    let next = AtomicUsize::new(0);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..in_flight {
+            let coord = &coord;
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= inputs.len() {
+                    break;
+                }
+                let reply =
+                    coord.infer_blocking(ModelInput::Tokens(inputs[i].clone()), EngineKind::Secure);
+                assert!(
+                    reply.error.is_none(),
+                    "concurrency bench request failed: {:?}",
+                    reply.error
+                );
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // The scheduler must drain: no session left running or parked once
+    // every client got its reply.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        let g = coord.sched_snapshot();
+        if g.running == 0 && g.parked == 0 && g.waiting == 0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "scheduler failed to drain: {g:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    let s = coord.secure_summary();
+    let (rounds, bytes) = coord
+        .ledger()
+        .aggregate()
+        .values()
+        .fold((0u64, 0u64), |(r, b), o| (r + o.rounds, b + o.bytes));
+    coord.shutdown();
+    ConcurrencyMeasurement {
+        label: label.to_string(),
+        in_flight,
+        requests: inputs.len(),
+        wall_s,
+        rps: inputs.len() as f64 / wall_s.max(1e-9),
+        p50_s: s.p50_s,
+        p99_s: s.p99_s,
+        rounds,
+        bytes,
+    }
+}
+
+/// Session-scheduler concurrency benchmark (`bench concurrency`): sweep
+/// in-flight depth ∈ {1, 8, 64, 256} under a simulated-LAN party link
+/// and compare thread-per-session serving (`max_sessions` unset —
+/// in-flight capped at the compute-permit count, every worker blocking
+/// through its own wire waits) against the event-driven scheduler
+/// (`max_sessions = in-flight` carriers parking across wire waits so
+/// one session's compute overlaps another's communication). Both run
+/// the same worker count, the same request stream and per-request round
+/// schedules; the ledger totals (rounds/bytes) are asserted equal, and
+/// a deterministic sequential probe pins the scheduler + delayed link
+/// to bit-identical logits. Writes `BENCH_concurrency.json`.
+pub fn concurrency_bench(seq: usize) -> Vec<ConcurrencyMeasurement> {
+    use crate::coordinator::{BatcherConfig, Coordinator, EngineKind};
+    let cfg = ModelConfig::tiny(seq, Framework::SecFormer);
+    let weights = random_weights(&cfg, 0x5C4E);
+    println!("\n=== Session scheduler: compute/communication overlap under load ===");
+    println!(
+        "  seq {seq}, {CONCURRENCY_WORKERS} compute permits, \
+         {CONCURRENCY_DELAY_MS} ms simulated per-receive link delay"
+    );
+
+    // Bit-identity probe: one worker, a sequential request stream and a
+    // pinned session namespace make label assignment deterministic, so
+    // the thread-per-session path and the scheduler path (carriers +
+    // parking + the delayed link) must produce byte-for-byte the same
+    // logits.
+    let probe_inputs: Vec<Vec<u32>> = (0..3)
+        .map(|r| (0..cfg.seq as u32).map(|j| (j + r) % cfg.vocab as u32).collect())
+        .collect();
+    let probe = |max_sessions: usize, delay_ms: u64| -> Vec<Vec<u64>> {
+        let serving = crate::coordinator::ServingConfig {
+            secure_workers: 1,
+            max_sessions,
+            link_delay_ms: delay_ms,
+            batch_buckets: vec![1],
+            session_namespace: Some("bench-concurrency-probe".to_string()),
+            ..crate::coordinator::ServingConfig::default()
+        };
+        let coord = Coordinator::start_with(
+            cfg.clone(),
+            weights.clone(),
+            None,
+            BatcherConfig::default(),
+            serving,
+        )
+        .expect("probe coordinator");
+        let out: Vec<Vec<u64>> = probe_inputs
+            .iter()
+            .map(|t| {
+                let r = coord.infer_blocking(ModelInput::Tokens(t.clone()), EngineKind::Secure);
+                assert!(r.error.is_none(), "probe request failed: {:?}", r.error);
+                r.logits.iter().map(|v| v.to_bits()).collect()
+            })
+            .collect();
+        coord.shutdown();
+        out
+    };
+    let plain_link = probe(0, 0);
+    let scheduled_link = probe(1, CONCURRENCY_DELAY_MS);
+    assert_eq!(
+        plain_link, scheduled_link,
+        "scheduler + delayed link changed the logits — parking must be observation-only"
+    );
+    println!("  bit-identity probe: scheduler + delayed link logits exact ✓");
+
+    let mut out = Vec::new();
+    let mut speedup_at = Vec::new();
+    for &n in &[1usize, 8, 64, 256] {
+        // Enough requests to fill the in-flight window, few enough that
+        // the slow (baseline) side stays CI-sized.
+        let requests = (n * 2).clamp(8, 256);
+        let inputs: Vec<Vec<u32>> = (0..requests)
+            .map(|r| (0..cfg.seq as u32).map(|j| (j + r as u32) % cfg.vocab as u32).collect())
+            .collect();
+        let base = run_concurrency_load(
+            "baseline",
+            &cfg,
+            &weights,
+            concurrency_serving(0),
+            n,
+            &inputs,
+        );
+        let sched = run_concurrency_load(
+            "scheduler",
+            &cfg,
+            &weights,
+            concurrency_serving(n),
+            n,
+            &inputs,
+        );
+        assert_eq!(
+            (base.rounds, base.bytes),
+            (sched.rounds, sched.bytes),
+            "the scheduler must not change the protocol: rounds/bytes diverged at {n} in flight"
+        );
+        let speedup = sched.rps / base.rps.max(1e-9);
+        println!(
+            "  in-flight {:<3} [{} reqs]  baseline {:>7.2} req/s (p50 {:>9} p99 {:>9})  \
+             scheduler {:>7.2} req/s (p50 {:>9} p99 {:>9})  {:.2}×",
+            n,
+            requests,
+            base.rps,
+            fmt_s(base.p50_s),
+            fmt_s(base.p99_s),
+            sched.rps,
+            fmt_s(sched.p50_s),
+            fmt_s(sched.p99_s),
+            speedup,
+        );
+        speedup_at.push((n, speedup));
+        out.push(base);
+        out.push(sched);
+    }
+
+    let json_of = |m: &ConcurrencyMeasurement| {
+        format!(
+            "    {{\"label\": \"{}\", \"in_flight\": {}, \"requests\": {}, \
+             \"wall_s\": {:.6}, \"rps\": {:.4}, \"p50_s\": {:.6}, \"p99_s\": {:.6}, \
+             \"rounds\": {}, \"bytes\": {}}}",
+            m.label, m.in_flight, m.requests, m.wall_s, m.rps, m.p50_s, m.p99_s, m.rounds, m.bytes,
+        )
+    };
+    let rows: Vec<String> = out.iter().map(json_of).collect();
+    let speedups: Vec<String> = speedup_at
+        .iter()
+        .map(|(n, s)| format!("\"{n}\": {s:.4}"))
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"session_scheduler_concurrency\",\n  \"seq\": {seq},\n  \
+         \"workers\": {CONCURRENCY_WORKERS},\n  \"link_delay_ms\": {CONCURRENCY_DELAY_MS},\n  \
+         \"logits_bit_identical\": true,\n  \"speedup\": {{{}}},\n  \"runs\": [\n{}\n  ]\n}}\n",
+        speedups.join(", "),
+        rows.join(",\n"),
+    );
+    std::fs::write("BENCH_concurrency.json", &json).expect("write BENCH_concurrency.json");
+    println!("  wrote BENCH_concurrency.json");
+    out
+}
+
+// =====================================================================
 // Two-party runtime — in-process threads vs real-socket party split
 // =====================================================================
 

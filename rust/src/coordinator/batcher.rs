@@ -34,6 +34,7 @@ use crate::offline::spool::{SpoolConfig, SpooledSource};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::executor::PlaintextModel;
 use crate::runtime::xla_shim as xla;
+use crate::sched::{ComputeGate, GateSnapshot};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
@@ -192,6 +193,29 @@ pub struct ServingConfig {
     /// --no-ledger` turns it off). Session tables also export to
     /// `{trace_dir}/ledger-coordinator.jsonl` when `trace_dir` is set.
     pub ledger: bool,
+    /// Secure sessions allowed in flight at once (`serve
+    /// --max-sessions`). Each in-flight session gets its own carrier
+    /// thread, but they all contend for `secure_workers` *compute
+    /// permits* through the session scheduler ([`crate::sched`]): a
+    /// session parks (loans its permit out) whenever it blocks on the
+    /// wire, so one session's compute overlaps another's communication.
+    /// `0` (the default) means "same as `secure_workers`" — the
+    /// pre-scheduler thread-per-worker behaviour.
+    pub max_sessions: usize,
+    /// Bounded submit-queue admission cap (`serve --queue-cap`): a
+    /// request arriving while its engine's queue already holds this many
+    /// is shed with an immediate typed
+    /// [`SessionError::Overloaded`] reply instead of
+    /// queueing unboundedly. Retries of already-admitted sessions are
+    /// re-enqueued directly and never shed. `0` = unbounded.
+    pub queue_cap: usize,
+    /// Artificial per-receive link latency in milliseconds, applied to
+    /// the in-process party link (FOR BENCHMARKS ONLY — `bench
+    /// concurrency` uses it to simulate a LAN and measure how much
+    /// communication the scheduler overlaps). `0` (the default) = off.
+    /// Delay is observation-only: logits, rounds and bytes are
+    /// identical with and without it.
+    pub link_delay_ms: u64,
 }
 
 impl Default for ServingConfig {
@@ -220,6 +244,9 @@ impl Default for ServingConfig {
             trace: true,
             trace_dir: None,
             ledger: true,
+            max_sessions: 0,
+            queue_cap: 1024,
+            link_delay_ms: 0,
         }
     }
 }
@@ -525,6 +552,14 @@ pub struct Coordinator {
     /// Analytic-cost reconciliation for this model's shape (drives the
     /// `secformer_cost_model_rounds_delta` gauges).
     cost_check: CostModelCheck,
+    /// The secure engine's compute gate: every in-flight session's
+    /// carrier thread contends here for one of `secure_workers` permits,
+    /// parking (loaning the permit out) across wire waits — the session
+    /// scheduler ([`crate::sched`]).
+    gate: Arc<ComputeGate>,
+    /// Admission cap per engine queue (`ServingConfig::queue_cap`);
+    /// 0 = unbounded.
+    queue_cap: usize,
     started: Instant,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
@@ -608,6 +643,7 @@ impl Coordinator {
                             RemotePoolConfig {
                                 depth: serving.pool_depth.max(1),
                                 kinds,
+                                buckets: serving.batch_buckets.clone(),
                                 psk: serving.dealer_psk.clone(),
                             },
                         )?
@@ -686,29 +722,33 @@ impl Coordinator {
             None => None,
         };
 
-        // Cross-request batch buckets for the secure workers. A remote
-        // dealer serves single-session (bucket-1) bundles only, so
-        // batched chunks would degrade to seeded fallback there — chunk
-        // to 1 instead and keep every session pool-hit (extending the
-        // dealer wire to batch buckets is a tracked ROADMAP follow-up).
+        // Cross-request batch buckets for the secure workers. The
+        // dealer wire is bucket-aware (HELLO/PULL carry the bucket), so
+        // a remote dealer serves the same bucket list as in-process
+        // pools — no forcing to 1.
         let engine_buckets: Vec<usize> =
-            if serving.offline == OfflineMode::Pooled && serving.dealer_addr.is_some() {
-                if serving.batch_buckets.iter().any(|&b| b > 1) {
-                    eprintln!(
-                        "coordinator: --dealer-addr serves batch bucket 1 only; \
-                         cross-request batching disabled for pooled sessions"
-                    );
-                }
-                vec![1]
-            } else {
-                crate::offline::source::normalize_buckets(&serving.batch_buckets)
-            };
+            crate::offline::source::normalize_buckets(&serving.batch_buckets);
+        // Session scheduler: `slots` carrier threads (in-flight
+        // sessions) contend for `secure_workers` compute permits. With
+        // `max_sessions` unset the two are equal — every carrier always
+        // holds a permit, the pre-scheduler behaviour — but carriers
+        // beyond the permit count are pure overlap capacity: they run
+        // protocol compute only while some other session is parked on a
+        // wire wait. Worker labels stay `coord-{instance}-w{i}` across
+        // the whole slot range so session labels (and with them
+        // input-mask seeds and tuple streams) are unchanged for every
+        // pre-existing configuration.
+        let slots = if serving.max_sessions == 0 {
+            serving.secure_workers.max(1)
+        } else {
+            serving.max_sessions.max(1)
+        };
+        let gate = ComputeGate::new(serving.secure_workers.max(1));
         // When batching cannot amortize (bucket 1 only) a worker gains
         // nothing from a multi-request drain — it would execute the
         // batch sequentially while its peers idle. Keep the pre-batching
         // policy there: one request per drain when there are peers.
-        let max_take = if engine_buckets.last() == Some(&1) && serving.secure_workers.max(1) > 1
-        {
+        let max_take = if engine_buckets.last() == Some(&1) && slots > 1 {
             1
         } else {
             batcher.max_batch
@@ -719,7 +759,7 @@ impl Coordinator {
         // propagating the error.
         let mut workers = Vec::new();
         let mut spawn_err: Option<std::io::Error> = None;
-        for i in 0..serving.secure_workers.max(1) {
+        for i in 0..slots {
             let mut model = SecureModel::from_shared(
                 cfg.clone(),
                 ws0.clone(),
@@ -731,6 +771,10 @@ impl Coordinator {
             model.set_batch_buckets(&engine_buckets);
             model.set_tracer(Some(tracer.clone()));
             model.set_ledger(Some(ledger.clone()));
+            model.set_compute_gate(Some(gate.clone()));
+            if serving.link_delay_ms > 0 {
+                model.set_link_delay(Some(Duration::from_millis(serving.link_delay_ms)));
+            }
             if let Some(sup) = &supervisor {
                 model.set_peer_runtime(PeerRuntime::Supervised(sup.clone()));
             }
@@ -792,28 +836,33 @@ impl Coordinator {
             tracer,
             ledger,
             cost_check,
+            gate,
+            queue_cap: serving.queue_cap,
             started: Instant::now(),
             workers,
         })
     }
 
     /// Enqueue a request; the reply arrives on the provided channel.
+    ///
+    /// Admission control: with a non-zero [`ServingConfig::queue_cap`],
+    /// a request arriving while its engine's queue is already at the cap
+    /// is *shed* — the reply channel receives an immediate typed
+    /// [`SessionError::Overloaded`] reply (empty logits) and nothing is
+    /// queued, so the reply is never silently dropped and never hangs.
+    /// Session retries bypass this path entirely (the failing worker
+    /// re-enqueues them under the queue lock), so work that was admitted
+    /// once is never shed mid-flight.
     pub fn submit(
         &self,
         input: ModelInput,
         engine: EngineKind,
         reply_to: Sender<InferenceReply>,
     ) -> u64 {
-        if engine == EngineKind::Secure {
-            if let Some(src) = &self.pool {
-                // Arrival-rate signal for adaptive pool depth.
-                let kind = match &input {
-                    ModelInput::Hidden(_) => PlanInput::Hidden,
-                    ModelInput::Tokens(_) => PlanInput::Tokens,
-                };
-                src.note_arrival(kind);
-            }
-        }
+        let kind = match &input {
+            ModelInput::Hidden(_) => PlanInput::Hidden,
+            ModelInput::Tokens(_) => PlanInput::Tokens,
+        };
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = InferenceRequest {
             id,
@@ -823,14 +872,48 @@ impl Coordinator {
             reply_to,
             attempts: 0,
         };
-        {
+        let shed = {
             let mut q = lock_or_recover(&self.shared.q);
-            match engine {
-                EngineKind::Secure => q.secure.push_back(req),
-                EngineKind::Plaintext => q.plain.push_back(req),
+            let queue = match engine {
+                EngineKind::Secure => &mut q.secure,
+                EngineKind::Plaintext => &mut q.plain,
+            };
+            if self.queue_cap > 0 && queue.len() >= self.queue_cap {
+                Some(req)
+            } else {
+                queue.push_back(req);
+                None
+            }
+        };
+        match shed {
+            Some(req) => {
+                let metrics = match engine {
+                    EngineKind::Secure => &self.metrics_secure,
+                    EngineKind::Plaintext => &self.metrics_plain,
+                };
+                metrics.note_session_shed();
+                let _ = req.reply_to.send(InferenceReply {
+                    id,
+                    logits: Vec::new(),
+                    latency_s: req.submitted.elapsed().as_secs_f64(),
+                    engine,
+                    comm_bytes: 0,
+                    error: Some(SessionError::Overloaded),
+                });
+            }
+            None => {
+                if engine == EngineKind::Secure {
+                    if let Some(src) = &self.pool {
+                        // Arrival-rate signal for adaptive pool depth —
+                        // admitted requests only: a shed request never
+                        // consumes a bundle, so it must not inflate the
+                        // producers' demand estimate.
+                        src.note_arrival(kind);
+                    }
+                }
+                self.shared.cv.notify_all();
             }
         }
-        self.shared.cv.notify_all();
         id
     }
 
@@ -849,6 +932,14 @@ impl Coordinator {
     /// Pool telemetry (pooled mode only).
     pub fn pool_snapshot(&self) -> Option<PoolSnapshot> {
         self.pool.as_ref().map(|p| p.snapshot())
+    }
+
+    /// Point-in-time session-scheduler gauges: compute permits and how
+    /// many in-flight sessions are running, parked on a wire wait, or
+    /// waiting for a permit. Tests pin running/parked/waiting to 0 after
+    /// drain — a leaked permit or gauge is a scheduler bug.
+    pub fn sched_snapshot(&self) -> GateSnapshot {
+        self.gate.snapshot()
     }
 
     /// Secure-engine metrics with the pool and link gauges folded in.
@@ -981,6 +1072,35 @@ impl Coordinator {
             "secformer_sessions_failed_total",
             "Sessions that failed terminally.",
             s.sessions_failed as f64,
+        );
+        r.counter(
+            "secformer_sessions_shed_total",
+            "Requests shed at admission (bounded queue full) with a \
+             typed Overloaded reply.",
+            s.sessions_shed as f64,
+        );
+        let g = self.gate.snapshot();
+        r.gauge(
+            "secformer_sched_permits",
+            "Compute permits in the session scheduler (secure workers).",
+            g.permits as f64,
+        );
+        r.gauge_rows(
+            "secformer_sched_sessions",
+            "In-flight secure sessions by scheduler state: running \
+             (holding a compute permit), parked (permit loaned out \
+             across a wire wait), waiting (queued for a permit).",
+            &[
+                ("state=\"running\"".to_string(), g.running as f64),
+                ("state=\"parked\"".to_string(), g.parked as f64),
+                ("state=\"waiting\"".to_string(), g.waiting as f64),
+            ],
+        );
+        r.gauge(
+            "secformer_sched_utilization",
+            "Compute-pool utilization in [0, 1]: running permits over \
+             total permits.",
+            g.running as f64 / g.permits.max(1) as f64,
         );
         r.counter(
             "secformer_party_reconnects_total",
@@ -1187,6 +1307,195 @@ mod tests {
     #[test]
     fn shutdown_is_clean_with_empty_queue() {
         let (c, _) = tiny_coordinator();
+        c.shutdown();
+    }
+
+    fn bare_shared() -> Arc<Shared> {
+        Arc::new(Shared {
+            q: Mutex::new(Queues { secure: VecDeque::new(), plain: VecDeque::new() }),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    fn dummy_req(id: u64, tx: &Sender<InferenceReply>) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            input: ModelInput::Tokens(vec![0]),
+            engine: EngineKind::Secure,
+            submitted: Instant::now(),
+            reply_to: tx.clone(),
+            attempts: 0,
+        }
+    }
+
+    #[test]
+    fn drain_returns_none_on_shutdown_with_empty_queue() {
+        // Regression guard for the shutdown break in the empty-queue
+        // park: a drained worker must exit promptly, not wedge forever.
+        let shared = bare_shared();
+        {
+            let _q = lock_or_recover(&shared.q);
+            shared.shutdown.store(true, Ordering::Relaxed);
+            shared.cv.notify_all();
+        }
+        assert!(
+            drain_batch(&shared, &BatcherConfig::default(), EngineKind::Secure, 8).is_none()
+        );
+    }
+
+    #[test]
+    fn drain_serves_partial_batch_when_shutdown_cuts_the_straggler_wait() {
+        // Regression guard for the shutdown break inside the straggler
+        // wait: with an unbounded `max_wait`, shutdown must serve the
+        // partial batch now instead of sleeping out the deadline.
+        let shared = bare_shared();
+        let (tx, _rx) = std::sync::mpsc::channel();
+        lock_or_recover(&shared.q).secure.push_back(dummy_req(1, &tx));
+        let batcher = BatcherConfig { max_batch: 8, max_wait: Duration::from_secs(3600) };
+        let sh = shared.clone();
+        let killer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            let _q = lock_or_recover(&sh.q);
+            sh.shutdown.store(true, Ordering::Relaxed);
+            sh.cv.notify_all();
+        });
+        let t0 = Instant::now();
+        let batch =
+            drain_batch(&shared, &batcher, EngineKind::Secure, 8).expect("partial batch");
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(60), "must not sleep out max_wait");
+        killer.join().unwrap();
+        assert!(drain_batch(&shared, &batcher, EngineKind::Secure, 8).is_none());
+    }
+
+    #[test]
+    fn concurrent_drainers_never_return_empty_batches() {
+        // Regression guard for the empty-batch steal: two drainers see
+        // the same lone request, release the lock for the straggler
+        // wait, one takes everything — the loser must go back to the
+        // park (`continue`), never hand an empty batch to the engine.
+        let shared = bare_shared();
+        let (tx, _rx) = std::sync::mpsc::channel();
+        lock_or_recover(&shared.q).secure.push_back(dummy_req(1, &tx));
+        let batcher = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(20) };
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let sh = shared.clone();
+                std::thread::spawn(move || {
+                    let mut drained = 0usize;
+                    while let Some(b) = drain_batch(&sh, &batcher, EngineKind::Secure, 4) {
+                        assert!(!b.is_empty(), "empty batch escaped drain_batch");
+                        drained += b.len();
+                    }
+                    drained
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(100));
+        // The loser is parked again by now; a second request must reach it.
+        lock_or_recover(&shared.q).secure.push_back(dummy_req(2, &tx));
+        shared.cv.notify_all();
+        std::thread::sleep(Duration::from_millis(100));
+        {
+            let _q = lock_or_recover(&shared.q);
+            shared.shutdown.store(true, Ordering::Relaxed);
+            shared.cv.notify_all();
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 2, "both requests drained exactly once");
+    }
+
+    #[test]
+    fn overlap_slots_beyond_permits_all_complete_and_gauges_drain() {
+        // 4 in-flight session carriers over 1 compute permit: the
+        // scheduler must interleave them to completion (every carrier
+        // parks across each wire wait, loaning its permit out), and
+        // once the queue drains every scheduler gauge returns to 0 —
+        // a leaked permit would wedge the next session forever.
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let w = random_weights(&cfg, 31);
+        let serving = ServingConfig { max_sessions: 4, ..ServingConfig::default() };
+        let c = Coordinator::start_with(
+            cfg.clone(),
+            w,
+            None,
+            BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            serving,
+        )
+        .unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let n = 6;
+        for i in 0..n {
+            let toks: Vec<u32> =
+                (0..cfg.seq as u32).map(|j| (i + j) % cfg.vocab as u32).collect();
+            c.submit(ModelInput::Tokens(toks), EngineKind::Secure, tx.clone());
+        }
+        for _ in 0..n {
+            let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            assert!(r.error.is_none(), "scheduled session failed: {:?}", r.error);
+            assert_eq!(r.logits.len(), cfg.num_labels);
+            assert!(r.logits.iter().all(|v| v.is_finite()));
+        }
+        let g = c.sched_snapshot();
+        assert_eq!(g.permits, 1);
+        assert_eq!((g.running, g.parked, g.waiting), (0, 0, 0), "gauges leaked: {g:?}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn submit_sheds_typed_overloaded_at_queue_cap() {
+        // Fill the queue past the admission cap while the lone worker is
+        // stuck behind an artificially slow link: the overflow must get
+        // immediate typed Overloaded replies (never hang, never drop),
+        // and every admitted request must still be answered.
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let w = random_weights(&cfg, 37);
+        let serving = ServingConfig {
+            queue_cap: 2,
+            // Each of the model's hundreds of rounds now costs ≥ 1 ms on
+            // the recv side, so the first drained request pins the worker
+            // for far longer than the burst below takes to submit.
+            link_delay_ms: 1,
+            ..ServingConfig::default()
+        };
+        let c = Coordinator::start_with(
+            cfg.clone(),
+            w,
+            None,
+            BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            serving,
+        )
+        .unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let toks: Vec<u32> = (0..cfg.seq as u32).collect();
+        // First request occupies the worker...
+        c.submit(ModelInput::Tokens(toks.clone()), EngineKind::Secure, tx.clone());
+        // ...give it time to be drained so the queue is empty again...
+        std::thread::sleep(Duration::from_millis(100));
+        // ...then burst 6 more: 2 fill the queue to the cap, 4 shed.
+        for _ in 0..6 {
+            c.submit(ModelInput::Tokens(toks.clone()), EngineKind::Secure, tx.clone());
+        }
+        let mut ok = 0;
+        let mut shed = 0;
+        for _ in 0..7 {
+            let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            match r.error {
+                None => {
+                    ok += 1;
+                    assert_eq!(r.logits.len(), cfg.num_labels);
+                }
+                Some(SessionError::Overloaded) => {
+                    shed += 1;
+                    assert!(r.logits.is_empty());
+                }
+                Some(e) => panic!("unexpected session error: {e}"),
+            }
+        }
+        assert_eq!(ok, 3, "the in-flight request and both queued ones must complete");
+        assert_eq!(shed, 4, "overflow must shed with typed Overloaded");
+        assert_eq!(c.secure_summary().sessions_shed, 4);
         c.shutdown();
     }
 

@@ -57,6 +57,11 @@ pub struct Metrics {
     /// Sessions that failed terminally — retry budget exhausted or a
     /// non-retryable error; their requests got error replies.
     sessions_failed: AtomicU64,
+    /// Requests shed at admission (bounded submit queue full — see
+    /// `ServingConfig::queue_cap`); they received an immediate typed
+    /// [`crate::net::error::SessionError::Overloaded`] reply and never
+    /// entered the queue.
+    sessions_shed: AtomicU64,
     started: Instant,
 }
 
@@ -115,6 +120,10 @@ pub struct MetricsSummary {
     /// Sessions that failed terminally (retry budget exhausted or a
     /// non-retryable [`crate::net::error::SessionError`]), all time.
     pub sessions_failed: u64,
+    /// Requests shed at admission with a typed `Overloaded` reply
+    /// (bounded submit queue full), all time. Shed requests never enter
+    /// the queue, so they appear here and nowhere else.
+    pub sessions_shed: u64,
     /// Successful party-link re-dials since startup (0 without a remote
     /// peer; filled by the coordinator from its link supervisor).
     pub party_reconnects: u64,
@@ -164,6 +173,7 @@ impl Metrics {
             rounds_total: AtomicU64::new(0),
             sessions_retried: AtomicU64::new(0),
             sessions_failed: AtomicU64::new(0),
+            sessions_shed: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -178,6 +188,12 @@ impl Metrics {
     /// error replies).
     pub fn note_session_failure(&self) {
         self.sessions_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request shed at admission (bounded queue full); the
+    /// caller already sent the typed `Overloaded` reply.
+    pub fn note_session_shed(&self) {
+        self.sessions_shed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one executed dynamic batch: its size and the online rounds
@@ -293,6 +309,7 @@ impl Metrics {
             batch_hist,
             sessions_retried: self.sessions_retried.load(Ordering::Relaxed),
             sessions_failed: self.sessions_failed.load(Ordering::Relaxed),
+            sessions_shed: self.sessions_shed.load(Ordering::Relaxed),
             party_reconnects: 0,
             // Link gauges are the coordinator's to fill (it owns the
             // supervisor and the bundle source); in-process defaults.

@@ -77,6 +77,7 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
         "stats" => {
             let s = coord.secure_summary();
             let p = coord.metrics_plain.summary();
+            let g = coord.sched_snapshot();
             // Batch-size histogram as `size:count` pairs (top bucket is
             // "{BATCH_HIST_MAX}+"), so the round amortization is
             // observable in production from one line.
@@ -110,7 +111,9 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
                  recent_rps={:.2} offline_bytes={} \
                  pool_depth={} pool_hit={:.2} batch_mean={:.2} rounds_per_req={:.1} \
                  batch_hist={} phase_p50=[{}] phase_p95=[{}] phase_p99=[{}] \
-                 retried={} failed={} party_reconnects={} link={} \
+                 retried={} failed={} shed={} \
+                 sched_permits={} sched_running={} sched_parked={} sched_waiting={} \
+                 party_reconnects={} link={} \
                  rtt_ms={:.3} rtt_ewma_ms={:.3} \
                  dealer_reconnects={} dealer_pulls={} prefetch_depth={} \
                  spool_tombstones={} spool_compactions={} \
@@ -133,6 +136,11 @@ pub fn handle_line(line: &str, coord: &Coordinator, seq: usize, vocab: usize) ->
                 phase_q(&s.phase_p99_s),
                 s.sessions_retried,
                 s.sessions_failed,
+                s.sessions_shed,
+                g.permits,
+                g.running,
+                g.parked,
+                g.waiting,
                 s.party_reconnects,
                 if s.link_up { "up" } else { "down" },
                 s.link_rtt_last_ms,
@@ -272,6 +280,10 @@ mod tests {
         assert!(stats.contains("phase_p99=[queue:"), "{stats}");
         assert!(stats.contains("retried=0"), "{stats}");
         assert!(stats.contains("failed=0"), "{stats}");
+        assert!(stats.contains("shed=0"), "{stats}");
+        assert!(stats.contains("sched_permits=1"), "{stats}");
+        assert!(stats.contains("sched_running=0"), "idle after the reply: {stats}");
+        assert!(stats.contains("sched_parked=0"), "{stats}");
         assert!(stats.contains("party_reconnects=0"), "{stats}");
         assert!(stats.contains("link=up"), "{stats}");
         assert!(stats.contains("dealer_reconnects=0"), "{stats}");

@@ -10,8 +10,9 @@
 use crate::core::fixed::encode_vec;
 use crate::core::rng::Xoshiro;
 use crate::net::error::{catch_session, session_error_from_panic, SessionError};
+use crate::net::fault::DelayTransport;
 use crate::net::stats::{NetModel, StatsSnapshot};
-use crate::net::transport::channel_pair;
+use crate::net::transport::{channel_pair, Transport};
 use crate::nn::config::ModelConfig;
 use crate::nn::model::{bert_forward_batch, InputShare, ModelInput};
 use crate::nn::weights::{share_weights, ShareMap, WeightMap};
@@ -28,11 +29,12 @@ use crate::party::wire::{
     MODE_SEEDED,
 };
 use crate::proto::ctx::PartyCtx;
+use crate::sched::{ComputeGate, GatePermit};
 use crate::sharing::dealer::{DealerServer, Party0Provider, Party1Provider};
 use crate::sharing::provider::FastSeededProvider;
 use crate::sharing::share;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// How correlated randomness is provisioned.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -168,6 +170,18 @@ pub struct SecureModel {
     /// mints a [`SessionLedger`] for its S0 protocol context and absorbs
     /// it (keyed by the session label) on success.
     ledger: Option<Arc<Ledger>>,
+    /// Optional session scheduler gate: when attached, every session
+    /// this model runs acquires a compute permit and parks it during
+    /// wire waits ([`crate::sched`]), so many in-flight models can
+    /// share a small compute pool. `None` (the default) keeps the
+    /// thread-per-session behaviour.
+    gate: Option<Arc<ComputeGate>>,
+    /// Optional simulated one-way link latency for the in-process
+    /// topology: wraps both party channel transports in a recv-side
+    /// [`DelayTransport`]. Benchmark-only (LAN simulation for the
+    /// concurrency bench); has no effect on remote peers, where the
+    /// latency is real.
+    link_delay: Option<Duration>,
 }
 
 impl SecureModel {
@@ -234,7 +248,28 @@ impl SecureModel {
             batch_buckets: DEFAULT_BATCH_BUCKETS.to_vec(),
             tracer: None,
             ledger: None,
+            gate: None,
+            link_delay: None,
         }
+    }
+
+    /// Attach a shared compute gate ([`crate::sched::ComputeGate`]):
+    /// each session of this model then runs under a FIFO compute permit
+    /// that is loaned out during every blocking transport receive, so
+    /// the compute of another session overlaps this session's
+    /// communication. All models serving one role (all coordinator
+    /// workers, say) should share ONE gate. Pass `None` (the default)
+    /// to run ungated.
+    pub fn set_compute_gate(&mut self, gate: Option<Arc<ComputeGate>>) {
+        self.gate = gate;
+    }
+
+    /// Simulate a one-way LAN latency on the in-process party link:
+    /// every channel receive of both parties is delayed by `delay`.
+    /// Benchmark-only — this is how `bench concurrency` makes the
+    /// compute/communication overlap measurable without real sockets.
+    pub fn set_link_delay(&mut self, delay: Option<Duration>) {
+        self.link_delay = delay;
     }
 
     /// Attach a span recorder: every inference records `session` and
@@ -725,6 +760,16 @@ impl SecureModel {
         let pool_handle = self.pool.clone();
         let session = session.to_string();
         let (peer0, peer1) = channel_pair();
+        // Simulated LAN (bench-only): the delay rides on the recv path,
+        // exactly where the scheduler parks the session, so a gated run
+        // can hide it behind other sessions' compute.
+        let (peer0, peer1): (Box<dyn Transport>, Box<dyn Transport>) = match self.link_delay {
+            Some(d) => (
+                Box::new(DelayTransport::new(Box::new(peer0), d)),
+                Box::new(DelayTransport::new(Box::new(peer1), d)),
+            ),
+            None => (Box::new(peer0), Box::new(peer1)),
+        };
 
         std::thread::scope(|scope| {
             // Assistant server T (dealer mode only).
@@ -751,6 +796,12 @@ impl SecureModel {
             // Both parties must agree on the fallback stream label.
             let fb0 = format!("{bundle_session}/fallback");
             let fb1 = fb0.clone();
+            // Both party halves are gated (the dealer thread is not: it
+            // only ever answers S1 and must never queue behind compute).
+            // Permits are acquired INSIDE each spawned thread, so an
+            // in-flight session costs zero permits until its turn.
+            let gate0 = self.gate.clone();
+            let gate1 = self.gate.clone();
 
             let h0 = scope.spawn(move || {
                 let prov: Box<dyn crate::sharing::provider::Provider> = match offline {
@@ -761,10 +812,11 @@ impl SecureModel {
                         None => Box::new(FastSeededProvider::new_fast(&sess0, 0)),
                     },
                 };
-                let mut ctx = PartyCtx::new(0, Box::new(peer0), prov, 0xAA);
+                let mut ctx = PartyCtx::new(0, peer0, prov, 0xAA);
                 // Ledger attribution rides on S0 only: the round schedule
                 // is symmetric, so one party's view is the whole story.
                 ctx.ledger = ledger;
+                ctx.gate = gate0.as_ref().map(GatePermit::acquire);
                 let stats = ctx.stats.clone();
                 let out = bert_forward_batch(&mut ctx, &cfg0, w0, &in0);
                 (out, stats.snapshot())
@@ -798,8 +850,9 @@ impl SecureModel {
                         None => Box::new(FastSeededProvider::new_fast(&sess1, 1)),
                     },
                 };
-                let mut ctx = PartyCtx::new(1, Box::new(peer1), prov, 0xBB);
+                let mut ctx = PartyCtx::new(1, peer1, prov, 0xBB);
                 ctx.stats = stats_handle;
+                ctx.gate = gate1.as_ref().map(GatePermit::acquire);
                 let stats = ctx.stats.clone();
                 let out = bert_forward_batch(&mut ctx, &cfg1, w1, &in1);
                 // Dropping ctx (and with it Party1Provider) shuts down T.
@@ -928,6 +981,11 @@ impl SecureModel {
 
         let mut ctx = PartyCtx::new(0, sess.take_transport(), prov, 0xAA);
         ctx.ledger = ledger;
+        // The compute permit is acquired only now — after the start/ack
+        // exchange settled admission — and dropped with the ctx below,
+        // BEFORE the result wait: neither the handshake nor the final
+        // wire wait ever holds a compute slot.
+        ctx.gate = self.gate.as_ref().map(GatePermit::acquire);
         let stats = ctx.stats.clone();
         // S0's forward runs under a session boundary: a link lost
         // mid-round unwinds out of the transport as a typed error

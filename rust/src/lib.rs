@@ -38,4 +38,5 @@ pub mod offline;
 pub mod party;
 pub mod proto;
 pub mod runtime;
+pub mod sched;
 pub mod sharing;

@@ -21,7 +21,8 @@
 //!                            targets: table3 table4 fig1 fig5 fig6 fig7
 //!                                     fig8 fig9 rounds serving
 //!                                     distribution two_party batching
-//!                                     observability kernels ledger all
+//!                                     concurrency observability kernels
+//!                                     ledger all
 //!
 //! Common options:
 //!   --framework <crypten|puma|mpcformer|secformer>   (default secformer)
@@ -343,6 +344,15 @@ fn cmd_serve(args: &Args, cfg_file: &Config) -> Result<()> {
     serving.session_retries = args.usize_or("session-retries", 2) as u32;
     serving.party_heartbeat_ms = args.usize_or("party-heartbeat-ms", 1000).max(1) as u64;
     serving.link_timeout_ms = args.usize_or("link-timeout-ms", 5000).max(1) as u64;
+    // Session scheduler: `--max-sessions N` admits up to N concurrent
+    // sessions (0 = same as --workers, no extra overlap), each an
+    // in-flight carrier contending for the `--workers` compute permits;
+    // carriers beyond the permit count run only while another session
+    // waits on the wire. `--queue-cap N` bounds the submit queue (0 =
+    // unbounded): a full queue sheds new requests with a typed overload
+    // error instead of queueing without bound.
+    serving.max_sessions = args.usize_or("max-sessions", 0);
+    serving.queue_cap = args.usize_or("queue-cap", serving.queue_cap);
     // `--batch-buckets 1,2,4,8` (the default): cross-request batching —
     // a drained dynamic batch is padded up to the nearest bucket and
     // executed as ONE secure round schedule; pooled mode plans one
@@ -419,17 +429,24 @@ fn cmd_dealer_serve(args: &Args, cfg_file: &Config) -> Result<()> {
         .map(String::from)
         .unwrap_or_else(|| format!("dealer-{:x}", std::process::id()));
     let plan_hidden = args.flag("plan").map(|p| p != "tokens").unwrap_or(true);
-    let pools = PoolSet::start(&cfg, &prefix, pool_cfg, plan_hidden);
+    // `--batch-buckets` must cover every bucket the coordinators batch
+    // to (the default mirrors `serve`'s): the handshake verifies one
+    // fingerprint per (kind, bucket) and rejects unplanned pairs.
+    let batch_buckets = args.batch_buckets()?;
+    let pools = PoolSet::start_with_buckets(&cfg, &prefix, pool_cfg, plan_hidden, &batch_buckets);
     for kind in [
         secformer::offline::planner::PlanInput::Tokens,
         secformer::offline::planner::PlanInput::Hidden,
     ] {
-        if let Some(m) = pools.manifest_for(kind) {
-            eprintln!(
-                "dealer: planned {kind:?}: {} requests, {} ring words/party per bundle",
-                m.reqs.len(),
-                m.words_per_party()
-            );
+        for bucket in pools.buckets_for(kind) {
+            if let Some(m) = pools.manifest_for_batch(kind, bucket) {
+                eprintln!(
+                    "dealer: planned {kind:?} bucket {bucket}: {} requests, \
+                     {} ring words/party per bundle",
+                    m.reqs.len(),
+                    m.words_per_party()
+                );
+            }
         }
     }
     let bind = args.flag("bind").unwrap_or("127.0.0.1:7979");
@@ -505,6 +522,7 @@ fn cmd_party_serve(args: &Args, cfg_file: &Config) -> Result<()> {
                     RemotePoolConfig {
                         depth: depth.max(1),
                         kinds,
+                        buckets: batch_buckets.clone(),
                         psk: args.flag("dealer-psk").map(String::from),
                     },
                 )?
@@ -578,6 +596,12 @@ fn cmd_party_serve(args: &Args, cfg_file: &Config) -> Result<()> {
             trace_dir: args.flag("trace-dir").map(String::from),
             ledger: !args.has("no-ledger"),
             metrics_http: args.flag("metrics-http").map(String::from),
+            // Session scheduler: `--max-sessions` caps concurrent
+            // sessions (0 = unbounded; excess STARTs get a typed shed),
+            // `--compute-permits` sizes the compute pool (0 = one per
+            // available core).
+            max_sessions: args.usize_or("max-sessions", 0),
+            compute_permits: args.usize_or("compute-permits", 0),
             ..PartyHostConfig::default()
         },
     )
@@ -734,6 +758,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "batching" => {
             bh::batching_bench(args.usize_or("seq", 8), &[1, 4, 8]);
         }
+        "concurrency" => {
+            bh::concurrency_bench(args.usize_or("seq", 8));
+        }
         "observability" => {
             bh::observability_bench(args.usize_or("seq", 8), args.usize_or("requests", 10));
         }
@@ -825,7 +852,8 @@ USAGE:
                    [--secure|--plain] [--artifacts DIR] [--seeded]
   secformer serve  [--port 7878] [--weights W.swts] [--artifacts DIR]
                    [--max-batch 8] [--max-wait-ms 5] [--batch-buckets 1,2,4,8]
-                   [--workers N] [--pool DEPTH] [--pool-producers P] [--pool-prf]
+                   [--workers N] [--max-sessions N] [--queue-cap 1024]
+                   [--pool DEPTH] [--pool-producers P] [--pool-prf]
                    [--plan tokens|both] [--adaptive]
                    [--dealer-addr HOST:PORT] [--dealer-psk KEY]
                    [--spool-dir DIR] [--spool-max-bytes N] [--namespace NS]
@@ -835,6 +863,7 @@ USAGE:
                    [--no-ledger] [--metrics-http HOST:PORT]
   secformer party-serve [--bind 127.0.0.1:8787] [--seq N] [--framework F]
                    [--vocab V] [--weights W.swts] [--psk KEY]
+                   [--max-sessions N] [--compute-permits N]
                    [--pool DEPTH] [--pool-producers P] [--pool-prf]
                    [--plan tokens|both] [--adaptive] [--batch-buckets 1,2,4,8]
                    [--namespace NS | --prefix PFX]
@@ -844,6 +873,7 @@ USAGE:
                    [--no-ledger] [--metrics-http HOST:PORT]
   secformer dealer-serve [--bind 127.0.0.1:7979] [--seq N] [--framework F]
                    [--vocab V] [--depth 8] [--producers 2] [--prf]
+                   [--batch-buckets 1,2,4,8]
                    [--plan tokens|both] [--adaptive] [--max-depth 64]
                    [--max-bundles N] [--prefix PFX] [--psk KEY]
                    [--no-trace] [--trace-dir DIR]
@@ -856,8 +886,8 @@ USAGE:
   secformer ledger [LABEL] [--role coordinator|party|dealer]
                    [--addr HOST:PORT] [--psk KEY]
   secformer bench  <table3|table4|fig1|fig5|fig6|fig7|fig8|fig9|rounds|serving|
-                    distribution|two_party|batching|observability|kernels|
-                    ledger|ablations|all>
+                    distribution|two_party|batching|concurrency|observability|
+                    kernels|ledger|ablations|all>
                    [--seq N] [--paper] [--iters K] [--base-only]
                    [--concurrency C] [--requests R] [--workers N]
 
@@ -873,6 +903,17 @@ Global options (every subcommand):
   --matmul-par-ops N          multiply-accumulate threshold above which a
                               matmul row-shards across threads (default
                               1048576; env SECFORMER_MATMUL_PAR_OPS)
+
+Session scheduler: `serve --max-sessions N` admits up to N concurrent
+sessions (default: one per worker) while `--workers` sizes the compute
+permit pool — extra sessions make progress whenever an admitted one is
+waiting on the wire, overlapping one session's compute with another's
+communication. `--queue-cap` bounds the submit queue; past it (and past
+`--max-sessions` on party-serve) new requests are shed with a typed
+overload error, never hung or silently dropped. `party-serve
+--compute-permits` sizes the party-side pool (default: one per core).
+`bench concurrency` sweeps in-flight depth and writes
+BENCH_concurrency.json.
 
 `serve --pool DEPTH` switches the secure workers to OfflineMode::Pooled: a
 demand planner dry-runs the model at startup, background producers keep

@@ -46,6 +46,13 @@ pub enum SessionError {
     /// as-is: it signals a configuration/protocol mismatch, not a flaky
     /// link.
     BundleMismatch(String),
+    /// Admission control shed the request: a bounded submit queue or
+    /// the party host's session cap was full (`--queue-cap`,
+    /// `--max-sessions`). NOT retryable by the serving stack — an
+    /// immediate retry would re-enter the same full queue; shedding is
+    /// the backpressure signal the *caller* acts on (back off, route
+    /// elsewhere).
+    Overloaded,
 }
 
 impl SessionError {
@@ -64,6 +71,9 @@ impl std::fmt::Display for SessionError {
             SessionError::Timeout => write!(f, "session timed out waiting for the peer"),
             SessionError::ProtocolViolation(m) => write!(f, "protocol violation: {m}"),
             SessionError::BundleMismatch(m) => write!(f, "bundle mismatch: {m}"),
+            SessionError::Overloaded => {
+                write!(f, "overloaded: admission control shed the session")
+            }
         }
     }
 }
@@ -150,6 +160,9 @@ mod tests {
         assert!(SessionError::Timeout.is_retryable());
         assert!(!SessionError::ProtocolViolation("x".into()).is_retryable());
         assert!(!SessionError::BundleMismatch("x".into()).is_retryable());
+        // A shed session must NOT be silently retried into the same
+        // full queue — shedding is the caller's backpressure signal.
+        assert!(!SessionError::Overloaded.is_retryable());
     }
 
     #[test]

@@ -100,6 +100,42 @@ impl Transport for FaultyTransport {
     }
 }
 
+/// A [`Transport`] wrapper that adds a fixed one-way latency to every
+/// *received* message — a deterministic LAN simulator for concurrency
+/// benchmarks.
+///
+/// Unlike [`FaultPlan::delay`] (which sleeps inside `send`, i.e. while
+/// the sending session still holds its compute slot), the sleep here
+/// happens on the receive path, where the session scheduler parks the
+/// session and loans its compute permit out
+/// ([`crate::sched::GatePermit::while_parked`]). That is exactly where
+/// real wire latency lands, so a gate-scheduled run can hide this
+/// delay behind other sessions' compute while a thread-per-session
+/// baseline cannot hide it behind anything.
+pub struct DelayTransport {
+    inner: Box<dyn Transport>,
+    delay: Duration,
+}
+
+impl DelayTransport {
+    /// Wrap `inner`, delaying every receive by `delay`.
+    pub fn new(inner: Box<dyn Transport>, delay: Duration) -> Self {
+        DelayTransport { inner, delay }
+    }
+}
+
+impl Transport for DelayTransport {
+    fn send(&self, data: Vec<u64>) {
+        self.inner.send(data);
+    }
+
+    fn recv(&self) -> Vec<u64> {
+        let data = self.inner.recv();
+        std::thread::sleep(self.delay);
+        data
+    }
+}
+
 // ---------------------------------------------------------------------
 // ChaosProxy — TCP-level chaos for real listeners
 // ---------------------------------------------------------------------

@@ -76,7 +76,7 @@ impl TupleReq {
 
 /// Which input path to plan for. The demand differs: token inputs prepend
 /// the secure one-hot embedding matmul and the embedding LayerNorm.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum PlanInput {
     /// Pre-embedded hidden states (`seq × hidden`).
     Hidden,

@@ -14,19 +14,30 @@
 //! ```
 //!
 //! Protocol (frames from [`crate::offline::wire`]): the client opens
-//! with `HELLO` carrying a [`manifest_fingerprint`] per input kind it
-//! intends to pull; the dealer verifies each against its own plans and
-//! answers `HELLO_OK` (or `ERR` + close on any mismatch — a client must
-//! never consume bundles planned for a different model). After the
-//! handshake the client keeps a fixed credit of outstanding `PULL`s per
-//! kind: one issued for the initial depth, then **coalesced**
-//! replacements — spent credit accumulates locally and ships as one
-//! `PULL count=N` frame per `max(1, depth/2)` consumed bundles, cutting
-//! the dealer-link frame count during prefetch bursts while the
-//! dealer's send rate stays consumer-clocked (the socket applies
-//! natural backpressure). Every `PULL` is answered by exactly `count`
-//! `BUNDLE` frames (or `ERR` when the dealer's pools are
-//! exhausted/stopped).
+//! with `HELLO` carrying a [`manifest_fingerprint`] per (input kind,
+//! batch bucket) pair it intends to pull; the dealer verifies each
+//! against its own plans and answers `HELLO_OK` (or `ERR` + close on
+//! any mismatch — a client must never consume bundles planned for a
+//! different model, and a bucket-`B` bundle must never serve a
+//! differently-sized session). After the handshake the client keeps a
+//! fixed credit of outstanding `PULL`s per (kind, bucket): one issued
+//! for the initial depth, then **coalesced** replacements — spent
+//! credit accumulates locally and ships as one `PULL count=N` frame per
+//! `max(1, depth/2)` consumed bundles, cutting the dealer-link frame
+//! count during prefetch bursts while the dealer's send rate stays
+//! consumer-clocked (the socket applies natural backpressure). Every
+//! `PULL` is answered by exactly `count` `BUNDLE` frames (or `ERR` when
+//! the dealer's pools are exhausted/stopped). Bundles carry no bucket
+//! tag on the wire; the dealer serves a connection single-threaded, so
+//! `BUNDLE` frames arrive strictly in `PULL` order and the client
+//! routes each to the (kind, bucket) of the credit it repays.
+//!
+//! [`WIRE_VERSION`](crate::offline::wire::WIRE_VERSION) deliberately
+//! stayed 1 across the bucket extension: a pre-bucket peer's 33-byte
+//! HELLO entries fail the new 37-byte length check (and vice versa), so
+//! mixed-version pairings are rejected at the handshake with a typed
+//! `ERR` instead of a version bump that would also poison compatible
+//! on-disk spool files.
 //!
 //! Loss of the dealer mid-session is non-fatal, and since the
 //! fault-tolerance PR it is usually not even permanent: the prefetch
@@ -45,9 +56,9 @@
 use crate::nn::config::ModelConfig;
 use crate::obs::ledger::Ledger;
 use crate::obs::{MetricsRegistry, Tracer, ROLE_DEALER};
-use crate::offline::planner::{plan_demand, PlanInput};
+use crate::offline::planner::{plan_demand_batch, PlanInput};
 use crate::offline::pool::{PoolSnapshot, SessionBundle};
-use crate::offline::source::{BundleSource, PoolSet};
+use crate::offline::source::{normalize_buckets, BundleSource, PoolSet};
 use crate::offline::wire::{
     client_auth, decode_bundle, decode_kind, encode_bundle, encode_kind,
     manifest_fingerprint, msg, read_frame, server_auth, write_frame, FrameError,
@@ -517,15 +528,22 @@ fn handle_dealer_conn(
         bail!("empty HELLO");
     }
     let n = payload[0] as usize;
-    if payload.len() != 1 + n * 33 {
-        send_err(&mut stream, "malformed HELLO");
-        bail!("malformed HELLO ({} bytes for {n} kinds)", payload.len());
+    // Entries are 37 bytes: kind u8 + bucket u32 + fingerprint 32 B. A
+    // pre-bucket client's 33-byte entries land here with a distinct
+    // message (same WIRE_VERSION — see the module docs).
+    if n > 0 && payload.len() == 1 + n * 33 {
+        send_err(&mut stream, "HELLO without batch buckets; update the client");
+        bail!("client sent a pre-bucket HELLO");
     }
-    // Only kinds whose fingerprints were verified here may be pulled
-    // later — the handshake guarantee is per kind.
-    let mut verified: Vec<PlanInput> = Vec::with_capacity(n);
+    if payload.len() != 1 + n * 37 {
+        send_err(&mut stream, "malformed HELLO");
+        bail!("malformed HELLO ({} bytes for {n} entries)", payload.len());
+    }
+    // Only (kind, bucket) pairs whose fingerprints were verified here
+    // may be pulled later — the handshake guarantee is per pair.
+    let mut verified: Vec<(PlanInput, usize)> = Vec::with_capacity(n);
     for i in 0..n {
-        let off = 1 + i * 33;
+        let off = 1 + i * 37;
         let kind = match decode_kind(payload[off]) {
             Ok(k) => k,
             Err(e) => {
@@ -533,16 +551,26 @@ fn handle_dealer_conn(
                 return Err(e);
             }
         };
-        let theirs = &payload[off + 1..off + 33];
-        match pools.manifest_for(kind) {
-            Some(m) if manifest_fingerprint(m)[..] == *theirs => verified.push(kind),
+        let bucket =
+            u32::from_le_bytes(payload[off + 1..off + 5].try_into().unwrap()) as usize;
+        let theirs = &payload[off + 5..off + 37];
+        match pools.manifest_for_batch(kind, bucket) {
+            Some(m) if manifest_fingerprint(m)[..] == *theirs => {
+                verified.push((kind, bucket));
+            }
             Some(_) => {
-                send_err(&mut stream, &format!("manifest mismatch for {kind:?}"));
-                bail!("client manifest mismatch for {kind:?}");
+                send_err(
+                    &mut stream,
+                    &format!("manifest mismatch for {kind:?} bucket {bucket}"),
+                );
+                bail!("client manifest mismatch for {kind:?} bucket {bucket}");
             }
             None => {
-                send_err(&mut stream, &format!("kind {kind:?} not planned on this dealer"));
-                bail!("client requested unplanned kind {kind:?}");
+                send_err(
+                    &mut stream,
+                    &format!("{kind:?} bucket {bucket} not planned on this dealer"),
+                );
+                bail!("client requested unplanned {kind:?} bucket {bucket}");
             }
         }
     }
@@ -557,16 +585,22 @@ fn handle_dealer_conn(
         };
         match ty {
             msg::PULL => {
-                if payload.len() != 5 {
+                // kind u8 + bucket u32 + count u32.
+                if payload.len() != 9 {
                     send_err(&mut stream, "malformed PULL");
                     bail!("malformed PULL");
                 }
                 let kind = decode_kind(payload[0])?;
-                if !verified.contains(&kind) {
-                    send_err(&mut stream, &format!("kind {kind:?} not in handshake"));
-                    bail!("client pulled unverified kind {kind:?}");
+                let bucket =
+                    u32::from_le_bytes(payload[1..5].try_into().unwrap()) as usize;
+                if !verified.contains(&(kind, bucket)) {
+                    send_err(
+                        &mut stream,
+                        &format!("{kind:?} bucket {bucket} not in handshake"),
+                    );
+                    bail!("client pulled unverified {kind:?} bucket {bucket}");
                 }
-                let count = u32::from_le_bytes(payload[1..5].try_into().unwrap());
+                let count = u32::from_le_bytes(payload[5..9].try_into().unwrap());
                 stats.pulls.fetch_add(1, Ordering::Relaxed);
                 stats.requested.fetch_add(count as u64, Ordering::Relaxed);
                 if let Some(c) = stats.conns.lock().unwrap().get_mut(peer) {
@@ -577,7 +611,7 @@ fn handle_dealer_conn(
                     // pull rate, then a (possibly blocking) pop.
                     let t0 = Instant::now();
                     pools.note_arrival(kind);
-                    match pools.pop(kind) {
+                    match pools.pop_batch(kind, bucket) {
                         Some(b) => {
                             write_frame(&mut stream, msg::BUNDLE, &encode_bundle(&b))?;
                             // The span is keyed by the bundle's session
@@ -646,11 +680,16 @@ fn handle_dealer_conn(
 /// Client prefetch sizing.
 #[derive(Clone, Debug)]
 pub struct RemotePoolConfig {
-    /// Bundles to keep prefetched locally, per input kind (also the
-    /// standing PULL credit).
+    /// Request-equivalents to keep prefetched locally per input kind
+    /// (also the standing PULL credit). Each bucket-`b` queue runs at
+    /// `max(1, depth / b)` bundles, mirroring [`PoolSet`]'s scaling.
     pub depth: usize,
     /// Input kinds to handshake for and prefetch.
     pub kinds: Vec<PlanInput>,
+    /// Batch buckets to handshake for and prefetch, per kind.
+    /// Normalized like `--batch-buckets` (sorted, deduplicated, always
+    /// includes 1) — must match a bucket the dealer planned.
+    pub buckets: Vec<usize>,
     /// Pre-shared key for the dealer's challenge/response handshake
     /// (required when the dealer runs with `--psk`).
     pub psk: Option<String>,
@@ -661,26 +700,19 @@ impl Default for RemotePoolConfig {
         RemotePoolConfig {
             depth: 4,
             kinds: vec![PlanInput::Tokens, PlanInput::Hidden],
+            buckets: vec![1],
             psk: None,
         }
     }
 }
 
 struct RemoteState {
-    hidden: VecDeque<SessionBundle>,
-    tokens: VecDeque<SessionBundle>,
+    /// (kind, bucket) → prefetched bundles, one queue per handshaken
+    /// pair.
+    queues: BTreeMap<(PlanInput, usize), VecDeque<SessionBundle>>,
     /// The dealer link failed or was closed; queues drain, then pops
     /// return `None`.
     dead: bool,
-}
-
-impl RemoteState {
-    fn queue(&mut self, kind: PlanInput) -> &mut VecDeque<SessionBundle> {
-        match kind {
-            PlanInput::Hidden => &mut self.hidden,
-            PlanInput::Tokens => &mut self.tokens,
-        }
-    }
 }
 
 struct RemoteShared {
@@ -689,6 +721,13 @@ struct RemoteShared {
     /// Write half for PULL frames (reads run on the prefetch thread).
     /// Replaced wholesale when the reader re-dials a lost dealer.
     writer: Mutex<TcpStream>,
+    /// The (kind, bucket) each in-flight pulled bundle will arrive for,
+    /// in wire order. Bundles carry no bucket tag; the dealer serves a
+    /// connection single-threaded, so BUNDLE frames arrive strictly in
+    /// PULL order and this FIFO routes each to its queue. Appended
+    /// under the writer lock (so FIFO order == wire order even with
+    /// racing pullers); voided on re-dial along with stranded credit.
+    expected: Mutex<VecDeque<(PlanInput, usize)>>,
     stopping: AtomicBool,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -701,20 +740,13 @@ struct RemoteShared {
     /// line as `dealer_reconnects`).
     reconnects: AtomicU64,
     offline_bytes: AtomicU64,
-    /// Consumed-but-not-yet-replaced credit per kind (indexed by
-    /// `credit_slot`): batch PULL coalescing accumulates spent credit
-    /// here and ships it as ONE `PULL count=N` frame once it reaches the
-    /// flush threshold, instead of one frame per consumed bundle.
-    pending_credit: [AtomicU64; 2],
+    /// Consumed-but-not-yet-replaced credit per (kind, bucket): batch
+    /// PULL coalescing accumulates spent credit here and ships it as
+    /// ONE `PULL count=N` frame once it reaches the flush threshold,
+    /// instead of one frame per consumed bundle.
+    pending_credit: Mutex<BTreeMap<(PlanInput, usize), u64>>,
     /// PULL frames written since connect (coalescing telemetry).
     pulls_sent: AtomicU64,
-}
-
-fn credit_slot(kind: PlanInput) -> usize {
-    match kind {
-        PlanInput::Hidden => 0,
-        PlanInput::Tokens => 1,
-    }
 }
 
 impl RemoteShared {
@@ -723,13 +755,22 @@ impl RemoteShared {
         self.cv.notify_all();
     }
 
-    fn send_pull(&self, kind: PlanInput, count: u32) {
-        let mut payload = [0u8; 5];
+    fn send_pull(&self, kind: PlanInput, bucket: usize, count: u32) {
+        let mut payload = [0u8; 9];
         payload[0] = encode_kind(kind);
-        payload[1..5].copy_from_slice(&count.to_le_bytes());
+        payload[1..5].copy_from_slice(&(bucket as u32).to_le_bytes());
+        payload[5..9].copy_from_slice(&count.to_le_bytes());
         self.pulls_sent.fetch_add(1, Ordering::Relaxed);
         self.requested.fetch_add(count as u64, Ordering::Relaxed);
         let mut w = self.writer.lock().unwrap();
+        {
+            // Inside the writer critical section: the expected-FIFO
+            // must append in the same order frames hit the socket.
+            let mut exp = self.expected.lock().unwrap();
+            for _ in 0..count {
+                exp.push_back((kind, bucket));
+            }
+        }
         if write_frame(&mut *w, msg::PULL, &payload).is_err() {
             drop(w);
             self.mark_dead();
@@ -738,18 +779,20 @@ impl RemoteShared {
 
     /// Account one consumed bundle and flush the accumulated credit as a
     /// single coalesced PULL once it reaches `threshold`. Keeping the
-    /// threshold ≤ half the prefetch depth guarantees at least one
-    /// outstanding credit at all times, so the prefetch queue can never
-    /// starve waiting for a PULL that was never sent.
-    fn credit_consumed(&self, kind: PlanInput, threshold: u64) {
-        let slot = &self.pending_credit[credit_slot(kind)];
-        if slot.fetch_add(1, Ordering::Relaxed) + 1 >= threshold {
-            // Claim whatever accrued (racing consumers may leave 0 for
-            // the losers — exactly one PULL carries the batch).
-            let claimed = slot.swap(0, Ordering::Relaxed);
-            if claimed > 0 {
-                self.send_pull(kind, claimed as u32);
-            }
+    /// threshold ≤ half the per-bucket prefetch depth guarantees at
+    /// least one outstanding credit at all times, so the prefetch queue
+    /// can never starve waiting for a PULL that was never sent.
+    fn credit_consumed(&self, kind: PlanInput, bucket: usize, threshold: u64) {
+        let claimed = {
+            let mut pc = self.pending_credit.lock().unwrap();
+            let slot = pc.entry((kind, bucket)).or_insert(0);
+            *slot += 1;
+            // Claim the whole batch once it reaches the threshold —
+            // exactly one PULL carries it.
+            if *slot >= threshold { std::mem::take(slot) } else { 0 }
+        };
+        if claimed > 0 {
+            self.send_pull(kind, bucket, claimed as u32);
         }
     }
 }
@@ -775,8 +818,17 @@ struct DialInfo {
     addr: String,
     psk: Option<String>,
     hello: Vec<u8>,
-    kinds: Vec<PlanInput>,
+    /// Every handshaken (kind, bucket) pair, HELLO order.
+    entries: Vec<(PlanInput, usize)>,
     depth: usize,
+}
+
+/// Per-bucket prefetch depth: a bucket-`b` bundle is ~`b` requests of
+/// pad material, so the bundle count scales down by `b` (floor 1) and
+/// total resident material stays ≈ `depth` request-equivalents per
+/// kind — the same scaling [`PoolSet::start_with_buckets`] applies.
+fn bucket_depth(depth: usize, bucket: usize) -> usize {
+    (depth / bucket.max(1)).max(1)
 }
 
 /// Dial + authenticate + handshake one dealer connection; used for both
@@ -807,6 +859,8 @@ fn dial_dealer(dial: &DialInfo) -> Result<TcpStream> {
 pub struct RemotePool {
     shared: Arc<RemoteShared>,
     cfg: RemotePoolConfig,
+    /// `cfg.buckets` normalized (sorted, deduplicated, includes 1).
+    buckets: Vec<usize>,
     reader: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
@@ -821,16 +875,28 @@ impl RemotePool {
         cfg: &ModelConfig,
         rcfg: RemotePoolConfig,
     ) -> Result<Arc<RemotePool>> {
-        let mut hello = vec![rcfg.kinds.len() as u8];
+        let buckets = normalize_buckets(&rcfg.buckets);
+        // One HELLO entry (kind + bucket + fingerprint) per handshaken
+        // (kind, bucket) pair, fingerprinted from the local batch plan.
+        let mut entries: Vec<(PlanInput, usize)> =
+            Vec::with_capacity(rcfg.kinds.len() * buckets.len());
+        let mut hello = vec![0u8];
         for &kind in &rcfg.kinds {
-            hello.push(encode_kind(kind));
-            hello.extend_from_slice(&manifest_fingerprint(&plan_demand(cfg, kind)));
+            for &b in &buckets {
+                entries.push((kind, b));
+                hello.push(encode_kind(kind));
+                hello.extend_from_slice(&(b as u32).to_le_bytes());
+                hello.extend_from_slice(&manifest_fingerprint(&plan_demand_batch(
+                    cfg, kind, b,
+                )));
+            }
         }
+        hello[0] = entries.len() as u8;
         let dial = DialInfo {
             addr: addr.to_string(),
             psk: rcfg.psk.clone(),
             hello,
-            kinds: rcfg.kinds.clone(),
+            entries: entries.clone(),
             depth: rcfg.depth.max(1),
         };
         let stream = dial_dealer(&dial)?;
@@ -838,12 +904,12 @@ impl RemotePool {
         let reader_stream = stream.try_clone()?;
         let shared = Arc::new(RemoteShared {
             state: Mutex::new(RemoteState {
-                hidden: VecDeque::new(),
-                tokens: VecDeque::new(),
+                queues: entries.iter().map(|&e| (e, VecDeque::new())).collect(),
                 dead: false,
             }),
             cv: Condvar::new(),
             writer: Mutex::new(stream),
+            expected: Mutex::new(VecDeque::new()),
             stopping: AtomicBool::new(false),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -852,14 +918,15 @@ impl RemotePool {
             requested: AtomicU64::new(0),
             reconnects: AtomicU64::new(0),
             offline_bytes: AtomicU64::new(0),
-            pending_credit: [AtomicU64::new(0), AtomicU64::new(0)],
+            pending_credit: Mutex::new(BTreeMap::new()),
             pulls_sent: AtomicU64::new(0),
         });
 
-        // Standing credit: depth outstanding PULLs per kind; one
-        // replacement is issued per consumed bundle in `pop`.
-        for &kind in &rcfg.kinds {
-            shared.send_pull(kind, rcfg.depth.max(1) as u32);
+        // Standing credit: the scaled depth outstanding per (kind,
+        // bucket); replacements are issued (coalesced) per consumed
+        // bundle in `pop_batch`.
+        for &(kind, b) in &entries {
+            shared.send_pull(kind, b, bucket_depth(dial.depth, b) as u32);
         }
 
         let sh = shared.clone();
@@ -868,7 +935,12 @@ impl RemotePool {
             .spawn(move || reader_loop(sh, reader_stream, dial))
             .expect("spawn remote pool reader");
 
-        Ok(Arc::new(RemotePool { shared, cfg: rcfg, reader: Mutex::new(Some(reader)) }))
+        Ok(Arc::new(RemotePool {
+            shared,
+            cfg: rcfg,
+            buckets,
+            reader: Mutex::new(Some(reader)),
+        }))
     }
 
     /// Successful dealer re-dials since connect.
@@ -876,10 +948,10 @@ impl RemotePool {
         self.shared.reconnects.load(Ordering::Relaxed)
     }
 
-    /// Bundles currently prefetched locally (both kinds).
+    /// Bundles currently prefetched locally (every kind and bucket).
     pub fn local_depth(&self) -> usize {
         let st = self.shared.state.lock().unwrap();
-        st.hidden.len() + st.tokens.len()
+        st.queues.values().map(|q| q.len()).sum()
     }
 
     /// PULL frames written since connect. With batch PULL coalescing
@@ -889,10 +961,11 @@ impl RemotePool {
         self.shared.pulls_sent.load(Ordering::Relaxed)
     }
 
-    /// Coalescing flush threshold: half the prefetch depth, floor 1 —
-    /// the largest batch that still keeps ≥ depth/2 credit outstanding.
-    fn pull_flush_threshold(&self) -> u64 {
-        (self.cfg.depth as u64 / 2).max(1)
+    /// Coalescing flush threshold for one bucket: half its scaled
+    /// prefetch depth, floor 1 — the largest batch that still keeps
+    /// ≥ half the bucket's credit outstanding.
+    fn pull_flush_threshold(&self, bucket: usize) -> u64 {
+        (bucket_depth(self.cfg.depth.max(1), bucket) as u64 / 2).max(1)
     }
 }
 
@@ -924,17 +997,18 @@ fn redial_dealer(shared: &RemoteShared, dial: &DialInfo) -> Option<TcpStream> {
                     let mut w = shared.writer.lock().unwrap();
                     *w = stream;
                     // Credit stranded on the dead link never arrives;
-                    // reset the ledgers before re-issuing from scratch.
-                    for slot in &shared.pending_credit {
-                        slot.store(0, Ordering::Relaxed);
-                    }
+                    // reset the ledgers (and the routing FIFO of
+                    // bundles that will never come) before re-issuing
+                    // from scratch.
+                    shared.pending_credit.lock().unwrap().clear();
+                    shared.expected.lock().unwrap().clear();
                     shared
                         .requested
                         .store(shared.received.load(Ordering::Relaxed), Ordering::Relaxed);
                     shared.state.lock().unwrap().dead = false;
                 }
-                for &kind in &dial.kinds {
-                    shared.send_pull(kind, dial.depth as u32);
+                for &(kind, b) in &dial.entries {
+                    shared.send_pull(kind, b, bucket_depth(dial.depth, b) as u32);
                 }
                 shared.reconnects.fetch_add(1, Ordering::Relaxed);
                 eprintln!(
@@ -969,12 +1043,27 @@ fn reader_loop(shared: Arc<RemoteShared>, mut stream: TcpStream, dial: DialInfo)
             Ok((t, payload)) if t == msg::BUNDLE => match decode_bundle(&payload) {
                 Ok(b) => {
                     idle_strikes = 0;
+                    // Route by the credit this bundle repays (BUNDLEs
+                    // arrive strictly in PULL order; see `expected`).
+                    // An empty FIFO or a kind mismatch means the dealer
+                    // broke the credit protocol — poison, not outage.
+                    let slot = shared.expected.lock().unwrap().pop_front();
+                    let (kind, bucket) = match slot {
+                        Some(e) if e.0 == b.input => e,
+                        _ => {
+                            eprintln!(
+                                "remote pool: bundle outside credit order; degrading"
+                            );
+                            shared.mark_dead();
+                            return;
+                        }
+                    };
                     shared.received.fetch_add(1, Ordering::Relaxed);
                     shared
                         .offline_bytes
                         .fetch_add(b.words_per_party * 8, Ordering::Relaxed);
                     let mut st = shared.state.lock().unwrap();
-                    st.queue(b.input).push_back(b);
+                    st.queues.entry((kind, bucket)).or_default().push_back(b);
                     drop(st);
                     shared.cv.notify_all();
                 }
@@ -1050,23 +1139,32 @@ fn reader_loop(shared: Arc<RemoteShared>, mut stream: TcpStream, dial: DialInfo)
 
 impl BundleSource for RemotePool {
     fn pop(&self, kind: PlanInput) -> Option<SessionBundle> {
-        if !self.cfg.kinds.contains(&kind) {
+        self.pop_batch(kind, 1)
+    }
+
+    fn pop_batch(&self, kind: PlanInput, batch: usize) -> Option<SessionBundle> {
+        if !self.cfg.kinds.contains(&kind) || !self.buckets.contains(&batch) {
+            // Not handshaken for: the session degrades to seeded
+            // fallback, same contract as an unplanned PoolSet bucket.
             self.shared.misses.fetch_add(1, Ordering::Relaxed);
             return None;
         }
         let mut st = self.shared.state.lock().unwrap();
-        if st.queue(kind).front().is_some() {
+        let ready = st.queues.get(&(kind, batch)).is_some_and(|q| !q.is_empty());
+        if ready {
             self.shared.hits.fetch_add(1, Ordering::Relaxed);
         } else {
             self.shared.misses.fetch_add(1, Ordering::Relaxed);
         }
         loop {
-            if let Some(b) = st.queue(kind).pop_front() {
+            if let Some(b) =
+                st.queues.get_mut(&(kind, batch)).and_then(|q| q.pop_front())
+            {
                 drop(st);
                 self.shared.consumed.fetch_add(1, Ordering::Relaxed);
                 // Replace the spent credit — coalesced: one PULL frame
                 // carries several bundles' worth once enough accrues.
-                self.shared.credit_consumed(kind, self.pull_flush_threshold());
+                self.shared.credit_consumed(kind, batch, self.pull_flush_threshold(batch));
                 return Some(b);
             }
             if st.dead || self.shared.stopping.load(Ordering::Relaxed) {
@@ -1078,12 +1176,12 @@ impl BundleSource for RemotePool {
 
     fn try_pop(&self, kind: PlanInput) -> Option<SessionBundle> {
         let mut st = self.shared.state.lock().unwrap();
-        let b = st.queue(kind).pop_front()?;
+        let b = st.queues.get_mut(&(kind, 1)).and_then(|q| q.pop_front())?;
         drop(st);
         // Internal transfer: replace the credit (coalesced) but leave
         // consumer accounting (consumed/hits) to the stage that hands
         // the bundle out.
-        self.shared.credit_consumed(kind, self.pull_flush_threshold());
+        self.shared.credit_consumed(kind, 1, self.pull_flush_threshold(1));
         Some(b)
     }
 
@@ -1116,10 +1214,10 @@ impl BundleSource for RemotePool {
 
     fn warm(&self, n: usize) {
         // Block until `n` bundles (clamped to the prefetch credit) have
-        // landed locally, counting both kinds — startup smoothing only.
+        // landed locally, counting every queue — startup smoothing only.
         let want = n.min(self.cfg.depth.max(1));
         let mut st = self.shared.state.lock().unwrap();
-        while st.tokens.len() + st.hidden.len() < want {
+        while st.queues.values().map(|q| q.len()).sum::<usize>() < want {
             if st.dead || self.shared.stopping.load(Ordering::Relaxed) {
                 return;
             }
@@ -1185,7 +1283,7 @@ mod tests {
         let pool = RemotePool::connect(
             &addr.to_string(),
             &tiny(),
-            RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens], psk: None },
+            RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens], buckets: vec![1], psk: None },
         )
         .expect("connect");
         let b1 = pool.pop(PlanInput::Tokens).expect("bundle 1");
@@ -1213,7 +1311,7 @@ mod tests {
         let pool = RemotePool::connect(
             &addr.to_string(),
             &tiny(),
-            RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens], psk: None },
+            RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens], buckets: vec![1], psk: None },
         )
         .expect("connect");
         assert!(pool.pop(PlanInput::Tokens).is_some());
@@ -1234,7 +1332,7 @@ mod tests {
         let pool = RemotePool::connect(
             &addr.to_string(),
             &tiny(),
-            RemotePoolConfig { depth: 4, kinds: vec![PlanInput::Tokens], psk: None },
+            RemotePoolConfig { depth: 4, kinds: vec![PlanInput::Tokens], buckets: vec![1], psk: None },
         )
         .expect("connect");
         for i in 1..=6u64 {
@@ -1275,7 +1373,7 @@ mod tests {
         let pool = RemotePool::connect(
             &addr.to_string(),
             &tiny(),
-            RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens], psk: None },
+            RemotePoolConfig { depth: 2, kinds: vec![PlanInput::Tokens], buckets: vec![1], psk: None },
         )
         .expect("connect");
         pool.warm(2);
@@ -1311,7 +1409,7 @@ mod tests {
         let err = RemotePool::connect(
             &addr.to_string(),
             &tiny(),
-            RemotePoolConfig { depth: 1, kinds: vec![PlanInput::Tokens], psk: None },
+            RemotePoolConfig { depth: 1, kinds: vec![PlanInput::Tokens], buckets: vec![1], psk: None },
         )
         .expect_err("keyless pull client");
         assert!(err.to_string().contains("pre-shared key"), "{err}");
@@ -1325,6 +1423,7 @@ mod tests {
             RemotePoolConfig {
                 depth: 1,
                 kinds: vec![PlanInput::Tokens],
+                buckets: vec![1],
                 psk: Some("hunter2".to_string()),
             },
         )
@@ -1332,6 +1431,81 @@ mod tests {
         assert!(pool.pop(PlanInput::Tokens).is_some());
         pool.stop();
         pools.stop();
+    }
+
+    #[test]
+    fn bucketed_prefetch_serves_batch_bundles_over_the_wire() {
+        // Dealer planned for buckets {1, 2}; a client handshaken for
+        // both pulls batch bundles that match the dealer's generation
+        // exactly, while bucket-1 pops keep the legacy prefix.
+        let pools = PoolSet::start_with_buckets(
+            &tiny(),
+            "rp-b",
+            PoolConfig {
+                target_depth: 4,
+                producers: 1,
+                max_bundles: Some(8),
+                ..PoolConfig::default()
+            },
+            false,
+            &[1, 2],
+        );
+        let addr = spawn_dealer(pools.clone()).expect("spawn dealer");
+        let pool = RemotePool::connect(
+            &addr.to_string(),
+            &tiny(),
+            RemotePoolConfig {
+                depth: 2,
+                kinds: vec![PlanInput::Tokens],
+                buckets: vec![1, 2],
+                psk: None,
+            },
+        )
+        .expect("connect");
+        let b2 = pool.pop_batch(PlanInput::Tokens, 2).expect("batch bundle");
+        assert_eq!(b2.session, "rp-b/b2-1", "bucket-2 bundles come from the b2 pool");
+        let manifest =
+            crate::offline::planner::plan_demand_batch(&tiny(), PlanInput::Tokens, 2);
+        let (p0, p1) = crate::offline::pool::generate_bundle(
+            &mut crate::sharing::provider::FastCrGen::from_session_fast("rp-b/b2-1"),
+            &manifest,
+        );
+        assert_eq!(b2.p0, p0, "batch bundle matches dealer-side generation");
+        assert_eq!(b2.p1, p1);
+        let b1 = pool.pop(PlanInput::Tokens).expect("single bundle");
+        assert_eq!(b1.session, "rp-b-1", "bucket 1 keeps the legacy prefix");
+        // A bucket the client never handshook degrades to None + miss.
+        assert!(pool.pop_batch(PlanInput::Tokens, 4).is_none());
+        assert!(pool.snapshot().misses >= 1);
+        pool.stop();
+        pools.stop();
+    }
+
+    #[test]
+    fn pre_bucket_hello_is_rejected_with_a_clear_error() {
+        // A legacy 33-byte-entry HELLO (kind + fingerprint, no bucket)
+        // must be refused at the handshake — same WIRE_VERSION, so the
+        // length check is the compatibility gate.
+        let (addr, dealer_pools) = start_dealer("rp-l", 2);
+        let mut stream = TcpStream::connect(addr.to_string()).expect("connect");
+        client_auth(&mut stream, None).expect("auth");
+        let mut hello = vec![1u8];
+        hello.push(encode_kind(PlanInput::Tokens));
+        hello.extend_from_slice(&manifest_fingerprint(&plan_demand_batch(
+            &tiny(),
+            PlanInput::Tokens,
+            1,
+        )));
+        assert_eq!(hello.len(), 1 + 33);
+        write_frame(&mut stream, msg::HELLO, &hello).expect("write HELLO");
+        match read_frame(&mut stream).expect("reply") {
+            (t, p) if t == msg::ERR => {
+                let m = String::from_utf8_lossy(&p).into_owned();
+                assert!(m.contains("without batch buckets"), "{m}");
+            }
+            (t, _) => panic!("expected ERR, got frame type {t}"),
+        }
+        dealer_pools.stop();
     }
 
     #[test]

@@ -24,6 +24,7 @@
 use crate::offline::planner::{plan_demand_batch, PlanInput};
 use crate::offline::pool::{PoolConfig, PoolSnapshot, SessionBundle, TuplePool};
 use crate::nn::config::ModelConfig;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// A supplier of pregenerated per-session tuple bundles.
@@ -131,6 +132,13 @@ pub trait BundleSource: Send + Sync {
 pub struct PoolSet {
     /// (kind, bucket) → pool; a handful of entries, scanned linearly.
     pools: Vec<(PlanInput, usize, Arc<TuplePool>)>,
+    /// Bucket most recently served per kind (`[Tokens, Hidden]`; 0 =
+    /// nothing popped yet). Routes [`BundleSource::note_arrival`] to
+    /// the pool that is actually absorbing demand: under cross-request
+    /// batching the coordinator drains arrivals into bucket-`b` pops,
+    /// so feeding the adaptive-depth EWMA to the bucket-1 pool would
+    /// deepen a pool nobody drains while the served pool starves.
+    last_bucket: [AtomicUsize; 2],
 }
 
 impl PoolSet {
@@ -205,7 +213,15 @@ impl PoolSet {
                 ));
             }
         }
-        Arc::new(PoolSet { pools })
+        Arc::new(PoolSet { pools, last_bucket: [AtomicUsize::new(0), AtomicUsize::new(0)] })
+    }
+
+    /// Index into per-kind state arrays.
+    fn kind_slot(kind: PlanInput) -> usize {
+        match kind {
+            PlanInput::Tokens => 0,
+            PlanInput::Hidden => 1,
+        }
     }
 
     /// The bucket-1 pool backing `kind`, if planned (the legacy
@@ -228,6 +244,20 @@ impl PoolSet {
         kind: PlanInput,
     ) -> Option<&crate::offline::planner::TupleManifest> {
         self.pool(kind).map(|p| p.manifest())
+    }
+
+    /// The manifest bundles of (`kind`, `bucket`) satisfy, if planned —
+    /// the dealer handshake verifies each HELLO entry's fingerprint
+    /// against this ([`manifest_fingerprint`] covers the manifest's
+    /// `batch`, so per-bucket fingerprints are distinct).
+    ///
+    /// [`manifest_fingerprint`]: crate::offline::wire::manifest_fingerprint
+    pub fn manifest_for_batch(
+        &self,
+        kind: PlanInput,
+        bucket: usize,
+    ) -> Option<&crate::offline::planner::TupleManifest> {
+        self.pool_for(kind, bucket).map(|p| p.manifest())
     }
 
     /// The batch buckets planned for `kind`, ascending.
@@ -272,7 +302,12 @@ impl BundleSource for PoolSet {
 
     fn pop_batch(&self, kind: PlanInput, batch: usize) -> Option<SessionBundle> {
         match self.pool_for(kind, batch) {
-            Some(p) => BundleSource::pop_batch(p.as_ref(), kind, batch),
+            Some(p) => {
+                // Remember which bucket demand lands on so arrivals
+                // steer that pool's adaptive depth (see `last_bucket`).
+                self.last_bucket[Self::kind_slot(kind)].store(batch, Ordering::Relaxed);
+                BundleSource::pop_batch(p.as_ref(), kind, batch)
+            }
             None => {
                 // Unplanned (kind, bucket): count the degraded session
                 // where this set's consumers will see it.
@@ -287,9 +322,16 @@ impl BundleSource for PoolSet {
     }
 
     fn note_arrival(&self, kind: PlanInput) {
-        // The adaptive-depth signal feeds the bucket-1 pool (arrival
-        // counting predates batching; batch pools are sized statically).
-        if let Some(p) = self.pool(kind) {
+        // Feed the adaptive-depth signal to the (kind, bucket) pool
+        // that served the most recent pop — the pool actual demand
+        // drains from. Before any pop (or if that bucket was never
+        // planned) fall back to bucket 1.
+        let last = self.last_bucket[Self::kind_slot(kind)].load(Ordering::Relaxed);
+        let pool = match last {
+            0 => self.pool(kind),
+            b => self.pool_for(kind, b).or_else(|| self.pool(kind)),
+        };
+        if let Some(p) = pool {
             p.note_arrival();
         }
     }
@@ -418,6 +460,42 @@ mod tests {
         // An unplanned bucket degrades to None and counts a miss.
         assert!(set.pop_batch(PlanInput::Tokens, 4).is_none());
         assert!(set.snapshot().misses >= 1);
+        set.stop();
+    }
+
+    #[test]
+    fn arrivals_feed_the_adaptive_depth_of_the_bucket_being_served() {
+        let cfg = ModelConfig::tiny(8, Framework::SecFormer);
+        let set = PoolSet::start_with_buckets(
+            &cfg,
+            "ps-ar",
+            PoolConfig {
+                target_depth: 1,
+                max_depth: 6,
+                adaptive: true,
+                producers: 1,
+                ..PoolConfig::default()
+            },
+            false,
+            &[2],
+        );
+        let b1 = set.pool_for(PlanInput::Tokens, 1).expect("bucket-1 pool").clone();
+        let b2 = set.pool_for(PlanInput::Tokens, 2).expect("bucket-2 pool").clone();
+        // Before any pop, arrivals route to bucket 1 (the legacy path).
+        for _ in 0..32 {
+            set.note_arrival(PlanInput::Tokens);
+        }
+        assert_eq!(b1.target_depth(), 6, "pre-pop arrivals deepen bucket 1");
+        assert_eq!(b2.target_depth(), 1);
+        // Once demand drains through bucket 2, arrivals follow it. The
+        // bucket-2 pool's depth clamp is scaled by the bucket
+        // (max_depth / 2 = 3 bundles ≈ 6 request-equivalents).
+        set.warm(1);
+        set.pop_batch(PlanInput::Tokens, 2).expect("bucket-2 bundle");
+        for _ in 0..32 {
+            set.note_arrival(PlanInput::Tokens);
+        }
+        assert_eq!(b2.target_depth(), 3, "post-pop arrivals deepen the served bucket");
         set.stop();
     }
 }

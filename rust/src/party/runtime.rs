@@ -45,12 +45,13 @@ use crate::offline::provider::PooledProvider;
 use crate::offline::source::BundleSource;
 use crate::offline::wire::{client_auth, msg, read_frame, server_auth, write_frame, FrameError};
 use crate::party::wire::{
-    config_fingerprint, decode_ack, decode_msg, decode_result, decode_start,
-    decode_start_batch, encode_ack, encode_msg, encode_result, encode_start,
+    config_fingerprint, decode_ack, decode_msg, decode_result, decode_shed, decode_start,
+    decode_start_batch, encode_ack, encode_msg, encode_result, encode_shed, encode_start,
     encode_start_batch, pmsg, BatchSessionStart, SessionStart, INPUT_HIDDEN, MODE_DEALER,
     MODE_POOLED,
 };
 use crate::proto::ctx::PartyCtx;
+use crate::sched::{ComputeGate, GatePermit};
 use crate::sharing::dealer::{DealerServer, Party1Provider};
 use crate::sharing::provider::{FastSeededProvider, Provider};
 use anyhow::{anyhow, bail, Context, Result};
@@ -92,6 +93,18 @@ pub struct PartyHostConfig {
     /// (`party-serve --metrics-http`), same exposition body as the
     /// native-wire METRICS query.
     pub metrics_http: Option<String>,
+    /// Admission cap on concurrent sessions (`party-serve
+    /// --max-sessions`): a `START`/`START_BATCH` arriving while this
+    /// many session workers are alive is answered with a `SHED` frame
+    /// (the client surfaces [`SessionError::Overloaded`]) instead of
+    /// spawning a worker. `0` (the default) = unbounded, the
+    /// pre-scheduler behaviour.
+    pub max_sessions: usize,
+    /// Compute permits in the host's session scheduler
+    /// ([`crate::sched`]): how many admitted sessions may run protocol
+    /// compute simultaneously; the rest overlap their communication or
+    /// wait. `0` (the default) = the machine's available parallelism.
+    pub compute_permits: usize,
 }
 
 impl Default for PartyHostConfig {
@@ -103,6 +116,8 @@ impl Default for PartyHostConfig {
             trace_dir: None,
             ledger: true,
             metrics_http: None,
+            max_sessions: 0,
+            compute_permits: 0,
         }
     }
 }
@@ -125,10 +140,16 @@ pub struct PartyHostStats {
     /// Sessions torn down without a `RESULT` — the coordinator vanished
     /// mid-protocol or a typed session error unwound the worker.
     pub sessions_failed: AtomicU64,
-    /// Session worker threads alive right now.
+    /// Session worker threads alive right now. Doubles as the admission
+    /// counter: the connection demux reserves a slot here (CAS against
+    /// `PartyHostConfig::max_sessions`) *before* spawning the worker,
+    /// so a burst of concurrent STARTs cannot overshoot the cap.
     pub active_sessions: AtomicU64,
     /// Connections alive right now.
     pub active_conns: AtomicU64,
+    /// Sessions refused at admission with a `SHED` frame
+    /// (`--max-sessions` cap reached).
+    pub sessions_shed: AtomicU64,
 }
 
 impl PartyHostStats {
@@ -149,6 +170,10 @@ struct HostCtx {
     stats: Arc<PartyHostStats>,
     tracer: Arc<Tracer>,
     ledger: Arc<Ledger>,
+    /// The host's compute gate: admitted sessions contend here for
+    /// `compute_permits` slots and park across every wire wait, so one
+    /// session's compute overlaps another's communication.
+    gate: Arc<ComputeGate>,
     started: Instant,
 }
 
@@ -205,6 +230,12 @@ pub fn party_accept_loop_stats(
             eprintln!("party: cannot open ledger export in {dir}: {e}");
         }
     }
+    let permits = if host.compute_permits == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        host.compute_permits
+    };
+    let gate = ComputeGate::new(permits);
     let ctx = Arc::new(HostCtx {
         cfg,
         shares1,
@@ -214,6 +245,7 @@ pub fn party_accept_loop_stats(
         stats,
         tracer,
         ledger,
+        gate,
         started: Instant::now(),
     });
     // The accept thread is detached and process-lived, like this loop.
@@ -376,6 +408,19 @@ fn party_conn_demux(
                 } else {
                     decode_start_batch(&payload)?
                 };
+                // Admission control: reserve a session slot (CAS on the
+                // live gauge) before anything is registered or spawned.
+                // A refused session costs the host one SHED frame and
+                // nothing else — no thread, no route, no bundle pop —
+                // and the client surfaces a typed `Overloaded`.
+                if !reserve_session_slot(&ctx.stats, ctx.host.max_sessions) {
+                    ctx.stats.sessions_shed.fetch_add(1, Ordering::Relaxed);
+                    let mut w = lock_or_recover(writer);
+                    if write_frame(&mut *w, pmsg::SHED, &encode_shed(id)).is_err() {
+                        return Ok(());
+                    }
+                    continue;
+                }
                 // Register the inbound queue BEFORE acking, so no MSG
                 // can race the session thread's setup.
                 let (tx, rx) = channel();
@@ -384,13 +429,19 @@ fn party_conn_demux(
                 let writer2 = writer.clone();
                 let stash2 = stash.clone();
                 let sessions2 = sessions.clone();
-                std::thread::Builder::new()
+                let spawned = std::thread::Builder::new()
                     .name(format!("party-session-{id}"))
                     .spawn(move || {
                         run_party_session(&ctx2, &writer2, &stash2, id, start, rx);
                         lock_or_recover(&sessions2).remove(&id);
-                    })
-                    .context("spawn party session")?;
+                    });
+                if let Err(e) = spawned {
+                    // Release the reserved slot — the worker that would
+                    // have decremented it never existed.
+                    ctx.stats.active_sessions.fetch_sub(1, Ordering::Relaxed);
+                    lock_or_recover(sessions).remove(&id);
+                    return Err(e).context("spawn party session");
+                }
             }
             pmsg::MSG => {
                 let (id, words) = decode_msg(&payload)?;
@@ -439,6 +490,26 @@ fn party_conn_demux(
                 send_err(stream, "unexpected message");
                 bail!("unexpected message type {other} after handshake");
             }
+        }
+    }
+}
+
+/// Reserve one concurrent-session slot against `cap` (0 = unbounded).
+/// CAS on the live `active_sessions` gauge: concurrent demux threads
+/// (one per connection) race their reservations, and the loser of a
+/// full-capacity race sheds instead of overshooting the cap.
+fn reserve_session_slot(stats: &PartyHostStats, cap: usize) -> bool {
+    loop {
+        let cur = stats.active_sessions.load(Ordering::Relaxed);
+        if cap > 0 && cur >= cap as u64 {
+            return false;
+        }
+        if stats
+            .active_sessions
+            .compare_exchange(cur, cur + 1, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            return true;
         }
     }
 }
@@ -528,6 +599,28 @@ fn render_party_metrics(ctx: &HostCtx) -> String {
         "secformer_sessions_failed_total",
         "Sessions torn down without a RESULT.",
         ctx.stats.sessions_failed.load(Ordering::Relaxed) as f64,
+    );
+    r.counter(
+        "secformer_sessions_shed_total",
+        "STARTs refused by admission control (SHED, no worker spawned).",
+        ctx.stats.sessions_shed.load(Ordering::Relaxed) as f64,
+    );
+    let g = ctx.gate.snapshot();
+    r.gauge(
+        "secformer_sched_permits",
+        "Compute permits in the scheduler gate.",
+        g.permits as f64,
+    );
+    r.gauge_rows(
+        "secformer_sched_sessions",
+        "Session workers by scheduler state: running (holding a \
+         compute permit), parked (permit loaned out across a wire \
+         wait), waiting (queued for a permit).",
+        &[
+            ("state=\"running\"".to_string(), g.running as f64),
+            ("state=\"parked\"".to_string(), g.parked as f64),
+            ("state=\"waiting\"".to_string(), g.waiting as f64),
+        ],
     );
     r.gauge(
         "secformer_active_sessions",
@@ -713,7 +806,9 @@ fn run_party_session(
     rx: Receiver<Vec<u64>>,
 ) {
     ctx.stats.sessions_started.fetch_add(1, Ordering::Relaxed);
-    ctx.stats.active_sessions.fetch_add(1, Ordering::Relaxed);
+    // `active_sessions` was already incremented by the demux's
+    // admission reservation (`reserve_session_slot`); this function
+    // owns the decrement.
     // The session body runs under a catch_session boundary: a
     // coordinator that vanishes mid-protocol unwinds the worker with a
     // typed error instead of a thread-killing panic, and cleanup (the
@@ -784,11 +879,11 @@ fn run_party_session_body(
             eprintln!(
                 "party-serve: pooled batch session (B={batch}) found no matching \
                  batch-sized bundle; it runs on seeded fallback and the coordinator's \
-                 batch bundle goes unused. Common causes: this host's source serves \
-                 single-session bundles only (--dealer-addr — run the coordinator with \
-                 --batch-buckets 1 there), --batch-buckets/--namespace not mirroring \
-                 the coordinator's, or an exhausted bundle bound. Warned once; further \
-                 batch misses are not logged."
+                 batch bundle goes unused. Common causes: the dealer (`dealer-serve`) \
+                 was started without a matching --batch-buckets list, \
+                 --batch-buckets/--namespace not mirroring the coordinator's, or an \
+                 exhausted bundle bound. Warned once; further batch misses are not \
+                 logged."
             );
         }
     }
@@ -855,6 +950,12 @@ fn run_party_session_body(
     // bytes are this party's sends).
     let sl = ctx.ledger.session();
     pctx.ledger = sl.clone();
+    // Compute permit: acquired only now — the bundle match, ACK and
+    // provider setup above may block on pool/socket I/O and must not
+    // hold a compute slot. Every wire wait inside the forward parks
+    // (loans the permit out) via `PartyCtx::recv_parked`, and the
+    // `drop(pctx)` below releases it before the RESULT write.
+    pctx.gate = Some(GatePermit::acquire(&ctx.gate));
     let t_dispatch = Instant::now();
     let out1 = bert_forward_batch(&mut pctx, &ctx.cfg, ctx.shares1.as_ref(), &in1s);
     ctx.tracer.record(&start.label, "phase:dispatch", t_dispatch, Instant::now());
@@ -923,6 +1024,7 @@ impl std::error::Error for DialError {}
 
 enum SessionCtrl {
     Ack(bool),
+    Shed,
     Result { offline_bytes: u64, offline_msgs: u64, out1: Vec<u64> },
 }
 
@@ -1040,6 +1142,9 @@ impl RemoteSession {
             Ok(SessionCtrl::Ack(_)) => {
                 Err(SessionError::ProtocolViolation("party sent a second ACK".into()))
             }
+            Ok(SessionCtrl::Shed) => Err(SessionError::ProtocolViolation(
+                "party shed an already-acked session".into(),
+            )),
             Err(_) => Err(self.shared.reason()),
         }
     }
@@ -1212,6 +1317,12 @@ impl RemoteParty {
         }
         let use_pool = match ctrl_rx.recv() {
             Ok(SessionCtrl::Ack(v)) => v,
+            Ok(SessionCtrl::Shed) => {
+                // Admission control refused the session before any
+                // worker existed; the link itself is healthy.
+                lock_or_recover(&self.shared.sessions).remove(&id);
+                return Err(SessionError::Overloaded);
+            }
             Ok(SessionCtrl::Result { .. }) => {
                 lock_or_recover(&self.shared.sessions).remove(&id);
                 return Err(SessionError::ProtocolViolation(
@@ -1296,6 +1407,21 @@ fn reader_loop(shared: Arc<PartyShared>, mut stream: TcpStream, opts: LinkOption
                     eprintln!("remote party: undecodable ACK ({e}); closing");
                     shared.mark_dead(SessionError::ProtocolViolation(format!(
                         "undecodable ACK: {e}"
+                    )));
+                    return;
+                }
+            },
+            Ok((t, payload)) if t == pmsg::SHED => match decode_shed(&payload) {
+                Ok(id) => {
+                    let sessions = lock_or_recover(&shared.sessions);
+                    if let Some(r) = sessions.get(&id) {
+                        let _ = r.ctrl_tx.send(SessionCtrl::Shed);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("remote party: undecodable SHED ({e}); closing");
+                    shared.mark_dead(SessionError::ProtocolViolation(format!(
+                        "undecodable SHED: {e}"
                     )));
                     return;
                 }

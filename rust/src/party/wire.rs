@@ -4,7 +4,7 @@
 //! Frames reuse the versioned/checksummed layout of
 //! [`crate::offline::wire`] (magic `SBW1`, FNV-1a payload checksum) so
 //! one wire toolkit serves every TCP surface in the codebase; the
-//! party protocol claims its own message-type range (16–27) so a
+//! party protocol claims its own message-type range (16–29) so a
 //! coordinator that dials a dealer port (or vice versa) fails on the
 //! first frame instead of desyncing.
 //!
@@ -88,6 +88,12 @@ pub mod pmsg {
     /// aggregate; reply: JSONL cost-ledger rows). Answered before
     /// HELLO, like [`METRICS`].
     pub const LEDGER: u8 = 28;
+    /// Server → client: the host's admission control shed this session
+    /// (`--max-sessions` cap reached) *instead of* an `ACK` — no
+    /// session thread exists and no further frames for this id will
+    /// follow. The client surfaces it as a typed
+    /// [`crate::net::error::SessionError::Overloaded`].
+    pub const SHED: u8 = 29;
 }
 
 /// Session offline mode tag: full dealer protocol (S1 runs a local T).
@@ -315,6 +321,19 @@ pub fn decode_ack(payload: &[u8]) -> Result<(u64, bool)> {
     Ok((session_id, use_pool))
 }
 
+/// Encode a `SHED` payload (admission refusal for one session).
+pub fn encode_shed(session_id: u64) -> Vec<u8> {
+    session_id.to_le_bytes().to_vec()
+}
+
+/// Decode a `SHED` payload into its session id.
+pub fn decode_shed(payload: &[u8]) -> Result<u64> {
+    let mut c = Cursor::new(payload);
+    let session_id = c.u64()?;
+    c.done()?;
+    Ok(session_id)
+}
+
 /// Encode a `MSG` payload (one online protocol message).
 pub fn encode_msg(session_id: u64, words: &[u64]) -> Vec<u8> {
     let mut buf = Vec::with_capacity(16 + words.len() * 8);
@@ -385,6 +404,9 @@ mod tests {
         assert_eq!(got.input, start.input);
 
         assert_eq!(decode_ack(&encode_ack(3, true)).unwrap(), (3, true));
+        assert_eq!(decode_shed(&encode_shed(11)).unwrap(), 11);
+        assert!(decode_shed(&encode_shed(11)[..7]).is_err(), "truncated SHED decoded");
+        assert!(decode_shed(&[0; 9]).is_err(), "oversized SHED decoded");
         assert_eq!(
             decode_msg(&encode_msg(5, &[7, 8])).unwrap(),
             (5, vec![7, 8])

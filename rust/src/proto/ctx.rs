@@ -4,6 +4,7 @@ use crate::core::rng::Xoshiro;
 use crate::net::stats::{CommStats, StatsHandle};
 use crate::net::transport::Transport;
 use crate::obs::ledger::SessionLedger;
+use crate::sched::GatePermit;
 use crate::sharing::provider::Provider;
 use std::sync::Arc;
 
@@ -21,6 +22,13 @@ pub struct PartyCtx {
     /// each exchange; when attached, both exchange funnels attribute
     /// their round + bytes to the innermost open op scope.
     pub ledger: Option<Arc<SessionLedger>>,
+    /// Optional compute-pool permit (the session scheduler,
+    /// [`crate::sched`]). When attached, every blocking receive in the
+    /// exchange funnels releases the permit for the duration of the
+    /// wire wait — compute of another session overlaps this session's
+    /// communication. `None` (standalone protocol tests, the dealer
+    /// thread) keeps the pre-scheduler blocking behaviour.
+    pub gate: Option<GatePermit>,
 }
 
 impl PartyCtx {
@@ -37,6 +45,21 @@ impl PartyCtx {
             rng: Xoshiro::seed_from(rng_seed ^ (0xC0FFEE << id)),
             stats: CommStats::new_handle(),
             ledger: None,
+            gate: None,
+        }
+    }
+
+    /// Receive through the scheduler seam: with a gate attached the
+    /// compute permit is loaned out for the duration of the blocking
+    /// receive (the session "parks"; see [`crate::sched`]), re-acquired
+    /// FIFO once the peer's buffer arrives. The permit wait lands
+    /// inside the caller's transport timing window, so the phase
+    /// partition (Σ phases ≈ total) is preserved by construction.
+    fn recv_parked(&self) -> Vec<u64> {
+        let peer = &self.peer;
+        match &self.gate {
+            Some(g) => g.while_parked(|| peer.recv()),
+            None => peer.recv(),
         }
     }
 
@@ -49,7 +72,7 @@ impl PartyCtx {
     pub fn exchange(&mut self, data: &[u64]) -> Vec<u64> {
         let t0 = std::time::Instant::now();
         self.peer.send(data.to_vec());
-        let r = self.peer.recv();
+        let r = self.recv_parked();
         self.stats.record_transport_nanos(t0.elapsed().as_nanos() as u64);
         self.stats.record_round(data.len() as u64 * 8);
         if let Some(l) = &self.ledger {
@@ -69,7 +92,7 @@ impl PartyCtx {
         }
         let t0 = std::time::Instant::now();
         self.peer.send(msg);
-        let r = self.peer.recv();
+        let r = self.recv_parked();
         self.stats.record_transport_nanos(t0.elapsed().as_nanos() as u64);
         self.stats.record_round(total as u64 * 8);
         if let Some(l) = &self.ledger {

@@ -1,0 +1,410 @@
+//! Event-driven session scheduler: overlap one session's compute with
+//! another's communication.
+//!
+//! SecFormer's online phase is round-dominated — every nonlinear
+//! protocol (Softmax, GeLU, LayerNorm) is a short burst of local ring
+//! compute followed by a communication round. With a blocking OS thread
+//! per in-flight session, the CPU sits idle during each session's wire
+//! wait and concurrency is capped at thread-pool size.
+//!
+//! This module keeps OS threads as the *continuation carriers* (a
+//! thread blocked on its per-session inbound channel IS a parked
+//! continuation; the existing reader/demux threads are the readiness
+//! reactor) but decouples "sessions in flight" from "sessions
+//! computing": a fixed-size [`ComputeGate`] permit pool bounds how many
+//! sessions run ring compute at once, and the round-state machine lives
+//! at the `PartyCtx::exchange` seam — when session A submits a round's
+//! outbound frames, it *releases its compute permit for the duration of
+//! the blocking receive* ([`GatePermit::while_parked`]), so the
+//! scheduler immediately hands the compute slot to session B's ready
+//! round. In-flight sessions (`--max-sessions`) can therefore far
+//! exceed compute permits without oversubscribing cores, and the
+//! latency of one session's transport is hidden behind another's
+//! compute — the PUMA-style pipelining gap named in ROADMAP §3.
+//!
+//! ## Parking discipline
+//!
+//! A session's life under the gate is a three-state machine:
+//!
+//! ```text
+//!          ┌─────────┐ acquire ┌─────────┐  send; park   ┌────────┐
+//!  submit →│  READY  │────────→│ RUNNING │──────────────→│ PARKED │
+//!          └─────────┘ (FIFO)  └─────────┘               └────────┘
+//!               ↑                   │  finish                 │
+//!               │                   ▼                    recv complete
+//!               │              (permit released)              │
+//!               └─────────────────────────────────────────────┘
+//! ```
+//!
+//! Acquisition is strictly FIFO (a ticket lock): a parked session that
+//! becomes ready re-queues behind every session already waiting, so no
+//! chatty session can starve the queue. The permit is released *before*
+//! the blocking receive and re-acquired *after* it, which makes the
+//! discipline deadlock-free by construction — a permit is never held
+//! across a wait for the peer, so even a single permit makes two-party
+//! ping-pong progress.
+//!
+//! ## Panic safety
+//!
+//! Sessions abort by typed unwind ([`crate::net::error::abort_session`]).
+//! [`GatePermit`] tracks whether it holds a permit at unwind time: a
+//! panic while parked (the common case — `recv` aborting on link loss)
+//! must NOT release a permit it does not hold, and a panic while
+//! running must release exactly one. Both are covered by tests below.
+//!
+//! ## Backpressure
+//!
+//! The gate bounds *compute*; admission control bounds *memory*. The
+//! coordinator's submit queue and the party host's session table are
+//! bounded separately (`--queue-cap`, `--max-sessions`) and shed excess
+//! load with the typed, non-retryable
+//! [`crate::net::error::SessionError::Overloaded`] instead of growing
+//! an unbounded `VecDeque`.
+
+#![warn(missing_docs)]
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::core::sync::{lock_or_recover, wait_or_recover};
+
+/// FIFO ticket queue + permit count. `now_serving` only advances when
+/// the head ticket actually takes a permit, so wakeup order is the
+/// ticket order regardless of which waiter the OS resumes first.
+struct GateState {
+    /// Permits not currently held.
+    available: usize,
+    /// Next ticket to hand out.
+    next_ticket: u64,
+    /// Ticket currently allowed to take a permit.
+    now_serving: u64,
+}
+
+/// A fixed-size pool of compute permits with strict FIFO admission.
+///
+/// One gate is shared by every session of a role (all coordinator
+/// worker sessions, or all party-host sessions); its permit count is
+/// the compute parallelism (defaults to the worker count), while the
+/// number of *in-flight* sessions is bounded separately by admission
+/// control. See the module docs for the scheduling discipline.
+pub struct ComputeGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+    permits: usize,
+    /// Sessions currently holding a permit (running ring compute).
+    running: AtomicUsize,
+    /// Sessions parked in a wire wait (permit released).
+    parked: AtomicUsize,
+    /// Sessions queued for a permit (ready but not yet running).
+    waiting: AtomicUsize,
+}
+
+/// Point-in-time scheduler telemetry, rendered as gauges by both the
+/// coordinator and the party host.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GateSnapshot {
+    /// Total compute permits (the configured compute parallelism).
+    pub permits: usize,
+    /// Permits held right now (compute-pool utilization numerator).
+    pub running: usize,
+    /// Sessions parked in a transport wait right now.
+    pub parked: usize,
+    /// Sessions waiting in the ready queue right now.
+    pub waiting: usize,
+}
+
+impl ComputeGate {
+    /// A gate with `permits` compute slots (clamped to at least 1).
+    pub fn new(permits: usize) -> Arc<ComputeGate> {
+        let permits = permits.max(1);
+        Arc::new(ComputeGate {
+            state: Mutex::new(GateState { available: permits, next_ticket: 0, now_serving: 0 }),
+            cv: Condvar::new(),
+            permits,
+            running: AtomicUsize::new(0),
+            parked: AtomicUsize::new(0),
+            waiting: AtomicUsize::new(0),
+        })
+    }
+
+    /// Total permits this gate was built with.
+    pub fn permits(&self) -> usize {
+        self.permits
+    }
+
+    /// Current gauges (lock-free reads of the atomics).
+    pub fn snapshot(&self) -> GateSnapshot {
+        GateSnapshot {
+            permits: self.permits,
+            running: self.running.load(Ordering::Relaxed),
+            parked: self.parked.load(Ordering::Relaxed),
+            waiting: self.waiting.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Block until this caller's FIFO turn comes up AND a permit is
+    /// free, then take it.
+    fn acquire_raw(&self) {
+        self.waiting.fetch_add(1, Ordering::Relaxed);
+        let mut st = lock_or_recover(&self.state);
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        while st.now_serving != ticket || st.available == 0 {
+            st = wait_or_recover(&self.cv, st);
+        }
+        st.available -= 1;
+        st.now_serving += 1;
+        drop(st);
+        self.waiting.fetch_sub(1, Ordering::Relaxed);
+        self.running.fetch_add(1, Ordering::Relaxed);
+        // The next ticket may already be able to run (available > 0
+        // when several permits exist), so wake the queue.
+        self.cv.notify_all();
+    }
+
+    /// Return one permit and wake the head of the queue.
+    fn release_raw(&self) {
+        let mut st = lock_or_recover(&self.state);
+        st.available += 1;
+        drop(st);
+        self.running.fetch_sub(1, Ordering::Relaxed);
+        self.cv.notify_all();
+    }
+}
+
+/// RAII guard for the parked-sessions gauge: decremented on drop so an
+/// unwinding `recv` (link loss mid-park) still zeroes the gauge.
+struct ParkedGuard<'a> {
+    gate: &'a ComputeGate,
+}
+
+impl<'a> ParkedGuard<'a> {
+    fn new(gate: &'a ComputeGate) -> Self {
+        gate.parked.fetch_add(1, Ordering::Relaxed);
+        ParkedGuard { gate }
+    }
+}
+
+impl Drop for ParkedGuard<'_> {
+    fn drop(&mut self) {
+        self.gate.parked.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// One session's handle on the compute pool.
+///
+/// Constructed with [`GatePermit::acquire`] (blocking, FIFO) at session
+/// start and carried in the session's `PartyCtx`; every blocking
+/// transport receive goes through [`GatePermit::while_parked`] so the
+/// permit is loaned out for the duration of the wire wait. Dropping the
+/// permit (session end, or an unwind while running) releases it; an
+/// unwind while *parked* does not double-release (the permit was
+/// already loaned back to the pool).
+pub struct GatePermit {
+    gate: Arc<ComputeGate>,
+    /// Whether this handle holds a permit right now. `Cell`, not
+    /// atomic: a permit belongs to exactly one session thread.
+    held: Cell<bool>,
+}
+
+impl GatePermit {
+    /// Block until a permit is available (FIFO order) and take it.
+    pub fn acquire(gate: &Arc<ComputeGate>) -> GatePermit {
+        gate.acquire_raw();
+        GatePermit { gate: Arc::clone(gate), held: Cell::new(true) }
+    }
+
+    /// Run `f` (a blocking transport receive) with the permit released:
+    /// the compute slot is handed to the next ready session for the
+    /// duration of the call, then re-acquired (FIFO — behind every
+    /// already-waiting session) before returning.
+    ///
+    /// If `f` unwinds (a typed session abort on link loss), the permit
+    /// stays released and the parked gauge is still decremented — the
+    /// pool loses nothing to a dead session.
+    pub fn while_parked<T>(&self, f: impl FnOnce() -> T) -> T {
+        if !self.held.get() {
+            // Defensive: a nested park (not used today) degrades to a
+            // plain call rather than corrupting the permit count.
+            return f();
+        }
+        self.held.set(false);
+        self.gate.release_raw();
+        let r = {
+            let _parked = ParkedGuard::new(&self.gate);
+            f()
+        };
+        self.gate.acquire_raw();
+        self.held.set(true);
+        r
+    }
+}
+
+impl Drop for GatePermit {
+    fn drop(&mut self) {
+        if self.held.get() {
+            self.gate.release_raw();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    #[test]
+    fn permits_bound_concurrent_holders() {
+        let gate = ComputeGate::new(2);
+        let a = GatePermit::acquire(&gate);
+        let b = GatePermit::acquire(&gate);
+        assert_eq!(gate.snapshot().running, 2);
+        // A third acquire must block until one is released.
+        let g = Arc::clone(&gate);
+        let (tx, rx) = mpsc::channel();
+        let h = std::thread::spawn(move || {
+            let c = GatePermit::acquire(&g);
+            tx.send(()).unwrap();
+            drop(c);
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_millis(100)).is_err(),
+            "third permit must not be granted while two are held"
+        );
+        drop(a);
+        rx.recv_timeout(Duration::from_secs(5)).expect("released permit unblocks");
+        h.join().unwrap();
+        drop(b);
+        let s = gate.snapshot();
+        assert_eq!((s.running, s.parked, s.waiting), (0, 0, 0));
+    }
+
+    #[test]
+    fn acquisition_order_is_fifo() {
+        let gate = ComputeGate::new(1);
+        let head = GatePermit::acquire(&gate);
+        let (tx, rx) = mpsc::channel();
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            // Enqueue strictly one at a time: wait until thread i is
+            // visibly in the queue before spawning thread i+1, so the
+            // ticket order is the spawn order.
+            let g = Arc::clone(&gate);
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let p = GatePermit::acquire(&g);
+                tx.send(i).unwrap();
+                drop(p);
+            }));
+            while gate.snapshot().waiting < i + 1 {
+                std::thread::yield_now();
+            }
+        }
+        drop(head);
+        let order: Vec<usize> = (0..4)
+            .map(|_| rx.recv_timeout(Duration::from_secs(5)).expect("acquired"))
+            .collect();
+        assert_eq!(order, vec![0, 1, 2, 3], "ticket lock must serve in FIFO order");
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn while_parked_loans_the_permit_out() {
+        let gate = ComputeGate::new(1);
+        let g = Arc::clone(&gate);
+        let (parked_tx, parked_rx) = mpsc::channel();
+        let (resume_tx, resume_rx) = mpsc::channel::<()>();
+        let h = std::thread::spawn(move || {
+            let p = GatePermit::acquire(&g);
+            p.while_parked(|| {
+                parked_tx.send(()).unwrap();
+                resume_rx.recv().unwrap(); // the simulated wire wait
+            });
+            assert_eq!(g.snapshot().running, 1, "permit re-held after the park");
+        });
+        parked_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // While the session is parked its permit is available to us —
+        // this is the compute/communication overlap.
+        let s = gate.snapshot();
+        assert_eq!((s.running, s.parked), (0, 1));
+        let p2 = GatePermit::acquire(&gate);
+        drop(p2);
+        resume_tx.send(()).unwrap();
+        h.join().unwrap();
+        let s = gate.snapshot();
+        assert_eq!((s.running, s.parked, s.waiting), (0, 0, 0));
+    }
+
+    #[test]
+    fn unwind_while_parked_does_not_double_release() {
+        let gate = ComputeGate::new(1);
+        let g = Arc::clone(&gate);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let p = GatePermit::acquire(&g);
+            p.while_parked(|| panic!("link lost mid-park"));
+        }));
+        assert!(r.is_err());
+        let s = gate.snapshot();
+        assert_eq!(
+            (s.running, s.parked, s.waiting),
+            (0, 0, 0),
+            "gauges must zero after an unwind in the parked state"
+        );
+        // Exactly one permit must be available — not zero (leak) and
+        // the pool must still serve.
+        let a = GatePermit::acquire(&gate);
+        assert_eq!(gate.snapshot().running, 1);
+        drop(a);
+        assert_eq!(gate.snapshot().running, 0);
+    }
+
+    #[test]
+    fn unwind_while_running_releases_exactly_one() {
+        let gate = ComputeGate::new(1);
+        let g = Arc::clone(&gate);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _p = GatePermit::acquire(&g);
+            panic!("protocol invariant tripped while computing");
+        }));
+        assert!(r.is_err());
+        assert_eq!(gate.snapshot().running, 0);
+        // The permit came back: an immediate acquire succeeds.
+        let _a = GatePermit::acquire(&gate);
+    }
+
+    #[test]
+    fn single_permit_ping_pong_makes_progress() {
+        // Two "parties" sharing ONE permit, each round trip requiring
+        // the other side to compute: release-before-recv means this
+        // terminates instead of deadlocking.
+        let gate = ComputeGate::new(1);
+        let (a2b_tx, a2b_rx) = mpsc::channel::<u64>();
+        let (b2a_tx, b2a_rx) = mpsc::channel::<u64>();
+        let g0 = Arc::clone(&gate);
+        let h0 = std::thread::spawn(move || {
+            let p = GatePermit::acquire(&g0);
+            let mut x = 0u64;
+            for _ in 0..8 {
+                a2b_tx.send(x).unwrap();
+                x = p.while_parked(|| b2a_rx.recv().unwrap()) + 1;
+            }
+            x
+        });
+        let g1 = Arc::clone(&gate);
+        let h1 = std::thread::spawn(move || {
+            let p = GatePermit::acquire(&g1);
+            for _ in 0..8 {
+                let v = p.while_parked(|| a2b_rx.recv().unwrap());
+                b2a_tx.send(v + 1).unwrap();
+            }
+        });
+        h1.join().unwrap();
+        assert_eq!(h0.join().unwrap(), 16);
+        let s = gate.snapshot();
+        assert_eq!((s.running, s.parked, s.waiting), (0, 0, 0));
+    }
+}

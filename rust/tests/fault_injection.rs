@@ -30,8 +30,10 @@ use secformer::nn::weights::{random_weights, share_weights, ShareMap, WeightMap}
 use secformer::offline::planner::PlanInput;
 use secformer::offline::pool::{PoolConfig, PoolSnapshot, SessionBundle};
 use secformer::offline::source::{BundleSource, PoolSet};
+use secformer::net::error::SessionError;
 use secformer::party::runtime::{
-    spawn_party_host, spawn_party_host_stats, LinkOptions, PartyHostConfig, RemoteParty,
+    fetch_party_metrics, spawn_party_host, spawn_party_host_stats, LinkOptions, PartyHostConfig,
+    RemoteParty,
 };
 use secformer::party::supervisor::{PartyLinkSupervisor, RedialPolicy};
 use std::io::Write;
@@ -278,6 +280,182 @@ fn host_cleans_up_churned_connections() {
     let out = model.infer(&token_input(&cfg, 7));
     assert_eq!(out.logits.len(), cfg.num_labels);
     assert!(out.logits.iter().all(|v| v.is_finite()));
+}
+
+/// Admission control on the party host: a `--max-sessions 1` host under
+/// four concurrent coordinator workers must answer every excess START
+/// with a `SHED` frame that surfaces as a typed
+/// [`SessionError::Overloaded`] reply — never a hang, never a silently
+/// dropped request, never a spent retry — while admitted sessions keep
+/// completing and the shed counter reconciles exactly.
+#[test]
+fn party_host_sheds_excess_sessions_with_typed_overload() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 13);
+    let (addr, stats) = spawn_party_host_stats(
+        cfg.clone(),
+        Arc::new(shares1(&w)),
+        None,
+        PartyHostConfig { max_sessions: 1, ..PartyHostConfig::default() },
+    )
+    .expect("party host");
+
+    let coord = Coordinator::start_with(
+        cfg.clone(),
+        w.clone(),
+        None,
+        // One request per session so four workers race four concurrent
+        // STARTs at the cap-1 host.
+        BatcherConfig { max_batch: 1, ..BatcherConfig::default() },
+        ServingConfig {
+            secure_workers: 4,
+            batch_buckets: vec![1],
+            peer_addr: Some(addr.to_string()),
+            ..ServingConfig::default()
+        },
+    )
+    .expect("coordinator");
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let total = 12usize;
+    for i in 0..total {
+        coord.submit(token_input(&cfg, i as u64), EngineKind::Secure, tx.clone());
+    }
+    drop(tx);
+
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for _ in 0..total {
+        let r = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("request lost — a shed must reply, not hang");
+        assert_clean_reply(&r, cfg.num_labels, "host admission");
+        match &r.error {
+            None => ok += 1,
+            Some(SessionError::Overloaded) => shed += 1,
+            Some(e) => panic!("expected Overloaded for refused sessions, got: {e}"),
+        }
+    }
+    assert!(ok >= 1, "the admitted session must complete");
+    assert!(shed >= 1, "cap-1 host under 4 concurrent workers never shed");
+    assert_eq!(
+        stats.sessions_shed.load(Ordering::Relaxed),
+        shed,
+        "host shed counter must reconcile with the typed replies"
+    );
+    // A shed is terminal admission feedback, not a link fault: the
+    // retry budget stays untouched.
+    let s = coord.secure_summary();
+    assert_eq!(s.sessions_retried, 0, "a shed must not spend the retry budget");
+
+    // The workers survived the refusals: a quiet follow-up completes.
+    // (The host decrements its session gauge just after the RESULT
+    // ships, so an immediate follow-up may still catch the cap — a
+    // shed there is admission control working, not a failure.)
+    let mut ok_after = false;
+    for _ in 0..50 {
+        let r = coord.infer_blocking(token_input(&cfg, 99), EngineKind::Secure);
+        match &r.error {
+            None => {
+                ok_after = true;
+                break;
+            }
+            Some(SessionError::Overloaded) => std::thread::sleep(Duration::from_millis(10)),
+            Some(e) => panic!("post-shed request failed with a non-shed error: {e}"),
+        }
+    }
+    assert!(ok_after, "host never admitted a session after the burst drained");
+    coord.shutdown();
+}
+
+/// Pull one gauge value out of a Prometheus exposition body.
+fn metric_value(body: &str, needle: &str) -> f64 {
+    body.lines()
+        .find(|l| l.starts_with(needle))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("metric {needle} missing from:\n{body}"))
+}
+
+/// Scheduler hygiene under churn: after a concurrent burst through the
+/// full remote stack (coordinator carriers parking across real TCP
+/// waits, party sessions contending for compute permits), every
+/// scheduler gauge on BOTH processes — running, parked, waiting — must
+/// settle back to zero, and shutdown must drain cleanly rather than
+/// strand a carrier.
+#[test]
+fn scheduler_gauges_drain_to_zero_after_churn() {
+    let cfg = tiny();
+    let w = random_weights(&cfg, 13);
+    let (addr, stats) = spawn_party_host_stats(
+        cfg.clone(),
+        Arc::new(shares1(&w)),
+        None,
+        PartyHostConfig { compute_permits: 2, ..PartyHostConfig::default() },
+    )
+    .expect("party host");
+
+    let coord = Coordinator::start_with(
+        cfg.clone(),
+        w.clone(),
+        None,
+        BatcherConfig { max_batch: 1, ..BatcherConfig::default() },
+        ServingConfig {
+            secure_workers: 2,
+            // More carriers than permits: sessions must park across the
+            // party link's wire waits for the burst to drain.
+            max_sessions: 6,
+            batch_buckets: vec![1],
+            peer_addr: Some(addr.to_string()),
+            ..ServingConfig::default()
+        },
+    )
+    .expect("coordinator");
+
+    std::thread::scope(|scope| {
+        for c in 0..6u64 {
+            let coord = &coord;
+            let cfg = &cfg;
+            scope.spawn(move || {
+                for i in 0..3u64 {
+                    let r = coord.infer_blocking(token_input(cfg, c * 10 + i), EngineKind::Secure);
+                    assert!(r.error.is_none(), "churn request failed: {:?}", r.error);
+                    assert_eq!(r.logits.len(), cfg.num_labels);
+                }
+            });
+        }
+    });
+
+    // Coordinator gauges drain.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let g = coord.sched_snapshot();
+        if g.running == 0 && g.parked == 0 && g.waiting == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "coordinator scheduler never drained: {g:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // Host session gauge drains (permits release before session exit).
+    loop {
+        if stats.active() == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "party sessions never drained");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // And the host's exported scheduler gauges agree.
+    let body = fetch_party_metrics(&addr.to_string(), None).expect("party metrics");
+    for state in ["running", "parked", "waiting"] {
+        let v = metric_value(
+            &body,
+            &format!("secformer_sched_sessions{{role=\"party\",state=\"{state}\"}}"),
+        );
+        assert_eq!(v, 0.0, "host sched gauge {state} stuck non-zero");
+    }
+    assert_eq!(metric_value(&body, "secformer_sessions_shed_total{role=\"party\"}"), 0.0);
+
+    // Clean drain on shutdown: this must return, not hang on a carrier.
+    coord.shutdown();
 }
 
 /// [`BundleSource`] wrapper that records every bundle handed to the
